@@ -1,0 +1,156 @@
+//! End-to-end driver: the full three-layer stack on a real small workload.
+//!
+//! 1. generate a retail-like basket dataset (M = 2048 catalog);
+//! 2. **train** an ONDPP kernel in rust by driving the AOT-exported
+//!    `train_step` XLA graph through PJRT (python never runs) and log the
+//!    loss curve;
+//! 3. evaluate MPR / AUC / test log-likelihood (paper Table 2 metrics);
+//! 4. build both samplers and compare their speed (paper Table 3 shape)
+//!    plus the observed-vs-theoretical rejection rate (Theorem 2);
+//! 5. serve batched sampling requests through the coordinator and report
+//!    latency/throughput.
+//!
+//! Requires `make artifacts` to have produced `artifacts/`.
+//!
+//! ```bash
+//! cargo run --release --example end_to_end
+//! ```
+
+use std::sync::Arc;
+
+use ndpp::coordinator::{SampleRequest, SamplerKind, SamplingService, ServiceConfig};
+use ndpp::data::{recipes, synthetic};
+use ndpp::learn::{self, TrainConfig, Trainer};
+use ndpp::ndpp::{MarginalKernel, Proposal};
+use ndpp::prelude::*;
+use ndpp::runtime::ModelOps;
+use ndpp::util::timer::{fmt_secs, timed, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let total = Timer::start();
+    let Some(ops) = ModelOps::discover() else {
+        eprintln!("artifacts/ not found — run `make artifacts` first");
+        std::process::exit(2);
+    };
+
+    // ---- 1. data ---------------------------------------------------------
+    let (m, k, bsz, kmax) = (2048usize, 32usize, 64usize, 16usize);
+    let recipe = recipes::dataset_by_name("uk_retail_synth", "fast").unwrap();
+    let mut cfg = recipe.config.clone();
+    cfg.m = m;
+    cfg.n_baskets = 2500;
+    let mut rng = Xoshiro::seeded(7);
+    let mut ds = synthetic::generate_baskets(&cfg, &mut rng);
+    ds.trim(kmax);
+    let split = ds.split(100, 400, &mut rng);
+    let mu = ds.item_frequencies();
+    println!(
+        "[data] {} baskets over M={} (mean size {:.1}); {} train / {} test",
+        ds.baskets.len(),
+        ds.m,
+        ds.mean_basket_size(),
+        split.train.len(),
+        split.test.len()
+    );
+
+    // ---- 2. train through PJRT -------------------------------------------
+    let steps = 150;
+    let tc = TrainConfig {
+        k,
+        batch_size: bsz,
+        kmax,
+        steps,
+        gamma: 0.5,
+        project: true,
+        seed: 0,
+        ..Default::default()
+    };
+    let trainer = Trainer::new(&ops, m, split.train.clone(), mu, tc)?;
+    let t_train = Timer::start();
+    let model = trainer.run(|step, loss| {
+        if step % 25 == 0 || step + 1 == steps {
+            println!("[train] step {step:>4}  loss {loss:.4}");
+        }
+    })?;
+    println!(
+        "[train] {} steps in {} ({} / step); loss {:.4} -> {:.4}",
+        steps,
+        fmt_secs(t_train.secs()),
+        fmt_secs(t_train.secs() / steps as f64),
+        model.losses.first().unwrap(),
+        model.losses.last().unwrap()
+    );
+    assert!(
+        model.losses.last().unwrap() < model.losses.first().unwrap(),
+        "training must reduce the loss"
+    );
+
+    // ---- 3. evaluation (Table 2 metrics) ----------------------------------
+    let kernel = model.kernel.clone();
+    let mk = MarginalKernel::build(&kernel);
+    let mut eval_rng = Xoshiro::seeded(1);
+    let mpr = learn::mpr(&kernel, &split.test, &mut eval_rng);
+    let auc = learn::auc(&kernel, mk.logdet_l_plus_i, &split.test, &mut eval_rng);
+    let ll = learn::test_loglik(&kernel, mk.logdet_l_plus_i, &split.test);
+    println!("[eval] MPR {mpr:.2}  AUC {auc:.3}  test-loglik {ll:.3}");
+
+    // ---- 4. sampling comparison (Table 3 shape) ----------------------------
+    let proposal = Proposal::build(&kernel);
+    let spectral = proposal.spectral();
+    let tree = SampleTree::build(&spectral, TreeConfig::default());
+    let mut chol = CholeskySampler::from_marginal(&mk);
+    let mut rej = RejectionSampler::new(&kernel, &proposal, &tree);
+    let n = 50;
+    let (_, tc_s) = timed(|| {
+        for _ in 0..n {
+            chol.sample(&mut eval_rng);
+        }
+    });
+    let (_, tr_s) = timed(|| {
+        for _ in 0..n {
+            rej.sample(&mut eval_rng);
+        }
+    });
+    println!(
+        "[sample] {n} samples: cholesky {} | tree-rejection {} | speedup ×{:.1}",
+        fmt_secs(tc_s),
+        fmt_secs(tr_s),
+        tc_s / tr_s
+    );
+    println!(
+        "[sample] rejections: observed {:.2} vs theory {:.2} (Theorem 2 formula {:.2})",
+        rej.observed_rejection_rate(),
+        rej.expected_rejection_rate(),
+        proposal.rejection_bound_formula()
+    );
+
+    // ---- 5. serve through the coordinator ----------------------------------
+    let service = Arc::new(SamplingService::new(ServiceConfig::default()));
+    service.register("retail", kernel);
+    let t_serve = Timer::start();
+    let reqs = 64;
+    let rxs: Vec<_> = (0..reqs)
+        .map(|i| {
+            service.submit(SampleRequest {
+                model: "retail".into(),
+                n: 4,
+                seed: Some(i as u64),
+                kind: if i % 2 == 0 { SamplerKind::Rejection } else { SamplerKind::Cholesky },
+            })
+        })
+        .collect();
+    let mut total_samples = 0;
+    for rx in rxs {
+        total_samples += rx.recv().unwrap()?.samples.len();
+    }
+    let secs = t_serve.secs();
+    println!(
+        "[serve] {reqs} concurrent requests / {total_samples} samples in {} ({:.0} samples/s)",
+        fmt_secs(secs),
+        total_samples as f64 / secs
+    );
+    println!("[serve] metrics: {}", service.metrics().snapshot());
+
+    println!("\nend_to_end OK in {}", fmt_secs(total.secs()));
+    Ok(())
+}

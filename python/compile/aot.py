@@ -1,0 +1,160 @@
+"""AOT export: lower every Layer-2 graph to HLO *text* + a JSON manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 (the
+version the rust ``xla`` crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Artifacts are pure functions of this package's sources; ``make artifacts``
+skips the rebuild when nothing changed.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model, train
+
+F32 = jnp.float32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def kernel_exports(m: int, k: int, block_m: int):
+    """Sampler-side graphs for one (M, K) shape config."""
+    k2 = 2 * k
+    cfg = f"m{m}_k{k}"
+    z = spec((m, k2))
+    w = spec((k2, k2))
+    u = spec((m,))
+    x = spec((k2, k2))
+    return [
+        dict(name="marginal_diag", config=cfg, fn=model.marginals, args=(z, w)),
+        dict(name="gram", config=cfg, fn=lambda zz: model.gram(zz), args=(z,)),
+        dict(
+            name="block_outer_sum",
+            config=cfg,
+            fn=lambda zz: model.block_outer_sum(zz, block_m=block_m),
+            args=(z,),
+            meta={"block_m": block_m},
+        ),
+        dict(name="preprocess", config=cfg, fn=model.preprocess, args=(z, x)),
+        dict(name="cholesky_sample", config=cfg, fn=model.cholesky_sample, args=(z, w, u)),
+    ]
+
+
+def train_exports(m: int, k: int, bsz: int, kmax: int):
+    """Learning-side graphs for one (M, K, batch, kmax) shape config."""
+    cfg = f"m{m}_k{k}_b{bsz}_s{kmax}"
+    v = spec((m, k))
+    b = spec((m, k))
+    raw = spec((k // 2,))
+    mstate = spec((m, 2 * k + 1))
+    vstate = spec((m, 2 * k + 1))
+    t = spec(())
+    idx = jax.ShapeDtypeStruct((bsz, kmax), jnp.int32)
+    mu = spec((m,))
+    scalar = spec(())
+    return [
+        dict(
+            name="train_step",
+            config=cfg,
+            fn=train.train_step,
+            args=(v, b, raw, mstate, vstate, t, idx, mu, scalar, scalar, scalar, scalar),
+        ),
+        dict(
+            name="train_step_free",
+            config=cfg,
+            fn=train.train_step_free,
+            args=(v, b, raw, mstate, vstate, t, idx, mu, scalar, scalar, scalar, scalar),
+        ),
+        dict(
+            name="loglik_batch",
+            config=cfg,
+            fn=train.loglik_batch,
+            args=(v, b, raw, idx),
+        ),
+        dict(name="project", config=cfg, fn=train.project, args=(v, b)),
+    ]
+
+
+# Default shape configs.  "tiny" is used by the test suites (fast to build
+# and execute); "default" backs the examples and the XLA-vs-native ablation.
+CONFIGS = {
+    "kernels": [
+        dict(m=256, k=8, block_m=64),
+        dict(m=4096, k=32, block_m=256),
+    ],
+    "train": [
+        dict(m=256, k=8, bsz=32, kmax=8),
+        dict(m=2048, k=32, bsz=64, kmax=16),
+    ],
+}
+
+
+def export_all(out_dir: str, profile: str = "full") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    exports = []
+    kcfgs = CONFIGS["kernels"] if profile == "full" else CONFIGS["kernels"][:1]
+    tcfgs = CONFIGS["train"] if profile == "full" else CONFIGS["train"][:1]
+    for c in kcfgs:
+        exports += kernel_exports(**c)
+    for c in tcfgs:
+        exports += train_exports(**c)
+
+    manifest = {"format": 1, "artifacts": []}
+    for e in exports:
+        lowered = jax.jit(e["fn"]).lower(*e["args"])
+        text = to_hlo_text(lowered)
+        fname = f"{e['name']}_{e['config']}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(e["fn"], *e["args"])
+        flat_out, _ = jax.tree_util.tree_flatten(out_tree)
+        manifest["artifacts"].append(
+            {
+                "name": e["name"],
+                "config": e["config"],
+                "file": fname,
+                "inputs": [
+                    {"shape": list(a.shape), "dtype": a.dtype.name} for a in e["args"]
+                ],
+                "outputs": [
+                    {"shape": list(o.shape), "dtype": o.dtype.name} for o in flat_out
+                ],
+                "meta": e.get("meta", {}),
+            }
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {out_dir}/manifest.json")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--profile", default="full", choices=["full", "tiny"])
+    args = ap.parse_args()
+    export_all(args.out, args.profile)
+
+
+if __name__ == "__main__":
+    main()

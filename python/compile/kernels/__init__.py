@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for NDPP sampling hot spots.
+
+Each kernel has a pure-jnp oracle in :mod:`compile.kernels.ref` and a
+hypothesis sweep in ``python/tests/test_kernels.py``.  All kernels are
+invoked with ``interpret=True`` so that the lowered HLO contains plain XLA
+ops executable by the rust PJRT CPU client (real-TPU lowering would emit a
+Mosaic custom-call the CPU plugin cannot run).
+"""
+
+from compile.kernels.bilinear import bilinear_diag
+from compile.kernels.gram import gram
+from compile.kernels.outer_sum import block_outer_sum
+
+__all__ = ["bilinear_diag", "gram", "block_outer_sum"]

@@ -1,0 +1,53 @@
+"""``gram``: tiled accumulation of the Gram matrix ``Z.T @ Z``.
+
+The 2K x 2K Gram matrix appears throughout the paper's preprocessing:
+
+* marginal kernel ``W = X (I + Z^T Z X)^{-1}`` (Eq. (1)),
+* normalizer ``det(L + I) = det(I + X Z^T Z)``,
+* Youla decomposition input ``(D - D^T) B^T B`` (Algorithm 4, line 2).
+
+TPU mapping: grid over item-axis tiles; each step performs a
+``[2K, block_m] x [block_m, 2K]`` MXU matmul and accumulates into a single
+``(2K, 2K)`` VMEM-resident output block (all grid steps map to output block
+(0, 0); Pallas keeps it in VMEM across steps — the classic reduction
+BlockSpec pattern).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(z_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    z = z_ref[...]
+    o_ref[...] += jnp.dot(z.T, z, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def gram(z, *, block_m: int = 512):
+    """Compute ``Z.T @ Z`` for ``Z`` of shape ``(M, K2)``.
+
+    Rows are padded with zeros up to a multiple of ``block_m`` (zero rows do
+    not contribute to the Gram matrix).
+    """
+    m, k2 = z.shape
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    zp = jnp.pad(z, ((0, pad), (0, 0))) if pad else z
+    mp = m + pad
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(mp // bm,),
+        in_specs=[pl.BlockSpec((bm, k2), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((k2, k2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k2, k2), jnp.float32),
+        interpret=True,
+    )(zp.astype(jnp.float32))

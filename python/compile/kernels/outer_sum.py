@@ -1,0 +1,47 @@
+"""``block_outer_sum``: per-block sums of row outer products.
+
+Tree-based proposal sampling (paper Algorithm 3) stores, at every tree node
+covering an item range ``A``, the matrix ``Sigma_A = sum_{j in A} z_j z_j^T``.
+Building the *leaf level* of the (hybrid) tree is the O(M K^2) hot loop of
+``ConstructTree``: partition the item axis into blocks and compute one
+``(2K, 2K)`` outer-product sum per block.  Internal levels are then pairwise
+sums of these, O(M/B * K^2) — cheap by comparison.
+
+TPU mapping: identical tile shape to :mod:`compile.kernels.gram`
+(``[2K, block_m] x [block_m, 2K]`` MXU matmul per grid step) but each step
+writes its *own* output block instead of accumulating, so the kernel is
+embarrassingly parallel over the grid.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _outer_sum_kernel(z_ref, o_ref):
+    z = z_ref[...]
+    o_ref[0, :, :] = jnp.dot(z.T, z, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def block_outer_sum(z, *, block_m: int = 256):
+    """For ``Z`` of shape ``(M, K2)`` return ``(ceil(M/block_m), K2, K2)``
+    where slot ``b`` holds ``sum_{j in block b} z_j z_j^T``.
+
+    The tail block is zero-padded (zero rows contribute nothing).
+    """
+    m, k2 = z.shape
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    zp = jnp.pad(z, ((0, pad), (0, 0))) if pad else z
+    nb = (m + pad) // bm
+    return pl.pallas_call(
+        _outer_sum_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((bm, k2), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, k2, k2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, k2, k2), jnp.float32),
+        interpret=True,
+    )(zp.astype(jnp.float32))

@@ -1,0 +1,68 @@
+"""Pure-jnp correctness oracles for every Layer-1 Pallas kernel.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis in ``python/tests/test_kernels.py``) and the reference
+implementations mirrored by the rust ``linalg``/``ndpp`` modules.
+"""
+
+import jax.numpy as jnp
+
+
+def bilinear_diag_ref(z, w):
+    """``diag(Z @ W @ Z.T)`` — O(M K^2) contraction, materializing nothing
+    bigger than ``Z @ W``."""
+    z = z.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    return jnp.sum((z @ w) * z, axis=1)
+
+
+def gram_ref(z):
+    """``Z.T @ Z``."""
+    z = z.astype(jnp.float32)
+    return z.T @ z
+
+
+def block_outer_sum_ref(z, block_m):
+    """Per-block sums of ``z_j z_j^T`` with zero tail padding."""
+    z = z.astype(jnp.float32)
+    m, k2 = z.shape
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    zp = jnp.pad(z, ((0, pad), (0, 0))) if pad else z
+    nb = zp.shape[0] // bm
+    zb = zp.reshape(nb, bm, k2)
+    return jnp.einsum("bik,bij->bkj", zb, zb)
+
+
+def marginal_w_ref(z, x):
+    """Inner matrix of the marginal kernel: ``W = X (I + Z^T Z X)^{-1}``
+    (paper Eq. (1)), so that ``K = Z W Z^T``."""
+    z = z.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    k2 = x.shape[0]
+    return x @ jnp.linalg.inv(jnp.eye(k2) + z.T @ z @ x)
+
+
+def cholesky_sample_ref(z, w, u):
+    """Reference implementation of Algorithm 1 (RHS): sequential item sweep
+    updating the 2K x 2K inner matrix.  Returns the inclusion mask and the
+    log-probability of the produced sample."""
+    import numpy as np
+
+    z = np.asarray(z, dtype=np.float64)
+    q = np.asarray(w, dtype=np.float64).copy()
+    u = np.asarray(u, dtype=np.float64)
+    m = z.shape[0]
+    mask = np.zeros(m, dtype=bool)
+    logp = 0.0
+    for i in range(m):
+        zi = z[i]
+        p = float(zi @ q @ zi)
+        take = bool(u[i] <= p)
+        mask[i] = take
+        denom = p if take else p - 1.0
+        logp += float(np.log(max(p if take else 1.0 - p, 1e-300)))
+        qz = q @ zi
+        zq = zi @ q
+        q -= np.outer(qz, zq) / denom
+    return mask, logp

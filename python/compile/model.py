@@ -1,0 +1,120 @@
+"""Layer-2 JAX graphs for NDPP sampling (AOT-exported to HLO text).
+
+The graphs here are the compute bodies that the rust coordinator executes
+via PJRT.  They compose the Layer-1 Pallas kernels
+(:mod:`compile.kernels`) with pure-XLA linear algebra
+(:mod:`compile.purelinalg`) so that the exported HLO contains no
+jaxlib-registered custom calls.
+
+Kernel decomposition (paper §2.1):  ``L = V V^T + B (D - D^T) B^T`` with
+``V, B in R^{M x K}`` and ``D`` the paper's Eq. (13) parameterization, so
+``D - D^T`` is the block-diagonal skew matrix with blocks
+``[[0, s_j], [-s_j, 0]]``.  Compactly ``L = Z X Z^T`` with ``Z = [V, B]``
+and ``X = diag(I_K, D - D^T)``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile import purelinalg as pla
+from compile.kernels import bilinear_diag, block_outer_sum, gram
+
+
+def skew_matrix(sigma):
+    """Build ``D - D^T`` (K x K) from the K/2 positive Youla values."""
+    khalf = sigma.shape[0]
+    k = 2 * khalf
+    even = jnp.arange(0, k, 2)
+    s = jnp.zeros((k, k), dtype=sigma.dtype)
+    s = s.at[even, even + 1].set(sigma)
+    s = s.at[even + 1, even].set(-sigma)
+    return s
+
+
+def x_matrix(sigma):
+    """``X = diag(I_K, D - D^T)`` (2K x 2K)."""
+    k = 2 * sigma.shape[0]
+    x = jnp.zeros((2 * k, 2 * k), dtype=sigma.dtype)
+    x = x.at[:k, :k].set(jnp.eye(k, dtype=sigma.dtype))
+    return x.at[k:, k:].set(skew_matrix(sigma))
+
+
+def marginal_w(z, x):
+    """``W = X (I + Z^T Z X)^{-1}`` (paper Eq. (1)): the 2K x 2K inner matrix
+    of the marginal kernel ``K = Z W Z^T``.  Uses the Pallas ``gram`` kernel
+    for the O(M K^2) part."""
+    k2 = x.shape[0]
+    g = gram(z)
+    return x @ pla.gauss_jordan_inv(jnp.eye(k2, dtype=x.dtype) + g @ x)
+
+
+def preprocess(z, x):
+    """One-shot sampler preprocessing: returns ``(W, Z^T Z, logdet(L+I))``.
+
+    ``det(L + I) = det(I_2K + Z^T Z X)`` by the Weinstein–Aronszajn identity,
+    so the normalizer never touches an M x M matrix.
+    """
+    k2 = x.shape[0]
+    g = gram(z)
+    a = jnp.eye(k2, dtype=x.dtype) + g @ x
+    w = x @ pla.gauss_jordan_inv(a)
+    _, logdet = pla.slogdet(a)
+    return w, g, logdet
+
+
+def marginals(z, w):
+    """All-item inclusion marginals ``p_i = z_i^T W z_i`` (Pallas kernel)."""
+    return bilinear_diag(z, w)
+
+
+def cholesky_sample(z, w, u):
+    """Algorithm 1 (RHS): linear-time Cholesky-based NDPP sampling.
+
+    Sequential sweep over the M items as a ``lax.scan``; the carry is the
+    2K x 2K inner matrix ``Q`` (initialized to ``W``), updated by a rank-1
+    correction per visited item (paper Eqs. (4)-(5)).
+
+    Args:
+      z: ``(M, 2K)`` row factor of the marginal kernel.
+      w: ``(2K, 2K)`` inner matrix from :func:`marginal_w`.
+      u: ``(M,)`` i.i.d. uniform(0,1) draws (supplied by the rust caller so
+        randomness stays under the coordinator's seeded RNG).
+
+    Returns:
+      mask: ``(M,)`` f32 0/1 inclusion indicators.
+      logp: scalar log-probability of the emitted sample.
+    """
+    eps = jnp.asarray(1e-12, z.dtype)
+
+    def step(q, inputs):
+        zi, ui = inputs
+        qz = q @ zi
+        p = zi @ qz
+        take = ui <= p
+        denom = jnp.where(take, jnp.maximum(p, eps), jnp.minimum(p - 1.0, -eps))
+        zq = zi @ q
+        q = q - jnp.outer(qz, zq) / denom
+        logp_i = jnp.log(jnp.maximum(jnp.where(take, p, 1.0 - p), eps))
+        return q, (take.astype(z.dtype), logp_i)
+
+    _, (mask, logps) = jax.lax.scan(step, w, (z, u))
+    return mask, jnp.sum(logps)
+
+
+def elementary_marginals(z_eig, q):
+    """Conditional marginals of an elementary DPP (paper Eq. (11)) for all
+    items at once: ``p_j = z_j Q z_j^T`` over the selected eigenvector columns.
+    Used by the rust tree sampler's XLA-accelerated leaf scoring ablation."""
+    return bilinear_diag(z_eig, q)
+
+
+# jit-wrapped entry points: calls from tests / host tooling hit the XLA
+# executable cache instead of re-executing op-by-op.  (aot.py wraps these in
+# jax.jit(...) again for lowering, which is a no-op.)
+marginal_w = jax.jit(marginal_w)
+preprocess = jax.jit(preprocess)
+marginals = jax.jit(marginals)
+cholesky_sample = jax.jit(cholesky_sample)
+cholesky_sample_batch = jax.jit(
+    lambda z, w, us: jax.vmap(lambda u: cholesky_sample(z, w, u))(us)
+)

@@ -1,0 +1,104 @@
+"""Pure-XLA linear algebra for AOT-exported graphs.
+
+``jnp.linalg.{det,inv,qr,eigh}`` lower to LAPACK **custom calls** on CPU
+(``lapack_sgetrf`` etc.) that are registered by jaxlib at runtime — the rust
+PJRT client (xla_extension 0.5.1) does not register them, so any exported
+graph containing them fails to compile on the rust side.  Everything here is
+therefore written with plain XLA ops (fori_loop + gather/scatter/matmul),
+which round-trips through HLO text cleanly.
+
+Sizes are small (2K x 2K with K <= 100, or k_max x k_max minors), so the
+O(n^3) loop nests are cheap relative to the O(M K^2) item-axis work.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_TINY = 1e-30
+
+
+def gauss_jordan_inv(a):
+    """Inverse of a square matrix via Gauss-Jordan with partial pivoting.
+
+    Pure-XLA: one ``fori_loop`` over columns with dynamic row swaps.
+    """
+    n = a.shape[0]
+    dtype = a.dtype
+    aug = jnp.concatenate([a, jnp.eye(n, dtype=dtype)], axis=1)
+
+    def body(i, aug):
+        col = jnp.abs(aug[:, i])
+        col = jnp.where(jnp.arange(n) < i, -jnp.inf, col)
+        p = jnp.argmax(col)
+        row_i = aug[i]
+        row_p = aug[p]
+        aug = aug.at[i].set(row_p)
+        aug = aug.at[p].set(row_i)
+        piv = aug[i, i]
+        piv = jnp.where(jnp.abs(piv) < _TINY, jnp.asarray(_TINY, dtype), piv)
+        pivot_row = aug[i] / piv
+        aug = aug.at[i].set(pivot_row)
+        factor = aug[:, i].at[i].set(0.0)
+        aug = aug - factor[:, None] * pivot_row[None, :]
+        return aug
+
+    aug = jax.lax.fori_loop(0, n, body, aug)
+    return aug[:, n:]
+
+
+def slogdet(a):
+    """(sign, log|det|) via LU with partial pivoting — pure XLA ops."""
+    n = a.shape[0]
+    dtype = a.dtype
+
+    def body(i, carry):
+        a, sign, logdet = carry
+        col = jnp.abs(a[:, i])
+        col = jnp.where(jnp.arange(n) < i, -jnp.inf, col)
+        p = jnp.argmax(col)
+        row_i = a[i]
+        row_p = a[p]
+        a = a.at[i].set(row_p)
+        a = a.at[p].set(row_i)
+        sign = sign * jnp.where(p == i, 1.0, -1.0).astype(dtype)
+        piv = a[i, i]
+        sign = sign * jnp.sign(piv)
+        logdet = logdet + jnp.log(jnp.abs(piv) + _TINY)
+        safe = jnp.where(jnp.abs(piv) < _TINY, jnp.asarray(_TINY, dtype), piv)
+        factor = a[:, i] / safe
+        factor = jnp.where(jnp.arange(n) <= i, 0.0, factor)
+        a = a - factor[:, None] * a[i][None, :]
+        return (a, sign, logdet)
+
+    _, sign, logdet = jax.lax.fori_loop(
+        0, n, body, (a, jnp.ones((), dtype), jnp.zeros((), dtype))
+    )
+    return sign, logdet
+
+
+def logdet_psd(a):
+    """log det of a (nearly) PSD matrix; sign information discarded."""
+    _, ld = slogdet(a)
+    return ld
+
+
+def inv_sqrt_newton_schulz(c, iters: int = 30):
+    """``C^{-1/2}`` for SPD ``C`` via the Newton-Schulz coupled iteration.
+
+    Matmul-only (MXU-friendly, custom-call-free).  Scaling by the Frobenius
+    norm guarantees the spectral radius condition ``||I - C/s|| < 1``.
+    """
+    n = c.shape[0]
+    dtype = c.dtype
+    s = jnp.sqrt(jnp.sum(c * c)) + _TINY
+    y = c / s
+    z = jnp.eye(n, dtype=dtype)
+    eye3 = 3.0 * jnp.eye(n, dtype=dtype)
+
+    def body(_, carry):
+        y, z = carry
+        t = 0.5 * (eye3 - z @ y)
+        return (y @ t, t @ z)
+
+    y, z = jax.lax.fori_loop(0, iters, body, (y, z))
+    return z / jnp.sqrt(s)

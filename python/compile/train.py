@@ -1,0 +1,202 @@
+"""Layer-2 ONDPP learning graphs (paper §5, Eq. (14)).
+
+The regularized negative log-likelihood
+
+    min_{V,B,sigma}  -1/n sum_i log( det(L_{Y_i}) / det(L + I) )
+                     + alpha * sum_i ||v_i||^2 / mu_i
+                     + beta  * sum_i ||b_i||^2 / mu_i
+                     + gamma * sum_j log(1 + 2 s_j / (s_j^2 + 1))
+
+with constraints ``B^T B = I`` and ``V^T B = 0`` (the ONDPP subclass that
+makes Theorem 2's rejection bound apply).  The gamma term is exactly the log
+of the expected rejection count, so it directly trades off sampling speed.
+
+One ``train_step`` = Adam update on (V, B, raw_sigma) followed by the
+projection step (B orthonormalized via Newton-Schulz ``(B^T B)^{-1/2}``;
+V projected onto the orthogonal complement of span(B)).  sigma >= 0 is
+enforced by the softplus reparameterization ``sigma = softplus(raw)``.
+
+Everything lowers to custom-call-free HLO so the rust coordinator can drive
+the full training loop through PJRT (python never runs at training time).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile import purelinalg as pla
+from compile.model import skew_matrix
+
+EPS_MINOR = 1e-5  # paper Appendix C: jitter added to L_Y for stability
+
+
+def softplus(x):
+    return jnp.logaddexp(x, 0.0)
+
+
+def sigma_of_raw(raw):
+    return softplus(raw)
+
+
+def raw_of_sigma(sigma):
+    """Inverse softplus (host-side helper for initialization)."""
+    import numpy as np
+
+    s = np.asarray(sigma, dtype=np.float64)
+    return jnp.asarray(np.where(s > 30, s, np.log(np.expm1(np.maximum(s, 1e-9)))))
+
+
+def subset_logdets(v, b, sigma, idx):
+    """log det(L_Y + eps I) for a padded batch of subsets.
+
+    Args:
+      v, b: (M, K) kernel factors.
+      sigma: (K/2,) nonnegative skew strengths.
+      idx: (Bsz, Kmax) int32 item ids, right-padded with -1.
+    """
+    kmax = idx.shape[1]
+    valid = idx >= 0
+    safe = jnp.maximum(idx, 0)
+    v_y = v[safe] * valid[..., None]
+    b_y = b[safe] * valid[..., None]
+    skew = skew_matrix(sigma)
+
+    def one(vy, by, val):
+        l_y = vy @ vy.T + by @ skew @ by.T
+        pair = val[:, None] & val[None, :]
+        l_y = jnp.where(pair, l_y, 0.0)
+        # padded slots become unit diagonal => no det contribution
+        diag_fix = jnp.where(val, EPS_MINOR, 1.0)
+        l_y = l_y + jnp.diag(diag_fix)
+        _, ld = pla.slogdet(l_y)
+        return ld
+
+    return jax.vmap(one)(v_y, b_y, valid), valid
+
+
+def log_normalizer(v, b, sigma):
+    """log det(L + I) = log det(I_2K + Z^T Z X) — never forms an M x M."""
+    z = jnp.concatenate([v, b], axis=1)
+    k = v.shape[1]
+    k2 = 2 * k
+    x = jnp.zeros((k2, k2), dtype=v.dtype)
+    x = x.at[:k, :k].set(jnp.eye(k, dtype=v.dtype))
+    x = x.at[k:, k:].set(skew_matrix(sigma))
+    g = z.T @ z
+    _, ld = pla.slogdet(jnp.eye(k2, dtype=v.dtype) + g @ x)
+    return ld
+
+
+def loss_fn(v, b, raw_sigma, idx, mu, alpha, beta, gamma):
+    """Eq. (14) on one minibatch.  mu: (M,) item frequencies (>= 1)."""
+    sigma = sigma_of_raw(raw_sigma)
+    lds, _ = subset_logdets(v, b, sigma, idx)
+    nll = -(jnp.mean(lds) - log_normalizer(v, b, sigma))
+    reg_v = alpha * jnp.sum(jnp.sum(v * v, axis=1) / mu)
+    reg_b = beta * jnp.sum(jnp.sum(b * b, axis=1) / mu)
+    reg_rej = gamma * jnp.sum(jnp.log1p(2.0 * sigma / (sigma * sigma + 1.0)))
+    return nll + reg_v + reg_b + reg_rej
+
+
+def loglik_batch(v, b, raw_sigma, idx):
+    """Mean log-likelihood of a padded batch (no regularizers) — the paper's
+    test-log-likelihood metric."""
+    sigma = sigma_of_raw(raw_sigma)
+    lds, _ = subset_logdets(v, b, sigma, idx)
+    return jnp.mean(lds) - log_normalizer(v, b, sigma)
+
+
+def project(v, b):
+    """ONDPP constraint projection (paper §5 footnote):
+    ``B <- B (B^T B)^{-1/2}``, then ``V <- V - B (B^T V)``."""
+    c = b.T @ b
+    b = b @ pla.inv_sqrt_newton_schulz(c)
+    v = v - b @ (b.T @ v)
+    return v, b
+
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def train_step(v, b, raw_sigma, m_state, v_state, t, idx, mu, alpha, beta, gamma, lr):
+    """One Adam step + projection.  All state tensors flat for AOT export.
+
+    m_state / v_state are packed as (M, 2K+1) matrices: columns [0,K) are the
+    V moments, [K,2K) the B moments, and column 2K row 0..K/2 the raw_sigma
+    moments (rest zero).  Packing keeps the exported signature small.
+    """
+    mk = v.shape[1]
+    khalf = raw_sigma.shape[0]
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(
+        v, b, raw_sigma, idx, mu, alpha, beta, gamma
+    )
+    g_v, g_b, g_s = grads
+
+    m_v, m_b, m_s = m_state[:, :mk], m_state[:, mk : 2 * mk], m_state[:khalf, 2 * mk]
+    v_v, v_b, v_s = v_state[:, :mk], v_state[:, mk : 2 * mk], v_state[:khalf, 2 * mk]
+
+    t = t + 1.0
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+
+    def adam(p, g, m, s):
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        s = ADAM_B2 * s + (1.0 - ADAM_B2) * g * g
+        p = p - lr * (m / bc1) / (jnp.sqrt(s / bc2) + ADAM_EPS)
+        return p, m, s
+
+    v, m_v, v_v = adam(v, g_v, m_v, v_v)
+    b, m_b, v_b = adam(b, g_b, m_b, v_b)
+    raw_sigma, m_s, v_s = adam(raw_sigma, g_s, m_s, v_s)
+
+    v, b = project(v, b)
+
+    m_state = m_state.at[:, :mk].set(m_v)
+    m_state = m_state.at[:, mk : 2 * mk].set(m_b)
+    m_state = m_state.at[:khalf, 2 * mk].set(m_s)
+    v_state = v_state.at[:, :mk].set(v_v)
+    v_state = v_state.at[:, mk : 2 * mk].set(v_b)
+    v_state = v_state.at[:khalf, 2 * mk].set(v_s)
+
+    return v, b, raw_sigma, m_state, v_state, t, loss
+
+
+def train_step_free(v, b, raw_sigma, m_state, v_state, t, idx, mu, alpha, beta, gamma, lr):
+    """Unconstrained NDPP baseline step (Gartrell et al. 2021): identical
+    objective and Adam update, but **no** orthogonality projection."""
+    mk = v.shape[1]
+    khalf = raw_sigma.shape[0]
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(
+        v, b, raw_sigma, idx, mu, alpha, beta, gamma
+    )
+    g_v, g_b, g_s = grads
+    m_v, m_b, m_s = m_state[:, :mk], m_state[:, mk : 2 * mk], m_state[:khalf, 2 * mk]
+    v_v, v_b, v_s = v_state[:, :mk], v_state[:, mk : 2 * mk], v_state[:khalf, 2 * mk]
+    t = t + 1.0
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+
+    def adam(p, g, m, s):
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        s = ADAM_B2 * s + (1.0 - ADAM_B2) * g * g
+        p = p - lr * (m / bc1) / (jnp.sqrt(s / bc2) + ADAM_EPS)
+        return p, m, s
+
+    v, m_v, v_v = adam(v, g_v, m_v, v_v)
+    b, m_b, v_b = adam(b, g_b, m_b, v_b)
+    raw_sigma, m_s, v_s = adam(raw_sigma, g_s, m_s, v_s)
+    m_state = m_state.at[:, :mk].set(m_v)
+    m_state = m_state.at[:, mk : 2 * mk].set(m_b)
+    m_state = m_state.at[:khalf, 2 * mk].set(m_s)
+    v_state = v_state.at[:, :mk].set(v_v)
+    v_state = v_state.at[:, mk : 2 * mk].set(v_b)
+    v_state = v_state.at[:khalf, 2 * mk].set(v_s)
+    return v, b, raw_sigma, m_state, v_state, t, loss
+
+
+# jit-wrapped entry points (see note at the bottom of model.py).
+train_step = jax.jit(train_step)
+train_step_free = jax.jit(train_step_free)
+loglik_batch = jax.jit(loglik_batch)
+project = jax.jit(project)
+loss_fn = jax.jit(loss_fn)

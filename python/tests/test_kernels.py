@@ -1,0 +1,96 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes and value scales; assert_allclose against ref.py is
+THE core correctness signal for the kernels the whole stack sits on.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import bilinear_diag, block_outer_sum, gram
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@given(
+    m=st.integers(1, 300),
+    khalf=st.integers(1, 12),
+    block=st.sampled_from([16, 64, 512]),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_bilinear_diag_matches_ref(m, khalf, block, scale, seed):
+    rng = np.random.default_rng(seed)
+    k2 = 2 * khalf
+    z = rand(rng, m, k2, scale=scale)
+    w = rand(rng, k2, k2)
+    got = np.asarray(bilinear_diag(jnp.asarray(z), jnp.asarray(w), block_m=block))
+    want = np.asarray(ref.bilinear_diag_ref(jnp.asarray(z), jnp.asarray(w)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * scale * scale)
+
+
+@given(
+    m=st.integers(1, 300),
+    khalf=st.integers(1, 12),
+    block=st.sampled_from([16, 64, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_gram_matches_ref(m, khalf, block, seed):
+    rng = np.random.default_rng(seed)
+    z = rand(rng, m, 2 * khalf)
+    got = np.asarray(gram(jnp.asarray(z), block_m=block))
+    want = np.asarray(ref.gram_ref(jnp.asarray(z)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(
+    m=st.integers(1, 300),
+    khalf=st.integers(1, 8),
+    block=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_block_outer_sum_matches_ref(m, khalf, block, seed):
+    rng = np.random.default_rng(seed)
+    z = rand(rng, m, 2 * khalf)
+    got = np.asarray(block_outer_sum(jnp.asarray(z), block_m=block))
+    want = np.asarray(ref.block_outer_sum_ref(jnp.asarray(z), block))
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_block_outer_sum_total_equals_gram():
+    rng = np.random.default_rng(0)
+    z = rand(rng, 200, 16)
+    blocks = np.asarray(block_outer_sum(jnp.asarray(z), block_m=64))
+    g = np.asarray(gram(jnp.asarray(z)))
+    np.testing.assert_allclose(blocks.sum(axis=0), g, rtol=1e-4, atol=1e-4)
+
+
+def test_bilinear_diag_dtype_promotion():
+    rng = np.random.default_rng(1)
+    z = rng.standard_normal((64, 8)).astype(np.float64)
+    w = rng.standard_normal((8, 8)).astype(np.float64)
+    got = bilinear_diag(jnp.asarray(z), jnp.asarray(w))
+    assert got.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("m", [1, 2, 63, 64, 65, 128])
+def test_bilinear_diag_padding_edges(m):
+    rng = np.random.default_rng(m)
+    z = rand(rng, m, 8)
+    w = rand(rng, 8, 8)
+    got = np.asarray(bilinear_diag(jnp.asarray(z), jnp.asarray(w), block_m=64))
+    want = np.asarray(ref.bilinear_diag_ref(jnp.asarray(z), jnp.asarray(w)))
+    assert got.shape == (m,)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,96 @@
+"""Layer-2 correctness: marginal kernel, normalizer, Cholesky-sampler scan."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def make_kernel(rng, m, khalf, scale=0.5):
+    """Random ONDPP-style factors (V, B, sigma) and their Z, X."""
+    k = 2 * khalf
+    v = (rng.standard_normal((m, k)) * scale).astype(np.float32)
+    b = np.linalg.qr(rng.standard_normal((m, k)))[0].astype(np.float32) if m >= k else (
+        rng.standard_normal((m, k)) * scale
+    ).astype(np.float32)
+    sigma = rng.uniform(0.1, 2.0, khalf).astype(np.float32)
+    z = np.concatenate([v, b], axis=1)
+    x = np.asarray(model.x_matrix(jnp.asarray(sigma)))
+    return v, b, sigma, z, x
+
+
+def dense_l(v, b, sigma):
+    skew = np.asarray(model.skew_matrix(jnp.asarray(sigma)))
+    return v @ v.T + b @ skew @ b.T
+
+
+@given(m=st.sampled_from([4, 12, 32, 60]), khalf=st.sampled_from([1, 2, 4]), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_marginal_w_matches_dense(m, khalf, seed):
+    rng = np.random.default_rng(seed)
+    v, b, sigma, z, x = make_kernel(rng, m, khalf)
+    w = np.asarray(model.marginal_w(jnp.asarray(z), jnp.asarray(x)))
+    l = dense_l(v, b, sigma).astype(np.float64)
+    k_dense = np.eye(m) - np.linalg.inv(l + np.eye(m))
+    k_lowrank = z @ w @ z.T
+    np.testing.assert_allclose(k_lowrank, k_dense, rtol=2e-3, atol=2e-3)
+
+
+@given(m=st.sampled_from([4, 12, 32, 60]), khalf=st.sampled_from([1, 2, 4]), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_preprocess_normalizer(m, khalf, seed):
+    rng = np.random.default_rng(seed)
+    v, b, sigma, z, x = make_kernel(rng, m, khalf)
+    _, _, logdet = model.preprocess(jnp.asarray(z), jnp.asarray(x))
+    l = dense_l(v, b, sigma).astype(np.float64)
+    want = np.linalg.slogdet(l + np.eye(m))[1]
+    np.testing.assert_allclose(float(logdet), want, rtol=5e-3, atol=5e-3)
+
+
+@given(m=st.sampled_from([4, 12, 24, 40]), khalf=st.sampled_from([1, 2, 4]), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_cholesky_sample_matches_ref_trajectory(m, khalf, seed):
+    """Same uniforms => identical inclusion decisions as the numpy oracle."""
+    rng = np.random.default_rng(seed)
+    _, _, _, z, x = make_kernel(rng, m, khalf)
+    w = np.asarray(model.marginal_w(jnp.asarray(z), jnp.asarray(x))).astype(np.float64)
+    u = rng.uniform(size=m)
+    mask, logp = model.cholesky_sample(
+        jnp.asarray(z), jnp.asarray(w, dtype=jnp.float32), jnp.asarray(u, dtype=jnp.float32)
+    )
+    ref_mask, ref_logp = ref.cholesky_sample_ref(z, w, u)
+    # f32 vs f64 rounding can flip a decision when u_i ~ p_i; tolerate <= 1
+    # flip for large m, none for small.
+    flips = int(np.sum(np.asarray(mask).astype(bool) != ref_mask))
+    assert flips <= (1 if m > 20 else 0), (flips, m)
+    if flips == 0:
+        np.testing.assert_allclose(float(logp), ref_logp, rtol=5e-3, atol=5e-3)
+
+
+def test_cholesky_sampler_marginal_statistics():
+    """Empirical inclusion frequencies ~= diag of the marginal kernel."""
+    rng = np.random.default_rng(7)
+    m, khalf = 12, 2
+    _, _, _, z, x = make_kernel(rng, m, khalf)
+    w = np.asarray(model.marginal_w(jnp.asarray(z), jnp.asarray(x)))
+    diag = np.asarray(ref.bilinear_diag_ref(jnp.asarray(z), jnp.asarray(w)))
+    n = 3000
+    us = jnp.asarray(rng.uniform(size=(n, m)).astype(np.float32))
+    masks, _ = model.cholesky_sample_batch(jnp.asarray(z), jnp.asarray(w), us)
+    freq = np.asarray(masks).sum(axis=0) / n
+    # 4-sigma binomial tolerance
+    tol = 4.0 * np.sqrt(np.maximum(diag * (1 - diag), 1e-4) / n)
+    assert np.all(np.abs(freq - diag) <= tol + 0.02), (freq, diag)
+
+
+def test_skew_matrix_structure():
+    sigma = jnp.asarray([1.0, 2.0, 3.0])
+    s = np.asarray(model.skew_matrix(sigma))
+    assert s.shape == (6, 6)
+    np.testing.assert_allclose(s, -s.T)
+    assert s[0, 1] == 1.0 and s[1, 0] == -1.0 and s[4, 5] == 3.0

@@ -1,0 +1,130 @@
+"""Layer-2 learning: objective pieces, projection, Adam step behaviour."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model, train
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def random_baskets(rng, m, n, kmax):
+    idx = np.full((n, kmax), -1, dtype=np.int32)
+    for i in range(n):
+        size = rng.integers(1, kmax + 1)
+        idx[i, :size] = rng.choice(m, size=size, replace=False)
+    return idx
+
+
+@given(m=st.sampled_from([8, 16, 40]), khalf=st.sampled_from([1, 2]), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_subset_logdets_match_dense(m, khalf, seed):
+    rng = np.random.default_rng(seed)
+    k = 2 * khalf
+    v = (rng.standard_normal((m, k)) * 0.5).astype(np.float32)
+    b = (rng.standard_normal((m, k)) * 0.5).astype(np.float32)
+    sigma = rng.uniform(0.1, 2.0, khalf).astype(np.float32)
+    idx = random_baskets(rng, m, 6, min(6, m))
+    lds, _ = train.subset_logdets(
+        jnp.asarray(v), jnp.asarray(b), jnp.asarray(sigma), jnp.asarray(idx)
+    )
+    skew = np.asarray(model.skew_matrix(jnp.asarray(sigma)))
+    l = (v @ v.T + b @ skew @ b.T).astype(np.float64)
+    for row, ld in zip(idx, np.asarray(lds)):
+        y = row[row >= 0]
+        want = np.linalg.slogdet(l[np.ix_(y, y)] + train.EPS_MINOR * np.eye(len(y)))[1]
+        np.testing.assert_allclose(ld, want, rtol=2e-2, atol=2e-2)
+
+
+@given(m=st.sampled_from([8, 16, 40]), khalf=st.sampled_from([1, 2]), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_log_normalizer_matches_dense(m, khalf, seed):
+    rng = np.random.default_rng(seed)
+    k = 2 * khalf
+    v = (rng.standard_normal((m, k)) * 0.5).astype(np.float32)
+    b = (rng.standard_normal((m, k)) * 0.5).astype(np.float32)
+    sigma = rng.uniform(0.1, 2.0, khalf).astype(np.float32)
+    ld = float(train.log_normalizer(jnp.asarray(v), jnp.asarray(b), jnp.asarray(sigma)))
+    skew = np.asarray(model.skew_matrix(jnp.asarray(sigma)))
+    l = (v @ v.T + b @ skew @ b.T).astype(np.float64)
+    want = np.linalg.slogdet(l + np.eye(m))[1]
+    np.testing.assert_allclose(ld, want, rtol=5e-3, atol=5e-3)
+
+
+@given(m=st.sampled_from([12, 24, 48]), khalf=st.sampled_from([1, 2]), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_projection_enforces_constraints(m, khalf, seed):
+    rng = np.random.default_rng(seed)
+    k = 2 * khalf
+    if m < k:
+        return
+    v = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((m, k)).astype(np.float32)
+    v2, b2 = train.project(jnp.asarray(v), jnp.asarray(b))
+    v2, b2 = np.asarray(v2), np.asarray(b2)
+    np.testing.assert_allclose(b2.T @ b2, np.eye(k), atol=5e-3)
+    np.testing.assert_allclose(b2.T @ v2, np.zeros((k, k)), atol=5e-3)
+
+
+def test_train_step_decreases_loss():
+    rng = np.random.default_rng(3)
+    m, k, bsz, kmax = 64, 8, 16, 6
+    v = rng.uniform(0, 1, (m, k)).astype(np.float32)
+    b = rng.uniform(0, 1, (m, k)).astype(np.float32)
+    raw = rng.standard_normal(k // 2).astype(np.float32)
+    v, b = train.project(jnp.asarray(v), jnp.asarray(b))
+    mstate = jnp.zeros((m, 2 * k + 1), jnp.float32)
+    vstate = jnp.zeros((m, 2 * k + 1), jnp.float32)
+    t = jnp.asarray(0.0, jnp.float32)
+    idx = jnp.asarray(random_baskets(rng, m, bsz, kmax))
+    mu = jnp.ones((m,), jnp.float32)
+    a_ = jnp.asarray(0.01, jnp.float32)
+    g_ = jnp.asarray(0.1, jnp.float32)
+    lr = jnp.asarray(0.05, jnp.float32)
+    raw = jnp.asarray(raw)
+    losses = []
+    for _ in range(30):
+        v, b, raw, mstate, vstate, t, loss = train.train_step(
+            v, b, raw, mstate, vstate, t, idx, mu, a_, a_, g_, lr
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1, losses
+    # constraints survive the whole trajectory
+    bn = np.asarray(b)
+    np.testing.assert_allclose(bn.T @ bn, np.eye(k), atol=1e-2)
+
+
+def test_sigma_reparameterization_roundtrip():
+    sigma = np.array([0.3, 1.5, 40.0], dtype=np.float64)
+    raw = train.raw_of_sigma(sigma)
+    back = np.asarray(train.sigma_of_raw(jnp.asarray(raw, jnp.float32)))
+    np.testing.assert_allclose(back, sigma, rtol=1e-4)
+
+
+def test_gamma_regularizer_shrinks_sigma():
+    """Larger gamma must push learned sigma (hence rejection rate) down."""
+    rng = np.random.default_rng(11)
+    m, k, bsz, kmax = 48, 8, 16, 6
+
+    def run(gamma):
+        v = jnp.asarray(rng.uniform(0, 1, (m, k)).astype(np.float32))
+        b = jnp.asarray(rng.uniform(0, 1, (m, k)).astype(np.float32))
+        v, b = train.project(v, b)
+        raw = jnp.asarray(np.full(k // 2, 1.0, np.float32))
+        mstate = jnp.zeros((m, 2 * k + 1), jnp.float32)
+        vstate = jnp.zeros((m, 2 * k + 1), jnp.float32)
+        t = jnp.asarray(0.0, jnp.float32)
+        idx = jnp.asarray(random_baskets(np.random.default_rng(5), m, bsz, kmax))
+        mu = jnp.ones((m,), jnp.float32)
+        z = jnp.asarray(0.01, jnp.float32)
+        for _ in range(40):
+            v, b, raw, mstate, vstate, t, _ = train.train_step(
+                v, b, raw, mstate, vstate, t, idx, mu, z, z,
+                jnp.asarray(gamma, jnp.float32), jnp.asarray(0.05, jnp.float32),
+            )
+        sig = np.asarray(train.sigma_of_raw(raw))
+        return float(np.sum(np.log1p(2 * sig / (sig**2 + 1))))
+
+    assert run(5.0) < run(0.0)

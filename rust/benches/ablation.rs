@@ -1,0 +1,118 @@
+//! `cargo bench --bench ablation` — design-choice ablations called out in
+//! DESIGN.md:
+//!
+//! * **hybrid tree leaves**: per-sample latency and memory vs `leaf_size`
+//!   (the paper's full tree is `leaf_size = 1`; our default is 64);
+//! * **Youla fast path**: canonical-ONDPP short-circuit vs the general
+//!   `O(M K^2 + K^3)` decomposition;
+//! * **XLA vs native**: the AOT `cholesky_sample`/`marginal_diag` artifacts
+//!   through PJRT vs the pure-rust implementations (requires artifacts for
+//!   the m=4096/k=32 config; skipped otherwise).
+
+use ndpp::bench::runner::{BenchRunner, Table};
+use ndpp::ndpp::youla::youla_lowrank;
+use ndpp::ndpp::{MarginalKernel, NdppKernel, Proposal};
+use ndpp::rng::Xoshiro;
+use ndpp::runtime::ModelOps;
+use ndpp::sampler::{CholeskySampler, RejectionSampler, SampleTree, Sampler, TreeConfig};
+use ndpp::util::timer::fmt_secs;
+
+fn main() {
+    let runner = BenchRunner { warmup: 1, iters: 8, max_secs: 8.0 };
+
+    // ---- hybrid leaf-size ablation -----------------------------------------
+    let m = 1 << 15;
+    let k = 16;
+    let mut rng = Xoshiro::seeded(1);
+    let mut kernel = NdppKernel::synthetic(m, k, &mut rng);
+    for s in &mut kernel.sigma {
+        *s = 0.1;
+    }
+    kernel.orthogonalize();
+    kernel.rescale_expected_size(8.0);
+    let proposal = Proposal::build(&kernel);
+    let spectral = proposal.spectral();
+
+    let mut t = Table::new(&["leaf_size", "build", "memory", "per-sample"]);
+    for leaf in [1usize, 8, 64, 256, 1024] {
+        let build = runner.measure("build", || {
+            let _ = SampleTree::build(&spectral, TreeConfig { leaf_size: leaf });
+        });
+        let tree = SampleTree::build(&spectral, TreeConfig { leaf_size: leaf });
+        let mut rej = RejectionSampler::new(&kernel, &proposal, &tree);
+        let sample = runner.measure("sample", || {
+            rej.sample(&mut rng);
+        });
+        t.row(vec![
+            format!("{leaf}"),
+            fmt_secs(build.mean()),
+            format!("{:.1} MB", tree.memory_bytes() as f64 / 1e6),
+            fmt_secs(sample.mean()),
+        ]);
+    }
+    println!("\n== ablation: hybrid tree leaf size (M=2^15, K=16) ==");
+    println!("{}", t.render());
+
+    // ---- Youla fast path ----------------------------------------------------
+    let mut t = Table::new(&["kernel class", "youla time"]);
+    let mut rng = Xoshiro::seeded(2);
+    let ondpp = NdppKernel::random_ondpp(1 << 14, 32, &mut rng);
+    let ndpp = NdppKernel::random_ndpp(1 << 14, 32, &mut rng);
+    let meas = runner.measure("fast", || {
+        let _ = youla_lowrank(&ondpp.b, &ondpp.skew_inner());
+    });
+    t.row(vec!["ONDPP (canonical fast path)".into(), fmt_secs(meas.mean())]);
+    let meas = runner.measure("general", || {
+        let _ = youla_lowrank(&ndpp.b, &ndpp.skew_inner());
+    });
+    t.row(vec!["NDPP (general path)".into(), fmt_secs(meas.mean())]);
+    println!("== ablation: Youla decomposition fast path (M=2^14, K=32) ==");
+    println!("{}", t.render());
+
+    // ---- XLA artifacts vs native --------------------------------------------
+    match ModelOps::discover() {
+        Some(ops) if ops.supports_sampling(4096, 64) => {
+            let mut rng = Xoshiro::seeded(3);
+            let mut kernel = NdppKernel::random_ondpp(4096, 32, &mut rng);
+            for s in &mut kernel.sigma {
+                *s = 0.1;
+            }
+            let mk = MarginalKernel::build(&kernel);
+            let mut t = Table::new(&["op", "native", "xla (PJRT)"]);
+
+            // marginal diag
+            let native = runner.measure("native", || {
+                let _ = mk.marginals();
+            });
+            let xla = runner.measure("xla", || {
+                let _ = ops.marginal_diag(&mk.z, &mk.w).unwrap();
+            });
+            t.row(vec![
+                "marginal_diag (M=4096, 2K=64)".into(),
+                fmt_secs(native.mean()),
+                fmt_secs(xla.mean()),
+            ]);
+
+            // full cholesky sample
+            let mut chol = CholeskySampler::from_marginal(&mk);
+            let native = runner.measure("native", || {
+                chol.sample(&mut rng);
+            });
+            let u: Vec<f64> = (0..4096).map(|_| rng.uniform()).collect();
+            let xla = runner.measure("xla", || {
+                let _ = ops.cholesky_sample(&mk.z, &mk.w, &u).unwrap();
+            });
+            t.row(vec![
+                "cholesky_sample".into(),
+                fmt_secs(native.mean()),
+                fmt_secs(xla.mean()),
+            ]);
+            println!("== ablation: XLA artifacts vs native rust ==");
+            println!("{}", t.render());
+        }
+        _ => println!(
+            "== ablation: XLA-vs-native skipped (no artifacts for m4096_k32; \
+             run `make artifacts`) =="
+        ),
+    }
+}

@@ -1,0 +1,24 @@
+//! `cargo bench --bench fig2` — regenerates paper Fig 2: per-sample and
+//! preprocessing wall-clock vs ground-set size M on the paper's §6.2
+//! synthetic kernels (plus the dense O(M^3) baseline at small M).
+//!
+//! Env knobs: `NDPP_BENCH_PROFILE=fast|paper` (paper sweeps M = 2^12..2^20),
+//! `NDPP_BENCH_K` (default 32).
+
+use ndpp::bench::experiments::{fig2, ExpOptions};
+use ndpp::bench::BenchRunner;
+
+fn main() {
+    let profile = std::env::var("NDPP_BENCH_PROFILE").unwrap_or_else(|_| "fast".into());
+    let k: usize = std::env::var("NDPP_BENCH_K")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32);
+    let opts = ExpOptions {
+        profile,
+        k,
+        runner: BenchRunner { warmup: 1, iters: 8, max_secs: 15.0 },
+        ..Default::default()
+    };
+    fig2(&opts).expect("fig2 bench failed");
+}

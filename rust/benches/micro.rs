@@ -1,0 +1,98 @@
+//! `cargo bench --bench micro` — microbenchmarks:
+//!
+//! * Proposition 1: per-sample tree cost vs sample size k and vs M
+//!   (expected `O(K + k^3 log M + k^4)`);
+//! * linalg substrate: LU / Jacobi eigen / Youla at the 2K sizes the
+//!   samplers use;
+//! * Cholesky-sampler inner loop (per-item cost).
+
+use ndpp::bench::runner::{BenchRunner, Table};
+use ndpp::linalg::{eigen, lu, skew, Matrix};
+use ndpp::ndpp::{NdppKernel, Proposal};
+use ndpp::rng::Xoshiro;
+use ndpp::sampler::{CholeskySampler, SampleTree, Sampler, TreeConfig};
+use ndpp::util::timer::fmt_secs;
+
+fn main() {
+    let runner = BenchRunner { warmup: 1, iters: 8, max_secs: 8.0 };
+
+    // ---- Proposition 1: tree sampling cost vs M at fixed K ----------------
+    let mut t = Table::new(&["M", "tree sample", "per-sample growth"]);
+    let k = 16;
+    let mut prev: Option<f64> = None;
+    for e in [12u32, 14, 16] {
+        let m = 1usize << e;
+        let mut rng = Xoshiro::seeded(m as u64);
+        let mut kernel = NdppKernel::synthetic(m, k, &mut rng);
+        for s in &mut kernel.sigma {
+            *s = 0.1;
+        }
+        kernel.orthogonalize();
+    kernel.rescale_expected_size(8.0);
+        kernel.rescale_expected_size(8.0);
+        let proposal = Proposal::build(&kernel);
+        let spectral = proposal.spectral();
+        let tree = SampleTree::build(&spectral, TreeConfig::default());
+        let meas = runner.measure("tree", || {
+            tree.sample_dpp(&mut rng);
+        });
+        let growth = prev.map(|p| format!("×{:.2}", meas.mean() / p)).unwrap_or("—".into());
+        t.row(vec![format!("2^{e}"), fmt_secs(meas.mean()), growth]);
+        prev = Some(meas.mean());
+    }
+    println!("\n== Proposition 1: tree sampling vs M (4x M steps; log-growth expected) ==");
+    println!("{}", t.render());
+
+    // ---- Cholesky sampler per-item cost vs K ------------------------------
+    let mut t = Table::new(&["K", "per-sample", "per-item"]);
+    let m = 8192;
+    for k in [8usize, 16, 32, 64] {
+        let mut rng = Xoshiro::seeded(k as u64);
+        let kernel = NdppKernel::random_ondpp(m, k, &mut rng);
+        let mut s = CholeskySampler::new(&kernel);
+        let meas = runner.measure("chol", || {
+            s.sample(&mut rng);
+        });
+        t.row(vec![
+            format!("{k}"),
+            fmt_secs(meas.mean()),
+            fmt_secs(meas.mean() / m as f64),
+        ]);
+    }
+    println!("== Cholesky sampler (M=8192): O(M K^2) per sample ==");
+    println!("{}", t.render());
+
+    // ---- linalg substrate at sampler sizes --------------------------------
+    let mut t = Table::new(&["op", "n", "time"]);
+    for n in [64usize, 128, 200] {
+        let mut rng = Xoshiro::seeded(n as u64);
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        let sym = a.t_matmul(&a);
+        let meas = runner.measure("lu", || {
+            let _ = lu::slogdet(&a);
+        });
+        t.row(vec!["LU slogdet".into(), format!("{n}"), fmt_secs(meas.mean())]);
+        let meas = runner.measure("eig", || {
+            let _ = eigen::jacobi_eigen(&sym);
+        });
+        t.row(vec!["Jacobi eigen".into(), format!("{n}"), fmt_secs(meas.mean())]);
+        let meas = runner.measure("eig2", || {
+            let _ = ndpp::linalg::tridiag::sym_eigen(&sym);
+        });
+        t.row(vec!["tridiag QL eigen".into(), format!("{n}"), fmt_secs(meas.mean())]);
+        // skew Youla at n
+        let mut d = Matrix::zeros(n, n);
+        for j in 0..n / 2 {
+            d[(2 * j, 2 * j + 1)] = 1.0;
+            d[(2 * j + 1, 2 * j)] = -1.0;
+        }
+        let s_mat = a.matmul(&d).matmul_t(&a);
+        let s_skew = s_mat.sub(&s_mat.transpose()).scale(0.5);
+        let meas = runner.measure("youla", || {
+            let _ = skew::youla_of_skew(&s_skew);
+        });
+        t.row(vec!["Youla (skew)".into(), format!("{n}"), fmt_secs(meas.mean())]);
+    }
+    println!("== linalg substrate ==");
+    println!("{}", t.render());
+}

@@ -1,0 +1,24 @@
+//! `cargo bench --bench table3` — regenerates paper Table 3: preprocessing
+//! and per-sample wall-clock for the Cholesky vs tree-rejection samplers on
+//! the five dataset stand-ins, plus speedup and tree memory.
+//!
+//! Env knobs: `NDPP_BENCH_PROFILE=fast|paper` (default fast),
+//! `NDPP_BENCH_K` (default 32).
+
+use ndpp::bench::experiments::{table3, ExpOptions};
+use ndpp::bench::BenchRunner;
+
+fn main() {
+    let profile = std::env::var("NDPP_BENCH_PROFILE").unwrap_or_else(|_| "fast".into());
+    let k: usize = std::env::var("NDPP_BENCH_K")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32);
+    let opts = ExpOptions {
+        profile,
+        k,
+        runner: BenchRunner { warmup: 1, iters: 10, max_secs: 20.0 },
+        ..Default::default()
+    };
+    table3(&opts).expect("table3 bench failed");
+}

@@ -1,0 +1,472 @@
+//! Experiment drivers regenerating every table and figure of the paper's
+//! evaluation (§6).  Each driver prints the paper-shaped table and returns
+//! a JSON record that `ndpp reproduce` writes under `results/`.
+//!
+//! Scaling notes (DESIGN.md §4): absolute wall-clocks are this machine's,
+//! not the authors'; the claims being reproduced are *shapes* — who wins,
+//! by roughly what factor, and how costs grow with M.
+
+use anyhow::Result;
+
+use crate::bench::runner::{BenchRunner, Table};
+use crate::coordinator::registry::ModelEntry;
+use crate::data::{recipes, synthetic};
+use crate::learn::{self, TrainConfig, Trainer};
+use crate::ndpp::{NdppKernel, Proposal};
+use crate::rng::Xoshiro;
+use crate::runtime::ModelOps;
+use crate::sampler::{
+    CholeskySampler, DenseCholeskySampler, RejectionSampler, SampleTree, Sampler, TreeConfig,
+};
+use crate::util::json::Json;
+use crate::util::timer::{fmt_secs, timed};
+
+/// Shared experiment options.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    /// "fast" (CI-friendly) or "paper" (full catalog sizes where feasible)
+    pub profile: String,
+    pub seed: u64,
+    /// per-part rank K for sampling experiments
+    pub k: usize,
+    pub runner: BenchRunner,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            profile: "fast".into(),
+            seed: 0,
+            k: 32,
+            runner: BenchRunner::default(),
+        }
+    }
+}
+
+fn emit(name: &str, table: &Table, json: &Json) -> Result<String> {
+    let rendered = table.render();
+    println!("\n== {name} ==\n{rendered}");
+    std::fs::create_dir_all("results").ok();
+    let path = format!("results/{name}.json");
+    std::fs::write(&path, json.to_string_pretty())?;
+    println!("(written to {path})");
+    Ok(rendered)
+}
+
+/// A Table-3-like kernel for a dataset stand-in: random ONDPP features at
+/// the dataset's catalog size with sigmas in the range regularized training
+/// produces (the paper's Table 2 "with regularization" rows keep expected
+/// rejections in the tens; sampling speed depends on the kernel only
+/// through M, K and those sigmas).
+pub fn tablelike_kernel(m: usize, k: usize, rng: &mut Xoshiro) -> NdppKernel {
+    let mut kernel = NdppKernel::random_ondpp(m, k, rng);
+    // sigma scale chosen so E[#rejections] lands in the paper's Table 2
+    // "with regularization" range (~20-80) at K=100-ish ranks
+    for s in &mut kernel.sigma {
+        *s = rng.uniform_in(0.05, 0.15);
+    }
+    // basket-sized samples (the paper's k << K regime)
+    kernel.rescale_expected_size(10.0);
+    kernel
+}
+
+// ======================================================================
+// Table 1 — complexity summary, confirmed by measured scaling exponents
+// ======================================================================
+
+pub fn table1(opts: &ExpOptions) -> Result<String> {
+    let k = opts.k.min(16);
+    let ms = if opts.profile == "paper" {
+        vec![1 << 12, 1 << 14, 1 << 16]
+    } else {
+        vec![1 << 10, 1 << 12, 1 << 14]
+    };
+    let mut chol_times = Vec::new();
+    let mut rej_times = Vec::new();
+    for &m in &ms {
+        let mut rng = Xoshiro::seeded(opts.seed ^ m as u64);
+        let kernel = tablelike_kernel(m, k, &mut rng);
+        let entry = ModelEntry::prepare("t1", kernel, TreeConfig::default());
+        let mut chol = CholeskySampler::from_marginal(&entry.marginal);
+        let mut rej = RejectionSampler::new(&entry.kernel, &entry.proposal, &entry.tree);
+        let mut r1 = Xoshiro::seeded(1);
+        let mc = opts.runner.measure("chol", || {
+            chol.sample(&mut r1);
+        });
+        let mr = opts.runner.measure("rej", || {
+            rej.sample(&mut r1);
+        });
+        chol_times.push(mc.mean());
+        rej_times.push(mr.mean());
+    }
+    // fit log-log slope between first and last point
+    let slope = |ts: &[f64]| {
+        let dm = (ms[ms.len() - 1] as f64 / ms[0] as f64).ln();
+        (ts[ts.len() - 1] / ts[0]).ln() / dm
+    };
+    let s_chol = slope(&chol_times);
+    let s_rej = slope(&rej_times);
+
+    let mut t = Table::new(&[
+        "algorithm",
+        "paper sampling time",
+        "measured M-exponent",
+        "verdict",
+    ]);
+    t.row(vec![
+        "linear-time Cholesky".into(),
+        "O(M K^2)".into(),
+        format!("{s_chol:.2}"),
+        if (0.6..1.4).contains(&s_chol) { "linear ✓" } else { "⚠" }.into(),
+    ]);
+    t.row(vec![
+        "sublinear rejection".into(),
+        "O((k^3 log M + k^4 + K)(1+w)^K)".into(),
+        format!("{s_rej:.2}"),
+        if s_rej < 0.5 { "sublinear ✓" } else { "⚠" }.into(),
+    ]);
+    let json = Json::obj()
+        .with("ms", ms.iter().map(|&m| Json::Num(m as f64)).collect::<Vec<_>>())
+        .with("cholesky_secs", chol_times.clone())
+        .with("rejection_secs", rej_times.clone())
+        .with("cholesky_exponent", s_chol)
+        .with("rejection_exponent", s_rej);
+    emit("table1", &t, &json)
+}
+
+// ======================================================================
+// Table 2 — predictive performance of the four model classes
+// ======================================================================
+
+/// Table-2 learning scale: datasets are regenerated at the largest catalog
+/// size covered by the exported train_step artifacts.
+pub fn table2(opts: &ExpOptions, ops: &ModelOps) -> Result<String> {
+    // artifact config: m=2048, k=32, b=64, s=16 (see aot.py CONFIGS)
+    let (m, k, bsz, kmax) = (2048usize, 32usize, 64usize, 16usize);
+    let steps = if opts.profile == "paper" { 400 } else { 120 };
+
+    let mut table = Table::new(&[
+        "dataset", "model", "MPR", "AUC", "log-lik", "E[#rejections]",
+    ]);
+    let mut json_rows: Vec<Json> = Vec::new();
+
+    for recipe in recipes::standard_datasets("fast") {
+        // regenerate the recipe at the trainable catalog size; seed and
+        // cluster structure vary per dataset so the five stand-ins remain
+        // distinct after rescaling
+        let mut name_hash = opts.seed ^ 0xD5;
+        for b in recipe.name.bytes() {
+            name_hash = name_hash.wrapping_mul(31).wrapping_add(b as u64);
+        }
+        let mut cfg = recipe.config.clone();
+        cfg.m = m;
+        cfg.n_baskets = cfg.n_baskets.min(3000);
+        cfg.clusters = cfg.clusters.min(m / 8);
+        let mut rng = Xoshiro::seeded(name_hash);
+        let mut ds = synthetic::generate_baskets(&cfg, &mut rng);
+        ds.trim(kmax);
+        let split = ds.split(100, 400, &mut rng);
+        let mu = ds.item_frequencies();
+
+        // the four model classes of Table 2
+        let models: Vec<(&str, TrainConfig)> = vec![
+            (
+                "symmetric-dpp",
+                TrainConfig {
+                    k, batch_size: bsz, kmax, steps, gamma: 50.0, project: false,
+                    seed: opts.seed, ..Default::default()
+                },
+            ),
+            (
+                "ndpp",
+                TrainConfig {
+                    k, batch_size: bsz, kmax, steps, gamma: 0.0, project: false,
+                    seed: opts.seed, ..Default::default()
+                },
+            ),
+            (
+                "ondpp",
+                TrainConfig {
+                    k, batch_size: bsz, kmax, steps, gamma: 0.0, project: true,
+                    seed: opts.seed, ..Default::default()
+                },
+            ),
+            (
+                "ondpp+reg",
+                TrainConfig {
+                    k, batch_size: bsz, kmax, steps, gamma: 0.5, project: true,
+                    seed: opts.seed, ..Default::default()
+                },
+            ),
+        ];
+
+        for (name, tc) in models {
+            let trainer = Trainer::new(ops, m, split.train.clone(), mu.clone(), tc)?;
+            let model = trainer.run(|_, _| {})?;
+            let kernel = &model.kernel;
+            let mk = crate::ndpp::MarginalKernel::build(kernel);
+            let mut eval_rng = Xoshiro::seeded(opts.seed ^ 0xE7A1);
+            let mpr = learn::mpr(kernel, &split.test, &mut eval_rng);
+            let auc = learn::auc(kernel, mk.logdet_l_plus_i, &split.test, &mut eval_rng);
+            let ll = learn::test_loglik(kernel, mk.logdet_l_plus_i, &split.test);
+            let rejections = Proposal::build(kernel).expected_rejections();
+            table.row(vec![
+                recipe.name.into(),
+                name.into(),
+                format!("{mpr:.2}"),
+                format!("{auc:.3}"),
+                format!("{ll:.2}"),
+                format!("{rejections:.3e}"),
+            ]);
+            json_rows.push(
+                Json::obj()
+                    .with("dataset", recipe.name)
+                    .with("model", name)
+                    .with("mpr", mpr)
+                    .with("auc", auc)
+                    .with("loglik", ll)
+                    .with("rejections", rejections),
+            );
+        }
+    }
+    let json = Json::obj()
+        .with("m", m)
+        .with("k", k)
+        .with("steps", steps)
+        .with("rows", Json::Arr(json_rows));
+    emit("table2", &table, &json)
+}
+
+// ======================================================================
+// Table 3 — preprocessing + sampling wall-clock on the dataset stand-ins
+// ======================================================================
+
+pub fn table3(opts: &ExpOptions) -> Result<String> {
+    let k = opts.k;
+    let mut table = Table::new(&[
+        "dataset",
+        "M",
+        "spectral prep",
+        "tree prep",
+        "cholesky / sample",
+        "rejection / sample",
+        "speedup",
+        "tree memory",
+    ]);
+    let mut json_rows: Vec<Json> = Vec::new();
+
+    for recipe in recipes::standard_datasets(&opts.profile) {
+        let m = recipe.config.m;
+        let mut rng = Xoshiro::seeded(opts.seed ^ recipe.paper_m as u64);
+        let kernel = tablelike_kernel(m, k, &mut rng);
+
+        let (marginal, t_marginal) =
+            timed(|| crate::ndpp::MarginalKernel::build(&kernel));
+        let (proposal, t_spectral) = timed(|| Proposal::build(&kernel));
+        let (spectral, t_spec2) = timed(|| proposal.spectral());
+        let (tree, t_tree) = timed(|| SampleTree::build(&spectral, TreeConfig::default()));
+        let t_spectral = t_spectral + t_spec2;
+
+        let mut chol = CholeskySampler::from_marginal(&marginal);
+        let mut rej = RejectionSampler::new(&kernel, &proposal, &tree);
+        let mut r = Xoshiro::seeded(7);
+        let mc = opts.runner.measure("chol", || {
+            chol.sample(&mut r);
+        });
+        let mr = opts.runner.measure("rej", || {
+            rej.sample(&mut r);
+        });
+        let speedup = mc.mean() / mr.mean();
+        let mem = tree.memory_bytes();
+
+        table.row(vec![
+            recipe.name.into(),
+            format!("{m}"),
+            fmt_secs(t_spectral),
+            fmt_secs(t_tree),
+            format!("{} ±{}", fmt_secs(mc.mean()), fmt_secs(mc.summary.ci95)),
+            format!("{} ±{}", fmt_secs(mr.mean()), fmt_secs(mr.summary.ci95)),
+            format!("×{speedup:.1}"),
+            format!("{:.1} MB", mem as f64 / 1e6),
+        ]);
+        json_rows.push(
+            Json::obj()
+                .with("dataset", recipe.name)
+                .with("m", m)
+                .with("k", k)
+                .with("marginal_prep_s", t_marginal)
+                .with("spectral_prep_s", t_spectral)
+                .with("tree_prep_s", t_tree)
+                .with("cholesky_s", mc.mean())
+                .with("rejection_s", mr.mean())
+                .with("speedup", speedup)
+                .with("tree_bytes", mem)
+                .with("observed_rejections", rej.observed_rejection_rate())
+                .with("expected_rejections", rej.expected_rejection_rate()),
+        );
+    }
+    let json = Json::obj().with("k", k).with("rows", Json::Arr(json_rows));
+    emit("table3", &table, &json)
+}
+
+// ======================================================================
+// Fig 1 — gamma sweep: rejection count vs predictive quality
+// ======================================================================
+
+pub fn fig1(opts: &ExpOptions, ops: &ModelOps) -> Result<String> {
+    let (m, k, bsz, kmax) = (2048usize, 32usize, 64usize, 16usize);
+    let steps = if opts.profile == "paper" { 300 } else { 100 };
+    // NOTE: Adam normalizes per-parameter gradient scale, so once the
+    // gamma term dominates the sigma gradient the trajectory is
+    // gamma-invariant; the informative sweep is therefore over small
+    // gammas where the likelihood and regularizer gradients compete
+    // (the paper's Fig 1 x-axis is likewise log-scale in this regime).
+    let gammas = [0.0, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 1e-1];
+
+    // uk_retail-like data at trainable scale
+    let recipe = recipes::dataset_by_name("uk_retail_synth", "fast").unwrap();
+    let mut cfg = recipe.config.clone();
+    cfg.m = m;
+    cfg.n_baskets = 2500;
+    cfg.clusters = 120;
+    let mut rng = Xoshiro::seeded(opts.seed ^ 0xF16);
+    let mut ds = synthetic::generate_baskets(&cfg, &mut rng);
+    ds.trim(kmax);
+    let split = ds.split(100, 400, &mut rng);
+    let mu = ds.item_frequencies();
+
+    let mut table = Table::new(&["gamma", "E[#rejections]", "test log-lik"]);
+    let mut json_rows = Vec::new();
+    for &gamma in &gammas {
+        let tc = TrainConfig {
+            k, batch_size: bsz, kmax, steps, gamma, project: true,
+            seed: opts.seed, ..Default::default()
+        };
+        let trainer = Trainer::new(ops, m, split.train.clone(), mu.clone(), tc)?;
+        let model = trainer.run(|_, _| {})?;
+        let mk = crate::ndpp::MarginalKernel::build(&model.kernel);
+        let ll = learn::test_loglik(&model.kernel, mk.logdet_l_plus_i, &split.test);
+        let rejections = Proposal::build(&model.kernel).expected_rejections();
+        table.row(vec![
+            format!("{gamma}"),
+            format!("{rejections:.3}"),
+            format!("{ll:.3}"),
+        ]);
+        json_rows.push(
+            Json::obj()
+                .with("gamma", gamma)
+                .with("rejections", rejections)
+                .with("loglik", ll),
+        );
+    }
+    let json = Json::obj().with("steps", steps).with("rows", Json::Arr(json_rows));
+    emit("fig1", &table, &json)
+}
+
+// ======================================================================
+// Fig 2 — synthetic scaling: sampling (a) and preprocessing (b) vs M
+// ======================================================================
+
+pub fn fig2(opts: &ExpOptions) -> Result<String> {
+    let k = opts.k;
+    let exps: Vec<u32> = if opts.profile == "paper" {
+        (12..=20).collect()
+    } else {
+        (10..=16).step_by(2).collect()
+    };
+
+    let mut table = Table::new(&[
+        "M",
+        "cholesky / sample",
+        "rejection / sample",
+        "dense O(M^3) / sample",
+        "spectral prep",
+        "tree prep",
+    ]);
+    let mut json_rows = Vec::new();
+
+    for &e in &exps {
+        let m = 1usize << e;
+        let mut rng = Xoshiro::seeded(opts.seed ^ m as u64);
+        // the paper's §6.2 synthetic feature scheme
+        let mut kernel = NdppKernel::synthetic(m, k, &mut rng);
+        // regularized-scale sigmas so the rejection rate stays bounded
+        for s in &mut kernel.sigma {
+            *s = rng.uniform_in(0.02, 0.25);
+        }
+        kernel.orthogonalize();
+        kernel.rescale_expected_size(10.0);
+
+        let (marginal, _) = timed(|| crate::ndpp::MarginalKernel::build(&kernel));
+        let (proposal, t_prop) = timed(|| Proposal::build(&kernel));
+        let (spectral, t_spec) = timed(|| proposal.spectral());
+        let (tree, t_tree) = timed(|| SampleTree::build(&spectral, TreeConfig::default()));
+
+        let mut chol = CholeskySampler::from_marginal(&marginal);
+        let mut rej = RejectionSampler::new(&kernel, &proposal, &tree);
+        let mut r = Xoshiro::seeded(11);
+        let mc = opts.runner.measure("chol", || {
+            chol.sample(&mut r);
+        });
+        let mr = opts.runner.measure("rej", || {
+            rej.sample(&mut r);
+        });
+        // dense baseline only at small M (O(M^3) explodes)
+        let dense_mean = if m <= 4096 {
+            let mut dense = DenseCholeskySampler::new(&kernel);
+            let md = BenchRunner::quick().measure("dense", || {
+                dense.sample(&mut r);
+            });
+            Some(md.mean())
+        } else {
+            None
+        };
+
+        table.row(vec![
+            format!("2^{e}"),
+            fmt_secs(mc.mean()),
+            fmt_secs(mr.mean()),
+            dense_mean.map(fmt_secs).unwrap_or_else(|| "—".into()),
+            fmt_secs(t_prop + t_spec),
+            fmt_secs(t_tree),
+        ]);
+        json_rows.push(
+            Json::obj()
+                .with("m", m)
+                .with("cholesky_s", mc.mean())
+                .with("rejection_s", mr.mean())
+                .with("dense_s", dense_mean.map(Json::Num).unwrap_or(Json::Null))
+                .with("spectral_prep_s", t_prop + t_spec)
+                .with("tree_prep_s", t_tree)
+                .with("observed_rejections", rej.observed_rejection_rate()),
+        );
+    }
+    let json = Json::obj().with("k", k).with("rows", Json::Arr(json_rows));
+    emit("fig2", &table, &json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tablelike_kernel_has_small_rejection_rate() {
+        let mut rng = Xoshiro::seeded(1);
+        let kernel = tablelike_kernel(256, 16, &mut rng);
+        let p = Proposal::build(&kernel);
+        assert!(p.expected_rejections() < 50.0, "{}", p.expected_rejections());
+        assert!(kernel.is_ondpp(1e-8));
+    }
+
+    #[test]
+    fn table1_runs_in_fast_profile() {
+        let opts = ExpOptions {
+            k: 8,
+            runner: BenchRunner::quick(),
+            ..Default::default()
+        };
+        // smoke: runs end-to-end and emits a table
+        let rendered = table1(&opts).unwrap();
+        assert!(rendered.contains("linear-time Cholesky"));
+    }
+}

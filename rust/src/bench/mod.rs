@@ -1,0 +1,8 @@
+//! Benchmark harness (criterion substitute) + the per-experiment drivers
+//! that regenerate every table and figure of the paper's evaluation
+//! (DESIGN.md §5 experiment index).
+
+pub mod runner;
+pub mod experiments;
+
+pub use runner::{BenchRunner, Measurement};

@@ -1,0 +1,126 @@
+//! Measurement harness: warmup, repeated timing, summary statistics.
+
+use crate::util::stats::Summary;
+use crate::util::Timer;
+
+/// One named measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        self.summary.mean
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub iters: usize,
+    /// stop early once this much wall clock has been spent measuring
+    pub max_secs: f64,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { warmup: 1, iters: 10, max_secs: 10.0 }
+    }
+}
+
+impl BenchRunner {
+    pub fn quick() -> BenchRunner {
+        BenchRunner { warmup: 1, iters: 5, max_secs: 3.0 }
+    }
+
+    /// Time `f` (seconds per call) with warmup and an adaptive iteration
+    /// budget.
+    pub fn measure(&self, name: &str, mut f: impl FnMut()) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        let budget = Timer::start();
+        for _ in 0..self.iters {
+            let t = Timer::start();
+            f();
+            times.push(t.secs());
+            if budget.secs() > self.max_secs && times.len() >= 3 {
+                break;
+            }
+        }
+        Measurement { name: name.to_string(), summary: Summary::of(&times) }
+    }
+}
+
+/// Fixed-width table printer for experiment reports.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut width = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let parts: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = width[i]))
+                .collect();
+            format!("| {} |\n", parts.join(" | "))
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        let sep: Vec<String> = width.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_produces_stats() {
+        let r = BenchRunner { warmup: 1, iters: 5, max_secs: 1.0 };
+        let m = r.measure("sleep", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(m.summary.n >= 3);
+        assert!(m.mean() >= 0.0015, "mean={}", m.mean());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1.0".into()]);
+        t.row(vec!["long-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("| name      | value |"), "{s}");
+        assert_eq!(s.lines().count(), 4);
+    }
+}

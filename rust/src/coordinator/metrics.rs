@@ -1,0 +1,98 @@
+//! Service metrics: latency histograms, request counters, rejection stats.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::ExpHistogram;
+
+/// Per-model counters.
+#[derive(Debug)]
+struct ModelMetrics {
+    latency: ExpHistogram,
+    samples: u64,
+    proposals: u64,
+    errors: u64,
+}
+
+impl ModelMetrics {
+    fn new() -> ModelMetrics {
+        ModelMetrics {
+            // 1µs base, 40 buckets -> covers up to ~18 minutes
+            latency: ExpHistogram::new(1e-6, 40),
+            samples: 0,
+            proposals: 0,
+            errors: 0,
+        }
+    }
+}
+
+/// Thread-safe metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<HashMap<String, ModelMetrics>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Record one completed sampling call.
+    pub fn record(&self, model: &str, latency_secs: f64, n_samples: u64, proposals: u64) {
+        let mut map = self.inner.lock().unwrap();
+        let m = map.entry(model.to_string()).or_insert_with(ModelMetrics::new);
+        m.latency.record(latency_secs);
+        m.samples += n_samples;
+        m.proposals += proposals;
+    }
+
+    pub fn record_error(&self, model: &str) {
+        let mut map = self.inner.lock().unwrap();
+        map.entry(model.to_string())
+            .or_insert_with(ModelMetrics::new)
+            .errors += 1;
+    }
+
+    /// Snapshot as JSON (the `metrics` op of the wire protocol).
+    pub fn snapshot(&self) -> Json {
+        let map = self.inner.lock().unwrap();
+        let mut obj = Json::obj();
+        for (name, m) in map.iter() {
+            obj.set(
+                name,
+                Json::obj()
+                    .with("requests", m.latency.count)
+                    .with("samples", m.samples)
+                    .with("proposals", m.proposals)
+                    .with("errors", m.errors)
+                    .with("latency_mean_s", m.latency.mean())
+                    .with("latency_p50_s", m.latency.quantile(0.5))
+                    .with("latency_p95_s", m.latency.quantile(0.95)),
+            );
+        }
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record("a", 0.010, 4, 7);
+        m.record("a", 0.020, 4, 9);
+        m.record_error("a");
+        m.record("b", 0.001, 1, 1);
+        let snap = m.snapshot();
+        let a = snap.get("a").unwrap();
+        assert_eq!(a.f64_or("requests", 0.0), 2.0);
+        assert_eq!(a.f64_or("samples", 0.0), 8.0);
+        assert_eq!(a.f64_or("proposals", 0.0), 16.0);
+        assert_eq!(a.f64_or("errors", 0.0), 1.0);
+        assert!((a.f64_or("latency_mean_s", 0.0) - 0.015).abs() < 1e-9);
+        assert!(snap.get("b").is_some());
+    }
+}

@@ -1,0 +1,26 @@
+//! The Layer-3 coordinator: a batching NDPP sampling service.
+//!
+//! The paper's contribution is a sampling algorithm; the system built
+//! around it here is the piece a production deployment needs on top:
+//!
+//! * [`pool`] — fixed worker thread pool (tokio is unavailable offline;
+//!   the service is thread-per-core with an MPMC job channel).
+//! * [`registry`] — models (kernel + marginal kernel + proposal + tree)
+//!   registered once, preprocessing shared read-only across workers.
+//! * [`service`] — request router + dynamic batcher: concurrent
+//!   `sample(model, n, seed)` requests are coalesced per model and
+//!   dispatched to the pool; per-request RNG streams keep results
+//!   reproducible regardless of scheduling.
+//! * [`server`] — line-delimited-JSON TCP front end + a small client.
+//! * [`metrics`] — latency histograms, throughput counters, rejection
+//!   statistics.
+
+pub mod metrics;
+pub mod pool;
+pub mod registry;
+pub mod server;
+pub mod service;
+
+pub use pool::WorkerPool;
+pub use registry::{ModelEntry, Registry, SamplerKind};
+pub use service::{SampleRequest, SampleResponse, SamplingService, ServiceConfig};

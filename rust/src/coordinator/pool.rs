@@ -1,0 +1,142 @@
+//! Fixed-size worker thread pool with an MPMC job queue.
+//!
+//! A minimal, dependency-free executor: jobs are boxed closures pushed
+//! through a `std::sync::mpsc` channel guarded by a mutex on the receiver
+//! (the classic share-the-receiver pattern).  Good enough for the
+//! coordinator's throughput needs on CPU: sampling jobs are
+//! milliseconds-to-seconds, so queue overhead is noise.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Worker pool; dropping it shuts workers down cleanly.
+pub struct WorkerPool {
+    tx: Sender<Message>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> WorkerPool {
+        let n = n.max(1);
+        let (tx, rx) = channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("ndpp-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Message::Run(job)) => job(),
+                            Ok(Message::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        WorkerPool { tx, workers }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .send(Message::Run(Box::new(job)))
+            .expect("worker pool is shut down");
+    }
+
+    /// Submit a job returning a value; the result arrives on the returned
+    /// receiver (a poor man's future).
+    pub fn submit_with_result<T: Send + 'static>(
+        &self,
+        job: impl FnOnce() -> T + Send + 'static,
+    ) -> Receiver<T> {
+        let (tx, rx) = channel();
+        self.submit(move || {
+            let _ = tx.send(job());
+        });
+        rx
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let rxs: Vec<_> = (0..100)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                pool.submit_with_result(move || c.fetch_add(1, Ordering::SeqCst))
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn results_returned_in_order_of_channel() {
+        let pool = WorkerPool::new(2);
+        let rx = pool.submit_with_result(|| 41 + 1);
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+
+    #[test]
+    fn parallelism_actually_happens() {
+        let pool = WorkerPool::new(2);
+        let start = std::time::Instant::now();
+        let rxs: Vec<_> = (0..2)
+            .map(|_| {
+                pool.submit_with_result(|| {
+                    std::thread::sleep(std::time::Duration::from_millis(60))
+                })
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        // two 60ms jobs on two workers should finish well under 120ms
+        assert!(start.elapsed().as_millis() < 110, "{:?}", start.elapsed());
+    }
+
+    #[test]
+    fn shutdown_on_drop_joins_threads() {
+        let pool = WorkerPool::new(3);
+        pool.submit(|| {});
+        drop(pool); // must not hang
+    }
+}

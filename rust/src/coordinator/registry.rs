@@ -1,0 +1,158 @@
+//! Model registry: preprocessing done once, shared read-only everywhere.
+//!
+//! Registering a model runs the paper's one-time steps — marginal-kernel
+//! computation for the Cholesky sampler, Youla/proposal construction and
+//! tree building for the rejection sampler — and freezes them in an
+//! `Arc<ModelEntry>` that every worker thread samples from without locks.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::ndpp::{MarginalKernel, NdppKernel, Proposal};
+use crate::sampler::{SampleTree, TreeConfig};
+
+/// Which sampling algorithm a request wants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// linear-time Algorithm 1 (RHS)
+    Cholesky,
+    /// sublinear tree-based rejection (Algorithm 2)
+    Rejection,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> Result<SamplerKind> {
+        match s {
+            "cholesky" => Ok(SamplerKind::Cholesky),
+            "rejection" | "tree" => Ok(SamplerKind::Rejection),
+            other => Err(anyhow!("unknown sampler '{other}' (cholesky|rejection)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SamplerKind::Cholesky => "cholesky",
+            SamplerKind::Rejection => "rejection",
+        }
+    }
+}
+
+/// A registered model with all sampler preprocessing.
+pub struct ModelEntry {
+    pub name: String,
+    pub kernel: NdppKernel,
+    pub marginal: MarginalKernel,
+    pub proposal: Proposal,
+    pub tree: SampleTree,
+    /// wall-clock seconds spent in each preprocessing stage
+    pub prep_seconds: PrepTimes,
+}
+
+/// Preprocessing timing breakdown (the Fig 2(b)/Table 3 rows).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrepTimes {
+    pub marginal: f64,
+    pub spectral: f64,
+    pub tree: f64,
+}
+
+impl ModelEntry {
+    /// Run all preprocessing for `kernel`.
+    pub fn prepare(
+        name: impl Into<String>,
+        kernel: NdppKernel,
+        tree_config: TreeConfig,
+    ) -> ModelEntry {
+        let t0 = std::time::Instant::now();
+        let marginal = MarginalKernel::build(&kernel);
+        let t1 = std::time::Instant::now();
+        let proposal = Proposal::build(&kernel);
+        let spectral = proposal.spectral();
+        let t2 = std::time::Instant::now();
+        let tree = SampleTree::build(&spectral, tree_config);
+        let t3 = std::time::Instant::now();
+        ModelEntry {
+            name: name.into(),
+            kernel,
+            marginal,
+            proposal,
+            tree,
+            prep_seconds: PrepTimes {
+                marginal: (t1 - t0).as_secs_f64(),
+                spectral: (t2 - t1).as_secs_f64(),
+                tree: (t3 - t2).as_secs_f64(),
+            },
+        }
+    }
+}
+
+/// Thread-safe name -> model map.
+#[derive(Default)]
+pub struct Registry {
+    models: RwLock<HashMap<String, Arc<ModelEntry>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn insert(&self, entry: ModelEntry) {
+        self.models
+            .write()
+            .unwrap()
+            .insert(entry.name.clone(), Arc::new(entry));
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<ModelEntry>> {
+        self.models
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("model '{name}' not registered"))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro;
+
+    #[test]
+    fn prepare_and_lookup() {
+        let mut rng = Xoshiro::seeded(1);
+        let kernel = NdppKernel::random_ondpp(32, 4, &mut rng);
+        let entry = ModelEntry::prepare("m1", kernel, TreeConfig::default());
+        assert!(entry.prep_seconds.marginal >= 0.0);
+        let reg = Registry::new();
+        reg.insert(entry);
+        assert_eq!(reg.names(), vec!["m1"]);
+        assert!(reg.get("m1").is_ok());
+        assert!(reg.get("nope").is_err());
+    }
+
+    #[test]
+    fn sampler_kind_parsing() {
+        assert_eq!(SamplerKind::parse("cholesky").unwrap(), SamplerKind::Cholesky);
+        assert_eq!(SamplerKind::parse("tree").unwrap(), SamplerKind::Rejection);
+        assert!(SamplerKind::parse("bogus").is_err());
+        assert_eq!(SamplerKind::Rejection.as_str(), "rejection");
+    }
+}

@@ -1,0 +1,248 @@
+//! Line-delimited JSON TCP front end for the sampling service.
+//!
+//! Protocol (one JSON object per line, response per line):
+//!
+//! ```text
+//! -> {"op":"sample","model":"books","n":4,"seed":11,"algo":"rejection"}
+//! <- {"ok":true,"seed":11,"proposals":9,"latency_s":0.004,
+//!     "samples":[[3,17],[4],[],[8,90,411]]}
+//! -> {"op":"models"}
+//! <- {"ok":true,"models":["books"]}
+//! -> {"op":"metrics"}
+//! <- {"ok":true,"metrics":{...}}
+//! -> {"op":"ping"} / {"op":"shutdown"}
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::registry::SamplerKind;
+use crate::coordinator::service::{SampleRequest, SamplingService};
+use crate::util::json::Json;
+
+/// Serve the service on `addr` until a `shutdown` op arrives.
+/// Returns the bound local address via `on_bound` (useful for tests with
+/// port 0).
+pub fn serve(
+    service: Arc<SamplingService>,
+    addr: &str,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    on_bound(listener.local_addr()?);
+    let stop = Arc::new(AtomicBool::new(false));
+    // accept loop; one thread per connection (connection counts are tiny
+    // compared to per-request work)
+    let mut handles = Vec::new();
+    listener.set_nonblocking(true)?;
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let service = Arc::clone(&service);
+                let stop = Arc::clone(&stop);
+                handles.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, &service, &stop);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    service: &SamplingService,
+    stop: &AtomicBool,
+) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = handle_line(&line, service, stop);
+        writer.write_all(response.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj().with("ok", false).with("error", msg)
+}
+
+fn handle_line(line: &str, service: &SamplingService, stop: &AtomicBool) -> Json {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err_json(&format!("bad json: {e}")),
+    };
+    match req.str_or("op", "").as_str() {
+        "ping" => Json::obj().with("ok", true).with("pong", true),
+        "models" => Json::obj().with("ok", true).with(
+            "models",
+            Json::arr(service.registry().names().into_iter().map(Json::Str)),
+        ),
+        "metrics" => Json::obj()
+            .with("ok", true)
+            .with("metrics", service.metrics().snapshot()),
+        "shutdown" => {
+            stop.store(true, Ordering::Relaxed);
+            Json::obj().with("ok", true).with("stopping", true)
+        }
+        "sample" => {
+            let kind = match SamplerKind::parse(&req.str_or("algo", "rejection")) {
+                Ok(k) => k,
+                Err(e) => return err_json(&e.to_string()),
+            };
+            let request = SampleRequest {
+                model: req.str_or("model", ""),
+                n: req.usize_or("n", 1),
+                seed: req.get("seed").and_then(|s| s.as_u64()),
+                kind,
+            };
+            match service.sample(request) {
+                Ok(resp) => {
+                    let samples = Json::arr(resp.samples.iter().map(|y| {
+                        Json::arr(y.iter().map(|&i| Json::Num(i as f64)))
+                    }));
+                    Json::obj()
+                        .with("ok", true)
+                        .with("seed", resp.seed)
+                        .with("proposals", resp.proposals)
+                        .with("latency_s", resp.latency_secs)
+                        .with("samples", samples)
+                }
+                Err(e) => err_json(&e.to_string()),
+            }
+        }
+        other => err_json(&format!("unknown op '{other}'")),
+    }
+}
+
+/// Minimal blocking client for the wire protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream) })
+    }
+
+    pub fn call(&mut self, request: &Json) -> Result<Json> {
+        self.writer.write_all(request.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line)
+    }
+
+    pub fn sample(
+        &mut self,
+        model: &str,
+        n: usize,
+        seed: u64,
+        algo: &str,
+    ) -> Result<Vec<Vec<usize>>> {
+        let resp = self.call(
+            &Json::obj()
+                .with("op", "sample")
+                .with("model", model)
+                .with("n", n)
+                .with("seed", seed)
+                .with("algo", algo),
+        )?;
+        anyhow::ensure!(
+            resp.get("ok").and_then(|o| o.as_bool()) == Some(true),
+            "server error: {}",
+            resp.str_or("error", "unknown")
+        );
+        let samples = resp
+            .get("samples")
+            .and_then(|s| s.as_arr())
+            .context("missing samples")?;
+        Ok(samples
+            .iter()
+            .map(|y| {
+                y.as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|i| i.as_usize())
+                    .collect()
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::ServiceConfig;
+    use crate::ndpp::NdppKernel;
+    use crate::rng::Xoshiro;
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let svc = Arc::new(SamplingService::new(ServiceConfig {
+            workers: 2,
+            ..Default::default()
+        }));
+        let mut rng = Xoshiro::seeded(5);
+        svc.register("toy", NdppKernel::random_ondpp(24, 4, &mut rng));
+
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        let svc2 = Arc::clone(&svc);
+        let server = std::thread::spawn(move || {
+            serve(svc2, "127.0.0.1:0", move |a| {
+                let _ = addr_tx.send(a);
+            })
+            .unwrap();
+        });
+        let addr = addr_rx.recv().unwrap();
+
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        // ping
+        let pong = client.call(&Json::obj().with("op", "ping")).unwrap();
+        assert_eq!(pong.get("pong").and_then(|b| b.as_bool()), Some(true));
+        // models
+        let models = client.call(&Json::obj().with("op", "models")).unwrap();
+        assert_eq!(models.get("models").unwrap().as_arr().unwrap().len(), 1);
+        // sample (both algorithms, deterministic by seed)
+        let s1 = client.sample("toy", 3, 42, "rejection").unwrap();
+        let s2 = client.sample("toy", 3, 42, "rejection").unwrap();
+        assert_eq!(s1, s2);
+        assert_eq!(s1.len(), 3);
+        let c = client.sample("toy", 2, 1, "cholesky").unwrap();
+        assert_eq!(c.len(), 2);
+        // error paths
+        let bad = client.call(&Json::obj().with("op", "sample").with("model", "nope")).unwrap();
+        assert_eq!(bad.get("ok").and_then(|b| b.as_bool()), Some(false));
+        // metrics
+        let m = client.call(&Json::obj().with("op", "metrics")).unwrap();
+        assert!(m.get("metrics").unwrap().get("toy").is_some());
+        // shutdown
+        let stop = client.call(&Json::obj().with("op", "shutdown")).unwrap();
+        assert_eq!(stop.get("ok").and_then(|b| b.as_bool()), Some(true));
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,367 @@
+//! The sampling service: request router + dynamic micro-batcher.
+//!
+//! Requests (`sample(model, n, seed, algo)`) are pushed into a per-model
+//! pending queue; a flusher thread drains queues every
+//! `flush_interval_us` (or immediately once `max_batch` requests are
+//! pending for one model) and dispatches one **batch job** per
+//! (model, algorithm) group to the worker pool.  Batching amortizes
+//! sampler construction — scratch matrices, and for the rejection path the
+//! shared tree/proposal lookups — across the whole batch, vLLM-router
+//! style.
+//!
+//! Reproducibility: every request carries a seed (assigned from a counter
+//! when absent); each sample inside a request uses the request's RNG
+//! stream, so results are independent of batching and thread scheduling.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::WorkerPool;
+use crate::coordinator::registry::{ModelEntry, Registry, SamplerKind};
+use crate::ndpp::NdppKernel;
+use crate::rng::Xoshiro;
+use crate::sampler::{CholeskySampler, RejectionSampler, Sampler, TreeConfig};
+use crate::util::Timer;
+
+/// Service tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    /// batcher flush period (microseconds)
+    pub flush_interval_us: u64,
+    /// flush a model's queue immediately at this many pending requests
+    pub max_batch: usize,
+    pub tree: TreeConfig,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(2),
+            flush_interval_us: 500,
+            max_batch: 64,
+            tree: TreeConfig::default(),
+        }
+    }
+}
+
+/// One sampling request.
+#[derive(Debug, Clone)]
+pub struct SampleRequest {
+    pub model: String,
+    pub n: usize,
+    pub seed: Option<u64>,
+    pub kind: SamplerKind,
+}
+
+/// Response for one request.
+#[derive(Debug, Clone)]
+pub struct SampleResponse {
+    pub samples: Vec<Vec<usize>>,
+    /// total proposal draws (rejection sampler; == samples for cholesky)
+    pub proposals: u64,
+    pub seed: u64,
+    pub latency_secs: f64,
+}
+
+struct Pending {
+    req: SampleRequest,
+    seed: u64,
+    enqueued: Timer,
+    reply: Sender<Result<SampleResponse>>,
+}
+
+/// The coordinator service.
+pub struct SamplingService {
+    registry: Arc<Registry>,
+    pool: Arc<WorkerPool>,
+    metrics: Arc<Metrics>,
+    config: ServiceConfig,
+    pending: Arc<Mutex<HashMap<String, Vec<Pending>>>>,
+    seed_counter: AtomicU64,
+    stop: Arc<AtomicBool>,
+    flusher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl SamplingService {
+    pub fn new(config: ServiceConfig) -> SamplingService {
+        let registry = Arc::new(Registry::new());
+        let pool = Arc::new(WorkerPool::new(config.workers));
+        let metrics = Arc::new(Metrics::new());
+        let pending: Arc<Mutex<HashMap<String, Vec<Pending>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let flusher = {
+            let pending = Arc::clone(&pending);
+            let registry = Arc::clone(&registry);
+            let pool = Arc::clone(&pool);
+            let metrics = Arc::clone(&metrics);
+            let stop = Arc::clone(&stop);
+            let interval = std::time::Duration::from_micros(config.flush_interval_us);
+            std::thread::Builder::new()
+                .name("ndpp-batcher".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        Self::flush_all(&pending, &registry, &pool, &metrics);
+                        std::thread::sleep(interval);
+                    }
+                    // final drain
+                    Self::flush_all(&pending, &registry, &pool, &metrics);
+                })
+                .expect("spawning batcher thread")
+        };
+
+        SamplingService {
+            registry,
+            pool,
+            metrics,
+            config,
+            pending,
+            seed_counter: AtomicU64::new(0x5EED),
+            stop,
+            flusher: Some(flusher),
+        }
+    }
+
+    /// Register a model: runs all sampler preprocessing (marginal kernel,
+    /// Youla/proposal, tree).
+    pub fn register(&self, name: &str, kernel: NdppKernel) {
+        let entry = ModelEntry::prepare(name, kernel, self.config.tree);
+        crate::info!(
+            "service",
+            "registered '{name}' (M={}, 2K={}, E[rejections]={:.2}, tree={}B)",
+            entry.kernel.m(),
+            2 * entry.kernel.k(),
+            entry.proposal.expected_rejections(),
+            entry.tree.memory_bytes()
+        );
+        self.registry.insert(entry);
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Enqueue a request; returns a receiver for the response.
+    pub fn submit(&self, req: SampleRequest) -> Receiver<Result<SampleResponse>> {
+        let (tx, rx) = channel();
+        let seed = req
+            .seed
+            .unwrap_or_else(|| self.seed_counter.fetch_add(1, Ordering::Relaxed));
+        let model = req.model.clone();
+        {
+            let mut pending = self.pending.lock().unwrap();
+            pending.entry(model.clone()).or_default().push(Pending {
+                req,
+                seed,
+                enqueued: Timer::start(),
+                reply: tx,
+            });
+            // early flush on a full batch
+            if pending[&model].len() >= self.config.max_batch {
+                let batch = pending.remove(&model).unwrap();
+                drop(pending);
+                Self::dispatch(&self.registry, &self.pool, &self.metrics, model, batch);
+            }
+        }
+        rx
+    }
+
+    /// Synchronous convenience wrapper.
+    pub fn sample(&self, req: SampleRequest) -> Result<SampleResponse> {
+        self.submit(req).recv().expect("service dropped reply channel")
+    }
+
+    fn flush_all(
+        pending: &Mutex<HashMap<String, Vec<Pending>>>,
+        registry: &Arc<Registry>,
+        pool: &Arc<WorkerPool>,
+        metrics: &Arc<Metrics>,
+    ) {
+        let drained: Vec<(String, Vec<Pending>)> = {
+            let mut map = pending.lock().unwrap();
+            map.drain().collect()
+        };
+        for (model, batch) in drained {
+            Self::dispatch(registry, pool, metrics, model, batch);
+        }
+    }
+
+    fn dispatch(
+        registry: &Arc<Registry>,
+        pool: &Arc<WorkerPool>,
+        metrics: &Arc<Metrics>,
+        model: String,
+        batch: Vec<Pending>,
+    ) {
+        let registry = Arc::clone(registry);
+        let metrics = Arc::clone(metrics);
+        pool.submit(move || {
+            let entry = match registry.get(&model) {
+                Ok(e) => e,
+                Err(err) => {
+                    for p in batch {
+                        metrics.record_error(&model);
+                        let _ = p.reply.send(Err(anyhow::anyhow!("{err}")));
+                    }
+                    return;
+                }
+            };
+            Self::run_batch(&entry, &metrics, batch);
+        });
+    }
+
+    /// Execute a coalesced batch on one worker: group by algorithm so each
+    /// sampler's scratch state is reused across the whole group.
+    fn run_batch(entry: &ModelEntry, metrics: &Metrics, batch: Vec<Pending>) {
+        let mut cholesky: Option<CholeskySampler<'_>> = None;
+        let mut rejection: Option<RejectionSampler<'_>> = None;
+
+        for p in batch {
+            let mut rng = Xoshiro::seeded(p.seed);
+            let mut proposals = 0u64;
+            let samples: Vec<Vec<usize>> = match p.req.kind {
+                SamplerKind::Cholesky => {
+                    let s = cholesky
+                        .get_or_insert_with(|| CholeskySampler::from_marginal(&entry.marginal));
+                    (0..p.req.n)
+                        .map(|_| {
+                            proposals += 1;
+                            s.sample(&mut rng)
+                        })
+                        .collect()
+                }
+                SamplerKind::Rejection => {
+                    let s = rejection.get_or_insert_with(|| {
+                        RejectionSampler::new(&entry.kernel, &entry.proposal, &entry.tree)
+                    });
+                    (0..p.req.n)
+                        .map(|_| {
+                            let y = s.sample(&mut rng);
+                            proposals += s.last_proposals as u64;
+                            y
+                        })
+                        .collect()
+                }
+            };
+            let latency = p.enqueued.secs();
+            metrics.record(&entry.name, latency, p.req.n as u64, proposals);
+            let _ = p.reply.send(Ok(SampleResponse {
+                samples,
+                proposals,
+                seed: p.seed,
+                latency_secs: latency,
+            }));
+        }
+    }
+}
+
+impl Drop for SamplingService {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(f) = self.flusher.take() {
+            let _ = f.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service_with_model(m: usize, k: usize) -> SamplingService {
+        let svc = SamplingService::new(ServiceConfig {
+            workers: 2,
+            flush_interval_us: 200,
+            max_batch: 8,
+            tree: TreeConfig::default(),
+        });
+        let mut rng = Xoshiro::seeded(3);
+        svc.register("test", NdppKernel::random_ondpp(m, k, &mut rng));
+        svc
+    }
+
+    #[test]
+    fn sample_roundtrip_both_algorithms() {
+        let svc = service_with_model(40, 4);
+        for kind in [SamplerKind::Cholesky, SamplerKind::Rejection] {
+            let resp = svc
+                .sample(SampleRequest {
+                    model: "test".into(),
+                    n: 5,
+                    seed: Some(7),
+                    kind,
+                })
+                .unwrap();
+            assert_eq!(resp.samples.len(), 5);
+            assert!(resp.proposals >= 5);
+            for y in &resp.samples {
+                assert!(y.iter().all(|&i| i < 40));
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let svc = service_with_model(24, 4);
+        let err = svc.sample(SampleRequest {
+            model: "nope".into(),
+            n: 1,
+            seed: Some(1),
+            kind: SamplerKind::Cholesky,
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn same_seed_same_result_across_batching() {
+        let svc = service_with_model(40, 4);
+        let req = |seed| SampleRequest {
+            model: "test".into(),
+            n: 3,
+            seed: Some(seed),
+            kind: SamplerKind::Rejection,
+        };
+        // fire a pile of concurrent requests to force coalescing
+        let rxs: Vec<_> = (0..20).map(|i| svc.submit(req(100 + (i % 4)))).collect();
+        let responses: Vec<SampleResponse> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        for a in &responses {
+            for b in &responses {
+                if a.seed == b.seed {
+                    assert_eq!(a.samples, b.samples, "seed {} diverged", a.seed);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let svc = service_with_model(24, 4);
+        for _ in 0..3 {
+            svc.sample(SampleRequest {
+                model: "test".into(),
+                n: 2,
+                seed: None,
+                kind: SamplerKind::Cholesky,
+            })
+            .unwrap();
+        }
+        let snap = svc.metrics().snapshot();
+        let t = snap.get("test").unwrap();
+        assert_eq!(t.f64_or("samples", 0.0), 6.0);
+        assert!(t.f64_or("requests", 0.0) >= 3.0);
+    }
+}

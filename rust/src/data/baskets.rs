@@ -1,0 +1,227 @@
+//! Basket dataset container, text serialization, and train/val/test splits.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::rng::Xoshiro;
+
+/// A collection of baskets (subsets of `[0, m)`).
+#[derive(Debug, Clone)]
+pub struct BasketDataset {
+    pub name: String,
+    /// catalog size
+    pub m: usize,
+    pub baskets: Vec<Vec<usize>>,
+}
+
+/// Train/validation/test views into a dataset.
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub train: Vec<Vec<usize>>,
+    pub val: Vec<Vec<usize>>,
+    pub test: Vec<Vec<usize>>,
+}
+
+impl BasketDataset {
+    pub fn new(name: impl Into<String>, m: usize, baskets: Vec<Vec<usize>>) -> Self {
+        let ds = BasketDataset { name: name.into(), m, baskets };
+        debug_assert!(ds.validate().is_ok());
+        ds
+    }
+
+    /// Every item id must be in range and baskets must be duplicate-free.
+    pub fn validate(&self) -> Result<()> {
+        for (bi, b) in self.baskets.iter().enumerate() {
+            let mut seen = vec![];
+            for &i in b {
+                if i >= self.m {
+                    bail!("basket {bi}: item {i} out of range (m={})", self.m);
+                }
+                seen.push(i);
+            }
+            seen.sort_unstable();
+            seen.dedup();
+            if seen.len() != b.len() {
+                bail!("basket {bi}: duplicate items");
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-item occurrence counts, floored at 1 (the `mu_i` regularizer
+    /// weights of Eq. (14)).
+    pub fn item_frequencies(&self) -> Vec<f64> {
+        let mut mu = vec![0.0f64; self.m];
+        for b in &self.baskets {
+            for &i in b {
+                mu[i] += 1.0;
+            }
+        }
+        for x in &mut mu {
+            *x = x.max(1.0);
+        }
+        mu
+    }
+
+    /// Largest basket size (the paper sets K to this, Appendix C).
+    pub fn max_basket_size(&self) -> usize {
+        self.baskets.iter().map(|b| b.len()).max().unwrap_or(0)
+    }
+
+    pub fn mean_basket_size(&self) -> f64 {
+        if self.baskets.is_empty() {
+            return 0.0;
+        }
+        self.baskets.iter().map(|b| b.len()).sum::<usize>() as f64
+            / self.baskets.len() as f64
+    }
+
+    /// Random split mirroring the paper's Appendix B: `n_val` + `n_test`
+    /// random baskets held out, rest train.
+    pub fn split(&self, n_val: usize, n_test: usize, rng: &mut Xoshiro) -> Split {
+        let n = self.baskets.len();
+        assert!(n_val + n_test < n, "not enough baskets to split");
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let val = idx[..n_val].iter().map(|&i| self.baskets[i].clone()).collect();
+        let test = idx[n_val..n_val + n_test]
+            .iter()
+            .map(|&i| self.baskets[i].clone())
+            .collect();
+        let train = idx[n_val + n_test..]
+            .iter()
+            .map(|&i| self.baskets[i].clone())
+            .collect();
+        Split { train, val, test }
+    }
+
+    /// Drop baskets larger than `max` (the paper trims baskets > 100).
+    pub fn trim(&mut self, max: usize) {
+        self.baskets.retain(|b| b.len() <= max && !b.is_empty());
+    }
+
+    // ---- serialization ---------------------------------------------------
+    // line 1: "ndpp-baskets <m> <name>"; then one basket per line,
+    // space-separated item ids.
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut out = format!("ndpp-baskets {} {}\n", self.m, self.name);
+        for b in &self.baskets {
+            let line: Vec<String> = b.iter().map(|i| i.to_string()).collect();
+            out.push_str(&line.join(" "));
+            out.push('\n');
+        }
+        std::fs::write(path.as_ref(), out)
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<BasketDataset> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().context("empty dataset file")?;
+        let mut parts = header.split_whitespace();
+        if parts.next() != Some("ndpp-baskets") {
+            bail!("bad dataset header");
+        }
+        let m: usize = parts.next().context("missing m")?.parse()?;
+        let name = parts.next().unwrap_or("unnamed").to_string();
+        let mut baskets = Vec::new();
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let b: Vec<usize> = line
+                .split_whitespace()
+                .map(|t| t.parse::<usize>().context("bad item id"))
+                .collect::<Result<_>>()?;
+            baskets.push(b);
+        }
+        let ds = BasketDataset { name, m, baskets };
+        ds.validate()?;
+        Ok(ds)
+    }
+}
+
+/// Pad/truncate baskets into a `(bsz x kmax)` i32 buffer (pad = -1) for the
+/// AOT train/eval graphs.
+pub fn pad_batch(baskets: &[Vec<usize>], kmax: usize) -> Vec<i32> {
+    let mut out = vec![-1i32; baskets.len() * kmax];
+    for (r, b) in baskets.iter().enumerate() {
+        for (c, &i) in b.iter().take(kmax).enumerate() {
+            out[r * kmax + c] = i as i32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> BasketDataset {
+        BasketDataset::new(
+            "toy",
+            10,
+            vec![vec![0, 1, 2], vec![3, 4], vec![5], vec![6, 7, 8, 9], vec![0, 5]],
+        )
+    }
+
+    #[test]
+    fn validation_catches_problems() {
+        let mut bad = fixture();
+        bad.baskets.push(vec![10]);
+        assert!(bad.validate().is_err());
+        let mut dup = fixture();
+        dup.baskets.push(vec![1, 1]);
+        assert!(dup.validate().is_err());
+    }
+
+    #[test]
+    fn frequencies_and_sizes() {
+        let ds = fixture();
+        let mu = ds.item_frequencies();
+        assert_eq!(mu[0], 2.0);
+        assert_eq!(mu[1], 1.0);
+        assert_eq!(mu[9], 1.0);
+        assert_eq!(ds.max_basket_size(), 4);
+        assert!((ds.mean_basket_size() - 2.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let ds = fixture();
+        let mut rng = Xoshiro::seeded(1);
+        let s = ds.split(1, 2, &mut rng);
+        assert_eq!(s.val.len(), 1);
+        assert_eq!(s.test.len(), 2);
+        assert_eq!(s.train.len(), 2);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let ds = fixture();
+        let path = std::env::temp_dir().join(format!("ndpp_ds_{}.txt", std::process::id()));
+        ds.save(&path).unwrap();
+        let back = BasketDataset::load(&path).unwrap();
+        assert_eq!(back.m, ds.m);
+        assert_eq!(back.baskets, ds.baskets);
+        assert_eq!(back.name, "toy");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pad_batch_layout() {
+        let batch = pad_batch(&[vec![1, 2], vec![3, 4, 5, 6, 7]], 4);
+        assert_eq!(batch, vec![1, 2, -1, -1, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn trim_drops_large_and_empty() {
+        let mut ds = fixture();
+        ds.baskets.push(vec![]);
+        ds.trim(3);
+        assert!(ds.baskets.iter().all(|b| !b.is_empty() && b.len() <= 3));
+    }
+}

@@ -1,0 +1,18 @@
+//! Datasets: basket (subset) collections over an item catalog.
+//!
+//! The paper evaluates on five real recommendation datasets (UK Retail,
+//! Recipe, Instacart, Million Song, Book).  Those are not redistributable /
+//! downloadable in this environment, so [`recipes`] provides synthetic
+//! stand-ins with matched statistics (catalog size, power-law item
+//! popularity, Poisson basket sizes, latent-cluster co-occurrence);
+//! DESIGN.md §4 documents the substitution.  [`synthetic`] also implements
+//! the Han & Gillenwater (2020) feature generator used verbatim by the
+//! paper's §6.2 synthetic timing experiments.
+
+pub mod baskets;
+pub mod recipes;
+pub mod synthetic;
+
+pub use baskets::{BasketDataset, Split};
+pub use recipes::{dataset_by_name, standard_datasets, DatasetRecipe};
+pub use synthetic::BasketGenConfig;

@@ -1,0 +1,144 @@
+//! The five benchmark dataset stand-ins (DESIGN.md §4).
+//!
+//! Catalog sizes mirror the paper's Table 2/3 datasets; basket counts and
+//! sizes are scaled to keep the end-to-end experiment suite runnable on a
+//! laptop while preserving the ordering `M_1 < ... < M_5` and the
+//! popularity/co-occurrence structure the learners are sensitive to.
+//! Two "fidelity" profiles exist: `fast` (default, used by tests and
+//! `ndpp reproduce`) and `paper` (full catalog sizes, for Table 3's
+//! large-M timing points).
+
+use crate::data::baskets::BasketDataset;
+use crate::data::synthetic::{generate_baskets, BasketGenConfig};
+use crate::rng::Xoshiro;
+
+/// A named dataset recipe (generator parameters + paper metadata).
+#[derive(Debug, Clone)]
+pub struct DatasetRecipe {
+    pub name: &'static str,
+    /// the paper's real-dataset catalog size
+    pub paper_m: usize,
+    /// generation config (fast profile)
+    pub config: BasketGenConfig,
+}
+
+/// All five stand-ins, ordered by catalog size.
+pub fn standard_datasets(profile: &str) -> Vec<DatasetRecipe> {
+    let paper = profile == "paper";
+    let scale = |m_paper: usize, m_fast: usize| if paper { m_paper } else { m_fast };
+    let baskets = |n_paper: usize, n_fast: usize| if paper { n_paper } else { n_fast };
+    vec![
+        DatasetRecipe {
+            name: "uk_retail_synth",
+            paper_m: 3_941,
+            config: BasketGenConfig {
+                name: "uk_retail_synth".into(),
+                m: scale(3_941, 3_941),
+                n_baskets: baskets(19_762, 3_000),
+                mean_size: 8.0,
+                clusters: 120,
+                ..Default::default()
+            },
+        },
+        DatasetRecipe {
+            name: "recipe_synth",
+            paper_m: 7_993,
+            config: BasketGenConfig {
+                name: "recipe_synth".into(),
+                m: scale(7_993, 7_993),
+                n_baskets: baskets(178_265, 4_000),
+                mean_size: 9.0,
+                clusters: 200,
+                ..Default::default()
+            },
+        },
+        DatasetRecipe {
+            name: "instacart_synth",
+            paper_m: 49_677,
+            config: BasketGenConfig {
+                name: "instacart_synth".into(),
+                m: scale(49_677, 49_677),
+                n_baskets: baskets(100_000, 5_000),
+                mean_size: 10.0,
+                clusters: 600,
+                ..Default::default()
+            },
+        },
+        DatasetRecipe {
+            name: "song_synth",
+            paper_m: 371_410,
+            config: BasketGenConfig {
+                name: "song_synth".into(),
+                m: scale(371_410, 131_072),
+                n_baskets: baskets(200_000, 5_000),
+                mean_size: 12.0,
+                clusters: 1_500,
+                ..Default::default()
+            },
+        },
+        DatasetRecipe {
+            name: "book_synth",
+            paper_m: 1_059_437,
+            config: BasketGenConfig {
+                name: "book_synth".into(),
+                m: scale(1_059_437, 262_144),
+                n_baskets: baskets(200_000, 5_000),
+                mean_size: 12.0,
+                clusters: 3_000,
+                ..Default::default()
+            },
+        },
+    ]
+}
+
+/// Find a recipe by name.
+pub fn dataset_by_name(name: &str, profile: &str) -> Option<DatasetRecipe> {
+    standard_datasets(profile).into_iter().find(|r| r.name == name)
+}
+
+impl DatasetRecipe {
+    /// Generate the dataset deterministically (seed derived from the name).
+    pub fn generate(&self, seed: u64) -> BasketDataset {
+        let mut h = seed;
+        for b in self.name.bytes() {
+            h = h.wrapping_mul(31).wrapping_add(b as u64);
+        }
+        let mut rng = Xoshiro::seeded(h);
+        generate_baskets(&self.config, &mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_datasets_ordered_by_m() {
+        let ds = standard_datasets("fast");
+        assert_eq!(ds.len(), 5);
+        for w in ds.windows(2) {
+            assert!(w[0].config.m < w[1].config.m);
+            assert!(w[0].paper_m < w[1].paper_m);
+        }
+    }
+
+    #[test]
+    fn paper_profile_uses_paper_m() {
+        let ds = standard_datasets("paper");
+        assert_eq!(ds[0].config.m, 3_941);
+        assert_eq!(ds[4].config.m, 1_059_437);
+    }
+
+    #[test]
+    fn lookup_and_generate() {
+        let r = dataset_by_name("uk_retail_synth", "fast").unwrap();
+        let ds = r.generate(0);
+        assert_eq!(ds.m, 3_941);
+        assert_eq!(ds.baskets.len(), 3_000);
+        ds.validate().unwrap();
+        // deterministic
+        let ds2 = r.generate(0);
+        assert_eq!(ds.baskets[..50], ds2.baskets[..50]);
+        assert!(dataset_by_name("nope", "fast").is_none());
+    }
+}

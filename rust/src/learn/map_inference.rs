@@ -1,0 +1,118 @@
+//! Greedy MAP inference for NDPPs (Gartrell et al. 2021 §4; Chen et al.
+//! 2018 style greedy on the low-rank form).
+//!
+//! `argmax_Y det(L_Y)` is NP-hard; the standard scalable heuristic greedily
+//! adds the item with the largest conditional gain
+//! `det(L_{Y∪i}) / det(L_Y)` until the gain drops below 1 (log-gain < 0) or
+//! a cardinality budget is hit.  With the low-rank kernel each round costs
+//! one `2K x 2K` conditioning plus an `O(M K^2)` scoring pass — the same
+//! `conditional_scores` machinery MPR evaluation uses, so the whole greedy
+//! run is `O(budget · M K^2)`.
+//!
+//! This powers the "give me the single best diverse set" product surface
+//! next to the samplers' "give me a random diverse set".
+
+use crate::learn::eval::conditional_scores;
+use crate::ndpp::NdppKernel;
+
+/// Result of a greedy MAP run.
+#[derive(Debug, Clone)]
+pub struct MapResult {
+    pub items: Vec<usize>,
+    /// `log det(L_Y)` of the returned set.
+    pub log_det: f64,
+    /// per-step log-gains (diagnostic)
+    pub gains: Vec<f64>,
+}
+
+/// Greedy MAP with a cardinality budget.  Stops early when no item has
+/// conditional gain > `min_gain` (default 1.0 => log-gain > 0).
+pub fn greedy_map(kernel: &NdppKernel, budget: usize, min_gain: f64) -> MapResult {
+    let mut items: Vec<usize> = Vec::new();
+    let mut log_det = 0.0;
+    let mut gains = Vec::new();
+    for _ in 0..budget.min(2 * kernel.k()) {
+        let Some(scores) = conditional_scores(kernel, &items) else {
+            break; // current minor became singular — cannot condition further
+        };
+        let mut best: Option<(usize, f64)> = None;
+        for (i, &s) in scores.iter().enumerate() {
+            if items.contains(&i) {
+                continue;
+            }
+            if best.map(|(_, bs)| s > bs).unwrap_or(true) {
+                best = Some((i, s));
+            }
+        }
+        match best {
+            Some((i, gain)) if gain > min_gain => {
+                items.push(i);
+                log_det += gain.ln();
+                gains.push(gain.ln());
+            }
+            _ => break,
+        }
+    }
+    items.sort_unstable();
+    MapResult { items, log_det, gains }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::lu;
+    use crate::ndpp::probability;
+    use crate::rng::Xoshiro;
+
+    #[test]
+    fn logdet_matches_direct_computation() {
+        let mut rng = Xoshiro::seeded(1);
+        let kernel = NdppKernel::random_ondpp(30, 4, &mut rng);
+        let r = greedy_map(&kernel, 6, 1.0);
+        if r.items.is_empty() {
+            return;
+        }
+        let direct = probability::det_l_y(&kernel, &r.items).ln();
+        assert!((r.log_det - direct).abs() < 1e-6 * (1.0 + direct.abs()));
+    }
+
+    #[test]
+    fn greedy_beats_random_sets_of_same_size() {
+        let mut rng = Xoshiro::seeded(2);
+        let kernel = NdppKernel::random_ondpp(40, 4, &mut rng);
+        let r = greedy_map(&kernel, 4, 0.0);
+        assert!(!r.items.is_empty());
+        let greedy_det = probability::det_l_y(&kernel, &r.items);
+        for _ in 0..50 {
+            let random = rng.choose_distinct(40, r.items.len());
+            let d = probability::det_l_y(&kernel, &random);
+            assert!(greedy_det >= d - 1e-9, "greedy {greedy_det} < random {d}");
+        }
+    }
+
+    #[test]
+    fn finds_exact_mode_on_tiny_ground_set() {
+        // greedy is a heuristic, but on small well-separated kernels it
+        // should recover a set whose det is within a constant of the best
+        let mut rng = Xoshiro::seeded(3);
+        let kernel = NdppKernel::random_ondpp(8, 2, &mut rng);
+        let l = kernel.dense_l();
+        let mut best = 0.0f64;
+        for mask in 1u32..(1 << 8) {
+            let idx: Vec<usize> = (0..8).filter(|i| mask >> i & 1 == 1).collect();
+            best = best.max(lu::det(&l.principal(&idx)));
+        }
+        let r = greedy_map(&kernel, 8, 1.0);
+        let got = probability::det_l_y(&kernel, &r.items);
+        assert!(got >= 0.25 * best, "greedy {got} vs best {best}");
+    }
+
+    #[test]
+    fn budget_respected_and_gains_decreasing_logdet() {
+        let mut rng = Xoshiro::seeded(4);
+        let kernel = NdppKernel::random_ondpp(50, 8, &mut rng);
+        let r = greedy_map(&kernel, 3, 0.0);
+        assert!(r.items.len() <= 3);
+        assert_eq!(r.gains.len(), r.items.len());
+    }
+}

@@ -1,0 +1,195 @@
+//! Rust-driven ONDPP training loop over the AOT `train_step` artifact.
+//!
+//! The loop is deliberately thin: batching, shuffling, learning-rate
+//! schedule and convergence tracking live here; the gradient math (Eq. (14)
+//! + Adam + constraint projection) lives in the exported XLA graph, so the
+//! exact same computation that was validated against the python oracle is
+//! what production training runs.
+
+use anyhow::{anyhow, Result};
+
+use crate::data::baskets::pad_batch;
+use crate::linalg::Matrix;
+use crate::ndpp::NdppKernel;
+use crate::rng::Xoshiro;
+use crate::runtime::ModelOps;
+
+/// Hyperparameters (paper Appendix C shapes).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// per-part kernel rank K (sigma has K/2 entries)
+    pub k: usize,
+    pub batch_size: usize,
+    /// padded basket length fed to the graph
+    pub kmax: usize,
+    pub steps: usize,
+    pub lr: f64,
+    pub alpha: f64,
+    pub beta: f64,
+    /// rejection-rate regularizer (paper Eq. (14), Fig. 1)
+    pub gamma: f64,
+    /// true = ONDPP (orthogonality projection each step, paper §5);
+    /// false = unconstrained NDPP baseline (Gartrell et al. 2021)
+    pub project: bool,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            k: 8,
+            batch_size: 32,
+            kmax: 8,
+            steps: 200,
+            lr: 0.05,
+            alpha: 0.01,
+            beta: 0.01,
+            gamma: 0.1,
+            project: true,
+            seed: 0,
+        }
+    }
+}
+
+/// Output of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainedModel {
+    pub kernel: NdppKernel,
+    pub losses: Vec<f64>,
+    /// final raw (pre-softplus) sigma, for checkpoint/resume
+    pub raw_sigma: Vec<f64>,
+}
+
+/// AOT-driven trainer.
+pub struct Trainer<'a> {
+    ops: &'a ModelOps,
+    cfg: TrainConfig,
+    artifact_cfg: String,
+    m: usize,
+    mu: Vec<f64>,
+    train: Vec<Vec<usize>>,
+}
+
+fn softplus(x: f64) -> f64 {
+    if x > 30.0 {
+        x
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+impl<'a> Trainer<'a> {
+    /// `m` is the catalog size; `train` the training baskets; `mu` the
+    /// item-frequency weights (see `BasketDataset::item_frequencies`).
+    pub fn new(
+        ops: &'a ModelOps,
+        m: usize,
+        train: Vec<Vec<usize>>,
+        mu: Vec<f64>,
+        cfg: TrainConfig,
+    ) -> Result<Trainer<'a>> {
+        anyhow::ensure!(mu.len() == m, "mu length mismatch");
+        anyhow::ensure!(!train.is_empty(), "no training baskets");
+        let artifact_cfg = ops
+            .train_config(m, cfg.k, cfg.batch_size, cfg.kmax)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no train_step artifact for (m={m}, k={}, batch={}, kmax={}); \
+                     add the config to python/compile/aot.py CONFIGS and re-run \
+                     `make artifacts`",
+                    cfg.k,
+                    cfg.batch_size,
+                    cfg.kmax
+                )
+            })?;
+        Ok(Trainer { ops, cfg, artifact_cfg, m, mu, train })
+    }
+
+    /// Run the full loop.  `on_step` is invoked with `(step, loss)` for
+    /// progress reporting.
+    pub fn run(&self, mut on_step: impl FnMut(usize, f64)) -> Result<TrainedModel> {
+        let cfg = &self.cfg;
+        let mut rng = Xoshiro::seeded(cfg.seed);
+        let k = cfg.k;
+
+        // paper Appendix B init: V, B ~ U(0,1); D ~ N(0,1)
+        let mut v = Matrix::from_fn(self.m, k, |_, _| rng.uniform());
+        let mut b = Matrix::from_fn(self.m, k, |_, _| rng.uniform());
+        let mut raw_sigma: Vec<f64> = (0..k / 2).map(|_| rng.normal()).collect();
+        if cfg.project {
+            // establish constraints before the first step
+            let (pv, pb) = self.ops.project(&self.artifact_cfg, &v, &b)?;
+            v = pv;
+            b = pb;
+        }
+
+        let mut m_state = Matrix::zeros(self.m, 2 * k + 1);
+        let mut v_state = Matrix::zeros(self.m, 2 * k + 1);
+        let mut t = 0.0;
+        let mut losses = Vec::with_capacity(cfg.steps);
+
+        for step in 0..cfg.steps {
+            // minibatch with replacement
+            let batch: Vec<Vec<usize>> = (0..cfg.batch_size)
+                .map(|_| self.train[rng.below(self.train.len())].clone())
+                .collect();
+            let idx = pad_batch(&batch, cfg.kmax);
+            let out = self.ops.train_step(
+                &self.artifact_cfg,
+                !cfg.project,
+                &v,
+                &b,
+                &raw_sigma,
+                &m_state,
+                &v_state,
+                t,
+                (&idx, cfg.batch_size, cfg.kmax),
+                &self.mu,
+                cfg.alpha,
+                cfg.beta,
+                cfg.gamma,
+                cfg.lr,
+            )?;
+            v = out.v;
+            b = out.b;
+            raw_sigma = out.raw_sigma;
+            m_state = out.m_state;
+            v_state = out.v_state;
+            t = out.t;
+            losses.push(out.loss);
+            on_step(step, out.loss);
+        }
+
+        let sigma: Vec<f64> = raw_sigma.iter().map(|&r| softplus(r)).collect();
+        Ok(TrainedModel {
+            kernel: NdppKernel::new(v, b, sigma),
+            losses,
+            raw_sigma,
+        })
+    }
+
+    /// Mean log-likelihood of a basket set under the current artifact's
+    /// eval graph (batched; remainder padded with empty rows dropped by
+    /// padding convention).
+    pub fn eval_loglik(&self, model: &TrainedModel, baskets: &[Vec<usize>]) -> Result<f64> {
+        let cfg = &self.cfg;
+        let mut total = 0.0;
+        let mut batches = 0usize;
+        for chunk in baskets.chunks(cfg.batch_size) {
+            if chunk.len() < cfg.batch_size {
+                break; // keep shapes static; tail ignored
+            }
+            let idx = pad_batch(chunk, cfg.kmax);
+            total += self.ops.loglik_batch(
+                &self.artifact_cfg,
+                &model.kernel.v,
+                &model.kernel.b,
+                &model.raw_sigma,
+                (&idx, cfg.batch_size, cfg.kmax),
+            )?;
+            batches += 1;
+        }
+        anyhow::ensure!(batches > 0, "need at least one full batch for eval");
+        Ok(total / batches as f64)
+    }
+}

@@ -1,0 +1,295 @@
+//! LU decomposition with partial pivoting: determinant, solve, inverse.
+//!
+//! The workhorse behind every `det(L_Y)` acceptance ratio in the rejection
+//! sampler and every `det(I + Z^T Z X)` normalizer.  Sizes are `<= 2K`
+//! (typically 200), so an unblocked right-looking factorization is plenty.
+
+use crate::linalg::Matrix;
+
+/// LU factorization `P A = L U` of a square matrix.
+#[derive(Debug, Clone)]
+pub struct Lu {
+    /// Packed LU factors (unit lower + upper in one matrix).
+    pub lu: Matrix,
+    /// Row permutation applied to A.
+    pub perm: Vec<usize>,
+    /// Sign of the permutation (+1/-1).
+    pub perm_sign: f64,
+    /// True if a pivot was (near) zero — matrix singular to working precision.
+    pub singular: bool,
+}
+
+impl Lu {
+    /// Factorize.  Never fails; check [`Lu::singular`] when exact solves
+    /// matter (determinants of singular matrices are correctly ~0).
+    pub fn factor(a: &Matrix) -> Lu {
+        assert!(a.is_square(), "LU of non-square matrix");
+        let n = a.rows;
+        let mut lu = a.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        let mut singular = false;
+
+        for k in 0..n {
+            // partial pivot: largest |entry| in column k at/below row k
+            let mut p = k;
+            let mut best = lu[(k, k)].abs();
+            for i in (k + 1)..n {
+                let v = lu[(i, k)].abs();
+                if v > best {
+                    best = v;
+                    p = i;
+                }
+            }
+            if p != k {
+                lu.data.swap_chunks(p, k, n);
+                perm.swap(p, k);
+                sign = -sign;
+            }
+            let piv = lu[(k, k)];
+            if piv.abs() < 1e-300 {
+                singular = true;
+                continue;
+            }
+            for i in (k + 1)..n {
+                let f = lu[(i, k)] / piv;
+                lu[(i, k)] = f;
+                if f == 0.0 {
+                    continue;
+                }
+                // row_i -= f * row_k for columns k+1..n (split borrows)
+                let (top, bottom) = lu.data.split_at_mut(i * n);
+                let row_k = &top[k * n..(k + 1) * n];
+                let row_i = &mut bottom[..n];
+                for j in (k + 1)..n {
+                    row_i[j] -= f * row_k[j];
+                }
+            }
+        }
+        Lu { lu, perm, perm_sign: sign, singular }
+    }
+
+    /// Determinant of the original matrix.
+    pub fn det(&self) -> f64 {
+        let n = self.lu.rows;
+        let mut d = self.perm_sign;
+        for i in 0..n {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+
+    /// `(sign, log|det|)`.
+    pub fn slogdet(&self) -> (f64, f64) {
+        let n = self.lu.rows;
+        let mut sign = self.perm_sign;
+        let mut logdet = 0.0;
+        for i in 0..n {
+            let d = self.lu[(i, i)];
+            if d == 0.0 {
+                return (0.0, f64::NEG_INFINITY);
+            }
+            sign *= d.signum();
+            logdet += d.abs().ln();
+        }
+        (sign, logdet)
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows;
+        assert_eq!(b.len(), n);
+        // apply permutation
+        let mut x: Vec<f64> = self.perm.iter().map(|&p| b[p]).collect();
+        // forward substitution (unit lower)
+        for i in 1..n {
+            let mut acc = x[i];
+            let row = self.lu.row(i);
+            for j in 0..i {
+                acc -= row[j] * x[j];
+            }
+            x[i] = acc;
+        }
+        // back substitution (upper)
+        for i in (0..n).rev() {
+            let row = self.lu.row(i);
+            let mut acc = x[i];
+            for j in (i + 1)..n {
+                acc -= row[j] * x[j];
+            }
+            x[i] = acc / row[i];
+        }
+        x
+    }
+
+    /// Solve `A X = B` column by column.
+    pub fn solve(&self, b: &Matrix) -> Matrix {
+        let n = self.lu.rows;
+        assert_eq!(b.rows, n);
+        let mut out = Matrix::zeros(n, b.cols);
+        for j in 0..b.cols {
+            let col = b.col(j);
+            let x = self.solve_vec(&col);
+            for i in 0..n {
+                out[(i, j)] = x[i];
+            }
+        }
+        out
+    }
+
+    /// Inverse of the original matrix.
+    pub fn inverse(&self) -> Matrix {
+        self.solve(&Matrix::identity(self.lu.rows))
+    }
+}
+
+/// Swap two rows of a flat row-major buffer.
+trait SwapChunks {
+    fn swap_chunks(&mut self, a: usize, b: usize, chunk: usize);
+}
+
+impl SwapChunks for Vec<f64> {
+    fn swap_chunks(&mut self, a: usize, b: usize, chunk: usize) {
+        if a == b {
+            return;
+        }
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        let (first, second) = self.split_at_mut(hi * chunk);
+        first[lo * chunk..(lo + 1) * chunk].swap_with_slice(&mut second[..chunk]);
+    }
+}
+
+/// Convenience: determinant of a matrix.
+pub fn det(a: &Matrix) -> f64 {
+    Lu::factor(a).det()
+}
+
+/// Convenience: `(sign, log|det|)` of a matrix.
+pub fn slogdet(a: &Matrix) -> (f64, f64) {
+    Lu::factor(a).slogdet()
+}
+
+/// Convenience: inverse of a matrix.
+pub fn inverse(a: &Matrix) -> Matrix {
+    Lu::factor(a).inverse()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro;
+    use crate::util::prop;
+
+    /// Cofactor-expansion determinant, the independent oracle (n <= 5).
+    fn det_cofactor(a: &Matrix) -> f64 {
+        let n = a.rows;
+        if n == 1 {
+            return a[(0, 0)];
+        }
+        let mut acc = 0.0;
+        for j in 0..n {
+            let idx: Vec<usize> = (1..n).collect();
+            let cols: Vec<usize> = (0..n).filter(|&c| c != j).collect();
+            let minor = a.submatrix(&idx, &cols);
+            let s = if j % 2 == 0 { 1.0 } else { -1.0 };
+            acc += s * a[(0, j)] * det_cofactor(&minor);
+        }
+        acc
+    }
+
+    #[test]
+    fn det_matches_cofactor_expansion() {
+        prop::check("lu_det_cofactor", 40, |g| {
+            let n = g.usize_in(1, 5);
+            let a = Matrix::from_vec(n, n, g.normal_vec(n * n, 1.0));
+            let want = det_cofactor(&a);
+            let got = det(&a);
+            let tol = 1e-9 * (1.0 + want.abs());
+            assert!((got - want).abs() < tol, "n={n} got={got} want={want}");
+        });
+    }
+
+    #[test]
+    fn solve_recovers_solution() {
+        prop::check("lu_solve", 30, |g| {
+            let n = g.usize_in(1, 20);
+            let a = Matrix::from_vec(n, n, g.normal_vec(n * n, 1.0));
+            let x_true = g.normal_vec(n, 1.0);
+            let b = a.matvec(&x_true);
+            let lu = Lu::factor(&a);
+            if lu.singular {
+                return;
+            }
+            let x = lu.solve_vec(&b);
+            for (xi, ti) in x.iter().zip(&x_true) {
+                assert!((xi - ti).abs() < 1e-7, "{xi} vs {ti}");
+            }
+        });
+    }
+
+    #[test]
+    fn inverse_times_original_is_identity() {
+        prop::check("lu_inverse", 20, |g| {
+            let n = g.usize_in(1, 15);
+            let a = Matrix::from_vec(n, n, g.normal_vec(n * n, 1.0));
+            let lu = Lu::factor(&a);
+            if lu.singular {
+                return;
+            }
+            let prod = a.matmul(&lu.inverse());
+            let err = prod.sub(&Matrix::identity(n)).max_abs();
+            assert!(err < 1e-8, "err={err}");
+        });
+    }
+
+    #[test]
+    fn slogdet_consistent_with_det() {
+        prop::check("lu_slogdet", 30, |g| {
+            let n = g.usize_in(1, 10);
+            let a = Matrix::from_vec(n, n, g.normal_vec(n * n, 1.0));
+            let (sign, logdet) = slogdet(&a);
+            let d = det(&a);
+            assert!((sign * logdet.exp() - d).abs() < 1e-8 * (1.0 + d.abs()));
+        });
+    }
+
+    #[test]
+    fn singular_matrix_reports_zero_det() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        let lu = Lu::factor(&a);
+        assert!(lu.det().abs() < 1e-12);
+        let (sign, ld) = lu.slogdet();
+        assert!(sign == 0.0 || ld < -20.0);
+    }
+
+    #[test]
+    fn det_of_known_matrices() {
+        assert!((det(&Matrix::identity(6)) - 1.0).abs() < 1e-14);
+        let mut d = Matrix::diag(&[2.0, 3.0, -4.0]);
+        assert!((det(&d) + 24.0).abs() < 1e-12);
+        // permuted diag flips sign
+        d.data.swap_chunks(0, 1, 3);
+        assert!((det(&d) - 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_entry() {
+        let a = Matrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        assert!((det(&a) + 1.0).abs() < 1e-14);
+        let lu = Lu::factor(&a);
+        let x = lu.solve_vec(&[2.0, 3.0]);
+        assert!((x[0] - 3.0).abs() < 1e-14 && (x[1] - 2.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn random_spd_has_positive_det() {
+        let mut rng = Xoshiro::seeded(5);
+        for _ in 0..10 {
+            let b = Matrix::randn(8, 8, 1.0, &mut rng);
+            let mut spd = b.t_matmul(&b);
+            spd.add_diag(0.1);
+            let (sign, _) = slogdet(&spd);
+            assert_eq!(sign, 1.0);
+        }
+    }
+}

@@ -1,0 +1,470 @@
+//! Row-major dense `f64` matrix.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+use crate::rng::Xoshiro;
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    // ---- constructors -------------------------------------------------
+
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Matrix {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn diag(values: &[f64]) -> Matrix {
+        let n = values.len();
+        let mut m = Matrix::zeros(n, n);
+        for (i, &v) in values.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    /// Standard-normal entries scaled by `scale`.
+    pub fn randn(rows: usize, cols: usize, scale: f64, rng: &mut Xoshiro) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for v in &mut m.data {
+            *v = rng.normal() * scale;
+        }
+        m
+    }
+
+    // ---- views ---------------------------------------------------------
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Submatrix with the given row and column index sets.
+    pub fn submatrix(&self, row_idx: &[usize], col_idx: &[usize]) -> Matrix {
+        let mut m = Matrix::zeros(row_idx.len(), col_idx.len());
+        for (a, &i) in row_idx.iter().enumerate() {
+            for (b, &j) in col_idx.iter().enumerate() {
+                m[(a, b)] = self[(i, j)];
+            }
+        }
+        m
+    }
+
+    /// Principal submatrix `A[Y, Y]`.
+    pub fn principal(&self, idx: &[usize]) -> Matrix {
+        self.submatrix(idx, idx)
+    }
+
+    /// Rows `A[Y, :]` gathered into a new matrix.
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut m = Matrix::zeros(idx.len(), self.cols);
+        for (a, &i) in idx.iter().enumerate() {
+            m.row_mut(a).copy_from_slice(self.row(i));
+        }
+        m
+    }
+
+    // ---- arithmetic -----------------------------------------------------
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// `self @ other` — ikj loop order over contiguous rows (cache friendly).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        let n = other.cols;
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                for j in 0..n {
+                    orow[j] += aik * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self^T @ other` without materializing the transpose.
+    pub fn t_matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let mut out = Matrix::zeros(self.cols, other.cols);
+        let n = other.cols;
+        for r in 0..self.rows {
+            let arow = self.row(r);
+            let brow = other.row(r);
+            for (i, &ari) in arow.iter().enumerate() {
+                if ari == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += ari * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ other^T`.
+    pub fn matmul_t(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..other.rows {
+                out[(i, j)] = dot(arow, other.row(j));
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product `self @ x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// `self^T @ x`.
+    pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len());
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for (j, &v) in self.row(i).iter().enumerate() {
+                out[j] += xi * v;
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// `self += s * I`.
+    pub fn add_diag(&mut self, s: f64) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            self[(i, i)] += s;
+        }
+    }
+
+    /// Rank-1 update `self -= scale * u v^T`.
+    pub fn rank1_sub(&mut self, u: &[f64], v: &[f64], scale: f64) {
+        assert_eq!(u.len(), self.rows);
+        assert_eq!(v.len(), self.cols);
+        for (i, &ui) in u.iter().enumerate() {
+            let f = ui * scale;
+            if f == 0.0 {
+                continue;
+            }
+            let row = self.row_mut(i);
+            for (j, &vj) in v.iter().enumerate() {
+                row[j] -= f * vj;
+            }
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |acc, x| acc.max(x.abs()))
+    }
+
+    /// Bilinear form `x^T self y`.
+    pub fn bilinear(&self, x: &[f64], y: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        let mut acc = 0.0;
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            acc += xi * dot(self.row(i), y);
+        }
+        acc
+    }
+
+    /// Horizontal concatenation `[self | other]`.
+    pub fn hcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows);
+        let mut m = Matrix::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            m.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            m.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        m
+    }
+
+    /// Convert to f32 (row-major) for XLA literals.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Build from an f32 slice.
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+}
+
+/// Dot product of two slices.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Euclidean norm of a slice.
+#[inline]
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f64) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn identity_matmul_is_noop() {
+        let mut rng = Xoshiro::seeded(1);
+        let a = Matrix::randn(5, 7, 1.0, &mut rng);
+        assert_close(&Matrix::identity(5).matmul(&a), &a, 1e-14);
+        assert_close(&a.matmul(&Matrix::identity(7)), &a, 1e-14);
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_close(&c, &Matrix::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]), 1e-14);
+    }
+
+    #[test]
+    fn transpose_variants_agree() {
+        prop::check("transpose_variants", 20, |g| {
+            let m = g.usize_in(1, 12);
+            let n = g.usize_in(1, 12);
+            let p = g.usize_in(1, 12);
+            let a = Matrix::from_vec(m, n, g.normal_vec(m * n, 1.0));
+            let b = Matrix::from_vec(m, p, g.normal_vec(m * p, 1.0));
+            let c = Matrix::from_vec(p, n, g.normal_vec(p * n, 1.0));
+            assert_close(&a.t_matmul(&b), &a.transpose().matmul(&b), 1e-10);
+            assert_close(&a.matmul_t(&c), &a.matmul(&c.transpose()), 1e-10);
+        });
+    }
+
+    #[test]
+    fn bilinear_matches_matvec() {
+        prop::check("bilinear", 20, |g| {
+            let n = g.usize_in(1, 10);
+            let a = Matrix::from_vec(n, n, g.normal_vec(n * n, 1.0));
+            let x = g.normal_vec(n, 1.0);
+            let y = g.normal_vec(n, 1.0);
+            let via_mv = dot(&x, &a.matvec(&y));
+            assert!((a.bilinear(&x, &y) - via_mv).abs() < 1e-10);
+        });
+    }
+
+    #[test]
+    fn rank1_sub_matches_outer() {
+        let mut rng = Xoshiro::seeded(2);
+        let mut a = Matrix::randn(4, 3, 1.0, &mut rng);
+        let a0 = a.clone();
+        let u: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        let v: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+        a.rank1_sub(&u, &v, 2.0);
+        for i in 0..4 {
+            for j in 0..3 {
+                assert!((a[(i, j)] - (a0[(i, j)] - 2.0 * u[i] * v[j])).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn submatrix_and_gather() {
+        let a = Matrix::from_fn(5, 5, |i, j| (i * 10 + j) as f64);
+        let s = a.principal(&[1, 3]);
+        assert_eq!(s[(0, 0)], 11.0);
+        assert_eq!(s[(1, 0)], 31.0);
+        assert_eq!(s[(0, 1)], 13.0);
+        let g = a.gather_rows(&[4, 0]);
+        assert_eq!(g[(0, 2)], 42.0);
+        assert_eq!(g[(1, 2)], 2.0);
+    }
+
+    #[test]
+    fn hcat_shapes() {
+        let a = Matrix::from_rows(&[&[1.0], &[2.0]]);
+        let b = Matrix::from_rows(&[&[3.0, 4.0], &[5.0, 6.0]]);
+        let c = a.hcat(&b);
+        assert_eq!((c.rows, c.cols), (2, 3));
+        assert_eq!(c[(1, 2)], 6.0);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut rng = Xoshiro::seeded(3);
+        let a = Matrix::randn(3, 3, 1.0, &mut rng);
+        let b = Matrix::from_f32(3, 3, &a.to_f32());
+        assert_close(&a, &b, 1e-6);
+    }
+}

@@ -1,0 +1,34 @@
+//! Dense linear-algebra substrate (f64, row-major).
+//!
+//! Nothing like LAPACK/nalgebra is available offline, and the NDPP
+//! algorithms need determinants, inverses, QR, symmetric eigendecomposition
+//! and the Youla (real Schur of a skew-symmetric matrix) decomposition.
+//! Sizes are modest — `2K x 2K` inner matrices with `K <= 128`, `k x k`
+//! minors with `k <= ~100` — so clarity and numerical robustness beat
+//! blocked performance here.  The `O(M K^2)` item-axis work is elsewhere
+//! (tiled in [`crate::sampler`] / offloaded to XLA artifacts).
+//!
+//! Contents:
+//! * [`Matrix`] — row-major dense matrix with the usual ops.
+//! * [`lu`] — LU with partial pivoting: determinant, solve, inverse.
+//! * [`qr`] — Householder QR: orthonormalization, least squares.
+//! * [`eigen`] — cyclic Jacobi symmetric eigendecomposition.
+//! * [`skew`] — Youla decomposition of skew-symmetric matrices (via Jacobi
+//!   on `-S^2` + pairing), the engine behind the paper's Algorithm 4.
+//! * [`chol`] — Cholesky factorization of SPD matrices.
+
+pub mod chol;
+pub mod eigen;
+pub mod lu;
+pub mod matrix;
+pub mod qr;
+pub mod skew;
+pub mod tridiag;
+
+pub use chol::cholesky;
+pub use eigen::{jacobi_eigen, SymEigen};
+pub use lu::Lu;
+pub use matrix::Matrix;
+pub use qr::{householder_qr, Qr};
+pub use skew::{youla_of_skew, YoulaPair};
+pub use tridiag::sym_eigen;

@@ -1,0 +1,171 @@
+//! Householder QR decomposition.
+//!
+//! Used for the ONDPP constraint `B^T B = I` (orthonormalization of the
+//! skew factor, paper §5 footnote) and as a building block in tests.
+
+use crate::linalg::Matrix;
+
+/// Thin QR factorization `A = Q R` with `Q` (m x n, orthonormal columns)
+/// and `R` (n x n, upper triangular), for `m >= n`.
+#[derive(Debug, Clone)]
+pub struct Qr {
+    pub q: Matrix,
+    pub r: Matrix,
+}
+
+/// Householder QR.  Requires `a.rows >= a.cols`.
+pub fn householder_qr(a: &Matrix) -> Qr {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "householder_qr needs rows >= cols");
+    let mut r = a.clone();
+    // store householder vectors
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // build householder vector for column k below the diagonal
+        let mut v: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        let alpha = -v[0].signum() * super::matrix::norm(&v);
+        if alpha.abs() < 1e-300 {
+            // zero column: identity reflector
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        v[0] -= alpha;
+        let vnorm = super::matrix::norm(&v);
+        if vnorm < 1e-300 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        for x in &mut v {
+            *x /= vnorm;
+        }
+        // apply reflector to R[k.., k..]: R -= 2 v (v^T R)
+        for j in k..n {
+            let mut proj = 0.0;
+            for i in 0..(m - k) {
+                proj += v[i] * r[(k + i, j)];
+            }
+            proj *= 2.0;
+            for i in 0..(m - k) {
+                r[(k + i, j)] -= proj * v[i];
+            }
+        }
+        vs.push(v);
+    }
+
+    // form thin Q by applying reflectors (in reverse) to the first n
+    // columns of the identity
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        if v.iter().all(|&x| x == 0.0) {
+            continue;
+        }
+        for j in 0..n {
+            let mut proj = 0.0;
+            for i in 0..(m - k) {
+                proj += v[i] * q[(k + i, j)];
+            }
+            proj *= 2.0;
+            for i in 0..(m - k) {
+                q[(k + i, j)] -= proj * v[i];
+            }
+        }
+    }
+
+    // zero out the strictly-lower part of R and truncate to n x n
+    let mut r_thin = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_thin[(i, j)] = r[(i, j)];
+        }
+    }
+    Qr { q, r: r_thin }
+}
+
+/// Orthonormalize the columns of `a` (returns Q of the thin QR, with sign
+/// convention R_ii >= 0 so the result is unique).
+pub fn orthonormalize(a: &Matrix) -> Matrix {
+    let qr = householder_qr(a);
+    let mut q = qr.q;
+    for j in 0..q.cols {
+        if qr.r[(j, j)] < 0.0 {
+            for i in 0..q.rows {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn qr_reconstructs_a() {
+        prop::check("qr_reconstruct", 30, |g| {
+            let n = g.usize_in(1, 10);
+            let m = n + g.usize_in(0, 20);
+            let a = Matrix::from_vec(m, n, g.normal_vec(m * n, 1.0));
+            let qr = householder_qr(&a);
+            let err = qr.q.matmul(&qr.r).sub(&a).max_abs();
+            assert!(err < 1e-9, "m={m} n={n} err={err}");
+        });
+    }
+
+    #[test]
+    fn q_has_orthonormal_columns() {
+        prop::check("qr_orthonormal", 30, |g| {
+            let n = g.usize_in(1, 10);
+            let m = n + g.usize_in(0, 20);
+            let a = Matrix::from_vec(m, n, g.normal_vec(m * n, 1.0));
+            let qr = householder_qr(&a);
+            let gram = qr.q.t_matmul(&qr.q);
+            let err = gram.sub(&Matrix::identity(n)).max_abs();
+            assert!(err < 1e-10, "err={err}");
+        });
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        prop::check("qr_upper", 20, |g| {
+            let n = g.usize_in(2, 8);
+            let m = n + g.usize_in(0, 8);
+            let a = Matrix::from_vec(m, n, g.normal_vec(m * n, 1.0));
+            let qr = householder_qr(&a);
+            for i in 1..n {
+                for j in 0..i {
+                    assert_eq!(qr.r[(i, j)], 0.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn orthonormalize_preserves_span() {
+        prop::check("qr_span", 20, |g| {
+            let n = g.usize_in(1, 6);
+            let m = n + g.usize_in(2, 10);
+            let a = Matrix::from_vec(m, n, g.normal_vec(m * n, 1.0));
+            let q = orthonormalize(&a);
+            // projection of A onto span(Q) equals A
+            let proj = q.matmul(&q.t_matmul(&a));
+            assert!(proj.sub(&a).max_abs() < 1e-8);
+        });
+    }
+
+    #[test]
+    fn handles_rank_deficiency_gracefully() {
+        // two identical columns: still produces orthonormal Q (second
+        // column arbitrary but orthonormal) and consistent reconstruction
+        let a = Matrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0], &[0.0, 0.0]]);
+        let qr = householder_qr(&a);
+        let err = qr.q.matmul(&qr.r).sub(&a).max_abs();
+        assert!(err < 1e-10, "err={err}");
+    }
+}

@@ -1,0 +1,263 @@
+//! Youla decomposition of a real skew-symmetric matrix.
+//!
+//! A real skew-symmetric `S` has the normal form (Youla, 1961)
+//!
+//! ```text
+//!   S = sum_j  sigma_j ( y_{2j-1} y_{2j}^T  -  y_{2j} y_{2j-1}^T ),
+//! ```
+//!
+//! with `sigma_j > 0` and `{y_i}` orthonormal — the real version of its
+//! purely-imaginary eigenstructure `±i sigma_j`.  The paper's proposal
+//! kernel (Theorem 1) replaces each 2x2 rotation block `[[0, s], [-s, 0]]`
+//! by `s I_2`, so this decomposition is the heart of the rejection sampler.
+//!
+//! **No complex arithmetic needed**: `-S^2 = S^T S` is symmetric PSD with
+//! doubly-degenerate eigenvalues `sigma_j^2`.  For a unit eigenvector `u`
+//! of `-S^2` with eigenvalue `sigma^2 > 0`, setting `w = S u / sigma`
+//! gives `S u = sigma w`, `S w = -sigma u`, and `(u, w)` orthonormal, i.e.
+//! one Youla pair `(sigma, y1 = w, y2 = u)`.  Degenerate sigma blocks are
+//! handled by deflation: eigenvectors already consumed by a previous pair
+//! are projected out before pairing.
+
+use crate::linalg::tridiag::sym_eigen;
+use crate::linalg::matrix::{dot, norm};
+use crate::linalg::Matrix;
+
+/// One Youla pair `(sigma, y1, y2)` with `S y2 = sigma y1`,
+/// `S y1 = -sigma y2`.
+#[derive(Debug, Clone)]
+pub struct YoulaPair {
+    pub sigma: f64,
+    pub y1: Vec<f64>,
+    pub y2: Vec<f64>,
+}
+
+/// Relative tolerance under which a sigma is treated as zero (null space).
+const SIGMA_TOL: f64 = 1e-9;
+
+/// Youla decomposition of a skew-symmetric matrix.
+///
+/// Returns pairs sorted by descending `sigma`; pairs with
+/// `sigma <= SIGMA_TOL * max_sigma` are dropped (they contribute nothing to
+/// the kernel).  The input is *not* checked for skew-symmetry beyond debug
+/// assertions; callers construct `S` from `B (D - D^T) B^T` style products
+/// that are skew by construction.
+pub fn youla_of_skew(s: &Matrix) -> Vec<YoulaPair> {
+    assert!(s.is_square());
+    let n = s.rows;
+    if n == 0 {
+        return Vec::new();
+    }
+    debug_assert!(
+        s.add(&s.transpose()).max_abs() < 1e-8 * (1.0 + s.max_abs()),
+        "youla_of_skew: input not skew-symmetric"
+    );
+
+    // -S^2 is symmetric PSD; its eigenpairs give sigma^2 and the invariant
+    // planes.
+    let s2 = s.matmul(s).scale(-1.0);
+    let eig = sym_eigen(&s2);
+
+    let max_val = eig.values.first().copied().unwrap_or(0.0).max(0.0);
+    let cutoff = (SIGMA_TOL * SIGMA_TOL) * max_val.max(1e-300);
+    // a genuine yet-unclaimed eigenvector keeps ~unit norm after deflation;
+    // residuals from already-claimed (possibly rounding-mixed) eigenspaces
+    // are orders of magnitude smaller
+    const DEFLATION_RESIDUAL: f64 = 1e-4;
+
+    let mut pairs: Vec<YoulaPair> = Vec::new();
+    // basis of already-claimed directions, for deflation in degenerate
+    // eigenspaces
+    let mut used: Vec<Vec<f64>> = Vec::new();
+
+    for j in 0..n {
+        let lam = eig.values[j];
+        if lam <= cutoff {
+            break; // values sorted descending; the rest is null space
+        }
+        let mut u = eig.vectors.col(j);
+        // project out already-used directions (only those with matching
+        // sigma matter, but projecting against all is harmless and simpler)
+        for w in &used {
+            let c = dot(&u, w);
+            if c != 0.0 {
+                for (ui, wi) in u.iter_mut().zip(w) {
+                    *ui -= c * wi;
+                }
+            }
+        }
+        let un = norm(&u);
+        if un < DEFLATION_RESIDUAL {
+            continue; // fully inside an already-claimed plane
+        }
+        for x in &mut u {
+            *x /= un;
+        }
+        let sigma = lam.sqrt();
+        let su = s.matvec(&u);
+        let mut w: Vec<f64> = su.iter().map(|x| x / sigma).collect();
+        // numerical cleanup: orthogonalize w against u (exact in theory)
+        // and against all previously claimed directions (matters when
+        // distinct pairs have close sigmas and Jacobi mixes their
+        // eigenspaces)
+        let c = dot(&w, &u);
+        for (wi, ui) in w.iter_mut().zip(&u) {
+            *wi -= c * ui;
+        }
+        for prev in &used {
+            let c = dot(&w, prev);
+            if c != 0.0 {
+                for (wi, pi) in w.iter_mut().zip(prev) {
+                    *wi -= c * pi;
+                }
+            }
+        }
+        let wn = norm(&w);
+        if wn < DEFLATION_RESIDUAL {
+            continue;
+        }
+        for x in &mut w {
+            *x /= wn;
+        }
+        used.push(u.clone());
+        used.push(w.clone());
+        pairs.push(YoulaPair { sigma, y1: w, y2: u });
+    }
+
+    pairs.sort_by(|a, b| b.sigma.partial_cmp(&a.sigma).unwrap());
+    pairs
+}
+
+/// Reconstruct the skew matrix from its Youla pairs (test/diagnostic).
+pub fn reconstruct(pairs: &[YoulaPair], n: usize) -> Matrix {
+    let mut out = Matrix::zeros(n, n);
+    for p in pairs {
+        for i in 0..n {
+            for j in 0..n {
+                out[(i, j)] += p.sigma * (p.y1[i] * p.y2[j] - p.y2[i] * p.y1[j]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    /// Random skew-symmetric matrix of rank <= 2*khalf, built like the
+    /// paper's `B (D - D^T) B^T`.
+    fn random_skew(g: &mut crate::util::prop::Gen, n: usize, khalf: usize) -> Matrix {
+        let k = 2 * khalf;
+        let b = Matrix::from_vec(n, k, g.normal_vec(n * k, 1.0));
+        let mut d = Matrix::zeros(k, k);
+        for j in 0..khalf {
+            let s = g.f64_in(0.1, 3.0);
+            d[(2 * j, 2 * j + 1)] = s;
+            d[(2 * j + 1, 2 * j)] = -s;
+        }
+        b.matmul(&d).matmul_t(&b)
+    }
+
+    #[test]
+    fn reconstruction_matches() {
+        prop::check("youla_reconstruct", 20, |g| {
+            let khalf = g.usize_in(1, 4);
+            let n = 2 * khalf + g.usize_in(0, 10);
+            let s = random_skew(g, n, khalf);
+            let pairs = youla_of_skew(&s);
+            let recon = reconstruct(&pairs, n);
+            let err = recon.sub(&s).max_abs();
+            assert!(err < 1e-7 * (1.0 + s.max_abs()), "n={n} err={err}");
+        });
+    }
+
+    #[test]
+    fn vectors_orthonormal() {
+        prop::check("youla_orthonormal", 20, |g| {
+            let khalf = g.usize_in(1, 4);
+            let n = 2 * khalf + g.usize_in(0, 8);
+            let s = random_skew(g, n, khalf);
+            let pairs = youla_of_skew(&s);
+            let mut all: Vec<&Vec<f64>> = Vec::new();
+            for p in &pairs {
+                all.push(&p.y1);
+                all.push(&p.y2);
+            }
+            for (a, va) in all.iter().enumerate() {
+                for (b, vb) in all.iter().enumerate() {
+                    let want = if a == b { 1.0 } else { 0.0 };
+                    assert!(
+                        (dot(va, vb) - want).abs() < 1e-7,
+                        "a={a} b={b} dot={}",
+                        dot(va, vb)
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn action_on_pairs() {
+        prop::check("youla_action", 20, |g| {
+            let khalf = g.usize_in(1, 3);
+            let n = 2 * khalf + g.usize_in(0, 6);
+            let s = random_skew(g, n, khalf);
+            for p in youla_of_skew(&s) {
+                let sy2 = s.matvec(&p.y2);
+                let sy1 = s.matvec(&p.y1);
+                for i in 0..n {
+                    assert!((sy2[i] - p.sigma * p.y1[i]).abs() < 1e-7);
+                    assert!((sy1[i] + p.sigma * p.y2[i]).abs() < 1e-7);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rank_detected() {
+        prop::check("youla_rank", 15, |g| {
+            let khalf = g.usize_in(1, 4);
+            let n = 2 * khalf + g.usize_in(2, 8);
+            let s = random_skew(g, n, khalf);
+            let pairs = youla_of_skew(&s);
+            assert_eq!(pairs.len(), khalf, "n={n}");
+            assert!(pairs.iter().all(|p| p.sigma > 0.0));
+        });
+    }
+
+    #[test]
+    fn degenerate_sigmas_handled() {
+        // S with two planes sharing the same sigma = 1.5
+        let n = 4;
+        let mut s = Matrix::zeros(n, n);
+        s[(0, 1)] = 1.5;
+        s[(1, 0)] = -1.5;
+        s[(2, 3)] = 1.5;
+        s[(3, 2)] = -1.5;
+        let pairs = youla_of_skew(&s);
+        assert_eq!(pairs.len(), 2);
+        let recon = reconstruct(&pairs, n);
+        assert!(recon.sub(&s).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_matrix_has_no_pairs() {
+        let s = Matrix::zeros(5, 5);
+        assert!(youla_of_skew(&s).is_empty());
+    }
+
+    #[test]
+    fn sigmas_descending() {
+        prop::check("youla_sorted", 10, |g| {
+            let khalf = g.usize_in(2, 4);
+            let n = 2 * khalf + 2;
+            let s = random_skew(g, n, khalf);
+            let pairs = youla_of_skew(&s);
+            for w in pairs.windows(2) {
+                assert!(w[0].sigma >= w[1].sigma - 1e-12);
+            }
+        });
+    }
+}

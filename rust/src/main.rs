@@ -1,0 +1,389 @@
+//! `ndpp` — command-line entry point for the NDPP sampling framework.
+//!
+//! ```text
+//! ndpp sample     draw samples from a kernel (cholesky | rejection)
+//! ndpp serve      run the TCP sampling service
+//! ndpp train      learn an ONDPP kernel from a basket dataset (AOT/PJRT)
+//! ndpp gen-data   generate a synthetic basket dataset
+//! ndpp reproduce  regenerate a paper table/figure (table1|table2|table3|fig1|fig2)
+//! ndpp info       environment + artifact status
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use ndpp::bench::experiments::{self, ExpOptions};
+use ndpp::bench::BenchRunner;
+use ndpp::coordinator::server;
+use ndpp::coordinator::{SamplingService, ServiceConfig};
+use ndpp::data::{recipes, synthetic, BasketDataset};
+use ndpp::learn::{self, TrainConfig, Trainer};
+use ndpp::ndpp::{MarginalKernel, Proposal};
+use ndpp::rng::Xoshiro;
+use ndpp::runtime::ModelOps;
+use ndpp::sampler::{CholeskySampler, RejectionSampler, SampleTree, Sampler, TreeConfig};
+use ndpp::util::args::{help_text, Args, Spec};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "sample" => cmd_sample(rest),
+        "serve" => cmd_serve(rest),
+        "train" => cmd_train(rest),
+        "gen-data" => cmd_gen_data(rest),
+        "reproduce" => cmd_reproduce(rest),
+        "map" => cmd_map(rest),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `ndpp help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "ndpp — scalable sampling for nonsymmetric determinantal point processes\n\
+         (ICLR 2022 reproduction; see README.md)\n\n\
+         commands:\n\
+         \x20 sample     draw samples from a random/loaded kernel\n\
+         \x20 serve      run the TCP sampling service\n\
+         \x20 train      learn an ONDPP kernel (AOT train_step via PJRT)\n\
+         \x20 gen-data   generate a synthetic basket dataset\n\
+         \x20 reproduce  regenerate a paper experiment (table1|table2|table3|fig1|fig2|all)\n\
+         \x20 map        greedy MAP inference (most-diverse set)\n\
+         \x20 info       environment + artifact status\n\n\
+         run `ndpp <command> --help` for options"
+    );
+}
+
+const SAMPLE_SPECS: &[Spec] = &[
+    Spec::opt("kernel", "load a saved kernel file instead of a random one"),
+    Spec::opt_default("m", "4096", "ground-set size (random kernel)"),
+    Spec::opt_default("k", "32", "per-part kernel rank K"),
+    Spec::opt_default("n", "5", "number of samples"),
+    Spec::opt_default("seed", "0", "rng seed"),
+    Spec::opt_default("algo", "rejection", "cholesky | rejection | both"),
+    Spec::flag("help", "show help"),
+];
+
+fn cmd_sample(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, SAMPLE_SPECS)?;
+    if a.flag("help") {
+        print!("{}", help_text("sample", "draw NDPP samples", SAMPLE_SPECS));
+        return Ok(());
+    }
+    let m = a.usize_or("m", 4096)?;
+    let k = a.usize_or("k", 32)?;
+    let n = a.usize_or("n", 5)?;
+    let seed = a.u64_or("seed", 0)?;
+    let algo = a.str_or("algo", "rejection");
+
+    let mut rng = Xoshiro::seeded(seed);
+    let kernel = match a.get("kernel") {
+        Some(path) => {
+            let k = ndpp::ndpp::NdppKernel::load(path)?;
+            println!("loaded kernel from {path}: M={}, 2K={}", k.m(), 2 * k.k());
+            k
+        }
+        None => {
+            println!("random ONDPP kernel: M={m}, 2K={}", 2 * k);
+            experiments::tablelike_kernel(m, k, &mut rng)
+        }
+    };
+
+    if algo == "cholesky" || algo == "both" {
+        let mut s = CholeskySampler::new(&kernel);
+        let mut r = rng.split(1);
+        for i in 0..n {
+            let (y, lp) = s.sample_with_logprob(&mut r);
+            println!("cholesky[{i}] (logp {lp:.2}): {y:?}");
+        }
+    }
+    if algo == "rejection" || algo == "both" {
+        let proposal = Proposal::build(&kernel);
+        let spectral = proposal.spectral();
+        let tree = SampleTree::build(&spectral, TreeConfig::default());
+        let mut s = RejectionSampler::new(&kernel, &proposal, &tree);
+        let mut r = rng.split(2);
+        for i in 0..n {
+            let y = s.sample(&mut r);
+            println!("rejection[{i}] ({} proposals): {y:?}", s.last_proposals);
+        }
+        println!(
+            "rejection rate: observed {:.2}, expected {:.2}",
+            s.observed_rejection_rate(),
+            s.expected_rejection_rate()
+        );
+    }
+    Ok(())
+}
+
+const SERVE_SPECS: &[Spec] = &[
+    Spec::opt_default("addr", "127.0.0.1:7433", "listen address"),
+    Spec::opt_default("models", "demo:4096:32", "comma list of name:M:K random models"),
+    Spec::opt_default("workers", "0", "worker threads (0 = all cores)"),
+    Spec::opt_default("seed", "0", "rng seed for model generation"),
+    Spec::flag("help", "show help"),
+];
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, SERVE_SPECS)?;
+    if a.flag("help") {
+        print!("{}", help_text("serve", "run the sampling service", SERVE_SPECS));
+        return Ok(());
+    }
+    let workers = a.usize_or("workers", 0)?;
+    let mut config = ServiceConfig::default();
+    if workers > 0 {
+        config.workers = workers;
+    }
+    let service = Arc::new(SamplingService::new(config));
+    let seed = a.u64_or("seed", 0)?;
+    let mut rng = Xoshiro::seeded(seed);
+    for spec in a.str_or("models", "demo:4096:32").split(',') {
+        let parts: Vec<&str> = spec.trim().split(':').collect();
+        match parts.as_slice() {
+            [name, path] => {
+                // name:path — load a saved kernel
+                let kernel = ndpp::ndpp::NdppKernel::load(path)?;
+                println!("registering {name} from {path} (M={})...", kernel.m());
+                service.register(name, kernel);
+            }
+            [name, m, k] => {
+                let (m, k): (usize, usize) = (m.parse()?, k.parse()?);
+                println!("registering {name} (random ONDPP, M={m}, K={k})...");
+                service.register(name, experiments::tablelike_kernel(m, k, &mut rng));
+            }
+            _ => bail!("bad model spec '{spec}' (want name:M:K or name:path)"),
+        }
+    }
+    let addr = a.str_or("addr", "127.0.0.1:7433");
+    println!("listening on {addr} (line-delimited JSON; op=sample|models|metrics|ping|shutdown)");
+    server::serve(service, &addr, |bound| println!("bound {bound}"))
+}
+
+const TRAIN_SPECS: &[Spec] = &[
+    Spec::opt("data", "dataset file (ndpp-baskets format); default: synthetic"),
+    Spec::opt("out", "save the learned kernel to this path"),
+    Spec::opt_default("steps", "200", "training steps"),
+    Spec::opt_default("gamma", "0.1", "rejection-rate regularizer"),
+    Spec::opt_default("lr", "0.05", "Adam learning rate"),
+    Spec::opt_default("seed", "0", "rng seed"),
+    Spec::flag("free", "unconstrained NDPP (no orthogonality projection)"),
+    Spec::flag("help", "show help"),
+];
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, TRAIN_SPECS)?;
+    if a.flag("help") {
+        print!("{}", help_text("train", "learn an ONDPP kernel", TRAIN_SPECS));
+        return Ok(());
+    }
+    let ops = ModelOps::discover()
+        .ok_or_else(|| anyhow::anyhow!("artifacts/ not found — run `make artifacts`"))?;
+    // trainable shape config (see python/compile/aot.py CONFIGS)
+    let (m, k, bsz, kmax) = (2048usize, 32usize, 64usize, 16usize);
+
+    let ds = match a.get("data") {
+        Some(path) => BasketDataset::load(path)?,
+        None => {
+            println!("no --data given; generating uk_retail-like synthetic data at M={m}");
+            let recipe = recipes::dataset_by_name("uk_retail_synth", "fast").unwrap();
+            let mut cfg = recipe.config.clone();
+            cfg.m = m;
+            cfg.n_baskets = 2500;
+            let mut rng = Xoshiro::seeded(a.u64_or("seed", 0)?);
+            synthetic::generate_baskets(&cfg, &mut rng)
+        }
+    };
+    anyhow::ensure!(ds.m == m, "dataset M={} but artifacts are built for M={m}", ds.m);
+    let mut ds = ds;
+    ds.trim(kmax);
+    let mut rng = Xoshiro::seeded(a.u64_or("seed", 0)?);
+    let split = ds.split(100, 400, &mut rng);
+    let mu = ds.item_frequencies();
+
+    let tc = TrainConfig {
+        k,
+        batch_size: bsz,
+        kmax,
+        steps: a.usize_or("steps", 200)?,
+        lr: a.f64_or("lr", 0.05)?,
+        gamma: a.f64_or("gamma", 0.1)?,
+        project: !a.flag("free"),
+        seed: a.u64_or("seed", 0)?,
+        ..Default::default()
+    };
+    println!("training: {tc:?}");
+    let trainer = Trainer::new(&ops, m, split.train.clone(), mu, tc)?;
+    let model = trainer.run(|step, loss| {
+        if step % 20 == 0 {
+            println!("step {step:>5}  loss {loss:.4}");
+        }
+    })?;
+
+    let mk = MarginalKernel::build(&model.kernel);
+    let mut eval_rng = Xoshiro::seeded(1);
+    let mpr = learn::mpr(&model.kernel, &split.test, &mut eval_rng);
+    let auc = learn::auc(&model.kernel, mk.logdet_l_plus_i, &split.test, &mut eval_rng);
+    let ll = learn::test_loglik(&model.kernel, mk.logdet_l_plus_i, &split.test);
+    let rej = Proposal::build(&model.kernel).expected_rejections();
+    println!("\nfinal: MPR {mpr:.2}  AUC {auc:.3}  test-loglik {ll:.3}  E[rejections] {rej:.2}");
+    if let Some(out) = a.get("out") {
+        model.kernel.save(out)?;
+        println!("kernel saved to {out}");
+    }
+    Ok(())
+}
+
+const GEN_SPECS: &[Spec] = &[
+    Spec::opt_default("dataset", "uk_retail_synth", "recipe name"),
+    Spec::opt_default("out", "data.baskets", "output path"),
+    Spec::opt_default("profile", "fast", "fast | paper"),
+    Spec::opt_default("seed", "0", "rng seed"),
+    Spec::flag("help", "show help"),
+];
+
+fn cmd_gen_data(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, GEN_SPECS)?;
+    if a.flag("help") {
+        print!("{}", help_text("gen-data", "generate synthetic baskets", GEN_SPECS));
+        return Ok(());
+    }
+    let name = a.str_or("dataset", "uk_retail_synth");
+    let profile = a.str_or("profile", "fast");
+    let recipe = recipes::dataset_by_name(&name, &profile)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?;
+    let ds = recipe.generate(a.u64_or("seed", 0)?);
+    let out = a.str_or("out", "data.baskets");
+    ds.save(&out)?;
+    println!(
+        "wrote {} baskets over M={} to {out} (mean size {:.1})",
+        ds.baskets.len(),
+        ds.m,
+        ds.mean_basket_size()
+    );
+    Ok(())
+}
+
+const REPRO_SPECS: &[Spec] = &[
+    Spec::opt_default("exp", "all", "table1|table2|table3|fig1|fig2|all"),
+    Spec::opt_default("profile", "fast", "fast | paper"),
+    Spec::opt_default("k", "32", "per-part rank for sampling experiments"),
+    Spec::opt_default("seed", "0", "rng seed"),
+    Spec::flag("help", "show help"),
+];
+
+fn cmd_reproduce(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, REPRO_SPECS)?;
+    if a.flag("help") {
+        print!("{}", help_text("reproduce", "regenerate paper experiments", REPRO_SPECS));
+        return Ok(());
+    }
+    let opts = ExpOptions {
+        profile: a.str_or("profile", "fast"),
+        seed: a.u64_or("seed", 0)?,
+        k: a.usize_or("k", 32)?,
+        runner: if a.str_or("profile", "fast") == "paper" {
+            BenchRunner::default()
+        } else {
+            BenchRunner::quick()
+        },
+    };
+    let exp = a.str_or("exp", "all");
+    let needs_ops = matches!(exp.as_str(), "table2" | "fig1" | "all");
+    let ops = if needs_ops {
+        Some(ModelOps::discover().ok_or_else(|| {
+            anyhow::anyhow!("artifacts/ required for {exp} — run `make artifacts`")
+        })?)
+    } else {
+        None
+    };
+    match exp.as_str() {
+        "table1" => experiments::table1(&opts).map(|_| ()),
+        "table2" => experiments::table2(&opts, ops.as_ref().unwrap()).map(|_| ()),
+        "table3" => experiments::table3(&opts).map(|_| ()),
+        "fig1" => experiments::fig1(&opts, ops.as_ref().unwrap()).map(|_| ()),
+        "fig2" => experiments::fig2(&opts).map(|_| ()),
+        "all" => {
+            experiments::table1(&opts)?;
+            experiments::table3(&opts)?;
+            experiments::fig2(&opts)?;
+            let ops = ops.as_ref().unwrap();
+            experiments::table2(&opts, ops)?;
+            experiments::fig1(&opts, ops)?;
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+}
+
+const MAP_SPECS: &[Spec] = &[
+    Spec::opt("kernel", "saved kernel file (default: random)"),
+    Spec::opt_default("m", "4096", "ground-set size (random kernel)"),
+    Spec::opt_default("k", "32", "per-part rank K"),
+    Spec::opt_default("budget", "10", "max set size"),
+    Spec::opt_default("seed", "0", "rng seed"),
+    Spec::flag("help", "show help"),
+];
+
+fn cmd_map(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, MAP_SPECS)?;
+    if a.flag("help") {
+        print!("{}", help_text("map", "greedy MAP inference", MAP_SPECS));
+        return Ok(());
+    }
+    let kernel = match a.get("kernel") {
+        Some(path) => ndpp::ndpp::NdppKernel::load(path)?,
+        None => {
+            let mut rng = Xoshiro::seeded(a.u64_or("seed", 0)?);
+            experiments::tablelike_kernel(a.usize_or("m", 4096)?, a.usize_or("k", 32)?, &mut rng)
+        }
+    };
+    // min_gain 0 fills the budget (gain>1 would require det-increasing
+    // items, rare for normalized recommendation kernels)
+    let r = ndpp::learn::greedy_map(&kernel, a.usize_or("budget", 10)?, 0.0);
+    println!("MAP set ({} items, log det {:.3}): {:?}", r.items.len(), r.log_det, r.items);
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("ndpp {} — three-layer rust+jax+pallas NDPP sampling", env!("CARGO_PKG_VERSION"));
+    println!(
+        "cores: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    match ModelOps::discover() {
+        Some(ops) => {
+            println!("artifacts: {} found:", ops.manifest().artifacts.len());
+            for a in &ops.manifest().artifacts {
+                println!("  {:<18} {:<22} {}", a.name, a.config, a.file.display());
+            }
+        }
+        None => println!("artifacts: NOT FOUND (run `make artifacts`; native fallbacks active)"),
+    }
+    match ndpp::runtime::XlaRuntime::global() {
+        Ok(_) => println!("pjrt: cpu client OK"),
+        Err(e) => println!("pjrt: UNAVAILABLE ({e})"),
+    }
+    Ok(())
+}

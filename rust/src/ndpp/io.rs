@@ -1,0 +1,119 @@
+//! Kernel persistence: save/load learned NDPP kernels.
+//!
+//! Text format (`ndpp-kernel v1`): header with shapes, then `sigma`, then
+//! `V` and `B` row-major, one row per line, full `%.17g` precision so
+//! round-trips are bit-exact for f64.  Kernels at recommendation scale are
+//! a few hundred MB at most; no compression is applied (the files are for
+//! checkpoints and model registries, not wire transfer).
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Matrix;
+use crate::ndpp::NdppKernel;
+
+impl NdppKernel {
+    /// Write the kernel to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "ndpp-kernel v1 m={} k={}", self.m(), self.k())?;
+        let sigma: Vec<String> = self.sigma.iter().map(|s| format!("{s:.17e}")).collect();
+        writeln!(w, "sigma {}", sigma.join(" "))?;
+        for matrix in [&self.v, &self.b] {
+            for i in 0..matrix.rows {
+                let row: Vec<String> =
+                    matrix.row(i).iter().map(|x| format!("{x:.17e}")).collect();
+                writeln!(w, "{}", row.join(" "))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Read a kernel from `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<NdppKernel> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut lines = BufReader::new(f).lines();
+
+        let header = lines.next().context("empty kernel file")??;
+        let mut m = None;
+        let mut k = None;
+        let mut parts = header.split_whitespace();
+        if parts.next() != Some("ndpp-kernel") || parts.next() != Some("v1") {
+            bail!("bad kernel header: {header}");
+        }
+        for p in parts {
+            if let Some(v) = p.strip_prefix("m=") {
+                m = Some(v.parse::<usize>()?);
+            } else if let Some(v) = p.strip_prefix("k=") {
+                k = Some(v.parse::<usize>()?);
+            }
+        }
+        let (m, k) = (m.context("missing m=")?, k.context("missing k=")?);
+
+        let sigma_line = lines.next().context("missing sigma line")??;
+        let mut sp = sigma_line.split_whitespace();
+        if sp.next() != Some("sigma") {
+            bail!("expected sigma line");
+        }
+        let sigma: Vec<f64> = sp.map(|t| t.parse::<f64>().context("bad sigma")).collect::<Result<_>>()?;
+        if sigma.len() != k / 2 {
+            bail!("sigma has {} entries, expected {}", sigma.len(), k / 2);
+        }
+
+        let mut read_matrix = |rows: usize| -> Result<Matrix> {
+            let mut data = Vec::with_capacity(rows * k);
+            for r in 0..rows {
+                let line = lines
+                    .next()
+                    .with_context(|| format!("missing matrix row {r}"))??;
+                for t in line.split_whitespace() {
+                    data.push(t.parse::<f64>().context("bad matrix entry")?);
+                }
+            }
+            if data.len() != rows * k {
+                bail!("matrix has {} entries, expected {}", data.len(), rows * k);
+            }
+            Ok(Matrix::from_vec(rows, k, data))
+        };
+        let v = read_matrix(m)?;
+        let b = read_matrix(m)?;
+        Ok(NdppKernel::new(v, b, sigma))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro;
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let mut rng = Xoshiro::seeded(1);
+        let kernel = NdppKernel::random_ondpp(40, 4, &mut rng);
+        let path = std::env::temp_dir().join(format!("ndpp_k_{}.txt", std::process::id()));
+        kernel.save(&path).unwrap();
+        let back = NdppKernel::load(&path).unwrap();
+        assert_eq!(kernel.v.data, back.v.data);
+        assert_eq!(kernel.b.data, back.b.data);
+        assert_eq!(kernel.sigma, back.sigma);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_files() {
+        let dir = std::env::temp_dir();
+        let p1 = dir.join(format!("ndpp_bad1_{}.txt", std::process::id()));
+        std::fs::write(&p1, "not a kernel\n").unwrap();
+        assert!(NdppKernel::load(&p1).is_err());
+        let p2 = dir.join(format!("ndpp_bad2_{}.txt", std::process::id()));
+        std::fs::write(&p2, "ndpp-kernel v1 m=4 k=2\nsigma 1.0\n1 2\n").unwrap();
+        assert!(NdppKernel::load(&p2).is_err());
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+}

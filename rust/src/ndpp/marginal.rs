@@ -1,0 +1,155 @@
+//! The rank-2K marginal kernel (paper Eq. (1)).
+//!
+//! `K = I - (L + I)^{-1} = Z X (I_2K + Z^T Z X)^{-1} Z^T = Z W Z^T` — all
+//! marginal probabilities live in a 2K x 2K inner matrix `W`, which is what
+//! makes the linear-time Cholesky sampler possible.  Computing `W` costs
+//! `O(M K^2)` for the Gram matrix plus `O(K^3)` for the inverse.
+
+use crate::linalg::{lu::Lu, Matrix};
+use crate::ndpp::NdppKernel;
+
+/// Precomputed marginal kernel factorization `K = Z W Z^T`.
+#[derive(Debug, Clone)]
+pub struct MarginalKernel {
+    /// `M x 2K` row factor (`[V B]`).
+    pub z: Matrix,
+    /// `2K x 2K` inner matrix.
+    pub w: Matrix,
+    /// `log det(L + I)` — the NDPP normalizer, free by-product.
+    pub logdet_l_plus_i: f64,
+}
+
+impl MarginalKernel {
+    /// Build from kernel parameters.
+    pub fn build(kernel: &NdppKernel) -> MarginalKernel {
+        let z = kernel.z();
+        let x = kernel.x_matrix();
+        Self::from_zx(z, &x)
+    }
+
+    /// Build from an explicit `(Z, X)` factorization (`L = Z X Z^T`).
+    pub fn from_zx(z: Matrix, x: &Matrix) -> MarginalKernel {
+        let k2 = x.rows;
+        assert_eq!(z.cols, k2);
+        let g = z.t_matmul(&z); // Z^T Z, O(M K^2)
+        let mut a = g.matmul(x); // (Z^T Z) X
+        a.add_diag(1.0); // I + Z^T Z X
+        let lu = Lu::factor(&a);
+        let (sign, logdet) = lu.slogdet();
+        assert!(
+            sign > 0.0,
+            "det(I + Z^T Z X) must be positive for a valid NDPP"
+        );
+        // W = X (I + Z^T Z X)^{-1}  — solve A^T W^T = X^T to avoid forming
+        // the inverse explicitly: W = X A^{-1}  <=>  W^T = A^{-T} X^T.
+        let w = x.matmul(&lu.inverse());
+        MarginalKernel { z, w, logdet_l_plus_i: logdet }
+    }
+
+    /// Ground-set size.
+    pub fn m(&self) -> usize {
+        self.z.rows
+    }
+
+    /// Inner dimension `2K`.
+    pub fn k2(&self) -> usize {
+        self.z.cols
+    }
+
+    /// Inclusion marginal of one item: `K_ii = z_i^T W z_i`.
+    pub fn marginal(&self, i: usize) -> f64 {
+        let zi = self.z.row(i);
+        self.w.bilinear(zi, zi)
+    }
+
+    /// All inclusion marginals `diag(Z W Z^T)` — the rust-native equivalent
+    /// of the `bilinear_diag` Pallas kernel, O(M K^2) with a blocked
+    /// `Z @ W` panel product.
+    pub fn marginals(&self) -> Vec<f64> {
+        let zw = self.z.matmul(&self.w);
+        (0..self.m())
+            .map(|i| crate::linalg::matrix::dot(zw.row(i), self.z.row(i)))
+            .collect()
+    }
+
+    /// Dense `M x M` marginal kernel (test/diagnostic only).
+    pub fn dense_k(&self) -> Matrix {
+        self.z.matmul(&self.w).matmul_t(&self.z)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::lu;
+    use crate::rng::Xoshiro;
+    use crate::util::prop;
+
+    fn dense_marginal(kernel: &NdppKernel) -> Matrix {
+        let m = kernel.m();
+        let mut l_plus_i = kernel.dense_l();
+        l_plus_i.add_diag(1.0);
+        let inv = lu::inverse(&l_plus_i);
+        Matrix::identity(m).sub(&inv)
+    }
+
+    #[test]
+    fn matches_dense_inverse_formula() {
+        prop::check("marginal_dense", 15, |g| {
+            let khalf = g.usize_in(1, 3);
+            let k = 2 * khalf;
+            let m = 2 * k + g.usize_in(0, 12);
+            let mut rng = Xoshiro::seeded(g.seed);
+            let kernel = NdppKernel::random_ndpp(m, k, &mut rng);
+            let mk = MarginalKernel::build(&kernel);
+            let want = dense_marginal(&kernel);
+            let got = mk.dense_k();
+            assert!(got.sub(&want).max_abs() < 1e-8, "m={m} k={k}");
+        });
+    }
+
+    #[test]
+    fn normalizer_matches_dense() {
+        prop::check("marginal_normalizer", 15, |g| {
+            let khalf = g.usize_in(1, 3);
+            let k = 2 * khalf;
+            let m = 2 * k + g.usize_in(0, 12);
+            let mut rng = Xoshiro::seeded(g.seed);
+            let kernel = NdppKernel::random_ndpp(m, k, &mut rng);
+            let mk = MarginalKernel::build(&kernel);
+            let mut l_plus_i = kernel.dense_l();
+            l_plus_i.add_diag(1.0);
+            let (_, want) = lu::slogdet(&l_plus_i);
+            assert!((mk.logdet_l_plus_i - want).abs() < 1e-8 * (1.0 + want.abs()));
+        });
+    }
+
+    #[test]
+    fn marginals_in_unit_interval() {
+        prop::check("marginal_unit", 10, |g| {
+            let k = 4;
+            let m = 2 * k + g.usize_in(0, 30);
+            let mut rng = Xoshiro::seeded(g.seed);
+            let kernel = NdppKernel::random_ondpp(m, k, &mut rng);
+            let mk = MarginalKernel::build(&kernel);
+            for (i, p) in mk.marginals().into_iter().enumerate() {
+                assert!((-1e-10..=1.0 + 1e-10).contains(&p), "i={i} p={p}");
+                assert!((p - mk.marginal(i)).abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn sum_of_marginals_equals_expected_size() {
+        // E|Y| = tr(K) = sum of marginals; also equals
+        // sum_i eig_i(L)/(eig_i(L)+1) — check the trace identity against
+        // the dense marginal kernel.
+        let mut rng = Xoshiro::seeded(7);
+        let kernel = NdppKernel::random_ondpp(40, 4, &mut rng);
+        let mk = MarginalKernel::build(&kernel);
+        let dense = dense_marginal(&kernel);
+        let tr_dense: f64 = (0..40).map(|i| dense[(i, i)]).sum();
+        let tr_lowrank: f64 = mk.marginals().iter().sum();
+        assert!((tr_dense - tr_lowrank).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,25 @@
+//! NDPP kernel algebra — the mathematical core of the paper.
+//!
+//! * [`kernel`] — the low-rank nonsymmetric kernel
+//!   `L = V V^T + B (D - D^T) B^T` (Gartrell et al. 2021 decomposition) and
+//!   the ONDPP constraint machinery (paper §5).
+//! * [`marginal`] — the rank-2K marginal kernel `K = Z W Z^T`,
+//!   `W = X (I + Z^T Z X)^{-1}` (paper Eq. (1)).
+//! * [`youla`] — Algorithm 4: Youla decomposition of the low-rank skew part
+//!   in `O(M K^2 + K^3)`.
+//! * [`proposal`] — Theorem 1's dominating symmetric proposal kernel
+//!   `L̂ = Z X̂ Z^T` plus its spectral (dual) eigendecomposition for
+//!   tree-based sampling, and Theorem 2's expected rejection count.
+//! * [`probability`] — subset log-probabilities under both `L` and `L̂`
+//!   (the acceptance-ratio arithmetic of Algorithm 2).
+
+pub mod io;
+pub mod kernel;
+pub mod marginal;
+pub mod probability;
+pub mod proposal;
+pub mod youla;
+
+pub use kernel::NdppKernel;
+pub use marginal::MarginalKernel;
+pub use proposal::{Proposal, SpectralDpp};

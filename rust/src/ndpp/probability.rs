@@ -1,0 +1,179 @@
+//! Subset probabilities under the target NDPP and the proposal DPP —
+//! the acceptance-ratio arithmetic of the rejection sampler (Algorithm 2,
+//! line 10) plus log-likelihood utilities for evaluation.
+
+use crate::linalg::{lu, Matrix};
+use crate::ndpp::{NdppKernel, Proposal};
+
+/// `det(L_Y)` for the low-rank NDPP: build the `|Y| x |Y|` minor from
+/// gathered rows (`O(k^2 K + k^3)`), never touching an `M x M` matrix.
+pub fn det_l_y(kernel: &NdppKernel, y: &[usize]) -> f64 {
+    if y.is_empty() {
+        return 1.0;
+    }
+    let v_y = kernel.v.gather_rows(y);
+    let b_y = kernel.b.gather_rows(y);
+    let sym = v_y.matmul_t(&v_y);
+    let skew = b_y.matmul(&kernel.skew_inner()).matmul_t(&b_y);
+    lu::det(&sym.add(&skew))
+}
+
+/// `det(L̂_Y)` for the proposal kernel.
+pub fn det_lhat_y(proposal: &Proposal, y: &[usize]) -> f64 {
+    if y.is_empty() {
+        return 1.0;
+    }
+    let z_y = proposal.z_hat.gather_rows(y);
+    // (Z_Y) diag(x̂) (Z_Y)^T
+    let mut zx = z_y.clone();
+    for i in 0..zx.rows {
+        for (j, &x) in proposal.x_hat.iter().enumerate() {
+            zx[(i, j)] *= x;
+        }
+    }
+    lu::det(&zx.matmul_t(&z_y))
+}
+
+/// Rejection-sampler acceptance probability
+/// `det(L_Y) / det(L̂_Y)` (Theorem 1 guarantees this is in `[0, 1]`).
+pub fn acceptance_prob(kernel: &NdppKernel, proposal: &Proposal, y: &[usize]) -> f64 {
+    let num = det_l_y(kernel, y);
+    let den = det_lhat_y(proposal, y);
+    if den <= 0.0 {
+        // numerically-degenerate proposal minor: the target minor is then
+        // also ~0; treat as certain rejection of a measure-zero event.
+        return 0.0;
+    }
+    (num / den).clamp(0.0, 1.0)
+}
+
+/// `log Pr_L(Y) = log det(L_Y) - log det(L + I)`; `-inf` when the minor is
+/// nonpositive (measure-zero subset).
+pub fn log_prob(kernel: &NdppKernel, logdet_l_plus_i: f64, y: &[usize]) -> f64 {
+    let d = det_l_y(kernel, y);
+    if d <= 0.0 {
+        f64::NEG_INFINITY
+    } else {
+        d.ln() - logdet_l_plus_i
+    }
+}
+
+/// Exhaustive subset probabilities for tiny `M` (test oracle): returns
+/// `Pr(Y)` for every bitmask over `[M]`, `M <= 20`.
+pub fn enumerate_probs(kernel: &NdppKernel) -> Vec<f64> {
+    let m = kernel.m();
+    assert!(m <= 20, "enumerate_probs is exponential in M");
+    let l = kernel.dense_l();
+    let mut dets = Vec::with_capacity(1 << m);
+    for mask in 0u32..(1u32 << m) {
+        let idx: Vec<usize> = (0..m).filter(|i| mask >> i & 1 == 1).collect();
+        let d = if idx.is_empty() { 1.0 } else { lu::det(&l.principal(&idx)) };
+        dets.push(d.max(0.0));
+    }
+    let total: f64 = dets.iter().sum();
+    dets.iter().map(|d| d / total).collect()
+}
+
+/// Marginal inclusion probabilities derived from [`enumerate_probs`]
+/// (test oracle).
+pub fn enumerate_marginals(kernel: &NdppKernel) -> Vec<f64> {
+    let m = kernel.m();
+    let probs = enumerate_probs(kernel);
+    let mut marg = vec![0.0; m];
+    for (mask, p) in probs.iter().enumerate() {
+        for (i, mi) in marg.iter_mut().enumerate() {
+            if mask >> i & 1 == 1 {
+                *mi += p;
+            }
+        }
+    }
+    marg
+}
+
+/// Dense symmetric-DPP subset probability table for a spectral kernel
+/// (test oracle for the tree/elementary samplers).
+pub fn enumerate_probs_dense(l: &Matrix) -> Vec<f64> {
+    let m = l.rows;
+    assert!(m <= 20);
+    let mut dets = Vec::with_capacity(1 << m);
+    for mask in 0u32..(1u32 << m) {
+        let idx: Vec<usize> = (0..m).filter(|i| mask >> i & 1 == 1).collect();
+        let d = if idx.is_empty() { 1.0 } else { lu::det(&l.principal(&idx)) };
+        dets.push(d.max(0.0));
+    }
+    let total: f64 = dets.iter().sum();
+    dets.iter().map(|d| d / total).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ndpp::MarginalKernel;
+    use crate::rng::Xoshiro;
+    use crate::util::prop;
+
+    #[test]
+    fn det_l_y_matches_dense_minor() {
+        prop::check("prob_minor", 20, |g| {
+            let khalf = g.usize_in(1, 3);
+            let k = 2 * khalf;
+            let m = 2 * k + g.usize_in(0, 10);
+            let mut rng = Xoshiro::seeded(g.seed);
+            let kernel = NdppKernel::random_ndpp(m, k, &mut rng);
+            let l = kernel.dense_l();
+            for _ in 0..5 {
+                let size = 1 + rng.below(m.min(8));
+                let idx = rng.choose_distinct(m, size);
+                let want = lu::det(&l.principal(&idx));
+                let got = det_l_y(&kernel, &idx);
+                assert!((got - want).abs() < 1e-9 * (1.0 + want.abs()));
+            }
+        });
+    }
+
+    #[test]
+    fn acceptance_in_unit_interval() {
+        prop::check("prob_acceptance", 15, |g| {
+            let khalf = g.usize_in(1, 2);
+            let k = 2 * khalf;
+            let m = 2 * k + g.usize_in(0, 12);
+            let mut rng = Xoshiro::seeded(g.seed);
+            let kernel = NdppKernel::random_ondpp(m, k, &mut rng);
+            let proposal = crate::ndpp::Proposal::build(&kernel);
+            for _ in 0..8 {
+                let size = 1 + rng.below(m.min(2 * k));
+                let idx = rng.choose_distinct(m, size);
+                let a = acceptance_prob(&kernel, &proposal, &idx);
+                assert!((0.0..=1.0).contains(&a), "a={a}");
+            }
+        });
+    }
+
+    #[test]
+    fn empty_set_probability_is_inverse_normalizer() {
+        let mut rng = Xoshiro::seeded(2);
+        let kernel = NdppKernel::random_ondpp(12, 2, &mut rng);
+        let mk = MarginalKernel::build(&kernel);
+        let lp = log_prob(&kernel, mk.logdet_l_plus_i, &[]);
+        assert!((lp + mk.logdet_l_plus_i).abs() < 1e-12);
+        // cross-check with enumeration
+        let probs = enumerate_probs(&kernel);
+        assert!((lp.exp() - probs[0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn enumeration_is_a_distribution_and_matches_marginals() {
+        let mut rng = Xoshiro::seeded(3);
+        let kernel = NdppKernel::random_ondpp(10, 2, &mut rng);
+        let probs = enumerate_probs(&kernel);
+        let total: f64 = probs.iter().sum();
+        assert!((total - 1.0).abs() < 1e-10);
+        // enumerated marginals equal diag of the rank-2K marginal kernel
+        let mk = MarginalKernel::build(&kernel);
+        let got = enumerate_marginals(&kernel);
+        let want = mk.marginals();
+        for i in 0..10 {
+            assert!((got[i] - want[i]).abs() < 1e-8, "i={i}");
+        }
+    }
+}

@@ -1,0 +1,351 @@
+//! The dominating symmetric proposal DPP (paper §4.1, Theorem 1) and its
+//! spectral form for tree-based sampling (paper §4.2).
+//!
+//! Given `L = Z X Z^T` with `Z = [V, y_1..y_K]` (Youla basis of the skew
+//! part) and `X = diag(I_K, [[0, s_j], [-s_j, 0]]...)`, the proposal kernel
+//! replaces every rotation block by `s_j I_2`:
+//!
+//! ```text
+//!   L̂ = Z X̂ Z^T,   X̂ = diag(I_K, s_1, s_1, ..., s_{K/2}, s_{K/2}).
+//! ```
+//!
+//! Theorem 1: `det(L_Y) <= det(L̂_Y)` for every subset `Y`, so rejection
+//! sampling from the symmetric DPP `L̂` with acceptance
+//! `det(L_Y)/det(L̂_Y)` is exact.  Theorem 2: when `V ⊥ B` the expected
+//! number of proposals is `det(L̂+I)/det(L+I) = prod_j (1 + 2 s_j/(s_j^2+1))`.
+
+use crate::linalg::{lu::Lu, tridiag::sym_eigen, Matrix};
+use crate::ndpp::youla::{youla_lowrank, LowRankYoula};
+use crate::ndpp::NdppKernel;
+
+/// The proposal DPP `L̂ = Ẑ diag(x̂) Ẑ^T` plus normalizer bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Proposal {
+    /// `M x (K + 2P)` row factor `[V, y_1, ..., y_{2P}]` (P = #nonzero
+    /// Youla pairs).
+    pub z_hat: Matrix,
+    /// Diagonal of `X̂` (length `K + 2P`, nonnegative).
+    pub x_hat: Vec<f64>,
+    /// Youla values of the skew part (length P).
+    pub sigmas: Vec<f64>,
+    /// `log det(L̂ + I)`.
+    pub logdet_lhat_plus_i: f64,
+    /// `log det(L + I)` of the target NDPP.
+    pub logdet_l_plus_i: f64,
+}
+
+impl Proposal {
+    /// Build the proposal from kernel parameters (`O(M K^2 + K^3)` — the
+    /// "spectral decomposition" row of Table 3 / Fig 2(b)).
+    pub fn build(kernel: &NdppKernel) -> Proposal {
+        let c = kernel.skew_inner();
+        let youla = youla_lowrank(&kernel.b, &c);
+        Self::from_parts(kernel, &youla)
+    }
+
+    /// Build from a precomputed Youla decomposition.
+    pub fn from_parts(kernel: &NdppKernel, youla: &LowRankYoula) -> Proposal {
+        let k = kernel.k();
+        let z_hat = kernel.v.hcat(&youla.y);
+        let mut x_hat = vec![1.0; k];
+        for &s in &youla.sigmas {
+            x_hat.push(s);
+            x_hat.push(s);
+        }
+
+        // log det(L̂ + I) = log det(I + X̂ Ẑ^T Ẑ); X̂ diagonal.
+        let g = z_hat.t_matmul(&z_hat);
+        let mut a = Matrix::zeros(g.rows, g.cols);
+        for i in 0..g.rows {
+            for j in 0..g.cols {
+                a[(i, j)] = x_hat[i] * g[(i, j)];
+            }
+        }
+        a.add_diag(1.0);
+        let (sign_hat, logdet_hat) = Lu::factor(&a).slogdet();
+        assert!(sign_hat > 0.0, "det(L̂ + I) must be positive");
+
+        // log det(L + I) via the target's own factorization.  Reuse the
+        // same Z (V + Youla basis) with the rotation-block X — equivalent
+        // to the original (V, B, D) parameterization.
+        let mut x = Matrix::zeros(z_hat.cols, z_hat.cols);
+        for i in 0..k {
+            x[(i, i)] = 1.0;
+        }
+        for (j, &s) in youla.sigmas.iter().enumerate() {
+            x[(k + 2 * j, k + 2 * j + 1)] = s;
+            x[(k + 2 * j + 1, k + 2 * j)] = -s;
+        }
+        let ax = g.matmul(&x);
+        let mut a2 = ax;
+        a2.add_diag(1.0);
+        let (sign_l, logdet_l) = Lu::factor(&a2).slogdet();
+        assert!(sign_l > 0.0, "det(L + I) must be positive");
+
+        Proposal {
+            z_hat,
+            x_hat,
+            sigmas: youla.sigmas.clone(),
+            logdet_lhat_plus_i: logdet_hat,
+            logdet_l_plus_i: logdet_l,
+        }
+    }
+
+    /// Ground-set size.
+    pub fn m(&self) -> usize {
+        self.z_hat.rows
+    }
+
+    /// Rank of the proposal kernel.
+    pub fn rank(&self) -> usize {
+        self.z_hat.cols
+    }
+
+    /// Expected number of proposal draws per accepted sample:
+    /// `U = det(L̂+I)/det(L+I)` (paper §4.3).
+    pub fn expected_rejections(&self) -> f64 {
+        (self.logdet_lhat_plus_i - self.logdet_l_plus_i).exp()
+    }
+
+    /// Theorem 2's closed form `prod_j (1 + 2 s_j / (s_j^2 + 1))` — equals
+    /// [`Self::expected_rejections`] when the kernel satisfies `V ⊥ B`.
+    pub fn rejection_bound_formula(&self) -> f64 {
+        self.sigmas
+            .iter()
+            .map(|&s| 1.0 + 2.0 * s / (s * s + 1.0))
+            .product()
+    }
+
+    /// Dense `M x M` proposal kernel (test/diagnostic only).
+    pub fn dense_lhat(&self) -> Matrix {
+        let mut zx = self.z_hat.clone();
+        for i in 0..zx.rows {
+            for (j, &x) in self.x_hat.iter().enumerate() {
+                zx[(i, j)] *= x;
+            }
+        }
+        zx.matmul_t(&self.z_hat)
+    }
+
+    /// Spectral (dual) eigendecomposition of `L̂` for elementary-DPP
+    /// sampling: eigenpairs of the `R x R` dual matrix
+    /// `X̂^{1/2} Ẑ^T Ẑ X̂^{1/2}` lifted to M dimensions.
+    pub fn spectral(&self) -> SpectralDpp {
+        let r = self.rank();
+        let g = self.z_hat.t_matmul(&self.z_hat);
+        let sqrt_x: Vec<f64> = self.x_hat.iter().map(|&x| x.max(0.0).sqrt()).collect();
+        let mut dual = Matrix::zeros(r, r);
+        for i in 0..r {
+            for j in 0..r {
+                dual[(i, j)] = sqrt_x[i] * g[(i, j)] * sqrt_x[j];
+            }
+        }
+        let eig = sym_eigen(&dual);
+
+        // keep numerically nonzero eigenvalues
+        let max_l = eig.values.first().copied().unwrap_or(0.0).max(0.0);
+        let cutoff = 1e-12 * max_l.max(1e-300);
+        let kept: Vec<usize> = (0..r).filter(|&i| eig.values[i] > cutoff).collect();
+
+        // eigenvector i of L̂ is  Ẑ X̂^{1/2} q_i / sqrt(lambda_i)
+        let mut vecs = Matrix::zeros(self.m(), kept.len());
+        let mut lambda = Vec::with_capacity(kept.len());
+        for (out_i, &i) in kept.iter().enumerate() {
+            let li = eig.values[i];
+            lambda.push(li);
+            let mut q = eig.vectors.col(i);
+            for (a, qa) in q.iter_mut().enumerate() {
+                *qa *= sqrt_x[a];
+            }
+            let v = self.z_hat.matvec(&q);
+            let inv = 1.0 / li.sqrt();
+            for row in 0..self.m() {
+                vecs[(row, out_i)] = v[row] * inv;
+            }
+        }
+        SpectralDpp { lambda, vecs }
+    }
+}
+
+/// Orthonormal spectral form of a symmetric PSD DPP kernel:
+/// `L̂ = sum_i lambda_i v_i v_i^T`.
+///
+/// `vecs` is `M x R` with orthonormal columns; row `j` is the feature vector
+/// of item `j` in the eigenbasis — exactly the `Z` matrix of the tree
+/// sampler (paper Algorithm 3).
+#[derive(Debug, Clone)]
+pub struct SpectralDpp {
+    pub lambda: Vec<f64>,
+    pub vecs: Matrix,
+}
+
+impl SpectralDpp {
+    pub fn m(&self) -> usize {
+        self.vecs.rows
+    }
+
+    pub fn rank(&self) -> usize {
+        self.lambda.len()
+    }
+
+    /// Dense kernel reconstruction (test/diagnostic).
+    pub fn dense(&self) -> Matrix {
+        let m = self.m();
+        let mut out = Matrix::zeros(m, m);
+        for (i, &l) in self.lambda.iter().enumerate() {
+            let v = self.vecs.col(i);
+            for a in 0..m {
+                let fa = l * v[a];
+                if fa == 0.0 {
+                    continue;
+                }
+                for b in 0..m {
+                    out[(a, b)] += fa * v[b];
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::lu;
+    use crate::rng::Xoshiro;
+    use crate::util::prop;
+
+    #[test]
+    fn theorem1_minor_domination() {
+        prop::check("thm1_domination", 20, |g| {
+            let khalf = g.usize_in(1, 3);
+            let k = 2 * khalf;
+            let m = 2 * k + g.usize_in(0, 10);
+            let mut rng = Xoshiro::seeded(g.seed);
+            let kernel = if g.bool() {
+                NdppKernel::random_ondpp(m, k, &mut rng)
+            } else {
+                NdppKernel::random_ndpp(m, k, &mut rng)
+            };
+            let proposal = Proposal::build(&kernel);
+            let l = kernel.dense_l();
+            let lhat = proposal.dense_lhat();
+            // random subsets of assorted sizes
+            for _ in 0..10 {
+                let size = 1 + rng.below(m.min(2 * k + 2));
+                let idx = rng.choose_distinct(m, size);
+                let det_l = lu::det(&l.principal(&idx));
+                let det_lhat = lu::det(&lhat.principal(&idx));
+                assert!(
+                    det_l <= det_lhat + 1e-8 * (1.0 + det_lhat.abs()),
+                    "|Y|={size} det_l={det_l} det_lhat={det_lhat}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn theorem1_equality_at_full_rank() {
+        prop::check("thm1_equality", 10, |g| {
+            let khalf = g.usize_in(1, 2);
+            let k = 2 * khalf;
+            let m = 2 * k + g.usize_in(2, 8);
+            let mut rng = Xoshiro::seeded(g.seed);
+            let kernel = NdppKernel::random_ondpp(m, k, &mut rng);
+            let proposal = Proposal::build(&kernel);
+            let l = kernel.dense_l();
+            let lhat = proposal.dense_lhat();
+            let idx = rng.choose_distinct(m, 2 * k); // |Y| = rank(L)
+            let det_l = lu::det(&l.principal(&idx));
+            let det_lhat = lu::det(&lhat.principal(&idx));
+            assert!(
+                (det_l - det_lhat).abs() <= 1e-7 * (1.0 + det_lhat.abs()),
+                "det_l={det_l} det_lhat={det_lhat}"
+            );
+        });
+    }
+
+    #[test]
+    fn theorem2_rejection_formula_under_orthogonality() {
+        prop::check("thm2_formula", 15, |g| {
+            let khalf = g.usize_in(1, 4);
+            let k = 2 * khalf;
+            let m = 2 * k + g.usize_in(0, 20);
+            let mut rng = Xoshiro::seeded(g.seed);
+            let kernel = NdppKernel::random_ondpp(m, k, &mut rng);
+            let proposal = Proposal::build(&kernel);
+            let measured = proposal.expected_rejections();
+            let formula = proposal.rejection_bound_formula();
+            assert!(
+                (measured - formula).abs() < 1e-6 * formula,
+                "measured={measured} formula={formula}"
+            );
+        });
+    }
+
+    #[test]
+    fn theorem2_bound_holds() {
+        // (1+w)^{K/2} with w the mean of 2s/(s^2+1) upper-bounds the product
+        let mut rng = Xoshiro::seeded(5);
+        let kernel = NdppKernel::random_ondpp(50, 8, &mut rng);
+        let p = Proposal::build(&kernel);
+        let khalf = p.sigmas.len() as f64;
+        let w = p.sigmas.iter().map(|&s| 2.0 * s / (s * s + 1.0)).sum::<f64>() / khalf;
+        assert!(p.rejection_bound_formula() <= (1.0 + w).powf(khalf) + 1e-9);
+    }
+
+    #[test]
+    fn nonorthogonal_u_exceeds_formula_sometimes() {
+        // without V ⊥ B the closed form is not exact; U must still be >= 1
+        let mut rng = Xoshiro::seeded(6);
+        let kernel = NdppKernel::random_ndpp(40, 4, &mut rng);
+        let p = Proposal::build(&kernel);
+        assert!(p.expected_rejections() >= 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn normalizers_match_dense() {
+        prop::check("proposal_normalizers", 10, |g| {
+            let khalf = g.usize_in(1, 2);
+            let k = 2 * khalf;
+            let m = 2 * k + g.usize_in(0, 10);
+            let mut rng = Xoshiro::seeded(g.seed);
+            let kernel = NdppKernel::random_ndpp(m, k, &mut rng);
+            let p = Proposal::build(&kernel);
+            let mut l = kernel.dense_l();
+            l.add_diag(1.0);
+            let (_, want_l) = lu::slogdet(&l);
+            let mut lhat = p.dense_lhat();
+            lhat.add_diag(1.0);
+            let (_, want_hat) = lu::slogdet(&lhat);
+            assert!((p.logdet_l_plus_i - want_l).abs() < 1e-7 * (1.0 + want_l.abs()));
+            assert!(
+                (p.logdet_lhat_plus_i - want_hat).abs() < 1e-7 * (1.0 + want_hat.abs())
+            );
+        });
+    }
+
+    #[test]
+    fn spectral_reconstructs_lhat() {
+        prop::check("spectral_reconstruct", 10, |g| {
+            let khalf = g.usize_in(1, 2);
+            let k = 2 * khalf;
+            let m = 2 * k + g.usize_in(0, 8);
+            let mut rng = Xoshiro::seeded(g.seed);
+            let kernel = NdppKernel::random_ondpp(m, k, &mut rng);
+            let p = Proposal::build(&kernel);
+            let s = p.spectral();
+            let err = s.dense().sub(&p.dense_lhat()).max_abs();
+            assert!(err < 1e-7 * (1.0 + p.dense_lhat().max_abs()), "err={err}");
+        });
+    }
+
+    #[test]
+    fn spectral_vectors_orthonormal() {
+        let mut rng = Xoshiro::seeded(8);
+        let kernel = NdppKernel::random_ondpp(30, 4, &mut rng);
+        let s = Proposal::build(&kernel).spectral();
+        let gram = s.vecs.t_matmul(&s.vecs);
+        assert!(gram.sub(&Matrix::identity(s.rank())).max_abs() < 1e-8);
+    }
+}

@@ -1,0 +1,369 @@
+//! Seedable pseudo-random number generation.
+//!
+//! crates.io is unavailable in this environment, so instead of `rand` we
+//! ship a small, well-tested implementation of **xoshiro256++** (Blackman &
+//! Vigna) implementing the vendored [`rand_core`] traits, plus the handful
+//! of distributions the samplers and dataset generators need (uniform,
+//! standard normal via Marsaglia polar, Poisson, categorical/alias-free
+//! weighted choice, Fisher–Yates shuffle).
+//!
+//! Determinism matters: every sampler takes an explicit `&mut Xoshiro`, and
+//! the coordinator derives independent per-request streams with
+//! [`Xoshiro::split`] (a SplitMix64 jump of the seed) so batched sampling is
+//! reproducible regardless of worker interleaving.
+
+use rand_core::{Error as RandError, RngCore, SeedableRng};
+
+/// xoshiro256++ PRNG — 256-bit state, period `2^256 - 1`, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Xoshiro {
+    s: [u64; 4],
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+/// SplitMix64 — used to expand seeds into full state (per Vigna's
+/// recommendation) and to derive independent streams.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Xoshiro {
+    /// Construct from a 64-bit seed (expanded through SplitMix64).
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        // the all-zero state is invalid; splitmix cannot produce 4 zeros
+        // from any seed, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Self { s }
+    }
+
+    /// Derive an independent stream keyed by `stream` (stable across runs).
+    pub fn split(&self, stream: u64) -> Self {
+        let mut sm = self.s[0] ^ self.s[2] ^ stream.wrapping_mul(0xA24BAED4963EE407);
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64_impl(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64_impl() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's method, unbiased).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let mut x = self.next_u64_impl();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64_impl();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Standard normal via the Marsaglia polar method.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal_with(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Poisson-distributed integer (Knuth for small mean, PTRS-style
+    /// normal approximation fallback for large mean).
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        assert!(mean >= 0.0);
+        if mean == 0.0 {
+            return 0;
+        }
+        if mean < 30.0 {
+            let l = (-mean).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.uniform();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            // normal approximation with continuity correction; fine for the
+            // dataset generators where mean is O(10..100).
+            let x = self.normal_with(mean, mean.sqrt()) + 0.5;
+            if x < 0.0 {
+                0
+            } else {
+                x as u64
+            }
+        }
+    }
+
+    /// Sample an index proportionally to `weights` (all nonnegative).
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weighted() with zero total mass");
+        let mut t = self.uniform() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices from `[0, n)` (partial Fisher–Yates on an
+    /// index map; O(k) memory for k << n via a hash-free swap table).
+    pub fn choose_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // For small n just shuffle a full index vector.
+        if n <= 4 * k || n <= 64 {
+            let mut idx: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut idx);
+            idx.truncate(k);
+            return idx;
+        }
+        // Floyd's algorithm for k distinct values out of n.
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            if chosen.contains(&t) {
+                chosen.push(j);
+            } else {
+                chosen.push(t);
+            }
+        }
+        chosen
+    }
+
+    /// Vector of `n` uniforms in `[0,1)`.
+    pub fn uniform_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.uniform()).collect()
+    }
+}
+
+impl RngCore for Xoshiro {
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64_impl() >> 32) as u32
+    }
+    fn next_u64(&mut self) -> u64 {
+        self.next_u64_impl()
+    }
+    fn fill_bytes(&mut self, dest: &mut [u8]) {
+        let mut chunks = dest.chunks_exact_mut(8);
+        for chunk in &mut chunks {
+            chunk.copy_from_slice(&self.next_u64_impl().to_le_bytes());
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let bytes = self.next_u64_impl().to_le_bytes();
+            rem.copy_from_slice(&bytes[..rem.len()]);
+        }
+    }
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), RandError> {
+        self.fill_bytes(dest);
+        Ok(())
+    }
+}
+
+impl SeedableRng for Xoshiro {
+    type Seed = [u8; 32];
+    fn from_seed(seed: Self::Seed) -> Self {
+        let mut s = [0u64; 4];
+        for (i, slot) in s.iter_mut().enumerate() {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&seed[i * 8..(i + 1) * 8]);
+            *slot = u64::from_le_bytes(b);
+        }
+        if s == [0, 0, 0, 0] {
+            return Self::seeded(0);
+        }
+        Self { s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Xoshiro::seeded(42);
+        let mut b = Xoshiro::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64_impl(), b.next_u64_impl());
+        }
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let base = Xoshiro::seeded(1);
+        let mut s1 = base.split(0);
+        let mut s2 = base.split(1);
+        let same = (0..64).filter(|_| s1.next_u64_impl() == s2.next_u64_impl()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_and_mean() {
+        let mut rng = Xoshiro::seeded(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiasedish() {
+        let mut rng = Xoshiro::seeded(9);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[rng.below(7)] += 1;
+        }
+        for &c in &counts {
+            let expect = n as f64 / 7.0;
+            assert!((c as f64 - expect).abs() < 5.0 * expect.sqrt(), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Xoshiro::seeded(4);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut rng = Xoshiro::seeded(5);
+        for &lambda in &[0.5, 5.0, 80.0] {
+            let n = 20_000;
+            let mean =
+                (0..n).map(|_| rng.poisson(lambda) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (mean - lambda).abs() < 0.05 * lambda + 0.05,
+                "lambda={lambda} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn choose_distinct_is_distinct_and_in_range() {
+        let mut rng = Xoshiro::seeded(6);
+        for &(n, k) in &[(10usize, 10usize), (1000, 5), (50, 25), (1, 1)] {
+            let mut got = rng.choose_distinct(n, k);
+            got.sort_unstable();
+            got.dedup();
+            assert_eq!(got.len(), k, "n={n} k={k}");
+            assert!(got.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn weighted_matches_weights() {
+        let mut rng = Xoshiro::seeded(8);
+        let w = [1.0, 3.0, 6.0];
+        let n = 30_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            counts[rng.weighted(&w)] += 1;
+        }
+        for i in 0..3 {
+            let expect = n as f64 * w[i] / 10.0;
+            assert!((counts[i] as f64 - expect).abs() < 6.0 * expect.sqrt());
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Xoshiro::seeded(10);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fill_bytes_covers_remainder() {
+        let mut rng = Xoshiro::seeded(11);
+        let mut buf = [0u8; 13];
+        rng.fill_bytes(&mut buf);
+        assert!(buf.iter().any(|&b| b != 0));
+    }
+}

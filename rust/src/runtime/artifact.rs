@@ -1,0 +1,158 @@
+//! Artifact manifest: shape-keyed index of the AOT-exported HLO files.
+//!
+//! `python -m compile.aot` writes `artifacts/manifest.json` describing every
+//! exported graph (name, shape config, input/output specs).  The runtime
+//! loads the manifest once and resolves `(name, shape)` lookups against it.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor spec (shape + dtype name as jax reports it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One exported artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub config: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensor specs"))?
+        .iter()
+        .map(|t| {
+            let shape = t
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("bad shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { shape, dtype: t.str_or("dtype", "float32") })
+        })
+        .collect()
+}
+
+impl ArtifactManifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactManifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = Vec::new();
+        for a in json
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest.artifacts must be an array"))?
+        {
+            artifacts.push(ArtifactSpec {
+                name: a.str_or("name", ""),
+                config: a.str_or("config", ""),
+                file: dir.join(a.str_or("file", "")),
+                inputs: tensor_specs(a.req("inputs")?)?,
+                outputs: tensor_specs(a.req("outputs")?)?,
+            });
+        }
+        Ok(ArtifactManifest { dir, artifacts })
+    }
+
+    /// Try to load from the conventional location (`./artifacts`), else an
+    /// explicit `NDPP_ARTIFACTS` env override.  Returns None when absent —
+    /// callers fall back to native implementations.
+    pub fn discover() -> Option<ArtifactManifest> {
+        let dir = std::env::var("NDPP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        ArtifactManifest::load(dir).ok()
+    }
+
+    /// Find an artifact by name + exact first-input leading dimension
+    /// (the item count M) — the lookup used by samplers.
+    pub fn find(&self, name: &str, m: usize, k2: usize) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| {
+            a.name == name
+                && a.inputs
+                    .first()
+                    .is_some_and(|t| t.shape.first() == Some(&m) && t.shape.get(1) == Some(&k2))
+        })
+    }
+
+    /// Find by name + config string.
+    pub fn find_config(&self, name: &str, config: &str) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name && a.config == config)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        let manifest = Json::obj().with("format", 1u64).with(
+            "artifacts",
+            Json::arr([Json::obj()
+                .with("name", "marginal_diag")
+                .with("config", "m8_k2")
+                .with("file", "marginal_diag_m8_k2.hlo.txt")
+                .with(
+                    "inputs",
+                    Json::arr([
+                        Json::obj()
+                            .with("shape", vec![8usize, 4])
+                            .with("dtype", "float32"),
+                        Json::obj()
+                            .with("shape", vec![4usize, 4])
+                            .with("dtype", "float32"),
+                    ]),
+                )
+                .with(
+                    "outputs",
+                    Json::arr([Json::obj()
+                        .with("shape", vec![8usize])
+                        .with("dtype", "float32")]),
+                )]),
+        );
+        std::fs::write(dir.join("manifest.json"), manifest.to_string()).unwrap();
+    }
+
+    #[test]
+    fn load_and_lookup() {
+        let dir = std::env::temp_dir().join(format!("ndpp_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fixture(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("marginal_diag", 8, 4).expect("should resolve");
+        assert_eq!(a.config, "m8_k2");
+        assert_eq!(a.inputs[1].shape, vec![4, 4]);
+        assert_eq!(a.outputs[0].dtype, "float32");
+        assert!(m.find("marginal_diag", 16, 4).is_none());
+        assert!(m.find_config("marginal_diag", "m8_k2").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_error_not_panic() {
+        assert!(ArtifactManifest::load("/nonexistent/path").is_err());
+    }
+}

@@ -1,0 +1,133 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many times.
+//!
+//! The `xla` crate (docs.rs/xla 0.1.6, binding xla_extension 0.5.1) parses
+//! HLO **text** — the interchange format that survives the jax>=0.5
+//! 64-bit-instruction-id proto incompatibility (see DESIGN.md and
+//! /opt/xla-example/README.md).  Compiled executables are cached per
+//! artifact path, so the request path pays compilation exactly once.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+use once_cell::sync::OnceCell;
+
+use crate::linalg::Matrix;
+
+/// Process-wide PJRT CPU runtime with an executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// xla::PjRtClient wraps a thread-safe C++ client; executables are likewise
+// safe to share across threads for execution.
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+static GLOBAL: OnceCell<XlaRuntime> = OnceCell::new();
+
+impl XlaRuntime {
+    fn new() -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Process-wide singleton (PJRT clients are heavyweight).
+    pub fn global() -> Result<&'static XlaRuntime> {
+        GLOBAL.get_or_try_init(XlaRuntime::new)
+    }
+
+    /// Compile (or fetch from cache) the HLO text at `path`.
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a compiled artifact on host literals; returns the flattened
+    /// output tuple (aot.py lowers with `return_tuple=True`).
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+// ---- literal conversion helpers ----------------------------------------
+
+/// Row-major f32 literal from a [`Matrix`].
+pub fn literal_matrix(m: &Matrix) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&m.to_f32());
+    Ok(lit.reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+/// f32 vector literal.
+pub fn literal_vec(v: &[f64]) -> xla::Literal {
+    let f: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    xla::Literal::vec1(&f)
+}
+
+/// i32 matrix literal (for padded index batches).
+pub fn literal_i32_matrix(rows: usize, cols: usize, data: &[i32]) -> Result<xla::Literal> {
+    assert_eq!(data.len(), rows * cols);
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(&[rows as i64, cols as i64])?)
+}
+
+/// f32 scalar literal.
+pub fn literal_scalar(x: f64) -> xla::Literal {
+    xla::Literal::scalar(x as f32)
+}
+
+/// Extract an f32 literal into a Vec<f64>.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f64>> {
+    Ok(lit.to_vec::<f32>()?.into_iter().map(|x| x as f64).collect())
+}
+
+/// Extract an f32 literal with known dims into a [`Matrix`].
+pub fn literal_to_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let v = lit.to_vec::<f32>()?;
+    anyhow::ensure!(v.len() == rows * cols, "literal size mismatch");
+    Ok(Matrix::from_f32(rows, cols, &v))
+}
+
+/// Extract a scalar f32 literal.
+pub fn literal_to_scalar(lit: &xla::Literal) -> Result<f64> {
+    Ok(lit.get_first_element::<f32>()? as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let lit = literal_matrix(&m).unwrap();
+        let back = literal_to_matrix(&lit, 2, 2).unwrap();
+        assert_eq!(m, back);
+        let v = literal_vec(&[1.5, -2.5]);
+        assert_eq!(literal_to_vec(&v).unwrap(), vec![1.5, -2.5]);
+        assert_eq!(literal_to_scalar(&literal_scalar(7.25)).unwrap(), 7.25);
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! rust request path (python never runs here).
+//!
+//! * [`artifact`] — `artifacts/manifest.json` parsing + shape-keyed lookup.
+//! * [`client`] — thin wrapper over the `xla` crate's PJRT CPU client:
+//!   `HloModuleProto::from_text_file -> XlaComputation -> compile ->
+//!   execute` with typed literal conversion helpers.
+//! * [`ops`] — high-level typed entry points (`marginal_diag`, `gram`,
+//!   `cholesky_sample`, `train_step`, ...) used by samplers, the trainer,
+//!   and the XLA-vs-native ablation bench.
+//!
+//! Everything here is optional at runtime: when `artifacts/` is absent the
+//! library transparently uses the pure-rust implementations (the
+//! coordinator logs which path is active).
+
+pub mod artifact;
+pub mod client;
+pub mod ops;
+
+pub use artifact::{ArtifactManifest, ArtifactSpec};
+pub use client::XlaRuntime;
+pub use ops::ModelOps;

@@ -1,0 +1,236 @@
+//! Typed entry points over the AOT artifacts.
+//!
+//! `ModelOps` binds the artifact manifest to the PJRT runtime and exposes
+//! the Layer-2 graphs as plain rust functions.  Lookups are shape-keyed:
+//! callers pass matrices, `ModelOps` finds the artifact whose static shapes
+//! match, or returns `None`-ish errors that callers treat as "fall back to
+//! native".
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::Matrix;
+use crate::runtime::artifact::{ArtifactManifest, ArtifactSpec};
+use crate::runtime::client::{
+    literal_i32_matrix, literal_matrix, literal_scalar, literal_to_matrix,
+    literal_to_scalar, literal_to_vec, literal_vec, XlaRuntime,
+};
+
+/// High-level handle on the exported model graphs.
+pub struct ModelOps {
+    manifest: ArtifactManifest,
+    runtime: &'static XlaRuntime,
+}
+
+impl ModelOps {
+    /// Bind to a manifest directory.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<ModelOps> {
+        let manifest = ArtifactManifest::load(dir)?;
+        Ok(ModelOps { manifest, runtime: XlaRuntime::global()? })
+    }
+
+    /// Bind to `./artifacts` (or `NDPP_ARTIFACTS`) if present.
+    pub fn discover() -> Option<ModelOps> {
+        let manifest = ArtifactManifest::discover()?;
+        let runtime = XlaRuntime::global().ok()?;
+        Some(ModelOps { manifest, runtime })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// True if a sampler-side artifact set exists for shape `(m, k2)`.
+    pub fn supports_sampling(&self, m: usize, k2: usize) -> bool {
+        self.manifest.find("cholesky_sample", m, k2).is_some()
+    }
+
+    fn run(&self, spec: &ArtifactSpec, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.runtime.load(&spec.file)?;
+        self.runtime.execute(&exe, inputs)
+    }
+
+    fn find(&self, name: &str, m: usize, k2: usize) -> Result<&ArtifactSpec> {
+        self.manifest
+            .find(name, m, k2)
+            .ok_or_else(|| anyhow!("no '{name}' artifact for shape ({m}, {k2})"))
+    }
+
+    // ---- sampler-side graphs -------------------------------------------
+
+    /// `diag(Z W Z^T)` via the Pallas `bilinear_diag` kernel.
+    pub fn marginal_diag(&self, z: &Matrix, w: &Matrix) -> Result<Vec<f64>> {
+        let spec = self.find("marginal_diag", z.rows, z.cols)?;
+        let out = self.run(spec, &[literal_matrix(z)?, literal_matrix(w)?])?;
+        literal_to_vec(&out[0])
+    }
+
+    /// `Z^T Z` via the Pallas `gram` kernel.
+    pub fn gram(&self, z: &Matrix) -> Result<Matrix> {
+        let spec = self.find("gram", z.rows, z.cols)?;
+        let out = self.run(spec, &[literal_matrix(z)?])?;
+        literal_to_matrix(&out[0], z.cols, z.cols)
+    }
+
+    /// Per-block outer-product sums (tree leaf construction).
+    pub fn block_outer_sum(&self, z: &Matrix) -> Result<Vec<Matrix>> {
+        let spec = self.find("block_outer_sum", z.rows, z.cols)?;
+        let nb = spec.outputs[0].shape[0];
+        let k2 = z.cols;
+        let out = self.run(spec, &[literal_matrix(z)?])?;
+        let flat = literal_to_vec(&out[0])?;
+        anyhow::ensure!(flat.len() == nb * k2 * k2, "block_outer_sum size mismatch");
+        Ok((0..nb)
+            .map(|b| {
+                Matrix::from_vec(k2, k2, flat[b * k2 * k2..(b + 1) * k2 * k2].to_vec())
+            })
+            .collect())
+    }
+
+    /// `(W, Z^T Z, logdet(L+I))` — sampler preprocessing in one call.
+    pub fn preprocess(&self, z: &Matrix, x: &Matrix) -> Result<(Matrix, Matrix, f64)> {
+        let spec = self.find("preprocess", z.rows, z.cols)?;
+        let out = self.run(spec, &[literal_matrix(z)?, literal_matrix(x)?])?;
+        let k2 = z.cols;
+        Ok((
+            literal_to_matrix(&out[0], k2, k2)?,
+            literal_to_matrix(&out[1], k2, k2)?,
+            literal_to_scalar(&out[2])?,
+        ))
+    }
+
+    /// Full Algorithm-1 sweep on-device: `(mask, logp)` from uniforms `u`.
+    pub fn cholesky_sample(
+        &self,
+        z: &Matrix,
+        w: &Matrix,
+        u: &[f64],
+    ) -> Result<(Vec<usize>, f64)> {
+        let spec = self.find("cholesky_sample", z.rows, z.cols)?;
+        let out = self.run(
+            spec,
+            &[literal_matrix(z)?, literal_matrix(w)?, literal_vec(u)],
+        )?;
+        let mask = literal_to_vec(&out[0])?;
+        let logp = literal_to_scalar(&out[1])?;
+        let items = mask
+            .iter()
+            .enumerate()
+            .filter(|&(_, &x)| x > 0.5)
+            .map(|(i, _)| i)
+            .collect();
+        Ok((items, logp))
+    }
+
+    // ---- learning-side graphs -------------------------------------------
+
+    /// Resolve the train-step artifact for `(m, k, batch, kmax)` if present.
+    pub fn train_config(&self, m: usize, k: usize, bsz: usize, kmax: usize) -> Option<String> {
+        let cfg = format!("m{m}_k{k}_b{bsz}_s{kmax}");
+        self.manifest.find_config("train_step", &cfg).map(|_| cfg)
+    }
+
+    /// One Adam + projection step (see python/compile/train.py).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        cfg: &str,
+        free: bool,
+        v: &Matrix,
+        b: &Matrix,
+        raw_sigma: &[f64],
+        m_state: &Matrix,
+        v_state: &Matrix,
+        t: f64,
+        idx: (&[i32], usize, usize),
+        mu: &[f64],
+        alpha: f64,
+        beta: f64,
+        gamma: f64,
+        lr: f64,
+    ) -> Result<TrainStepOut> {
+        let name = if free { "train_step_free" } else { "train_step" };
+        let spec = self
+            .manifest
+            .find_config(name, cfg)
+            .ok_or_else(|| anyhow!("no {name} artifact for config {cfg}"))?;
+        let (idx_data, bsz, kmax) = idx;
+        let out = self.run(
+            spec,
+            &[
+                literal_matrix(v)?,
+                literal_matrix(b)?,
+                literal_vec(raw_sigma),
+                literal_matrix(m_state)?,
+                literal_matrix(v_state)?,
+                literal_scalar(t),
+                literal_i32_matrix(bsz, kmax, idx_data)?,
+                literal_vec(mu),
+                literal_scalar(alpha),
+                literal_scalar(beta),
+                literal_scalar(gamma),
+                literal_scalar(lr),
+            ],
+        )?;
+        let (m_rows, k) = (v.rows, v.cols);
+        Ok(TrainStepOut {
+            v: literal_to_matrix(&out[0], m_rows, k)?,
+            b: literal_to_matrix(&out[1], m_rows, k)?,
+            raw_sigma: literal_to_vec(&out[2])?,
+            m_state: literal_to_matrix(&out[3], m_rows, 2 * k + 1)?,
+            v_state: literal_to_matrix(&out[4], m_rows, 2 * k + 1)?,
+            t: literal_to_scalar(&out[5])?,
+            loss: literal_to_scalar(&out[6])?,
+        })
+    }
+
+    /// Mean test log-likelihood of a padded batch.
+    pub fn loglik_batch(
+        &self,
+        cfg: &str,
+        v: &Matrix,
+        b: &Matrix,
+        raw_sigma: &[f64],
+        idx: (&[i32], usize, usize),
+    ) -> Result<f64> {
+        let spec = self
+            .manifest
+            .find_config("loglik_batch", cfg)
+            .ok_or_else(|| anyhow!("no loglik_batch artifact for config {cfg}"))?;
+        let (idx_data, bsz, kmax) = idx;
+        let out = self.run(
+            spec,
+            &[
+                literal_matrix(v)?,
+                literal_matrix(b)?,
+                literal_vec(raw_sigma),
+                literal_i32_matrix(bsz, kmax, idx_data)?,
+            ],
+        )?;
+        literal_to_scalar(&out[0])
+    }
+
+    /// ONDPP constraint projection.
+    pub fn project(&self, cfg: &str, v: &Matrix, b: &Matrix) -> Result<(Matrix, Matrix)> {
+        let spec = self
+            .manifest
+            .find_config("project", cfg)
+            .ok_or_else(|| anyhow!("no project artifact for config {cfg}"))?;
+        let out = self.run(spec, &[literal_matrix(v)?, literal_matrix(b)?])?;
+        Ok((
+            literal_to_matrix(&out[0], v.rows, v.cols)?,
+            literal_to_matrix(&out[1], b.rows, b.cols)?,
+        ))
+    }
+}
+
+/// Outputs of one train step.
+#[derive(Debug, Clone)]
+pub struct TrainStepOut {
+    pub v: Matrix,
+    pub b: Matrix,
+    pub raw_sigma: Vec<f64>,
+    pub m_state: Matrix,
+    pub v_state: Matrix,
+    pub t: f64,
+    pub loss: f64,
+}

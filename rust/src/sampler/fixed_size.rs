@@ -1,0 +1,152 @@
+//! Fixed-size (k-NDPP) sampling — the paper's §7 "future work" extension.
+//!
+//! A k-NDPP is the NDPP conditioned on `|Y| = k`:
+//! `Pr(Y) ∝ det(L_Y) · 1[|Y| = k]`.  Conditioning a rejection-style exact
+//! sampler on a measurable event keeps it exact, so the simplest correct
+//! construction is size-rejection around any exact NDPP sampler: draw until
+//! the size matches.  The expected number of draws is `1 / Pr(|Y| = k)`,
+//! which is small when `k` is near the mode of the size distribution —
+//! exactly the regime recommender workloads use ("give me 5 diverse
+//! items").
+//!
+//! [`size_distribution`] exposes `Pr(|Y| = k)` for the **proposal** DPP via
+//! the elementary symmetric polynomials of its eigenvalues (Kulesza &
+//! Taskar 2012, §5.2), which callers use to pick a feasible `k` and to
+//! bound the retry count a priori.  (For the nonsymmetric target the exact
+//! size law has no product form, but the proposal's is an excellent guide:
+//! both share the symmetric part's spectrum.)
+
+use anyhow::{bail, Result};
+
+use crate::rng::Xoshiro;
+use crate::sampler::Sampler;
+
+/// `Pr(|Y| = k)` for a symmetric DPP with kernel eigenvalues `lambda`,
+/// for all `k = 0..=n`, via the stable normalized recurrence on elementary
+/// symmetric polynomials of `lambda_i / (1 + lambda_i)`.
+pub fn size_distribution(lambda: &[f64]) -> Vec<f64> {
+    let n = lambda.len();
+    // e_k over p_i = lambda/(1+lambda), times prod (1 - p_i) — i.e. the
+    // Poisson-binomial distribution of the independent Bernoulli(p_i)
+    // eigenvalue selections (Eq. (10)'s mixture weights).
+    let mut dist = vec![0.0; n + 1];
+    dist[0] = 1.0;
+    for &l in lambda {
+        let p = l / (1.0 + l);
+        for k in (1..=n).rev() {
+            dist[k] = dist[k] * (1.0 - p) + dist[k - 1] * p;
+        }
+        dist[0] *= 1.0 - p;
+    }
+    dist
+}
+
+/// Draw one size-`k` sample by conditioning `inner` on `|Y| = k`.
+///
+/// `max_tries` bounds the geometric retry loop; pick it from
+/// `size_distribution` (e.g. `10 / Pr(|Y|=k)`).
+pub fn sample_fixed_size(
+    inner: &mut dyn Sampler,
+    k: usize,
+    max_tries: usize,
+    rng: &mut Xoshiro,
+) -> Result<Vec<usize>> {
+    for _ in 0..max_tries {
+        let y = inner.sample(rng);
+        if y.len() == k {
+            return Ok(y);
+        }
+    }
+    bail!(
+        "no size-{k} sample in {max_tries} draws from '{}' — k is far from \
+         the size distribution's mode; check size_distribution()",
+        inner.name()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ndpp::{probability, NdppKernel, Proposal};
+    use crate::sampler::CholeskySampler;
+
+    #[test]
+    fn size_distribution_is_poisson_binomial() {
+        // two eigenvalues 1.0 => p = 1/2 each: sizes 0,1,2 w.p. 1/4,1/2,1/4
+        let d = size_distribution(&[1.0, 1.0]);
+        assert!((d[0] - 0.25).abs() < 1e-12);
+        assert!((d[1] - 0.5).abs() < 1e-12);
+        assert!((d[2] - 0.25).abs() < 1e-12);
+        let total: f64 = d.iter().sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn size_distribution_matches_sampler_sizes() {
+        let mut rng = Xoshiro::seeded(3);
+        let kernel = NdppKernel::random_ondpp(24, 4, &mut rng);
+        let proposal = Proposal::build(&kernel);
+        let spectral = proposal.spectral();
+        let want = size_distribution(&spectral.lambda);
+        let tree =
+            crate::sampler::SampleTree::build(&spectral, crate::sampler::TreeConfig::default());
+        let n = 20_000;
+        let mut counts = vec![0.0; spectral.rank() + 1];
+        for _ in 0..n {
+            counts[tree.sample_dpp(&mut rng).len()] += 1.0;
+        }
+        for (k, &w) in want.iter().enumerate() {
+            let f = counts[k] / n as f64;
+            let sd = (w * (1.0 - w) / n as f64).sqrt().max(1e-4);
+            assert!((f - w).abs() < 5.0 * sd + 0.01, "k={k} f={f} w={w}");
+        }
+    }
+
+    #[test]
+    fn fixed_size_distribution_matches_conditioned_enumeration() {
+        let m = 6;
+        let target_k = 2;
+        let mut rng = Xoshiro::seeded(5);
+        let kernel = NdppKernel::random_ondpp(m, 2, &mut rng);
+        // enumerate Pr(Y | |Y| = target_k)
+        let probs = probability::enumerate_probs(&kernel);
+        let mut want = vec![0.0; 1 << m];
+        let mut mass = 0.0;
+        for (mask, &p) in probs.iter().enumerate() {
+            if (mask as u32).count_ones() as usize == target_k {
+                want[mask] = p;
+                mass += p;
+            }
+        }
+        for w in &mut want {
+            *w /= mass;
+        }
+        let mut sampler = CholeskySampler::new(&kernel);
+        let n = 20_000;
+        let mut counts = vec![0.0; 1 << m];
+        for _ in 0..n {
+            let y = sample_fixed_size(&mut sampler, target_k, 10_000, &mut rng).unwrap();
+            let mut mask = 0usize;
+            for i in y {
+                mask |= 1 << i;
+            }
+            counts[mask] += 1.0;
+        }
+        let tvd: f64 = 0.5
+            * counts
+                .iter()
+                .zip(&want)
+                .map(|(c, w)| (c / n as f64 - w).abs())
+                .sum::<f64>();
+        assert!(tvd < 0.04, "tv={tvd}");
+    }
+
+    #[test]
+    fn infeasible_size_errors_cleanly() {
+        let mut rng = Xoshiro::seeded(6);
+        let kernel = NdppKernel::random_ondpp(16, 2, &mut rng);
+        let mut sampler = CholeskySampler::new(&kernel);
+        // rank is 4 => |Y| = 10 impossible
+        assert!(sample_fixed_size(&mut sampler, 10, 200, &mut rng).is_err());
+    }
+}

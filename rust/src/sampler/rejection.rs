@@ -1,0 +1,165 @@
+//! Sublinear-time rejection sampler (paper §4, Algorithm 2).
+//!
+//! Draw `Y` from the symmetric proposal DPP `L̂` (tree-accelerated), accept
+//! with probability `det(L_Y) / det(L̂_Y)` (well-defined and `<= 1` by
+//! Theorem 1).  The number of proposal draws is geometric with mean
+//! `U = det(L̂+I)/det(L+I)`; for ONDPP kernels Theorem 2 bounds `U` by
+//! `prod_j (1 + 2σ_j/(σ_j²+1))` — independent of M.
+
+use crate::ndpp::{probability, NdppKernel, Proposal};
+use crate::rng::Xoshiro;
+use crate::sampler::{SampleTree, Sampler};
+
+/// Safety valve: proposals per sample before giving up (a correctly
+/// constructed ONDPP with the paper's regularizer keeps U in the tens).
+const MAX_PROPOSALS: usize = 5_000_000;
+
+/// Tree-based rejection sampler.  Borrow-based: the kernel, proposal, and
+/// tree are shared, read-only preprocessing products (the coordinator
+/// builds them once per model and shares them across worker threads).
+pub struct RejectionSampler<'a> {
+    kernel: &'a NdppKernel,
+    proposal: &'a Proposal,
+    tree: &'a SampleTree,
+    /// proposals drawn for the most recent sample (>= 1)
+    pub last_proposals: usize,
+    /// running totals for rejection-rate reporting
+    pub total_proposals: u64,
+    pub total_samples: u64,
+}
+
+impl<'a> RejectionSampler<'a> {
+    pub fn new(
+        kernel: &'a NdppKernel,
+        proposal: &'a Proposal,
+        tree: &'a SampleTree,
+    ) -> RejectionSampler<'a> {
+        assert_eq!(kernel.m(), proposal.m());
+        assert_eq!(tree.m(), kernel.m());
+        RejectionSampler {
+            kernel,
+            proposal,
+            tree,
+            last_proposals: 0,
+            total_proposals: 0,
+            total_samples: 0,
+        }
+    }
+
+    /// Mean proposals per accepted sample observed so far.
+    pub fn observed_rejection_rate(&self) -> f64 {
+        if self.total_samples == 0 {
+            0.0
+        } else {
+            self.total_proposals as f64 / self.total_samples as f64
+        }
+    }
+
+    /// Theoretical expectation `det(L̂+I)/det(L+I)`.
+    pub fn expected_rejection_rate(&self) -> f64 {
+        self.proposal.expected_rejections()
+    }
+}
+
+impl Sampler for RejectionSampler<'_> {
+    fn sample(&mut self, rng: &mut Xoshiro) -> Vec<usize> {
+        for attempt in 1..=MAX_PROPOSALS {
+            let y = self.tree.sample_dpp(rng);
+            let accept = probability::acceptance_prob(self.kernel, self.proposal, &y);
+            if rng.uniform() <= accept {
+                self.last_proposals = attempt;
+                self.total_proposals += attempt as u64;
+                self.total_samples += 1;
+                return y;
+            }
+        }
+        panic!(
+            "rejection sampler exceeded {MAX_PROPOSALS} proposals — \
+             expected rate {:.3e}; kernel is unsuitable for rejection \
+             sampling (consider the gamma regularizer, paper Eq. (14))",
+            self.expected_rejection_rate()
+        );
+    }
+
+    fn name(&self) -> &'static str {
+        "tree-rejection"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ndpp::probability::enumerate_probs;
+    use crate::sampler::test_support::{empirical, tv};
+    use crate::sampler::TreeConfig;
+
+    fn fixture(seed: u64, m: usize, k: usize) -> (NdppKernel, Proposal) {
+        let mut rng = Xoshiro::seeded(seed);
+        let kernel = NdppKernel::random_ondpp(m, k, &mut rng);
+        let proposal = Proposal::build(&kernel);
+        (kernel, proposal)
+    }
+
+    #[test]
+    fn distribution_matches_enumeration() {
+        let (kernel, proposal) = fixture(51, 6, 2);
+        let tree = SampleTree::build(&proposal.spectral(), TreeConfig { leaf_size: 2 });
+        let mut s = RejectionSampler::new(&kernel, &proposal, &tree);
+        let want = enumerate_probs(&kernel);
+        let mut rng = Xoshiro::seeded(52);
+        let got = empirical(&mut s, 6, 30_000, &mut rng);
+        let d = tv(&got, &want);
+        assert!(d < 0.035, "tv={d}");
+    }
+
+    #[test]
+    fn observed_rejections_match_theory() {
+        let (kernel, proposal) = fixture(53, 24, 4);
+        let tree = SampleTree::build(&proposal.spectral(), TreeConfig::default());
+        let mut s = RejectionSampler::new(&kernel, &proposal, &tree);
+        let mut rng = Xoshiro::seeded(54);
+        let n = 3000;
+        for _ in 0..n {
+            s.sample(&mut rng);
+        }
+        let observed = s.observed_rejection_rate();
+        let expected = s.expected_rejection_rate();
+        // geometric mean-of-means: se ~ sqrt(U(U-1)/n)
+        let se = (expected * (expected - 1.0).max(0.0) / n as f64).sqrt();
+        assert!(
+            (observed - expected).abs() < 5.0 * se + 0.05 * expected + 0.05,
+            "observed={observed} expected={expected}"
+        );
+    }
+
+    #[test]
+    fn matches_cholesky_sampler_distribution() {
+        // the two independent sampler families agree on a nontrivial kernel
+        let (kernel, proposal) = fixture(55, 7, 2);
+        let tree = SampleTree::build(&proposal.spectral(), TreeConfig { leaf_size: 1 });
+        let mut rej = RejectionSampler::new(&kernel, &proposal, &tree);
+        let mut chol = crate::sampler::CholeskySampler::new(&kernel);
+        let mut rng = Xoshiro::seeded(56);
+        let p = empirical(&mut rej, 7, 30_000, &mut rng);
+        let q = empirical(&mut chol, 7, 30_000, &mut rng);
+        let d = tv(&p, &q);
+        assert!(d < 0.04, "tv={d}");
+    }
+
+    #[test]
+    fn works_with_zero_sigma_kernel() {
+        // sigma = 0 collapses the skew part: proposal == target, U == 1,
+        // every proposal accepted
+        let mut rng = Xoshiro::seeded(57);
+        let mut kernel = NdppKernel::random_ondpp(16, 4, &mut rng);
+        kernel.sigma = vec![0.0, 0.0];
+        let proposal = Proposal::build(&kernel);
+        assert!((proposal.expected_rejections() - 1.0).abs() < 1e-9);
+        let tree = SampleTree::build(&proposal.spectral(), TreeConfig::default());
+        let mut s = RejectionSampler::new(&kernel, &proposal, &tree);
+        for _ in 0..50 {
+            s.sample(&mut rng);
+            assert_eq!(s.last_proposals, 1);
+        }
+    }
+}

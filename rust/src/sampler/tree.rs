@@ -1,0 +1,312 @@
+//! Tree-based elementary-DPP sampling (paper §4.2, Algorithm 3;
+//! Gillenwater et al. 2019) with the paper's improved per-node cost and a
+//! hybrid leaf layout.
+//!
+//! Every internal node covering an item range `A` stores the `R x R`
+//! matrix `Sigma_A = sum_{j in A} z_j z_j^T` (R = rank of the spectral
+//! kernel).  One item is drawn by descending from the root, branching left
+//! with probability
+//!
+//! ```text
+//!   p_l = <Q^Y, (Sigma_left)_E> / <Q^Y, (Sigma_A)_E>,
+//! ```
+//!
+//! an `O(|E|^2)` inner product per node (the paper's Proposition 1
+//! improvement over the `O(|E|^3)`-per-node formulation), for a total of
+//! `O(k^3 log M + k^4)` per sample after `O(K)` component selection.
+//!
+//! **Hybrid leaves**: the recursion stops at buckets of `leaf_size` items;
+//! inside a bucket items are scored directly from their feature rows
+//! (`O(leaf_size · |E|^2)`).  This divides tree memory by `leaf_size`
+//! (the paper's full tree needed 169.5 GB for M = 1e6, K = 100 — see
+//! DESIGN.md §4) at a negligible latency cost, and is ablated in
+//! `benches/ablation.rs`.
+
+use crate::linalg::Matrix;
+use crate::ndpp::proposal::SpectralDpp;
+use crate::rng::Xoshiro;
+use crate::sampler::elementary::{conditional_q, item_score, select_elementary};
+
+/// Tree layout parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TreeConfig {
+    /// Stop splitting below this many items per node (1 = the paper's full
+    /// binary tree down to single items).
+    pub leaf_size: usize,
+}
+
+impl Default for TreeConfig {
+    fn default() -> TreeConfig {
+        TreeConfig { leaf_size: 64 }
+    }
+}
+
+struct Node {
+    start: usize,
+    end: usize,
+    /// flattened `R x R` outer-product sum for this range
+    sigma: Vec<f64>,
+    /// child indices (usize::MAX when this is a bucket leaf)
+    left: usize,
+    right: usize,
+}
+
+const NONE: usize = usize::MAX;
+
+/// Preprocessed sampling tree over the items of a spectral DPP.
+pub struct SampleTree {
+    spectral: SpectralDpp,
+    nodes: Vec<Node>,
+    root: usize,
+    config: TreeConfig,
+}
+
+impl SampleTree {
+    /// `ConstructTree` (Algorithm 3 lines 10-11): `O(M R^2)` work in the
+    /// leaf sweep, `O((M / leaf_size) R^2)` for internal sums.
+    pub fn build(spectral: &SpectralDpp, config: TreeConfig) -> SampleTree {
+        let m = spectral.m();
+        assert!(m > 0, "empty ground set");
+        let leaf = config.leaf_size.max(1);
+        let mut nodes: Vec<Node> = Vec::with_capacity(2 * m.div_ceil(leaf));
+        let root = Self::branch(spectral, 0, m, leaf, &mut nodes);
+        SampleTree { spectral: spectral.clone(), nodes, root, config }
+    }
+
+    fn branch(
+        spectral: &SpectralDpp,
+        start: usize,
+        end: usize,
+        leaf: usize,
+        nodes: &mut Vec<Node>,
+    ) -> usize {
+        let r = spectral.rank();
+        if end - start <= leaf {
+            // bucket leaf: Sigma = sum of z_j z_j^T over the bucket
+            let mut sigma = vec![0.0; r * r];
+            for j in start..end {
+                let row = spectral.vecs.row(j);
+                for a in 0..r {
+                    let za = row[a];
+                    if za == 0.0 {
+                        continue;
+                    }
+                    let base = a * r;
+                    for b in 0..r {
+                        sigma[base + b] += za * row[b];
+                    }
+                }
+            }
+            nodes.push(Node { start, end, sigma, left: NONE, right: NONE });
+            return nodes.len() - 1;
+        }
+        let mid = start + (end - start) / 2;
+        let l = Self::branch(spectral, start, mid, leaf, nodes);
+        let rgt = Self::branch(spectral, mid, end, leaf, nodes);
+        let mut sigma = nodes[l].sigma.clone();
+        for (s, &x) in sigma.iter_mut().zip(&nodes[rgt].sigma) {
+            *s += x;
+        }
+        nodes.push(Node { start, end, sigma, left: l, right: rgt });
+        nodes.len() - 1
+    }
+
+    pub fn m(&self) -> usize {
+        self.spectral.m()
+    }
+
+    pub fn spectral(&self) -> &SpectralDpp {
+        &self.spectral
+    }
+
+    pub fn config(&self) -> TreeConfig {
+        self.config
+    }
+
+    /// Bytes held in node `Sigma` matrices (the Table 3 "tree memory" row).
+    pub fn memory_bytes(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| n.sigma.len() * std::mem::size_of::<f64>())
+            .sum()
+    }
+
+    /// `<Q, (Sigma_node)_E>` — the restricted inner product of Eq. (12).
+    #[inline]
+    fn sigma_inner(&self, node: usize, e: &[usize], q: &Matrix) -> f64 {
+        let r = self.spectral.rank();
+        let sigma = &self.nodes[node].sigma;
+        let ke = e.len();
+        let mut acc = 0.0;
+        for a in 0..ke {
+            let base = e[a] * r;
+            let qrow = q.row(a);
+            for b in 0..ke {
+                acc += qrow[b] * sigma[base + e[b]];
+            }
+        }
+        acc
+    }
+
+    /// `SampleItem` (Algorithm 3 lines 21-28): draw one item conditioned on
+    /// the current selection (encoded in `Q`).
+    fn sample_item(&self, e: &[usize], q: &Matrix, rng: &mut Xoshiro) -> usize {
+        let mut node = self.root;
+        loop {
+            let n = &self.nodes[node];
+            if n.left == NONE {
+                // bucket: score items directly
+                let scores: Vec<f64> = (n.start..n.end)
+                    .map(|j| item_score(&self.spectral.vecs, j, e, q).max(0.0))
+                    .collect();
+                let total: f64 = scores.iter().sum();
+                if total <= 0.0 {
+                    // numerically-dead bucket (can only happen through
+                    // rounding); fall back to uniform within the bucket
+                    return n.start + rng.below(n.end - n.start);
+                }
+                return n.start + rng.weighted(&scores);
+            }
+            let pl = self.sigma_inner(n.left, e, q).max(0.0);
+            let pr = self.sigma_inner(n.right, e, q).max(0.0);
+            let total = pl + pr;
+            node = if total <= 0.0 {
+                // degenerate: split uniformly
+                if rng.uniform() < 0.5 { n.left } else { n.right }
+            } else if rng.uniform() <= pl / total {
+                n.left
+            } else {
+                n.right
+            };
+        }
+    }
+
+    /// `SampleDPP` (Algorithm 3 lines 12-20): draw a full subset from the
+    /// spectral DPP — select the elementary component, then `|E|` tree
+    /// descents with conditional-kernel updates between picks.
+    pub fn sample_dpp(&self, rng: &mut Xoshiro) -> Vec<usize> {
+        let e = select_elementary(&self.spectral.lambda, rng);
+        self.sample_elementary(&e, rng)
+    }
+
+    /// Draw exactly `|E|` items from the elementary DPP indexed by `e`.
+    pub fn sample_elementary(&self, e: &[usize], rng: &mut Xoshiro) -> Vec<usize> {
+        let mut y: Vec<usize> = Vec::with_capacity(e.len());
+        for _ in 0..e.len() {
+            let q = conditional_q(&self.spectral.vecs, &y, e);
+            let j = self.sample_item(e, &q, rng);
+            y.push(j);
+        }
+        y.sort_unstable();
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ndpp::{probability, NdppKernel, Proposal};
+    use crate::sampler::test_support::tv;
+    use crate::util::prop;
+
+    fn spectral_fixture(seed: u64, m: usize, k: usize) -> SpectralDpp {
+        let mut rng = Xoshiro::seeded(seed);
+        let kernel = NdppKernel::random_ondpp(m, k, &mut rng);
+        Proposal::build(&kernel).spectral()
+    }
+
+    #[test]
+    fn root_sigma_is_total_gram() {
+        prop::check("tree_root_sigma", 10, |g| {
+            let m = g.usize_in(10, 60);
+            let s = spectral_fixture(g.seed, m.max(17), 4);
+            let leaf = *g.choice(&[1usize, 4, 16]);
+            let tree = SampleTree::build(&s, TreeConfig { leaf_size: leaf });
+            let r = s.rank();
+            let gram = s.vecs.t_matmul(&s.vecs);
+            let root = &tree.nodes[tree.root];
+            for a in 0..r {
+                for b in 0..r {
+                    assert!(
+                        (root.sigma[a * r + b] - gram[(a, b)]).abs() < 1e-9,
+                        "a={a} b={b}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn distribution_matches_direct_elementary_sampler() {
+        // tree vs enumerated proposal-DPP distribution on tiny M
+        let mut rng = Xoshiro::seeded(41);
+        let kernel = NdppKernel::random_ondpp(6, 2, &mut rng);
+        let proposal = Proposal::build(&kernel);
+        let s = proposal.spectral();
+        let want = probability::enumerate_probs_dense(&proposal.dense_lhat());
+        for leaf in [1usize, 2, 8] {
+            let tree = SampleTree::build(&s, TreeConfig { leaf_size: leaf });
+            let n = 30_000;
+            let mut counts = vec![0.0; 1 << 6];
+            for _ in 0..n {
+                let y = tree.sample_dpp(&mut rng);
+                let mut mask = 0usize;
+                for i in y {
+                    mask |= 1 << i;
+                }
+                counts[mask] += 1.0;
+            }
+            for c in &mut counts {
+                *c /= n as f64;
+            }
+            let d = tv(&counts, &want);
+            assert!(d < 0.035, "leaf={leaf} tv={d}");
+        }
+    }
+
+    #[test]
+    fn sample_sizes_match_selected_component() {
+        let s = spectral_fixture(42, 50, 4);
+        let tree = SampleTree::build(&s, TreeConfig::default());
+        let mut rng = Xoshiro::seeded(5);
+        for _ in 0..30 {
+            let e = select_elementary(&s.lambda, &mut rng);
+            let y = tree.sample_elementary(&e, &mut rng);
+            assert_eq!(y.len(), e.len());
+            let mut yy = y.clone();
+            yy.dedup();
+            assert_eq!(yy.len(), y.len(), "duplicate item sampled");
+        }
+    }
+
+    #[test]
+    fn memory_shrinks_with_leaf_size() {
+        let s = spectral_fixture(43, 256, 4);
+        let full = SampleTree::build(&s, TreeConfig { leaf_size: 1 });
+        let hybrid = SampleTree::build(&s, TreeConfig { leaf_size: 64 });
+        assert!(hybrid.memory_bytes() * 8 < full.memory_bytes());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let s = spectral_fixture(44, 64, 4);
+        let tree = SampleTree::build(&s, TreeConfig::default());
+        let mut r1 = Xoshiro::seeded(9);
+        let mut r2 = Xoshiro::seeded(9);
+        for _ in 0..10 {
+            assert_eq!(tree.sample_dpp(&mut r1), tree.sample_dpp(&mut r2));
+        }
+    }
+
+    #[test]
+    fn handles_m_not_power_of_two() {
+        let s = spectral_fixture(45, 37, 2);
+        let tree = SampleTree::build(&s, TreeConfig { leaf_size: 4 });
+        let mut rng = Xoshiro::seeded(3);
+        for _ in 0..50 {
+            for j in tree.sample_dpp(&mut rng) {
+                assert!(j < 37);
+            }
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Tiny command-line argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and `--help` text generation.  Subcommand dispatch lives in `cli/`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments: options map + positionals, with typed accessors.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Option/flag specification used for parsing + help text.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+impl Spec {
+    pub const fn opt(name: &'static str, help: &'static str) -> Spec {
+        Spec { name, takes_value: true, help, default: None }
+    }
+    pub const fn opt_default(
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Spec {
+        Spec { name, takes_value: true, help, default: Some(default) }
+    }
+    pub const fn flag(name: &'static str, help: &'static str) -> Spec {
+        Spec { name, takes_value: false, help, default: None }
+    }
+}
+
+impl Args {
+    /// Parse `argv` against `specs`.  Unknown `--options` are errors.
+    pub fn parse(argv: &[String], specs: &[Spec]) -> Result<Args> {
+        let mut out = Args::default();
+        for spec in specs {
+            if let Some(d) = spec.default {
+                out.opts.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let find = |name: &str| specs.iter().find(|s| s.name == name);
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec =
+                    find(name).ok_or_else(|| anyhow!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| anyhow!("--{name} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        bail!("flag --{name} takes no value");
+                    }
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad float '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--ms 4096,16384,65536`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse().map_err(|_| anyhow!("--{name}: bad list '{v}'")))
+                .collect(),
+        }
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn help_text(cmd: &str, about: &str, specs: &[Spec]) -> String {
+    let mut out = format!("ndpp {cmd} — {about}\n\noptions:\n");
+    for s in specs {
+        let val = if s.takes_value { " <value>" } else { "" };
+        let def = s
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        out.push_str(&format!("  --{}{val:<12} {}{def}\n", s.name, s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPECS: &[Spec] = &[
+        Spec::opt_default("m", "1024", "ground set size"),
+        Spec::opt("seed", "rng seed"),
+        Spec::flag("verbose", "chatty output"),
+    ];
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        let a = Args::parse(&sv(&["--m", "4096", "--verbose", "pos1"]), SPECS).unwrap();
+        assert_eq!(a.usize_or("m", 0).unwrap(), 4096);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = Args::parse(&sv(&["--seed=99"]), SPECS).unwrap();
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 99);
+        assert_eq!(a.usize_or("m", 0).unwrap(), 1024); // default applied
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(Args::parse(&sv(&["--nope"]), SPECS).is_err());
+        assert!(Args::parse(&sv(&["--seed"]), SPECS).is_err());
+        assert!(Args::parse(&sv(&["--verbose=1"]), SPECS).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&sv(&["--m", "1"]), SPECS).unwrap();
+        assert_eq!(a.usize_list_or("missing", &[1, 2]).unwrap(), vec![1, 2]);
+        let specs = &[Spec::opt("ms", "sizes")];
+        let a = Args::parse(&sv(&["--ms", "4, 8,16"]), specs).unwrap();
+        assert_eq!(a.usize_list_or("ms", &[]).unwrap(), vec![4, 8, 16]);
+    }
+}

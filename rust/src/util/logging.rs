@@ -1,0 +1,91 @@
+//! Minimal leveled logger (env_logger substitute).
+//!
+//! Controlled by the `NDPP_LOG` environment variable
+//! (`error|warn|info|debug|trace`, default `info`).  Messages go to stderr
+//! so stdout stays clean for machine-readable command output.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use once_cell::sync::Lazy;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: Lazy<AtomicU8> = Lazy::new(|| {
+    let lvl = match std::env::var("NDPP_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    AtomicU8::new(lvl as u8)
+});
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let _ = writeln!(std::io::stderr(), "[{tag}] {target}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

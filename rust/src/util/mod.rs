@@ -1,0 +1,13 @@
+//! Small self-contained substrates that would normally come from crates.io
+//! (serde_json, clap, env_logger, proptest) but must be built in-tree here
+//! because the environment is offline.  See DESIGN.md §3.
+
+pub mod args;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod stats;
+pub mod timer;
+
+pub use json::Json;
+pub use timer::Timer;

@@ -1,0 +1,105 @@
+//! Property-based testing helper (proptest substitute).
+//!
+//! `check(name, cases, |gen| ...)` runs a closure against `cases` randomly
+//! generated inputs drawn through the [`Gen`] handle.  On failure the seed
+//! of the failing case is printed so the case can be replayed exactly with
+//! `NDPP_PROP_SEED=<seed>`.  No shrinking — failing seeds are replayable
+//! and the generators are kept small instead.
+
+use crate::rng::Xoshiro;
+
+/// Generator handle passed to property closures.
+pub struct Gen {
+    pub rng: Xoshiro,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn normal_vec(&mut self, n: usize, scale: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal() * scale).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.uniform() < 0.5
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `body` against `cases` random cases; panic with the failing seed on
+/// assertion failure (the closure is expected to use assert!/panic!).
+pub fn check(name: &str, cases: usize, mut body: impl FnMut(&mut Gen)) {
+    // Replay mode: run exactly one pinned case.
+    if let Ok(seed_s) = std::env::var("NDPP_PROP_SEED") {
+        let seed: u64 = seed_s.parse().expect("NDPP_PROP_SEED must be u64");
+        let mut g = Gen { rng: Xoshiro::seeded(seed), seed };
+        eprintln!("prop '{name}': replaying seed {seed}");
+        body(&mut g);
+        return;
+    }
+    let mut base = 0x5EED_0000u64;
+    // derive distinct but deterministic seeds per property name
+    for b in name.bytes() {
+        base = base.wrapping_mul(31).wrapping_add(b as u64);
+    }
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut g = Gen { rng: Xoshiro::seeded(seed), seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut g);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "prop '{name}' failed on case {case} — replay with NDPP_PROP_SEED={seed}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases_deterministically() {
+        let mut values1 = Vec::new();
+        check("det", 10, |g| values1.push(g.usize_in(0, 100)));
+        let mut values2 = Vec::new();
+        check("det", 10, |g| values2.push(g.usize_in(0, 100)));
+        assert_eq!(values1, values2);
+        assert_eq!(values1.len(), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check("fail", 5, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x > 100, "forced failure {x}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_hold() {
+        check("ranges", 50, |g| {
+            let n = g.usize_in(3, 7);
+            assert!((3..=7).contains(&n));
+            let x = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&x));
+            let v = g.normal_vec(4, 2.0);
+            assert_eq!(v.len(), 4);
+        });
+    }
+}

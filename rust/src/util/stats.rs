@@ -1,0 +1,150 @@
+//! Summary statistics for the bench harness and coordinator metrics
+//! (criterion substitute, see `bench/`).
+
+/// Mean / standard deviation / 95% confidence half-width / percentiles of a
+/// sample of measurements.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub ci95: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let sd = var.sqrt();
+        // normal-approximation 95% CI half width; fine for reporting
+        let ci95 = 1.96 * sd / (n as f64).sqrt();
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| {
+            let idx = ((n - 1) as f64 * q).round() as usize;
+            sorted[idx]
+        };
+        Summary {
+            n,
+            mean,
+            sd,
+            ci95,
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: pct(0.5),
+            p95: pct(0.95),
+        }
+    }
+}
+
+/// Online histogram with exponential buckets, for latency tracking in the
+/// coordinator without storing every observation.
+#[derive(Debug, Clone)]
+pub struct ExpHistogram {
+    /// bucket i covers [base * 2^i, base * 2^(i+1))
+    base: f64,
+    counts: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl ExpHistogram {
+    pub fn new(base: f64, buckets: usize) -> ExpHistogram {
+        ExpHistogram {
+            base,
+            counts: vec![0; buckets],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        let idx = if x <= self.base {
+            0
+        } else {
+            ((x / self.base).log2().floor() as usize).min(self.counts.len() - 1)
+        };
+        self.counts[idx] += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.base * 2f64.powi(i as i32 + 1);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.sd - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_empty_and_single() {
+        assert_eq!(Summary::of(&[]).n, 0);
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.mean, 7.0);
+        assert_eq!(s.sd, 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket() {
+        let mut h = ExpHistogram::new(1e-6, 40);
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-5);
+        }
+        assert_eq!(h.count, 1000);
+        let p50 = h.quantile(0.5);
+        // true median 5e-3; bucketed answer within a 2x bracket
+        assert!(p50 >= 5e-3 / 2.0 && p50 <= 5e-3 * 4.0, "p50={p50}");
+        assert!((h.mean() - 5.005e-3).abs() < 1e-4);
+    }
+}

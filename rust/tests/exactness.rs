@@ -1,0 +1,151 @@
+//! Sampler exactness: every sampler family against the exponential-time
+//! enumeration oracle, cross-family agreement, and the paper's theorems on
+//! randomized kernels.  These are the slowest, highest-assurance tests.
+
+use ndpp::ndpp::{probability, MarginalKernel, NdppKernel, Proposal};
+use ndpp::rng::Xoshiro;
+use ndpp::sampler::{
+    CholeskySampler, DenseCholeskySampler, RejectionSampler, SampleTree, Sampler, TreeConfig,
+};
+
+fn tv(p: &[f64], q: &[f64]) -> f64 {
+    0.5 * p.iter().zip(q).map(|(a, b)| (a - b).abs()).sum::<f64>()
+}
+
+fn empirical(sampler: &mut dyn Sampler, m: usize, n: usize, rng: &mut Xoshiro) -> Vec<f64> {
+    let mut counts = vec![0.0; 1 << m];
+    for _ in 0..n {
+        let y = sampler.sample(rng);
+        let mut mask = 0usize;
+        for i in y {
+            mask |= 1 << i;
+        }
+        counts[mask] += 1.0;
+    }
+    counts.iter().map(|c| c / n as f64).collect()
+}
+
+/// All three sampler families agree with enumeration on the same kernel.
+#[test]
+fn all_samplers_match_enumeration_on_shared_kernel() {
+    let m = 7;
+    let n = 25_000;
+    for seed in [101u64, 202] {
+        let mut rng = Xoshiro::seeded(seed);
+        let kernel = NdppKernel::random_ondpp(m, 2, &mut rng);
+        let want = probability::enumerate_probs(&kernel);
+
+        let mut chol = CholeskySampler::new(&kernel);
+        let d1 = tv(&empirical(&mut chol, m, n, &mut rng), &want);
+        assert!(d1 < 0.04, "cholesky tv={d1} seed={seed}");
+
+        let mut dense = DenseCholeskySampler::new(&kernel);
+        let d2 = tv(&empirical(&mut dense, m, n, &mut rng), &want);
+        assert!(d2 < 0.04, "dense tv={d2} seed={seed}");
+
+        let proposal = Proposal::build(&kernel);
+        let spectral = proposal.spectral();
+        let tree = SampleTree::build(&spectral, TreeConfig { leaf_size: 2 });
+        let mut rej = RejectionSampler::new(&kernel, &proposal, &tree);
+        let d3 = tv(&empirical(&mut rej, m, n, &mut rng), &want);
+        assert!(d3 < 0.04, "rejection tv={d3} seed={seed}");
+    }
+}
+
+/// Theorem 1 on non-orthogonal kernels (the inequality is kernel-generic).
+#[test]
+fn theorem1_holds_for_nonorthogonal_kernels() {
+    for seed in 0..8u64 {
+        let mut rng = Xoshiro::seeded(seed);
+        let kernel = NdppKernel::random_ndpp(18, 4, &mut rng);
+        let proposal = Proposal::build(&kernel);
+        for _ in 0..20 {
+            let size = 1 + rng.below(8);
+            let y = rng.choose_distinct(18, size);
+            let det_l = probability::det_l_y(&kernel, &y);
+            let det_lhat = probability::det_lhat_y(&proposal, &y);
+            assert!(
+                det_l <= det_lhat + 1e-8 * (1.0 + det_lhat.abs()),
+                "seed={seed} y={y:?}"
+            );
+        }
+    }
+}
+
+/// Empirical mean sample size equals tr(K) for every sampler.
+#[test]
+fn expected_sizes_match_marginal_trace() {
+    let mut rng = Xoshiro::seeded(33);
+    let kernel = NdppKernel::random_ondpp(30, 4, &mut rng);
+    let mk = MarginalKernel::build(&kernel);
+    let expected: f64 = mk.marginals().iter().sum();
+
+    let n = 4000;
+    let mut chol = CholeskySampler::new(&kernel);
+    let mean_c: f64 =
+        (0..n).map(|_| chol.sample(&mut rng).len() as f64).sum::<f64>() / n as f64;
+    let proposal = Proposal::build(&kernel);
+    let spectral = proposal.spectral();
+    let tree = SampleTree::build(&spectral, TreeConfig::default());
+    let mut rej = RejectionSampler::new(&kernel, &proposal, &tree);
+    let mean_r: f64 =
+        (0..n).map(|_| rej.sample(&mut rng).len() as f64).sum::<f64>() / n as f64;
+
+    let tol = 4.0 * (expected / n as f64).sqrt() + 0.1;
+    assert!((mean_c - expected).abs() < tol, "cholesky {mean_c} vs {expected}");
+    assert!((mean_r - expected).abs() < tol, "rejection {mean_r} vs {expected}");
+}
+
+/// The rejection sampler remains exact with hybrid leaves of every size.
+#[test]
+fn leaf_size_does_not_change_distribution() {
+    let m = 6;
+    let mut rng = Xoshiro::seeded(44);
+    let kernel = NdppKernel::random_ondpp(m, 2, &mut rng);
+    let want = probability::enumerate_probs(&kernel);
+    let proposal = Proposal::build(&kernel);
+    let spectral = proposal.spectral();
+    for leaf in [1usize, 3, 6, 64] {
+        let tree = SampleTree::build(&spectral, TreeConfig { leaf_size: leaf });
+        let mut rej = RejectionSampler::new(&kernel, &proposal, &tree);
+        let d = tv(&empirical(&mut rej, m, 20_000, &mut rng), &want);
+        assert!(d < 0.045, "leaf={leaf} tv={d}");
+    }
+}
+
+/// Proposition 1's cost model: per-sample tree work grows ~log M, so going
+/// 16x in M should far less than double per-sample time once K is fixed.
+/// (Coarse smoke check, generous threshold — the real measurement is the
+/// fig2 bench.)
+#[test]
+fn rejection_sampling_is_sublinear_in_m() {
+    let k = 8;
+    let mut times = Vec::new();
+    for &m in &[2048usize, 32768] {
+        let mut rng = Xoshiro::seeded(55);
+        let mut kernel = NdppKernel::synthetic(m, k, &mut rng);
+        for s in &mut kernel.sigma {
+            *s = 0.1;
+        }
+        kernel.orthogonalize();
+        kernel.rescale_expected_size(8.0);
+        let proposal = Proposal::build(&kernel);
+        let spectral = proposal.spectral();
+        let tree = SampleTree::build(&spectral, TreeConfig::default());
+        let mut rej = RejectionSampler::new(&kernel, &proposal, &tree);
+        // warmup + measure
+        for _ in 0..3 {
+            rej.sample(&mut rng);
+        }
+        let t = std::time::Instant::now();
+        for _ in 0..15 {
+            rej.sample(&mut rng);
+        }
+        times.push(t.elapsed().as_secs_f64() / 15.0);
+    }
+    let growth = times[1] / times[0];
+    assert!(
+        growth < 4.0,
+        "16x M grew per-sample time by {growth:.2}x (linear would be ~16x)"
+    );
+}

@@ -1,0 +1,146 @@
+//! Coordinator end-to-end: concurrent load, batching behaviour, failure
+//! injection, TCP protocol.
+
+use std::sync::Arc;
+
+use ndpp::coordinator::{
+    server, SampleRequest, SamplerKind, SamplingService, ServiceConfig,
+};
+use ndpp::ndpp::NdppKernel;
+use ndpp::rng::Xoshiro;
+use ndpp::sampler::TreeConfig;
+use ndpp::util::json::Json;
+
+fn make_service(models: &[(&str, usize, usize)]) -> Arc<SamplingService> {
+    let svc = Arc::new(SamplingService::new(ServiceConfig {
+        workers: 2,
+        flush_interval_us: 200,
+        max_batch: 16,
+        tree: TreeConfig::default(),
+    }));
+    let mut rng = Xoshiro::seeded(77);
+    for &(name, m, k) in models {
+        let mut kernel = NdppKernel::random_ondpp(m, k, &mut rng);
+        for s in &mut kernel.sigma {
+            *s = rng.uniform_in(0.05, 0.3);
+        }
+        svc.register(name, kernel);
+    }
+    svc
+}
+
+#[test]
+fn concurrent_multi_model_load() {
+    let svc = make_service(&[("a", 64, 4), ("b", 128, 8)]);
+    let rxs: Vec<_> = (0..200)
+        .map(|i| {
+            svc.submit(SampleRequest {
+                model: if i % 2 == 0 { "a" } else { "b" }.into(),
+                n: 2,
+                seed: Some(i),
+                kind: if i % 3 == 0 { SamplerKind::Cholesky } else { SamplerKind::Rejection },
+            })
+        })
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.samples.len(), 2);
+        ok += 1;
+    }
+    assert_eq!(ok, 200);
+    let snap = svc.metrics().snapshot();
+    let total: f64 = ["a", "b"]
+        .iter()
+        .map(|m| snap.get(m).map(|j| j.f64_or("samples", 0.0)).unwrap_or(0.0))
+        .sum();
+    assert_eq!(total as u64, 400);
+}
+
+#[test]
+fn errors_do_not_poison_the_pipeline() {
+    let svc = make_service(&[("good", 64, 4)]);
+    // interleave bad-model requests with good ones
+    let rxs: Vec<_> = (0..40)
+        .map(|i| {
+            svc.submit(SampleRequest {
+                model: if i % 4 == 0 { "missing" } else { "good" }.into(),
+                n: 1,
+                seed: Some(i),
+                kind: SamplerKind::Cholesky,
+            })
+        })
+        .collect();
+    let mut errors = 0;
+    let mut oks = 0;
+    for rx in rxs {
+        match rx.recv().unwrap() {
+            Ok(_) => oks += 1,
+            Err(_) => errors += 1,
+        }
+    }
+    assert_eq!(errors, 10);
+    assert_eq!(oks, 30);
+}
+
+#[test]
+fn determinism_under_batching_pressure() {
+    // same (model, seed, n) must give the same samples regardless of how
+    // many other requests are in flight
+    let svc = make_service(&[("d", 96, 4)]);
+    let baseline = svc
+        .sample(SampleRequest {
+            model: "d".into(),
+            n: 4,
+            seed: Some(1234),
+            kind: SamplerKind::Rejection,
+        })
+        .unwrap();
+    // flood with noise and re-issue
+    let noise: Vec<_> = (0..100)
+        .map(|i| {
+            svc.submit(SampleRequest {
+                model: "d".into(),
+                n: 1,
+                seed: Some(i),
+                kind: SamplerKind::Rejection,
+            })
+        })
+        .collect();
+    let again = svc
+        .sample(SampleRequest {
+            model: "d".into(),
+            n: 4,
+            seed: Some(1234),
+            kind: SamplerKind::Rejection,
+        })
+        .unwrap();
+    for rx in noise {
+        rx.recv().unwrap().unwrap();
+    }
+    assert_eq!(baseline.samples, again.samples);
+}
+
+#[test]
+fn tcp_protocol_full_session() {
+    let svc = make_service(&[("net", 64, 4)]);
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let svc2 = Arc::clone(&svc);
+    let server = std::thread::spawn(move || {
+        server::serve(svc2, "127.0.0.1:0", move |a| {
+            let _ = addr_tx.send(a);
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv().unwrap().to_string();
+
+    let mut c = server::Client::connect(&addr).unwrap();
+    let samples = c.sample("net", 5, 9, "cholesky").unwrap();
+    assert_eq!(samples.len(), 5);
+    // malformed json is answered, not dropped
+    let resp = c.call(&Json::parse("{\"op\":\"bogus\"}").unwrap()).unwrap();
+    assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(false));
+    let stop = c.call(&Json::obj().with("op", "shutdown")).unwrap();
+    assert_eq!(stop.get("ok").and_then(|b| b.as_bool()), Some(true));
+    server.join().unwrap();
+}
