@@ -12,11 +12,13 @@ use crate::bench::runner::{BenchRunner, Table};
 use crate::coordinator::registry::ModelEntry;
 use crate::data::{recipes, synthetic};
 use crate::learn::{self, TrainConfig, Trainer};
+use crate::linalg::Matrix;
 use crate::ndpp::{NdppKernel, Proposal};
 use crate::rng::Xoshiro;
 use crate::runtime::ModelOps;
 use crate::sampler::{
-    CholeskySampler, DenseCholeskySampler, RejectionSampler, SampleTree, Sampler, TreeConfig,
+    CholeskySampler, DenseCholeskySampler, McmcConfig, McmcSampler, RejectionSampler,
+    SampleTree, Sampler, TreeConfig,
 };
 use crate::util::json::Json;
 use crate::util::timer::{fmt_secs, timed};
@@ -68,6 +70,118 @@ pub fn tablelike_kernel(m: usize, k: usize, rng: &mut Xoshiro) -> NdppKernel {
     // basket-sized samples (the paper's k << K regime)
     kernel.rescale_expected_size(10.0);
     kernel
+}
+
+/// A kernel with **no** ONDPP structure: `B` column-normalized but not
+/// orthonormalized, `V` not orthogonal to `B`, every Youla value set to
+/// `sigma` — the class of kernels unconstrained NDPP training produces.
+/// At `sigma ~ 1` the rejection sampler's expected proposal count grows
+/// like `2^{K/2}` (Theorem 2's bound no longer applies, and the measured
+/// `det(L̂+I)/det(L+I)` tracks the same explosion), which is the regime the
+/// MCMC up-down sampler exists for.
+pub fn nonorthogonal_kernel(m: usize, k: usize, sigma: f64, rng: &mut Xoshiro) -> NdppKernel {
+    assert!(k >= 2 && k % 2 == 0);
+    let scale = (k as f64 / m as f64).sqrt().min(0.5);
+    let v = Matrix::randn(m, k, scale, rng);
+    let mut b = Matrix::randn(m, k, 1.0, rng);
+    for j in 0..k {
+        let norm = (0..m).map(|i| b[(i, j)] * b[(i, j)]).sum::<f64>().sqrt();
+        if norm > 0.0 {
+            for i in 0..m {
+                b[(i, j)] /= norm;
+            }
+        }
+    }
+    NdppKernel::new(v, b, vec![sigma; k / 2])
+}
+
+// ======================================================================
+// MCMC vs rejection — sampling cost as the ONDPP regularization is
+// relaxed (the follow-up paper's motivating comparison)
+// ======================================================================
+
+/// Above this expected proposal count the rejection sampler is not timed
+/// (a single sample would need thousands of proposals); the MCMC column
+/// keeps going, which is the point of the experiment.
+const REJECTION_FEASIBILITY_CUTOFF: f64 = 200.0;
+
+pub fn mcmc_comparison(opts: &ExpOptions) -> Result<String> {
+    let m = if opts.profile == "paper" { 4096usize } else { 512usize };
+    // per-part rank from the shared sampling-experiment knob, rounded down
+    // to the even value the kernel parameterization requires; U ~ 2^{K/2}
+    // at sigma ~ 1, so K >= ~16 is needed to reach the infeasible regime
+    let k = ((opts.k.max(2)) / 2) * 2;
+    // sigma sweep: small values mimic gamma-regularized ONDPP training,
+    // sigma ~ 1 the unregularized/nonorthogonal end where U ~ 2^{K/2}
+    let sigmas = [0.05, 0.15, 0.4, 0.7, 1.0];
+
+    let mut table = Table::new(&[
+        "sigma",
+        "E[#rejections]",
+        "rejection / sample",
+        "mcmc / sample",
+        "mcmc steps/sample",
+        "mcmc acceptance",
+    ]);
+    let mut json_rows = Vec::new();
+
+    for (idx, &sigma) in sigmas.iter().enumerate() {
+        let mut rng = Xoshiro::seeded(opts.seed ^ (0xA11 + idx as u64));
+        let kernel = nonorthogonal_kernel(m, k, sigma, &mut rng);
+        let proposal = Proposal::build(&kernel);
+        let u = proposal.expected_rejections();
+
+        let rejection_mean = if u <= REJECTION_FEASIBILITY_CUTOFF {
+            let tree = SampleTree::build(&proposal.spectral(), TreeConfig::default());
+            let mut rej = RejectionSampler::new(&kernel, &proposal, &tree);
+            let mut r = Xoshiro::seeded(13);
+            Some(opts.runner.measure("rej", || {
+                rej.sample(&mut r);
+            }))
+        } else {
+            None
+        };
+
+        let config = McmcConfig::for_kernel(&kernel);
+        let mut mcmc = McmcSampler::new(&kernel, config);
+        let mut r = Xoshiro::seeded(14);
+        let mc = opts.runner.measure("mcmc", || {
+            mcmc.sample(&mut r);
+        });
+
+        table.row(vec![
+            format!("{sigma}"),
+            format!("{u:.3e}"),
+            rejection_mean
+                .as_ref()
+                .map(|mr| fmt_secs(mr.mean()))
+                .unwrap_or_else(|| "infeasible".into()),
+            fmt_secs(mc.mean()),
+            format!("{}", mcmc.last_steps),
+            format!("{:.2}", mcmc.acceptance_rate()),
+        ]);
+        json_rows.push(
+            Json::obj()
+                .with("sigma", sigma)
+                .with("m", m)
+                .with("k", k)
+                .with("expected_rejections", u)
+                .with(
+                    "rejection_s",
+                    rejection_mean.map(|mr| Json::Num(mr.mean())).unwrap_or(Json::Null),
+                )
+                .with("mcmc_s", mc.mean())
+                .with("mcmc_size", config.size)
+                .with("mcmc_steps_per_sample", mcmc.last_steps)
+                .with("mcmc_acceptance", mcmc.acceptance_rate()),
+        );
+    }
+    let json = Json::obj()
+        .with("m", m)
+        .with("k", k)
+        .with("cutoff", REJECTION_FEASIBILITY_CUTOFF)
+        .with("rows", Json::Arr(json_rows));
+    emit("mcmc_comparison", &table, &json)
 }
 
 // ======================================================================
@@ -456,6 +570,38 @@ mod tests {
         let p = Proposal::build(&kernel);
         assert!(p.expected_rejections() < 50.0, "{}", p.expected_rejections());
         assert!(kernel.is_ondpp(1e-8));
+    }
+
+    #[test]
+    fn nonorthogonal_kernel_rejections_diverge_and_mcmc_survives() {
+        // the acceptance criterion of the MCMC subsystem: a kernel whose
+        // expected rejection count exceeds 10^3 — useless for the rejection
+        // sampler — still samples fine through the up-down chain
+        let mut rng = Xoshiro::seeded(2);
+        let kernel = nonorthogonal_kernel(128, 24, 1.0, &mut rng);
+        let p = Proposal::build(&kernel);
+        assert!(
+            p.expected_rejections() > 1e3,
+            "expected rejections only {:.3e}",
+            p.expected_rejections()
+        );
+        let config = McmcConfig::for_kernel(&kernel);
+        let mut s = McmcSampler::new(&kernel, config);
+        let y = s.sample(&mut rng);
+        assert_eq!(y.len(), config.size);
+        assert!(s.acceptance_rate() > 0.0);
+    }
+
+    #[test]
+    fn mcmc_comparison_runs_and_flags_infeasible_rejection() {
+        let opts = ExpOptions {
+            k: 24,
+            runner: BenchRunner::quick(),
+            ..Default::default()
+        };
+        let rendered = mcmc_comparison(&opts).unwrap();
+        // the sigma ~ 1 rows must be beyond the rejection sampler
+        assert!(rendered.contains("infeasible"), "{rendered}");
     }
 
     #[test]

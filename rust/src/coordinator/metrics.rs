@@ -6,6 +6,15 @@ use std::sync::Mutex;
 use crate::util::json::Json;
 use crate::util::stats::ExpHistogram;
 
+/// Per-(model, algorithm) counters.
+#[derive(Debug, Default)]
+struct AlgoMetrics {
+    requests: u64,
+    samples: u64,
+    proposals: u64,
+    latency_sum: f64,
+}
+
 /// Per-model counters.
 #[derive(Debug)]
 struct ModelMetrics {
@@ -13,6 +22,8 @@ struct ModelMetrics {
     samples: u64,
     proposals: u64,
     errors: u64,
+    /// breakdown keyed by `SamplerKind::as_str()`
+    by_algo: HashMap<String, AlgoMetrics>,
 }
 
 impl ModelMetrics {
@@ -23,8 +34,10 @@ impl ModelMetrics {
             samples: 0,
             proposals: 0,
             errors: 0,
+            by_algo: HashMap::new(),
         }
     }
+
 }
 
 /// Thread-safe metrics sink.
@@ -38,13 +51,35 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// Record one completed sampling call.
+    /// Record one completed sampling call with no algorithm attribution
+    /// (lands in the `"unattributed"` bucket, so the snapshot invariant
+    /// "algo splits sum to the aggregates" holds for every caller).
     pub fn record(&self, model: &str, latency_secs: f64, n_samples: u64, proposals: u64) {
+        self.record_algo(model, "unattributed", latency_secs, n_samples, proposals);
+    }
+
+    /// Record one completed sampling call attributed to an algorithm: the
+    /// per-model aggregates plus the per-algorithm breakdown, under one
+    /// lock acquisition so a concurrent snapshot never sees the aggregate
+    /// and its algo split disagree.
+    pub fn record_algo(
+        &self,
+        model: &str,
+        algo: &str,
+        latency_secs: f64,
+        n_samples: u64,
+        proposals: u64,
+    ) {
         let mut map = self.inner.lock().unwrap();
         let m = map.entry(model.to_string()).or_insert_with(ModelMetrics::new);
         m.latency.record(latency_secs);
         m.samples += n_samples;
         m.proposals += proposals;
+        let a = m.by_algo.entry(algo.to_string()).or_default();
+        a.requests += 1;
+        a.samples += n_samples;
+        a.proposals += proposals;
+        a.latency_sum += latency_secs;
     }
 
     pub fn record_error(&self, model: &str) {
@@ -59,6 +94,22 @@ impl Metrics {
         let map = self.inner.lock().unwrap();
         let mut obj = Json::obj();
         for (name, m) in map.iter() {
+            let mut algos = Json::obj();
+            for (algo, a) in m.by_algo.iter() {
+                let mean = if a.requests == 0 {
+                    0.0
+                } else {
+                    a.latency_sum / a.requests as f64
+                };
+                algos.set(
+                    algo,
+                    Json::obj()
+                        .with("requests", a.requests)
+                        .with("samples", a.samples)
+                        .with("proposals", a.proposals)
+                        .with("latency_mean_s", mean),
+                );
+            }
             obj.set(
                 name,
                 Json::obj()
@@ -68,7 +119,8 @@ impl Metrics {
                     .with("errors", m.errors)
                     .with("latency_mean_s", m.latency.mean())
                     .with("latency_p50_s", m.latency.quantile(0.5))
-                    .with("latency_p95_s", m.latency.quantile(0.95)),
+                    .with("latency_p95_s", m.latency.quantile(0.95))
+                    .with("algos", algos),
             );
         }
         obj
@@ -78,6 +130,26 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn per_algo_breakdown_accumulates() {
+        let m = Metrics::new();
+        m.record_algo("a", "cholesky", 0.010, 4, 4);
+        m.record_algo("a", "mcmc", 0.020, 2, 600);
+        m.record_algo("a", "mcmc", 0.040, 2, 600);
+        let snap = m.snapshot();
+        let a = snap.get("a").unwrap();
+        // aggregates include algo-attributed traffic
+        assert_eq!(a.f64_or("requests", 0.0), 3.0);
+        assert_eq!(a.f64_or("samples", 0.0), 8.0);
+        let algos = a.get("algos").unwrap();
+        let chol = algos.get("cholesky").unwrap();
+        assert_eq!(chol.f64_or("samples", 0.0), 4.0);
+        let mcmc = algos.get("mcmc").unwrap();
+        assert_eq!(mcmc.f64_or("requests", 0.0), 2.0);
+        assert_eq!(mcmc.f64_or("proposals", 0.0), 1200.0);
+        assert!((mcmc.f64_or("latency_mean_s", 0.0) - 0.030).abs() < 1e-12);
+    }
 
     #[test]
     fn records_and_snapshots() {

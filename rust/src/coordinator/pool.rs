@@ -40,7 +40,21 @@ impl WorkerPool {
                             guard.recv()
                         };
                         match msg {
-                            Ok(Message::Run(job)) => job(),
+                            Ok(Message::Run(job)) => {
+                                // panic isolation: one poisoned job (e.g. a
+                                // degenerate model panicking inside a
+                                // sampler) must not kill the worker and
+                                // strand every later request
+                                let result = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                                if result.is_err() {
+                                    crate::warnlog!(
+                                        "pool",
+                                        "job panicked on worker {i}; worker continues"
+                                    );
+                                }
+                            }
                             Ok(Message::Shutdown) | Err(_) => break,
                         }
                     })
@@ -138,5 +152,17 @@ mod tests {
         let pool = WorkerPool::new(3);
         pool.submit(|| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_worker() {
+        let pool = WorkerPool::new(1);
+        pool.submit(|| panic!("boom"));
+        // the single worker must survive to run the next job
+        let rx = pool.submit_with_result(|| 7);
+        assert_eq!(
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap(),
+            7
+        );
     }
 }

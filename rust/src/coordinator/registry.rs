@@ -11,7 +11,7 @@ use std::sync::{Arc, RwLock};
 use anyhow::{anyhow, Result};
 
 use crate::ndpp::{MarginalKernel, NdppKernel, Proposal};
-use crate::sampler::{SampleTree, TreeConfig};
+use crate::sampler::{McmcConfig, SampleTree, TreeConfig};
 
 /// Which sampling algorithm a request wants.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -20,6 +20,8 @@ pub enum SamplerKind {
     Cholesky,
     /// sublinear tree-based rejection (Algorithm 2)
     Rejection,
+    /// fixed-size up-down Metropolis chain (Han et al. 2022 follow-up)
+    Mcmc,
 }
 
 impl SamplerKind {
@@ -27,7 +29,8 @@ impl SamplerKind {
         match s {
             "cholesky" => Ok(SamplerKind::Cholesky),
             "rejection" | "tree" => Ok(SamplerKind::Rejection),
-            other => Err(anyhow!("unknown sampler '{other}' (cholesky|rejection)")),
+            "mcmc" | "updown" => Ok(SamplerKind::Mcmc),
+            other => Err(anyhow!("unknown sampler '{other}' (cholesky|rejection|mcmc)")),
         }
     }
 
@@ -35,8 +38,13 @@ impl SamplerKind {
         match self {
             SamplerKind::Cholesky => "cholesky",
             SamplerKind::Rejection => "rejection",
+            SamplerKind::Mcmc => "mcmc",
         }
     }
+
+    /// All algorithms, for sweep-style tests and benches.
+    pub const ALL: [SamplerKind; 3] =
+        [SamplerKind::Cholesky, SamplerKind::Rejection, SamplerKind::Mcmc];
 }
 
 /// A registered model with all sampler preprocessing.
@@ -46,6 +54,9 @@ pub struct ModelEntry {
     pub marginal: MarginalKernel,
     pub proposal: Proposal,
     pub tree: SampleTree,
+    /// default chain configuration for [`SamplerKind::Mcmc`] requests
+    /// (size from the marginal trace)
+    pub mcmc: McmcConfig,
     /// wall-clock seconds spent in each preprocessing stage
     pub prep_seconds: PrepTimes,
 }
@@ -73,12 +84,14 @@ impl ModelEntry {
         let t2 = std::time::Instant::now();
         let tree = SampleTree::build(&spectral, tree_config);
         let t3 = std::time::Instant::now();
+        let mcmc = McmcConfig::from_marginal(&marginal);
         ModelEntry {
             name: name.into(),
             kernel,
             marginal,
             proposal,
             tree,
+            mcmc,
             prep_seconds: PrepTimes {
                 marginal: (t1 - t0).as_secs_f64(),
                 spectral: (t2 - t1).as_secs_f64(),
@@ -152,7 +165,22 @@ mod tests {
     fn sampler_kind_parsing() {
         assert_eq!(SamplerKind::parse("cholesky").unwrap(), SamplerKind::Cholesky);
         assert_eq!(SamplerKind::parse("tree").unwrap(), SamplerKind::Rejection);
+        assert_eq!(SamplerKind::parse("mcmc").unwrap(), SamplerKind::Mcmc);
+        assert_eq!(SamplerKind::parse("updown").unwrap(), SamplerKind::Mcmc);
         assert!(SamplerKind::parse("bogus").is_err());
         assert_eq!(SamplerKind::Rejection.as_str(), "rejection");
+        assert_eq!(SamplerKind::Mcmc.as_str(), "mcmc");
+        for kind in SamplerKind::ALL {
+            assert_eq!(SamplerKind::parse(kind.as_str()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn prepare_selects_mcmc_size_from_marginal_trace() {
+        let mut rng = Xoshiro::seeded(2);
+        let kernel = NdppKernel::random_ondpp(48, 4, &mut rng);
+        let entry = ModelEntry::prepare("m2", kernel, TreeConfig::default());
+        let expected: f64 = entry.marginal.marginals().iter().sum();
+        assert_eq!(entry.mcmc.size, (expected.round() as usize).clamp(1, 8));
     }
 }

@@ -25,7 +25,7 @@ use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::registry::{ModelEntry, Registry, SamplerKind};
 use crate::ndpp::NdppKernel;
 use crate::rng::Xoshiro;
-use crate::sampler::{CholeskySampler, RejectionSampler, Sampler, TreeConfig};
+use crate::sampler::{CholeskySampler, McmcSampler, RejectionSampler, Sampler, TreeConfig};
 use crate::util::Timer;
 
 /// Service tuning knobs.
@@ -179,9 +179,12 @@ impl SamplingService {
         rx
     }
 
-    /// Synchronous convenience wrapper.
+    /// Synchronous convenience wrapper.  A dropped reply channel (a worker
+    /// panicked mid-batch) surfaces as an error, not a client panic.
     pub fn sample(&self, req: SampleRequest) -> Result<SampleResponse> {
-        self.submit(req).recv().expect("service dropped reply channel")
+        self.submit(req)
+            .recv()
+            .unwrap_or_else(|_| Err(anyhow::anyhow!("sampling worker dropped the reply")))
     }
 
     fn flush_all(
@@ -224,13 +227,19 @@ impl SamplingService {
     }
 
     /// Execute a coalesced batch on one worker: group by algorithm so each
-    /// sampler's scratch state is reused across the whole group.
+    /// sampler's scratch state is reused across the whole group.  Every
+    /// sampler (including the MCMC chain, which restarts per `sample()`
+    /// call) is a pure function of `(model, request seed)`, so reuse never
+    /// leaks state between requests.
     fn run_batch(entry: &ModelEntry, metrics: &Metrics, batch: Vec<Pending>) {
         let mut cholesky: Option<CholeskySampler<'_>> = None;
         let mut rejection: Option<RejectionSampler<'_>> = None;
+        let mut mcmc: Option<McmcSampler<'_>> = None;
 
         for p in batch {
             let mut rng = Xoshiro::seeded(p.seed);
+            // unit of work per sample: proposal draws for the rejection
+            // sampler, chain steps for MCMC, one sweep for cholesky
             let mut proposals = 0u64;
             let samples: Vec<Vec<usize>> = match p.req.kind {
                 SamplerKind::Cholesky => {
@@ -255,9 +264,26 @@ impl SamplingService {
                         })
                         .collect()
                 }
+                SamplerKind::Mcmc => {
+                    let s =
+                        mcmc.get_or_insert_with(|| McmcSampler::new(&entry.kernel, entry.mcmc));
+                    (0..p.req.n)
+                        .map(|_| {
+                            let y = s.sample(&mut rng);
+                            proposals += s.last_steps as u64;
+                            y
+                        })
+                        .collect()
+                }
             };
             let latency = p.enqueued.secs();
-            metrics.record(&entry.name, latency, p.req.n as u64, proposals);
+            metrics.record_algo(
+                &entry.name,
+                p.req.kind.as_str(),
+                latency,
+                p.req.n as u64,
+                proposals,
+            );
             let _ = p.reply.send(Ok(SampleResponse {
                 samples,
                 proposals,
@@ -294,9 +320,9 @@ mod tests {
     }
 
     #[test]
-    fn sample_roundtrip_both_algorithms() {
+    fn sample_roundtrip_all_algorithms() {
         let svc = service_with_model(40, 4);
-        for kind in [SamplerKind::Cholesky, SamplerKind::Rejection] {
+        for kind in SamplerKind::ALL {
             let resp = svc
                 .sample(SampleRequest {
                     model: "test".into(),
@@ -305,11 +331,19 @@ mod tests {
                     kind,
                 })
                 .unwrap();
-            assert_eq!(resp.samples.len(), 5);
+            assert_eq!(resp.samples.len(), 5, "{}", kind.as_str());
             assert!(resp.proposals >= 5);
             for y in &resp.samples {
                 assert!(y.iter().all(|&i| i < 40));
             }
+        }
+        // per-algorithm counters split the aggregate
+        let snap = svc.metrics().snapshot();
+        let algos = snap.get("test").and_then(|t| t.get("algos").cloned()).unwrap();
+        for kind in SamplerKind::ALL {
+            let a = algos.get(kind.as_str()).unwrap();
+            assert_eq!(a.f64_or("samples", 0.0), 5.0, "{}", kind.as_str());
+            assert_eq!(a.f64_or("requests", 0.0), 1.0);
         }
     }
 

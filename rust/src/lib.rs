@@ -6,9 +6,11 @@
 //!
 //! * **Layer 3 (this crate)** — the coordinator: NDPP kernel algebra,
 //!   the linear-time Cholesky-based sampler (paper §3), the sublinear
-//!   tree-based rejection sampler (paper §4), ONDPP learning (paper §5),
-//!   a batching sampling service, datasets, metrics, and the benchmark
-//!   harness regenerating every table/figure of the paper's evaluation.
+//!   tree-based rejection sampler (paper §4), the fixed-size MCMC up-down
+//!   sampler (after the follow-up *Scalable MCMC Sampling for NDPPs*, Han
+//!   et al. 2022), ONDPP learning (paper §5), a batching sampling service,
+//!   datasets, metrics, and the benchmark harness regenerating every
+//!   table/figure of the paper's evaluation.
 //! * **Layer 2 (python/compile)** — JAX graphs (marginal kernel, scan-based
 //!   Cholesky sweep, ONDPP train step) AOT-lowered to HLO text.
 //! * **Layer 1 (python/compile/kernels)** — Pallas kernels for the
@@ -39,8 +41,29 @@
 //! let tree = SampleTree::build(&spectral, TreeConfig::default());
 //! let mut rejection = RejectionSampler::new(&kernel, &proposal, &tree);
 //! let sample2 = rejection.sample(&mut rng);
-//! # let _ = (sample, sample2);
+//!
+//! // Fixed-size (k-NDPP) MCMC up-down sampler — use when
+//! // `proposal.expected_rejections()` diverges (relaxed orthogonality /
+//! // unregularized sigmas): O(k^2 + kK) per chain step, independent of
+//! // both M and the rejection rate.
+//! let mut mcmc = McmcSampler::new(&kernel, McmcConfig::for_kernel(&kernel));
+//! let sample3 = mcmc.sample(&mut rng);
+//! # let _ = (sample, sample2, sample3);
 //! ```
+//!
+//! ## Choosing a sampler
+//!
+//! * [`CholeskySampler`](sampler::CholeskySampler) — exact, `O(M K^2)` per
+//!   sample; the default for one-off sampling at moderate `M`.
+//! * [`RejectionSampler`](sampler::RejectionSampler) — exact and sublinear
+//!   in `M`, but pays `U = det(L̂+I)/det(L+I)` proposal draws per sample;
+//!   only viable for (near-)ONDPP kernels with regularized sigmas, where
+//!   Theorem 2 bounds `U` independently of `M`.
+//! * [`McmcSampler`](sampler::McmcSampler) — fixed-size (k-NDPP) chain,
+//!   approximate with controllable burn-in/thinning; per-step cost
+//!   `O(k^2 + kK)` no matter how large `U` gets.  Prefer it when
+//!   `Proposal::expected_rejections()` is large (rule of thumb: over a few
+//!   hundred) or when the workload wants exactly-k-item samples.
 
 pub mod bench;
 pub mod coordinator;
@@ -59,8 +82,8 @@ pub mod prelude {
     pub use crate::ndpp::{NdppKernel, Proposal};
     pub use crate::rng::Xoshiro;
     pub use crate::sampler::{
-        CholeskySampler, DenseCholeskySampler, RejectionSampler, SampleTree, Sampler,
-        TreeConfig,
+        CholeskySampler, DenseCholeskySampler, McmcConfig, McmcSampler, RejectionSampler,
+        SampleTree, Sampler, TreeConfig,
     };
 }
 

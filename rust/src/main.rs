@@ -1,7 +1,7 @@
 //! `ndpp` — command-line entry point for the NDPP sampling framework.
 //!
 //! ```text
-//! ndpp sample     draw samples from a kernel (cholesky | rejection)
+//! ndpp sample     draw samples from a kernel (cholesky | rejection | mcmc)
 //! ndpp serve      run the TCP sampling service
 //! ndpp train      learn an ONDPP kernel from a basket dataset (AOT/PJRT)
 //! ndpp gen-data   generate a synthetic basket dataset
@@ -22,7 +22,9 @@ use ndpp::learn::{self, TrainConfig, Trainer};
 use ndpp::ndpp::{MarginalKernel, Proposal};
 use ndpp::rng::Xoshiro;
 use ndpp::runtime::ModelOps;
-use ndpp::sampler::{CholeskySampler, RejectionSampler, SampleTree, Sampler, TreeConfig};
+use ndpp::sampler::{
+    CholeskySampler, McmcConfig, McmcSampler, RejectionSampler, SampleTree, Sampler, TreeConfig,
+};
 use ndpp::util::args::{help_text, Args, Spec};
 
 fn main() {
@@ -68,7 +70,7 @@ fn print_usage() {
          \x20 serve      run the TCP sampling service\n\
          \x20 train      learn an ONDPP kernel (AOT train_step via PJRT)\n\
          \x20 gen-data   generate a synthetic basket dataset\n\
-         \x20 reproduce  regenerate a paper experiment (table1|table2|table3|fig1|fig2|all)\n\
+         \x20 reproduce  regenerate a paper experiment (table1|table2|table3|fig1|fig2|mcmc|all)\n\
          \x20 map        greedy MAP inference (most-diverse set)\n\
          \x20 info       environment + artifact status\n\n\
          run `ndpp <command> --help` for options"
@@ -81,7 +83,7 @@ const SAMPLE_SPECS: &[Spec] = &[
     Spec::opt_default("k", "32", "per-part kernel rank K"),
     Spec::opt_default("n", "5", "number of samples"),
     Spec::opt_default("seed", "0", "rng seed"),
-    Spec::opt_default("algo", "rejection", "cholesky | rejection | both"),
+    Spec::opt_default("algo", "rejection", "cholesky | rejection | mcmc | both | all"),
     Spec::flag("help", "show help"),
 ];
 
@@ -96,6 +98,9 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
     let n = a.usize_or("n", 5)?;
     let seed = a.u64_or("seed", 0)?;
     let algo = a.str_or("algo", "rejection");
+    if !["cholesky", "rejection", "mcmc", "both", "all"].contains(&algo.as_str()) {
+        bail!("unknown --algo '{algo}' (cholesky | rejection | mcmc | both | all)");
+    }
 
     let mut rng = Xoshiro::seeded(seed);
     let kernel = match a.get("kernel") {
@@ -110,7 +115,7 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
         }
     };
 
-    if algo == "cholesky" || algo == "both" {
+    if algo == "cholesky" || algo == "both" || algo == "all" {
         let mut s = CholeskySampler::new(&kernel);
         let mut r = rng.split(1);
         for i in 0..n {
@@ -118,7 +123,7 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
             println!("cholesky[{i}] (logp {lp:.2}): {y:?}");
         }
     }
-    if algo == "rejection" || algo == "both" {
+    if algo == "rejection" || algo == "both" || algo == "all" {
         let proposal = Proposal::build(&kernel);
         let spectral = proposal.spectral();
         let tree = SampleTree::build(&spectral, TreeConfig::default());
@@ -132,6 +137,22 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
             "rejection rate: observed {:.2}, expected {:.2}",
             s.observed_rejection_rate(),
             s.expected_rejection_rate()
+        );
+    }
+    if algo == "mcmc" || algo == "all" {
+        let config = McmcConfig::for_kernel(&kernel);
+        let mut s = McmcSampler::new(&kernel, config);
+        let mut r = rng.split(3);
+        // one chain for the whole batch: burn-in amortized, thinned draws
+        for (i, y) in s.sample_chain(n, &mut r).into_iter().enumerate() {
+            println!("mcmc[{i}] (|Y| = {}): {y:?}", y.len());
+        }
+        println!(
+            "mcmc: size {} | burn-in {} | thinning {} | acceptance {:.2}",
+            config.size,
+            config.burn_in,
+            config.thinning,
+            s.acceptance_rate()
         );
     }
     Ok(())
@@ -286,7 +307,7 @@ fn cmd_gen_data(argv: &[String]) -> Result<()> {
 }
 
 const REPRO_SPECS: &[Spec] = &[
-    Spec::opt_default("exp", "all", "table1|table2|table3|fig1|fig2|all"),
+    Spec::opt_default("exp", "all", "table1|table2|table3|fig1|fig2|mcmc|all"),
     Spec::opt_default("profile", "fast", "fast | paper"),
     Spec::opt_default("k", "32", "per-part rank for sampling experiments"),
     Spec::opt_default("seed", "0", "rng seed"),
@@ -324,10 +345,12 @@ fn cmd_reproduce(argv: &[String]) -> Result<()> {
         "table3" => experiments::table3(&opts).map(|_| ()),
         "fig1" => experiments::fig1(&opts, ops.as_ref().unwrap()).map(|_| ()),
         "fig2" => experiments::fig2(&opts).map(|_| ()),
+        "mcmc" => experiments::mcmc_comparison(&opts).map(|_| ()),
         "all" => {
             experiments::table1(&opts)?;
             experiments::table3(&opts)?;
             experiments::fig2(&opts)?;
+            experiments::mcmc_comparison(&opts)?;
             let ops = ops.as_ref().unwrap();
             experiments::table2(&opts, ops)?;
             experiments::fig1(&opts, ops)?;

@@ -5,6 +5,7 @@
 //! | [`DenseCholeskySampler`] | Alg 1 (LHS), Poulson 2019 | `O(M^3)` | baseline, small M only |
 //! | [`CholeskySampler`] | Alg 1 (RHS), §3 | `O(M K^2)` | linear-time, low-rank |
 //! | [`RejectionSampler`] | Alg 2, §4 | `O((K + k^3 log M + k^4) U)` | sublinear, needs proposal + tree |
+//! | [`McmcSampler`] | Han et al. 2022 follow-up | `O((k^2 + k K) · steps)` | fixed-size k-NDPP, immune to diverging `U` |
 //!
 //! plus the building blocks: [`elementary`] (elementary-DPP sampling from a
 //! spectral kernel, the mixture components of Eq. (10)) and [`tree`]
@@ -18,12 +19,14 @@ pub mod cholesky;
 pub mod dense;
 pub mod elementary;
 pub mod fixed_size;
+pub mod mcmc;
 pub mod rejection;
 pub mod tree;
 
 pub use cholesky::CholeskySampler;
 pub use dense::DenseCholeskySampler;
 pub use fixed_size::{sample_fixed_size, size_distribution};
+pub use mcmc::{McmcConfig, McmcSampler};
 pub use rejection::RejectionSampler;
 pub use tree::{SampleTree, TreeConfig};
 
@@ -40,39 +43,9 @@ pub trait Sampler {
 
 #[cfg(test)]
 pub(crate) mod test_support {
-    //! Shared distribution-exactness machinery for sampler tests.
+    //! Shared distribution-exactness machinery for sampler tests — now a
+    //! thin alias for the public [`crate::util::testing`] module, kept so
+    //! in-module tests read naturally.
 
-    use super::Sampler;
-    use crate::rng::Xoshiro;
-
-    /// Empirical subset distribution over bitmasks for tiny M.
-    pub fn empirical(
-        sampler: &mut dyn Sampler,
-        m: usize,
-        n: usize,
-        rng: &mut Xoshiro,
-    ) -> Vec<f64> {
-        let mut counts = vec![0.0; 1 << m];
-        for _ in 0..n {
-            let y = sampler.sample(rng);
-            let mut mask = 0usize;
-            for i in y {
-                mask |= 1 << i;
-            }
-            counts[mask] += 1.0;
-        }
-        for c in &mut counts {
-            *c /= n as f64;
-        }
-        counts
-    }
-
-    /// Total-variation distance between two distributions.
-    pub fn tv(p: &[f64], q: &[f64]) -> f64 {
-        0.5 * p
-            .iter()
-            .zip(q)
-            .map(|(a, b)| (a - b).abs())
-            .sum::<f64>()
-    }
+    pub use crate::util::testing::{empirical, tv};
 }

@@ -7,6 +7,7 @@ pub mod json;
 pub mod logging;
 pub mod prop;
 pub mod stats;
+pub mod testing;
 pub mod timer;
 
 pub use json::Json;

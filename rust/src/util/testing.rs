@@ -1,0 +1,193 @@
+//! Statistical conformance machinery for sampler testing.
+//!
+//! Promoted out of `sampler::test_support` so integration tests (and
+//! downstream users validating their own kernels) can run the same checks
+//! the in-tree samplers are held to:
+//!
+//! * [`empirical`] — empirical subset distribution over bitmasks, tiny `M`;
+//! * [`tv`] — total-variation distance between two distributions;
+//! * [`conditioned_on_size`] — condition a subset distribution on `|Y| = k`
+//!   (the fixed-size target of the MCMC sampler);
+//! * [`chi_square_gof`] — Pearson chi-square goodness-of-fit with small-bin
+//!   pooling and a Wilson–Hilferty critical value, giving a calibrated
+//!   pass/fail alongside the cruder TV thresholds.
+
+use crate::rng::Xoshiro;
+use crate::sampler::Sampler;
+
+/// Empirical subset distribution over bitmasks for tiny `M` (`M <= 20`)
+/// from an arbitrary draw function — use this for sources that are not a
+/// [`Sampler`] (tree draws, size-conditioned wrappers, chain batches).
+pub fn empirical_from(
+    m: usize,
+    n: usize,
+    rng: &mut Xoshiro,
+    mut draw: impl FnMut(&mut Xoshiro) -> Vec<usize>,
+) -> Vec<f64> {
+    assert!(m <= 20, "empirical distributions are exponential in M");
+    let mut counts = vec![0.0; 1 << m];
+    for _ in 0..n {
+        let mut mask = 0usize;
+        for i in draw(rng) {
+            mask |= 1 << i;
+        }
+        counts[mask] += 1.0;
+    }
+    for c in &mut counts {
+        *c /= n as f64;
+    }
+    counts
+}
+
+/// Empirical subset distribution of a [`Sampler`]: draws `n` samples and
+/// returns frequencies indexed by item bitmask.
+pub fn empirical(sampler: &mut dyn Sampler, m: usize, n: usize, rng: &mut Xoshiro) -> Vec<f64> {
+    empirical_from(m, n, rng, |r| sampler.sample(r))
+}
+
+/// Total-variation distance between two distributions on the same support.
+pub fn tv(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    0.5 * p.iter().zip(q).map(|(a, b)| (a - b).abs()).sum::<f64>()
+}
+
+/// Condition a bitmask-indexed subset distribution on `|Y| = k` — the
+/// exact target of a fixed-size (k-NDPP) sampler.
+pub fn conditioned_on_size(probs: &[f64], k: usize) -> Vec<f64> {
+    let mut out = vec![0.0; probs.len()];
+    let mut mass = 0.0;
+    for (mask, &p) in probs.iter().enumerate() {
+        if (mask as u32).count_ones() as usize == k {
+            out[mask] = p;
+            mass += p;
+        }
+    }
+    assert!(mass > 0.0, "no size-{k} subset has positive probability");
+    for o in &mut out {
+        *o /= mass;
+    }
+    out
+}
+
+/// Result of a chi-square goodness-of-fit test.
+#[derive(Debug, Clone, Copy)]
+pub struct ChiSquare {
+    /// Pearson statistic over the retained bins.
+    pub stat: f64,
+    /// Degrees of freedom (retained bins - 1).
+    pub df: usize,
+    /// Wilson–Hilferty 99.9% critical value for `df`.
+    pub crit_999: f64,
+}
+
+impl ChiSquare {
+    /// True when the empirical distribution is consistent with the expected
+    /// one at the 99.9% level (i.e. a correct sampler fails one run in a
+    /// thousand — strict enough to catch real bugs, loose enough for CI).
+    pub fn passes(&self) -> bool {
+        self.stat < self.crit_999
+    }
+}
+
+/// Pearson chi-square goodness-of-fit of empirical frequencies `freq`
+/// (from `n` draws) against expected probabilities `expected`.  Bins with
+/// expected count `< 5` are pooled into a single bin (dropped entirely when
+/// even the pool stays below 5).  Observing any mass on a zero-probability
+/// bin is an immediate, infinitely significant failure.
+pub fn chi_square_gof(freq: &[f64], expected: &[f64], n: usize) -> ChiSquare {
+    assert_eq!(freq.len(), expected.len());
+    let nf = n as f64;
+    let mut stat = 0.0;
+    let mut bins = 0usize;
+    let mut pool_obs = 0.0;
+    let mut pool_exp = 0.0;
+    for (&f, &p) in freq.iter().zip(expected) {
+        if p <= 0.0 {
+            if f > 0.0 {
+                return ChiSquare { stat: f64::INFINITY, df: 1, crit_999: 0.0 };
+            }
+            continue;
+        }
+        let e = nf * p;
+        let o = nf * f;
+        if e >= 5.0 {
+            stat += (o - e) * (o - e) / e;
+            bins += 1;
+        } else {
+            pool_obs += o;
+            pool_exp += e;
+        }
+    }
+    if pool_exp >= 5.0 {
+        stat += (pool_obs - pool_exp) * (pool_obs - pool_exp) / pool_exp;
+        bins += 1;
+    }
+    assert!(bins >= 2, "chi_square_gof: fewer than two usable bins");
+    let df = bins - 1;
+    ChiSquare { stat, df, crit_999: chi_square_critical(df, 3.090) }
+}
+
+/// Wilson–Hilferty approximation to the chi-square upper quantile at
+/// standard-normal deviate `z` (e.g. `z = 3.090` for 99.9%).  Accurate to
+/// ~2% at `df = 3` and better than 0.5% for `df >= 10`.
+pub fn chi_square_critical(df: usize, z: f64) -> f64 {
+    let d = df as f64;
+    let t = 1.0 - 2.0 / (9.0 * d) + z * (2.0 / (9.0 * d)).sqrt();
+    d * t * t * t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ndpp::{probability, NdppKernel};
+    use crate::sampler::CholeskySampler;
+
+    #[test]
+    fn critical_values_match_tables() {
+        // reference values: chi2.ppf(0.999, df)
+        for (df, want) in [(3usize, 16.27), (10, 29.59), (30, 59.70), (100, 149.45)] {
+            let got = chi_square_critical(df, 3.090);
+            assert!((got - want).abs() < 0.02 * want, "df={df} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn conditioning_keeps_only_size_k_mass() {
+        let mut rng = Xoshiro::seeded(1);
+        let kernel = NdppKernel::random_ondpp(6, 2, &mut rng);
+        let probs = probability::enumerate_probs(&kernel);
+        let cond = conditioned_on_size(&probs, 2);
+        let total: f64 = cond.iter().sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        for (mask, &p) in cond.iter().enumerate() {
+            if (mask as u32).count_ones() != 2 {
+                assert_eq!(p, 0.0, "mask={mask}");
+            }
+        }
+    }
+
+    #[test]
+    fn chi_square_accepts_correct_sampler_and_rejects_wrong_one() {
+        let mut rng = Xoshiro::seeded(2);
+        let kernel = NdppKernel::random_ondpp(6, 2, &mut rng);
+        let want = probability::enumerate_probs(&kernel);
+        let mut s = CholeskySampler::new(&kernel);
+        let n = 30_000;
+        let freq = empirical(&mut s, 6, n, &mut rng);
+        let cs = chi_square_gof(&freq, &want, n);
+        assert!(cs.passes(), "stat={} crit={} df={}", cs.stat, cs.crit_999, cs.df);
+        // a deliberately wrong model (uniform over subsets) must fail hard
+        let uniform = vec![1.0 / want.len() as f64; want.len()];
+        let bad = chi_square_gof(&freq, &uniform, n);
+        assert!(!bad.passes(), "uniform model accepted: stat={}", bad.stat);
+    }
+
+    #[test]
+    fn impossible_event_fails_immediately() {
+        let freq = [0.5, 0.4, 0.1];
+        let expected = [0.6, 0.4, 0.0];
+        let cs = chi_square_gof(&freq, &expected, 1000);
+        assert!(!cs.passes());
+        assert!(cs.stat.is_infinite());
+    }
+}

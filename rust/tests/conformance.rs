@@ -1,0 +1,112 @@
+//! Cross-sampler statistical conformance suite.
+//!
+//! Every sampler family — Dense Cholesky, low-rank Cholesky, tree
+//! rejection, and the fixed-size MCMC up-down chain — is held to the exact
+//! subset probabilities from `ndpp::probability::enumerate_probs` on tiny
+//! ground sets, with BOTH a total-variation threshold (the historical
+//! check) and a calibrated Pearson chi-square goodness-of-fit at the 99.9%
+//! level (`ndpp::util::testing`).  The samplers are then compared pairwise,
+//! so a shared-oracle bug cannot hide behind agreeing implementations.
+
+use ndpp::ndpp::{probability, NdppKernel, Proposal};
+use ndpp::rng::Xoshiro;
+use ndpp::sampler::{
+    sample_fixed_size, CholeskySampler, DenseCholeskySampler, McmcConfig, McmcSampler,
+    RejectionSampler, SampleTree, Sampler, TreeConfig,
+};
+use ndpp::util::testing::{chi_square_gof, conditioned_on_size, empirical, empirical_from, tv};
+
+const N: usize = 30_000;
+const TV_LIMIT: f64 = 0.035; // same threshold the rejection-sampler tests use
+
+fn check_against(
+    name: &str,
+    sampler: &mut dyn Sampler,
+    m: usize,
+    want: &[f64],
+    rng: &mut Xoshiro,
+) -> Vec<f64> {
+    let freq = empirical(sampler, m, N, rng);
+    let d = tv(&freq, want);
+    assert!(d < TV_LIMIT, "{name}: tv={d}");
+    let cs = chi_square_gof(&freq, want, N);
+    assert!(
+        cs.passes(),
+        "{name}: chi2 stat {:.1} > crit {:.1} (df {})",
+        cs.stat,
+        cs.crit_999,
+        cs.df
+    );
+    freq
+}
+
+fn conformance_on(kernel: &NdppKernel, m: usize, mcmc_size: usize, seed: u64) {
+    let mut rng = Xoshiro::seeded(seed);
+    let want = probability::enumerate_probs(kernel);
+
+    let mut chol = CholeskySampler::new(kernel);
+    let f_chol = check_against("cholesky", &mut chol, m, &want, &mut rng);
+
+    let mut dense = DenseCholeskySampler::new(kernel);
+    let f_dense = check_against("dense", &mut dense, m, &want, &mut rng);
+
+    let proposal = Proposal::build(kernel);
+    let tree = SampleTree::build(&proposal.spectral(), TreeConfig { leaf_size: 2 });
+    let mut rej = RejectionSampler::new(kernel, &proposal, &tree);
+    let f_rej = check_against("rejection", &mut rej, m, &want, &mut rng);
+
+    // pairwise agreement between the full-distribution families
+    for (a, fa, b, fb) in [
+        ("cholesky", &f_chol, "dense", &f_dense),
+        ("cholesky", &f_chol, "rejection", &f_rej),
+        ("dense", &f_dense, "rejection", &f_rej),
+    ] {
+        let d = tv(fa, fb);
+        assert!(d < 2.0 * TV_LIMIT, "{a} vs {b}: tv={d}");
+    }
+
+    // the MCMC sampler targets the size-conditioned law at its k
+    let cond = conditioned_on_size(&want, mcmc_size);
+    let mut mcmc = McmcSampler::new(kernel, McmcConfig::for_size(mcmc_size, m));
+    let f_mcmc = check_against("mcmc", &mut mcmc, m, &cond, &mut rng);
+
+    // independent fixed-size construction (size-rejection around the
+    // Cholesky sampler) must agree with the chain
+    let mut inner = CholeskySampler::new(kernel);
+    let counts = empirical_from(m, N, &mut rng, |r| {
+        sample_fixed_size(&mut inner, mcmc_size, 100_000, r).unwrap()
+    });
+    let d = tv(&f_mcmc, &counts);
+    assert!(d < 2.0 * TV_LIMIT, "mcmc vs size-rejected cholesky: tv={d}");
+}
+
+#[test]
+fn conformance_on_ondpp_kernel() {
+    let mut rng = Xoshiro::seeded(91);
+    let kernel = NdppKernel::random_ondpp(6, 2, &mut rng);
+    conformance_on(&kernel, 6, 2, 92);
+}
+
+#[test]
+fn conformance_on_nonorthogonal_kernel() {
+    let mut rng = Xoshiro::seeded(93);
+    let kernel = NdppKernel::random_ndpp(6, 2, &mut rng);
+    conformance_on(&kernel, 6, 2, 94);
+}
+
+#[test]
+fn mcmc_conformance_at_offmode_sizes() {
+    // sizes away from the cardinality mode still mix and conform
+    let mut rng = Xoshiro::seeded(95);
+    let kernel = NdppKernel::random_ondpp(7, 2, &mut rng);
+    let want = probability::enumerate_probs(&kernel);
+    for size in [1usize, 3] {
+        let cond = conditioned_on_size(&want, size);
+        let mut mcmc = McmcSampler::new(&kernel, McmcConfig::for_size(size, 7));
+        let freq = empirical(&mut mcmc, 7, N, &mut rng);
+        let d = tv(&freq, &cond);
+        assert!(d < TV_LIMIT, "size={size}: tv={d}");
+        let cs = chi_square_gof(&freq, &cond, N);
+        assert!(cs.passes(), "size={size}: chi2 {:.1} > {:.1}", cs.stat, cs.crit_999);
+    }
+}

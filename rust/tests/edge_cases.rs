@@ -1,0 +1,196 @@
+//! Linalg / NDPP edge cases: degenerate Youla spectra, tree layouts past
+//! the ground-set size, rank-1 kernels, and ground sets that are not powers
+//! of two.  Conformance checks use the chi-square harness from
+//! `ndpp::util::testing` (calibrated regardless of bin count) rather than
+//! raw TV thresholds, which degrade as the support grows.
+
+use ndpp::linalg::{matrix::dot, qr, Matrix};
+use ndpp::ndpp::youla::{reconstruct, youla_lowrank};
+use ndpp::ndpp::{probability, NdppKernel, Proposal};
+use ndpp::rng::Xoshiro;
+use ndpp::sampler::{
+    CholeskySampler, McmcConfig, McmcSampler, RejectionSampler, SampleTree, Sampler,
+    TreeConfig,
+};
+use ndpp::util::testing::{chi_square_gof, conditioned_on_size, empirical, empirical_from};
+
+// ---- Youla with repeated eigenvalue pairs -------------------------------
+
+/// A skew inner matrix with exactly repeated Youla values that is NOT in
+/// canonical block-diagonal form (so the general decomposition path runs):
+/// rotate `diag([[0,s],[-s,0]], [[0,s],[-s,0]])` by a random orthogonal Q.
+fn rotated_degenerate_skew(s: f64, k: usize, rng: &mut Xoshiro) -> Matrix {
+    assert!(k % 2 == 0);
+    let mut c = Matrix::zeros(k, k);
+    for j in 0..k / 2 {
+        c[(2 * j, 2 * j + 1)] = s;
+        c[(2 * j + 1, 2 * j)] = -s;
+    }
+    let q = qr::orthonormalize(&Matrix::randn(k, k, 1.0, rng));
+    q.matmul(&c).matmul_t(&q)
+}
+
+#[test]
+fn youla_reconstruction_with_repeated_eigenvalue_pairs() {
+    let mut rng = Xoshiro::seeded(11);
+    for &(m, k) in &[(20usize, 4usize), (30, 6)] {
+        let b = qr::orthonormalize(&Matrix::randn(m, k, 1.0, &mut rng));
+        let c = rotated_degenerate_skew(1.25, k, &mut rng);
+        let d = youla_lowrank(&b, &c);
+        // all Youla values collapse to the single repeated sigma
+        assert_eq!(d.sigmas.len(), k / 2, "m={m} k={k}");
+        for &s in &d.sigmas {
+            assert!((s - 1.25).abs() < 1e-8, "sigma={s}");
+        }
+        // reconstruction must hold even though the degenerate invariant
+        // subspace admits infinitely many valid bases
+        let want = b.matmul(&c).matmul_t(&b);
+        let got = reconstruct(&d, m);
+        let err = got.sub(&want).max_abs();
+        assert!(err < 1e-7 * (1.0 + want.max_abs()), "m={m} k={k} err={err}");
+        // returned basis stays orthonormal
+        for a in 0..d.y.cols {
+            for bb in 0..d.y.cols {
+                let want = if a == bb { 1.0 } else { 0.0 };
+                let g = dot(&d.y.col(a), &d.y.col(bb));
+                assert!((g - want).abs() < 1e-7, "a={a} b={bb} dot={g}");
+            }
+        }
+    }
+}
+
+#[test]
+fn proposal_handles_repeated_sigmas_on_ondpp_kernel() {
+    // repeated sigmas through the full proposal pipeline (fast Youla path)
+    let mut rng = Xoshiro::seeded(12);
+    let mut kernel = NdppKernel::random_ondpp(12, 4, &mut rng);
+    kernel.sigma = vec![0.8, 0.8];
+    let p = Proposal::build(&kernel);
+    assert_eq!(p.sigmas, vec![0.8, 0.8]);
+    let want = probability::enumerate_probs(&kernel);
+    let mut chol = CholeskySampler::new(&kernel);
+    let n = 20_000;
+    let freq = empirical(&mut chol, 12, n, &mut rng);
+    let cs = chi_square_gof(&freq, &want, n);
+    assert!(cs.passes(), "chi2 {:.1} > {:.1}", cs.stat, cs.crit_999);
+}
+
+// ---- SampleTree with leaf_size > M --------------------------------------
+
+#[test]
+fn tree_with_leaf_size_beyond_ground_set() {
+    let mut rng = Xoshiro::seeded(21);
+    let kernel = NdppKernel::random_ondpp(9, 2, &mut rng);
+    let proposal = Proposal::build(&kernel);
+    let spectral = proposal.spectral();
+    let want = probability::enumerate_probs_dense(&proposal.dense_lhat());
+    let n = 20_000;
+    for leaf in [9usize, 64, 1024] {
+        let tree = SampleTree::build(&spectral, TreeConfig { leaf_size: leaf });
+        // the whole ground set is one bucket: memory is a single R x R block
+        let r = spectral.rank();
+        assert_eq!(tree.memory_bytes(), r * r * std::mem::size_of::<f64>(), "leaf={leaf}");
+        let counts = empirical_from(9, n, &mut rng, |rg| tree.sample_dpp(rg));
+        let cs = chi_square_gof(&counts, &want, n);
+        assert!(cs.passes(), "leaf={leaf}: chi2 {:.1} > {:.1}", cs.stat, cs.crit_999);
+    }
+}
+
+// ---- rank-1 kernels ------------------------------------------------------
+
+/// A genuinely rank-1 NDPP: only the first column of V is nonzero and the
+/// skew part vanishes, so `L = v v^T` and only the empty set and singletons
+/// carry probability.
+fn rank1_kernel(m: usize, rng: &mut Xoshiro) -> NdppKernel {
+    let mut v = Matrix::zeros(m, 2);
+    for i in 0..m {
+        v[(i, 0)] = rng.normal() * 0.8;
+    }
+    let b = Matrix::randn(m, 2, 0.5, rng);
+    NdppKernel::new(v, b, vec![0.0])
+}
+
+#[test]
+fn rank1_kernel_through_cholesky_and_rejection() {
+    let m = 8;
+    let mut rng = Xoshiro::seeded(31);
+    let kernel = rank1_kernel(m, &mut rng);
+    let want = probability::enumerate_probs(&kernel);
+    // only ∅ and singletons have mass
+    for (mask, &p) in want.iter().enumerate() {
+        if (mask as u32).count_ones() > 1 {
+            assert!(p.abs() < 1e-12, "mask={mask} p={p}");
+        }
+    }
+    let n = 20_000;
+    let mut chol = CholeskySampler::new(&kernel);
+    let f1 = empirical(&mut chol, m, n, &mut rng);
+    let cs = chi_square_gof(&f1, &want, n);
+    assert!(cs.passes(), "cholesky: chi2 {:.1} > {:.1}", cs.stat, cs.crit_999);
+
+    // the proposal collapses onto the target (no skew part): U = 1 and the
+    // tree sampler handles a rank-1 spectral kernel
+    let proposal = Proposal::build(&kernel);
+    assert!((proposal.expected_rejections() - 1.0).abs() < 1e-6);
+    let spectral = proposal.spectral();
+    assert_eq!(spectral.rank(), 1);
+    let tree = SampleTree::build(&spectral, TreeConfig::default());
+    let mut rej = RejectionSampler::new(&kernel, &proposal, &tree);
+    let f2 = empirical(&mut rej, m, n, &mut rng);
+    let cs = chi_square_gof(&f2, &want, n);
+    assert!(cs.passes(), "rejection: chi2 {:.1} > {:.1}", cs.stat, cs.crit_999);
+}
+
+#[test]
+fn rank1_kernel_through_mcmc_singletons() {
+    let m = 8;
+    let mut rng = Xoshiro::seeded(32);
+    let kernel = rank1_kernel(m, &mut rng);
+    let want = conditioned_on_size(&probability::enumerate_probs(&kernel), 1);
+    let mut mcmc = McmcSampler::new(&kernel, McmcConfig::for_size(1, m));
+    let n = 20_000;
+    let freq = empirical(&mut mcmc, m, n, &mut rng);
+    let cs = chi_square_gof(&freq, &want, n);
+    assert!(cs.passes(), "chi2 {:.1} > {:.1}", cs.stat, cs.crit_999);
+}
+
+// ---- M not a power of two ------------------------------------------------
+
+#[test]
+fn odd_ground_set_sizes_conform_across_leaf_layouts() {
+    // M = 11 stresses uneven tree splits at every level
+    let m = 11;
+    let mut rng = Xoshiro::seeded(41);
+    let kernel = NdppKernel::random_ondpp(m, 2, &mut rng);
+    let proposal = Proposal::build(&kernel);
+    let spectral = proposal.spectral();
+    let want = probability::enumerate_probs_dense(&proposal.dense_lhat());
+    let n = 20_000;
+    for leaf in [1usize, 3, 4] {
+        let tree = SampleTree::build(&spectral, TreeConfig { leaf_size: leaf });
+        let counts = empirical_from(m, n, &mut rng, |r| tree.sample_dpp(r));
+        let cs = chi_square_gof(&counts, &want, n);
+        assert!(cs.passes(), "leaf={leaf}: chi2 {:.1} > {:.1}", cs.stat, cs.crit_999);
+    }
+}
+
+#[test]
+fn odd_ground_set_full_stack_roundtrip() {
+    // the full service preprocessing + every sampler on M = 37
+    use ndpp::coordinator::ModelEntry;
+    let mut rng = Xoshiro::seeded(42);
+    let kernel = NdppKernel::random_ondpp(37, 4, &mut rng);
+    let entry = ModelEntry::prepare("odd", kernel, TreeConfig { leaf_size: 4 });
+    let mut chol = CholeskySampler::from_marginal(&entry.marginal);
+    let mut rej = RejectionSampler::new(&entry.kernel, &entry.proposal, &entry.tree);
+    let mut mcmc = McmcSampler::new(&entry.kernel, entry.mcmc);
+    let samplers: [(&str, &mut dyn Sampler); 3] =
+        [("cholesky", &mut chol), ("rejection", &mut rej), ("mcmc", &mut mcmc)];
+    for (name, s) in samplers {
+        for _ in 0..20 {
+            let y = s.sample(&mut rng);
+            assert!(y.iter().all(|&i| i < 37), "{name}: {y:?}");
+            assert!(y.windows(2).all(|w| w[0] < w[1]), "{name}: {y:?}");
+        }
+    }
+}

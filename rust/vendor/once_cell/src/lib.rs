@@ -1,0 +1,103 @@
+//! Minimal in-tree substitute for the `once_cell` crate, built on
+//! `std::sync::OnceLock` (crates.io is unavailable in this environment).
+//! Only the `sync` flavour is provided, with the subset of the API the
+//! workspace uses.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// Thread-safe cell that can be written to at most once.
+    pub struct OnceCell<T>(OnceLock<T>);
+
+    impl<T> OnceCell<T> {
+        pub const fn new() -> OnceCell<T> {
+            OnceCell(OnceLock::new())
+        }
+
+        pub fn get(&self) -> Option<&T> {
+            self.0.get()
+        }
+
+        pub fn set(&self, value: T) -> Result<(), T> {
+            self.0.set(value)
+        }
+
+        pub fn get_or_init<F: FnOnce() -> T>(&self, f: F) -> &T {
+            self.0.get_or_init(f)
+        }
+
+        /// Initialize with a fallible constructor.  On `Err` the cell is
+        /// left empty.  (Unlike the real crate, two racing initializers may
+        /// both run `f`; one value wins — acceptable for the singleton use
+        /// here.)
+        pub fn get_or_try_init<F, E>(&self, f: F) -> Result<&T, E>
+        where
+            F: FnOnce() -> Result<T, E>,
+        {
+            if let Some(v) = self.0.get() {
+                return Ok(v);
+            }
+            let value = f()?;
+            Ok(self.0.get_or_init(|| value))
+        }
+    }
+
+    impl<T> Default for OnceCell<T> {
+        fn default() -> OnceCell<T> {
+            OnceCell::new()
+        }
+    }
+
+    /// Value initialized on first access.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init }
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            self.cell.get_or_init(|| (self.init)())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::{Lazy, OnceCell};
+
+    static CELL: OnceCell<u32> = OnceCell::new();
+    static LAZY: Lazy<u32> = Lazy::new(|| 41 + 1);
+
+    #[test]
+    fn once_cell_init_paths() {
+        assert!(CELL.get().is_none() || CELL.get() == Some(&7));
+        let v: Result<&u32, ()> = CELL.get_or_try_init(|| Ok(7));
+        assert_eq!(v.unwrap(), &7);
+        assert_eq!(CELL.get_or_init(|| 9), &7);
+        assert_eq!(CELL.set(8), Err(8));
+    }
+
+    #[test]
+    fn try_init_error_leaves_cell_empty() {
+        let cell: OnceCell<u32> = OnceCell::new();
+        let r: Result<&u32, &str> = cell.get_or_try_init(|| Err("nope"));
+        assert!(r.is_err());
+        assert!(cell.get().is_none());
+        assert_eq!(cell.get_or_try_init(|| Ok::<_, &str>(3)).unwrap(), &3);
+    }
+
+    #[test]
+    fn lazy_evaluates_once() {
+        assert_eq!(*LAZY, 42);
+        assert_eq!(*LAZY, 42);
+    }
+}

@@ -1,0 +1,233 @@
+//! Type-compatible in-tree **stub** of the `xla` crate (docs.rs/xla 0.1.6).
+//!
+//! The real crate links the `xla_extension` C++ library and provides a
+//! PJRT CPU client; neither the library nor crates.io is available in this
+//! offline environment.  This stub keeps the exact type surface the main
+//! crate compiles against, with runtime behaviour matching a machine where
+//! PJRT is not installed:
+//!
+//! * [`PjRtClient::cpu`] always fails, so `XlaRuntime::global()` errors and
+//!   `ModelOps::discover()` returns `None` — every caller then takes its
+//!   pure-rust fallback path (the design the main crate already tests).
+//! * [`Literal`] is a real little container (f32/i32 + dims) so the
+//!   host-side literal conversion helpers and their unit tests work.
+//!
+//! Swapping the real crate back in is a one-line change in
+//! `rust/Cargo.toml`; no source edits are required.
+
+use std::fmt;
+
+/// Stub error type (mirrors `xla::Error` as a displayable opaque error).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: xla runtime unavailable (in-tree stub build; pure-rust fallbacks active)"
+    ))
+}
+
+// ---- literals -----------------------------------------------------------
+
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn wrap(data: Vec<Self>) -> Payload;
+    #[doc(hidden)]
+    fn unwrap(payload: &Payload) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Payload {
+        Payload::F32(data)
+    }
+    fn unwrap(payload: &Payload) -> Option<Vec<f32>> {
+        match payload {
+            Payload::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Payload {
+        Payload::I32(data)
+    }
+    fn unwrap(payload: &Payload) -> Option<Vec<i32>> {
+        match payload {
+            Payload::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side tensor literal.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            payload: T::wrap(data.to_vec()),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(value: T) -> Literal {
+        Literal { payload: T::wrap(vec![value]), dims: Vec::new() }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Same data, new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    /// Shape of this literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy out the elements, checking the element type.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload).ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// First element, checking the element type.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".into()))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(parts) => Ok(parts),
+            _ => Err(Error("not a tuple literal".into())),
+        }
+    }
+}
+
+// ---- compilation / execution (always unavailable in the stub) -----------
+
+/// Parsed HLO module (never constructible in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parsing HLO text {path}")))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle (construction always fails in the stub).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("creating PJRT CPU client"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling computation"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("transferring buffer to host"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_container_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(m.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+        let s = Literal::scalar(5i32);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 5);
+        assert!(s.clone().to_tuple().is_err());
+    }
+
+    #[test]
+    fn runtime_paths_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
