@@ -1,0 +1,16 @@
+//! `cargo bench --bench linalg_backends [-- --quick]`
+//!
+//! Sweeps every linalg backend over GEMM shapes and end-to-end registry
+//! preprocessing, prints comparison tables, and writes `BENCH_linalg.json`
+//! (path override: `NDPP_BENCH_OUT`).  Quick mode — `--quick` or
+//! `NDPP_BENCH_QUICK=1` — is what CI runs.
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("NDPP_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let out = std::env::var("NDPP_BENCH_OUT").unwrap_or_else(|_| "BENCH_linalg.json".into());
+    if let Err(e) = ndpp::bench::linalg_backends::run(quick, &out) {
+        eprintln!("linalg_backends bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -28,7 +28,6 @@ fn main() {
             *s = 0.1;
         }
         kernel.orthogonalize();
-    kernel.rescale_expected_size(8.0);
         kernel.rescale_expected_size(8.0);
         let proposal = Proposal::build(&kernel);
         let spectral = proposal.spectral();

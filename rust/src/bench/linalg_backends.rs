@@ -1,0 +1,179 @@
+//! `cargo bench --bench linalg_backends` — the compute-backend sweep.
+//!
+//! Two measurement families, each run under every [`BackendKind`]:
+//!
+//! 1. **GEMM shapes** — square products at 128/256/512 (plus 1024 in full
+//!    mode) and the skinny `M x 2K` panel shapes the samplers actually
+//!    produce.  Backends are invoked directly (no global flipping), so the
+//!    comparison is apples-to-apples on identical inputs.
+//! 2. **End-to-end preprocessing** — [`ModelEntry::prepare`] (marginal
+//!    kernel + Youla/proposal + spectral + tree) at `M ∈ {1k, 4k, 16k}`
+//!    (quick mode stops at 4k), with the process-wide backend pinned per
+//!    measurement — this is the registry path a deployment pays on every
+//!    model registration.
+//!
+//! Results are printed as tables and written as `BENCH_linalg.json`
+//! (override the path with `NDPP_BENCH_OUT`), the first entry of the
+//! repo's `BENCH_*` trajectory.  CI runs quick mode and uploads the JSON
+//! as an artifact.
+
+use anyhow::Result;
+
+use crate::bench::experiments::tablelike_kernel;
+use crate::bench::runner::{BenchRunner, Table};
+use crate::coordinator::registry::ModelEntry;
+use crate::linalg::backend::{self, Backend as _, BackendKind};
+use crate::linalg::Matrix;
+use crate::rng::Xoshiro;
+use crate::sampler::TreeConfig;
+use crate::util::json::Json;
+use crate::util::timer::fmt_secs;
+
+/// Per-part rank for the preprocessing sweep (2K = 64 panel width).
+const PREP_K: usize = 32;
+
+/// Run the sweep; returns the JSON that was also written to `out_path`.
+pub fn run(quick: bool, out_path: &str) -> Result<Json> {
+    let runner = if quick {
+        BenchRunner { warmup: 1, iters: 5, max_secs: 3.0 }
+    } else {
+        BenchRunner { warmup: 2, iters: 12, max_secs: 20.0 }
+    };
+
+    println!(
+        "linalg_backends: {} mode, {} worker threads",
+        if quick { "quick" } else { "full" },
+        backend::configured_threads()
+    );
+
+    // ---- GEMM shape sweep -------------------------------------------------
+    let mut shapes: Vec<(usize, usize, usize)> = vec![
+        (128, 128, 128),
+        (256, 256, 256),
+        (512, 512, 512),
+        // skinny panel products: Z (M x 2K) against 2K x 2K inner matrices
+        (4096, 64, 64),
+    ];
+    if !quick {
+        shapes.push((1024, 1024, 1024));
+        shapes.push((16384, 64, 64));
+    }
+    let (gemm_table, gemm_rows) = gemm_sweep(&runner, &shapes);
+    println!("\n== GEMM by backend ==\n{}", gemm_table.render());
+
+    // ---- end-to-end registry preprocessing --------------------------------
+    let ms: Vec<usize> = if quick {
+        vec![1024, 4096]
+    } else {
+        vec![1024, 4096, 16384]
+    };
+    let saved = backend::active_kind();
+    let mut prep_table = Table::new(&["M", "naive", "blocked", "speedup"]);
+    let mut prep_rows: Vec<Json> = Vec::new();
+    for &m in &ms {
+        let mut rng = Xoshiro::seeded(m as u64);
+        let kernel = tablelike_kernel(m, PREP_K, &mut rng);
+        let mut means = Vec::new();
+        for kind in BackendKind::ALL {
+            backend::set_active(kind);
+            let meas = runner.measure(kind.as_str(), || {
+                let _ = ModelEntry::prepare("bench", kernel.clone(), TreeConfig::default());
+            });
+            means.push(meas.mean());
+        }
+        let (naive_s, blocked_s) = (means[0], means[1]);
+        let speedup = naive_s / blocked_s.max(1e-12);
+        prep_table.row(vec![
+            format!("{m}"),
+            fmt_secs(naive_s),
+            fmt_secs(blocked_s),
+            format!("x{speedup:.2}"),
+        ]);
+        prep_rows.push(
+            Json::obj()
+                .with("m", m)
+                .with("k", PREP_K)
+                .with("naive_s", naive_s)
+                .with("blocked_s", blocked_s)
+                .with("speedup", speedup),
+        );
+    }
+    backend::set_active(saved);
+    println!(
+        "== registry preprocessing (marginal + proposal + spectral + tree, K={PREP_K}) ==\n{}",
+        prep_table.render()
+    );
+
+    let json = Json::obj()
+        .with("bench", "linalg_backends")
+        .with("quick", quick)
+        .with("threads", backend::configured_threads())
+        .with("gemm", Json::Arr(gemm_rows))
+        .with("preprocess", Json::Arr(prep_rows));
+    std::fs::write(out_path, json.to_string_pretty())?;
+    println!("(written to {out_path})");
+    Ok(json)
+}
+
+/// Measure `gemm` on each backend for every shape.  Backends are invoked
+/// as instances — the process-global selection is untouched, so this part
+/// is safe to exercise from unit tests running next to other tests.
+fn gemm_sweep(runner: &BenchRunner, shapes: &[(usize, usize, usize)]) -> (Table, Vec<Json>) {
+    let mut table = Table::new(&["shape (m x k x n)", "naive", "blocked", "speedup"]);
+    let mut rows: Vec<Json> = Vec::new();
+    for &(m, k, n) in shapes {
+        let mut rng = Xoshiro::seeded((m * 31 + n) as u64);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut means = Vec::new();
+        for kind in BackendKind::ALL {
+            let be = kind.instance();
+            let meas = runner.measure(kind.as_str(), || {
+                let _ = be.gemm(&a, &b);
+            });
+            means.push(meas.mean());
+        }
+        let (naive_s, blocked_s) = (means[0], means[1]);
+        let speedup = naive_s / blocked_s.max(1e-12);
+        table.row(vec![
+            format!("{m} x {k} x {n}"),
+            fmt_secs(naive_s),
+            fmt_secs(blocked_s),
+            format!("x{speedup:.2}"),
+        ]);
+        rows.push(
+            Json::obj()
+                .with("m", m)
+                .with("k", k)
+                .with("n", n)
+                .with("naive_s", naive_s)
+                .with("blocked_s", blocked_s)
+                .with("speedup", speedup),
+        );
+    }
+    (table, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: the full `run()` (which pins backends process-wide for the
+    // preprocessing sweep) is deliberately NOT exercised here — flipping
+    // the global backend would race with other lib tests in this binary.
+    // It runs in its own process via `cargo bench --bench linalg_backends`
+    // (quick mode in CI).
+
+    #[test]
+    fn gemm_sweep_produces_timings() {
+        let runner = BenchRunner { warmup: 1, iters: 3, max_secs: 0.5 };
+        let (table, rows) = gemm_sweep(&runner, &[(24, 16, 24), (33, 9, 7)]);
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            assert!(row.f64_or("naive_s", -1.0) > 0.0);
+            assert!(row.f64_or("blocked_s", -1.0) > 0.0);
+            assert!(row.f64_or("speedup", -1.0) > 0.0);
+        }
+        assert!(table.render().contains("24 x 16 x 24"));
+    }
+}

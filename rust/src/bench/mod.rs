@@ -2,7 +2,8 @@
 //! that regenerate every table and figure of the paper's evaluation
 //! (DESIGN.md §5 experiment index).
 
-pub mod runner;
 pub mod experiments;
+pub mod linalg_backends;
+pub mod runner;
 
 pub use runner::{BenchRunner, Measurement};

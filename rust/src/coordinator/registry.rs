@@ -10,6 +10,7 @@ use std::sync::{Arc, RwLock};
 
 use anyhow::{anyhow, Result};
 
+use crate::linalg::backend::{self, BackendKind};
 use crate::ndpp::{MarginalKernel, NdppKernel, Proposal};
 use crate::sampler::{McmcConfig, SampleTree, TreeConfig};
 
@@ -22,15 +23,26 @@ pub enum SamplerKind {
     Rejection,
     /// fixed-size up-down Metropolis chain (Han et al. 2022 follow-up)
     Mcmc,
+    /// dense `O(M^3)` Algorithm 1 LHS baseline — small-M debugging and
+    /// conformance runs only (capped at [`SamplerKind::DENSE_MAX_M`])
+    Dense,
 }
 
 impl SamplerKind {
+    /// Largest ground-set size a [`SamplerKind::Dense`] request is served
+    /// at: each sample is `O(M^3)` time / `O(M^2)` memory, so anything
+    /// bigger is a caller mistake, not a workload.
+    pub const DENSE_MAX_M: usize = 4096;
+
     pub fn parse(s: &str) -> Result<SamplerKind> {
         match s {
             "cholesky" => Ok(SamplerKind::Cholesky),
             "rejection" | "tree" => Ok(SamplerKind::Rejection),
             "mcmc" | "updown" => Ok(SamplerKind::Mcmc),
-            other => Err(anyhow!("unknown sampler '{other}' (cholesky|rejection|mcmc)")),
+            "dense" => Ok(SamplerKind::Dense),
+            other => {
+                Err(anyhow!("unknown sampler '{other}' (cholesky|rejection|mcmc|dense)"))
+            }
         }
     }
 
@@ -39,12 +51,17 @@ impl SamplerKind {
             SamplerKind::Cholesky => "cholesky",
             SamplerKind::Rejection => "rejection",
             SamplerKind::Mcmc => "mcmc",
+            SamplerKind::Dense => "dense",
         }
     }
 
     /// All algorithms, for sweep-style tests and benches.
-    pub const ALL: [SamplerKind; 3] =
-        [SamplerKind::Cholesky, SamplerKind::Rejection, SamplerKind::Mcmc];
+    pub const ALL: [SamplerKind; 4] = [
+        SamplerKind::Cholesky,
+        SamplerKind::Rejection,
+        SamplerKind::Mcmc,
+        SamplerKind::Dense,
+    ];
 }
 
 /// A registered model with all sampler preprocessing.
@@ -57,6 +74,9 @@ pub struct ModelEntry {
     /// default chain configuration for [`SamplerKind::Mcmc`] requests
     /// (size from the marginal trace)
     pub mcmc: McmcConfig,
+    /// compute backend active when this model was preprocessed (recorded
+    /// so deployments can audit which kernels produced the cached state)
+    pub backend: BackendKind,
     /// wall-clock seconds spent in each preprocessing stage
     pub prep_seconds: PrepTimes,
 }
@@ -92,6 +112,7 @@ impl ModelEntry {
             proposal,
             tree,
             mcmc,
+            backend: backend::active_kind(),
             prep_seconds: PrepTimes {
                 marginal: (t1 - t0).as_secs_f64(),
                 spectral: (t2 - t1).as_secs_f64(),
@@ -167,12 +188,33 @@ mod tests {
         assert_eq!(SamplerKind::parse("tree").unwrap(), SamplerKind::Rejection);
         assert_eq!(SamplerKind::parse("mcmc").unwrap(), SamplerKind::Mcmc);
         assert_eq!(SamplerKind::parse("updown").unwrap(), SamplerKind::Mcmc);
+        assert_eq!(SamplerKind::parse("dense").unwrap(), SamplerKind::Dense);
         assert!(SamplerKind::parse("bogus").is_err());
         assert_eq!(SamplerKind::Rejection.as_str(), "rejection");
         assert_eq!(SamplerKind::Mcmc.as_str(), "mcmc");
+        assert_eq!(SamplerKind::Dense.as_str(), "dense");
         for kind in SamplerKind::ALL {
             assert_eq!(SamplerKind::parse(kind.as_str()).unwrap(), kind);
         }
+    }
+
+    #[test]
+    fn prepare_records_active_backend() {
+        // bracket the prepare with two reads: another test may legitimately
+        // flip the process-global backend concurrently (set_active is a
+        // public config surface), so assert membership, not equality
+        let before = backend::active_kind();
+        let mut rng = Xoshiro::seeded(3);
+        let kernel = NdppKernel::random_ondpp(24, 4, &mut rng);
+        let entry = ModelEntry::prepare("m3", kernel, TreeConfig::default());
+        let after = backend::active_kind();
+        assert!(
+            entry.backend == before || entry.backend == after,
+            "recorded {:?}, saw {:?}/{:?}",
+            entry.backend,
+            before,
+            after
+        );
     }
 
     #[test]

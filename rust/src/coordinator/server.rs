@@ -4,6 +4,7 @@
 //!
 //! ```text
 //! -> {"op":"sample","model":"books","n":4,"seed":11,"algo":"rejection"}
+//!    (algo: cholesky | rejection | mcmc | dense)
 //! <- {"ok":true,"seed":11,"proposals":9,"latency_s":0.004,
 //!     "samples":[[3,17],[4],[],[8,90,411]]}
 //! -> {"op":"models"}
@@ -234,6 +235,11 @@ mod tests {
         assert_eq!(s1.len(), 3);
         let c = client.sample("toy", 2, 1, "cholesky").unwrap();
         assert_eq!(c.len(), 2);
+        // the dense O(M^3) baseline is reachable over the wire at small M
+        let d1 = client.sample("toy", 2, 8, "dense").unwrap();
+        let d2 = client.sample("toy", 2, 8, "dense").unwrap();
+        assert_eq!(d1, d2);
+        assert_eq!(d1.len(), 2);
         // error paths
         let bad = client.call(&Json::obj().with("op", "sample").with("model", "nope")).unwrap();
         assert_eq!(bad.get("ok").and_then(|b| b.as_bool()), Some(false));

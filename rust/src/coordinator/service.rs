@@ -23,9 +23,12 @@ use anyhow::Result;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::registry::{ModelEntry, Registry, SamplerKind};
+use crate::linalg::backend::{self, BackendKind};
 use crate::ndpp::NdppKernel;
 use crate::rng::Xoshiro;
-use crate::sampler::{CholeskySampler, McmcSampler, RejectionSampler, Sampler, TreeConfig};
+use crate::sampler::{
+    CholeskySampler, DenseCholeskySampler, McmcSampler, RejectionSampler, Sampler, TreeConfig,
+};
 use crate::util::Timer;
 
 /// Service tuning knobs.
@@ -37,6 +40,9 @@ pub struct ServiceConfig {
     /// flush a model's queue immediately at this many pending requests
     pub max_batch: usize,
     pub tree: TreeConfig,
+    /// pin the process-wide linalg backend for this deployment
+    /// (`None` = leave the `NDPP_BACKEND` / default selection in place)
+    pub backend: Option<BackendKind>,
 }
 
 impl Default for ServiceConfig {
@@ -48,6 +54,7 @@ impl Default for ServiceConfig {
             flush_interval_us: 500,
             max_batch: 64,
             tree: TreeConfig::default(),
+            backend: None,
         }
     }
 }
@@ -92,6 +99,9 @@ pub struct SamplingService {
 
 impl SamplingService {
     pub fn new(config: ServiceConfig) -> SamplingService {
+        if let Some(kind) = config.backend {
+            backend::set_active(kind);
+        }
         let registry = Arc::new(Registry::new());
         let pool = Arc::new(WorkerPool::new(config.workers));
         let metrics = Arc::new(Metrics::new());
@@ -137,11 +147,12 @@ impl SamplingService {
         let entry = ModelEntry::prepare(name, kernel, self.config.tree);
         crate::info!(
             "service",
-            "registered '{name}' (M={}, 2K={}, E[rejections]={:.2}, tree={}B)",
+            "registered '{name}' (M={}, 2K={}, E[rejections]={:.2}, tree={}B, backend={})",
             entry.kernel.m(),
             2 * entry.kernel.k(),
             entry.proposal.expected_rejections(),
-            entry.tree.memory_bytes()
+            entry.tree.memory_bytes(),
+            entry.backend.as_str()
         );
         self.registry.insert(entry);
     }
@@ -230,66 +241,97 @@ impl SamplingService {
     /// sampler's scratch state is reused across the whole group.  Every
     /// sampler (including the MCMC chain, which restarts per `sample()`
     /// call) is a pure function of `(model, request seed)`, so reuse never
-    /// leaks state between requests.
+    /// leaks state between requests.  A request the model cannot serve
+    /// (e.g. [`SamplerKind::Dense`] beyond its size cap) gets an `Err`
+    /// reply without poisoning the rest of the batch.
     fn run_batch(entry: &ModelEntry, metrics: &Metrics, batch: Vec<Pending>) {
         let mut cholesky: Option<CholeskySampler<'_>> = None;
         let mut rejection: Option<RejectionSampler<'_>> = None;
         let mut mcmc: Option<McmcSampler<'_>> = None;
+        let mut dense: Option<DenseCholeskySampler> = None;
 
         for p in batch {
             let mut rng = Xoshiro::seeded(p.seed);
             // unit of work per sample: proposal draws for the rejection
-            // sampler, chain steps for MCMC, one sweep for cholesky
+            // sampler, chain steps for MCMC, one sweep for cholesky/dense
             let mut proposals = 0u64;
-            let samples: Vec<Vec<usize>> = match p.req.kind {
+            let result: Result<Vec<Vec<usize>>> = match p.req.kind {
                 SamplerKind::Cholesky => {
                     let s = cholesky
                         .get_or_insert_with(|| CholeskySampler::from_marginal(&entry.marginal));
-                    (0..p.req.n)
+                    Ok((0..p.req.n)
                         .map(|_| {
                             proposals += 1;
                             s.sample(&mut rng)
                         })
-                        .collect()
+                        .collect())
                 }
                 SamplerKind::Rejection => {
                     let s = rejection.get_or_insert_with(|| {
                         RejectionSampler::new(&entry.kernel, &entry.proposal, &entry.tree)
                     });
-                    (0..p.req.n)
+                    Ok((0..p.req.n)
                         .map(|_| {
                             let y = s.sample(&mut rng);
                             proposals += s.last_proposals as u64;
                             y
                         })
-                        .collect()
+                        .collect())
                 }
                 SamplerKind::Mcmc => {
                     let s =
                         mcmc.get_or_insert_with(|| McmcSampler::new(&entry.kernel, entry.mcmc));
-                    (0..p.req.n)
+                    Ok((0..p.req.n)
                         .map(|_| {
                             let y = s.sample(&mut rng);
                             proposals += s.last_steps as u64;
                             y
                         })
-                        .collect()
+                        .collect())
+                }
+                SamplerKind::Dense => {
+                    if entry.kernel.m() > SamplerKind::DENSE_MAX_M {
+                        Err(anyhow::anyhow!(
+                            "dense sampler is O(M^3) and capped at M <= {}; model '{}' has M = {} \
+                             (use cholesky for an exact linear-time sample)",
+                            SamplerKind::DENSE_MAX_M,
+                            entry.name,
+                            entry.kernel.m()
+                        ))
+                    } else {
+                        let s = dense
+                            .get_or_insert_with(|| DenseCholeskySampler::new(&entry.kernel));
+                        Ok((0..p.req.n)
+                            .map(|_| {
+                                proposals += 1;
+                                s.sample(&mut rng)
+                            })
+                            .collect())
+                    }
                 }
             };
             let latency = p.enqueued.secs();
-            metrics.record_algo(
-                &entry.name,
-                p.req.kind.as_str(),
-                latency,
-                p.req.n as u64,
-                proposals,
-            );
-            let _ = p.reply.send(Ok(SampleResponse {
-                samples,
-                proposals,
-                seed: p.seed,
-                latency_secs: latency,
-            }));
+            match result {
+                Ok(samples) => {
+                    metrics.record_algo(
+                        &entry.name,
+                        p.req.kind.as_str(),
+                        latency,
+                        p.req.n as u64,
+                        proposals,
+                    );
+                    let _ = p.reply.send(Ok(SampleResponse {
+                        samples,
+                        proposals,
+                        seed: p.seed,
+                        latency_secs: latency,
+                    }));
+                }
+                Err(e) => {
+                    metrics.record_error(&entry.name);
+                    let _ = p.reply.send(Err(e));
+                }
+            }
         }
     }
 }
@@ -312,7 +354,7 @@ mod tests {
             workers: 2,
             flush_interval_us: 200,
             max_batch: 8,
-            tree: TreeConfig::default(),
+            ..Default::default()
         });
         let mut rng = Xoshiro::seeded(3);
         svc.register("test", NdppKernel::random_ondpp(m, k, &mut rng));
@@ -379,6 +421,54 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn dense_requests_beyond_cap_error_without_poisoning_batch() {
+        let svc = SamplingService::new(ServiceConfig {
+            workers: 1,
+            flush_interval_us: 200,
+            max_batch: 8,
+            ..Default::default()
+        });
+        let mut rng = Xoshiro::seeded(9);
+        svc.register(
+            "big",
+            NdppKernel::random_ondpp(SamplerKind::DENSE_MAX_M + 8, 4, &mut rng),
+        );
+        let dense_rx = svc.submit(SampleRequest {
+            model: "big".into(),
+            n: 1,
+            seed: Some(1),
+            kind: SamplerKind::Dense,
+        });
+        let chol_rx = svc.submit(SampleRequest {
+            model: "big".into(),
+            n: 2,
+            seed: Some(2),
+            kind: SamplerKind::Cholesky,
+        });
+        let err = dense_rx.recv().unwrap();
+        assert!(err.is_err(), "oversized dense request must be rejected");
+        assert!(format!("{:#}", err.unwrap_err()).contains("dense sampler"));
+        // the same batch's cholesky request still succeeds
+        let ok = chol_rx.recv().unwrap().unwrap();
+        assert_eq!(ok.samples.len(), 2);
+    }
+
+    #[test]
+    fn config_can_pin_backend() {
+        // pinning the (default) blocked backend is a no-op but must stick
+        let svc = SamplingService::new(ServiceConfig {
+            workers: 1,
+            backend: Some(BackendKind::Blocked),
+            ..Default::default()
+        });
+        assert_eq!(backend::active_kind(), BackendKind::Blocked);
+        let mut rng = Xoshiro::seeded(4);
+        svc.register("pinned", NdppKernel::random_ondpp(24, 4, &mut rng));
+        let entry = svc.registry().get("pinned").unwrap();
+        assert_eq!(entry.backend, BackendKind::Blocked);
     }
 
     #[test]

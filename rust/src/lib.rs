@@ -64,6 +64,30 @@
 //!   `O(k^2 + kK)` no matter how large `U` gets.  Prefer it when
 //!   `Proposal::expected_rejections()` is large (rule of thumb: over a few
 //!   hundred) or when the workload wants exactly-k-item samples.
+//! * [`DenseCholeskySampler`](sampler::DenseCholeskySampler) — the dense
+//!   `O(M^3)` baseline, exposed end to end (`SamplerKind::Dense`, service
+//!   dispatch, wire protocol, CLI `--algo dense`) for small-M debugging
+//!   and conformance runs.
+//!
+//! ## Choosing a compute backend
+//!
+//! Every GEMM-shaped hot path — marginal-kernel and proposal Gram
+//! matrices, spectral lifting, tree node statistics, QR panel updates, the
+//! incremental-minor refreshes — routes through the pluggable
+//! [`linalg::backend`] layer:
+//!
+//! * `blocked` (default) — cache-blocked kernels, multithreaded over row
+//!   bands (`available_parallelism`, capped by `NDPP_BACKEND_THREADS`).
+//! * `naive` — the single-threaded reference loops, kept as the
+//!   correctness oracle the blocked kernels are property-tested against
+//!   (`tests/backend_equivalence.rs`).
+//!
+//! Select per process with `NDPP_BACKEND=naive|blocked`, programmatically
+//! with [`linalg::backend::set_active`], per deployment with
+//! [`coordinator::ServiceConfig`]'s `backend` field, or per CLI run with
+//! `--backend`.  `cargo bench --bench linalg_backends` sweeps both
+//! backends over GEMM shapes and end-to-end registry preprocessing and
+//! writes `BENCH_linalg.json`.
 
 pub mod bench;
 pub mod coordinator;
@@ -78,7 +102,7 @@ pub mod util;
 
 /// Convenient re-exports of the main public types.
 pub mod prelude {
-    pub use crate::linalg::Matrix;
+    pub use crate::linalg::{BackendKind, Matrix};
     pub use crate::ndpp::{NdppKernel, Proposal};
     pub use crate::rng::Xoshiro;
     pub use crate::sampler::{

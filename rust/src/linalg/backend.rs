@@ -1,0 +1,952 @@
+//! Pluggable dense compute backends — every GEMM-shaped hot path in the
+//! samplers routes through one of these.
+//!
+//! The NDPP samplers bottom out in a handful of BLAS-shaped kernels:
+//! `Z^T Z` Gram matrices (marginal kernel, proposal, ONDPP constraints),
+//! `Z @ W` panel products (marginals, spectral lifting), the per-node
+//! `sum_j z_j z_j^T` statistics of the sample tree, Householder panel
+//! updates in QR, and the small mat-vec / rank-1 steps of the incremental
+//! minors.  A [`Backend`] supplies those primitives; callers pick one via
+//! [`active`] (process-wide default, `NDPP_BACKEND=naive|blocked`), a
+//! [`crate::coordinator::ServiceConfig`] pin, or by holding an instance
+//! directly (as the equivalence tests do).
+//!
+//! Two implementations ship today:
+//!
+//! * [`NaiveBackend`] — the original reference loops, kept verbatim as the
+//!   correctness oracle.  Single-threaded, no blocking.
+//! * [`BlockedBackend`] — cache-blocked kernels (k-panelized GEMM with a
+//!   4-row register tile, tiled transpose, banded SYRK) that split work
+//!   over row bands with `std::thread::scope` once an operation is large
+//!   enough to amortize thread spawn.  Thread count comes from
+//!   `available_parallelism`, overridable with `NDPP_BACKEND_THREADS`.
+//!
+//! Determinism: for a fixed input shape every output element is accumulated
+//! in a fixed order that does not depend on the number of worker threads,
+//! so results are reproducible across runs on the same build.  The two
+//! backends may differ from each other by normal floating-point
+//! re-association (bounded well below the 1e-10 the equivalence suite
+//! enforces); samples remain reproducible because a process sticks to one
+//! backend.
+//!
+//! Future backends (SIMD microkernels, an XLA/PJRT device backend via
+//! [`crate::runtime`]) only need to implement the trait and register a
+//! [`BackendKind`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::matrix::{dot, Matrix};
+
+/// Dense compute primitives over row-major [`Matrix`] data.
+///
+/// Shape contracts (checked with `assert!` in every implementation):
+///
+/// | op | inputs | result |
+/// |---|---|---|
+/// | [`gemm`](Backend::gemm) | `A (m x k)`, `B (k x n)` | `A B (m x n)` |
+/// | [`gemm_tn`](Backend::gemm_tn) | `A (m x p)`, `B (m x n)` | `A^T B (p x n)` |
+/// | [`gemm_nt`](Backend::gemm_nt) | `A (m x k)`, `B (n x k)` | `A B^T (m x n)` |
+/// | [`syrk`](Backend::syrk) | rows `lo..hi` of `A (m x p)` | `sum_i a_i a_i^T (p x p)` |
+/// | [`matvec`](Backend::matvec) | `A (m x n)`, `x (n)` | `A x (m)` |
+/// | [`t_matvec`](Backend::t_matvec) | `A (m x n)`, `x (m)` | `A^T x (n)` |
+/// | [`rank1_sub`](Backend::rank1_sub) | `A (m x n)`, `u (m)`, `v (n)` | `A -= s u v^T` |
+/// | [`panel_t_matvec`](Backend::panel_t_matvec) | trailing panel of `A` | `A[r0.., c0..]^T v` |
+/// | [`panel_rank1_sub`](Backend::panel_rank1_sub) | trailing panel of `A` | `A[r0.., c0..] -= s v w^T` |
+pub trait Backend: Send + Sync {
+    /// Short human-readable name (matches [`BackendKind::as_str`]).
+    fn name(&self) -> &'static str;
+
+    /// `A @ B`.
+    fn gemm(&self, a: &Matrix, b: &Matrix) -> Matrix;
+
+    /// `A^T @ B` without materializing the transpose at the call site.
+    fn gemm_tn(&self, a: &Matrix, b: &Matrix) -> Matrix;
+
+    /// `A @ B^T`.
+    fn gemm_nt(&self, a: &Matrix, b: &Matrix) -> Matrix;
+
+    /// Symmetric Gram update over a row range:
+    /// `sum_{i in lo..hi} a_i a_i^T` (`p x p` for `A` with `p` columns).
+    /// `syrk(a, 0, a.rows)` is `A^T A` exploiting symmetry of the result.
+    fn syrk(&self, a: &Matrix, lo: usize, hi: usize) -> Matrix;
+
+    /// `A @ x`.
+    fn matvec(&self, a: &Matrix, x: &[f64]) -> Vec<f64>;
+
+    /// `A^T @ x`.
+    fn t_matvec(&self, a: &Matrix, x: &[f64]) -> Vec<f64>;
+
+    /// `A -= scale * u v^T`.
+    fn rank1_sub(&self, a: &mut Matrix, u: &[f64], v: &[f64], scale: f64);
+
+    /// `w = A[row0.., col0..]^T v` over the trailing panel of `A`
+    /// (`v.len() == a.rows - row0`, result length `a.cols - col0`).
+    /// The Householder-reflector projection of [`crate::linalg::qr`].
+    fn panel_t_matvec(&self, a: &Matrix, row0: usize, col0: usize, v: &[f64]) -> Vec<f64>;
+
+    /// `A[row0.., col0..] -= scale * v w^T` over the trailing panel
+    /// (`v.len() == a.rows - row0`, `w.len() == a.cols - col0`).
+    fn panel_rank1_sub(
+        &self,
+        a: &mut Matrix,
+        row0: usize,
+        col0: usize,
+        v: &[f64],
+        w: &[f64],
+        scale: f64,
+    );
+}
+
+// ======================================================================
+// Backend selection
+// ======================================================================
+
+/// Which [`Backend`] implementation to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Reference loops — single-threaded, unblocked, the correctness oracle.
+    Naive,
+    /// Cache-blocked kernels with row-band multithreading (the default).
+    Blocked,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "naive" | "reference" => Ok(BackendKind::Naive),
+            "blocked" | "threaded" => Ok(BackendKind::Blocked),
+            other => Err(anyhow!("unknown backend '{other}' (naive|blocked)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Naive => "naive",
+            BackendKind::Blocked => "blocked",
+        }
+    }
+
+    /// The backend instance for this kind.
+    pub fn instance(&self) -> &'static dyn Backend {
+        match self {
+            BackendKind::Naive => &NAIVE,
+            BackendKind::Blocked => &BLOCKED,
+        }
+    }
+
+    /// All backends, for sweep-style tests and benches.
+    pub const ALL: [BackendKind; 2] = [BackendKind::Naive, BackendKind::Blocked];
+}
+
+static NAIVE: NaiveBackend = NaiveBackend;
+static BLOCKED: BlockedBackend = BlockedBackend;
+
+/// Process-wide backend selection.  Codes: 0 = naive, 1 = blocked,
+/// `u8::MAX` = not yet resolved from the environment.
+static ACTIVE: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn kind_code(kind: BackendKind) -> u8 {
+    match kind {
+        BackendKind::Naive => 0,
+        BackendKind::Blocked => 1,
+    }
+}
+
+/// The process-wide default backend kind.  Resolved once from
+/// `NDPP_BACKEND` (falling back to [`BackendKind::Blocked`] when unset);
+/// an invalid value panics early with a clear configuration error.
+pub fn active_kind() -> BackendKind {
+    match ACTIVE.load(Ordering::Relaxed) {
+        0 => BackendKind::Naive,
+        1 => BackendKind::Blocked,
+        _ => {
+            let kind = match std::env::var("NDPP_BACKEND") {
+                Ok(s) => BackendKind::parse(&s)
+                    .unwrap_or_else(|e| panic!("NDPP_BACKEND: {e}")),
+                Err(_) => BackendKind::Blocked,
+            };
+            ACTIVE.store(kind_code(kind), Ordering::Relaxed);
+            kind
+        }
+    }
+}
+
+/// The process-wide default backend — what `Matrix::matmul` & friends use.
+pub fn active() -> &'static dyn Backend {
+    active_kind().instance()
+}
+
+/// Pin the process-wide default backend (overrides `NDPP_BACKEND`).
+/// Deployments usually set this once at startup through
+/// [`crate::coordinator::ServiceConfig::backend`] or the CLI `--backend`
+/// flag; flipping it mid-flight is safe but mixes numerics across samples.
+pub fn set_active(kind: BackendKind) {
+    ACTIVE.store(kind_code(kind), Ordering::Relaxed);
+}
+
+/// Worker threads the blocked backend may use for one operation
+/// (`NDPP_BACKEND_THREADS` override, else `available_parallelism`).
+pub fn configured_threads() -> usize {
+    static MAX: OnceLock<usize> = OnceLock::new();
+    *MAX.get_or_init(|| {
+        std::env::var("NDPP_BACKEND_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+// ======================================================================
+// Naive backend — the original reference loops
+// ======================================================================
+
+/// Reference implementation: the exact loops the samplers originally
+/// hand-rolled, single-threaded and unblocked.  Kept as the oracle the
+/// blocked backend is property-tested against.
+pub struct NaiveBackend;
+
+impl Backend for NaiveBackend {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    /// ikj loop order over contiguous rows (cache friendly).
+    fn gemm(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        let n = b.cols;
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                for (o, &bkj) in orow.iter_mut().zip(b.row(k)) {
+                    *o += aik * bkj;
+                }
+            }
+        }
+        out
+    }
+
+    fn gemm_tn(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.rows, b.rows, "gemm_tn shape mismatch");
+        let mut out = Matrix::zeros(a.cols, b.cols);
+        let n = b.cols;
+        for r in 0..a.rows {
+            let arow = a.row(r);
+            let brow = b.row(r);
+            for (i, &ari) in arow.iter().enumerate() {
+                if ari == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &bj) in orow.iter_mut().zip(brow) {
+                    *o += ari * bj;
+                }
+            }
+        }
+        out
+    }
+
+    fn gemm_nt(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.cols, "gemm_nt shape mismatch");
+        let mut out = Matrix::zeros(a.rows, b.rows);
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            for j in 0..b.rows {
+                out[(i, j)] = dot(arow, b.row(j));
+            }
+        }
+        out
+    }
+
+    fn syrk(&self, a: &Matrix, lo: usize, hi: usize) -> Matrix {
+        assert!(
+            lo <= hi && hi <= a.rows,
+            "syrk row range {lo}..{hi} out of bounds for {} rows",
+            a.rows
+        );
+        let p = a.cols;
+        let mut out = Matrix::zeros(p, p);
+        for i in lo..hi {
+            let arow = a.row(i);
+            for (r, &x) in arow.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[r * p..(r + 1) * p];
+                for (o, &aj) in orow.iter_mut().zip(arow) {
+                    *o += x * aj;
+                }
+            }
+        }
+        out
+    }
+
+    fn matvec(&self, a: &Matrix, x: &[f64]) -> Vec<f64> {
+        assert_eq!(a.cols, x.len(), "matvec shape mismatch");
+        (0..a.rows).map(|i| dot(a.row(i), x)).collect()
+    }
+
+    fn t_matvec(&self, a: &Matrix, x: &[f64]) -> Vec<f64> {
+        assert_eq!(a.rows, x.len(), "t_matvec shape mismatch");
+        let mut out = vec![0.0; a.cols];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            for (o, &v) in out.iter_mut().zip(a.row(i)) {
+                *o += xi * v;
+            }
+        }
+        out
+    }
+
+    fn rank1_sub(&self, a: &mut Matrix, u: &[f64], v: &[f64], scale: f64) {
+        assert_eq!(u.len(), a.rows, "rank1_sub row mismatch");
+        assert_eq!(v.len(), a.cols, "rank1_sub col mismatch");
+        for (i, &ui) in u.iter().enumerate() {
+            let f = ui * scale;
+            if f == 0.0 {
+                continue;
+            }
+            for (x, &vj) in a.row_mut(i).iter_mut().zip(v) {
+                *x -= f * vj;
+            }
+        }
+    }
+
+    fn panel_t_matvec(&self, a: &Matrix, row0: usize, col0: usize, v: &[f64]) -> Vec<f64> {
+        let (nrows, ncols) = panel_shape(a, row0, col0, v.len());
+        let mut w = vec![0.0; ncols];
+        for (i, &x) in v.iter().enumerate().take(nrows) {
+            if x == 0.0 {
+                continue;
+            }
+            let arow = &a.row(row0 + i)[col0..];
+            for (o, &aj) in w.iter_mut().zip(arow) {
+                *o += x * aj;
+            }
+        }
+        w
+    }
+
+    fn panel_rank1_sub(
+        &self,
+        a: &mut Matrix,
+        row0: usize,
+        col0: usize,
+        v: &[f64],
+        w: &[f64],
+        scale: f64,
+    ) {
+        let (nrows, ncols) = panel_shape(a, row0, col0, v.len());
+        assert_eq!(w.len(), ncols, "panel_rank1_sub col mismatch");
+        for (i, &vi) in v.iter().enumerate().take(nrows) {
+            let f = scale * vi;
+            if f == 0.0 {
+                continue;
+            }
+            let arow = &mut a.row_mut(row0 + i)[col0..];
+            for (x, &wj) in arow.iter_mut().zip(w) {
+                *x -= f * wj;
+            }
+        }
+    }
+}
+
+/// Validate a trailing-panel operation and return `(nrows, ncols)`.
+fn panel_shape(a: &Matrix, row0: usize, col0: usize, vlen: usize) -> (usize, usize) {
+    assert!(
+        row0 <= a.rows && col0 <= a.cols,
+        "panel origin ({row0}, {col0}) out of bounds for {}x{} matrix",
+        a.rows,
+        a.cols
+    );
+    let nrows = a.rows - row0;
+    assert_eq!(vlen, nrows, "panel vector length mismatch");
+    (nrows, a.cols - col0)
+}
+
+// ======================================================================
+// Blocked backend — cache blocking + row-band multithreading
+// ======================================================================
+
+/// k-panel depth for GEMM: `KC` rows of `B` (`KC * n * 8` bytes) stay hot
+/// across a 4-row tile of `A`.
+const KC: usize = 256;
+/// Register tile: rows of `A`/`C` processed together, so each `B` row
+/// loaded from cache feeds 4 output rows.
+const MR: usize = 4;
+/// Minimum FLOP count (2mnk) before an op fans out over threads — below
+/// this, spawn cost dominates.  Tree-leaf SYRKs and `2K x 2K` products
+/// deliberately stay under it.
+const PAR_MIN_FLOPS: usize = 1 << 24;
+/// Minimum element count before BLAS-1/2 ops (matvec, rank-1, panels)
+/// fan out.
+const PAR_MIN_ELEMS: usize = 1 << 20;
+/// Fixed row-chunk size for reduction-style ops (`panel_t_matvec`):
+/// partials are formed per chunk and summed in chunk order, keeping the
+/// result independent of the thread count the chunks are spread over.
+const PANEL_CHUNK: usize = 4096;
+/// `gemm_tn` with at most this many output rows streams the untransposed
+/// factor (no O(m*p) transposed copy of a tall matrix); wider products
+/// transpose once and use the GEMM kernel.
+const TN_STREAM_MAX_P: usize = 256;
+
+/// Cache-blocked, multithreaded backend.
+///
+/// GEMM packs no buffers (row-major inputs are already contiguous) but
+/// k-panelizes with [`KC`] and register-tiles [`MR`] rows of the output so
+/// each loaded `B` row is reused 4x; large ops split output rows over
+/// `std::thread::scope` bands.  Every output element is accumulated in a
+/// thread-count-independent order, so results are deterministic for a
+/// fixed build.
+pub struct BlockedBackend;
+
+fn gemm_threads(flops: usize, rows: usize) -> usize {
+    if flops < PAR_MIN_FLOPS {
+        1
+    } else {
+        configured_threads().min(rows).max(1)
+    }
+}
+
+fn blas2_threads(elems: usize, rows: usize) -> usize {
+    if elems < PAR_MIN_ELEMS {
+        1
+    } else {
+        configured_threads().min(rows).max(1)
+    }
+}
+
+impl Backend for BlockedBackend {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn gemm(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+        let (m, n, k) = (a.rows, b.cols, a.cols);
+        let mut c = Matrix::zeros(m, n);
+        let threads = gemm_threads(2 * m * n * k, m);
+        if threads <= 1 {
+            gemm_band(a, b, &mut c.data, 0, m);
+        } else {
+            let rows_per = m.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (t, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
+                    let i0 = t * rows_per;
+                    s.spawn(move || gemm_band(a, b, chunk, i0, i0 + chunk.len() / n));
+                }
+            });
+        }
+        c
+    }
+
+    fn gemm_tn(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.rows, b.rows, "gemm_tn shape mismatch");
+        let (m, p, n) = (a.rows, a.cols, b.cols);
+        if p <= TN_STREAM_MAX_P {
+            // Tall-skinny reduction (the `Z^T B` shapes the samplers emit):
+            // stream rows of A and B once, accumulating into the small
+            // p x n output — no transposed copy of the M-row factor.
+            let mut c = Matrix::zeros(p, n);
+            let threads = gemm_threads(2 * m * p * n, p);
+            if threads <= 1 {
+                gemm_tn_band(a, b, &mut c.data, 0, p);
+            } else {
+                let rows_per = p.div_ceil(threads);
+                std::thread::scope(|s| {
+                    for (t, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
+                        let j0 = t * rows_per;
+                        s.spawn(move || gemm_tn_band(a, b, chunk, j0, j0 + chunk.len() / n));
+                    }
+                });
+            }
+            return c;
+        }
+        // Square-ish A: transposing costs O(mp) against the O(mpn) product
+        // and buys the contiguous-row GEMM kernel; done tiled to stay
+        // cache-resident.
+        self.gemm(&transpose_tiled(a), b)
+    }
+
+    fn gemm_nt(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.cols, "gemm_nt shape mismatch");
+        let (m, n, k) = (a.rows, b.rows, a.cols);
+        let mut c = Matrix::zeros(m, n);
+        let threads = gemm_threads(2 * m * n * k, m);
+        if threads <= 1 {
+            gemm_nt_band(a, b, &mut c.data, 0, m);
+        } else {
+            let rows_per = m.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (t, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
+                    let i0 = t * rows_per;
+                    s.spawn(move || gemm_nt_band(a, b, chunk, i0, i0 + chunk.len() / n));
+                }
+            });
+        }
+        c
+    }
+
+    fn syrk(&self, a: &Matrix, lo: usize, hi: usize) -> Matrix {
+        assert!(
+            lo <= hi && hi <= a.rows,
+            "syrk row range {lo}..{hi} out of bounds for {} rows",
+            a.rows
+        );
+        let p = a.cols;
+        let rows = hi - lo;
+        let mut c = Matrix::zeros(p, p);
+        let threads = gemm_threads(2 * rows * p * p, p);
+        if threads <= 1 {
+            syrk_band(a, lo, hi, &mut c.data, 0, p);
+        } else {
+            let rows_per = p.div_ceil(threads);
+            std::thread::scope(|s| {
+                for (t, chunk) in c.data.chunks_mut(rows_per * p).enumerate() {
+                    let j0 = t * rows_per;
+                    s.spawn(move || syrk_band(a, lo, hi, chunk, j0, j0 + chunk.len() / p));
+                }
+            });
+        }
+        c
+    }
+
+    fn matvec(&self, a: &Matrix, x: &[f64]) -> Vec<f64> {
+        assert_eq!(a.cols, x.len(), "matvec shape mismatch");
+        let m = a.rows;
+        let threads = blas2_threads(m * a.cols, m);
+        if threads <= 1 {
+            return (0..m).map(|i| dot4(a.row(i), x)).collect();
+        }
+        let mut y = vec![0.0; m];
+        let rows_per = m.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (t, chunk) in y.chunks_mut(rows_per).enumerate() {
+                let i0 = t * rows_per;
+                s.spawn(move || {
+                    for (di, yi) in chunk.iter_mut().enumerate() {
+                        *yi = dot4(a.row(i0 + di), x);
+                    }
+                });
+            }
+        });
+        y
+    }
+
+    /// Row-major reduction — kept serial and identical to the naive order
+    /// (the consumers are `k x k` incremental-minor steps, never M-sized).
+    fn t_matvec(&self, a: &Matrix, x: &[f64]) -> Vec<f64> {
+        NaiveBackend.t_matvec(a, x)
+    }
+
+    fn rank1_sub(&self, a: &mut Matrix, u: &[f64], v: &[f64], scale: f64) {
+        assert_eq!(u.len(), a.rows, "rank1_sub row mismatch");
+        assert_eq!(v.len(), a.cols, "rank1_sub col mismatch");
+        let (m, n) = (a.rows, a.cols);
+        let threads = blas2_threads(m * n, m);
+        if threads <= 1 {
+            return NaiveBackend.rank1_sub(a, u, v, scale);
+        }
+        let rows_per = m.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (t, chunk) in a.data.chunks_mut(rows_per * n).enumerate() {
+                let i0 = t * rows_per;
+                s.spawn(move || {
+                    for (di, row) in chunk.chunks_mut(n).enumerate() {
+                        let f = u[i0 + di] * scale;
+                        if f == 0.0 {
+                            continue;
+                        }
+                        for (x, &vj) in row.iter_mut().zip(v) {
+                            *x -= f * vj;
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    fn panel_t_matvec(&self, a: &Matrix, row0: usize, col0: usize, v: &[f64]) -> Vec<f64> {
+        let (nrows, ncols) = panel_shape(a, row0, col0, v.len());
+        let threads = blas2_threads(nrows * ncols, nrows);
+        if threads <= 1 {
+            return NaiveBackend.panel_t_matvec(a, row0, col0, v);
+        }
+        // Partial sums are produced per fixed-size row chunk and reduced in
+        // chunk-index order, so the accumulation order — and hence the
+        // result — is independent of how many threads the chunks land on.
+        let nchunks = nrows.div_ceil(PANEL_CHUNK);
+        let chunks_per_band = nchunks.div_ceil(threads);
+        let mut w = vec![0.0; ncols];
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(threads);
+            let mut c0 = 0;
+            while c0 < nchunks {
+                let c1 = (c0 + chunks_per_band).min(nchunks);
+                handles.push(s.spawn(move || {
+                    let mut parts: Vec<Vec<f64>> = Vec::with_capacity(c1 - c0);
+                    for chunk in c0..c1 {
+                        let r0 = chunk * PANEL_CHUNK;
+                        let r1 = (r0 + PANEL_CHUNK).min(nrows);
+                        let mut part = vec![0.0; ncols];
+                        for i in r0..r1 {
+                            let x = v[i];
+                            if x == 0.0 {
+                                continue;
+                            }
+                            let arow = &a.row(row0 + i)[col0..];
+                            for (o, &aj) in part.iter_mut().zip(arow) {
+                                *o += x * aj;
+                            }
+                        }
+                        parts.push(part);
+                    }
+                    parts
+                }));
+                c0 = c1;
+            }
+            for h in handles {
+                for part in h.join().expect("backend worker panicked") {
+                    for (o, p) in w.iter_mut().zip(&part) {
+                        *o += p;
+                    }
+                }
+            }
+        });
+        w
+    }
+
+    fn panel_rank1_sub(
+        &self,
+        a: &mut Matrix,
+        row0: usize,
+        col0: usize,
+        v: &[f64],
+        w: &[f64],
+        scale: f64,
+    ) {
+        let (nrows, ncols) = panel_shape(a, row0, col0, v.len());
+        assert_eq!(w.len(), ncols, "panel_rank1_sub col mismatch");
+        let threads = blas2_threads(nrows * ncols, nrows);
+        if threads <= 1 {
+            return NaiveBackend.panel_rank1_sub(a, row0, col0, v, w, scale);
+        }
+        let cols = a.cols;
+        let rows_per = nrows.div_ceil(threads);
+        let data = &mut a.data[row0 * cols..];
+        std::thread::scope(|s| {
+            for (t, chunk) in data.chunks_mut(rows_per * cols).enumerate() {
+                let base = t * rows_per;
+                s.spawn(move || {
+                    for (di, row) in chunk.chunks_mut(cols).enumerate() {
+                        let f = scale * v[base + di];
+                        if f == 0.0 {
+                            continue;
+                        }
+                        for (x, &wj) in row[col0..].iter_mut().zip(w) {
+                            *x -= f * wj;
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// GEMM over output rows `i0..i1` into `c_band` (those rows of `C`,
+/// contiguous).  k-panelized by [`KC`]; [`MR`]-row register tile so each
+/// `B` row read feeds four output rows.  Per-row accumulation order is
+/// `(kk panel, k, j)` ascending — independent of the band split.
+fn gemm_band(a: &Matrix, b: &Matrix, c_band: &mut [f64], i0: usize, i1: usize) {
+    let n = b.cols;
+    let kdim = a.cols;
+    let mut i = i0;
+    while i < i1 {
+        let ib = (i1 - i).min(MR);
+        let base = (i - i0) * n;
+        for kk in (0..kdim).step_by(KC) {
+            let kend = (kk + KC).min(kdim);
+            if ib == MR {
+                let (c0, rest) = c_band[base..base + MR * n].split_at_mut(n);
+                let (c1, rest) = rest.split_at_mut(n);
+                let (c2, c3) = rest.split_at_mut(n);
+                let (a0, a1, a2, a3) = (a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3));
+                for dk in kk..kend {
+                    let brow = b.row(dk);
+                    let (x0, x1, x2, x3) = (a0[dk], a1[dk], a2[dk], a3[dk]);
+                    for (j, &bj) in brow.iter().enumerate() {
+                        c0[j] += x0 * bj;
+                        c1[j] += x1 * bj;
+                        c2[j] += x2 * bj;
+                        c3[j] += x3 * bj;
+                    }
+                }
+            } else {
+                for r in 0..ib {
+                    let arow = a.row(i + r);
+                    let crow = &mut c_band[base + r * n..base + (r + 1) * n];
+                    for dk in kk..kend {
+                        let x = arow[dk];
+                        let brow = b.row(dk);
+                        for (cj, &bj) in crow.iter_mut().zip(brow) {
+                            *cj += x * bj;
+                        }
+                    }
+                }
+            }
+        }
+        i += ib;
+    }
+}
+
+/// `A^T B` over output rows `j0..j1` (columns `j0..j1` of `A`): one
+/// streaming pass over the rows of `A` and `B`, rank-1 accumulating into
+/// the band.  Per output row the accumulation runs over source rows in
+/// ascending order — independent of the band split.
+fn gemm_tn_band(a: &Matrix, b: &Matrix, c_band: &mut [f64], j0: usize, j1: usize) {
+    let n = b.cols;
+    for r in 0..a.rows {
+        let arow = a.row(r);
+        let brow = b.row(r);
+        for i in j0..j1 {
+            let x = arow[i];
+            if x == 0.0 {
+                continue;
+            }
+            let crow = &mut c_band[(i - j0) * n..(i - j0 + 1) * n];
+            for (cj, &bj) in crow.iter_mut().zip(brow) {
+                *cj += x * bj;
+            }
+        }
+    }
+}
+
+/// `A B^T` over output rows `i0..i1`: per-element four-way unrolled dot.
+fn gemm_nt_band(a: &Matrix, b: &Matrix, c_band: &mut [f64], i0: usize, i1: usize) {
+    let n = b.rows;
+    for i in i0..i1 {
+        let arow = a.row(i);
+        let crow = &mut c_band[(i - i0) * n..(i - i0 + 1) * n];
+        for (j, cij) in crow.iter_mut().enumerate() {
+            *cij = dot4(arow, b.row(j));
+        }
+    }
+}
+
+/// SYRK over output rows `j0..j1`: for each source row, rank-1 accumulate
+/// into the band (which stays cache-resident — at most `p^2` doubles).
+fn syrk_band(a: &Matrix, lo: usize, hi: usize, c_band: &mut [f64], j0: usize, j1: usize) {
+    let p = a.cols;
+    for i in lo..hi {
+        let arow = a.row(i);
+        for jr in j0..j1 {
+            let x = arow[jr];
+            if x == 0.0 {
+                continue;
+            }
+            let crow = &mut c_band[(jr - j0) * p..(jr - j0 + 1) * p];
+            for (cj, &aj) in crow.iter_mut().zip(arow) {
+                *cj += x * aj;
+            }
+        }
+    }
+}
+
+/// Tiled out-of-place transpose (32x32 blocks keep both access patterns
+/// within cache lines).
+fn transpose_tiled(a: &Matrix) -> Matrix {
+    const TB: usize = 32;
+    let (m, n) = (a.rows, a.cols);
+    let mut t = Matrix::zeros(n, m);
+    for ii in (0..m).step_by(TB) {
+        let iend = (ii + TB).min(m);
+        for jj in (0..n).step_by(TB) {
+            let jend = (jj + TB).min(n);
+            for i in ii..iend {
+                let arow = a.row(i);
+                for j in jj..jend {
+                    t.data[j * m + i] = arow[j];
+                }
+            }
+        }
+    }
+    t
+}
+
+/// Dot product with four independent accumulators (breaks the sequential
+/// FP-add dependency chain the plain loop is stuck with).
+fn dot4(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().min(b.len());
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let quads = n / 4;
+    for q in 0..quads {
+        let i = 4 * q;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s2) + (s1 + s3);
+    for i in 4 * quads..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro;
+    use crate::util::prop;
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f64) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol, "{x} vs {y}");
+        }
+    }
+
+    fn vec_close(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() <= tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(kind.as_str()).unwrap(), kind);
+            assert_eq!(kind.instance().name(), kind.as_str());
+        }
+        assert_eq!(BackendKind::parse("threaded").unwrap(), BackendKind::Blocked);
+        assert!(BackendKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn backends_agree_on_random_small_shapes() {
+        // covers MR remainders (m % 4 != 0), k = 1, and non-square shapes
+        prop::check("backend_small", 30, |g| {
+            let m = g.usize_in(1, 23);
+            let k = g.usize_in(1, 17);
+            let n = g.usize_in(1, 19);
+            let a = Matrix::from_vec(m, k, g.normal_vec(m * k, 1.0));
+            let b = Matrix::from_vec(k, n, g.normal_vec(k * n, 1.0));
+            let bt = Matrix::from_vec(n, k, g.normal_vec(n * k, 1.0));
+            let c = Matrix::from_vec(k, n, g.normal_vec(k * n, 1.0));
+            assert_close(&NaiveBackend.gemm(&a, &b), &BlockedBackend.gemm(&a, &b), 1e-10);
+            assert_close(
+                &NaiveBackend.gemm_tn(&a, &c),
+                &BlockedBackend.gemm_tn(&a, &c),
+                1e-10,
+            );
+            assert_close(
+                &NaiveBackend.gemm_nt(&a, &bt),
+                &BlockedBackend.gemm_nt(&a, &bt),
+                1e-10,
+            );
+            let lo = g.usize_in(0, m);
+            let hi = g.usize_in(lo, m);
+            assert_close(
+                &NaiveBackend.syrk(&a, lo, hi),
+                &BlockedBackend.syrk(&a, lo, hi),
+                1e-10,
+            );
+        });
+    }
+
+    #[test]
+    fn backends_agree_on_degenerate_shapes() {
+        // empty inner/outer dimensions must not panic and must agree
+        for (m, k, n) in [(0, 3, 4), (3, 0, 4), (3, 4, 0), (0, 0, 0), (1, 1, 1)] {
+            let a = Matrix::zeros(m, k);
+            let b = Matrix::zeros(k, n);
+            assert_close(&NaiveBackend.gemm(&a, &b), &BlockedBackend.gemm(&a, &b), 0.0);
+        }
+    }
+
+    #[test]
+    fn backends_agree_across_kc_boundary() {
+        // inner dimension straddling the KC panel size exercises the
+        // panelized accumulation
+        let mut rng = Xoshiro::seeded(7);
+        for k in [KC - 1, KC, KC + 1] {
+            let a = Matrix::randn(9, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, 11, 1.0, &mut rng);
+            assert_close(&NaiveBackend.gemm(&a, &b), &BlockedBackend.gemm(&a, &b), 1e-10);
+        }
+    }
+
+    #[test]
+    fn blocked_vector_ops_match_naive() {
+        prop::check("backend_blas2", 25, |g| {
+            let m = g.usize_in(1, 30);
+            let n = g.usize_in(1, 30);
+            let a = Matrix::from_vec(m, n, g.normal_vec(m * n, 1.0));
+            let x = g.normal_vec(n, 1.0);
+            let y = g.normal_vec(m, 1.0);
+            vec_close(
+                &NaiveBackend.matvec(&a, &x),
+                &BlockedBackend.matvec(&a, &x),
+                1e-10,
+            );
+            vec_close(
+                &NaiveBackend.t_matvec(&a, &y),
+                &BlockedBackend.t_matvec(&a, &y),
+                1e-10,
+            );
+            let mut a1 = a.clone();
+            let mut a2 = a.clone();
+            NaiveBackend.rank1_sub(&mut a1, &y, &x, 1.5);
+            BlockedBackend.rank1_sub(&mut a2, &y, &x, 1.5);
+            assert_close(&a1, &a2, 1e-10);
+
+            let r0 = g.usize_in(0, m - 1);
+            let c0 = g.usize_in(0, n - 1);
+            let v = g.normal_vec(m - r0, 1.0);
+            vec_close(
+                &NaiveBackend.panel_t_matvec(&a, r0, c0, &v),
+                &BlockedBackend.panel_t_matvec(&a, r0, c0, &v),
+                1e-10,
+            );
+            let w = g.normal_vec(n - c0, 1.0);
+            let mut p1 = a.clone();
+            let mut p2 = a.clone();
+            NaiveBackend.panel_rank1_sub(&mut p1, r0, c0, &v, &w, 2.0);
+            BlockedBackend.panel_rank1_sub(&mut p2, r0, c0, &v, &w, 2.0);
+            assert_close(&p1, &p2, 1e-10);
+        });
+    }
+
+    #[test]
+    fn blocked_gemm_is_deterministic() {
+        let mut rng = Xoshiro::seeded(3);
+        let a = Matrix::randn(37, 61, 1.0, &mut rng);
+        let b = Matrix::randn(61, 29, 1.0, &mut rng);
+        let c1 = BlockedBackend.gemm(&a, &b);
+        let c2 = BlockedBackend.gemm(&a, &b);
+        assert_eq!(c1.data, c2.data);
+    }
+
+    #[test]
+    fn active_kind_resolves() {
+        // must not panic, and the returned kind round-trips through parse
+        let kind = active_kind();
+        assert_eq!(BackendKind::parse(kind.as_str()).unwrap(), kind);
+        assert_eq!(active().name(), kind.as_str());
+        assert!(configured_threads() >= 1);
+    }
+}

@@ -96,27 +96,19 @@ pub fn jacobi_eigen(a: &Matrix) -> SymEigen {
 }
 
 impl SymEigen {
-    /// Reconstruct `U diag(f(values)) U^T`.
+    /// Reconstruct `U diag(f(values)) U^T` as one column scaling plus a
+    /// `(U F) U^T` product through the active backend — no per-column
+    /// allocation, and the `O(n^3)` part runs on the fast kernels.
     pub fn reconstruct_with(&self, f: impl Fn(f64) -> f64) -> Matrix {
         let n = self.values.len();
-        let mut out = Matrix::zeros(n, n);
-        for j in 0..n {
-            let fj = f(self.values[j]);
-            if fj == 0.0 {
-                continue;
-            }
-            let col = self.vectors.col(j);
-            for a in 0..n {
-                if col[a] == 0.0 {
-                    continue;
-                }
-                let fa = fj * col[a];
-                for b in 0..n {
-                    out[(a, b)] += fa * col[b];
-                }
+        let fvals: Vec<f64> = self.values.iter().map(|&v| f(v)).collect();
+        let mut scaled = self.vectors.clone();
+        for i in 0..n {
+            for (x, &fj) in scaled.row_mut(i).iter_mut().zip(&fvals) {
+                *x *= fj;
             }
         }
-        out
+        scaled.matmul_t(&self.vectors)
     }
 
     /// Symmetric square root `A^{1/2}` (clamps tiny negatives to zero).

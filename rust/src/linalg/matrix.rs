@@ -3,6 +3,7 @@
 use std::fmt;
 use std::ops::{Index, IndexMut};
 
+use crate::linalg::backend::Backend as _;
 use crate::rng::Xoshiro;
 
 /// Dense row-major matrix of `f64`.
@@ -85,8 +86,37 @@ impl Matrix {
         &mut self.data[i * c..(i + 1) * c]
     }
 
+    /// Column `j` as an owned `Vec` — allocates; prefer [`Matrix::col_iter`]
+    /// or [`Matrix::col_into`] in loops.
     pub fn col(&self, j: usize) -> Vec<f64> {
-        (0..self.rows).map(|i| self[(i, j)]).collect()
+        self.col_iter(j).collect()
+    }
+
+    /// Strided, allocation-free view of column `j`.
+    #[inline]
+    pub fn col_iter(&self, j: usize) -> impl Iterator<Item = f64> + '_ {
+        assert!(
+            j < self.cols,
+            "column {j} out of bounds for {}x{} matrix",
+            self.rows,
+            self.cols
+        );
+        // `get` instead of slicing: a 0-row matrix has no data to skip into
+        self.data
+            .get(j..)
+            .unwrap_or(&[])
+            .iter()
+            .step_by(self.cols.max(1))
+            .copied()
+    }
+
+    /// Copy column `j` into a caller-owned buffer (`buf.len() == rows`),
+    /// avoiding the per-call allocation of [`Matrix::col`].
+    pub fn col_into(&self, j: usize, buf: &mut [f64]) {
+        assert_eq!(buf.len(), self.rows, "col_into buffer length mismatch");
+        for (b, v) in buf.iter_mut().zip(self.col_iter(j)) {
+            *b = v;
+        }
     }
 
     pub fn is_square(&self) -> bool {
@@ -94,11 +124,34 @@ impl Matrix {
     }
 
     /// Submatrix with the given row and column index sets.
+    ///
+    /// Every index is validated up front: a stale item id must fail loudly
+    /// here rather than silently aliasing another entry of `data` (row-major
+    /// flattening makes `i * cols + j` valid for many out-of-range `(i, j)`
+    /// pairs).
     pub fn submatrix(&self, row_idx: &[usize], col_idx: &[usize]) -> Matrix {
+        for &i in row_idx {
+            assert!(
+                i < self.rows,
+                "submatrix: row index {i} out of bounds for {}x{} matrix",
+                self.rows,
+                self.cols
+            );
+        }
+        for &j in col_idx {
+            assert!(
+                j < self.cols,
+                "submatrix: column index {j} out of bounds for {}x{} matrix",
+                self.rows,
+                self.cols
+            );
+        }
         let mut m = Matrix::zeros(row_idx.len(), col_idx.len());
         for (a, &i) in row_idx.iter().enumerate() {
-            for (b, &j) in col_idx.iter().enumerate() {
-                m[(a, b)] = self[(i, j)];
+            let src = self.row(i);
+            let dst = m.row_mut(a);
+            for (d, &j) in dst.iter_mut().zip(col_idx) {
+                *d = src[j];
             }
         }
         m
@@ -109,8 +162,17 @@ impl Matrix {
         self.submatrix(idx, idx)
     }
 
-    /// Rows `A[Y, :]` gathered into a new matrix.
+    /// Rows `A[Y, :]` gathered into a new matrix.  Indices are validated —
+    /// see [`Matrix::submatrix`] for why.
     pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        for &i in idx {
+            assert!(
+                i < self.rows,
+                "gather_rows: row index {i} out of bounds for {}x{} matrix",
+                self.rows,
+                self.cols
+            );
+        }
         let mut m = Matrix::zeros(idx.len(), self.cols);
         for (a, &i) in idx.iter().enumerate() {
             m.row_mut(a).copy_from_slice(self.row(i));
@@ -130,81 +192,30 @@ impl Matrix {
         t
     }
 
-    /// `self @ other` — ikj loop order over contiguous rows (cache friendly).
+    /// `self @ other`, routed through the active [`crate::linalg::backend`].
     pub fn matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let mut out = Matrix::zeros(self.rows, other.cols);
-        let n = other.cols;
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for (k, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = other.row(k);
-                for j in 0..n {
-                    orow[j] += aik * brow[j];
-                }
-            }
-        }
-        out
+        crate::linalg::backend::active().gemm(self, other)
     }
 
-    /// `self^T @ other` without materializing the transpose.
+    /// `self^T @ other` without materializing the transpose at the call
+    /// site, routed through the active backend.
     pub fn t_matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
-        let mut out = Matrix::zeros(self.cols, other.cols);
-        let n = other.cols;
-        for r in 0..self.rows {
-            let arow = self.row(r);
-            let brow = other.row(r);
-            for (i, &ari) in arow.iter().enumerate() {
-                if ari == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += ari * brow[j];
-                }
-            }
-        }
-        out
+        crate::linalg::backend::active().gemm_tn(self, other)
     }
 
-    /// `self @ other^T`.
+    /// `self @ other^T`, routed through the active backend.
     pub fn matmul_t(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
-        let mut out = Matrix::zeros(self.rows, other.rows);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            for j in 0..other.rows {
-                out[(i, j)] = dot(arow, other.row(j));
-            }
-        }
-        out
+        crate::linalg::backend::active().gemm_nt(self, other)
     }
 
-    /// Matrix-vector product `self @ x`.
+    /// Matrix-vector product `self @ x`, routed through the active backend.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(self.cols, x.len());
-        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+        crate::linalg::backend::active().matvec(self, x)
     }
 
-    /// `self^T @ x`.
+    /// `self^T @ x`, routed through the active backend.
     pub fn t_matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(self.rows, x.len());
-        let mut out = vec![0.0; self.cols];
-        for i in 0..self.rows {
-            let xi = x[i];
-            if xi == 0.0 {
-                continue;
-            }
-            for (j, &v) in self.row(i).iter().enumerate() {
-                out[j] += xi * v;
-            }
-        }
-        out
+        crate::linalg::backend::active().t_matvec(self, x)
     }
 
     pub fn add(&self, other: &Matrix) -> Matrix {
@@ -252,20 +263,10 @@ impl Matrix {
         }
     }
 
-    /// Rank-1 update `self -= scale * u v^T`.
+    /// Rank-1 update `self -= scale * u v^T`, routed through the active
+    /// backend.
     pub fn rank1_sub(&mut self, u: &[f64], v: &[f64], scale: f64) {
-        assert_eq!(u.len(), self.rows);
-        assert_eq!(v.len(), self.cols);
-        for (i, &ui) in u.iter().enumerate() {
-            let f = ui * scale;
-            if f == 0.0 {
-                continue;
-            }
-            let row = self.row_mut(i);
-            for (j, &vj) in v.iter().enumerate() {
-                row[j] -= f * vj;
-            }
-        }
+        crate::linalg::backend::active().rank1_sub(self, u, v, scale)
     }
 
     /// Frobenius norm.
@@ -458,6 +459,40 @@ mod tests {
         let c = a.hcat(&b);
         assert_eq!((c.rows, c.cols), (2, 3));
         assert_eq!(c[(1, 2)], 6.0);
+    }
+
+    #[test]
+    fn col_views_match_col() {
+        let a = Matrix::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        for j in 0..3 {
+            let owned = a.col(j);
+            let viewed: Vec<f64> = a.col_iter(j).collect();
+            assert_eq!(owned, viewed);
+            let mut buf = vec![0.0; 4];
+            a.col_into(j, &mut buf);
+            assert_eq!(owned, buf);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn gather_rows_rejects_out_of_bounds() {
+        let a = Matrix::zeros(3, 3);
+        let _ = a.gather_rows(&[1, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn submatrix_rejects_out_of_bounds_column() {
+        let a = Matrix::zeros(3, 3);
+        let _ = a.submatrix(&[0], &[0, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn principal_rejects_out_of_bounds() {
+        let a = Matrix::zeros(4, 4);
+        let _ = a.principal(&[2, 4]);
     }
 
     #[test]

@@ -3,20 +3,28 @@
 //! Nothing like LAPACK/nalgebra is available offline, and the NDPP
 //! algorithms need determinants, inverses, QR, symmetric eigendecomposition
 //! and the Youla (real Schur of a skew-symmetric matrix) decomposition.
-//! Sizes are modest — `2K x 2K` inner matrices with `K <= 128`, `k x k`
-//! minors with `k <= ~100` — so clarity and numerical robustness beat
-//! blocked performance here.  The `O(M K^2)` item-axis work is elsewhere
-//! (tiled in [`crate::sampler`] / offloaded to XLA artifacts).
+//! Factorizations stay at modest sizes (`2K x 2K` inner matrices with
+//! `K <= 128`, `k x k` minors with `k <= ~100`), but the `O(M K^2)`
+//! item-axis products that feed them — Gram matrices, panel products, tree
+//! statistics — are real GEMMs, so they route through a pluggable
+//! [`backend`]: [`backend::NaiveBackend`] (reference loops, correctness
+//! oracle) or [`backend::BlockedBackend`] (cache-blocked, multithreaded;
+//! the default).  Select with `NDPP_BACKEND=naive|blocked`,
+//! [`backend::set_active`], or [`crate::coordinator::ServiceConfig`].
 //!
 //! Contents:
-//! * [`Matrix`] — row-major dense matrix with the usual ops.
+//! * [`Matrix`] — row-major dense matrix; its `matmul`/`matvec`/`rank1_sub`
+//!   family delegates to the active backend.
+//! * [`backend`] — the compute-backend trait, implementations, selection.
 //! * [`lu`] — LU with partial pivoting: determinant, solve, inverse.
-//! * [`qr`] — Householder QR: orthonormalization, least squares.
+//! * [`qr`] — Householder QR: orthonormalization, least squares (panel
+//!   updates through the backend).
 //! * [`eigen`] — cyclic Jacobi symmetric eigendecomposition.
 //! * [`skew`] — Youla decomposition of skew-symmetric matrices (via Jacobi
 //!   on `-S^2` + pairing), the engine behind the paper's Algorithm 4.
 //! * [`chol`] — Cholesky factorization of SPD matrices.
 
+pub mod backend;
 pub mod chol;
 pub mod eigen;
 pub mod lu;
@@ -25,6 +33,7 @@ pub mod qr;
 pub mod skew;
 pub mod tridiag;
 
+pub use backend::{Backend, BackendKind};
 pub use chol::cholesky;
 pub use eigen::{jacobi_eigen, SymEigen};
 pub use lu::Lu;

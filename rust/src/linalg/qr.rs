@@ -2,7 +2,12 @@
 //!
 //! Used for the ONDPP constraint `B^T B = I` (orthonormalization of the
 //! skew factor, paper §5 footnote) and as a building block in tests.
+//! The factor is `M x K` with `M` up to millions, so the per-reflector
+//! panel updates (`R -= 2 v (v^T R)`) are the hot loops — they run through
+//! the active [`crate::linalg::backend`] panel primitives, row-major and
+//! (for large panels) multithreaded.
 
+use crate::linalg::backend::{self, Backend as _};
 use crate::linalg::Matrix;
 
 /// Thin QR factorization `A = Q R` with `Q` (m x n, orthonormal columns)
@@ -17,13 +22,14 @@ pub struct Qr {
 pub fn householder_qr(a: &Matrix) -> Qr {
     let (m, n) = (a.rows, a.cols);
     assert!(m >= n, "householder_qr needs rows >= cols");
+    let be = backend::active();
     let mut r = a.clone();
     // store householder vectors
     let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
 
     for k in 0..n {
         // build householder vector for column k below the diagonal
-        let mut v: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        let mut v: Vec<f64> = r.col_iter(k).skip(k).collect();
         let alpha = -v[0].signum() * super::matrix::norm(&v);
         if alpha.abs() < 1e-300 {
             // zero column: identity reflector
@@ -39,17 +45,9 @@ pub fn householder_qr(a: &Matrix) -> Qr {
         for x in &mut v {
             *x /= vnorm;
         }
-        // apply reflector to R[k.., k..]: R -= 2 v (v^T R)
-        for j in k..n {
-            let mut proj = 0.0;
-            for i in 0..(m - k) {
-                proj += v[i] * r[(k + i, j)];
-            }
-            proj *= 2.0;
-            for i in 0..(m - k) {
-                r[(k + i, j)] -= proj * v[i];
-            }
-        }
+        // apply reflector to the trailing panel: R[k.., k..] -= 2 v (v^T R)
+        let w = be.panel_t_matvec(&r, k, k, &v);
+        be.panel_rank1_sub(&mut r, k, k, &v, &w, 2.0);
         vs.push(v);
     }
 
@@ -64,16 +62,8 @@ pub fn householder_qr(a: &Matrix) -> Qr {
         if v.iter().all(|&x| x == 0.0) {
             continue;
         }
-        for j in 0..n {
-            let mut proj = 0.0;
-            for i in 0..(m - k) {
-                proj += v[i] * q[(k + i, j)];
-            }
-            proj *= 2.0;
-            for i in 0..(m - k) {
-                q[(k + i, j)] -= proj * v[i];
-            }
-        }
+        let w = be.panel_t_matvec(&q, k, 0, v);
+        be.panel_rank1_sub(&mut q, k, 0, v, &w, 2.0);
     }
 
     // zero out the strictly-lower part of R and truncate to n x n

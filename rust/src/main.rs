@@ -1,7 +1,7 @@
 //! `ndpp` — command-line entry point for the NDPP sampling framework.
 //!
 //! ```text
-//! ndpp sample     draw samples from a kernel (cholesky | rejection | mcmc)
+//! ndpp sample     draw samples from a kernel (cholesky | rejection | mcmc | dense)
 //! ndpp serve      run the TCP sampling service
 //! ndpp train      learn an ONDPP kernel from a basket dataset (AOT/PJRT)
 //! ndpp gen-data   generate a synthetic basket dataset
@@ -16,14 +16,15 @@ use anyhow::{bail, Result};
 use ndpp::bench::experiments::{self, ExpOptions};
 use ndpp::bench::BenchRunner;
 use ndpp::coordinator::server;
-use ndpp::coordinator::{SamplingService, ServiceConfig};
+use ndpp::coordinator::{SamplerKind, SamplingService, ServiceConfig};
 use ndpp::data::{recipes, synthetic, BasketDataset};
 use ndpp::learn::{self, TrainConfig, Trainer};
 use ndpp::ndpp::{MarginalKernel, Proposal};
 use ndpp::rng::Xoshiro;
 use ndpp::runtime::ModelOps;
 use ndpp::sampler::{
-    CholeskySampler, McmcConfig, McmcSampler, RejectionSampler, SampleTree, Sampler, TreeConfig,
+    CholeskySampler, DenseCholeskySampler, McmcConfig, McmcSampler, RejectionSampler, SampleTree,
+    Sampler, TreeConfig,
 };
 use ndpp::util::args::{help_text, Args, Spec};
 
@@ -77,13 +78,24 @@ fn print_usage() {
     );
 }
 
+/// Apply `--backend naive|blocked` (process-wide) when given.
+fn apply_backend_flag(a: &Args) -> Result<()> {
+    if let Some(b) = a.get("backend") {
+        ndpp::linalg::backend::set_active(ndpp::linalg::BackendKind::parse(b)?);
+    }
+    Ok(())
+}
+
+const BACKEND_HELP: &str = "linalg backend: naive | blocked (default: $NDPP_BACKEND or blocked)";
+
 const SAMPLE_SPECS: &[Spec] = &[
     Spec::opt("kernel", "load a saved kernel file instead of a random one"),
     Spec::opt_default("m", "4096", "ground-set size (random kernel)"),
     Spec::opt_default("k", "32", "per-part kernel rank K"),
     Spec::opt_default("n", "5", "number of samples"),
     Spec::opt_default("seed", "0", "rng seed"),
-    Spec::opt_default("algo", "rejection", "cholesky | rejection | mcmc | both | all"),
+    Spec::opt_default("algo", "rejection", "cholesky | rejection | mcmc | dense | both | all"),
+    Spec::opt("backend", BACKEND_HELP),
     Spec::flag("help", "show help"),
 ];
 
@@ -93,13 +105,14 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
         print!("{}", help_text("sample", "draw NDPP samples", SAMPLE_SPECS));
         return Ok(());
     }
+    apply_backend_flag(&a)?;
     let m = a.usize_or("m", 4096)?;
     let k = a.usize_or("k", 32)?;
     let n = a.usize_or("n", 5)?;
     let seed = a.u64_or("seed", 0)?;
     let algo = a.str_or("algo", "rejection");
-    if !["cholesky", "rejection", "mcmc", "both", "all"].contains(&algo.as_str()) {
-        bail!("unknown --algo '{algo}' (cholesky | rejection | mcmc | both | all)");
+    if !["cholesky", "rejection", "mcmc", "dense", "both", "all"].contains(&algo.as_str()) {
+        bail!("unknown --algo '{algo}' (cholesky | rejection | mcmc | dense | both | all)");
     }
 
     let mut rng = Xoshiro::seeded(seed);
@@ -155,6 +168,21 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
             s.acceptance_rate()
         );
     }
+    if algo == "dense" || algo == "all" {
+        if kernel.m() > SamplerKind::DENSE_MAX_M {
+            println!(
+                "dense: skipped — O(M^3) per sample is capped at M <= {} (M = {})",
+                SamplerKind::DENSE_MAX_M,
+                kernel.m()
+            );
+        } else {
+            let mut s = DenseCholeskySampler::new(&kernel);
+            let mut r = rng.split(4);
+            for i in 0..n {
+                println!("dense[{i}]: {:?}", s.sample(&mut r));
+            }
+        }
+    }
     Ok(())
 }
 
@@ -163,6 +191,7 @@ const SERVE_SPECS: &[Spec] = &[
     Spec::opt_default("models", "demo:4096:32", "comma list of name:M:K random models"),
     Spec::opt_default("workers", "0", "worker threads (0 = all cores)"),
     Spec::opt_default("seed", "0", "rng seed for model generation"),
+    Spec::opt("backend", BACKEND_HELP),
     Spec::flag("help", "show help"),
 ];
 
@@ -176,6 +205,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let mut config = ServiceConfig::default();
     if workers > 0 {
         config.workers = workers;
+    }
+    if let Some(b) = a.get("backend") {
+        config.backend = Some(ndpp::linalg::BackendKind::parse(b)?);
     }
     let service = Arc::new(SamplingService::new(config));
     let seed = a.u64_or("seed", 0)?;
@@ -311,6 +343,7 @@ const REPRO_SPECS: &[Spec] = &[
     Spec::opt_default("profile", "fast", "fast | paper"),
     Spec::opt_default("k", "32", "per-part rank for sampling experiments"),
     Spec::opt_default("seed", "0", "rng seed"),
+    Spec::opt("backend", BACKEND_HELP),
     Spec::flag("help", "show help"),
 ];
 
@@ -320,6 +353,7 @@ fn cmd_reproduce(argv: &[String]) -> Result<()> {
         print!("{}", help_text("reproduce", "regenerate paper experiments", REPRO_SPECS));
         return Ok(());
     }
+    apply_backend_flag(&a)?;
     let opts = ExpOptions {
         profile: a.str_or("profile", "fast"),
         seed: a.u64_or("seed", 0)?,
@@ -394,6 +428,11 @@ fn cmd_info() -> Result<()> {
     println!(
         "cores: {}",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    println!(
+        "linalg backend: {} ({} worker threads; NDPP_BACKEND / --backend to change)",
+        ndpp::linalg::backend::active_kind().as_str(),
+        ndpp::linalg::backend::configured_threads()
     );
     match ModelOps::discover() {
         Some(ops) => {

@@ -7,6 +7,7 @@
 //! `sigma`.  Compactly `L = Z X Z^T` with `Z = [V B]` and
 //! `X = diag(I_K, C)`.
 
+use crate::linalg::backend::Backend as _;
 use crate::linalg::{qr, Matrix};
 use crate::rng::Xoshiro;
 
@@ -82,7 +83,7 @@ impl NdppKernel {
     /// True if the ONDPP constraints hold to tolerance:
     /// `B^T B = I` and `V^T B = 0`.
     pub fn is_ondpp(&self, tol: f64) -> bool {
-        let btb = self.b.t_matmul(&self.b);
+        let btb = crate::linalg::backend::active().syrk(&self.b, 0, self.b.rows);
         let vtb = self.v.t_matmul(&self.b);
         btb.sub(&Matrix::identity(self.k())).max_abs() <= tol && vtb.max_abs() <= tol
     }
@@ -137,7 +138,7 @@ impl NdppKernel {
             .map(|&s| 2.0 * s * s / (1.0 + s * s))
             .sum();
         let want = (target - skew_part).max(0.1);
-        let vtv = self.v.t_matmul(&self.v);
+        let vtv = crate::linalg::backend::active().syrk(&self.v, 0, self.v.rows);
         let rho: Vec<f64> = crate::linalg::tridiag::sym_eigen(&vtv)
             .values
             .into_iter()

@@ -5,6 +5,7 @@
 //! makes the linear-time Cholesky sampler possible.  Computing `W` costs
 //! `O(M K^2)` for the Gram matrix plus `O(K^3)` for the inverse.
 
+use crate::linalg::backend::{self, Backend as _};
 use crate::linalg::{lu::Lu, Matrix};
 use crate::ndpp::NdppKernel;
 
@@ -31,7 +32,9 @@ impl MarginalKernel {
     pub fn from_zx(z: Matrix, x: &Matrix) -> MarginalKernel {
         let k2 = x.rows;
         assert_eq!(z.cols, k2);
-        let g = z.t_matmul(&z); // Z^T Z, O(M K^2)
+        // Z^T Z, O(M K^2) — the symmetric-update entry point of the active
+        // compute backend (blocked + threaded by default)
+        let g = backend::active().syrk(&z, 0, z.rows);
         let mut a = g.matmul(x); // (Z^T Z) X
         a.add_diag(1.0); // I + Z^T Z X
         let lu = Lu::factor(&a);

@@ -223,7 +223,10 @@ impl<'a> IncrementalMinor<'a> {
     }
 
     /// Refactorize from scratch (`O(k^3 + k^2 K)`), clearing accumulated
-    /// floating-point drift.  Returns false — and marks the minor
+    /// floating-point drift.  The minor rebuild runs through the active
+    /// [`crate::linalg::backend`] (gathered rows + `V_Y V_Y^T` /
+    /// `B_Y C B_Y^T` products), so periodic refreshes ride the blocked
+    /// kernels too.  Returns false — and marks the minor
     /// unhealthy — when the refactorization finds the state numerically
     /// singular (possible after drift on a barely-positive determinant);
     /// this is a numerical event, not a caller bug, so it is reported

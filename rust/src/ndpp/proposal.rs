@@ -14,6 +14,7 @@
 //! `det(L_Y)/det(L̂_Y)` is exact.  Theorem 2: when `V ⊥ B` the expected
 //! number of proposals is `det(L̂+I)/det(L+I) = prod_j (1 + 2 s_j/(s_j^2+1))`.
 
+use crate::linalg::backend::{self, Backend as _};
 use crate::linalg::{lu::Lu, tridiag::sym_eigen, Matrix};
 use crate::ndpp::youla::{youla_lowrank, LowRankYoula};
 use crate::ndpp::NdppKernel;
@@ -53,8 +54,9 @@ impl Proposal {
             x_hat.push(s);
         }
 
-        // log det(L̂ + I) = log det(I + X̂ Ẑ^T Ẑ); X̂ diagonal.
-        let g = z_hat.t_matmul(&z_hat);
+        // log det(L̂ + I) = log det(I + X̂ Ẑ^T Ẑ); X̂ diagonal.  The Gram
+        // matrix is the O(M K^2) term — backend SYRK.
+        let g = backend::active().syrk(&z_hat, 0, z_hat.rows);
         let mut a = Matrix::zeros(g.rows, g.cols);
         for i in 0..g.rows {
             for j in 0..g.cols {
@@ -132,7 +134,7 @@ impl Proposal {
     /// `X̂^{1/2} Ẑ^T Ẑ X̂^{1/2}` lifted to M dimensions.
     pub fn spectral(&self) -> SpectralDpp {
         let r = self.rank();
-        let g = self.z_hat.t_matmul(&self.z_hat);
+        let g = backend::active().syrk(&self.z_hat, 0, self.z_hat.rows);
         let sqrt_x: Vec<f64> = self.x_hat.iter().map(|&x| x.max(0.0).sqrt()).collect();
         let mut dual = Matrix::zeros(r, r);
         for i in 0..r {
@@ -147,22 +149,20 @@ impl Proposal {
         let cutoff = 1e-12 * max_l.max(1e-300);
         let kept: Vec<usize> = (0..r).filter(|&i| eig.values[i] > cutoff).collect();
 
-        // eigenvector i of L̂ is  Ẑ X̂^{1/2} q_i / sqrt(lambda_i)
-        let mut vecs = Matrix::zeros(self.m(), kept.len());
+        // eigenvector i of L̂ is  Ẑ X̂^{1/2} q_i / sqrt(lambda_i); batch all
+        // kept columns into W = X̂^{1/2} Q diag(1/sqrt(lambda)) and lift
+        // them with a single M-axis GEMM through the backend
+        let mut w = Matrix::zeros(r, kept.len());
         let mut lambda = Vec::with_capacity(kept.len());
         for (out_i, &i) in kept.iter().enumerate() {
             let li = eig.values[i];
             lambda.push(li);
-            let mut q = eig.vectors.col(i);
-            for (a, qa) in q.iter_mut().enumerate() {
-                *qa *= sqrt_x[a];
-            }
-            let v = self.z_hat.matvec(&q);
             let inv = 1.0 / li.sqrt();
-            for row in 0..self.m() {
-                vecs[(row, out_i)] = v[row] * inv;
+            for a in 0..r {
+                w[(a, out_i)] = sqrt_x[a] * eig.vectors[(a, i)] * inv;
             }
         }
+        let vecs = self.z_hat.matmul(&w);
         SpectralDpp { lambda, vecs }
     }
 }

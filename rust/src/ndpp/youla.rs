@@ -19,6 +19,7 @@
 //! short-circuits, which matters because it is on the proposal-construction
 //! path benchmarked in Fig 2(b).
 
+use crate::linalg::backend::{self, Backend as _};
 use crate::linalg::{skew, tridiag::sym_eigen, Matrix};
 
 /// Youla decomposition of `B C B^T`: `(sigma_j, Y)` where the `2j`-th and
@@ -36,7 +37,7 @@ pub fn youla_lowrank(b: &Matrix, c: &Matrix) -> LowRankYoula {
     assert_eq!(c.rows, k);
     assert_eq!(c.cols, k);
 
-    let g = b.t_matmul(b);
+    let g = backend::active().syrk(b, 0, b.rows);
 
     // Fast path: B orthonormal and C already in canonical Youla form.
     if is_identity(&g, 1e-10) {
@@ -57,9 +58,10 @@ pub fn youla_lowrank(b: &Matrix, c: &Matrix) -> LowRankYoula {
                 }
             }
             let mut y = Matrix::zeros(b.rows, keep_cols.len());
-            for (out_j, &in_j) in keep_cols.iter().enumerate() {
-                for i in 0..b.rows {
-                    y[(i, out_j)] = b[(i, in_j)];
+            for i in 0..b.rows {
+                let brow = b.row(i);
+                for (d, &in_j) in y.row_mut(i).iter_mut().zip(&keep_cols) {
+                    *d = brow[in_j];
                 }
             }
             return LowRankYoula { sigmas: keep_sigmas, y };
@@ -74,17 +76,17 @@ pub fn youla_lowrank(b: &Matrix, c: &Matrix) -> LowRankYoula {
     let pairs = skew::youla_of_skew(&s_tilde);
 
     let f = b.matmul(&g_inv_half); // M x K, orthonormal columns (on range G)
+    // lift all pairs in one M-axis GEMM: columns of U are (u_1, w_1, ...)
     let mut sigmas = Vec::with_capacity(pairs.len());
-    let mut y = Matrix::zeros(b.rows, 2 * pairs.len());
+    let mut u = Matrix::zeros(f.cols, 2 * pairs.len());
     for (j, p) in pairs.iter().enumerate() {
         sigmas.push(p.sigma);
-        let y1 = f.matvec(&p.y1);
-        let y2 = f.matvec(&p.y2);
-        for i in 0..b.rows {
-            y[(i, 2 * j)] = y1[i];
-            y[(i, 2 * j + 1)] = y2[i];
+        for a in 0..f.cols {
+            u[(a, 2 * j)] = p.y1[a];
+            u[(a, 2 * j + 1)] = p.y2[a];
         }
     }
+    let y = f.matmul(&u);
     LowRankYoula { sigmas, y }
 }
 

@@ -82,12 +82,14 @@ pub fn sample_elementary_direct(
     let m = spectral.m();
     let z = &spectral.vecs;
     let mut y: Vec<usize> = Vec::with_capacity(e.len());
+    // one scratch buffer for all |E| selection sweeps — no per-pick Vec
+    let mut scores = vec![0.0; m];
     for _ in 0..e.len() {
         let q = conditional_q(z, &y, e);
         // scores over all items; total mass = |E| - |Y|
-        let scores: Vec<f64> = (0..m)
-            .map(|j| item_score(z, j, e, &q).max(0.0))
-            .collect();
+        for (j, s) in scores.iter_mut().enumerate() {
+            *s = item_score(z, j, e, &q).max(0.0);
+        }
         let j = rng.weighted(&scores);
         y.push(j);
     }

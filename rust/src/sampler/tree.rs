@@ -22,6 +22,7 @@
 //! DESIGN.md §4) at a negligible latency cost, and is ablated in
 //! `benches/ablation.rs`.
 
+use crate::linalg::backend::Backend as _;
 use crate::linalg::Matrix;
 use crate::ndpp::proposal::SpectralDpp;
 use crate::rng::Xoshiro;
@@ -80,23 +81,12 @@ impl SampleTree {
         leaf: usize,
         nodes: &mut Vec<Node>,
     ) -> usize {
-        let r = spectral.rank();
         if end - start <= leaf {
-            // bucket leaf: Sigma = sum of z_j z_j^T over the bucket
-            let mut sigma = vec![0.0; r * r];
-            for j in start..end {
-                let row = spectral.vecs.row(j);
-                for a in 0..r {
-                    let za = row[a];
-                    if za == 0.0 {
-                        continue;
-                    }
-                    let base = a * r;
-                    for b in 0..r {
-                        sigma[base + b] += za * row[b];
-                    }
-                }
-            }
+            // bucket leaf: Sigma = sum of z_j z_j^T over the bucket — the
+            // backend's row-range SYRK, flattened row-major
+            let sigma = crate::linalg::backend::active()
+                .syrk(&spectral.vecs, start, end)
+                .data;
             nodes.push(Node { start, end, sigma, left: NONE, right: NONE });
             return nodes.len() - 1;
         }
@@ -149,23 +139,31 @@ impl SampleTree {
     }
 
     /// `SampleItem` (Algorithm 3 lines 21-28): draw one item conditioned on
-    /// the current selection (encoded in `Q`).
-    fn sample_item(&self, e: &[usize], q: &Matrix, rng: &mut Xoshiro) -> usize {
+    /// the current selection (encoded in `Q`).  `scores` is a caller-owned
+    /// scratch buffer so the per-descent bucket scoring never allocates.
+    fn sample_item(
+        &self,
+        e: &[usize],
+        q: &Matrix,
+        scores: &mut Vec<f64>,
+        rng: &mut Xoshiro,
+    ) -> usize {
         let mut node = self.root;
         loop {
             let n = &self.nodes[node];
             if n.left == NONE {
                 // bucket: score items directly
-                let scores: Vec<f64> = (n.start..n.end)
-                    .map(|j| item_score(&self.spectral.vecs, j, e, q).max(0.0))
-                    .collect();
+                scores.clear();
+                scores.extend(
+                    (n.start..n.end).map(|j| item_score(&self.spectral.vecs, j, e, q).max(0.0)),
+                );
                 let total: f64 = scores.iter().sum();
                 if total <= 0.0 {
                     // numerically-dead bucket (can only happen through
                     // rounding); fall back to uniform within the bucket
                     return n.start + rng.below(n.end - n.start);
                 }
-                return n.start + rng.weighted(&scores);
+                return n.start + rng.weighted(scores);
             }
             let pl = self.sigma_inner(n.left, e, q).max(0.0);
             let pr = self.sigma_inner(n.right, e, q).max(0.0);
@@ -192,9 +190,10 @@ impl SampleTree {
     /// Draw exactly `|E|` items from the elementary DPP indexed by `e`.
     pub fn sample_elementary(&self, e: &[usize], rng: &mut Xoshiro) -> Vec<usize> {
         let mut y: Vec<usize> = Vec::with_capacity(e.len());
+        let mut scores: Vec<f64> = Vec::with_capacity(self.config.leaf_size.max(1));
         for _ in 0..e.len() {
             let q = conditional_q(&self.spectral.vecs, &y, e);
-            let j = self.sample_item(e, &q, rng);
+            let j = self.sample_item(e, &q, &mut scores, rng);
             y.push(j);
         }
         y.sort_unstable();

@@ -8,7 +8,9 @@ use ndpp::coordinator::{
 };
 use ndpp::ndpp::NdppKernel;
 use ndpp::rng::Xoshiro;
-use ndpp::sampler::{CholeskySampler, McmcSampler, RejectionSampler, Sampler, TreeConfig};
+use ndpp::sampler::{
+    CholeskySampler, DenseCholeskySampler, McmcSampler, RejectionSampler, Sampler, TreeConfig,
+};
 
 /// Mirror of the service's per-request execution, built directly on the
 /// sampler types (the contract under test: both paths are pure functions
@@ -28,6 +30,10 @@ fn direct_samples(entry: &ModelEntry, kind: SamplerKind, seed: u64, n: usize) ->
             let mut s = McmcSampler::new(&entry.kernel, entry.mcmc);
             (0..n).map(|_| s.sample(&mut rng)).collect()
         }
+        SamplerKind::Dense => {
+            let mut s = DenseCholeskySampler::new(&entry.kernel);
+            (0..n).map(|_| s.sample(&mut rng)).collect()
+        }
     }
 }
 
@@ -45,6 +51,7 @@ fn service_matches_direct_sampler_for_every_algorithm() {
         flush_interval_us: 200,
         max_batch: 8,
         tree: TreeConfig::default(),
+        ..Default::default()
     });
     svc.register("model", kernel);
 
@@ -79,6 +86,7 @@ fn coalesced_mcmc_requests_do_not_leak_chain_state() {
         flush_interval_us: 500,
         max_batch: 64,
         tree: TreeConfig::default(),
+        ..Default::default()
     });
     svc.register("m", test_kernel(56, 40, 4));
     let req = || SampleRequest {
@@ -107,6 +115,7 @@ fn replay_is_stable_across_service_instances() {
             flush_interval_us: 200,
             max_batch: 8,
             tree: TreeConfig::default(),
+            ..Default::default()
         });
         svc.register("m", test_kernel(57, 32, 4));
         (0..3u64)

@@ -17,6 +17,7 @@ fn make_service(models: &[(&str, usize, usize)]) -> Arc<SamplingService> {
         flush_interval_us: 200,
         max_batch: 16,
         tree: TreeConfig::default(),
+        ..Default::default()
     }));
     let mut rng = Xoshiro::seeded(77);
     for &(name, m, k) in models {
