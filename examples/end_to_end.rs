@@ -136,6 +136,7 @@ fn main() -> anyhow::Result<()> {
                 n: 4,
                 seed: Some(i as u64),
                 kind: if i % 2 == 0 { SamplerKind::Rejection } else { SamplerKind::Cholesky },
+                deadline: None,
             })
         })
         .collect();

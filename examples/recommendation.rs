@@ -71,6 +71,7 @@ fn main() -> anyhow::Result<()> {
             n: 1,
             seed: Some(100 + i),
             kind: SamplerKind::Rejection,
+            deadline: None,
         })?;
         println!(
             "  set {i}: {:?} ({} proposals, {:.1} ms)",
@@ -89,6 +90,7 @@ fn main() -> anyhow::Result<()> {
                 n: 1,
                 seed: Some(i),
                 kind: SamplerKind::Rejection,
+                deadline: None,
             })
         })
         .collect();

@@ -1,0 +1,17 @@
+//! `cargo bench --bench serving [-- --quick]`
+//!
+//! Closed-loop multi-client throughput/latency sweep over the sharded
+//! sampling service (1/4/16 clients × cholesky/rejection/mcmc), printing a
+//! table and writing `BENCH_serving.json` (path override:
+//! `NDPP_BENCH_OUT`).  Quick mode — `--quick` or `NDPP_BENCH_QUICK=1` —
+//! is what CI runs.
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("NDPP_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let out = std::env::var("NDPP_BENCH_OUT").unwrap_or_else(|_| "BENCH_serving.json".into());
+    if let Err(e) = ndpp::bench::serving::run(quick, &out) {
+        eprintln!("serving bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -5,5 +5,6 @@
 pub mod experiments;
 pub mod linalg_backends;
 pub mod runner;
+pub mod serving;
 
 pub use runner::{BenchRunner, Measurement};

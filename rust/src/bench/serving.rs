@@ -1,0 +1,160 @@
+//! `cargo bench --bench serving` — closed-loop serving throughput/latency
+//! sweep.
+//!
+//! Drives the sharded [`SamplingService`] in-process (no TCP, so the
+//! numbers isolate the pipeline: shard queues, admission control, batch
+//! coalescing, Prepared/Scratch reuse) with a closed loop per client:
+//! each of `1 / 4 / 16` concurrent clients issues synchronous
+//! `sample(model, n, seed)` requests back to back, for every algorithm in
+//! `cholesky / rejection / mcmc`.  Reports per-config request throughput,
+//! sample throughput, and latency percentiles, and writes
+//! `BENCH_serving.json` (override the path with `NDPP_BENCH_OUT`) — the
+//! serving entry of the repo's `BENCH_*` trajectory, uploaded as a CI
+//! artifact next to `BENCH_linalg.json`.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::bench::experiments::tablelike_kernel;
+use crate::bench::runner::Table;
+use crate::coordinator::{SampleRequest, SamplerKind, SamplingService, ServiceConfig};
+use crate::rng::Xoshiro;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::util::timer::fmt_secs;
+use crate::util::Timer;
+
+/// Samples per request (coalescing and scratch reuse amortize across
+/// these, like a real recommendation batch).
+const SAMPLES_PER_REQUEST: usize = 4;
+
+/// Run the sweep; returns the JSON that was also written to `out_path`.
+pub fn run(quick: bool, out_path: &str) -> Result<Json> {
+    let (m, k, iters_per_client) = if quick { (512, 8, 30) } else { (4096, 32, 150) };
+
+    let svc = Arc::new(SamplingService::new(ServiceConfig::default()));
+    let mut rng = Xoshiro::seeded(7);
+    svc.register("bench", tablelike_kernel(m, k, &mut rng));
+    println!(
+        "serving bench: {} mode, M={m}, 2K={}, {} shard workers, {} samples/request",
+        if quick { "quick" } else { "full" },
+        2 * k,
+        svc.shards(),
+        SAMPLES_PER_REQUEST
+    );
+
+    let algos = [SamplerKind::Cholesky, SamplerKind::Rejection, SamplerKind::Mcmc];
+    let client_counts = [1usize, 4, 16];
+
+    let mut table =
+        Table::new(&["algo", "clients", "req/s", "samples/s", "p50", "p95"]);
+    let mut rows: Vec<Json> = Vec::new();
+    for kind in algos {
+        for &clients in &client_counts {
+            // MCMC restarts a full burn-in per sample; trim its iteration
+            // count so the full sweep stays CI-sized
+            let iters = if kind == SamplerKind::Mcmc {
+                (iters_per_client / 3).max(5)
+            } else {
+                iters_per_client
+            };
+            let (wall, latencies) = closed_loop(&svc, kind, clients, iters);
+            let requests = (clients * iters) as f64;
+            let req_s = requests / wall;
+            let samples_s = req_s * SAMPLES_PER_REQUEST as f64;
+            let lat = Summary::of(&latencies);
+            table.row(vec![
+                kind.as_str().to_string(),
+                format!("{clients}"),
+                format!("{req_s:.0}"),
+                format!("{samples_s:.0}"),
+                fmt_secs(lat.p50),
+                fmt_secs(lat.p95),
+            ]);
+            rows.push(
+                Json::obj()
+                    .with("algo", kind.as_str())
+                    .with("clients", clients)
+                    .with("requests", requests)
+                    .with("wall_s", wall)
+                    .with("requests_per_s", req_s)
+                    .with("samples_per_s", samples_s)
+                    .with("latency_p50_s", lat.p50)
+                    .with("latency_p95_s", lat.p95)
+                    .with("latency_mean_s", lat.mean),
+            );
+        }
+    }
+    println!("\n== closed-loop serving sweep (M={m}, 2K={}) ==\n{}", 2 * k, table.render());
+
+    let json = Json::obj()
+        .with("bench", "serving")
+        .with("quick", quick)
+        .with("m", m)
+        .with("k", k)
+        .with("shards", svc.shards())
+        .with("samples_per_request", SAMPLES_PER_REQUEST)
+        .with("sweep", Json::Arr(rows));
+    std::fs::write(out_path, json.to_string_pretty())?;
+    println!("(written to {out_path})");
+    Ok(json)
+}
+
+/// `clients` threads each issue `iters` synchronous requests back to back;
+/// returns (wall seconds, every per-request latency).
+fn closed_loop(
+    svc: &Arc<SamplingService>,
+    kind: SamplerKind,
+    clients: usize,
+    iters: usize,
+) -> (f64, Vec<f64>) {
+    let wall = Timer::start();
+    let mut latencies: Vec<f64> = Vec::with_capacity(clients * iters);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let svc = Arc::clone(svc);
+                scope.spawn(move || {
+                    let mut lats = Vec::with_capacity(iters);
+                    for i in 0..iters {
+                        let t = Timer::start();
+                        svc.sample(SampleRequest {
+                            model: "bench".into(),
+                            n: SAMPLES_PER_REQUEST,
+                            seed: Some(((c as u64) << 32) | i as u64),
+                            kind,
+                            deadline: None,
+                        })
+                        .expect("bench request failed");
+                        lats.push(t.secs());
+                    }
+                    lats
+                })
+            })
+            .collect();
+        for h in handles {
+            latencies.extend(h.join().expect("bench client panicked"));
+        }
+    });
+    (wall.secs(), latencies)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_loop_measures_and_reproduces() {
+        let svc = Arc::new(SamplingService::new(ServiceConfig {
+            shards: 2,
+            ..Default::default()
+        }));
+        let mut rng = Xoshiro::seeded(3);
+        svc.register("bench", tablelike_kernel(64, 4, &mut rng));
+        let (wall, lats) = closed_loop(&svc, SamplerKind::Cholesky, 2, 3);
+        assert!(wall > 0.0);
+        assert_eq!(lats.len(), 6);
+        assert!(lats.iter().all(|&l| l >= 0.0));
+    }
+}

@@ -1,10 +1,33 @@
-//! Service metrics: latency histograms, request counters, rejection stats.
+//! Service metrics: latency histograms, request counters, admission-control
+//! rejection counters, and per-shard batch statistics.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::util::json::Json;
 use crate::util::stats::ExpHistogram;
+
+/// Why the admission control refused a request (see
+/// [`Metrics::record_rejected`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// the (model, shard) queue was at `ServiceConfig::queue_depth`
+    QueueFull,
+    /// the request's deadline expired before a worker reached it
+    Deadline,
+    /// submitted while the service was draining for shutdown
+    ShuttingDown,
+}
+
+impl RejectReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue_full",
+            RejectReason::Deadline => "deadline",
+            RejectReason::ShuttingDown => "shutting_down",
+        }
+    }
+}
 
 /// Per-(model, algorithm) counters.
 #[derive(Debug, Default)]
@@ -22,6 +45,8 @@ struct ModelMetrics {
     samples: u64,
     proposals: u64,
     errors: u64,
+    /// admission-control rejections keyed by [`RejectReason::as_str`]
+    rejected: HashMap<&'static str, u64>,
     /// breakdown keyed by `SamplerKind::as_str()`
     by_algo: HashMap<String, AlgoMetrics>,
 }
@@ -34,21 +59,74 @@ impl ModelMetrics {
             samples: 0,
             proposals: 0,
             errors: 0,
+            rejected: HashMap::new(),
             by_algo: HashMap::new(),
         }
     }
 
 }
 
+/// Per-shard-worker counters (indexed by shard id).
+#[derive(Debug, Default, Clone)]
+struct ShardMetrics {
+    /// batches executed
+    batches: u64,
+    /// requests served across those batches
+    requests: u64,
+    /// largest single batch drained
+    max_batch: u64,
+}
+
 /// Thread-safe metrics sink.
 #[derive(Default)]
 pub struct Metrics {
     inner: Mutex<HashMap<String, ModelMetrics>>,
+    shards: Mutex<Vec<ShardMetrics>>,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
+    }
+
+    /// Preallocate per-shard counters for a service with `n` shards.
+    pub fn with_shards(n: usize) -> Metrics {
+        Metrics {
+            inner: Mutex::new(HashMap::new()),
+            shards: Mutex::new(vec![ShardMetrics::default(); n]),
+        }
+    }
+
+    /// Record one admission-control rejection.
+    pub fn record_rejected(&self, model: &str, reason: RejectReason) {
+        let mut map = self.inner.lock().unwrap();
+        *map.entry(model.to_string())
+            .or_insert_with(ModelMetrics::new)
+            .rejected
+            .entry(reason.as_str())
+            .or_insert(0) += 1;
+    }
+
+    /// Count of rejections recorded for `(model, reason)` so far.
+    pub fn rejected_count(&self, model: &str, reason: RejectReason) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(model)
+            .and_then(|m| m.rejected.get(reason.as_str()).copied())
+            .unwrap_or(0)
+    }
+
+    /// Record one drained batch on shard `shard`.
+    pub fn record_shard_batch(&self, shard: usize, batch_len: usize) {
+        let mut shards = self.shards.lock().unwrap();
+        if shard >= shards.len() {
+            shards.resize(shard + 1, ShardMetrics::default());
+        }
+        let s = &mut shards[shard];
+        s.batches += 1;
+        s.requests += batch_len as u64;
+        s.max_batch = s.max_batch.max(batch_len as u64);
     }
 
     /// Record one completed sampling call with no algorithm attribution
@@ -89,7 +167,9 @@ impl Metrics {
             .errors += 1;
     }
 
-    /// Snapshot as JSON (the `metrics` op of the wire protocol).
+    /// Snapshot as JSON (the `metrics` op of the wire protocol).  Model
+    /// names are the top-level keys; per-shard batch statistics ride along
+    /// under the reserved `"_shards"` key.
     pub fn snapshot(&self) -> Json {
         let map = self.inner.lock().unwrap();
         let mut obj = Json::obj();
@@ -110,6 +190,10 @@ impl Metrics {
                         .with("latency_mean_s", mean),
                 );
             }
+            let mut rejected = Json::obj();
+            for (&reason, &count) in m.rejected.iter() {
+                rejected.set(reason, count);
+            }
             obj.set(
                 name,
                 Json::obj()
@@ -117,10 +201,24 @@ impl Metrics {
                     .with("samples", m.samples)
                     .with("proposals", m.proposals)
                     .with("errors", m.errors)
+                    .with("rejected", rejected)
                     .with("latency_mean_s", m.latency.mean())
                     .with("latency_p50_s", m.latency.quantile(0.5))
                     .with("latency_p95_s", m.latency.quantile(0.95))
                     .with("algos", algos),
+            );
+        }
+        drop(map);
+        let shards = self.shards.lock().unwrap();
+        if !shards.is_empty() {
+            obj.set(
+                "_shards",
+                Json::arr(shards.iter().map(|s| {
+                    Json::obj()
+                        .with("batches", s.batches)
+                        .with("requests", s.requests)
+                        .with("max_batch", s.max_batch)
+                })),
             );
         }
         obj
@@ -149,6 +247,29 @@ mod tests {
         assert_eq!(mcmc.f64_or("requests", 0.0), 2.0);
         assert_eq!(mcmc.f64_or("proposals", 0.0), 1200.0);
         assert!((mcmc.f64_or("latency_mean_s", 0.0) - 0.030).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejections_and_shard_batches_accumulate() {
+        let m = Metrics::with_shards(2);
+        m.record_rejected("a", RejectReason::QueueFull);
+        m.record_rejected("a", RejectReason::QueueFull);
+        m.record_rejected("a", RejectReason::Deadline);
+        m.record_shard_batch(0, 4);
+        m.record_shard_batch(0, 9);
+        m.record_shard_batch(1, 1);
+        assert_eq!(m.rejected_count("a", RejectReason::QueueFull), 2);
+        assert_eq!(m.rejected_count("a", RejectReason::Deadline), 1);
+        assert_eq!(m.rejected_count("b", RejectReason::QueueFull), 0);
+        let snap = m.snapshot();
+        let rej = snap.get("a").and_then(|a| a.get("rejected")).unwrap();
+        assert_eq!(rej.f64_or("queue_full", 0.0), 2.0);
+        assert_eq!(rej.f64_or("deadline", 0.0), 1.0);
+        let shards = snap.get("_shards").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].f64_or("batches", 0.0), 2.0);
+        assert_eq!(shards[0].f64_or("requests", 0.0), 13.0);
+        assert_eq!(shards[0].f64_or("max_batch", 0.0), 9.0);
     }
 
     #[test]

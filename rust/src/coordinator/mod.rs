@@ -1,19 +1,25 @@
-//! The Layer-3 coordinator: a batching NDPP sampling service.
+//! The Layer-3 coordinator: a sharded NDPP serving pipeline.
 //!
 //! The paper's contribution is a sampling algorithm; the system built
 //! around it here is the piece a production deployment needs on top:
 //!
-//! * [`pool`] — fixed worker thread pool (tokio is unavailable offline;
-//!   the service is thread-per-core with an MPMC job channel).
-//! * [`registry`] — models (kernel + marginal kernel + proposal + tree)
-//!   registered once, preprocessing shared read-only across workers.
-//! * [`service`] — request router + dynamic batcher: concurrent
-//!   `sample(model, n, seed)` requests are coalesced per model and
-//!   dispatched to the pool; per-request RNG streams keep results
-//!   reproducible regardless of scheduling.
-//! * [`server`] — line-delimited-JSON TCP front end + a small client.
-//! * [`metrics`] — latency histograms, throughput counters, rejection
-//!   statistics.
+//! * [`registry`] — models (kernel + marginal kernel + proposal + tree +
+//!   MCMC warm start) registered once; the preprocessing is the immutable
+//!   *Prepared* half of every sampler, shared read-only across workers.
+//! * [`service`] — per-model **shard queues** with admission control:
+//!   requests are routed to bounded `(model, shard)` queues served by
+//!   dedicated shard workers, each holding warm per-model *Scratch*
+//!   workspaces; overload surfaces as immediate `queue_full` errors and
+//!   expired deadlines rather than unbounded buffering, and shutdown
+//!   drains gracefully.  Per-request seed streams
+//!   ([`crate::rng::request_stream`]) make results independent of shard
+//!   count, shard assignment, and batch composition.
+//! * [`server`] — line-delimited-JSON TCP front end (single and `batch`
+//!   ops, model audit, shard-aware metrics) + a small client.
+//! * [`metrics`] — latency histograms, throughput counters, rejection and
+//!   per-shard batch statistics.
+//! * [`pool`] — the generic worker thread pool (used by tooling; the
+//!   serving path runs on the shard workers above).
 
 pub mod metrics;
 pub mod pool;
@@ -21,6 +27,9 @@ pub mod registry;
 pub mod server;
 pub mod service;
 
+pub use metrics::{Metrics, RejectReason};
 pub use pool::WorkerPool;
 pub use registry::{ModelEntry, Registry, SamplerKind};
-pub use service::{SampleRequest, SampleResponse, SamplingService, ServiceConfig};
+pub use service::{
+    default_shards, SampleRequest, SampleResponse, SamplingService, ServiceConfig,
+};

@@ -6,13 +6,13 @@
 //! `Arc<ModelEntry>` that every worker thread samples from without locks.
 
 use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, OnceLock, RwLock};
 
 use anyhow::{anyhow, Result};
 
 use crate::linalg::backend::{self, BackendKind};
 use crate::ndpp::{MarginalKernel, NdppKernel, Proposal};
-use crate::sampler::{McmcConfig, SampleTree, TreeConfig};
+use crate::sampler::{mcmc, DensePrepared, McmcConfig, SampleTree, TreeConfig};
 
 /// Which sampling algorithm a request wants.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,7 +64,9 @@ impl SamplerKind {
     ];
 }
 
-/// A registered model with all sampler preprocessing.
+/// A registered model with all sampler preprocessing — the immutable
+/// *Prepared* half of every sampler, frozen behind an `Arc` so any number
+/// of shard workers sample it concurrently without locks.
 pub struct ModelEntry {
     pub name: String,
     pub kernel: NdppKernel,
@@ -74,11 +76,21 @@ pub struct ModelEntry {
     /// default chain configuration for [`SamplerKind::Mcmc`] requests
     /// (size from the marginal trace)
     pub mcmc: McmcConfig,
+    /// greedy-MAP warm start for the MCMC chain, computed once here so
+    /// per-request samplers skip the greedy run (`None` when the kernel is
+    /// numerically too rank-deficient to admit one; the service then
+    /// answers `Mcmc` requests for this model with an error)
+    pub mcmc_seed: Option<Vec<usize>>,
     /// compute backend active when this model was preprocessed (recorded
     /// so deployments can audit which kernels produced the cached state)
     pub backend: BackendKind,
     /// wall-clock seconds spent in each preprocessing stage
     pub prep_seconds: PrepTimes,
+    /// dense `M x M` marginal kernel, built lazily on the first
+    /// [`SamplerKind::Dense`] request (an `O(M^3)` build eagerly paid at
+    /// registration would dwarf the low-rank preprocessing) and shared
+    /// read-only afterwards
+    dense: OnceLock<Arc<DensePrepared>>,
 }
 
 /// Preprocessing timing breakdown (the Fig 2(b)/Table 3 rows).
@@ -87,6 +99,14 @@ pub struct PrepTimes {
     pub marginal: f64,
     pub spectral: f64,
     pub tree: f64,
+    /// greedy-MAP warm start for the MCMC chain
+    pub mcmc_seed: f64,
+}
+
+impl PrepTimes {
+    pub fn total(&self) -> f64 {
+        self.marginal + self.spectral + self.tree + self.mcmc_seed
+    }
 }
 
 impl ModelEntry {
@@ -105,6 +125,8 @@ impl ModelEntry {
         let tree = SampleTree::build(&spectral, tree_config);
         let t3 = std::time::Instant::now();
         let mcmc = McmcConfig::from_marginal(&marginal);
+        let mcmc_seed = mcmc::try_build_seed(&kernel, mcmc.size);
+        let t4 = std::time::Instant::now();
         ModelEntry {
             name: name.into(),
             kernel,
@@ -112,13 +134,34 @@ impl ModelEntry {
             proposal,
             tree,
             mcmc,
+            mcmc_seed,
             backend: backend::active_kind(),
             prep_seconds: PrepTimes {
                 marginal: (t1 - t0).as_secs_f64(),
                 spectral: (t2 - t1).as_secs_f64(),
                 tree: (t3 - t2).as_secs_f64(),
+                mcmc_seed: (t4 - t3).as_secs_f64(),
             },
+            dense: OnceLock::new(),
         }
+    }
+
+    /// The shared dense prepared core, built on first use.  Refuses ground
+    /// sets beyond [`SamplerKind::DENSE_MAX_M`] — each dense sample is
+    /// `O(M^3)`, so anything bigger is a caller mistake, not a workload.
+    pub fn dense_prepared(&self) -> Result<Arc<DensePrepared>> {
+        if self.kernel.m() > SamplerKind::DENSE_MAX_M {
+            return Err(anyhow!(
+                "dense sampler is O(M^3) and capped at M <= {}; model '{}' has M = {} \
+                 (use cholesky for an exact linear-time sample)",
+                SamplerKind::DENSE_MAX_M,
+                self.name,
+                self.kernel.m()
+            ));
+        }
+        Ok(Arc::clone(self.dense.get_or_init(|| {
+            Arc::new(DensePrepared::build(&self.kernel))
+        })))
     }
 }
 
@@ -152,6 +195,14 @@ impl Registry {
     pub fn names(&self) -> Vec<String> {
         let mut v: Vec<String> = self.models.read().unwrap().keys().cloned().collect();
         v.sort();
+        v
+    }
+
+    /// All entries, sorted by name (the `models` wire op's audit view).
+    pub fn entries(&self) -> Vec<Arc<ModelEntry>> {
+        let mut v: Vec<Arc<ModelEntry>> =
+            self.models.read().unwrap().values().cloned().collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
         v
     }
 
@@ -215,6 +266,22 @@ mod tests {
             before,
             after
         );
+    }
+
+    #[test]
+    fn prepare_precomputes_mcmc_seed_and_caps_dense() {
+        let mut rng = Xoshiro::seeded(4);
+        let kernel = NdppKernel::random_ondpp(24, 4, &mut rng);
+        let entry = ModelEntry::prepare("m4", kernel, TreeConfig::default());
+        let seed = entry.mcmc_seed.as_ref().expect("healthy kernel has a seed");
+        assert_eq!(seed.len(), entry.mcmc.size);
+        assert!(entry.prep_seconds.mcmc_seed >= 0.0);
+        assert!(entry.prep_seconds.total() >= entry.prep_seconds.tree);
+        // dense core is lazy, shared, and size-capped
+        let d1 = entry.dense_prepared().unwrap();
+        let d2 = entry.dense_prepared().unwrap();
+        assert!(Arc::ptr_eq(&d1, &d2), "dense core must be built once");
+        assert_eq!(d1.m(), 24);
     }
 
     #[test]

@@ -3,27 +3,43 @@
 //! Protocol (one JSON object per line, response per line):
 //!
 //! ```text
-//! -> {"op":"sample","model":"books","n":4,"seed":11,"algo":"rejection"}
-//!    (algo: cholesky | rejection | mcmc | dense)
+//! -> {"op":"sample","model":"books","n":4,"seed":11,"algo":"rejection",
+//!     "deadline_ms":250}
+//!    (algo: cholesky | rejection | mcmc | dense; deadline_ms optional)
 //! <- {"ok":true,"seed":11,"proposals":9,"latency_s":0.004,
 //!     "samples":[[3,17],[4],[],[8,90,411]]}
+//! -> {"op":"batch","requests":[{"model":"books","n":1,"seed":1},
+//!                              {"model":"books","n":2,"seed":2}]}
+//!    (each entry takes the same fields as a `sample` op; entries fan out
+//!     over the shard queues concurrently and per-seed results are
+//!     identical to individual `sample` ops)
+//! <- {"ok":true,"responses":[{"ok":true,...},{"ok":false,"error":"..."}]}
 //! -> {"op":"models"}
-//! <- {"ok":true,"models":["books"]}
+//! <- {"ok":true,"models":["books"],"detail":[{"name":"books","m":...,
+//!     "k2":...,"backend":"blocked","samplers":[...],"prep_s":{...}}]}
 //! -> {"op":"metrics"}
-//! <- {"ok":true,"metrics":{...}}
+//! <- {"ok":true,"metrics":{...},"shards":8,"queue_depths":[0,...]}
 //! -> {"op":"ping"} / {"op":"shutdown"}
 //! ```
+//!
+//! `shutdown` stops the accept loop, lets every connection thread finish
+//! its in-flight request, and joins them before `serve` returns; the
+//! service itself then drains its shard queues when dropped.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::registry::SamplerKind;
-use crate::coordinator::service::{SampleRequest, SamplingService};
+use crate::coordinator::service::{SampleRequest, SampleResponse, SamplingService};
 use crate::util::json::Json;
+
+/// How often a blocked connection read re-checks the shutdown flag.
+const READ_POLL: Duration = Duration::from_millis(200);
 
 /// Serve the service on `addr` until a `shutdown` op arrives.
 /// Returns the bound local address via `on_bound` (useful for tests with
@@ -37,8 +53,10 @@ pub fn serve(
     on_bound(listener.local_addr()?);
     let stop = Arc::new(AtomicBool::new(false));
     // accept loop; one thread per connection (connection counts are tiny
-    // compared to per-request work)
-    let mut handles = Vec::new();
+    // compared to per-request work).  Finished connection threads are
+    // reaped every poll tick so `handles` stays bounded on long-lived
+    // listeners.
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
     listener.set_nonblocking(true)?;
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
@@ -50,15 +68,35 @@ pub fn serve(
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                handles = reap_finished(handles);
                 std::thread::sleep(std::time::Duration::from_millis(5));
             }
             Err(e) => return Err(e.into()),
         }
     }
+    // drain: connection threads notice `stop` within one read poll and
+    // finish their in-flight request first
     for h in handles {
         let _ = h.join();
     }
     Ok(())
+}
+
+/// Join (and drop) every finished connection thread, keeping the rest.
+fn reap_finished(
+    handles: Vec<std::thread::JoinHandle<()>>,
+) -> Vec<std::thread::JoinHandle<()>> {
+    handles
+        .into_iter()
+        .filter_map(|h| {
+            if h.is_finished() {
+                let _ = h.join();
+                None
+            } else {
+                Some(h)
+            }
+        })
+        .collect()
 }
 
 fn handle_conn(
@@ -66,20 +104,44 @@ fn handle_conn(
     service: &SamplingService,
     stop: &AtomicBool,
 ) -> Result<()> {
-    stream.set_nonblocking(false)?;
+    // a finite read timeout lets this thread observe `stop` while idle, so
+    // `serve` can join it instead of waiting for the peer to hang up
+    stream.set_read_timeout(Some(READ_POLL))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let response = handle_line(&line, service, stop);
-        writer.write_all(response.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
-        if stop.load(Ordering::Relaxed) {
-            break;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {
+                // Ok(n > 0) without a trailing newline means the peer
+                // closed mid-line; serve the request, then hang up
+                let at_eof = !line.ends_with('\n');
+                if !line.trim().is_empty() {
+                    let response = handle_line(&line, service, stop);
+                    writer.write_all(response.to_string().as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    writer.flush()?;
+                }
+                line.clear();
+                if at_eof || stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            // timeout: keep any partially-read line buffered and re-check
+            // the shutdown flag
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
         }
     }
     Ok(())
@@ -89,6 +151,67 @@ fn err_json(msg: &str) -> Json {
     Json::obj().with("ok", false).with("error", msg)
 }
 
+/// Parse the request fields shared by the `sample` op and each `batch`
+/// entry.
+fn parse_sample_request(req: &Json) -> Result<SampleRequest> {
+    let kind = SamplerKind::parse(&req.str_or("algo", "rejection"))?;
+    Ok(SampleRequest {
+        model: req.str_or("model", ""),
+        n: req.usize_or("n", 1),
+        seed: req.get("seed").and_then(|s| s.as_u64()),
+        kind,
+        deadline: req
+            .get("deadline_ms")
+            .and_then(|d| d.as_u64())
+            .map(Duration::from_millis),
+    })
+}
+
+fn sample_response_json(resp: &SampleResponse) -> Json {
+    let samples = Json::arr(
+        resp.samples
+            .iter()
+            .map(|y| Json::arr(y.iter().map(|&i| Json::Num(i as f64)))),
+    );
+    Json::obj()
+        .with("ok", true)
+        .with("seed", resp.seed)
+        .with("proposals", resp.proposals)
+        .with("latency_s", resp.latency_secs)
+        .with("samples", samples)
+}
+
+/// The per-model audit record of the `models` op: what a deployment is
+/// serving, with which preprocessing, built by which backend, how fast.
+fn model_detail_json(entry: &crate::coordinator::registry::ModelEntry) -> Json {
+    let samplers: Vec<Json> = SamplerKind::ALL
+        .into_iter()
+        .filter(|&k| {
+            k != SamplerKind::Dense || entry.kernel.m() <= SamplerKind::DENSE_MAX_M
+        })
+        .map(|k| Json::Str(k.as_str().to_string()))
+        .collect();
+    let prep = &entry.prep_seconds;
+    Json::obj()
+        .with("name", entry.name.clone())
+        .with("m", entry.kernel.m())
+        .with("k2", 2 * entry.kernel.k())
+        .with("backend", entry.backend.as_str())
+        .with("samplers", Json::Arr(samplers))
+        .with("expected_rejections", entry.proposal.expected_rejections())
+        .with("mcmc_size", entry.mcmc.size)
+        .with("tree_bytes", entry.tree.memory_bytes())
+        .with(
+            "prep_s",
+            Json::obj()
+                .with("marginal", prep.marginal)
+                .with("spectral", prep.spectral)
+                .with("tree", prep.tree)
+                .with("mcmc_seed", prep.mcmc_seed)
+                .with("total", prep.total()),
+        )
+}
+
 fn handle_line(line: &str, service: &SamplingService, stop: &AtomicBool) -> Json {
     let req = match Json::parse(line) {
         Ok(j) => j,
@@ -96,42 +219,65 @@ fn handle_line(line: &str, service: &SamplingService, stop: &AtomicBool) -> Json
     };
     match req.str_or("op", "").as_str() {
         "ping" => Json::obj().with("ok", true).with("pong", true),
-        "models" => Json::obj().with("ok", true).with(
-            "models",
-            Json::arr(service.registry().names().into_iter().map(Json::Str)),
-        ),
+        "models" => Json::obj()
+            .with("ok", true)
+            .with(
+                "models",
+                Json::arr(service.registry().names().into_iter().map(Json::Str)),
+            )
+            .with(
+                "detail",
+                Json::arr(
+                    service
+                        .registry()
+                        .entries()
+                        .iter()
+                        .map(|e| model_detail_json(e)),
+                ),
+            ),
         "metrics" => Json::obj()
             .with("ok", true)
-            .with("metrics", service.metrics().snapshot()),
+            .with("metrics", service.metrics().snapshot())
+            .with("shards", service.shards())
+            .with(
+                "queue_depths",
+                Json::arr(service.queue_depths().into_iter().map(|d| Json::Num(d as f64))),
+            ),
         "shutdown" => {
             stop.store(true, Ordering::Relaxed);
             Json::obj().with("ok", true).with("stopping", true)
         }
-        "sample" => {
-            let kind = match SamplerKind::parse(&req.str_or("algo", "rejection")) {
-                Ok(k) => k,
-                Err(e) => return err_json(&e.to_string()),
-            };
-            let request = SampleRequest {
-                model: req.str_or("model", ""),
-                n: req.usize_or("n", 1),
-                seed: req.get("seed").and_then(|s| s.as_u64()),
-                kind,
-            };
-            match service.sample(request) {
-                Ok(resp) => {
-                    let samples = Json::arr(resp.samples.iter().map(|y| {
-                        Json::arr(y.iter().map(|&i| Json::Num(i as f64)))
-                    }));
-                    Json::obj()
-                        .with("ok", true)
-                        .with("seed", resp.seed)
-                        .with("proposals", resp.proposals)
-                        .with("latency_s", resp.latency_secs)
-                        .with("samples", samples)
-                }
+        "sample" => match parse_sample_request(&req) {
+            Err(e) => err_json(&e.to_string()),
+            Ok(request) => match service.sample(request) {
+                Ok(resp) => sample_response_json(&resp),
                 Err(e) => err_json(&e.to_string()),
-            }
+            },
+        },
+        "batch" => {
+            let Some(reqs) = req.get("requests").and_then(|r| r.as_arr()) else {
+                return err_json("batch op needs a 'requests' array");
+            };
+            // submit everything first so entries coalesce across the shard
+            // queues, then gather in order
+            let slots: Vec<std::result::Result<_, String>> = reqs
+                .iter()
+                .map(|r| match parse_sample_request(r) {
+                    Ok(request) => Ok(service.submit(request)),
+                    Err(e) => Err(e.to_string()),
+                })
+                .collect();
+            let responses = slots.into_iter().map(|slot| match slot {
+                Ok(rx) => match rx
+                    .recv()
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("worker dropped the reply")))
+                {
+                    Ok(resp) => sample_response_json(&resp),
+                    Err(e) => err_json(&e.to_string()),
+                },
+                Err(e) => err_json(&e),
+            });
+            Json::obj().with("ok", true).with("responses", Json::arr(responses))
         }
         other => err_json(&format!("unknown op '{other}'")),
     }
@@ -178,21 +324,46 @@ impl Client {
             "server error: {}",
             resp.str_or("error", "unknown")
         );
-        let samples = resp
-            .get("samples")
+        resp.get("samples")
             .and_then(|s| s.as_arr())
             .context("missing samples")?;
-        Ok(samples
-            .iter()
-            .map(|y| {
-                y.as_arr()
-                    .unwrap_or(&[])
-                    .iter()
-                    .filter_map(|i| i.as_usize())
-                    .collect()
-            })
-            .collect())
+        Ok(parse_samples(&resp))
     }
+
+    /// Issue one `batch` op; returns the per-entry response objects.
+    pub fn sample_batch(&mut self, requests: Vec<Json>) -> Result<Vec<Json>> {
+        let resp = self.call(
+            &Json::obj()
+                .with("op", "batch")
+                .with("requests", Json::Arr(requests)),
+        )?;
+        anyhow::ensure!(
+            resp.get("ok").and_then(|o| o.as_bool()) == Some(true),
+            "server error: {}",
+            resp.str_or("error", "unknown")
+        );
+        Ok(resp
+            .get("responses")
+            .and_then(|r| r.as_arr())
+            .context("missing responses")?
+            .to_vec())
+    }
+}
+
+/// Extract the `samples` array of a successful response.
+pub fn parse_samples(resp: &Json) -> Vec<Vec<usize>> {
+    resp.get("samples")
+        .and_then(|s| s.as_arr())
+        .unwrap_or(&[])
+        .iter()
+        .map(|y| {
+            y.as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|i| i.as_usize())
+                .collect()
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -205,7 +376,7 @@ mod tests {
     #[test]
     fn end_to_end_over_tcp() {
         let svc = Arc::new(SamplingService::new(ServiceConfig {
-            workers: 2,
+            shards: 2,
             ..Default::default()
         }));
         let mut rng = Xoshiro::seeded(5);
@@ -225,10 +396,17 @@ mod tests {
         // ping
         let pong = client.call(&Json::obj().with("op", "ping")).unwrap();
         assert_eq!(pong.get("pong").and_then(|b| b.as_bool()), Some(true));
-        // models
+        // models: names + audit detail
         let models = client.call(&Json::obj().with("op", "models")).unwrap();
         assert_eq!(models.get("models").unwrap().as_arr().unwrap().len(), 1);
-        // sample (both algorithms, deterministic by seed)
+        let detail = &models.get("detail").unwrap().as_arr().unwrap()[0];
+        assert_eq!(detail.str_or("name", ""), "toy");
+        assert_eq!(detail.f64_or("m", 0.0), 24.0);
+        assert_eq!(detail.f64_or("k2", 0.0), 8.0);
+        assert!(!detail.str_or("backend", "").is_empty());
+        assert_eq!(detail.get("samplers").unwrap().as_arr().unwrap().len(), 4);
+        assert!(detail.get("prep_s").unwrap().f64_or("total", -1.0) >= 0.0);
+        // sample (deterministic by seed)
         let s1 = client.sample("toy", 3, 42, "rejection").unwrap();
         let s2 = client.sample("toy", 3, 42, "rejection").unwrap();
         assert_eq!(s1, s2);
@@ -240,12 +418,31 @@ mod tests {
         let d2 = client.sample("toy", 2, 8, "dense").unwrap();
         assert_eq!(d1, d2);
         assert_eq!(d1.len(), 2);
+        // batch op: per-entry results identical to the single-op path,
+        // bad entries answered in place without failing the batch
+        let batch = client
+            .sample_batch(vec![
+                Json::obj()
+                    .with("model", "toy")
+                    .with("n", 3)
+                    .with("seed", 42)
+                    .with("algo", "rejection"),
+                Json::obj().with("model", "nope").with("n", 1),
+                Json::obj().with("model", "toy").with("algo", "bogus"),
+            ])
+            .unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(parse_samples(&batch[0]), s1);
+        assert_eq!(batch[1].get("ok").and_then(|b| b.as_bool()), Some(false));
+        assert_eq!(batch[2].get("ok").and_then(|b| b.as_bool()), Some(false));
         // error paths
         let bad = client.call(&Json::obj().with("op", "sample").with("model", "nope")).unwrap();
         assert_eq!(bad.get("ok").and_then(|b| b.as_bool()), Some(false));
-        // metrics
+        // metrics now carry shard info
         let m = client.call(&Json::obj().with("op", "metrics")).unwrap();
         assert!(m.get("metrics").unwrap().get("toy").is_some());
+        assert_eq!(m.f64_or("shards", 0.0), 2.0);
+        assert_eq!(m.get("queue_depths").unwrap().as_arr().unwrap().len(), 2);
         // shutdown
         let stop = client.call(&Json::obj().with("op", "shutdown")).unwrap();
         assert_eq!(stop.get("ok").and_then(|b| b.as_bool()), Some(true));

@@ -1,45 +1,87 @@
-//! The sampling service: request router + dynamic micro-batcher.
+//! The sampling service: per-model shard queues with admission control.
 //!
-//! Requests (`sample(model, n, seed, algo)`) are pushed into a per-model
-//! pending queue; a flusher thread drains queues every
-//! `flush_interval_us` (or immediately once `max_batch` requests are
-//! pending for one model) and dispatches one **batch job** per
-//! (model, algorithm) group to the worker pool.  Batching amortizes
-//! sampler construction — scratch matrices, and for the rejection path the
-//! shared tree/proposal lookups — across the whole batch, vLLM-router
-//! style.
+//! The serving pipeline is built around the paper's amortization story:
+//! all preprocessing is frozen into an immutable [`ModelEntry`] (the
+//! *Prepared* half of every sampler) at registration, and sampling is a
+//! pure function of `(prepared model, request seed)`.  The coordinator
+//! turns that into throughput:
+//!
+//! * **Shard workers** — `ServiceConfig::shards` dedicated threads, each
+//!   owning one shard of every model's queue space and a warm per-model
+//!   *Scratch* workspace, so N workers sample the same model concurrently
+//!   with zero locking on the hot path and zero per-call allocation in the
+//!   sampler loops.
+//! * **Per-(model, shard) bounded queues** — requests are routed round-
+//!   robin to a shard and FIFO within `(model, shard)`.  A worker drains
+//!   one model's queue as a **batch** (up to `max_batch`), amortizing
+//!   sampler construction across coalesced requests, vLLM-router style.
+//! * **Admission control** — a full queue rejects immediately with a
+//!   `queue_full` error instead of buffering unboundedly; requests can
+//!   carry a deadline after which a worker discards them unserved with a
+//!   `deadline` error.  Both are counted per model in [`Metrics`].
+//! * **Graceful drain** — dropping the service stops intake, lets workers
+//!   finish every queued request, and joins them.
 //!
 //! Reproducibility: every request carries a seed (assigned from a counter
-//! when absent); each sample inside a request uses the request's RNG
-//! stream, so results are independent of batching and thread scheduling.
+//! when absent); its samples are drawn from [`crate::rng::request_stream`]
+//! `(seed)`, a pure function of the seed — so results are byte-identical
+//! regardless of shard count, shard assignment, batch composition, and
+//! worker interleaving (asserted end to end in `tests/serving.rs`).
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::coordinator::metrics::Metrics;
-use crate::coordinator::pool::WorkerPool;
+use crate::coordinator::metrics::{Metrics, RejectReason};
 use crate::coordinator::registry::{ModelEntry, Registry, SamplerKind};
 use crate::linalg::backend::{self, BackendKind};
 use crate::ndpp::NdppKernel;
-use crate::rng::Xoshiro;
+use crate::rng;
 use crate::sampler::{
-    CholeskySampler, DenseCholeskySampler, McmcSampler, RejectionSampler, Sampler, TreeConfig,
+    cholesky, dense, CholeskyScratch, DenseScratch, ElementaryScratch, McmcSampler,
+    RejectionSampler, Sampler,
 };
 use crate::util::Timer;
+
+/// Shard count when `ServiceConfig::shards == 0`: one worker per core,
+/// coordinated with the blocked backend so GEMM threads and shard workers
+/// do not oversubscribe.  The backend only fans out above ~16 MFLOP —
+/// registration-time work — while steady-state per-sample kernels are
+/// single-threaded, so by default every core gets a shard; when the
+/// operator explicitly caps `NDPP_BACKEND_THREADS` *below* the core count,
+/// the cap is treated as a deliberate split and those cores are left to
+/// the backend.
+pub fn default_shards() -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2);
+    match std::env::var("NDPP_BACKEND_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        Some(t) if t > 0 && t < cores => (cores - t).max(1),
+        _ => cores,
+    }
+}
 
 /// Service tuning knobs.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
-    pub workers: usize,
-    /// batcher flush period (microseconds)
-    pub flush_interval_us: u64,
-    /// flush a model's queue immediately at this many pending requests
+    /// shard worker threads (0 = [`default_shards`])
+    pub shards: usize,
+    /// bound on each (model, shard) queue; submissions beyond it are
+    /// rejected immediately with a `queue_full` error
+    pub queue_depth: usize,
+    /// default deadline applied to requests that do not carry their own
+    /// (`None` = no deadline)
+    pub deadline: Option<Duration>,
+    /// most requests drained into one coalesced batch per worker pass
     pub max_batch: usize,
-    pub tree: TreeConfig,
+    pub tree: crate::sampler::TreeConfig,
     /// pin the process-wide linalg backend for this deployment
     /// (`None` = leave the `NDPP_BACKEND` / default selection in place)
     pub backend: Option<BackendKind>,
@@ -48,12 +90,11 @@ pub struct ServiceConfig {
 impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
-            workers: std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(2),
-            flush_interval_us: 500,
+            shards: 0,
+            queue_depth: 1024,
+            deadline: None,
             max_batch: 64,
-            tree: TreeConfig::default(),
+            tree: crate::sampler::TreeConfig::default(),
             backend: None,
         }
     }
@@ -66,6 +107,20 @@ pub struct SampleRequest {
     pub n: usize,
     pub seed: Option<u64>,
     pub kind: SamplerKind,
+    /// per-request deadline override (`None` = `ServiceConfig::deadline`)
+    pub deadline: Option<Duration>,
+}
+
+impl Default for SampleRequest {
+    fn default() -> Self {
+        SampleRequest {
+            model: String::new(),
+            n: 1,
+            seed: None,
+            kind: SamplerKind::Cholesky,
+            deadline: None,
+        }
+    }
 }
 
 /// Response for one request.
@@ -82,77 +137,113 @@ struct Pending {
     req: SampleRequest,
     seed: u64,
     enqueued: Timer,
+    deadline: Option<Instant>,
     reply: Sender<Result<SampleResponse>>,
+}
+
+/// Per-shard queue space: one FIFO per model, guarded by one lock per
+/// shard (never a global lock).
+struct ShardState {
+    queues: HashMap<String, VecDeque<Pending>>,
+    /// total requests queued in this shard (fast emptiness check)
+    pending: usize,
+    stopping: bool,
+}
+
+struct Shard {
+    state: Mutex<ShardState>,
+    cv: Condvar,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            state: Mutex::new(ShardState {
+                queues: HashMap::new(),
+                pending: 0,
+                stopping: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// Per-(worker, model) reusable sampler workspaces — the *Scratch* half of
+/// the Prepared/Scratch split, kept warm across batches so steady-state
+/// sampling allocates only the result vectors.
+#[derive(Default)]
+struct WorkerScratch {
+    cholesky: Option<CholeskyScratch>,
+    elementary: Option<ElementaryScratch>,
+    dense: Option<DenseScratch>,
 }
 
 /// The coordinator service.
 pub struct SamplingService {
     registry: Arc<Registry>,
-    pool: Arc<WorkerPool>,
     metrics: Arc<Metrics>,
     config: ServiceConfig,
-    pending: Arc<Mutex<HashMap<String, Vec<Pending>>>>,
+    shards: Vec<Arc<Shard>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    rr: AtomicUsize,
     seed_counter: AtomicU64,
-    stop: Arc<AtomicBool>,
-    flusher: Option<std::thread::JoinHandle<()>>,
 }
 
 impl SamplingService {
-    pub fn new(config: ServiceConfig) -> SamplingService {
+    pub fn new(mut config: ServiceConfig) -> SamplingService {
         if let Some(kind) = config.backend {
             backend::set_active(kind);
         }
+        if config.shards == 0 {
+            config.shards = default_shards();
+        }
+        config.max_batch = config.max_batch.max(1);
+        config.queue_depth = config.queue_depth.max(1);
         let registry = Arc::new(Registry::new());
-        let pool = Arc::new(WorkerPool::new(config.workers));
-        let metrics = Arc::new(Metrics::new());
-        let pending: Arc<Mutex<HashMap<String, Vec<Pending>>>> =
-            Arc::new(Mutex::new(HashMap::new()));
-        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Metrics::with_shards(config.shards));
+        let shards: Vec<Arc<Shard>> =
+            (0..config.shards).map(|_| Arc::new(Shard::new())).collect();
 
-        let flusher = {
-            let pending = Arc::clone(&pending);
-            let registry = Arc::clone(&registry);
-            let pool = Arc::clone(&pool);
-            let metrics = Arc::clone(&metrics);
-            let stop = Arc::clone(&stop);
-            let interval = std::time::Duration::from_micros(config.flush_interval_us);
-            std::thread::Builder::new()
-                .name("ndpp-batcher".into())
-                .spawn(move || {
-                    while !stop.load(Ordering::Relaxed) {
-                        Self::flush_all(&pending, &registry, &pool, &metrics);
-                        std::thread::sleep(interval);
-                    }
-                    // final drain
-                    Self::flush_all(&pending, &registry, &pool, &metrics);
-                })
-                .expect("spawning batcher thread")
-        };
+        let workers = shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let shard = Arc::clone(shard);
+                let registry = Arc::clone(&registry);
+                let metrics = Arc::clone(&metrics);
+                let max_batch = config.max_batch;
+                std::thread::Builder::new()
+                    .name(format!("ndpp-shard-{i}"))
+                    .spawn(move || Self::worker_loop(i, &shard, &registry, &metrics, max_batch))
+                    .expect("spawning shard worker")
+            })
+            .collect();
 
         SamplingService {
             registry,
-            pool,
             metrics,
             config,
-            pending,
+            shards,
+            workers,
+            rr: AtomicUsize::new(0),
             seed_counter: AtomicU64::new(0x5EED),
-            stop,
-            flusher: Some(flusher),
         }
     }
 
     /// Register a model: runs all sampler preprocessing (marginal kernel,
-    /// Youla/proposal, tree).
+    /// Youla/proposal, tree, MCMC warm start).
     pub fn register(&self, name: &str, kernel: NdppKernel) {
         let entry = ModelEntry::prepare(name, kernel, self.config.tree);
         crate::info!(
             "service",
-            "registered '{name}' (M={}, 2K={}, E[rejections]={:.2}, tree={}B, backend={})",
+            "registered '{name}' (M={}, 2K={}, E[rejections]={:.2}, tree={}B, backend={}, \
+             prep={:.3}s)",
             entry.kernel.m(),
             2 * entry.kernel.k(),
             entry.proposal.expected_rejections(),
             entry.tree.memory_bytes(),
-            entry.backend.as_str()
+            entry.backend.as_str(),
+            entry.prep_seconds.total()
         );
         self.registry.insert(entry);
     }
@@ -165,28 +256,70 @@ impl SamplingService {
         &self.metrics
     }
 
-    /// Enqueue a request; returns a receiver for the response.
+    /// Shard worker count.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.config
+    }
+
+    /// Instantaneous queued-request count per shard (operator gauge).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .map(|s| s.state.lock().unwrap().pending)
+            .collect()
+    }
+
+    /// Enqueue a request; returns a receiver for the response.  Admission
+    /// control happens here: a full (model, shard) queue or a draining
+    /// service rejects immediately through the same channel.
     pub fn submit(&self, req: SampleRequest) -> Receiver<Result<SampleResponse>> {
         let (tx, rx) = channel();
         let seed = req
             .seed
             .unwrap_or_else(|| self.seed_counter.fetch_add(1, Ordering::Relaxed));
-        let model = req.model.clone();
+        let deadline = req
+            .deadline
+            .or(self.config.deadline)
+            .map(|d| Instant::now() + d);
+        let shard_idx = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        let shard = &self.shards[shard_idx];
         {
-            let mut pending = self.pending.lock().unwrap();
-            pending.entry(model.clone()).or_default().push(Pending {
+            let mut st = shard.state.lock().unwrap();
+            if st.stopping {
+                self.metrics
+                    .record_rejected(&req.model, RejectReason::ShuttingDown);
+                let _ = tx.send(Err(anyhow!(
+                    "shutting_down: service is draining, request for model '{}' not accepted",
+                    req.model
+                )));
+                return rx;
+            }
+            let q = st.queues.entry(req.model.clone()).or_default();
+            if q.len() >= self.config.queue_depth {
+                self.metrics
+                    .record_rejected(&req.model, RejectReason::QueueFull);
+                let _ = tx.send(Err(anyhow!(
+                    "queue_full: shard {shard_idx} queue for model '{}' is at depth {} — \
+                     retry later, spread load, or raise ServiceConfig::queue_depth",
+                    req.model,
+                    self.config.queue_depth
+                )));
+                return rx;
+            }
+            q.push_back(Pending {
                 req,
                 seed,
                 enqueued: Timer::start(),
+                deadline,
                 reply: tx,
             });
-            // early flush on a full batch
-            if pending[&model].len() >= self.config.max_batch {
-                let batch = pending.remove(&model).unwrap();
-                drop(pending);
-                Self::dispatch(&self.registry, &self.pool, &self.metrics, model, batch);
-            }
+            st.pending += 1;
         }
+        shard.cv.notify_one();
         rx
     }
 
@@ -198,117 +331,197 @@ impl SamplingService {
             .unwrap_or_else(|_| Err(anyhow::anyhow!("sampling worker dropped the reply")))
     }
 
-    fn flush_all(
-        pending: &Mutex<HashMap<String, Vec<Pending>>>,
-        registry: &Arc<Registry>,
-        pool: &Arc<WorkerPool>,
-        metrics: &Arc<Metrics>,
-    ) {
-        let drained: Vec<(String, Vec<Pending>)> = {
-            let mut map = pending.lock().unwrap();
-            map.drain().collect()
-        };
-        for (model, batch) in drained {
-            Self::dispatch(registry, pool, metrics, model, batch);
-        }
+    /// Submit many requests at once and wait for all responses, preserving
+    /// order (the `batch` op of the wire protocol).  Requests fan out over
+    /// the shard queues exactly as individual [`SamplingService::submit`]
+    /// calls would, so per-seed results are identical either way.
+    pub fn sample_batch(&self, reqs: Vec<SampleRequest>) -> Vec<Result<SampleResponse>> {
+        let rxs: Vec<_> = reqs.into_iter().map(|r| self.submit(r)).collect();
+        rxs.into_iter()
+            .map(|rx| {
+                rx.recv().unwrap_or_else(|_| {
+                    Err(anyhow::anyhow!("sampling worker dropped the reply"))
+                })
+            })
+            .collect()
     }
 
-    fn dispatch(
-        registry: &Arc<Registry>,
-        pool: &Arc<WorkerPool>,
-        metrics: &Arc<Metrics>,
-        model: String,
-        batch: Vec<Pending>,
+    // ---- shard worker ---------------------------------------------------
+
+    fn worker_loop(
+        shard_idx: usize,
+        shard: &Shard,
+        registry: &Registry,
+        metrics: &Metrics,
+        max_batch: usize,
     ) {
-        let registry = Arc::clone(registry);
-        let metrics = Arc::clone(metrics);
-        pool.submit(move || {
-            let entry = match registry.get(&model) {
-                Ok(e) => e,
+        let mut scratches: HashMap<String, WorkerScratch> = HashMap::new();
+        loop {
+            let batch = {
+                let mut st = shard.state.lock().unwrap();
+                loop {
+                    if st.pending > 0 {
+                        break Some(Self::pop_batch(&mut st, max_batch));
+                    }
+                    if st.stopping {
+                        break None;
+                    }
+                    st = shard.cv.wait(st).unwrap();
+                }
+            };
+            let Some((model, batch)) = batch else { break };
+            metrics.record_shard_batch(shard_idx, batch.len());
+            match registry.get(&model) {
+                Ok(entry) => {
+                    let ws = scratches.entry(model).or_default();
+                    // panic isolation (same contract the old WorkerPool
+                    // gave): a degenerate model panicking inside a sampler
+                    // must not kill the shard and strand its queue.  The
+                    // unreplied requests of the poisoned batch drop their
+                    // senders, so blocked callers get an error, not a hang;
+                    // scratches are fully reset at next use.
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        Self::run_batch(&entry, ws, metrics, batch);
+                    }));
+                    if run.is_err() {
+                        crate::warnlog!(
+                            "service",
+                            "batch for model '{}' panicked on shard {shard_idx}; \
+                             worker continues",
+                            entry.name
+                        );
+                    }
+                }
                 Err(err) => {
                     for p in batch {
                         metrics.record_error(&model);
-                        let _ = p.reply.send(Err(anyhow::anyhow!("{err}")));
+                        let _ = p.reply.send(Err(anyhow!("{err}")));
                     }
-                    return;
                 }
-            };
-            Self::run_batch(&entry, &metrics, batch);
-        });
+            }
+        }
     }
 
-    /// Execute a coalesced batch on one worker: group by algorithm so each
-    /// sampler's scratch state is reused across the whole group.  Every
-    /// sampler (including the MCMC chain, which restarts per `sample()`
-    /// call) is a pure function of `(model, request seed)`, so reuse never
-    /// leaks state between requests.  A request the model cannot serve
-    /// (e.g. [`SamplerKind::Dense`] beyond its size cap) gets an `Err`
-    /// reply without poisoning the rest of the batch.
-    fn run_batch(entry: &ModelEntry, metrics: &Metrics, batch: Vec<Pending>) {
-        let mut cholesky: Option<CholeskySampler<'_>> = None;
-        let mut rejection: Option<RejectionSampler<'_>> = None;
-        let mut mcmc: Option<McmcSampler<'_>> = None;
-        let mut dense: Option<DenseCholeskySampler> = None;
+    /// Pick the model whose head request has waited longest (no model can
+    /// be starved by a chatty neighbor) and drain up to `max_batch` of its
+    /// requests.
+    fn pop_batch(st: &mut ShardState, max_batch: usize) -> (String, Vec<Pending>) {
+        let model = st
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .max_by(|(_, a), (_, b)| {
+                let wa = a.front().map(|p| p.enqueued.secs()).unwrap_or(0.0);
+                let wb = b.front().map(|p| p.enqueued.secs()).unwrap_or(0.0);
+                wa.partial_cmp(&wb).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|(name, _)| name.clone())
+            .expect("pending > 0 implies a non-empty queue");
+        let q = st.queues.get_mut(&model).expect("model queue exists");
+        let take = q.len().min(max_batch);
+        let batch: Vec<Pending> = q.drain(..take).collect();
+        if q.is_empty() {
+            st.queues.remove(&model);
+        }
+        st.pending -= batch.len();
+        (model, batch)
+    }
 
+    /// Execute a coalesced batch on one shard worker.  The model's
+    /// *Prepared* state comes from the shared `entry`; all mutable state
+    /// lives in the worker's own `ws`, reused across batches.  Every
+    /// sampler is a pure function of `(model, request seed)` via
+    /// [`crate::rng::request_stream`], so reuse never leaks state between
+    /// requests, and a request the model cannot serve (an expired
+    /// deadline, [`SamplerKind::Dense`] beyond its size cap) gets an `Err`
+    /// reply without poisoning the rest of the batch.
+    fn run_batch(
+        entry: &ModelEntry,
+        ws: &mut WorkerScratch,
+        metrics: &Metrics,
+        batch: Vec<Pending>,
+    ) {
         for p in batch {
-            let mut rng = Xoshiro::seeded(p.seed);
+            if let Some(deadline) = p.deadline {
+                if Instant::now() > deadline {
+                    metrics.record_rejected(&entry.name, RejectReason::Deadline);
+                    let _ = p.reply.send(Err(anyhow!(
+                        "deadline exceeded: request for model '{}' waited {:.1} ms in queue",
+                        entry.name,
+                        p.enqueued.secs() * 1e3
+                    )));
+                    continue;
+                }
+            }
+            let mut rng = rng::request_stream(p.seed);
             // unit of work per sample: proposal draws for the rejection
             // sampler, chain steps for MCMC, one sweep for cholesky/dense
             let mut proposals = 0u64;
             let result: Result<Vec<Vec<usize>>> = match p.req.kind {
                 SamplerKind::Cholesky => {
-                    let s = cholesky
-                        .get_or_insert_with(|| CholeskySampler::from_marginal(&entry.marginal));
+                    let scratch = ws
+                        .cholesky
+                        .get_or_insert_with(|| CholeskyScratch::for_marginal(&entry.marginal));
                     Ok((0..p.req.n)
                         .map(|_| {
                             proposals += 1;
-                            s.sample(&mut rng)
+                            cholesky::sample_with_logprob_into(&entry.marginal, scratch, &mut rng)
+                                .0
                         })
                         .collect())
                 }
                 SamplerKind::Rejection => {
-                    let s = rejection.get_or_insert_with(|| {
-                        RejectionSampler::new(&entry.kernel, &entry.proposal, &entry.tree)
+                    let scratch = ws.elementary.take().unwrap_or_else(|| {
+                        ElementaryScratch::with_rank(entry.tree.spectral().rank())
                     });
-                    Ok((0..p.req.n)
+                    let mut s = RejectionSampler::with_scratch(
+                        &entry.kernel,
+                        &entry.proposal,
+                        &entry.tree,
+                        scratch,
+                    );
+                    let out = (0..p.req.n)
                         .map(|_| {
                             let y = s.sample(&mut rng);
                             proposals += s.last_proposals as u64;
                             y
                         })
-                        .collect())
+                        .collect();
+                    ws.elementary = Some(s.into_scratch());
+                    Ok(out)
                 }
-                SamplerKind::Mcmc => {
-                    let s =
-                        mcmc.get_or_insert_with(|| McmcSampler::new(&entry.kernel, entry.mcmc));
-                    Ok((0..p.req.n)
-                        .map(|_| {
-                            let y = s.sample(&mut rng);
-                            proposals += s.last_steps as u64;
-                            y
-                        })
-                        .collect())
-                }
-                SamplerKind::Dense => {
-                    if entry.kernel.m() > SamplerKind::DENSE_MAX_M {
-                        Err(anyhow::anyhow!(
-                            "dense sampler is O(M^3) and capped at M <= {}; model '{}' has M = {} \
-                             (use cholesky for an exact linear-time sample)",
-                            SamplerKind::DENSE_MAX_M,
-                            entry.name,
-                            entry.kernel.m()
-                        ))
-                    } else {
-                        let s = dense
-                            .get_or_insert_with(|| DenseCholeskySampler::new(&entry.kernel));
+                SamplerKind::Mcmc => match &entry.mcmc_seed {
+                    None => Err(anyhow!(
+                        "model '{}' has no MCMC warm start: the kernel admits no size-{} \
+                         subset with positive probability (numerically rank-deficient); \
+                         use cholesky or rejection for this model",
+                        entry.name,
+                        entry.mcmc.size
+                    )),
+                    Some(seed) => {
+                        let mut s =
+                            McmcSampler::with_seed(&entry.kernel, entry.mcmc, seed.clone());
                         Ok((0..p.req.n)
                             .map(|_| {
-                                proposals += 1;
-                                s.sample(&mut rng)
+                                let y = s.sample(&mut rng);
+                                proposals += s.last_steps as u64;
+                                y
                             })
                             .collect())
                     }
-                }
+                },
+                SamplerKind::Dense => match entry.dense_prepared() {
+                    Err(e) => Err(e),
+                    Ok(prepared) => {
+                        let scratch = ws.dense.get_or_insert_with(DenseScratch::new);
+                        Ok((0..p.req.n)
+                            .map(|_| {
+                                proposals += 1;
+                                dense::sample_into(&prepared, scratch, &mut rng)
+                            })
+                            .collect())
+                    }
+                },
             };
             let latency = p.enqueued.secs();
             match result {
@@ -337,10 +550,15 @@ impl SamplingService {
 }
 
 impl Drop for SamplingService {
+    /// Graceful drain: stop intake, let every shard worker finish its
+    /// queued requests, then join the workers.
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(f) = self.flusher.take() {
-            let _ = f.join();
+        for shard in &self.shards {
+            shard.state.lock().unwrap().stopping = true;
+            shard.cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
         }
     }
 }
@@ -348,11 +566,11 @@ impl Drop for SamplingService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Xoshiro;
 
     fn service_with_model(m: usize, k: usize) -> SamplingService {
         let svc = SamplingService::new(ServiceConfig {
-            workers: 2,
-            flush_interval_us: 200,
+            shards: 2,
             max_batch: 8,
             ..Default::default()
         });
@@ -371,6 +589,7 @@ mod tests {
                     n: 5,
                     seed: Some(7),
                     kind,
+                    deadline: None,
                 })
                 .unwrap();
             assert_eq!(resp.samples.len(), 5, "{}", kind.as_str());
@@ -387,6 +606,11 @@ mod tests {
             assert_eq!(a.f64_or("samples", 0.0), 5.0, "{}", kind.as_str());
             assert_eq!(a.f64_or("requests", 0.0), 1.0);
         }
+        // every served batch is attributed to a shard
+        let shards = snap.get("_shards").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(shards.len(), 2);
+        let total: f64 = shards.iter().map(|s| s.f64_or("requests", 0.0)).sum();
+        assert_eq!(total, 4.0);
     }
 
     #[test]
@@ -397,6 +621,7 @@ mod tests {
             n: 1,
             seed: Some(1),
             kind: SamplerKind::Cholesky,
+            deadline: None,
         });
         assert!(err.is_err());
     }
@@ -409,6 +634,7 @@ mod tests {
             n: 3,
             seed: Some(seed),
             kind: SamplerKind::Rejection,
+            deadline: None,
         };
         // fire a pile of concurrent requests to force coalescing
         let rxs: Vec<_> = (0..20).map(|i| svc.submit(req(100 + (i % 4)))).collect();
@@ -424,10 +650,40 @@ mod tests {
     }
 
     #[test]
+    fn sample_batch_preserves_order_and_seeds() {
+        let svc = service_with_model(32, 4);
+        let reqs: Vec<SampleRequest> = (0..6)
+            .map(|i| SampleRequest {
+                model: "test".into(),
+                n: 2,
+                seed: Some(500 + i),
+                kind: SamplerKind::Cholesky,
+                deadline: None,
+            })
+            .collect();
+        let responses = svc.sample_batch(reqs);
+        assert_eq!(responses.len(), 6);
+        for (i, r) in responses.iter().enumerate() {
+            let r = r.as_ref().unwrap();
+            assert_eq!(r.seed, 500 + i as u64);
+            // batch submission matches the single-request path exactly
+            let single = svc
+                .sample(SampleRequest {
+                    model: "test".into(),
+                    n: 2,
+                    seed: Some(500 + i as u64),
+                    kind: SamplerKind::Cholesky,
+                    deadline: None,
+                })
+                .unwrap();
+            assert_eq!(r.samples, single.samples);
+        }
+    }
+
+    #[test]
     fn dense_requests_beyond_cap_error_without_poisoning_batch() {
         let svc = SamplingService::new(ServiceConfig {
-            workers: 1,
-            flush_interval_us: 200,
+            shards: 1,
             max_batch: 8,
             ..Default::default()
         });
@@ -441,12 +697,14 @@ mod tests {
             n: 1,
             seed: Some(1),
             kind: SamplerKind::Dense,
+            deadline: None,
         });
         let chol_rx = svc.submit(SampleRequest {
             model: "big".into(),
             n: 2,
             seed: Some(2),
             kind: SamplerKind::Cholesky,
+            deadline: None,
         });
         let err = dense_rx.recv().unwrap();
         assert!(err.is_err(), "oversized dense request must be rejected");
@@ -460,7 +718,7 @@ mod tests {
     fn config_can_pin_backend() {
         // pinning the (default) blocked backend is a no-op but must stick
         let svc = SamplingService::new(ServiceConfig {
-            workers: 1,
+            shards: 1,
             backend: Some(BackendKind::Blocked),
             ..Default::default()
         });
@@ -480,6 +738,7 @@ mod tests {
                 n: 2,
                 seed: None,
                 kind: SamplerKind::Cholesky,
+                deadline: None,
             })
             .unwrap();
         }
@@ -487,5 +746,36 @@ mod tests {
         let t = snap.get("test").unwrap();
         assert_eq!(t.f64_or("samples", 0.0), 6.0);
         assert!(t.f64_or("requests", 0.0) >= 3.0);
+    }
+
+    #[test]
+    fn drop_drains_queued_requests() {
+        // every accepted request gets a reply even when the service is
+        // dropped immediately after submission (graceful drain)
+        let svc = service_with_model(32, 4);
+        let rxs: Vec<_> = (0..30)
+            .map(|i| {
+                svc.submit(SampleRequest {
+                    model: "test".into(),
+                    n: 1,
+                    seed: Some(i),
+                    kind: SamplerKind::Cholesky,
+                    deadline: None,
+                })
+            })
+            .collect();
+        drop(svc);
+        for rx in rxs {
+            let resp = rx.recv().expect("drained, not dropped").unwrap();
+            assert_eq!(resp.samples.len(), 1);
+        }
+    }
+
+    #[test]
+    fn auto_shard_default_is_positive() {
+        assert!(default_shards() >= 1);
+        let svc = SamplingService::new(ServiceConfig::default());
+        assert!(svc.shards() >= 1);
+        assert_eq!(svc.queue_depths().len(), svc.shards());
     }
 }

@@ -88,6 +88,48 @@
 //! `--backend`.  `cargo bench --bench linalg_backends` sweeps both
 //! backends over GEMM shapes and end-to-end registry preprocessing and
 //! writes `BENCH_linalg.json`.
+//!
+//! ## Serving at scale
+//!
+//! [`coordinator::SamplingService`] is a sharded pipeline built on the
+//! samplers' Prepared/Scratch split (see [`sampler`]): model registration
+//! freezes all preprocessing into an immutable, `Send + Sync`
+//! [`coordinator::ModelEntry`], and each of the service's shard workers
+//! keeps its own warm scratch per model — so concurrent throughput scales
+//! with shard count, with no locking and no per-call allocation on the
+//! sampler hot paths.  `ndpp serve` exposes every knob
+//! (`--shards --queue-depth --deadline-ms --backend`); see
+//! `examples/serve_shards.rs` for a walkthrough.
+//!
+//! **Shard sizing.** `ServiceConfig::shards == 0` resolves via
+//! [`coordinator::default_shards`]: one worker per core, minus the cores
+//! explicitly reserved for GEMM fan-out when `NDPP_BACKEND_THREADS` is
+//! capped below the core count (registration-time preprocessing is the
+//! only GEMM-threaded phase; steady-state sampling is single-threaded per
+//! shard).  Rule of thumb: CPU-bound sampling wants `shards = cores`;
+//! deployments that re-register models under live traffic should leave
+//! the backend 1–2 cores.
+//!
+//! **Admission control.** Each `(model, shard)` queue is bounded by
+//! `ServiceConfig::queue_depth`; an overflowing submission fails
+//! *immediately* with a `queue_full` error rather than buffering
+//! unboundedly — callers retry with backoff or shed load.  A request may
+//! carry a `deadline` (`deadline_ms` on the wire, with
+//! `ServiceConfig::deadline` as the default): a worker that dequeues an
+//! expired request discards it with a `deadline` error instead of doing
+//! dead work.  Both outcomes are counted per model under `rejected` in
+//! the metrics snapshot, and neither poisons neighboring requests.
+//! Dropping the service stops intake (`shutting_down` errors), then
+//! drains every queued request before the workers exit.
+//!
+//! **Reproducibility contract.** A request's samples are drawn from
+//! [`rng::request_stream`]`(seed)` — a pure function of the request seed.
+//! Same `(model, seed, n, algo)` ⇒ byte-identical samples, regardless of
+//! shard count, shard assignment, batch composition (single `sample` ops
+//! vs one `batch` op), concurrency, or service instance.  Omitted seeds
+//! are assigned from a counter and returned in the response, so every
+//! response is replayable.  `cargo bench --bench serving` runs a
+//! closed-loop multi-client sweep and writes `BENCH_serving.json`.
 
 pub mod bench;
 pub mod coordinator;

@@ -29,6 +29,27 @@ impl Matrix {
         m
     }
 
+    /// Reshape in place to `rows x cols` with every entry zeroed, reusing
+    /// the existing allocation whenever it is large enough.  The workhorse
+    /// of the sampler `Scratch` workspaces: a worker's scratch matrix can
+    /// follow a model's dimensions across requests without reallocating in
+    /// steady state.
+    pub fn reset_zeros(&mut self, rows: usize, cols: usize) {
+        let n = rows * cols;
+        self.data.clear();
+        self.data.resize(n, 0.0);
+        self.rows = rows;
+        self.cols = cols;
+    }
+
+    /// Reshape in place to the `n x n` identity (see [`Matrix::reset_zeros`]).
+    pub fn reset_identity(&mut self, n: usize) {
+        self.reset_zeros(n, n);
+        for i in 0..n {
+            self.data[i * n + i] = 1.0;
+        }
+    }
+
     pub fn from_rows(rows: &[&[f64]]) -> Matrix {
         let r = rows.len();
         let c = if r > 0 { rows[0].len() } else { 0 };
@@ -354,6 +375,14 @@ impl IndexMut<(usize, usize)> for Matrix {
     }
 }
 
+impl Default for Matrix {
+    /// The empty `0 x 0` matrix (scratch workspaces start here and grow
+    /// via [`Matrix::reset_zeros`]).
+    fn default() -> Matrix {
+        Matrix::zeros(0, 0)
+    }
+}
+
 impl fmt::Debug for Matrix {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
@@ -501,5 +530,18 @@ mod tests {
         let a = Matrix::randn(3, 3, 1.0, &mut rng);
         let b = Matrix::from_f32(3, 3, &a.to_f32());
         assert_close(&a, &b, 1e-6);
+    }
+
+    #[test]
+    fn reset_reuses_allocation_and_clears() {
+        let mut rng = Xoshiro::seeded(4);
+        let mut a = Matrix::randn(6, 6, 1.0, &mut rng);
+        let cap = a.data.capacity();
+        a.reset_zeros(4, 5);
+        assert_eq!((a.rows, a.cols), (4, 5));
+        assert!(a.data.iter().all(|&x| x == 0.0));
+        assert_eq!(a.data.capacity(), cap, "shrinking reset must not reallocate");
+        a.reset_identity(3);
+        assert_close(&a, &Matrix::identity(3), 0.0);
     }
 }

@@ -189,7 +189,21 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
 const SERVE_SPECS: &[Spec] = &[
     Spec::opt_default("addr", "127.0.0.1:7433", "listen address"),
     Spec::opt_default("models", "demo:4096:32", "comma list of name:M:K random models"),
-    Spec::opt_default("workers", "0", "worker threads (0 = all cores)"),
+    Spec::opt_default(
+        "shards",
+        "0",
+        "shard worker threads (0 = auto: cores, coordinated with NDPP_BACKEND_THREADS)",
+    ),
+    Spec::opt_default(
+        "queue-depth",
+        "1024",
+        "bound per (model, shard) queue; overflow rejects with queue_full",
+    ),
+    Spec::opt_default(
+        "deadline-ms",
+        "0",
+        "default per-request deadline in milliseconds (0 = none)",
+    ),
     Spec::opt_default("seed", "0", "rng seed for model generation"),
     Spec::opt("backend", BACKEND_HELP),
     Spec::flag("help", "show help"),
@@ -201,15 +215,29 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         print!("{}", help_text("serve", "run the sampling service", SERVE_SPECS));
         return Ok(());
     }
-    let workers = a.usize_or("workers", 0)?;
-    let mut config = ServiceConfig::default();
-    if workers > 0 {
-        config.workers = workers;
+    let mut config = ServiceConfig {
+        shards: a.usize_or("shards", 0)?,
+        queue_depth: a.usize_or("queue-depth", 1024)?,
+        ..Default::default()
+    };
+    let deadline_ms = a.u64_or("deadline-ms", 0)?;
+    if deadline_ms > 0 {
+        config.deadline = Some(std::time::Duration::from_millis(deadline_ms));
     }
     if let Some(b) = a.get("backend") {
         config.backend = Some(ndpp::linalg::BackendKind::parse(b)?);
     }
     let service = Arc::new(SamplingService::new(config));
+    println!(
+        "serving with {} shard workers, queue depth {}, deadline {}",
+        service.shards(),
+        service.config().queue_depth,
+        service
+            .config()
+            .deadline
+            .map(|d| format!("{} ms", d.as_millis()))
+            .unwrap_or_else(|| "none".into())
+    );
     let seed = a.u64_or("seed", 0)?;
     let mut rng = Xoshiro::seeded(seed);
     for spec in a.str_or("models", "demo:4096:32").split(',') {
@@ -230,7 +258,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         }
     }
     let addr = a.str_or("addr", "127.0.0.1:7433");
-    println!("listening on {addr} (line-delimited JSON; op=sample|models|metrics|ping|shutdown)");
+    println!(
+        "listening on {addr} (line-delimited JSON; op=sample|batch|models|metrics|ping|shutdown)"
+    );
     server::serve(service, &addr, |bound| println!("bound {bound}"))
 }
 

@@ -69,6 +69,68 @@ pub struct IncrementalMinor<'a> {
     /// singular — the chain driving this minor should restart from a known
     /// good state (see [`crate::sampler::McmcSampler`])
     healthy: bool,
+    // Step scratch, hoisted out of the per-step hot loop so a proposed
+    // chain move allocates nothing (the Scratch half of the serving
+    // pipeline's Prepared/Scratch split): row/column entry differences,
+    // and the three vectors of the Sherman–Morrison updates.
+    buf_row: Vec<f64>,
+    buf_col: Vec<f64>,
+    buf_u: Vec<f64>,
+    buf_v: Vec<f64>,
+    buf_w: Vec<f64>,
+}
+
+/// `out = A x` via plain per-row dots — the minors here are `k x k` with
+/// `k` in the tens, far below any backend's blocking threshold, and the
+/// caller-owned `out` keeps the step loop allocation-free.
+fn matvec_into(a: &Matrix, x: &[f64], out: &mut Vec<f64>) {
+    out.clear();
+    for r in 0..a.rows {
+        out.push(dot(a.row(r), x));
+    }
+}
+
+/// `out = A^T x`, same rationale as [`matvec_into`].
+fn t_matvec_into(a: &Matrix, x: &[f64], out: &mut Vec<f64>) {
+    out.clear();
+    out.resize(a.cols, 0.0);
+    for r in 0..a.rows {
+        let xr = x[r];
+        if xr == 0.0 {
+            continue;
+        }
+        for (o, &arc) in out.iter_mut().zip(a.row(r)) {
+            *o += xr * arc;
+        }
+    }
+}
+
+/// Determinant lemma applied twice:
+///
+/// ```text
+///   f1 = 1 + rowdiff^T A^{-1} e_r
+///   f2 = 1 + e_r^T B^{-1} coldiff        (B = A + e_r rowdiff^T)
+///   ratio = f1 f2 = f1 (1 + w1[r]) - w2[r] (rowdiff^T w1)
+/// ```
+///
+/// with `w1 = A^{-1} coldiff` (left in `w1` for the caller), `w2 = A^{-1}
+/// e_r` — the expanded form is division-free, so it stays exact when the
+/// intermediate `B` is singular (`f1 = 0`).  Returns `(f1, ratio)`.
+fn ratio_from_diffs(
+    inv: &Matrix,
+    pos: usize,
+    rowdiff: &[f64],
+    coldiff: &[f64],
+    w1: &mut Vec<f64>,
+) -> (f64, f64) {
+    let k = rowdiff.len();
+    let mut f1 = 1.0;
+    for r in 0..k {
+        f1 += rowdiff[r] * inv[(r, pos)];
+    }
+    matvec_into(inv, coldiff, w1);
+    let s = dot(rowdiff, w1);
+    (f1, f1 * (1.0 + w1[pos]) - inv[(pos, pos)] * s)
 }
 
 impl<'a> IncrementalMinor<'a> {
@@ -82,6 +144,7 @@ impl<'a> IncrementalMinor<'a> {
         if lu.singular || sign <= 0.0 || !log_det.is_finite() {
             return None;
         }
+        let k = items.len();
         Some(IncrementalMinor {
             kernel,
             items,
@@ -90,6 +153,11 @@ impl<'a> IncrementalMinor<'a> {
             refresh_every: 64,
             swaps_since_refresh: 0,
             healthy: true,
+            buf_row: Vec::with_capacity(k),
+            buf_col: Vec::with_capacity(k),
+            buf_u: Vec::with_capacity(k),
+            buf_v: Vec::with_capacity(k),
+            buf_w: Vec::with_capacity(k),
         })
     }
 
@@ -117,15 +185,17 @@ impl<'a> IncrementalMinor<'a> {
     /// singular.
     pub fn swap_ratio(&self, pos: usize, j: usize) -> f64 {
         let (rowdiff, coldiff) = self.swap_diffs(pos, j);
-        self.ratio_from_diffs(pos, &rowdiff, &coldiff).1
+        let mut w1 = Vec::with_capacity(self.items.len());
+        ratio_from_diffs(&self.inv, pos, &rowdiff, &coldiff, &mut w1).1
     }
 
     /// Compute the ratio once and, if `accept(ratio)` says so, apply the
     /// swap reusing the same difference vectors — one `O(k K)` entry pass
-    /// and `O(k^2)` of linear algebra per proposed move, accepted or not.
-    /// `accept` is only consulted for positive ratios (a nonpositive ratio
-    /// is a measure-zero target state and is always rejected).  Returns
-    /// `(ratio, applied)`.
+    /// and `O(k^2)` of linear algebra per proposed move, accepted or not,
+    /// all of it in the hoisted scratch buffers (a proposed move performs
+    /// **zero** heap allocation).  `accept` is only consulted for positive
+    /// ratios (a nonpositive ratio is a measure-zero target state and is
+    /// always rejected).  Returns `(ratio, applied)`.
     pub fn swap_if(
         &mut self,
         pos: usize,
@@ -133,8 +203,9 @@ impl<'a> IncrementalMinor<'a> {
         accept: impl FnOnce(f64) -> bool,
     ) -> (f64, bool) {
         let k = self.items.len();
-        let (rowdiff, coldiff) = self.swap_diffs(pos, j);
-        let (f1, ratio) = self.ratio_from_diffs(pos, &rowdiff, &coldiff);
+        self.fill_swap_diffs(pos, j);
+        let (f1, ratio) =
+            ratio_from_diffs(&self.inv, pos, &self.buf_row, &self.buf_col, &mut self.buf_w);
         if !(ratio > 0.0 && accept(ratio)) {
             return (ratio, false);
         }
@@ -145,20 +216,24 @@ impl<'a> IncrementalMinor<'a> {
             return (ratio, true);
         }
         // B^{-1} = A^{-1} - (A^{-1} e_r)(rowdiff^T A^{-1}) / f1
-        let u: Vec<f64> = (0..k).map(|r| self.inv[(r, pos)]).collect();
-        let vt = self.inv.t_matvec(&rowdiff);
-        self.inv.rank1_sub(&u, &vt, 1.0 / f1);
+        self.buf_u.clear();
+        for r in 0..k {
+            self.buf_u.push(self.inv[(r, pos)]);
+        }
+        t_matvec_into(&self.inv, &self.buf_row, &mut self.buf_v);
+        self.inv.rank1_sub(&self.buf_u, &self.buf_v, 1.0 / f1);
         self.items[pos] = j;
-        // column update: coldiff already uses the new item at `pos`
-        let w = self.inv.matvec(&coldiff);
-        let f2 = 1.0 + w[pos];
+        // column update: buf_col already uses the new item at `pos`
+        matvec_into(&self.inv, &self.buf_col, &mut self.buf_w);
+        let f2 = 1.0 + self.buf_w[pos];
         if f2.abs() < 1e-12 {
             self.refresh();
             return (ratio, true);
         }
         // C^{-1} = B^{-1} - (B^{-1} coldiff)(e_r^T B^{-1}) / f2
-        let brow = self.inv.row(pos).to_vec();
-        self.inv.rank1_sub(&w, &brow, 1.0 / f2);
+        self.buf_v.clear();
+        self.buf_v.extend_from_slice(self.inv.row(pos));
+        self.inv.rank1_sub(&self.buf_w, &self.buf_v, 1.0 / f2);
         self.log_det += ratio.ln();
         self.swaps_since_refresh += 1;
         if self.swaps_since_refresh >= self.refresh_every {
@@ -200,26 +275,22 @@ impl<'a> IncrementalMinor<'a> {
         (rowdiff, coldiff)
     }
 
-    /// Determinant lemma applied twice:
-    ///
-    /// ```text
-    ///   f1 = 1 + rowdiff^T A^{-1} e_r
-    ///   f2 = 1 + e_r^T B^{-1} coldiff        (B = A + e_r rowdiff^T)
-    ///   ratio = f1 f2 = f1 (1 + w1[r]) - w2[r] (rowdiff^T w1)
-    /// ```
-    ///
-    /// with `w1 = A^{-1} coldiff`, `w2 = A^{-1} e_r` — the expanded form is
-    /// division-free, so it stays exact when the intermediate `B` is
-    /// singular (`f1 = 0`).  Returns `(f1, ratio)`.
-    fn ratio_from_diffs(&self, pos: usize, rowdiff: &[f64], coldiff: &[f64]) -> (f64, f64) {
-        let k = self.items.len();
-        let mut f1 = 1.0;
-        for r in 0..k {
-            f1 += rowdiff[r] * self.inv[(r, pos)];
+    /// [`Self::swap_diffs`] into the hoisted scratch buffers (`buf_row`,
+    /// `buf_col`) — the allocation-free variant the step loop uses.
+    fn fill_swap_diffs(&mut self, pos: usize, j: usize) {
+        let i = self.items[pos];
+        debug_assert!(!self.items.contains(&j), "swap target already in set");
+        self.buf_row.clear();
+        self.buf_col.clear();
+        for &yc in &self.items {
+            self.buf_row
+                .push(l_entry(self.kernel, j, yc) - l_entry(self.kernel, i, yc));
         }
-        let w1 = self.inv.matvec(coldiff);
-        let s = dot(rowdiff, &w1);
-        (f1, f1 * (1.0 + w1[pos]) - self.inv[(pos, pos)] * s)
+        for c in 0..self.items.len() {
+            let yc = if c == pos { j } else { self.items[c] };
+            self.buf_col
+                .push(l_entry(self.kernel, yc, j) - l_entry(self.kernel, yc, i));
+        }
     }
 
     /// Refactorize from scratch (`O(k^3 + k^2 K)`), clearing accumulated

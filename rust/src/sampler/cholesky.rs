@@ -39,16 +39,120 @@ impl MarginalSource<'_> {
     }
 }
 
+/// Reusable workspace for the linear-time sweep — the *Scratch* half of
+/// the Prepared/Scratch split (the immutable *Prepared* half being the
+/// shared [`MarginalKernel`]).  One per worker thread; follows a model's
+/// `2K` via [`CholeskyScratch::ensure`] without reallocating in steady
+/// state.
+#[derive(Debug, Clone, Default)]
+pub struct CholeskyScratch {
+    /// Q matrix reused across samples
+    q: Matrix,
+    /// Q z_i
+    qz: Vec<f64>,
+    /// z_i^T Q
+    zq: Vec<f64>,
+}
+
+impl CholeskyScratch {
+    pub fn new() -> CholeskyScratch {
+        CholeskyScratch::default()
+    }
+
+    /// Sized for one marginal kernel.
+    pub fn for_marginal(marginal: &MarginalKernel) -> CholeskyScratch {
+        let mut s = CholeskyScratch::new();
+        s.ensure(marginal.k2());
+        s
+    }
+
+    /// Make the buffers `k2`-sized (no-op when already right).
+    pub fn ensure(&mut self, k2: usize) {
+        if self.q.rows != k2 || self.q.cols != k2 {
+            self.q.reset_zeros(k2, k2);
+            self.qz.clear();
+            self.qz.resize(k2, 0.0);
+            self.zq.clear();
+            self.zq.resize(k2, 0.0);
+        }
+    }
+}
+
+/// Draw one sample and its log-probability from a shared prepared
+/// [`MarginalKernel`] using a caller-owned workspace — the coordinator's
+/// hot path: any number of workers can call this concurrently on the same
+/// marginal with their own scratches, no locking, no allocation beyond the
+/// returned subset.
+pub fn sample_with_logprob_into(
+    marginal: &MarginalKernel,
+    scratch: &mut CholeskyScratch,
+    rng: &mut Xoshiro,
+) -> (Vec<usize>, f64) {
+    let m = marginal.m();
+    let k2 = marginal.k2();
+    scratch.ensure(k2);
+    scratch.q.data.copy_from_slice(&marginal.w.data);
+    let mut out = Vec::new();
+    let mut logp = 0.0;
+
+    for i in 0..m {
+        let zi = marginal.z.row(i);
+        // fused pass over Q's rows: qz[r] = <Q_r, z_i> and
+        // zq += z_i[r] * Q_r  (one traversal instead of two — §Perf)
+        scratch.zq.iter_mut().for_each(|x| *x = 0.0);
+        for (r, &zr) in zi.iter().enumerate() {
+            let qrow = scratch.q.row(r);
+            let mut acc = 0.0;
+            if zr != 0.0 {
+                for c in 0..k2 {
+                    let q_rc = qrow[c];
+                    acc += q_rc * zi[c];
+                    scratch.zq[c] += zr * q_rc;
+                }
+            } else {
+                for c in 0..k2 {
+                    acc += qrow[c] * zi[c];
+                }
+            }
+            scratch.qz[r] = acc;
+        }
+        let p = crate::linalg::matrix::dot(zi, &scratch.qz);
+        let u = rng.uniform();
+        let take = u <= p;
+        let denom = if take {
+            p.max(1e-300)
+        } else {
+            (p - 1.0).min(-1e-300)
+        };
+        logp += if take { p.max(1e-300).ln() } else { (1.0 - p).max(1e-300).ln() };
+        if take {
+            out.push(i);
+        }
+        // Q -= qz zq^T / denom
+        let inv = 1.0 / denom;
+        for r in 0..k2 {
+            let f = scratch.qz[r] * inv;
+            if f == 0.0 {
+                continue;
+            }
+            let qrow = scratch.q.row_mut(r);
+            for c in 0..k2 {
+                qrow[c] -= f * scratch.zq[c];
+            }
+        }
+    }
+    (out, logp)
+}
+
 /// Preprocessed linear-time sampler.  Construction costs `O(M K^2)` (one
 /// Gram matrix + one `2K x 2K` inverse); each sample costs `O(M K^2)`.
+/// Bundles the shared prepared marginal with a private
+/// [`CholeskyScratch`]; the coordinator instead shares one marginal across
+/// workers and gives each its own scratch via
+/// [`sample_with_logprob_into`].
 pub struct CholeskySampler<'a> {
     marginal: MarginalSource<'a>,
-    /// scratch: Q matrix reused across samples
-    q: Matrix,
-    /// scratch: Q z_i
-    qz: Vec<f64>,
-    /// scratch: z_i^T Q
-    zq: Vec<f64>,
+    scratch: CholeskyScratch,
 }
 
 impl<'a> CholeskySampler<'a> {
@@ -58,23 +162,18 @@ impl<'a> CholeskySampler<'a> {
 
     /// Take ownership of a precomputed marginal kernel.
     pub fn from_owned(marginal: MarginalKernel) -> CholeskySampler<'static> {
-        let k2 = marginal.k2();
+        let scratch = CholeskyScratch::for_marginal(&marginal);
         CholeskySampler {
             marginal: MarginalSource::Owned(Box::new(marginal)),
-            q: Matrix::zeros(k2, k2),
-            qz: vec![0.0; k2],
-            zq: vec![0.0; k2],
+            scratch,
         }
     }
 
     /// Borrow a shared preprocessed marginal kernel (coordinator path).
     pub fn from_marginal(marginal: &'a MarginalKernel) -> CholeskySampler<'a> {
-        let k2 = marginal.k2();
         CholeskySampler {
+            scratch: CholeskyScratch::for_marginal(marginal),
             marginal: MarginalSource::Borrowed(marginal),
-            q: Matrix::zeros(k2, k2),
-            qz: vec![0.0; k2],
-            zq: vec![0.0; k2],
         }
     }
 
@@ -89,60 +188,7 @@ impl<'a> CholeskySampler<'a> {
 
     /// Draw one sample together with its log-probability under the NDPP.
     pub fn sample_with_logprob(&mut self, rng: &mut Xoshiro) -> (Vec<usize>, f64) {
-        let marginal = self.marginal.get();
-        let m = marginal.m();
-        let k2 = marginal.k2();
-        self.q.data.copy_from_slice(&marginal.w.data);
-        let mut out = Vec::new();
-        let mut logp = 0.0;
-
-        for i in 0..m {
-            let zi = marginal.z.row(i);
-            // fused pass over Q's rows: qz[r] = <Q_r, z_i> and
-            // zq += z_i[r] * Q_r  (one traversal instead of two — §Perf)
-            self.zq.iter_mut().for_each(|x| *x = 0.0);
-            for (r, &zr) in zi.iter().enumerate() {
-                let qrow = self.q.row(r);
-                let mut acc = 0.0;
-                if zr != 0.0 {
-                    for c in 0..k2 {
-                        let q_rc = qrow[c];
-                        acc += q_rc * zi[c];
-                        self.zq[c] += zr * q_rc;
-                    }
-                } else {
-                    for c in 0..k2 {
-                        acc += qrow[c] * zi[c];
-                    }
-                }
-                self.qz[r] = acc;
-            }
-            let p = crate::linalg::matrix::dot(zi, &self.qz);
-            let u = rng.uniform();
-            let take = u <= p;
-            let denom = if take {
-                p.max(1e-300)
-            } else {
-                (p - 1.0).min(-1e-300)
-            };
-            logp += if take { p.max(1e-300).ln() } else { (1.0 - p).max(1e-300).ln() };
-            if take {
-                out.push(i);
-            }
-            // Q -= qz zq^T / denom
-            let inv = 1.0 / denom;
-            for r in 0..k2 {
-                let f = self.qz[r] * inv;
-                if f == 0.0 {
-                    continue;
-                }
-                let qrow = self.q.row_mut(r);
-                for c in 0..k2 {
-                    qrow[c] -= f * self.zq[c];
-                }
-            }
-        }
-        (out, logp)
+        sample_with_logprob_into(self.marginal.get(), &mut self.scratch, rng)
     }
 }
 

@@ -18,22 +18,22 @@ use crate::ndpp::NdppKernel;
 use crate::rng::Xoshiro;
 use crate::sampler::Sampler;
 
-/// Dense-marginal-kernel sampler.  Construction is `O(M^3)` (matrix
-/// inverse), each sample is `O(M^3)`; memory `O(M^2)`.  Use only for
-/// M up to a few thousand.
-pub struct DenseCholeskySampler {
+/// Immutable prepared core of the dense sampler: the full `M x M`
+/// marginal kernel `K = I - (L+I)^{-1}`.  `O(M^3)` to build, `O(M^2)`
+/// memory; built at most once per model and shared read-only across
+/// workers (the coordinator caches it lazily on the [`crate::coordinator::
+/// ModelEntry`]).
+pub struct DensePrepared {
     k: Matrix,
-    scratch: Matrix,
 }
 
-impl DenseCholeskySampler {
-    pub fn new(kernel: &NdppKernel) -> DenseCholeskySampler {
+impl DensePrepared {
+    pub fn build(kernel: &NdppKernel) -> DensePrepared {
         let m = kernel.m();
         let mut l_plus_i = kernel.dense_l();
         l_plus_i.add_diag(1.0);
         let inv = lu::inverse(&l_plus_i);
-        let k = Matrix::identity(m).sub(&inv);
-        DenseCholeskySampler { scratch: k.clone(), k }
+        DensePrepared { k: Matrix::identity(m).sub(&inv) }
     }
 
     pub fn m(&self) -> usize {
@@ -41,38 +41,86 @@ impl DenseCholeskySampler {
     }
 }
 
-impl Sampler for DenseCholeskySampler {
-    fn sample(&mut self, rng: &mut Xoshiro) -> Vec<usize> {
-        let m = self.m();
-        self.scratch.data.copy_from_slice(&self.k.data);
-        let q = &mut self.scratch;
-        let mut out = Vec::new();
-        for i in 0..m {
-            let mut p = q[(i, i)];
-            let take = rng.uniform() <= p;
-            if take {
-                out.push(i);
-                p = p.max(1e-300);
-            } else {
-                p = (p - 1.0).min(-1e-300);
+/// Per-worker workspace: the `M x M` copy the sweep downdates in place.
+#[derive(Debug, Clone, Default)]
+pub struct DenseScratch {
+    q: Matrix,
+}
+
+impl DenseScratch {
+    pub fn new() -> DenseScratch {
+        DenseScratch::default()
+    }
+}
+
+/// One dense-sweep sample from a shared prepared kernel with a
+/// caller-owned workspace (resized on first use / model change).
+pub fn sample_into(
+    prepared: &DensePrepared,
+    scratch: &mut DenseScratch,
+    rng: &mut Xoshiro,
+) -> Vec<usize> {
+    let m = prepared.m();
+    if scratch.q.rows != m || scratch.q.cols != m {
+        scratch.q.reset_zeros(m, m);
+    }
+    scratch.q.data.copy_from_slice(&prepared.k.data);
+    let q = &mut scratch.q;
+    let mut out = Vec::new();
+    for i in 0..m {
+        let mut p = q[(i, i)];
+        let take = rng.uniform() <= p;
+        if take {
+            out.push(i);
+            p = p.max(1e-300);
+        } else {
+            p = (p - 1.0).min(-1e-300);
+        }
+        // K_A -= K_{A,i} K_{i,A} / p  over the trailing block
+        let inv = 1.0 / p;
+        for r in (i + 1)..m {
+            let f = q[(r, i)] * inv;
+            if f == 0.0 {
+                continue;
             }
-            // K_A -= K_{A,i} K_{i,A} / p  over the trailing block
-            let inv = 1.0 / p;
-            for r in (i + 1)..m {
-                let f = q[(r, i)] * inv;
-                if f == 0.0 {
-                    continue;
-                }
-                // row slice of K_{i, A}
-                let (head, tail) = q.data.split_at_mut(r * m);
-                let ki = &head[i * m..(i + 1) * m];
-                let kr = &mut tail[..m];
-                for c in (i + 1)..m {
-                    kr[c] -= f * ki[c];
-                }
+            // row slice of K_{i, A}
+            let (head, tail) = q.data.split_at_mut(r * m);
+            let ki = &head[i * m..(i + 1) * m];
+            let kr = &mut tail[..m];
+            for c in (i + 1)..m {
+                kr[c] -= f * ki[c];
             }
         }
-        out
+    }
+    out
+}
+
+/// Dense-marginal-kernel sampler.  Construction is `O(M^3)` (matrix
+/// inverse), each sample is `O(M^3)`; memory `O(M^2)`.  Use only for
+/// M up to a few thousand.  Bundles a private [`DensePrepared`] +
+/// [`DenseScratch`]; the coordinator shares one prepared core and gives
+/// each worker its own scratch via [`sample_into`].
+pub struct DenseCholeskySampler {
+    prepared: DensePrepared,
+    scratch: DenseScratch,
+}
+
+impl DenseCholeskySampler {
+    pub fn new(kernel: &NdppKernel) -> DenseCholeskySampler {
+        DenseCholeskySampler {
+            prepared: DensePrepared::build(kernel),
+            scratch: DenseScratch::new(),
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.prepared.m()
+    }
+}
+
+impl Sampler for DenseCholeskySampler {
+    fn sample(&mut self, rng: &mut Xoshiro) -> Vec<usize> {
+        sample_into(&self.prepared, &mut self.scratch, rng)
     }
 
     fn name(&self) -> &'static str {

@@ -19,12 +19,109 @@ use crate::rng::Xoshiro;
 
 /// Step 1: choose the elementary component by 2K coin flips.
 pub fn select_elementary(lambda: &[f64], rng: &mut Xoshiro) -> Vec<usize> {
-    lambda
-        .iter()
-        .enumerate()
-        .filter(|&(_, &l)| rng.uniform() <= l / (l + 1.0))
-        .map(|(i, _)| i)
-        .collect()
+    let mut e = Vec::new();
+    select_elementary_into(lambda, &mut e, rng);
+    e
+}
+
+/// [`select_elementary`] into a caller-owned buffer (identical coin-flip
+/// stream, zero allocation in steady state).
+pub fn select_elementary_into(lambda: &[f64], out: &mut Vec<usize>, rng: &mut Xoshiro) {
+    out.clear();
+    for (i, &l) in lambda.iter().enumerate() {
+        if rng.uniform() <= l / (l + 1.0) {
+            out.push(i);
+        }
+    }
+}
+
+/// Reusable workspace for elementary-DPP sampling — the *Scratch* half of
+/// the serving pipeline's Prepared/Scratch split (the immutable *Prepared*
+/// half being the [`SpectralDpp`] / [`crate::sampler::SampleTree`] built
+/// once per model).
+///
+/// Holds the conditional projector `Q^Y`, its downdate vector, the
+/// per-bucket/per-item score buffer, and the selected-component index
+/// list.  One scratch per worker thread serves any number of sequential
+/// samples with zero heap allocation in the per-sample hot loop once the
+/// buffers have grown to the spectral rank (and any ground-set bucket
+/// size).
+///
+/// `Q^Y` is maintained *incrementally*: starting from `Q^∅ = I`, after
+/// picking the item with restricted feature row `a = z_{j,E}` the
+/// projector is downdated as
+///
+/// ```text
+///   Q <- Q - (Q a)(Q a)^T / (a^T Q a),
+/// ```
+///
+/// the standard Gram–Schmidt projector update — mathematically identical
+/// to re-deriving [`conditional_q`] from scratch (which the tests assert),
+/// `O(|E|^2)` per pick instead of `O(|Y|^3 + |Y|^2 |E|)`, and free of the
+/// LU factorization the full rebuild needs.
+#[derive(Debug, Clone, Default)]
+pub struct ElementaryScratch {
+    /// conditional projector `Q^Y` over the selected component (`ke x ke`)
+    pub(crate) q: Matrix,
+    /// `Q a` for the post-pick downdate
+    qa: Vec<f64>,
+    /// bucket / item scores (tree buckets or the full direct scan)
+    pub(crate) scores: Vec<f64>,
+    /// selected elementary component `E`
+    pub(crate) e: Vec<usize>,
+}
+
+impl ElementaryScratch {
+    pub fn new() -> ElementaryScratch {
+        ElementaryScratch::default()
+    }
+
+    /// Preallocate for a spectral kernel of the given rank.
+    pub fn with_rank(rank: usize) -> ElementaryScratch {
+        ElementaryScratch {
+            q: Matrix::zeros(rank, rank),
+            qa: Vec::with_capacity(rank),
+            scores: Vec::new(),
+            e: Vec::with_capacity(rank),
+        }
+    }
+
+    /// Start a fresh sample over a component of size `ke`: `Q <- I_ke`.
+    pub(crate) fn reset_q(&mut self, ke: usize) {
+        self.q.reset_identity(ke);
+    }
+
+    /// Condition the projector on a picked item whose *full* feature row
+    /// (length = spectral rank) is `row`, restricted to the component `e`.
+    pub(crate) fn condition_on(&mut self, row: &[f64], e: &[usize]) {
+        let ke = e.len();
+        self.qa.clear();
+        for r in 0..ke {
+            let qrow = self.q.row(r);
+            let mut acc = 0.0;
+            for c in 0..ke {
+                acc += qrow[c] * row[e[c]];
+            }
+            self.qa.push(acc);
+        }
+        let mut p = 0.0;
+        for r in 0..ke {
+            p += row[e[r]] * self.qa[r];
+        }
+        // a numerically-dead pick (p ~ 0 through rounding) gets the same
+        // guard as the Cholesky sweep: clamp the pivot away from zero
+        let inv = 1.0 / p.max(1e-300);
+        for r in 0..ke {
+            let f = self.qa[r] * inv;
+            if f == 0.0 {
+                continue;
+            }
+            let qrow = self.q.row_mut(r);
+            for c in 0..ke {
+                qrow[c] -= f * self.qa[c];
+            }
+        }
+    }
 }
 
 /// The conditional kernel `Q^Y = I_{|E|} - A^T (A A^T)^{-1} A` with
@@ -79,18 +176,34 @@ pub fn sample_elementary_direct(
     e: &[usize],
     rng: &mut Xoshiro,
 ) -> Vec<usize> {
+    let mut scratch = ElementaryScratch::with_rank(spectral.rank());
+    sample_elementary_direct_with(spectral, e, &mut scratch, rng)
+}
+
+/// [`sample_elementary_direct`] with a caller-owned workspace: the
+/// incremental projector keeps the per-pick cost at `O(M |E|^2)` with zero
+/// heap allocation in the selection loop.
+pub fn sample_elementary_direct_with(
+    spectral: &SpectralDpp,
+    e: &[usize],
+    scratch: &mut ElementaryScratch,
+    rng: &mut Xoshiro,
+) -> Vec<usize> {
     let m = spectral.m();
     let z = &spectral.vecs;
     let mut y: Vec<usize> = Vec::with_capacity(e.len());
-    // one scratch buffer for all |E| selection sweeps — no per-pick Vec
-    let mut scores = vec![0.0; m];
+    scratch.reset_q(e.len());
     for _ in 0..e.len() {
-        let q = conditional_q(z, &y, e);
-        // scores over all items; total mass = |E| - |Y|
-        for (j, s) in scores.iter_mut().enumerate() {
-            *s = item_score(z, j, e, &q).max(0.0);
-        }
-        let j = rng.weighted(&scores);
+        let j = {
+            let ElementaryScratch { q, scores, .. } = &mut *scratch;
+            // scores over all items; total mass = |E| - |Y|
+            scores.clear();
+            for item in 0..m {
+                scores.push(item_score(z, item, e, q).max(0.0));
+            }
+            rng.weighted(scores)
+        };
+        scratch.condition_on(z.row(j), e);
         y.push(j);
     }
     y.sort_unstable();
@@ -152,6 +265,45 @@ mod tests {
                     })
                     .unwrap();
                 y.push(j);
+            }
+        });
+    }
+
+    #[test]
+    fn incremental_projector_matches_direct_conditional_q() {
+        // the scratch's rank-1 downdates must track the from-scratch
+        // projection `I - A^T (A A^T)^{-1} A` pick after pick
+        prop::check("elem_incremental_q", 8, |g| {
+            let s = spectral_fixture(g.seed, 14, 4);
+            let e: Vec<usize> = (0..s.rank()).collect();
+            let mut scratch = ElementaryScratch::with_rank(s.rank());
+            scratch.reset_q(e.len());
+            let mut y: Vec<usize> = Vec::new();
+            for _ in 0..e.len() {
+                // greedily pick the max-score item: deterministic, and the
+                // largest pivot keeps both computations well conditioned
+                let j = (0..s.m())
+                    .filter(|j| !y.contains(j))
+                    .max_by(|&a, &b| {
+                        item_score(&s.vecs, a, &e, &scratch.q)
+                            .partial_cmp(&item_score(&s.vecs, b, &e, &scratch.q))
+                            .unwrap()
+                    })
+                    .unwrap();
+                scratch.condition_on(s.vecs.row(j), &e);
+                y.push(j);
+                let want = conditional_q(&s.vecs, &y, &e);
+                for a in 0..e.len() {
+                    for b in 0..e.len() {
+                        assert!(
+                            (scratch.q[(a, b)] - want[(a, b)]).abs() < 1e-7,
+                            "|Y|={} a={a} b={b} got={} want={}",
+                            y.len(),
+                            scratch.q[(a, b)],
+                            want[(a, b)]
+                        );
+                    }
+                }
             }
         });
     }

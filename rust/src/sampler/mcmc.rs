@@ -126,6 +126,29 @@ impl<'a> McmcSampler<'a> {
         }
     }
 
+    /// Like [`McmcSampler::new`] but with a precomputed warm start (the
+    /// coordinator computes [`try_build_seed`] once at model registration
+    /// — the Prepared half of the split — so per-request samplers skip the
+    /// greedy-MAP run entirely).  The seed must be what
+    /// [`try_build_seed`]`(kernel, config.size)` returns; anything else
+    /// breaks the reproducibility contract.
+    pub fn with_seed(
+        kernel: &'a NdppKernel,
+        config: McmcConfig,
+        seed_items: Vec<usize>,
+    ) -> McmcSampler<'a> {
+        assert_eq!(
+            seed_items.len(),
+            config.size,
+            "warm start has {} items but the chain targets size {}",
+            seed_items.len(),
+            config.size
+        );
+        let mut s = McmcSampler::new(kernel, config);
+        s.seed_set = Some(seed_items);
+        s
+    }
+
     pub fn config(&self) -> McmcConfig {
         self.config
     }
@@ -251,6 +274,17 @@ impl Sampler for McmcSampler<'_> {
 /// Greedy MAP seed of exactly `size` items (see
 /// [`McmcSampler::seed_items`]).
 fn build_seed(kernel: &NdppKernel, size: usize) -> Vec<usize> {
+    try_build_seed(kernel, size).unwrap_or_else(|| {
+        panic!("no size-{size} subset with positive probability found (kernel rank too low?)")
+    })
+}
+
+/// Fallible greedy-MAP warm start: `None` when the kernel admits no
+/// size-`size` subset with positive determinant (numerically
+/// rank-deficient kernels).  Deterministic in the kernel — the
+/// coordinator runs this once at registration and hands the result to
+/// every [`McmcSampler::with_seed`].
+pub fn try_build_seed(kernel: &NdppKernel, size: usize) -> Option<Vec<usize>> {
     let mut items = greedy_map(kernel, size, 0.0).items;
     items.truncate(size);
     if items.len() < size {
@@ -267,11 +301,11 @@ fn build_seed(kernel: &NdppKernel, size: usize) -> Vec<usize> {
             }
         }
     }
-    assert!(
-        items.len() == size,
-        "no size-{size} subset with positive probability found (kernel rank too low?)"
-    );
-    items
+    if items.len() == size {
+        Some(items)
+    } else {
+        None
+    }
 }
 
 #[cfg(test)]
@@ -350,6 +384,23 @@ mod tests {
         let mut s4 = McmcSampler::new(&kernel, cfg);
         let mut r4 = Xoshiro::seeded(9);
         assert_eq!(first, s4.sample(&mut r4));
+    }
+
+    #[test]
+    fn precomputed_seed_matches_lazy_path() {
+        // with_seed (registration-time greedy MAP) and new (lazy greedy
+        // MAP) must be byte-identical per rng stream
+        let mut rng_k = Xoshiro::seeded(70);
+        let kernel = NdppKernel::random_ondpp(30, 4, &mut rng_k);
+        let cfg = McmcConfig::for_size(3, 30);
+        let seed = try_build_seed(&kernel, 3).expect("healthy kernel has a seed");
+        let mut lazy = McmcSampler::new(&kernel, cfg);
+        let mut warm = McmcSampler::with_seed(&kernel, cfg, seed);
+        let mut r1 = Xoshiro::seeded(5);
+        let mut r2 = Xoshiro::seeded(5);
+        for _ in 0..3 {
+            assert_eq!(lazy.sample(&mut r1), warm.sample(&mut r2));
+        }
     }
 
     #[test]

@@ -14,6 +14,27 @@
 //!
 //! All samplers implement [`Sampler`] and draw randomness from an explicit
 //! [`Xoshiro`] stream, so every sample is reproducible from `(kernel, seed)`.
+//!
+//! ## The Prepared/Scratch split
+//!
+//! Every sampler is factored into two halves, mirroring the paper's
+//! one-time-preprocessing / cheap-per-sample structure:
+//!
+//! * an immutable **Prepared** core — `Send + Sync` data built once per
+//!   model ([`crate::ndpp::MarginalKernel`], [`crate::ndpp::Proposal`] +
+//!   [`SampleTree`], [`dense::DensePrepared`], the
+//!   [`mcmc::try_build_seed`] warm start) that any number of worker
+//!   threads sample from concurrently with zero locking, and
+//! * a reusable **Scratch** workspace ([`cholesky::CholeskyScratch`],
+//!   [`elementary::ElementaryScratch`], [`dense::DenseScratch`], the step
+//!   buffers inside [`crate::ndpp::probability::IncrementalMinor`]) — one
+//!   per worker, reused across requests so the per-sample hot loops
+//!   perform no heap allocation in steady state.
+//!
+//! The `*Sampler` structs below bundle one of each for convenience; the
+//! coordinator ([`crate::coordinator::service`]) instead shares each
+//! model's Prepared half across its shard workers and keeps a warm Scratch
+//! per (worker, model).
 
 pub mod cholesky;
 pub mod dense;
@@ -23,8 +44,9 @@ pub mod mcmc;
 pub mod rejection;
 pub mod tree;
 
-pub use cholesky::CholeskySampler;
-pub use dense::DenseCholeskySampler;
+pub use cholesky::{CholeskySampler, CholeskyScratch};
+pub use dense::{DenseCholeskySampler, DensePrepared, DenseScratch};
+pub use elementary::ElementaryScratch;
 pub use fixed_size::{sample_fixed_size, size_distribution};
 pub use mcmc::{McmcConfig, McmcSampler};
 pub use rejection::RejectionSampler;

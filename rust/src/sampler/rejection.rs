@@ -8,6 +8,7 @@
 
 use crate::ndpp::{probability, NdppKernel, Proposal};
 use crate::rng::Xoshiro;
+use crate::sampler::elementary::ElementaryScratch;
 use crate::sampler::{SampleTree, Sampler};
 
 /// Safety valve: proposals per sample before giving up (a correctly
@@ -21,6 +22,10 @@ pub struct RejectionSampler<'a> {
     kernel: &'a NdppKernel,
     proposal: &'a Proposal,
     tree: &'a SampleTree,
+    /// reusable descent workspace (the Scratch half of the
+    /// Prepared/Scratch split; the borrowed fields above are the Prepared
+    /// half)
+    scratch: ElementaryScratch,
     /// proposals drawn for the most recent sample (>= 1)
     pub last_proposals: usize,
     /// running totals for rejection-rate reporting
@@ -34,16 +39,35 @@ impl<'a> RejectionSampler<'a> {
         proposal: &'a Proposal,
         tree: &'a SampleTree,
     ) -> RejectionSampler<'a> {
+        let scratch = ElementaryScratch::with_rank(tree.spectral().rank());
+        RejectionSampler::with_scratch(kernel, proposal, tree, scratch)
+    }
+
+    /// Revive a worker-cached workspace (see [`RejectionSampler::
+    /// into_scratch`]): lets the coordinator keep one warm scratch per
+    /// (worker, model) across request batches.
+    pub fn with_scratch(
+        kernel: &'a NdppKernel,
+        proposal: &'a Proposal,
+        tree: &'a SampleTree,
+        scratch: ElementaryScratch,
+    ) -> RejectionSampler<'a> {
         assert_eq!(kernel.m(), proposal.m());
         assert_eq!(tree.m(), kernel.m());
         RejectionSampler {
             kernel,
             proposal,
             tree,
+            scratch,
             last_proposals: 0,
             total_proposals: 0,
             total_samples: 0,
         }
+    }
+
+    /// Hand the workspace back for caching.
+    pub fn into_scratch(self) -> ElementaryScratch {
+        self.scratch
     }
 
     /// Mean proposals per accepted sample observed so far.
@@ -64,7 +88,7 @@ impl<'a> RejectionSampler<'a> {
 impl Sampler for RejectionSampler<'_> {
     fn sample(&mut self, rng: &mut Xoshiro) -> Vec<usize> {
         for attempt in 1..=MAX_PROPOSALS {
-            let y = self.tree.sample_dpp(rng);
+            let y = self.tree.sample_dpp_with(&mut self.scratch, rng);
             let accept = probability::acceptance_prob(self.kernel, self.proposal, &y);
             if rng.uniform() <= accept {
                 self.last_proposals = attempt;

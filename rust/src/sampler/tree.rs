@@ -26,7 +26,7 @@ use crate::linalg::backend::Backend as _;
 use crate::linalg::Matrix;
 use crate::ndpp::proposal::SpectralDpp;
 use crate::rng::Xoshiro;
-use crate::sampler::elementary::{conditional_q, item_score, select_elementary};
+use crate::sampler::elementary::{item_score, select_elementary_into, ElementaryScratch};
 
 /// Tree layout parameters.
 #[derive(Debug, Clone, Copy)]
@@ -139,8 +139,8 @@ impl SampleTree {
     }
 
     /// `SampleItem` (Algorithm 3 lines 21-28): draw one item conditioned on
-    /// the current selection (encoded in `Q`).  `scores` is a caller-owned
-    /// scratch buffer so the per-descent bucket scoring never allocates.
+    /// the current selection (encoded in `Q`).  `q` and `scores` come from
+    /// the caller's [`ElementaryScratch`], so a descent never allocates.
     fn sample_item(
         &self,
         e: &[usize],
@@ -182,18 +182,57 @@ impl SampleTree {
     /// `SampleDPP` (Algorithm 3 lines 12-20): draw a full subset from the
     /// spectral DPP — select the elementary component, then `|E|` tree
     /// descents with conditional-kernel updates between picks.
+    ///
+    /// Convenience wrapper that allocates a one-shot workspace; loops
+    /// should hold an [`ElementaryScratch`] and call
+    /// [`SampleTree::sample_dpp_with`] instead.
     pub fn sample_dpp(&self, rng: &mut Xoshiro) -> Vec<usize> {
-        let e = select_elementary(&self.spectral.lambda, rng);
-        self.sample_elementary(&e, rng)
+        let mut scratch = ElementaryScratch::with_rank(self.spectral.rank());
+        self.sample_dpp_with(&mut scratch, rng)
+    }
+
+    /// [`SampleTree::sample_dpp`] with a caller-owned workspace: after the
+    /// scratch has warmed up, the only heap allocation per sample is the
+    /// returned subset itself.
+    pub fn sample_dpp_with(
+        &self,
+        scratch: &mut ElementaryScratch,
+        rng: &mut Xoshiro,
+    ) -> Vec<usize> {
+        select_elementary_into(&self.spectral.lambda, &mut scratch.e, rng);
+        // detach the component list so the scratch can be borrowed mutably
+        // for the descents (restored below — the buffer keeps its capacity)
+        let e = std::mem::take(&mut scratch.e);
+        let y = self.sample_elementary_with(&e, scratch, rng);
+        scratch.e = e;
+        y
     }
 
     /// Draw exactly `|E|` items from the elementary DPP indexed by `e`.
     pub fn sample_elementary(&self, e: &[usize], rng: &mut Xoshiro) -> Vec<usize> {
+        let mut scratch = ElementaryScratch::with_rank(self.spectral.rank());
+        self.sample_elementary_with(e, &mut scratch, rng)
+    }
+
+    /// [`SampleTree::sample_elementary`] with a caller-owned workspace.
+    /// The conditional projector `Q^Y` is maintained incrementally inside
+    /// the scratch (see [`ElementaryScratch`]), so each pick costs one tree
+    /// descent plus an `O(|E|^2)` downdate — no per-pick factorization, no
+    /// per-pick allocation.
+    pub fn sample_elementary_with(
+        &self,
+        e: &[usize],
+        scratch: &mut ElementaryScratch,
+        rng: &mut Xoshiro,
+    ) -> Vec<usize> {
         let mut y: Vec<usize> = Vec::with_capacity(e.len());
-        let mut scores: Vec<f64> = Vec::with_capacity(self.config.leaf_size.max(1));
+        scratch.reset_q(e.len());
         for _ in 0..e.len() {
-            let q = conditional_q(&self.spectral.vecs, &y, e);
-            let j = self.sample_item(e, &q, &mut scores, rng);
+            let j = {
+                let ElementaryScratch { q, scores, .. } = &mut *scratch;
+                self.sample_item(e, q, scores, rng)
+            };
+            scratch.condition_on(self.spectral.vecs.row(j), e);
             y.push(j);
         }
         y.sort_unstable();
@@ -205,6 +244,7 @@ impl SampleTree {
 mod tests {
     use super::*;
     use crate::ndpp::{probability, NdppKernel, Proposal};
+    use crate::sampler::elementary::select_elementary;
     use crate::sampler::test_support::tv;
     use crate::util::prop;
 
@@ -294,6 +334,22 @@ mod tests {
         let mut r2 = Xoshiro::seeded(9);
         for _ in 0..10 {
             assert_eq!(tree.sample_dpp(&mut r1), tree.sample_dpp(&mut r2));
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_matches_one_shot_path() {
+        // a long-lived worker scratch must leak nothing between samples
+        let s = spectral_fixture(46, 48, 4);
+        let tree = SampleTree::build(&s, TreeConfig { leaf_size: 4 });
+        let mut shared = ElementaryScratch::with_rank(s.rank());
+        let mut r1 = Xoshiro::seeded(21);
+        let mut r2 = Xoshiro::seeded(21);
+        for _ in 0..20 {
+            assert_eq!(
+                tree.sample_dpp_with(&mut shared, &mut r1),
+                tree.sample_dpp(&mut r2)
+            );
         }
     }
 

@@ -7,16 +7,17 @@ use ndpp::coordinator::{
     ModelEntry, SampleRequest, SamplerKind, SamplingService, ServiceConfig,
 };
 use ndpp::ndpp::NdppKernel;
-use ndpp::rng::Xoshiro;
+use ndpp::rng::{self, Xoshiro};
 use ndpp::sampler::{
     CholeskySampler, DenseCholeskySampler, McmcSampler, RejectionSampler, Sampler, TreeConfig,
 };
 
 /// Mirror of the service's per-request execution, built directly on the
 /// sampler types (the contract under test: both paths are pure functions
-/// of `(kernel, seed)`).
+/// of `(kernel, seed)` through the coordinator's `rng::request_stream`
+/// derivation).
 fn direct_samples(entry: &ModelEntry, kind: SamplerKind, seed: u64, n: usize) -> Vec<Vec<usize>> {
-    let mut rng = Xoshiro::seeded(seed);
+    let mut rng = rng::request_stream(seed);
     match kind {
         SamplerKind::Cholesky => {
             let mut s = CholeskySampler::from_marginal(&entry.marginal);
@@ -47,8 +48,7 @@ fn service_matches_direct_sampler_for_every_algorithm() {
     let kernel = test_kernel(55, 48, 4);
     let entry = ModelEntry::prepare("model", kernel.clone(), TreeConfig::default());
     let svc = SamplingService::new(ServiceConfig {
-        workers: 2,
-        flush_interval_us: 200,
+        shards: 2,
         max_batch: 8,
         tree: TreeConfig::default(),
         ..Default::default()
@@ -64,6 +64,7 @@ fn service_matches_direct_sampler_for_every_algorithm() {
                     n: 4,
                     seed: Some(seed),
                     kind,
+                    deadline: None,
                 })
                 .unwrap();
             assert_eq!(
@@ -82,8 +83,7 @@ fn coalesced_mcmc_requests_do_not_leak_chain_state() {
     // batch and share one sampler instance; per-request chain restarts must
     // make them all identical anyway
     let svc = SamplingService::new(ServiceConfig {
-        workers: 1,
-        flush_interval_us: 500,
+        shards: 1,
         max_batch: 64,
         tree: TreeConfig::default(),
         ..Default::default()
@@ -94,6 +94,7 @@ fn coalesced_mcmc_requests_do_not_leak_chain_state() {
         n: 3,
         seed: Some(4242),
         kind: SamplerKind::Mcmc,
+        deadline: None,
     };
     let rxs: Vec<_> = (0..12).map(|_| svc.submit(req())).collect();
     let responses: Vec<_> = rxs
@@ -111,8 +112,7 @@ fn replay_is_stable_across_service_instances() {
     // exact same batch — nothing about preprocessing is nondeterministic
     let collect = |kind: SamplerKind| -> Vec<Vec<Vec<usize>>> {
         let svc = SamplingService::new(ServiceConfig {
-            workers: 2,
-            flush_interval_us: 200,
+            shards: 2,
             max_batch: 8,
             tree: TreeConfig::default(),
             ..Default::default()
@@ -125,6 +125,7 @@ fn replay_is_stable_across_service_instances() {
                     n: 2,
                     seed: Some(1000 + s),
                     kind,
+                    deadline: None,
                 })
                 .unwrap()
                 .samples

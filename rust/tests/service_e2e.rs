@@ -13,8 +13,7 @@ use ndpp::util::json::Json;
 
 fn make_service(models: &[(&str, usize, usize)]) -> Arc<SamplingService> {
     let svc = Arc::new(SamplingService::new(ServiceConfig {
-        workers: 2,
-        flush_interval_us: 200,
+        shards: 2,
         max_batch: 16,
         tree: TreeConfig::default(),
         ..Default::default()
@@ -40,6 +39,7 @@ fn concurrent_multi_model_load() {
                 n: 2,
                 seed: Some(i),
                 kind: if i % 3 == 0 { SamplerKind::Cholesky } else { SamplerKind::Rejection },
+                deadline: None,
             })
         })
         .collect();
@@ -69,6 +69,7 @@ fn errors_do_not_poison_the_pipeline() {
                 n: 1,
                 seed: Some(i),
                 kind: SamplerKind::Cholesky,
+                deadline: None,
             })
         })
         .collect();
@@ -95,6 +96,7 @@ fn determinism_under_batching_pressure() {
             n: 4,
             seed: Some(1234),
             kind: SamplerKind::Rejection,
+            deadline: None,
         })
         .unwrap();
     // flood with noise and re-issue
@@ -105,6 +107,7 @@ fn determinism_under_batching_pressure() {
                 n: 1,
                 seed: Some(i),
                 kind: SamplerKind::Rejection,
+                deadline: None,
             })
         })
         .collect();
@@ -114,6 +117,7 @@ fn determinism_under_batching_pressure() {
             n: 4,
             seed: Some(1234),
             kind: SamplerKind::Rejection,
+            deadline: None,
         })
         .unwrap();
     for rx in noise {

@@ -1,0 +1,301 @@
+//! Sharded serving pipeline end-to-end: determinism across shard counts
+//! and submission modes, concurrency stress across models, admission
+//! control (queue_full + deadlines), and graceful drain.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ndpp::coordinator::{
+    server, RejectReason, SampleRequest, SamplerKind, SamplingService, ServiceConfig,
+};
+use ndpp::ndpp::NdppKernel;
+use ndpp::rng::Xoshiro;
+use ndpp::util::json::Json;
+
+fn test_kernel(seed: u64, m: usize, k: usize) -> NdppKernel {
+    let mut rng = Xoshiro::seeded(seed);
+    NdppKernel::random_ondpp(m, k, &mut rng)
+}
+
+fn service(shards: usize, queue_depth: usize) -> SamplingService {
+    SamplingService::new(ServiceConfig {
+        shards,
+        queue_depth,
+        max_batch: 8,
+        ..Default::default()
+    })
+}
+
+/// Acceptance criterion: same `(model, seed, n)` returns byte-identical
+/// samples for shard counts 1, 2, and 8, for every algorithm, and under
+/// batch vs single submission.
+#[test]
+fn identical_samples_across_shard_counts_and_submission_modes() {
+    let collect = |shards: usize| -> Vec<Vec<Vec<usize>>> {
+        let svc = service(shards, 1024);
+        svc.register("m", test_kernel(11, 48, 4));
+        let mut out = Vec::new();
+        for kind in SamplerKind::ALL {
+            for seed in [1u64, 99, 12345] {
+                out.push(
+                    svc.sample(SampleRequest {
+                        model: "m".into(),
+                        n: 3,
+                        seed: Some(seed),
+                        kind,
+                        deadline: None,
+                    })
+                    .unwrap()
+                    .samples,
+                );
+            }
+        }
+        out
+    };
+    let one = collect(1);
+    assert_eq!(one, collect(2), "shards=2 diverged from shards=1");
+    assert_eq!(one, collect(8), "shards=8 diverged from shards=1");
+
+    // batch submission of the same requests is byte-identical too
+    let svc = service(4, 1024);
+    svc.register("m", test_kernel(11, 48, 4));
+    let reqs: Vec<SampleRequest> = SamplerKind::ALL
+        .into_iter()
+        .flat_map(|kind| {
+            [1u64, 99, 12345].into_iter().map(move |seed| SampleRequest {
+                model: "m".into(),
+                n: 3,
+                seed: Some(seed),
+                kind,
+                deadline: None,
+            })
+        })
+        .collect();
+    let batched: Vec<Vec<Vec<usize>>> = svc
+        .sample_batch(reqs)
+        .into_iter()
+        .map(|r| r.unwrap().samples)
+        .collect();
+    assert_eq!(one, batched, "batch submission diverged from single-op submission");
+}
+
+/// Many clients × many models, high concurrency: nothing deadlocks, every
+/// request is answered, and a replay of every (model, seed) afterwards is
+/// byte-identical — shard scheduling leaks nothing into results.
+#[test]
+fn stress_many_clients_many_models_deterministic() {
+    let svc = Arc::new(service(4, 4096));
+    let models = ["alpha", "beta", "gamma"];
+    for (i, name) in models.iter().enumerate() {
+        svc.register(name, test_kernel(20 + i as u64, 40 + 16 * i, 4));
+    }
+    let kinds = [SamplerKind::Cholesky, SamplerKind::Rejection, SamplerKind::Mcmc];
+    let clients = 8usize;
+    let per_client = 24usize;
+
+    let mut results: Vec<(String, u64, SamplerKind, Vec<Vec<usize>>)> = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let svc = Arc::clone(&svc);
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    for i in 0..per_client {
+                        let model = models[(c + i) % models.len()];
+                        let kind = kinds[i % kinds.len()];
+                        let seed = (c * per_client + i) as u64;
+                        let resp = svc
+                            .sample(SampleRequest {
+                                model: model.into(),
+                                n: 2,
+                                seed: Some(seed),
+                                kind,
+                                deadline: None,
+                            })
+                            .unwrap();
+                        assert_eq!(resp.samples.len(), 2);
+                        out.push((model.to_string(), seed, kind, resp.samples));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            results.extend(h.join().expect("client thread panicked"));
+        }
+    });
+    assert_eq!(results.len(), clients * per_client);
+
+    // replay sequentially on a single-shard service: byte-identical
+    let replay = service(1, 4096);
+    for (i, name) in models.iter().enumerate() {
+        replay.register(name, test_kernel(20 + i as u64, 40 + 16 * i, 4));
+    }
+    for (model, seed, kind, samples) in &results {
+        let again = replay
+            .sample(SampleRequest {
+                model: model.clone(),
+                n: 2,
+                seed: Some(*seed),
+                kind: *kind,
+                deadline: None,
+            })
+            .unwrap();
+        assert_eq!(
+            &again.samples, samples,
+            "{model} seed={seed} kind={} diverged under load",
+            kind.as_str()
+        );
+    }
+}
+
+/// Backpressure: a full (model, shard) queue rejects immediately with a
+/// `queue_full` error, the rejection is counted, and neither the queued
+/// nor later requests are poisoned.
+#[test]
+fn queue_full_rejects_without_poisoning_neighbors() {
+    // depth 3 admits exactly the heavy requests even if the worker has not
+    // picked any up yet; the flood then overflows deterministically
+    let svc = service(1, 3);
+    svc.register("m", test_kernel(31, 256, 4));
+    // occupy the single worker with slow requests and fill the queue
+    let heavy: Vec<_> = (0..3)
+        .map(|i| {
+            svc.submit(SampleRequest {
+                model: "m".into(),
+                n: 40,
+                seed: Some(i),
+                kind: SamplerKind::Cholesky,
+                deadline: None,
+            })
+        })
+        .collect();
+    // flood: the worker is busy for many milliseconds, these arrive in
+    // microseconds, so at most queue_depth of them can be accepted
+    let flood: Vec<_> = (0..20)
+        .map(|i| {
+            svc.submit(SampleRequest {
+                model: "m".into(),
+                n: 1,
+                seed: Some(100 + i),
+                kind: SamplerKind::Cholesky,
+                deadline: None,
+            })
+        })
+        .collect();
+    let mut rejected = 0u64;
+    let mut served = 0u64;
+    for rx in flood {
+        match rx.recv().unwrap() {
+            Ok(resp) => {
+                assert_eq!(resp.samples.len(), 1);
+                served += 1;
+            }
+            Err(e) => {
+                assert!(
+                    format!("{e:#}").contains("queue_full"),
+                    "unexpected error: {e:#}"
+                );
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected > 0, "flood never hit the queue bound");
+    assert_eq!(served + rejected, 20);
+    assert_eq!(
+        svc.metrics().rejected_count("m", RejectReason::QueueFull),
+        rejected
+    );
+    // the heavy requests themselves were unaffected
+    for rx in heavy {
+        assert_eq!(rx.recv().unwrap().unwrap().samples.len(), 40);
+    }
+    // and the service is healthy afterwards
+    let after = svc
+        .sample(SampleRequest {
+            model: "m".into(),
+            n: 1,
+            seed: Some(999),
+            kind: SamplerKind::Cholesky,
+            deadline: None,
+        })
+        .unwrap();
+    assert_eq!(after.samples.len(), 1);
+}
+
+/// A request whose deadline expires while queued is discarded with a
+/// `deadline` error (and counted), without affecting its neighbors.
+#[test]
+fn expired_deadline_is_rejected_and_counted() {
+    let svc = service(1, 1024);
+    svc.register("m", test_kernel(32, 256, 4));
+    // park the worker on a slow request
+    let heavy = svc.submit(SampleRequest {
+        model: "m".into(),
+        n: 60,
+        seed: Some(1),
+        kind: SamplerKind::Cholesky,
+        deadline: None,
+    });
+    let doomed = svc.submit(SampleRequest {
+        model: "m".into(),
+        n: 1,
+        seed: Some(2),
+        kind: SamplerKind::Cholesky,
+        deadline: Some(Duration::from_micros(1)),
+    });
+    let fine = svc.submit(SampleRequest {
+        model: "m".into(),
+        n: 1,
+        seed: Some(3),
+        kind: SamplerKind::Cholesky,
+        deadline: Some(Duration::from_secs(60)),
+    });
+    let err = doomed.recv().unwrap().unwrap_err();
+    assert!(format!("{err:#}").contains("deadline"), "got: {err:#}");
+    assert_eq!(fine.recv().unwrap().unwrap().samples.len(), 1);
+    assert_eq!(heavy.recv().unwrap().unwrap().samples.len(), 60);
+    assert_eq!(svc.metrics().rejected_count("m", RejectReason::Deadline), 1);
+}
+
+/// The TCP `batch` op returns per-entry results identical to individual
+/// `sample` ops issued over the same connection.
+#[test]
+fn tcp_batch_op_matches_single_ops() {
+    let svc = Arc::new(service(2, 1024));
+    svc.register("net", test_kernel(41, 48, 4));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let svc2 = Arc::clone(&svc);
+    let server_thread = std::thread::spawn(move || {
+        server::serve(svc2, "127.0.0.1:0", move |a| {
+            let _ = addr_tx.send(a);
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv().unwrap().to_string();
+    let mut c = server::Client::connect(&addr).unwrap();
+
+    let singles: Vec<Vec<Vec<usize>>> = (0..4u64)
+        .map(|i| c.sample("net", 2, 7000 + i, "rejection").unwrap())
+        .collect();
+    let batch = c
+        .sample_batch(
+            (0..4)
+                .map(|i| {
+                    Json::obj()
+                        .with("model", "net")
+                        .with("n", 2)
+                        .with("seed", 7000 + i as u64)
+                        .with("algo", "rejection")
+                })
+                .collect(),
+        )
+        .unwrap();
+    for (i, entry) in batch.iter().enumerate() {
+        assert_eq!(entry.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(server::parse_samples(entry), singles[i], "entry {i}");
+    }
+    let stop = c.call(&Json::obj().with("op", "shutdown")).unwrap();
+    assert_eq!(stop.get("ok").and_then(|b| b.as_bool()), Some(true));
+    server_thread.join().unwrap();
+}
