@@ -1,4 +1,6 @@
-//! `cargo bench --bench linalg_backends` — the compute-backend sweep.
+//! `cargo bench --bench linalg_backends` — the compute-backend sweep
+//! (three-way: naive / blocked / simd, with the detected SIMD ISA
+//! recorded in the JSON).
 //!
 //! Two measurement families, each run under every [`BackendKind`]:
 //!
@@ -14,8 +16,10 @@
 //!
 //! Results are printed as tables and written as `BENCH_linalg.json`
 //! (override the path with `NDPP_BENCH_OUT`), the first entry of the
-//! repo's `BENCH_*` trajectory.  CI runs quick mode and uploads the JSON
-//! as an artifact.
+//! repo's `BENCH_*` trajectory.  CI runs quick mode, feeds the JSON
+//! through `scripts/bench_gate.py` (which enforces the blocked-vs-naive
+//! and simd-vs-blocked speedup floors on the 512³ row and merges it into
+//! `BENCH_trajectory.json`), and uploads both as artifacts.
 
 use anyhow::Result;
 
@@ -41,9 +45,10 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
     };
 
     println!(
-        "linalg_backends: {} mode, {} worker threads",
+        "linalg_backends: {} mode, {} worker threads, simd ISA: {}",
         if quick { "quick" } else { "full" },
-        backend::configured_threads()
+        backend::configured_threads(),
+        backend::simd_isa().as_str()
     );
 
     // ---- GEMM shape sweep -------------------------------------------------
@@ -68,7 +73,7 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
         vec![1024, 4096, 16384]
     };
     let saved = backend::active_kind();
-    let mut prep_table = Table::new(&["M", "naive", "blocked", "speedup"]);
+    let mut prep_table = Table::new(&["M", "naive", "blocked", "simd", "blk/naive", "simd/blk"]);
     let mut prep_rows: Vec<Json> = Vec::new();
     for &m in &ms {
         let mut rng = Xoshiro::seeded(m as u64);
@@ -81,13 +86,16 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
             });
             means.push(meas.mean());
         }
-        let (naive_s, blocked_s) = (means[0], means[1]);
+        let (naive_s, blocked_s, simd_s) = (means[0], means[1], means[2]);
         let speedup = naive_s / blocked_s.max(1e-12);
+        let simd_vs_blocked = blocked_s / simd_s.max(1e-12);
         prep_table.row(vec![
             format!("{m}"),
             fmt_secs(naive_s),
             fmt_secs(blocked_s),
+            fmt_secs(simd_s),
             format!("x{speedup:.2}"),
+            format!("x{simd_vs_blocked:.2}"),
         ]);
         prep_rows.push(
             Json::obj()
@@ -95,7 +103,9 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
                 .with("k", PREP_K)
                 .with("naive_s", naive_s)
                 .with("blocked_s", blocked_s)
-                .with("speedup", speedup),
+                .with("simd_s", simd_s)
+                .with("speedup", speedup)
+                .with("simd_vs_blocked", simd_vs_blocked),
         );
     }
     backend::set_active(saved);
@@ -108,6 +118,7 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
         .with("bench", "linalg_backends")
         .with("quick", quick)
         .with("threads", backend::configured_threads())
+        .with("isa", backend::simd_isa().as_str())
         .with("gemm", Json::Arr(gemm_rows))
         .with("preprocess", Json::Arr(prep_rows));
     std::fs::write(out_path, json.to_string_pretty())?;
@@ -119,7 +130,8 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
 /// as instances — the process-global selection is untouched, so this part
 /// is safe to exercise from unit tests running next to other tests.
 fn gemm_sweep(runner: &BenchRunner, shapes: &[(usize, usize, usize)]) -> (Table, Vec<Json>) {
-    let mut table = Table::new(&["shape (m x k x n)", "naive", "blocked", "speedup"]);
+    let mut table =
+        Table::new(&["shape (m x k x n)", "naive", "blocked", "simd", "blk/naive", "simd/blk"]);
     let mut rows: Vec<Json> = Vec::new();
     for &(m, k, n) in shapes {
         let mut rng = Xoshiro::seeded((m * 31 + n) as u64);
@@ -133,13 +145,16 @@ fn gemm_sweep(runner: &BenchRunner, shapes: &[(usize, usize, usize)]) -> (Table,
             });
             means.push(meas.mean());
         }
-        let (naive_s, blocked_s) = (means[0], means[1]);
+        let (naive_s, blocked_s, simd_s) = (means[0], means[1], means[2]);
         let speedup = naive_s / blocked_s.max(1e-12);
+        let simd_vs_blocked = blocked_s / simd_s.max(1e-12);
         table.row(vec![
             format!("{m} x {k} x {n}"),
             fmt_secs(naive_s),
             fmt_secs(blocked_s),
+            fmt_secs(simd_s),
             format!("x{speedup:.2}"),
+            format!("x{simd_vs_blocked:.2}"),
         ]);
         rows.push(
             Json::obj()
@@ -148,7 +163,9 @@ fn gemm_sweep(runner: &BenchRunner, shapes: &[(usize, usize, usize)]) -> (Table,
                 .with("n", n)
                 .with("naive_s", naive_s)
                 .with("blocked_s", blocked_s)
-                .with("speedup", speedup),
+                .with("simd_s", simd_s)
+                .with("speedup", speedup)
+                .with("simd_vs_blocked", simd_vs_blocked),
         );
     }
     (table, rows)
@@ -172,7 +189,9 @@ mod tests {
         for row in &rows {
             assert!(row.f64_or("naive_s", -1.0) > 0.0);
             assert!(row.f64_or("blocked_s", -1.0) > 0.0);
+            assert!(row.f64_or("simd_s", -1.0) > 0.0);
             assert!(row.f64_or("speedup", -1.0) > 0.0);
+            assert!(row.f64_or("simd_vs_blocked", -1.0) > 0.0);
         }
         assert!(table.render().contains("24 x 16 x 24"));
     }

@@ -78,16 +78,39 @@
 //!
 //! * `blocked` (default) — cache-blocked kernels, multithreaded over row
 //!   bands (`available_parallelism`, capped by `NDPP_BACKEND_THREADS`).
+//! * `simd` — the blocked panelization and threading with explicit f64x4
+//!   microkernels in the inner loops: AVX2+FMA on x86_64, NEON on
+//!   aarch64.  The instruction set is probed **at runtime**
+//!   (`is_x86_feature_detected!`); on hardware without AVX2/FMA the
+//!   backend silently falls back to portable 4-wide unrolled lanes, so
+//!   selecting `simd` is always safe — `ndpp info` and the
+//!   `BENCH_linalg.json` `isa` field report what was actually detected.
+//!   Pick `simd` when sampler preprocessing (model registration, Gram /
+//!   spectral / tree construction) dominates; pick `blocked` when you
+//!   need the exact numerics CI's default leg runs; `naive` is for
+//!   debugging only.
 //! * `naive` — the single-threaded reference loops, kept as the
-//!   correctness oracle the blocked kernels are property-tested against
+//!   correctness oracle the fast kernels are property-tested against
 //!   (`tests/backend_equivalence.rs`).
 //!
-//! Select per process with `NDPP_BACKEND=naive|blocked`, programmatically
-//! with [`linalg::backend::set_active`], per deployment with
-//! [`coordinator::ServiceConfig`]'s `backend` field, or per CLI run with
-//! `--backend`.  `cargo bench --bench linalg_backends` sweeps both
-//! backends over GEMM shapes and end-to-end registry preprocessing and
-//! writes `BENCH_linalg.json`.
+//! Select per process with `NDPP_BACKEND=naive|blocked|simd`,
+//! programmatically with [`linalg::backend::set_active`], per deployment
+//! with [`coordinator::ServiceConfig`]'s `backend` field, or per CLI run
+//! with `--backend`.  `cargo bench --bench linalg_backends` sweeps all
+//! three backends over GEMM shapes and end-to-end registry preprocessing
+//! and writes `BENCH_linalg.json`.
+//!
+//! **Reading `BENCH_trajectory.json`.**  CI merges `BENCH_linalg.json`
+//! and `BENCH_serving.json` into one `BENCH_trajectory.json` artifact per
+//! commit (`scripts/bench_gate.py`, which also *fails* the build when
+//! blocked-vs-naive GEMM speedup at 512³ drops below 2x, simd-vs-blocked
+//! below 1.2x, or any serving config collapses to 0 req/s).  Inside it,
+//! `linalg.gemm[*]` rows carry `naive_s` / `blocked_s` / `simd_s` wall
+//! times plus `speedup` (naive/blocked) and `simd_vs_blocked`;
+//! `linalg.isa` records the detected instruction set (gates on the simd
+//! column are relaxed when it reports `portable`); `serving.sweep[*]`
+//! rows carry `requests_per_s` and latency percentiles per
+//! (algorithm × client-count) config.
 //!
 //! ## Serving at scale
 //!

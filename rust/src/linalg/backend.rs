@@ -7,11 +7,11 @@
 //! `sum_j z_j z_j^T` statistics of the sample tree, Householder panel
 //! updates in QR, and the small mat-vec / rank-1 steps of the incremental
 //! minors.  A [`Backend`] supplies those primitives; callers pick one via
-//! [`active`] (process-wide default, `NDPP_BACKEND=naive|blocked`), a
+//! [`active`] (process-wide default, `NDPP_BACKEND=naive|blocked|simd`), a
 //! [`crate::coordinator::ServiceConfig`] pin, or by holding an instance
 //! directly (as the equivalence tests do).
 //!
-//! Two implementations ship today:
+//! Three implementations ship today:
 //!
 //! * [`NaiveBackend`] — the original reference loops, kept verbatim as the
 //!   correctness oracle.  Single-threaded, no blocking.
@@ -20,18 +20,35 @@
 //!   over row bands with `std::thread::scope` once an operation is large
 //!   enough to amortize thread spawn.  Thread count comes from
 //!   `available_parallelism`, overridable with `NDPP_BACKEND_THREADS`.
+//! * [`SimdBackend`] — the same panelization, band splitting, and thread
+//!   fan-out as `blocked`, with the inner loops replaced by the explicit
+//!   f64x4 microkernels of [`crate::linalg::simd`] (AVX2+FMA on x86_64,
+//!   NEON `vfmaq_f64` pairs on aarch64, a portable 4-wide unrolled
+//!   fallback elsewhere).  The instruction set is probed once at runtime
+//!   via `is_x86_feature_detected!` — on hardware without AVX2/FMA the
+//!   backend still works, running the portable lanes.  [`simd_isa`]
+//!   reports what was detected.
+//!
+//! **Dispatch design.**  The blocked and simd backends share every layer
+//! above the innermost loop: `fan_out_rows` splits output rows over
+//! scoped threads with thread-count-independent chunk boundaries,
+//! `panel_reduce` forms fixed-size chunk partials for reduction-shaped
+//! panel ops, and the band kernels walk the same `KC`-deep k panels with
+//! the same `MR`-row register tile.  They differ only in the micro
+//! level: blocked runs scalar loops, simd calls
+//! [`crate::linalg::simd::Kernels`], which dispatches per-ISA exactly
+//! once per call (a single enum test — no per-element branching).
 //!
 //! Determinism: for a fixed input shape every output element is accumulated
 //! in a fixed order that does not depend on the number of worker threads,
-//! so results are reproducible across runs on the same build.  The two
-//! backends may differ from each other by normal floating-point
-//! re-association (bounded well below the 1e-10 the equivalence suite
-//! enforces); samples remain reproducible because a process sticks to one
-//! backend.
+//! so results are reproducible across runs on the same build and machine.
+//! The backends may differ from each other by normal floating-point
+//! re-association and FMA rounding (bounded well below the 1e-10 the
+//! equivalence suite enforces); samples remain reproducible because a
+//! process sticks to one backend.
 //!
-//! Future backends (SIMD microkernels, an XLA/PJRT device backend via
-//! [`crate::runtime`]) only need to implement the trait and register a
-//! [`BackendKind`].
+//! Future backends (an XLA/PJRT device backend via [`crate::runtime`])
+//! only need to implement the trait and register a [`BackendKind`].
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -39,6 +56,7 @@ use std::sync::OnceLock;
 use anyhow::{anyhow, Result};
 
 use crate::linalg::matrix::{dot, Matrix};
+use crate::linalg::simd;
 
 /// Dense compute primitives over row-major [`Matrix`] data.
 ///
@@ -111,6 +129,9 @@ pub enum BackendKind {
     Naive,
     /// Cache-blocked kernels with row-band multithreading (the default).
     Blocked,
+    /// Blocked panelization + threading with explicit f64x4 SIMD
+    /// microkernels (AVX2/NEON, portable fallback) in the inner loops.
+    Simd,
 }
 
 impl BackendKind {
@@ -118,7 +139,8 @@ impl BackendKind {
         match s {
             "naive" | "reference" => Ok(BackendKind::Naive),
             "blocked" | "threaded" => Ok(BackendKind::Blocked),
-            other => Err(anyhow!("unknown backend '{other}' (naive|blocked)")),
+            "simd" | "vector" => Ok(BackendKind::Simd),
+            other => Err(anyhow!("unknown backend '{other}' (naive|blocked|simd)")),
         }
     }
 
@@ -126,6 +148,7 @@ impl BackendKind {
         match self {
             BackendKind::Naive => "naive",
             BackendKind::Blocked => "blocked",
+            BackendKind::Simd => "simd",
         }
     }
 
@@ -134,24 +157,41 @@ impl BackendKind {
         match self {
             BackendKind::Naive => &NAIVE,
             BackendKind::Blocked => &BLOCKED,
+            BackendKind::Simd => simd_instance(),
         }
     }
 
     /// All backends, for sweep-style tests and benches.
-    pub const ALL: [BackendKind; 2] = [BackendKind::Naive, BackendKind::Blocked];
+    pub const ALL: [BackendKind; 3] =
+        [BackendKind::Naive, BackendKind::Blocked, BackendKind::Simd];
 }
 
 static NAIVE: NaiveBackend = NaiveBackend;
 static BLOCKED: BlockedBackend = BlockedBackend;
 
+/// The process-wide `simd` backend instance; ISA detection runs once on
+/// first use.
+fn simd_instance() -> &'static SimdBackend {
+    static SIMD: OnceLock<SimdBackend> = OnceLock::new();
+    SIMD.get_or_init(SimdBackend::detect)
+}
+
+/// The SIMD instruction set the `simd` backend dispatches to on this
+/// host (`avx2` / `neon` / `portable`), probing the CPU on first call.
+/// Surfaced by `ndpp info` and recorded in `BENCH_linalg.json`.
+pub fn simd_isa() -> simd::Isa {
+    simd_instance().isa()
+}
+
 /// Process-wide backend selection.  Codes: 0 = naive, 1 = blocked,
-/// `u8::MAX` = not yet resolved from the environment.
+/// 2 = simd, `u8::MAX` = not yet resolved from the environment.
 static ACTIVE: AtomicU8 = AtomicU8::new(u8::MAX);
 
 fn kind_code(kind: BackendKind) -> u8 {
     match kind {
         BackendKind::Naive => 0,
         BackendKind::Blocked => 1,
+        BackendKind::Simd => 2,
     }
 }
 
@@ -162,6 +202,7 @@ pub fn active_kind() -> BackendKind {
     match ACTIVE.load(Ordering::Relaxed) {
         0 => BackendKind::Naive,
         1 => BackendKind::Blocked,
+        2 => BackendKind::Simd,
         _ => {
             let kind = match std::env::var("NDPP_BACKEND") {
                 Ok(s) => BackendKind::parse(&s)
@@ -405,7 +446,7 @@ const TN_STREAM_MAX_P: usize = 256;
 /// Cache-blocked, multithreaded backend.
 ///
 /// GEMM packs no buffers (row-major inputs are already contiguous) but
-/// k-panelizes with [`KC`] and register-tiles [`MR`] rows of the output so
+/// k-panelizes with `KC` and register-tiles `MR` rows of the output so
 /// each loaded `B` row is reused 4x; large ops split output rows over
 /// `std::thread::scope` bands.  Every output element is accumulated in a
 /// thread-count-independent order, so results are deterministic for a
@@ -428,6 +469,99 @@ fn blas2_threads(elems: usize, rows: usize) -> usize {
     }
 }
 
+/// Shared thread fan-out for row-banded output: split `c` (`rows` rows of
+/// width `n`) into contiguous per-thread bands and run `band(chunk, r0,
+/// r1)` on each (absolute row range).  `threads <= 1` runs inline.  Band
+/// boundaries depend only on `threads` (itself a pure function of shape
+/// and configuration), never on scheduling, so results are deterministic.
+/// Both the blocked and simd backends route every banded primitive
+/// through this driver.
+fn fan_out_rows(
+    c: &mut [f64],
+    n: usize,
+    rows: usize,
+    threads: usize,
+    band: impl Fn(&mut [f64], usize, usize) + Sync,
+) {
+    if threads <= 1 || rows == 0 {
+        band(c, 0, rows);
+        return;
+    }
+    let rows_per = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let band = &band;
+        for (t, chunk) in c.chunks_mut(rows_per * n).enumerate() {
+            let i0 = t * rows_per;
+            s.spawn(move || band(chunk, i0, i0 + chunk.len() / n));
+        }
+    });
+}
+
+/// Shared driver for `panel_t_matvec`-shaped reductions: serial below the
+/// fan-out threshold, otherwise partial sums formed per fixed-size
+/// [`PANEL_CHUNK`] row chunk and reduced in chunk-index order, keeping
+/// the result independent of how many threads the chunks land on.
+/// `accum(w, x, arow)` must implement `w += x * arow`; the blocked
+/// backend passes the scalar loop, the simd backend its `axpy` kernel.
+fn panel_reduce(
+    a: &Matrix,
+    row0: usize,
+    col0: usize,
+    v: &[f64],
+    nrows: usize,
+    ncols: usize,
+    accum: impl Fn(&mut [f64], f64, &[f64]) + Sync,
+) -> Vec<f64> {
+    let threads = blas2_threads(nrows * ncols, nrows);
+    if threads <= 1 {
+        let mut w = vec![0.0; ncols];
+        for (i, &x) in v.iter().enumerate().take(nrows) {
+            if x == 0.0 {
+                continue;
+            }
+            accum(&mut w, x, &a.row(row0 + i)[col0..]);
+        }
+        return w;
+    }
+    let nchunks = nrows.div_ceil(PANEL_CHUNK);
+    let chunks_per_band = nchunks.div_ceil(threads);
+    let mut w = vec![0.0; ncols];
+    std::thread::scope(|s| {
+        let accum = &accum;
+        let mut handles = Vec::with_capacity(threads);
+        let mut c0 = 0;
+        while c0 < nchunks {
+            let c1 = (c0 + chunks_per_band).min(nchunks);
+            handles.push(s.spawn(move || {
+                let mut parts: Vec<Vec<f64>> = Vec::with_capacity(c1 - c0);
+                for chunk in c0..c1 {
+                    let r0 = chunk * PANEL_CHUNK;
+                    let r1 = (r0 + PANEL_CHUNK).min(nrows);
+                    let mut part = vec![0.0; ncols];
+                    for i in r0..r1 {
+                        let x = v[i];
+                        if x == 0.0 {
+                            continue;
+                        }
+                        accum(&mut part, x, &a.row(row0 + i)[col0..]);
+                    }
+                    parts.push(part);
+                }
+                parts
+            }));
+            c0 = c1;
+        }
+        for h in handles {
+            for part in h.join().expect("backend worker panicked") {
+                for (o, p) in w.iter_mut().zip(&part) {
+                    *o += p;
+                }
+            }
+        }
+    });
+    w
+}
+
 impl Backend for BlockedBackend {
     fn name(&self) -> &'static str {
         "blocked"
@@ -438,17 +572,9 @@ impl Backend for BlockedBackend {
         let (m, n, k) = (a.rows, b.cols, a.cols);
         let mut c = Matrix::zeros(m, n);
         let threads = gemm_threads(2 * m * n * k, m);
-        if threads <= 1 {
-            gemm_band(a, b, &mut c.data, 0, m);
-        } else {
-            let rows_per = m.div_ceil(threads);
-            std::thread::scope(|s| {
-                for (t, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
-                    let i0 = t * rows_per;
-                    s.spawn(move || gemm_band(a, b, chunk, i0, i0 + chunk.len() / n));
-                }
-            });
-        }
+        fan_out_rows(&mut c.data, n, m, threads, |chunk, i0, i1| {
+            gemm_band(a, b, chunk, i0, i1)
+        });
         c
     }
 
@@ -461,17 +587,9 @@ impl Backend for BlockedBackend {
             // p x n output — no transposed copy of the M-row factor.
             let mut c = Matrix::zeros(p, n);
             let threads = gemm_threads(2 * m * p * n, p);
-            if threads <= 1 {
-                gemm_tn_band(a, b, &mut c.data, 0, p);
-            } else {
-                let rows_per = p.div_ceil(threads);
-                std::thread::scope(|s| {
-                    for (t, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
-                        let j0 = t * rows_per;
-                        s.spawn(move || gemm_tn_band(a, b, chunk, j0, j0 + chunk.len() / n));
-                    }
-                });
-            }
+            fan_out_rows(&mut c.data, n, p, threads, |chunk, j0, j1| {
+                gemm_tn_band(a, b, chunk, j0, j1)
+            });
             return c;
         }
         // Square-ish A: transposing costs O(mp) against the O(mpn) product
@@ -485,17 +603,9 @@ impl Backend for BlockedBackend {
         let (m, n, k) = (a.rows, b.rows, a.cols);
         let mut c = Matrix::zeros(m, n);
         let threads = gemm_threads(2 * m * n * k, m);
-        if threads <= 1 {
-            gemm_nt_band(a, b, &mut c.data, 0, m);
-        } else {
-            let rows_per = m.div_ceil(threads);
-            std::thread::scope(|s| {
-                for (t, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
-                    let i0 = t * rows_per;
-                    s.spawn(move || gemm_nt_band(a, b, chunk, i0, i0 + chunk.len() / n));
-                }
-            });
-        }
+        fan_out_rows(&mut c.data, n, m, threads, |chunk, i0, i1| {
+            gemm_nt_band(a, b, chunk, i0, i1)
+        });
         c
     }
 
@@ -509,17 +619,9 @@ impl Backend for BlockedBackend {
         let rows = hi - lo;
         let mut c = Matrix::zeros(p, p);
         let threads = gemm_threads(2 * rows * p * p, p);
-        if threads <= 1 {
-            syrk_band(a, lo, hi, &mut c.data, 0, p);
-        } else {
-            let rows_per = p.div_ceil(threads);
-            std::thread::scope(|s| {
-                for (t, chunk) in c.data.chunks_mut(rows_per * p).enumerate() {
-                    let j0 = t * rows_per;
-                    s.spawn(move || syrk_band(a, lo, hi, chunk, j0, j0 + chunk.len() / p));
-                }
-            });
-        }
+        fan_out_rows(&mut c.data, p, p, threads, |chunk, j0, j1| {
+            syrk_band(a, lo, hi, chunk, j0, j1)
+        });
         c
     }
 
@@ -527,19 +629,10 @@ impl Backend for BlockedBackend {
         assert_eq!(a.cols, x.len(), "matvec shape mismatch");
         let m = a.rows;
         let threads = blas2_threads(m * a.cols, m);
-        if threads <= 1 {
-            return (0..m).map(|i| dot4(a.row(i), x)).collect();
-        }
         let mut y = vec![0.0; m];
-        let rows_per = m.div_ceil(threads);
-        std::thread::scope(|s| {
-            for (t, chunk) in y.chunks_mut(rows_per).enumerate() {
-                let i0 = t * rows_per;
-                s.spawn(move || {
-                    for (di, yi) in chunk.iter_mut().enumerate() {
-                        *yi = dot4(a.row(i0 + di), x);
-                    }
-                });
+        fan_out_rows(&mut y, 1, m, threads, |chunk, i0, _i1| {
+            for (di, yi) in chunk.iter_mut().enumerate() {
+                *yi = dot4(a.row(i0 + di), x);
             }
         });
         y
@@ -555,77 +648,30 @@ impl Backend for BlockedBackend {
         assert_eq!(u.len(), a.rows, "rank1_sub row mismatch");
         assert_eq!(v.len(), a.cols, "rank1_sub col mismatch");
         let (m, n) = (a.rows, a.cols);
-        let threads = blas2_threads(m * n, m);
-        if threads <= 1 {
-            return NaiveBackend.rank1_sub(a, u, v, scale);
+        if m == 0 || n == 0 {
+            return;
         }
-        let rows_per = m.div_ceil(threads);
-        std::thread::scope(|s| {
-            for (t, chunk) in a.data.chunks_mut(rows_per * n).enumerate() {
-                let i0 = t * rows_per;
-                s.spawn(move || {
-                    for (di, row) in chunk.chunks_mut(n).enumerate() {
-                        let f = u[i0 + di] * scale;
-                        if f == 0.0 {
-                            continue;
-                        }
-                        for (x, &vj) in row.iter_mut().zip(v) {
-                            *x -= f * vj;
-                        }
-                    }
-                });
+        let threads = blas2_threads(m * n, m);
+        fan_out_rows(&mut a.data, n, m, threads, |chunk, i0, _i1| {
+            for (di, row) in chunk.chunks_mut(n).enumerate() {
+                let f = u[i0 + di] * scale;
+                if f == 0.0 {
+                    continue;
+                }
+                for (x, &vj) in row.iter_mut().zip(v) {
+                    *x -= f * vj;
+                }
             }
         });
     }
 
     fn panel_t_matvec(&self, a: &Matrix, row0: usize, col0: usize, v: &[f64]) -> Vec<f64> {
         let (nrows, ncols) = panel_shape(a, row0, col0, v.len());
-        let threads = blas2_threads(nrows * ncols, nrows);
-        if threads <= 1 {
-            return NaiveBackend.panel_t_matvec(a, row0, col0, v);
-        }
-        // Partial sums are produced per fixed-size row chunk and reduced in
-        // chunk-index order, so the accumulation order — and hence the
-        // result — is independent of how many threads the chunks land on.
-        let nchunks = nrows.div_ceil(PANEL_CHUNK);
-        let chunks_per_band = nchunks.div_ceil(threads);
-        let mut w = vec![0.0; ncols];
-        std::thread::scope(|s| {
-            let mut handles = Vec::with_capacity(threads);
-            let mut c0 = 0;
-            while c0 < nchunks {
-                let c1 = (c0 + chunks_per_band).min(nchunks);
-                handles.push(s.spawn(move || {
-                    let mut parts: Vec<Vec<f64>> = Vec::with_capacity(c1 - c0);
-                    for chunk in c0..c1 {
-                        let r0 = chunk * PANEL_CHUNK;
-                        let r1 = (r0 + PANEL_CHUNK).min(nrows);
-                        let mut part = vec![0.0; ncols];
-                        for i in r0..r1 {
-                            let x = v[i];
-                            if x == 0.0 {
-                                continue;
-                            }
-                            let arow = &a.row(row0 + i)[col0..];
-                            for (o, &aj) in part.iter_mut().zip(arow) {
-                                *o += x * aj;
-                            }
-                        }
-                        parts.push(part);
-                    }
-                    parts
-                }));
-                c0 = c1;
+        panel_reduce(a, row0, col0, v, nrows, ncols, |part, x, arow| {
+            for (o, &aj) in part.iter_mut().zip(arow) {
+                *o += x * aj;
             }
-            for h in handles {
-                for part in h.join().expect("backend worker panicked") {
-                    for (o, p) in w.iter_mut().zip(&part) {
-                        *o += p;
-                    }
-                }
-            }
-        });
-        w
+        })
     }
 
     fn panel_rank1_sub(
@@ -639,29 +685,322 @@ impl Backend for BlockedBackend {
     ) {
         let (nrows, ncols) = panel_shape(a, row0, col0, v.len());
         assert_eq!(w.len(), ncols, "panel_rank1_sub col mismatch");
-        let threads = blas2_threads(nrows * ncols, nrows);
-        if threads <= 1 {
-            return NaiveBackend.panel_rank1_sub(a, row0, col0, v, w, scale);
+        if nrows == 0 || ncols == 0 {
+            return;
         }
         let cols = a.cols;
-        let rows_per = nrows.div_ceil(threads);
+        let threads = blas2_threads(nrows * ncols, nrows);
         let data = &mut a.data[row0 * cols..];
-        std::thread::scope(|s| {
-            for (t, chunk) in data.chunks_mut(rows_per * cols).enumerate() {
-                let base = t * rows_per;
-                s.spawn(move || {
-                    for (di, row) in chunk.chunks_mut(cols).enumerate() {
-                        let f = scale * v[base + di];
-                        if f == 0.0 {
-                            continue;
-                        }
-                        for (x, &wj) in row[col0..].iter_mut().zip(w) {
-                            *x -= f * wj;
-                        }
-                    }
-                });
+        fan_out_rows(data, cols, nrows, threads, |chunk, base, _| {
+            for (di, row) in chunk.chunks_mut(cols).enumerate() {
+                let f = scale * v[base + di];
+                if f == 0.0 {
+                    continue;
+                }
+                for (x, &wj) in row[col0..].iter_mut().zip(w) {
+                    *x -= f * wj;
+                }
             }
         });
+    }
+}
+
+// ======================================================================
+// SIMD backend — blocked structure, f64x4 microkernel inner loops
+// ======================================================================
+
+/// [`BlockedBackend`]'s panelization, band splitting, and thread fan-out
+/// with the inner loops replaced by the runtime-dispatched f64x4
+/// microkernels of [`crate::linalg::simd`].
+///
+/// Construction probes the CPU once ([`SimdBackend::detect`]): AVX2+FMA
+/// on x86_64, NEON on aarch64, otherwise the portable 4-wide lanes — so
+/// the backend is always safe to select, merely slower without vector
+/// hardware.  [`SimdBackend::portable`] pins the fallback lanes, which
+/// the equivalence suite uses to hold the intrinsic paths to the portable
+/// ones on the same machine.
+pub struct SimdBackend {
+    kernels: simd::Kernels,
+}
+
+impl SimdBackend {
+    /// Backend using the best instruction set the CPU reports at runtime.
+    pub fn detect() -> SimdBackend {
+        SimdBackend { kernels: simd::Kernels::detect() }
+    }
+
+    /// Backend pinned to the portable fallback lanes (what [`detect`]
+    /// selects on hardware without AVX2/FMA or NEON).
+    ///
+    /// [`detect`]: SimdBackend::detect
+    pub fn portable() -> SimdBackend {
+        SimdBackend { kernels: simd::Kernels::portable() }
+    }
+
+    /// The instruction set actually driving the microkernels.
+    pub fn isa(&self) -> simd::Isa {
+        self.kernels.isa()
+    }
+}
+
+impl Backend for SimdBackend {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn gemm(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+        let (m, n, k) = (a.rows, b.cols, a.cols);
+        let mut c = Matrix::zeros(m, n);
+        let threads = gemm_threads(2 * m * n * k, m);
+        let ker = self.kernels;
+        fan_out_rows(&mut c.data, n, m, threads, |chunk, i0, i1| {
+            simd_gemm_band(ker, a, b, chunk, i0, i1)
+        });
+        c
+    }
+
+    fn gemm_tn(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.rows, b.rows, "gemm_tn shape mismatch");
+        let (m, p, n) = (a.rows, a.cols, b.cols);
+        if p <= TN_STREAM_MAX_P {
+            // Same streaming tall-skinny reduction as blocked, with the
+            // row accumulation vectorized.
+            let mut c = Matrix::zeros(p, n);
+            let threads = gemm_threads(2 * m * p * n, p);
+            let ker = self.kernels;
+            fan_out_rows(&mut c.data, n, p, threads, |chunk, j0, j1| {
+                simd_gemm_tn_band(ker, a, b, chunk, j0, j1)
+            });
+            return c;
+        }
+        self.gemm(&transpose_tiled(a), b)
+    }
+
+    fn gemm_nt(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.cols, "gemm_nt shape mismatch");
+        let (m, n, k) = (a.rows, b.rows, a.cols);
+        let mut c = Matrix::zeros(m, n);
+        let threads = gemm_threads(2 * m * n * k, m);
+        let ker = self.kernels;
+        fan_out_rows(&mut c.data, n, m, threads, |chunk, i0, i1| {
+            simd_gemm_nt_band(ker, a, b, chunk, i0, i1)
+        });
+        c
+    }
+
+    fn syrk(&self, a: &Matrix, lo: usize, hi: usize) -> Matrix {
+        assert!(
+            lo <= hi && hi <= a.rows,
+            "syrk row range {lo}..{hi} out of bounds for {} rows",
+            a.rows
+        );
+        let p = a.cols;
+        let rows = hi - lo;
+        let mut c = Matrix::zeros(p, p);
+        let threads = gemm_threads(2 * rows * p * p, p);
+        let ker = self.kernels;
+        fan_out_rows(&mut c.data, p, p, threads, |chunk, j0, j1| {
+            simd_syrk_band(ker, a, lo, hi, chunk, j0, j1)
+        });
+        c
+    }
+
+    fn matvec(&self, a: &Matrix, x: &[f64]) -> Vec<f64> {
+        assert_eq!(a.cols, x.len(), "matvec shape mismatch");
+        let m = a.rows;
+        let threads = blas2_threads(m * a.cols, m);
+        let ker = self.kernels;
+        let mut y = vec![0.0; m];
+        fan_out_rows(&mut y, 1, m, threads, |chunk, i0, _i1| {
+            for (di, yi) in chunk.iter_mut().enumerate() {
+                *yi = ker.dot(a.row(i0 + di), x);
+            }
+        });
+        y
+    }
+
+    /// Row-major reduction, serial like the other backends (consumers are
+    /// `k x k` incremental-minor steps), with each row contribution
+    /// vectorized.
+    fn t_matvec(&self, a: &Matrix, x: &[f64]) -> Vec<f64> {
+        assert_eq!(a.rows, x.len(), "t_matvec shape mismatch");
+        let mut out = vec![0.0; a.cols];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            self.kernels.axpy(&mut out, xi, a.row(i));
+        }
+        out
+    }
+
+    fn rank1_sub(&self, a: &mut Matrix, u: &[f64], v: &[f64], scale: f64) {
+        assert_eq!(u.len(), a.rows, "rank1_sub row mismatch");
+        assert_eq!(v.len(), a.cols, "rank1_sub col mismatch");
+        let (m, n) = (a.rows, a.cols);
+        if m == 0 || n == 0 {
+            return;
+        }
+        let threads = blas2_threads(m * n, m);
+        let ker = self.kernels;
+        fan_out_rows(&mut a.data, n, m, threads, |chunk, i0, _i1| {
+            for (di, row) in chunk.chunks_mut(n).enumerate() {
+                let f = u[i0 + di] * scale;
+                if f == 0.0 {
+                    continue;
+                }
+                // y -= f*x as fused y += (-f)*x (negation is exact)
+                ker.axpy(row, -f, v);
+            }
+        });
+    }
+
+    fn panel_t_matvec(&self, a: &Matrix, row0: usize, col0: usize, v: &[f64]) -> Vec<f64> {
+        let (nrows, ncols) = panel_shape(a, row0, col0, v.len());
+        let ker = self.kernels;
+        panel_reduce(a, row0, col0, v, nrows, ncols, move |part, x, arow| {
+            ker.axpy(part, x, arow)
+        })
+    }
+
+    fn panel_rank1_sub(
+        &self,
+        a: &mut Matrix,
+        row0: usize,
+        col0: usize,
+        v: &[f64],
+        w: &[f64],
+        scale: f64,
+    ) {
+        let (nrows, ncols) = panel_shape(a, row0, col0, v.len());
+        assert_eq!(w.len(), ncols, "panel_rank1_sub col mismatch");
+        if nrows == 0 || ncols == 0 {
+            return;
+        }
+        let cols = a.cols;
+        let threads = blas2_threads(nrows * ncols, nrows);
+        let ker = self.kernels;
+        let data = &mut a.data[row0 * cols..];
+        fan_out_rows(data, cols, nrows, threads, |chunk, base, _| {
+            for (di, row) in chunk.chunks_mut(cols).enumerate() {
+                let f = scale * v[base + di];
+                if f == 0.0 {
+                    continue;
+                }
+                ker.axpy(&mut row[col0..], -f, w);
+            }
+        });
+    }
+}
+
+/// SIMD GEMM band: the same `KC`-panel / [`MR`]-row-tile walk as
+/// [`gemm_band`], with the full 4-row tile handled by the register-tiled
+/// [`simd::Kernels::gemm4`] microkernel and remainder rows by vectorized
+/// axpy.  Per output element the accumulation order (`kk` panel, `dk`
+/// ascending) is identical to the scalar band.
+fn simd_gemm_band(
+    ker: simd::Kernels,
+    a: &Matrix,
+    b: &Matrix,
+    c_band: &mut [f64],
+    i0: usize,
+    i1: usize,
+) {
+    let n = b.cols;
+    let kdim = a.cols;
+    let mut i = i0;
+    while i < i1 {
+        let ib = (i1 - i).min(MR);
+        let base = (i - i0) * n;
+        for kk in (0..kdim).step_by(KC) {
+            let kend = (kk + KC).min(kdim);
+            if ib == MR {
+                ker.gemm4(
+                    &mut c_band[base..base + MR * n],
+                    n,
+                    [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)],
+                    &b.data,
+                    kk,
+                    kend,
+                );
+            } else {
+                for r in 0..ib {
+                    let arow = a.row(i + r);
+                    let crow = &mut c_band[base + r * n..base + (r + 1) * n];
+                    for dk in kk..kend {
+                        ker.axpy(crow, arow[dk], b.row(dk));
+                    }
+                }
+            }
+        }
+        i += ib;
+    }
+}
+
+/// SIMD `A^T B` band: one streaming pass like [`gemm_tn_band`], row
+/// contributions vectorized.
+fn simd_gemm_tn_band(
+    ker: simd::Kernels,
+    a: &Matrix,
+    b: &Matrix,
+    c_band: &mut [f64],
+    j0: usize,
+    j1: usize,
+) {
+    let n = b.cols;
+    for r in 0..a.rows {
+        let arow = a.row(r);
+        let brow = b.row(r);
+        for i in j0..j1 {
+            let x = arow[i];
+            if x == 0.0 {
+                continue;
+            }
+            ker.axpy(&mut c_band[(i - j0) * n..(i - j0 + 1) * n], x, brow);
+        }
+    }
+}
+
+/// SIMD `A B^T` band: vectorized dot per output element.
+fn simd_gemm_nt_band(
+    ker: simd::Kernels,
+    a: &Matrix,
+    b: &Matrix,
+    c_band: &mut [f64],
+    i0: usize,
+    i1: usize,
+) {
+    let n = b.rows;
+    for i in i0..i1 {
+        let arow = a.row(i);
+        let crow = &mut c_band[(i - i0) * n..(i - i0 + 1) * n];
+        for (j, cij) in crow.iter_mut().enumerate() {
+            *cij = ker.dot(arow, b.row(j));
+        }
+    }
+}
+
+/// SIMD SYRK band: rank-1 accumulation like [`syrk_band`], vectorized.
+fn simd_syrk_band(
+    ker: simd::Kernels,
+    a: &Matrix,
+    lo: usize,
+    hi: usize,
+    c_band: &mut [f64],
+    j0: usize,
+    j1: usize,
+) {
+    let p = a.cols;
+    for i in lo..hi {
+        let arow = a.row(i);
+        for jr in j0..j1 {
+            let x = arow[jr];
+            if x == 0.0 {
+                continue;
+            }
+            ker.axpy(&mut c_band[(jr - j0) * p..(jr - j0 + 1) * p], x, arow);
+        }
     }
 }
 
@@ -833,7 +1172,88 @@ mod tests {
             assert_eq!(kind.instance().name(), kind.as_str());
         }
         assert_eq!(BackendKind::parse("threaded").unwrap(), BackendKind::Blocked);
+        assert_eq!(BackendKind::parse("vector").unwrap(), BackendKind::Simd);
         assert!(BackendKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn simd_instance_reports_detected_isa() {
+        // the process-wide instance and the reporting helper agree, and
+        // detection is stable across calls
+        assert_eq!(simd_isa(), simd_instance().isa());
+        assert_eq!(simd_isa().as_str(), simd_isa().as_str());
+        assert_eq!(BackendKind::Simd.instance().name(), "simd");
+        assert_eq!(SimdBackend::portable().isa(), simd::Isa::Portable);
+    }
+
+    #[test]
+    fn simd_agrees_with_naive_on_random_small_shapes() {
+        // both the detected-ISA and forced-portable kernels, over shapes
+        // covering MR remainders, k = 1, and tail columns not divisible
+        // by the 4-wide vector width
+        let backends = [SimdBackend::detect(), SimdBackend::portable()];
+        prop::check("backend_simd_small", 30, |g| {
+            let m = g.usize_in(1, 23);
+            let k = g.usize_in(1, 17);
+            let n = g.usize_in(1, 19);
+            let a = Matrix::from_vec(m, k, g.normal_vec(m * k, 1.0));
+            let b = Matrix::from_vec(k, n, g.normal_vec(k * n, 1.0));
+            let bt = Matrix::from_vec(n, k, g.normal_vec(n * k, 1.0));
+            let c = Matrix::from_vec(k, n, g.normal_vec(k * n, 1.0));
+            for be in &backends {
+                assert_close(&NaiveBackend.gemm(&a, &b), &be.gemm(&a, &b), 1e-10);
+                assert_close(&NaiveBackend.gemm_tn(&a, &c), &be.gemm_tn(&a, &c), 1e-10);
+                assert_close(&NaiveBackend.gemm_nt(&a, &bt), &be.gemm_nt(&a, &bt), 1e-10);
+                let lo = g.usize_in(0, m);
+                let hi = g.usize_in(lo, m);
+                assert_close(&NaiveBackend.syrk(&a, lo, hi), &be.syrk(&a, lo, hi), 1e-10);
+            }
+        });
+    }
+
+    #[test]
+    fn simd_vector_ops_match_naive() {
+        let be = SimdBackend::detect();
+        prop::check("backend_simd_blas2", 25, |g| {
+            let m = g.usize_in(1, 30);
+            let n = g.usize_in(1, 30);
+            let a = Matrix::from_vec(m, n, g.normal_vec(m * n, 1.0));
+            let x = g.normal_vec(n, 1.0);
+            let y = g.normal_vec(m, 1.0);
+            vec_close(&NaiveBackend.matvec(&a, &x), &be.matvec(&a, &x), 1e-10);
+            vec_close(&NaiveBackend.t_matvec(&a, &y), &be.t_matvec(&a, &y), 1e-10);
+            let mut a1 = a.clone();
+            let mut a2 = a.clone();
+            NaiveBackend.rank1_sub(&mut a1, &y, &x, 1.5);
+            be.rank1_sub(&mut a2, &y, &x, 1.5);
+            assert_close(&a1, &a2, 1e-10);
+
+            let r0 = g.usize_in(0, m - 1);
+            let c0 = g.usize_in(0, n - 1);
+            let v = g.normal_vec(m - r0, 1.0);
+            vec_close(
+                &NaiveBackend.panel_t_matvec(&a, r0, c0, &v),
+                &be.panel_t_matvec(&a, r0, c0, &v),
+                1e-10,
+            );
+            let w = g.normal_vec(n - c0, 1.0);
+            let mut p1 = a.clone();
+            let mut p2 = a.clone();
+            NaiveBackend.panel_rank1_sub(&mut p1, r0, c0, &v, &w, 2.0);
+            be.panel_rank1_sub(&mut p2, r0, c0, &v, &w, 2.0);
+            assert_close(&p1, &p2, 1e-10);
+        });
+    }
+
+    #[test]
+    fn simd_gemm_is_deterministic() {
+        let be = SimdBackend::detect();
+        let mut rng = Xoshiro::seeded(5);
+        let a = Matrix::randn(37, 61, 1.0, &mut rng);
+        let b = Matrix::randn(61, 29, 1.0, &mut rng);
+        let c1 = be.gemm(&a, &b);
+        let c2 = be.gemm(&a, &b);
+        assert_eq!(c1.data, c2.data);
     }
 
     #[test]
@@ -875,6 +1295,7 @@ mod tests {
             let a = Matrix::zeros(m, k);
             let b = Matrix::zeros(k, n);
             assert_close(&NaiveBackend.gemm(&a, &b), &BlockedBackend.gemm(&a, &b), 0.0);
+            assert_close(&NaiveBackend.gemm(&a, &b), &SimdBackend::detect().gemm(&a, &b), 0.0);
         }
     }
 

@@ -8,14 +8,18 @@
 //! item-axis products that feed them — Gram matrices, panel products, tree
 //! statistics — are real GEMMs, so they route through a pluggable
 //! [`backend`]: [`backend::NaiveBackend`] (reference loops, correctness
-//! oracle) or [`backend::BlockedBackend`] (cache-blocked, multithreaded;
-//! the default).  Select with `NDPP_BACKEND=naive|blocked`,
-//! [`backend::set_active`], or [`crate::coordinator::ServiceConfig`].
+//! oracle), [`backend::BlockedBackend`] (cache-blocked, multithreaded;
+//! the default), or [`backend::SimdBackend`] (blocked structure with the
+//! runtime-dispatched f64x4 microkernels of [`simd`]).  Select with
+//! `NDPP_BACKEND=naive|blocked|simd`, [`backend::set_active`], or
+//! [`crate::coordinator::ServiceConfig`].
 //!
 //! Contents:
 //! * [`Matrix`] — row-major dense matrix; its `matmul`/`matvec`/`rank1_sub`
 //!   family delegates to the active backend.
 //! * [`backend`] — the compute-backend trait, implementations, selection.
+//! * [`simd`] — runtime-dispatched f64x4 microkernels (AVX2 / NEON /
+//!   portable) under the `simd` backend.
 //! * [`lu`] — LU with partial pivoting: determinant, solve, inverse.
 //! * [`qr`] — Householder QR: orthonormalization, least squares (panel
 //!   updates through the backend).
@@ -30,6 +34,7 @@ pub mod eigen;
 pub mod lu;
 pub mod matrix;
 pub mod qr;
+pub mod simd;
 pub mod skew;
 pub mod tridiag;
 

@@ -1,0 +1,615 @@
+//! Runtime-dispatched f64x4 SIMD microkernels — the instruction-level
+//! floor of [`crate::linalg::backend::SimdBackend`].
+//!
+//! Three implementations of the same small kernel set live here, selected
+//! once per process by probing the CPU:
+//!
+//! * **AVX2 + FMA** (`x86_64`) — `_mm256_*` intrinsics: 4-lane `f64x4`
+//!   vectors with fused multiply-add.  Chosen when
+//!   `is_x86_feature_detected!("avx2")` *and* `("fma")` both hold.
+//! * **NEON** (`aarch64`) — `vfmaq_f64` over `f64x2` pairs, two vectors
+//!   per step so the kernels stay 4-wide.  NEON is part of the aarch64
+//!   baseline, so no runtime probe is needed.
+//! * **Portable** — plain-Rust loops with the same 4-wide lane structure
+//!   (independent partial accumulators, lanes summed as
+//!   `(l0 + l2) + (l1 + l3)`), used on every other CPU.  LLVM
+//!   autovectorizes what it can; correctness never depends on that.
+//!
+//! The kernel set is deliberately tiny — `axpy` (`y += a * x`), `dot`,
+//! and `gemm4` (the 4-row register-tiled GEMM panel update) — because
+//! every `Backend` primitive decomposes into those three plus control
+//! flow that lives in `backend.rs`.
+//!
+//! **Determinism & equivalence.** For each output element every kernel
+//! accumulates in ascending index order, exactly like the scalar
+//! backends; vector paths differ from scalar only by lane regrouping of
+//! reductions and by FMA's single rounding, both bounded far below the
+//! 1e-10 the equivalence suite enforces.  Repeated runs on the same
+//! machine are bitwise identical (the ISA never changes under a process).
+//!
+//! **Safety.** The unsafe intrinsic paths are only reachable through
+//! [`Kernels`], whose ISA field is private and can only be populated by
+//! [`Kernels::detect`] (probes the CPU) or [`Kernels::portable`] (no
+//! unsafe at all) — so an AVX2 kernel can never be invoked on a CPU that
+//! did not report AVX2+FMA.  Every kernel bounds its loops by the slice
+//! lengths it receives; `gemm4` validates its panel geometry up front.
+
+/// Instruction set driving the microkernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// AVX2 + FMA `_mm256_*` f64x4 intrinsics (x86_64).
+    Avx2,
+    /// NEON `vfmaq_f64` f64x2 pairs (aarch64 baseline).
+    Neon,
+    /// 4-wide lane-structured scalar loops — the fallback on CPUs
+    /// without AVX2/FMA, and the reference the intrinsic paths are
+    /// tested against.
+    Portable,
+}
+
+impl Isa {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+            Isa::Portable => "portable",
+        }
+    }
+}
+
+/// Probe the CPU once and return the best supported [`Isa`].
+fn detect_isa() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Isa::Avx2;
+        }
+        Isa::Portable
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Isa::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Isa::Portable
+    }
+}
+
+/// Dispatch handle for the microkernels.
+///
+/// The ISA field is private on purpose: [`Kernels::detect`] is the only
+/// way to obtain an intrinsic-backed handle, so holding a `Kernels` is
+/// proof the instructions it dispatches to exist on this CPU.  (An ISA
+/// that does not apply to the compilation target — e.g. `Neon` on
+/// x86_64 — dispatches to the portable path.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Kernels {
+    isa: Isa,
+}
+
+impl Kernels {
+    /// Kernels for the best instruction set the CPU reports at runtime.
+    pub fn detect() -> Kernels {
+        Kernels { isa: detect_isa() }
+    }
+
+    /// The portable 4-wide fallback lanes — what [`Kernels::detect`]
+    /// selects on hardware without AVX2/FMA (or NEON).  Public so tests
+    /// can hold the fallback path to the intrinsic path on the same
+    /// machine.
+    pub fn portable() -> Kernels {
+        Kernels { isa: Isa::Portable }
+    }
+
+    /// The instruction set this handle dispatches to.
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    /// `y[i] += a * x[i]` over the common prefix of `y` and `x`.
+    #[inline]
+    pub fn axpy(&self, y: &mut [f64], a: f64, x: &[f64]) {
+        #[cfg(target_arch = "x86_64")]
+        if self.isa == Isa::Avx2 {
+            // SAFETY: Isa::Avx2 is only constructed by detect_isa() after
+            // confirming AVX2 and FMA support on this CPU.
+            unsafe { avx2::axpy(y, a, x) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if self.isa == Isa::Neon {
+            // SAFETY: NEON is part of the aarch64 baseline.
+            unsafe { neon::axpy(y, a, x) };
+            return;
+        }
+        portable::axpy(y, a, x);
+    }
+
+    /// Dot product of the common prefix of `a` and `b`, 4 lanes summed
+    /// as `(l0 + l2) + (l1 + l3)` plus a sequential tail.
+    #[inline]
+    pub fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        #[cfg(target_arch = "x86_64")]
+        if self.isa == Isa::Avx2 {
+            // SAFETY: see `axpy`.
+            return unsafe { avx2::dot(a, b) };
+        }
+        #[cfg(target_arch = "aarch64")]
+        if self.isa == Isa::Neon {
+            // SAFETY: see `axpy`.
+            return unsafe { neon::dot(a, b) };
+        }
+        portable::dot(a, b)
+    }
+
+    /// 4-row register-tiled GEMM panel update.
+    ///
+    /// `c` holds four contiguous output rows of width `n`; for each
+    /// column block the four output sub-rows are accumulated in
+    /// registers while streaming rows `kk..kend` of the row-major `b`
+    /// (width `n`), scaled by the matching entries of the four `a` rows.
+    /// Per output element the accumulation order is `dk` ascending —
+    /// identical to the scalar backends.
+    pub fn gemm4(
+        &self,
+        c: &mut [f64],
+        n: usize,
+        a: [&[f64]; 4],
+        b: &[f64],
+        kk: usize,
+        kend: usize,
+    ) {
+        assert!(c.len() >= 4 * n, "gemm4: c too short for 4 rows of {n}");
+        assert!(kk <= kend, "gemm4: inverted k range {kk}..{kend}");
+        assert!(b.len() >= kend * n, "gemm4: b too short for {kend} rows of {n}");
+        for arow in &a {
+            assert!(arow.len() >= kend, "gemm4: a row shorter than kend {kend}");
+        }
+        #[cfg(target_arch = "x86_64")]
+        if self.isa == Isa::Avx2 {
+            // SAFETY: see `axpy`; geometry validated above.
+            unsafe { avx2::gemm4(c, n, a, b, kk, kend) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if self.isa == Isa::Neon {
+            // SAFETY: see `axpy`; geometry validated above.
+            unsafe { neon::gemm4(c, n, a, b, kk, kend) };
+            return;
+        }
+        portable::gemm4(c, n, a, b, kk, kend);
+    }
+}
+
+/// Scalar column tail shared by every `gemm4` implementation: columns
+/// `j0..n`, same `dk`-ascending per-element accumulation as the vector
+/// body.
+fn gemm4_tail(
+    c: &mut [f64],
+    n: usize,
+    a: [&[f64]; 4],
+    b: &[f64],
+    kk: usize,
+    kend: usize,
+    j0: usize,
+) {
+    let [a0, a1, a2, a3] = a;
+    for j in j0..n {
+        let mut s = [c[j], c[n + j], c[2 * n + j], c[3 * n + j]];
+        for dk in kk..kend {
+            let bj = b[dk * n + j];
+            s[0] += a0[dk] * bj;
+            s[1] += a1[dk] * bj;
+            s[2] += a2[dk] * bj;
+            s[3] += a3[dk] * bj;
+        }
+        c[j] = s[0];
+        c[n + j] = s[1];
+        c[2 * n + j] = s[2];
+        c[3 * n + j] = s[3];
+    }
+}
+
+// ======================================================================
+// Portable lanes — the fallback and the testing reference
+// ======================================================================
+
+mod portable {
+    use super::gemm4_tail;
+
+    /// `y[i] += a * x[i]` — no reduction, so per-element results match
+    /// any vector width; LLVM autovectorizes the zip.
+    pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+
+    /// Four independent lane accumulators, summed `(l0+l2) + (l1+l3)` —
+    /// the same grouping the vector paths use.
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+        let quads = n / 4;
+        for q in 0..quads {
+            let i = 4 * q;
+            s0 += a[i] * b[i];
+            s1 += a[i + 1] * b[i + 1];
+            s2 += a[i + 2] * b[i + 2];
+            s3 += a[i + 3] * b[i + 3];
+        }
+        let mut s = (s0 + s2) + (s1 + s3);
+        for i in 4 * quads..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// `t[l] += x * b[l]` over a 4-wide register block.
+    #[inline]
+    fn fma4(t: &mut [f64; 4], x: f64, b: &[f64]) {
+        t[0] += x * b[0];
+        t[1] += x * b[1];
+        t[2] += x * b[2];
+        t[3] += x * b[3];
+    }
+
+    /// 4x4 register tile in plain Rust: the same j-block / k-inner
+    /// structure as the intrinsic versions.
+    pub fn gemm4(c: &mut [f64], n: usize, a: [&[f64]; 4], b: &[f64], kk: usize, kend: usize) {
+        let [a0, a1, a2, a3] = a;
+        let quads = n / 4;
+        for q in 0..quads {
+            let j = 4 * q;
+            let mut t0 = [0.0f64; 4];
+            let mut t1 = [0.0f64; 4];
+            let mut t2 = [0.0f64; 4];
+            let mut t3 = [0.0f64; 4];
+            t0.copy_from_slice(&c[j..j + 4]);
+            t1.copy_from_slice(&c[n + j..n + j + 4]);
+            t2.copy_from_slice(&c[2 * n + j..2 * n + j + 4]);
+            t3.copy_from_slice(&c[3 * n + j..3 * n + j + 4]);
+            for dk in kk..kend {
+                let bv = &b[dk * n + j..dk * n + j + 4];
+                fma4(&mut t0, a0[dk], bv);
+                fma4(&mut t1, a1[dk], bv);
+                fma4(&mut t2, a2[dk], bv);
+                fma4(&mut t3, a3[dk], bv);
+            }
+            c[j..j + 4].copy_from_slice(&t0);
+            c[n + j..n + j + 4].copy_from_slice(&t1);
+            c[2 * n + j..2 * n + j + 4].copy_from_slice(&t2);
+            c[3 * n + j..3 * n + j + 4].copy_from_slice(&t3);
+        }
+        gemm4_tail(c, n, [a0, a1, a2, a3], b, kk, kend, 4 * quads);
+    }
+}
+
+// ======================================================================
+// AVX2 + FMA (x86_64)
+// ======================================================================
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::{
+        __m256d, _mm256_castpd256_pd128, _mm256_extractf128_pd, _mm256_fmadd_pd,
+        _mm256_loadu_pd, _mm256_set1_pd, _mm256_setzero_pd, _mm256_storeu_pd, _mm_add_pd,
+        _mm_cvtsd_f64, _mm_unpackhi_pd,
+    };
+
+    use super::gemm4_tail;
+
+    /// Sum the four lanes of `v` as `(l0 + l2) + (l1 + l3)` — the same
+    /// grouping as the portable lanes.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 and FMA.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v); // (l0, l1)
+        let hi = _mm256_extractf128_pd::<1>(v); // (l2, l3)
+        let s = _mm_add_pd(lo, hi); // (l0+l2, l1+l3)
+        _mm_cvtsd_f64(s) + _mm_cvtsd_f64(_mm_unpackhi_pd(s, s))
+    }
+
+    /// `y[i] += a * x[i]`, 4 lanes at a time with FMA.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 and FMA.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+        let n = y.len().min(x.len());
+        let av = _mm256_set1_pd(a);
+        let yp = y.as_mut_ptr();
+        let xp = x.as_ptr();
+        let quads = n / 4;
+        for q in 0..quads {
+            let i = 4 * q;
+            let yv = _mm256_loadu_pd(yp.add(i));
+            let xv = _mm256_loadu_pd(xp.add(i));
+            _mm256_storeu_pd(yp.add(i), _mm256_fmadd_pd(av, xv, yv));
+        }
+        for i in 4 * quads..n {
+            *yp.add(i) += a * *xp.add(i);
+        }
+    }
+
+    /// FMA dot product with one 4-lane accumulator.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 and FMA.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let quads = n / 4;
+        let mut acc = _mm256_setzero_pd();
+        for q in 0..quads {
+            let i = 4 * q;
+            acc = _mm256_fmadd_pd(_mm256_loadu_pd(ap.add(i)), _mm256_loadu_pd(bp.add(i)), acc);
+        }
+        let mut s = hsum(acc);
+        for i in 4 * quads..n {
+            s += *ap.add(i) * *bp.add(i);
+        }
+        s
+    }
+
+    /// 4x4 register tile: four `__m256d` accumulators (one per output
+    /// row) held across the whole k panel, one broadcast + FMA per row
+    /// per `b` vector load.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 and FMA, `c.len() >= 4n`,
+    /// `b.len() >= kend * n`, and every `a` row has at least `kend`
+    /// entries (validated by [`super::Kernels::gemm4`]).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemm4(
+        c: &mut [f64],
+        n: usize,
+        a: [&[f64]; 4],
+        b: &[f64],
+        kk: usize,
+        kend: usize,
+    ) {
+        let [a0, a1, a2, a3] = a;
+        let cp = c.as_mut_ptr();
+        let bp = b.as_ptr();
+        let quads = n / 4;
+        for q in 0..quads {
+            let j = 4 * q;
+            let mut v0 = _mm256_loadu_pd(cp.add(j));
+            let mut v1 = _mm256_loadu_pd(cp.add(n + j));
+            let mut v2 = _mm256_loadu_pd(cp.add(2 * n + j));
+            let mut v3 = _mm256_loadu_pd(cp.add(3 * n + j));
+            for dk in kk..kend {
+                let bv = _mm256_loadu_pd(bp.add(dk * n + j));
+                v0 = _mm256_fmadd_pd(_mm256_set1_pd(*a0.get_unchecked(dk)), bv, v0);
+                v1 = _mm256_fmadd_pd(_mm256_set1_pd(*a1.get_unchecked(dk)), bv, v1);
+                v2 = _mm256_fmadd_pd(_mm256_set1_pd(*a2.get_unchecked(dk)), bv, v2);
+                v3 = _mm256_fmadd_pd(_mm256_set1_pd(*a3.get_unchecked(dk)), bv, v3);
+            }
+            _mm256_storeu_pd(cp.add(j), v0);
+            _mm256_storeu_pd(cp.add(n + j), v1);
+            _mm256_storeu_pd(cp.add(2 * n + j), v2);
+            _mm256_storeu_pd(cp.add(3 * n + j), v3);
+        }
+        gemm4_tail(c, n, [a0, a1, a2, a3], b, kk, kend, 4 * quads);
+    }
+}
+
+// ======================================================================
+// NEON (aarch64) — f64x2 pairs, kept 4-wide with two vectors per step
+// ======================================================================
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::{
+        vaddq_f64, vdupq_n_f64, vfmaq_f64, vgetq_lane_f64, vld1q_f64, vst1q_f64,
+    };
+
+    use super::gemm4_tail;
+
+    /// `y[i] += a * x[i]`, two `f64x2` FMAs per step.
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64; caller must still treat this as an
+    /// intrinsic path (raw-pointer loops bounded by the slice lengths).
+    pub unsafe fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+        let n = y.len().min(x.len());
+        let av = vdupq_n_f64(a);
+        let yp = y.as_mut_ptr();
+        let xp = x.as_ptr();
+        let quads = n / 4;
+        for q in 0..quads {
+            let i = 4 * q;
+            let y0 = vld1q_f64(yp.add(i));
+            let y1 = vld1q_f64(yp.add(i + 2));
+            let x0 = vld1q_f64(xp.add(i));
+            let x1 = vld1q_f64(xp.add(i + 2));
+            vst1q_f64(yp.add(i), vfmaq_f64(y0, av, x0));
+            vst1q_f64(yp.add(i + 2), vfmaq_f64(y1, av, x1));
+        }
+        for i in 4 * quads..n {
+            *yp.add(i) += a * *xp.add(i);
+        }
+    }
+
+    /// FMA dot with two `f64x2` accumulators holding lanes (l0, l1) and
+    /// (l2, l3); summed `(l0+l2) + (l1+l3)` like the other paths.
+    ///
+    /// # Safety
+    /// See [`axpy`].
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let quads = n / 4;
+        let mut acc_lo = vdupq_n_f64(0.0);
+        let mut acc_hi = vdupq_n_f64(0.0);
+        for q in 0..quads {
+            let i = 4 * q;
+            acc_lo = vfmaq_f64(acc_lo, vld1q_f64(ap.add(i)), vld1q_f64(bp.add(i)));
+            acc_hi = vfmaq_f64(acc_hi, vld1q_f64(ap.add(i + 2)), vld1q_f64(bp.add(i + 2)));
+        }
+        let pair = vaddq_f64(acc_lo, acc_hi); // (l0+l2, l1+l3)
+        let mut s = vgetq_lane_f64::<0>(pair) + vgetq_lane_f64::<1>(pair);
+        for i in 4 * quads..n {
+            s += *ap.add(i) * *bp.add(i);
+        }
+        s
+    }
+
+    /// 4x4 register tile: eight `f64x2` accumulators (two per output
+    /// row) held across the k panel.
+    ///
+    /// # Safety
+    /// See [`axpy`]; geometry validated by [`super::Kernels::gemm4`].
+    pub unsafe fn gemm4(
+        c: &mut [f64],
+        n: usize,
+        a: [&[f64]; 4],
+        b: &[f64],
+        kk: usize,
+        kend: usize,
+    ) {
+        let [a0, a1, a2, a3] = a;
+        let cp = c.as_mut_ptr();
+        let bp = b.as_ptr();
+        let quads = n / 4;
+        for q in 0..quads {
+            let j = 4 * q;
+            let mut v00 = vld1q_f64(cp.add(j));
+            let mut v01 = vld1q_f64(cp.add(j + 2));
+            let mut v10 = vld1q_f64(cp.add(n + j));
+            let mut v11 = vld1q_f64(cp.add(n + j + 2));
+            let mut v20 = vld1q_f64(cp.add(2 * n + j));
+            let mut v21 = vld1q_f64(cp.add(2 * n + j + 2));
+            let mut v30 = vld1q_f64(cp.add(3 * n + j));
+            let mut v31 = vld1q_f64(cp.add(3 * n + j + 2));
+            for dk in kk..kend {
+                let b0 = vld1q_f64(bp.add(dk * n + j));
+                let b1 = vld1q_f64(bp.add(dk * n + j + 2));
+                let x0 = vdupq_n_f64(*a0.get_unchecked(dk));
+                let x1 = vdupq_n_f64(*a1.get_unchecked(dk));
+                let x2 = vdupq_n_f64(*a2.get_unchecked(dk));
+                let x3 = vdupq_n_f64(*a3.get_unchecked(dk));
+                v00 = vfmaq_f64(v00, x0, b0);
+                v01 = vfmaq_f64(v01, x0, b1);
+                v10 = vfmaq_f64(v10, x1, b0);
+                v11 = vfmaq_f64(v11, x1, b1);
+                v20 = vfmaq_f64(v20, x2, b0);
+                v21 = vfmaq_f64(v21, x2, b1);
+                v30 = vfmaq_f64(v30, x3, b0);
+                v31 = vfmaq_f64(v31, x3, b1);
+            }
+            vst1q_f64(cp.add(j), v00);
+            vst1q_f64(cp.add(j + 2), v01);
+            vst1q_f64(cp.add(n + j), v10);
+            vst1q_f64(cp.add(n + j + 2), v11);
+            vst1q_f64(cp.add(2 * n + j), v20);
+            vst1q_f64(cp.add(2 * n + j + 2), v21);
+            vst1q_f64(cp.add(3 * n + j), v30);
+            vst1q_f64(cp.add(3 * n + j + 2), v31);
+        }
+        gemm4_tail(c, n, [a0, a1, a2, a3], b, kk, kend, 4 * quads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro;
+
+    fn randv(n: usize, rng: &mut Xoshiro) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() <= tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn detect_is_consistent() {
+        let k = Kernels::detect();
+        assert_eq!(k.isa(), Kernels::detect().isa(), "detection must be stable");
+        assert_eq!(Kernels::portable().isa(), Isa::Portable);
+        assert!(!k.isa().as_str().is_empty());
+    }
+
+    #[test]
+    fn detected_kernels_match_portable_lanes() {
+        // On AVX2/NEON machines this holds the intrinsic paths to the
+        // portable lanes (difference is FMA's single rounding); elsewhere
+        // it is trivially exact.
+        let det = Kernels::detect();
+        let port = Kernels::portable();
+        let mut rng = Xoshiro::seeded(11);
+        for n in [0usize, 1, 3, 4, 5, 8, 17, 64, 257, 1023] {
+            let x = randv(n, &mut rng);
+            let mut y1 = randv(n, &mut rng);
+            let mut y2 = y1.clone();
+            det.axpy(&mut y1, 1.3, &x);
+            port.axpy(&mut y2, 1.3, &x);
+            for (a, b) in y1.iter().zip(&y2) {
+                close(*a, *b, 1e-12);
+            }
+            let b = randv(n, &mut rng);
+            close(det.dot(&x, &b), port.dot(&x, &b), 1e-11 * (n as f64 + 1.0));
+        }
+    }
+
+    #[test]
+    fn gemm4_matches_reference_loops() {
+        let det = Kernels::detect();
+        let port = Kernels::portable();
+        let mut rng = Xoshiro::seeded(23);
+        // n exercises full vector blocks and 1/2/3-column tails
+        for (n, kdim) in [(1usize, 3usize), (4, 7), (6, 1), (7, 19), (12, 33), (19, 257)] {
+            let rows: Vec<Vec<f64>> = (0..4).map(|_| randv(kdim, &mut rng)).collect();
+            let a = [&rows[0][..], &rows[1][..], &rows[2][..], &rows[3][..]];
+            let b = randv(kdim * n, &mut rng);
+            let c0 = randv(4 * n, &mut rng);
+            // reference: plain triple loop, dk ascending per element
+            let mut want = c0.clone();
+            for (r, arow) in rows.iter().enumerate() {
+                for j in 0..n {
+                    let mut s = want[r * n + j];
+                    for (dk, &x) in arow.iter().enumerate() {
+                        s += x * b[dk * n + j];
+                    }
+                    want[r * n + j] = s;
+                }
+            }
+            for k in [det, port] {
+                let mut c = c0.clone();
+                k.gemm4(&mut c, n, a, &b, 0, kdim);
+                for (got, want) in c.iter().zip(&want) {
+                    close(*got, *want, 1e-11 * (kdim as f64 + 1.0));
+                }
+            }
+            // split k range: two panel calls must equal one
+            let mut c_one = c0.clone();
+            det.gemm4(&mut c_one, n, a, &b, 0, kdim);
+            let mut c_two = c0.clone();
+            let mid = kdim / 2;
+            det.gemm4(&mut c_two, n, a, &b, 0, mid);
+            det.gemm4(&mut c_two, n, a, &b, mid, kdim);
+            assert_eq!(c_one, c_two, "panel split must not change results");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "gemm4: b too short")]
+    fn gemm4_validates_geometry() {
+        let k = Kernels::portable();
+        let row = [1.0, 2.0];
+        let mut c = vec![0.0; 8];
+        let b = vec![0.0; 3]; // needs kend * n = 2 * 2 = 4
+        k.gemm4(&mut c, 2, [&row, &row, &row, &row], &b, 0, 2);
+    }
+}

@@ -78,7 +78,7 @@ fn print_usage() {
     );
 }
 
-/// Apply `--backend naive|blocked` (process-wide) when given.
+/// Apply `--backend naive|blocked|simd` (process-wide) when given.
 fn apply_backend_flag(a: &Args) -> Result<()> {
     if let Some(b) = a.get("backend") {
         ndpp::linalg::backend::set_active(ndpp::linalg::BackendKind::parse(b)?);
@@ -86,7 +86,8 @@ fn apply_backend_flag(a: &Args) -> Result<()> {
     Ok(())
 }
 
-const BACKEND_HELP: &str = "linalg backend: naive | blocked (default: $NDPP_BACKEND or blocked)";
+const BACKEND_HELP: &str =
+    "linalg backend: naive | blocked | simd (default: $NDPP_BACKEND or blocked)";
 
 const SAMPLE_SPECS: &[Spec] = &[
     Spec::opt("kernel", "load a saved kernel file instead of a random one"),
@@ -463,6 +464,11 @@ fn cmd_info() -> Result<()> {
         "linalg backend: {} ({} worker threads; NDPP_BACKEND / --backend to change)",
         ndpp::linalg::backend::active_kind().as_str(),
         ndpp::linalg::backend::configured_threads()
+    );
+    println!(
+        "simd ISA: {} (runtime-detected; `simd` backend falls back to portable lanes \
+         when no vector unit is found)",
+        ndpp::linalg::backend::simd_isa().as_str()
     );
     match ModelOps::discover() {
         Some(ops) => {

@@ -99,7 +99,7 @@ pub fn literal_scalar(x: f64) -> xla::Literal {
     xla::Literal::scalar(x as f32)
 }
 
-/// Extract an f32 literal into a Vec<f64>.
+/// Extract an f32 literal into a `Vec<f64>`.
 pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f64>> {
     Ok(lit.to_vec::<f32>()?.into_iter().map(|x| x as f64).collect())
 }

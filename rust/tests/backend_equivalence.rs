@@ -1,17 +1,23 @@
-//! Backend equivalence suite: `BlockedBackend` must agree with
-//! `NaiveBackend` (the reference loops) to 1e-10 on every primitive,
-//! across awkward shapes — non-square, k = 1, empty dimensions, sizes that
-//! are not multiples of the register tile or k-panel, and sizes large
-//! enough to cross the multithreading thresholds.  A final pass re-runs
-//! the sampler conformance checks with the blocked backend pinned
+//! Backend equivalence suite: every fast backend (`BlockedBackend`,
+//! `SimdBackend`) must agree with `NaiveBackend` (the reference loops) to
+//! 1e-10 on every primitive, across awkward shapes — non-square, k = 1,
+//! empty dimensions, sizes that are not multiples of the register tile,
+//! the k-panel, or the 4-wide vector width, and sizes large enough to
+//! cross the multithreading thresholds.  The simd backend is exercised
+//! both under its runtime-detected ISA and pinned to the portable
+//! fallback lanes, and the two are held to *each other* (the
+//! fallback-equals-intrinsics guarantee).  A final pass re-runs the
+//! sampler conformance checks with each fast backend pinned
 //! process-wide, tying kernel-level equivalence to end-to-end sampling
 //! distributions.
 //!
 //! CI runs this file on its own (`cargo test --release --test
-//! backend_equivalence`) so a blocked-kernel regression fails the build
+//! backend_equivalence`) so a fast-kernel regression fails the build
 //! even if someone trims the default test sweep.
 
-use ndpp::linalg::backend::{self, Backend, BackendKind, BlockedBackend, NaiveBackend};
+use ndpp::linalg::backend::{
+    self, Backend, BackendKind, BlockedBackend, NaiveBackend, SimdBackend,
+};
 use ndpp::linalg::Matrix;
 use ndpp::ndpp::{probability, NdppKernel, Proposal};
 use ndpp::rng::Xoshiro;
@@ -38,8 +44,10 @@ fn vec_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
     }
 }
 
-/// Compare every primitive on one `(m, k, n)` shape.
-fn check_shape(m: usize, k: usize, n: usize, seed: u64) {
+/// Compare every primitive of `fast` against the naive oracle on one
+/// `(m, k, n)` shape.
+fn check_shape(fast: &dyn Backend, m: usize, k: usize, n: usize, seed: u64) {
+    let name = fast.name();
     let mut rng = Xoshiro::seeded(seed);
     let a = Matrix::randn(m, k, 1.0, &mut rng);
     let b = Matrix::randn(k, n, 1.0, &mut rng);
@@ -48,27 +56,27 @@ fn check_shape(m: usize, k: usize, n: usize, seed: u64) {
 
     assert_close(
         &NaiveBackend.gemm(&a, &b),
-        &BlockedBackend.gemm(&a, &b),
+        &fast.gemm(&a, &b),
         TOL * (k as f64 + 1.0),
-        "gemm",
+        &format!("{name} gemm"),
     );
     assert_close(
         &NaiveBackend.gemm_tn(&a, &c),
-        &BlockedBackend.gemm_tn(&a, &c),
+        &fast.gemm_tn(&a, &c),
         TOL * (m as f64 + 1.0),
-        "gemm_tn",
+        &format!("{name} gemm_tn"),
     );
     assert_close(
         &NaiveBackend.gemm_nt(&a, &bt),
-        &BlockedBackend.gemm_nt(&a, &bt),
+        &fast.gemm_nt(&a, &bt),
         TOL * (k as f64 + 1.0),
-        "gemm_nt",
+        &format!("{name} gemm_nt"),
     );
     assert_close(
         &NaiveBackend.syrk(&a, 0, m),
-        &BlockedBackend.syrk(&a, 0, m),
+        &fast.syrk(&a, 0, m),
         TOL * (m as f64 + 1.0),
-        "syrk",
+        &format!("{name} syrk"),
     );
 
     if k > 0 && m > 0 {
@@ -76,21 +84,21 @@ fn check_shape(m: usize, k: usize, n: usize, seed: u64) {
         let y: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
         vec_close(
             &NaiveBackend.matvec(&a, &x),
-            &BlockedBackend.matvec(&a, &x),
+            &fast.matvec(&a, &x),
             TOL * (k as f64 + 1.0),
-            "matvec",
+            &format!("{name} matvec"),
         );
         vec_close(
             &NaiveBackend.t_matvec(&a, &y),
-            &BlockedBackend.t_matvec(&a, &y),
+            &fast.t_matvec(&a, &y),
             TOL * (m as f64 + 1.0),
-            "t_matvec",
+            &format!("{name} t_matvec"),
         );
         let mut a1 = a.clone();
         let mut a2 = a.clone();
         NaiveBackend.rank1_sub(&mut a1, &y, &x, 0.75);
-        BlockedBackend.rank1_sub(&mut a2, &y, &x, 0.75);
-        assert_close(&a1, &a2, TOL, "rank1_sub");
+        fast.rank1_sub(&mut a2, &y, &x, 0.75);
+        assert_close(&a1, &a2, TOL, &format!("{name} rank1_sub"));
 
         let r0 = m / 3;
         let c0 = k / 3;
@@ -98,42 +106,61 @@ fn check_shape(m: usize, k: usize, n: usize, seed: u64) {
         let w: Vec<f64> = (0..k - c0).map(|_| rng.normal()).collect();
         vec_close(
             &NaiveBackend.panel_t_matvec(&a, r0, c0, &v),
-            &BlockedBackend.panel_t_matvec(&a, r0, c0, &v),
+            &fast.panel_t_matvec(&a, r0, c0, &v),
             TOL * (m as f64 + 1.0),
-            "panel_t_matvec",
+            &format!("{name} panel_t_matvec"),
         );
         let mut p1 = a.clone();
         let mut p2 = a.clone();
         NaiveBackend.panel_rank1_sub(&mut p1, r0, c0, &v, &w, 2.0);
-        BlockedBackend.panel_rank1_sub(&mut p2, r0, c0, &v, &w, 2.0);
-        assert_close(&p1, &p2, TOL, "panel_rank1_sub");
+        fast.panel_rank1_sub(&mut p2, r0, c0, &v, &w, 2.0);
+        assert_close(&p1, &p2, TOL, &format!("{name} panel_rank1_sub"));
     }
+}
+
+/// The fast backends under test: blocked, simd under the detected ISA,
+/// and simd pinned to the portable fallback lanes.
+fn fast_backends() -> Vec<Box<dyn Backend>> {
+    vec![
+        Box::new(BlockedBackend),
+        Box::new(SimdBackend::detect()),
+        Box::new(SimdBackend::portable()),
+    ]
 }
 
 #[test]
 fn equivalence_on_random_shapes() {
-    // small shapes: register-tile remainders (m % 4), k = 1, skinny panels
+    // small shapes: register-tile remainders (m % 4), k = 1, skinny
+    // panels, tail columns not divisible by the 4-wide vector width
+    let fast = fast_backends();
     prop::check("backend_equiv_random", 40, |g| {
         let m = g.usize_in(1, 40);
         let k = g.usize_in(1, 40);
         let n = g.usize_in(1, 40);
-        check_shape(m, k, n, g.seed);
+        for be in &fast {
+            check_shape(be.as_ref(), m, k, n, g.seed);
+        }
     });
 }
 
 #[test]
 fn equivalence_on_edge_shapes() {
-    // k = 1, single rows/cols, empty dimensions
+    // k = 1, single rows/cols, empty dimensions, 1/2/3-column vector tails
+    let fast = fast_backends();
     for &(m, k, n) in &[
         (1usize, 1usize, 1usize),
         (1, 1, 7),
         (7, 1, 1),
         (5, 1, 9),
+        (6, 5, 2),
+        (6, 5, 3),
         (4, 3, 0),
         (0, 3, 4),
         (3, 0, 4),
     ] {
-        check_shape(m, k, n, (m * 100 + k * 10 + n) as u64);
+        for be in &fast {
+            check_shape(be.as_ref(), m, k, n, (m * 100 + k * 10 + n) as u64);
+        }
     }
 }
 
@@ -142,6 +169,7 @@ fn equivalence_across_blocking_boundaries() {
     // straddle the KC = 256 k-panel and the 4-row register tile, and cross
     // the thread fan-out threshold (2mnk >= 2^24) so banded + threaded
     // paths are all exercised against the oracle
+    let fast = fast_backends();
     for &(m, k, n) in &[
         (9usize, 255usize, 11usize),
         (9, 256, 11),
@@ -149,7 +177,52 @@ fn equivalence_across_blocking_boundaries() {
         (258, 130, 77),   // m % 4 == 2
         (301, 257, 129),  // ~20 MFLOP: threaded path
     ] {
-        check_shape(m, k, n, (m + k + n) as u64);
+        for be in &fast {
+            check_shape(be.as_ref(), m, k, n, (m + k + n) as u64);
+        }
+    }
+}
+
+#[test]
+fn simd_fallback_matches_intrinsic_path() {
+    // The runtime ISA-detection fallback must produce the same results as
+    // the intrinsic path.  The two differ only by FMA's single rounding
+    // (the lane structure and accumulation order are identical), so they
+    // agree far tighter than the cross-backend tolerance; on machines
+    // where detection already yields the portable lanes this is exact.
+    let det = SimdBackend::detect();
+    let port = SimdBackend::portable();
+    for &(m, k, n) in &[
+        (5usize, 1usize, 9usize),
+        (17, 23, 6),
+        (9, 257, 11), // KC straddle
+        (33, 64, 7),  // 3-column vector tail
+        (258, 130, 77),
+    ] {
+        let mut rng = Xoshiro::seeded((m * 7 + k * 3 + n) as u64);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let tight = 1e-11 * (k as f64 + 1.0);
+        assert_close(&det.gemm(&a, &b), &port.gemm(&a, &b), tight, "fallback gemm");
+        assert_close(
+            &det.syrk(&a, 0, m),
+            &port.syrk(&a, 0, m),
+            1e-11 * (m as f64 + 1.0),
+            "fallback syrk",
+        );
+        let x: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        vec_close(
+            &det.matvec(&a, &x),
+            &port.matvec(&a, &x),
+            1e-11 * (k as f64 + 1.0),
+            "fallback matvec",
+        );
+        let y: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let mut a1 = a.clone();
+        let mut a2 = a.clone();
+        det.rank1_sub(&mut a1, &y, &x, 0.75);
+        port.rank1_sub(&mut a2, &y, &x, 0.75);
+        assert_close(&a1, &a2, 1e-12, "fallback rank1_sub");
     }
 }
 
@@ -159,127 +232,148 @@ fn equivalence_on_threaded_blas2_and_panel_paths() {
     // rank-1 / panel code paths (what householder_qr runs on M-row
     // factors) are held to the oracle; 8192 rows also spans multiple
     // PANEL_CHUNK reduction chunks in panel_t_matvec
+    let fast = fast_backends();
     for &(m, n) in &[(2048usize, 1024usize), (8192, 256)] {
         let mut rng = Xoshiro::seeded((m + n) as u64);
         let a = Matrix::randn(m, n, 1.0, &mut rng);
         let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let y: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
-        vec_close(
-            &NaiveBackend.matvec(&a, &x),
-            &BlockedBackend.matvec(&a, &x),
-            1e-8,
-            "matvec threaded",
-        );
-        let mut a1 = a.clone();
-        let mut a2 = a.clone();
-        NaiveBackend.rank1_sub(&mut a1, &y, &x, 1.25);
-        BlockedBackend.rank1_sub(&mut a2, &y, &x, 1.25);
-        assert_close(&a1, &a2, TOL, "rank1_sub threaded");
-
+        let f = Matrix::randn(m, 48, 1.0, &mut rng);
         let (r0, c0) = (3usize, 5usize);
         let v: Vec<f64> = (0..m - r0).map(|_| rng.normal()).collect();
         let w: Vec<f64> = (0..n - c0).map(|_| rng.normal()).collect();
-        vec_close(
-            &NaiveBackend.panel_t_matvec(&a, r0, c0, &v),
-            &BlockedBackend.panel_t_matvec(&a, r0, c0, &v),
-            1e-8,
-            "panel_t_matvec threaded",
-        );
-        let mut p1 = a.clone();
-        let mut p2 = a.clone();
-        NaiveBackend.panel_rank1_sub(&mut p1, r0, c0, &v, &w, 2.0);
-        BlockedBackend.panel_rank1_sub(&mut p2, r0, c0, &v, &w, 2.0);
-        assert_close(&p1, &p2, TOL, "panel_rank1_sub threaded");
+        for be in &fast {
+            let name = be.name();
+            vec_close(
+                &NaiveBackend.matvec(&a, &x),
+                &be.matvec(&a, &x),
+                1e-8,
+                &format!("{name} matvec threaded"),
+            );
+            let mut a1 = a.clone();
+            let mut a2 = a.clone();
+            NaiveBackend.rank1_sub(&mut a1, &y, &x, 1.25);
+            be.rank1_sub(&mut a2, &y, &x, 1.25);
+            assert_close(&a1, &a2, TOL, &format!("{name} rank1_sub threaded"));
 
-        // threaded streaming gemm_tn (tall factor, p <= 256 output rows)
-        let f = Matrix::randn(m, 48, 1.0, &mut rng);
-        assert_close(
-            &NaiveBackend.gemm_tn(&f, &a),
-            &BlockedBackend.gemm_tn(&f, &a),
-            1e-8,
-            "gemm_tn threaded streaming",
-        );
+            vec_close(
+                &NaiveBackend.panel_t_matvec(&a, r0, c0, &v),
+                &be.panel_t_matvec(&a, r0, c0, &v),
+                1e-8,
+                &format!("{name} panel_t_matvec threaded"),
+            );
+            let mut p1 = a.clone();
+            let mut p2 = a.clone();
+            NaiveBackend.panel_rank1_sub(&mut p1, r0, c0, &v, &w, 2.0);
+            be.panel_rank1_sub(&mut p2, r0, c0, &v, &w, 2.0);
+            assert_close(&p1, &p2, TOL, &format!("{name} panel_rank1_sub threaded"));
+
+            // threaded streaming gemm_tn (tall factor, p <= 256 output rows)
+            assert_close(
+                &NaiveBackend.gemm_tn(&f, &a),
+                &be.gemm_tn(&f, &a),
+                1e-8,
+                &format!("{name} gemm_tn threaded streaming"),
+            );
+        }
     }
 }
 
 #[test]
 fn syrk_row_ranges_agree() {
+    let fast = fast_backends();
     prop::check("backend_equiv_syrk_range", 20, |g| {
         let m = g.usize_in(1, 60);
         let p = g.usize_in(1, 12);
         let a = Matrix::from_vec(m, p, g.normal_vec(m * p, 1.0));
         let lo = g.usize_in(0, m);
         let hi = g.usize_in(lo, m);
-        assert_close(
-            &NaiveBackend.syrk(&a, lo, hi),
-            &BlockedBackend.syrk(&a, lo, hi),
-            TOL,
-            "syrk_range",
-        );
-        // row-range SYRK equals the Gram of the gathered rows
-        let idx: Vec<usize> = (lo..hi).collect();
-        let gathered = a.gather_rows(&idx);
-        assert_close(
-            &BlockedBackend.syrk(&a, lo, hi),
-            &gathered.t_matmul(&gathered),
-            1e-9,
-            "syrk_vs_gram",
-        );
+        for be in &fast {
+            assert_close(
+                &NaiveBackend.syrk(&a, lo, hi),
+                &be.syrk(&a, lo, hi),
+                TOL,
+                &format!("{} syrk_range", be.name()),
+            );
+            // row-range SYRK equals the Gram of the gathered rows
+            let idx: Vec<usize> = (lo..hi).collect();
+            let gathered = a.gather_rows(&idx);
+            assert_close(
+                &be.syrk(&a, lo, hi),
+                &gathered.t_matmul(&gathered),
+                1e-9,
+                &format!("{} syrk_vs_gram", be.name()),
+            );
+        }
     });
 }
 
 #[test]
-fn blocked_results_are_reproducible() {
+fn fast_results_are_reproducible() {
     // thread-count-independent accumulation order: repeated runs are
-    // bitwise identical
+    // bitwise identical, for blocked and simd alike
+    let fast = fast_backends();
     let mut rng = Xoshiro::seeded(17);
     let a = Matrix::randn(301, 257, 1.0, &mut rng);
     let b = Matrix::randn(257, 129, 1.0, &mut rng);
-    let c1 = BlockedBackend.gemm(&a, &b);
-    let c2 = BlockedBackend.gemm(&a, &b);
-    assert_eq!(c1.data, c2.data, "blocked gemm nondeterministic");
-    let s1 = BlockedBackend.syrk(&a, 0, 301);
-    let s2 = BlockedBackend.syrk(&a, 0, 301);
-    assert_eq!(s1.data, s2.data, "blocked syrk nondeterministic");
+    for be in &fast {
+        let name = be.name();
+        let c1 = be.gemm(&a, &b);
+        let c2 = be.gemm(&a, &b);
+        assert_eq!(c1.data, c2.data, "{name} gemm nondeterministic");
+        let s1 = be.syrk(&a, 0, 301);
+        let s2 = be.syrk(&a, 0, 301);
+        assert_eq!(s1.data, s2.data, "{name} syrk nondeterministic");
+    }
 }
 
 #[test]
-fn conformance_rerun_under_blocked_backend() {
-    // pin the blocked backend process-wide and hold every sampler family
-    // to the enumerated subset probabilities — the end-to-end guarantee
-    // that re-routing the hot paths changed performance, not distributions
-    backend::set_active(BackendKind::Blocked);
-    assert_eq!(backend::active_kind(), BackendKind::Blocked);
+fn conformance_rerun_under_fast_backends() {
+    // pin each fast backend process-wide in turn and hold every sampler
+    // family to the enumerated subset probabilities — the end-to-end
+    // guarantee that re-routing the hot paths changed performance, not
+    // distributions.  (One test owns the process-global selection so the
+    // pins cannot race each other; every other test in this binary uses
+    // explicit backend instances.)
+    let saved = backend::active_kind();
+    for kind in [BackendKind::Blocked, BackendKind::Simd] {
+        backend::set_active(kind);
+        assert_eq!(backend::active_kind(), kind);
 
-    let n = 30_000;
-    let tv_limit = 0.035;
-    let mut rng = Xoshiro::seeded(191);
-    let kernel = NdppKernel::random_ondpp(6, 2, &mut rng);
-    let want = probability::enumerate_probs(&kernel);
+        let n = 30_000;
+        let tv_limit = 0.035;
+        let mut rng = Xoshiro::seeded(191);
+        let kernel = NdppKernel::random_ondpp(6, 2, &mut rng);
+        let want = probability::enumerate_probs(&kernel);
 
-    let mut check = |name: &str, sampler: &mut dyn Sampler, expect: &[f64]| {
-        let freq = empirical(sampler, 6, n, &mut rng);
-        let d = tv(&freq, expect);
-        assert!(d < tv_limit, "{name}: tv={d}");
-        let cs = chi_square_gof(&freq, expect, n);
-        assert!(
-            cs.passes(),
-            "{name}: chi2 {:.1} > crit {:.1} (df {})",
-            cs.stat,
-            cs.crit_999,
-            cs.df
-        );
-    };
+        let mut check = |name: &str, sampler: &mut dyn Sampler, expect: &[f64]| {
+            let freq = empirical(sampler, 6, n, &mut rng);
+            let d = tv(&freq, expect);
+            assert!(d < tv_limit, "{name} under {}: tv={d}", kind.as_str());
+            let cs = chi_square_gof(&freq, expect, n);
+            assert!(
+                cs.passes(),
+                "{name} under {}: chi2 {:.1} > crit {:.1} (df {})",
+                kind.as_str(),
+                cs.stat,
+                cs.crit_999,
+                cs.df
+            );
+        };
 
-    let mut chol = CholeskySampler::new(&kernel);
-    check("cholesky", &mut chol, &want);
-    let mut dense = DenseCholeskySampler::new(&kernel);
-    check("dense", &mut dense, &want);
-    let proposal = Proposal::build(&kernel);
-    let tree = SampleTree::build(&proposal.spectral(), TreeConfig { leaf_size: 2 });
-    let mut rej = RejectionSampler::new(&kernel, &proposal, &tree);
-    check("rejection", &mut rej, &want);
-    let cond = conditioned_on_size(&want, 2);
-    let mut mcmc = McmcSampler::new(&kernel, McmcConfig::for_size(2, 6));
-    check("mcmc", &mut mcmc, &cond);
+        let mut chol = CholeskySampler::new(&kernel);
+        check("cholesky", &mut chol, &want);
+        let mut dense = DenseCholeskySampler::new(&kernel);
+        check("dense", &mut dense, &want);
+        let proposal = Proposal::build(&kernel);
+        let tree = SampleTree::build(&proposal.spectral(), TreeConfig { leaf_size: 2 });
+        let mut rej = RejectionSampler::new(&kernel, &proposal, &tree);
+        check("rejection", &mut rej, &want);
+        let cond = conditioned_on_size(&want, 2);
+        let mut mcmc = McmcSampler::new(&kernel, McmcConfig::for_size(2, 6));
+        check("mcmc", &mut mcmc, &cond);
+    }
+    // restore what the process started with (the CI backend matrix pins
+    // NDPP_BACKEND per leg — later tests must keep seeing that value)
+    backend::set_active(saved);
 }

@@ -1,0 +1,169 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over the BENCH_* trajectory (stdlib only).
+
+Parses ``BENCH_linalg.json`` and ``BENCH_serving.json`` (as produced by
+``cargo bench --bench linalg_backends`` / ``--bench serving``), enforces
+the speedup floors, and merges both files into a single per-commit
+``BENCH_trajectory.json`` artifact.
+
+Gates (all on the quick-mode numbers CI produces):
+
+* blocked-vs-naive GEMM speedup on the 512x512x512 row must be at least
+  ``--min-blocked-speedup`` (default 2.0);
+* simd-vs-blocked GEMM speedup on the same row must be at least
+  ``--min-simd-speedup`` (default 1.2) — relaxed to >= 1.0 (a "no
+  regression" bound) when the bench reports ``isa: portable``, i.e. the
+  runner has no vector unit for the simd backend to use;
+* every serving sweep config must report a strictly positive
+  ``requests_per_s`` (0 means the pipeline wedged or every request was
+  rejected).
+
+Exit status is non-zero with one line per violation; on success a short
+summary table is printed.  The merged trajectory is written even when
+gates fail, so the artifact can be inspected.
+
+Usage (what .github/workflows/ci.yml runs)::
+
+    python3 scripts/bench_gate.py \
+        --linalg BENCH_linalg.json --serving BENCH_serving.json \
+        --out BENCH_trajectory.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+GATE_SHAPE = (512, 512, 512)
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            return json.load(fh)
+    except FileNotFoundError:
+        sys.exit(f"bench_gate: missing bench file {path!r}")
+    except json.JSONDecodeError as e:
+        sys.exit(f"bench_gate: {path!r} is not valid JSON: {e}")
+
+
+def gate_row(linalg: dict) -> dict | None:
+    """The GEMM sweep row at the gate shape, or None if absent."""
+    for row in linalg.get("gemm", []):
+        shape = (row.get("m"), row.get("k"), row.get("n"))
+        if shape == GATE_SHAPE:
+            return row
+    return None
+
+
+def check_linalg(linalg: dict, min_blocked: float, min_simd: float) -> list[str]:
+    errors: list[str] = []
+    row = gate_row(linalg)
+    if row is None:
+        return [
+            "linalg: no %dx%dx%d GEMM row in the sweep — the gate shape was "
+            "removed from the bench" % GATE_SHAPE
+        ]
+
+    blocked = row.get("speedup")
+    if not isinstance(blocked, (int, float)):
+        errors.append("linalg: 512^3 row has no numeric 'speedup' field")
+    elif blocked < min_blocked:
+        errors.append(
+            f"linalg: blocked-vs-naive GEMM speedup {blocked:.2f}x on 512^3 "
+            f"is below the {min_blocked:.2f}x floor"
+        )
+
+    isa = linalg.get("isa", "unknown")
+    simd_floor = min_simd
+    if isa == "portable":
+        # No vector unit detected: the simd backend ran its fallback
+        # lanes, so only require that it did not regress below blocked.
+        simd_floor = 1.0
+    simd = row.get("simd_vs_blocked")
+    if not isinstance(simd, (int, float)):
+        errors.append("linalg: 512^3 row has no numeric 'simd_vs_blocked' field")
+    elif simd < simd_floor:
+        errors.append(
+            f"linalg: simd-vs-blocked GEMM speedup {simd:.2f}x on 512^3 is "
+            f"below the {simd_floor:.2f}x floor (isa: {isa})"
+        )
+    return errors
+
+
+def check_serving(serving: dict) -> list[str]:
+    errors: list[str] = []
+    sweep = serving.get("sweep", [])
+    if not sweep:
+        return ["serving: sweep is empty — no throughput was measured"]
+    for row in sweep:
+        algo = row.get("algo", "?")
+        clients = row.get("clients", "?")
+        rps = row.get("requests_per_s")
+        if not isinstance(rps, (int, float)) or rps <= 0.0:
+            errors.append(
+                f"serving: {algo} x {clients} clients reports "
+                f"{rps!r} req/s — the pipeline served nothing"
+            )
+    return errors
+
+
+def summarize(linalg: dict, serving: dict) -> None:
+    row = gate_row(linalg) or {}
+    print(
+        "bench_gate: 512^3 GEMM blocked-vs-naive x%.2f, simd-vs-blocked "
+        "x%.2f (isa: %s, %s threads)"
+        % (
+            row.get("speedup", float("nan")),
+            row.get("simd_vs_blocked", float("nan")),
+            linalg.get("isa", "unknown"),
+            linalg.get("threads", "?"),
+        )
+    )
+    for srow in serving.get("sweep", []):
+        print(
+            "bench_gate: serving %-10s %2s clients  %8.1f req/s"
+            % (srow.get("algo", "?"), srow.get("clients", "?"), srow.get("requests_per_s", 0.0))
+        )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--linalg", default="BENCH_linalg.json")
+    ap.add_argument("--serving", default="BENCH_serving.json")
+    ap.add_argument("--out", default="BENCH_trajectory.json")
+    ap.add_argument("--min-blocked-speedup", type=float, default=2.0)
+    ap.add_argument("--min-simd-speedup", type=float, default=1.2)
+    args = ap.parse_args()
+
+    linalg = load(args.linalg)
+    serving = load(args.serving)
+
+    # Merge first: the trajectory artifact must exist even when gates
+    # fail, so regressions can be diagnosed from the uploaded JSON.
+    trajectory = {
+        "schema": "ndpp-bench-trajectory/v1",
+        "commit": os.environ.get("GITHUB_SHA", "unknown"),
+        "linalg": linalg,
+        "serving": serving,
+    }
+    with open(args.out, "w", encoding="utf-8") as fh:
+        json.dump(trajectory, fh, indent=2, sort_keys=False)
+        fh.write("\n")
+    print(f"bench_gate: wrote {args.out}")
+
+    errors = check_linalg(linalg, args.min_blocked_speedup, args.min_simd_speedup)
+    errors += check_serving(serving)
+    if errors:
+        for e in errors:
+            print(f"bench_gate: FAIL {e}", file=sys.stderr)
+        return 1
+    summarize(linalg, serving)
+    print("bench_gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
