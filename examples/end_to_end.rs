@@ -137,6 +137,7 @@ fn main() -> anyhow::Result<()> {
                 seed: Some(i as u64),
                 kind: if i % 2 == 0 { SamplerKind::Rejection } else { SamplerKind::Cholesky },
                 deadline: None,
+                given: Vec::new(),
             })
         })
         .collect();

@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
             seed: Some(100 + i),
             kind: SamplerKind::Rejection,
             deadline: None,
+            given: Vec::new(),
         })?;
         println!(
             "  set {i}: {:?} ({} proposals, {:.1} ms)",
@@ -91,6 +92,7 @@ fn main() -> anyhow::Result<()> {
                 seed: Some(i),
                 kind: SamplerKind::Rejection,
                 deadline: None,
+                given: Vec::new(),
             })
         })
         .collect();

@@ -57,6 +57,7 @@ fn main() -> anyhow::Result<()> {
                             seed: Some(c * 1000 + i),
                             kind: SamplerKind::Rejection,
                             deadline: None, // inherit the service default
+                            given: Vec::new(),
                         })
                         .expect("request failed");
                 }
@@ -75,6 +76,7 @@ fn main() -> anyhow::Result<()> {
             seed: Some(42),
             kind: SamplerKind::Rejection,
             deadline: None,
+            given: Vec::new(),
         })?
         .samples;
     let via_batch = service
@@ -85,6 +87,7 @@ fn main() -> anyhow::Result<()> {
                 seed: Some(42),
                 kind: SamplerKind::Rejection,
                 deadline: None,
+                given: Vec::new(),
             },
             SampleRequest {
                 model: "movies".into(),
@@ -92,6 +95,7 @@ fn main() -> anyhow::Result<()> {
                 seed: Some(43),
                 kind: SamplerKind::Cholesky,
                 deadline: None,
+                given: Vec::new(),
             },
         ])
         .remove(0)?
@@ -117,6 +121,7 @@ fn main() -> anyhow::Result<()> {
                 seed: Some(i),
                 kind: SamplerKind::Cholesky,
                 deadline: None,
+                given: Vec::new(),
             })
         })
         .collect();

@@ -6,11 +6,13 @@
 //! coalescing, Prepared/Scratch reuse) with a closed loop per client:
 //! each of `1 / 4 / 16` concurrent clients issues synchronous
 //! `sample(model, n, seed)` requests back to back, for every algorithm in
-//! `cholesky / rejection / mcmc`.  Reports per-config request throughput,
-//! sample throughput, and latency percentiles, and writes
-//! `BENCH_serving.json` (override the path with `NDPP_BENCH_OUT`) — the
-//! serving entry of the repo's `BENCH_*` trajectory, uploaded as a CI
-//! artifact next to `BENCH_linalg.json`.
+//! `cholesky / rejection / mcmc`, plus a `given`-bearing conditional
+//! sweep (`1 / 4` clients, every request paying per-request Schur
+//! conditioning).  Reports per-config request throughput, sample
+//! throughput, and latency percentiles, and writes `BENCH_serving.json`
+//! (override the path with `NDPP_BENCH_OUT`; `sweep[]` + `conditional[]`
+//! rows) — the serving entry of the repo's `BENCH_*` trajectory, uploaded
+//! as a CI artifact next to `BENCH_linalg.json`.
 
 use std::sync::Arc;
 
@@ -48,7 +50,7 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
     let client_counts = [1usize, 4, 16];
 
     let mut table =
-        Table::new(&["algo", "clients", "req/s", "samples/s", "p50", "p95"]);
+        Table::new(&["algo", "clients", "given", "req/s", "samples/s", "p50", "p95"]);
     let mut rows: Vec<Json> = Vec::new();
     for kind in algos {
         for &clients in &client_counts {
@@ -59,7 +61,7 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
             } else {
                 iters_per_client
             };
-            let (wall, latencies) = closed_loop(&svc, kind, clients, iters);
+            let (wall, latencies) = closed_loop(&svc, kind, clients, iters, &[]);
             let requests = (clients * iters) as f64;
             let req_s = requests / wall;
             let samples_s = req_s * SAMPLES_PER_REQUEST as f64;
@@ -67,6 +69,7 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
             table.row(vec![
                 kind.as_str().to_string(),
                 format!("{clients}"),
+                "-".to_string(),
                 format!("{req_s:.0}"),
                 format!("{samples_s:.0}"),
                 fmt_secs(lat.p50),
@@ -86,6 +89,49 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
             );
         }
     }
+
+    // conditional (basket-completion) sweep: every request carries a
+    // `given` basket, so each one pays the per-request Schur conditioning
+    // on top of sampling — the column bench_gate.py watches for wedges in
+    // the conditional dispatch (serving.conditional[])
+    let given: Vec<usize> = vec![1, 7, 2 * k + 3];
+    let cond_clients = [1usize, 4];
+    let mut cond_rows: Vec<Json> = Vec::new();
+    for kind in algos {
+        for &clients in &cond_clients {
+            let iters = if kind == SamplerKind::Mcmc {
+                (iters_per_client / 3).max(5)
+            } else {
+                iters_per_client
+            };
+            let (wall, latencies) = closed_loop(&svc, kind, clients, iters, &given);
+            let requests = (clients * iters) as f64;
+            let req_s = requests / wall;
+            let lat = Summary::of(&latencies);
+            table.row(vec![
+                kind.as_str().to_string(),
+                format!("{clients}"),
+                format!("{}", given.len()),
+                format!("{req_s:.0}"),
+                format!("{:.0}", req_s * SAMPLES_PER_REQUEST as f64),
+                fmt_secs(lat.p50),
+                fmt_secs(lat.p95),
+            ]);
+            cond_rows.push(
+                Json::obj()
+                    .with("algo", kind.as_str())
+                    .with("clients", clients)
+                    .with("given_len", given.len())
+                    .with("requests", requests)
+                    .with("wall_s", wall)
+                    .with("requests_per_s", req_s)
+                    .with("samples_per_s", req_s * SAMPLES_PER_REQUEST as f64)
+                    .with("latency_p50_s", lat.p50)
+                    .with("latency_p95_s", lat.p95)
+                    .with("latency_mean_s", lat.mean),
+            );
+        }
+    }
     println!("\n== closed-loop serving sweep (M={m}, 2K={}) ==\n{}", 2 * k, table.render());
 
     let json = Json::obj()
@@ -95,19 +141,22 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
         .with("k", k)
         .with("shards", svc.shards())
         .with("samples_per_request", SAMPLES_PER_REQUEST)
-        .with("sweep", Json::Arr(rows));
+        .with("sweep", Json::Arr(rows))
+        .with("conditional", Json::Arr(cond_rows));
     std::fs::write(out_path, json.to_string_pretty())?;
     println!("(written to {out_path})");
     Ok(json)
 }
 
-/// `clients` threads each issue `iters` synchronous requests back to back;
+/// `clients` threads each issue `iters` synchronous requests back to back
+/// (each carrying the `given` basket — empty for unconditional traffic);
 /// returns (wall seconds, every per-request latency).
 fn closed_loop(
     svc: &Arc<SamplingService>,
     kind: SamplerKind,
     clients: usize,
     iters: usize,
+    given: &[usize],
 ) -> (f64, Vec<f64>) {
     let wall = Timer::start();
     let mut latencies: Vec<f64> = Vec::with_capacity(clients * iters);
@@ -115,6 +164,7 @@ fn closed_loop(
         let handles: Vec<_> = (0..clients)
             .map(|c| {
                 let svc = Arc::clone(svc);
+                let given = given.to_vec();
                 scope.spawn(move || {
                     let mut lats = Vec::with_capacity(iters);
                     for i in 0..iters {
@@ -125,6 +175,7 @@ fn closed_loop(
                             seed: Some(((c as u64) << 32) | i as u64),
                             kind,
                             deadline: None,
+                            given: given.clone(),
                         })
                         .expect("bench request failed");
                         lats.push(t.secs());
@@ -152,9 +203,13 @@ mod tests {
         }));
         let mut rng = Xoshiro::seeded(3);
         svc.register("bench", tablelike_kernel(64, 4, &mut rng));
-        let (wall, lats) = closed_loop(&svc, SamplerKind::Cholesky, 2, 3);
+        let (wall, lats) = closed_loop(&svc, SamplerKind::Cholesky, 2, 3, &[]);
         assert!(wall > 0.0);
         assert_eq!(lats.len(), 6);
         assert!(lats.iter().all(|&l| l >= 0.0));
+        // conditional traffic flows through the same loop
+        let (wall_c, lats_c) = closed_loop(&svc, SamplerKind::Rejection, 1, 2, &[1, 5]);
+        assert!(wall_c > 0.0);
+        assert_eq!(lats_c.len(), 2);
     }
 }

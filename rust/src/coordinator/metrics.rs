@@ -49,6 +49,13 @@ struct ModelMetrics {
     rejected: HashMap<&'static str, u64>,
     /// breakdown keyed by `SamplerKind::as_str()`
     by_algo: HashMap<String, AlgoMetrics>,
+    /// `given`-bearing (basket-completion) requests served
+    conditional_requests: u64,
+    /// samples produced by those requests
+    conditional_samples: u64,
+    /// sum of `|given|` over conditional requests (mean basket size =
+    /// `conditional_given_sum / conditional_requests`)
+    conditional_given_sum: u64,
 }
 
 impl ModelMetrics {
@@ -61,6 +68,9 @@ impl ModelMetrics {
             errors: 0,
             rejected: HashMap::new(),
             by_algo: HashMap::new(),
+            conditional_requests: 0,
+            conditional_samples: 0,
+            conditional_given_sum: 0,
         }
     }
 
@@ -160,6 +170,27 @@ impl Metrics {
         a.latency_sum += latency_secs;
     }
 
+    /// Record one served conditional (`given`-bearing) request — called
+    /// *in addition to* [`Metrics::record_algo`], so conditional traffic
+    /// shows up both in the per-algorithm split and in its own counters.
+    pub fn record_conditional(&self, model: &str, given_len: usize, n_samples: u64) {
+        let mut map = self.inner.lock().unwrap();
+        let m = map.entry(model.to_string()).or_insert_with(ModelMetrics::new);
+        m.conditional_requests += 1;
+        m.conditional_samples += n_samples;
+        m.conditional_given_sum += given_len as u64;
+    }
+
+    /// Conditional requests served for `model` so far.
+    pub fn conditional_count(&self, model: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(model)
+            .map(|m| m.conditional_requests)
+            .unwrap_or(0)
+    }
+
     pub fn record_error(&self, model: &str) {
         let mut map = self.inner.lock().unwrap();
         map.entry(model.to_string())
@@ -194,6 +225,10 @@ impl Metrics {
             for (&reason, &count) in m.rejected.iter() {
                 rejected.set(reason, count);
             }
+            let conditional = Json::obj()
+                .with("requests", m.conditional_requests)
+                .with("samples", m.conditional_samples)
+                .with("given_sum", m.conditional_given_sum);
             obj.set(
                 name,
                 Json::obj()
@@ -202,6 +237,7 @@ impl Metrics {
                     .with("proposals", m.proposals)
                     .with("errors", m.errors)
                     .with("rejected", rejected)
+                    .with("conditional", conditional)
                     .with("latency_mean_s", m.latency.mean())
                     .with("latency_p50_s", m.latency.quantile(0.5))
                     .with("latency_p95_s", m.latency.quantile(0.95))
@@ -270,6 +306,20 @@ mod tests {
         assert_eq!(shards[0].f64_or("batches", 0.0), 2.0);
         assert_eq!(shards[0].f64_or("requests", 0.0), 13.0);
         assert_eq!(shards[0].f64_or("max_batch", 0.0), 9.0);
+    }
+
+    #[test]
+    fn conditional_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_conditional("a", 2, 4);
+        m.record_conditional("a", 3, 1);
+        assert_eq!(m.conditional_count("a"), 2);
+        assert_eq!(m.conditional_count("b"), 0);
+        let snap = m.snapshot();
+        let c = snap.get("a").and_then(|a| a.get("conditional")).unwrap();
+        assert_eq!(c.f64_or("requests", 0.0), 2.0);
+        assert_eq!(c.f64_or("samples", 0.0), 5.0);
+        assert_eq!(c.f64_or("given_sum", 0.0), 5.0);
     }
 
     #[test]

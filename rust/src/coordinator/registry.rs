@@ -12,7 +12,7 @@ use anyhow::{anyhow, Result};
 
 use crate::linalg::backend::{self, BackendKind};
 use crate::ndpp::{MarginalKernel, NdppKernel, Proposal};
-use crate::sampler::{mcmc, DensePrepared, McmcConfig, SampleTree, TreeConfig};
+use crate::sampler::{mcmc, ConditionalPrepared, DensePrepared, McmcConfig, SampleTree, TreeConfig};
 
 /// Which sampling algorithm a request wants.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,6 +62,13 @@ impl SamplerKind {
         SamplerKind::Mcmc,
         SamplerKind::Dense,
     ];
+
+    /// True when this algorithm can serve `given`-bearing (conditional)
+    /// requests: every low-rank sampler can; the dense `O(M^3)` baseline
+    /// has no conditioned prepared form and cannot.
+    pub fn supports_conditioning(self) -> bool {
+        !matches!(self, SamplerKind::Dense)
+    }
 }
 
 /// A registered model with all sampler preprocessing — the immutable
@@ -81,6 +88,10 @@ pub struct ModelEntry {
     /// numerically too rank-deficient to admit one; the service then
     /// answers `Mcmc` requests for this model with an error)
     pub mcmc_seed: Option<Vec<usize>>,
+    /// conditioning (basket-completion) preprocessing: catalog Gram,
+    /// `X`, and the prepared-basis map that lets conditional rejection
+    /// reuse [`ModelEntry::tree`] with zero per-request tree work
+    pub conditional: ConditionalPrepared,
     /// compute backend active when this model was preprocessed (recorded
     /// so deployments can audit which kernels produced the cached state)
     pub backend: BackendKind,
@@ -98,14 +109,19 @@ pub struct ModelEntry {
 pub struct PrepTimes {
     pub marginal: f64,
     pub spectral: f64,
+    /// `SampleTree::build` wall-clock seconds (leaf SYRKs fanned out over
+    /// the backend's worker threads) — conditional rejection requests must
+    /// never add to this after registration
     pub tree: f64,
     /// greedy-MAP warm start for the MCMC chain
     pub mcmc_seed: f64,
+    /// conditioning preprocessing (catalog Gram + prepared-basis map)
+    pub conditional: f64,
 }
 
 impl PrepTimes {
     pub fn total(&self) -> f64 {
-        self.marginal + self.spectral + self.tree + self.mcmc_seed
+        self.marginal + self.spectral + self.tree + self.mcmc_seed + self.conditional
     }
 }
 
@@ -127,6 +143,8 @@ impl ModelEntry {
         let mcmc = McmcConfig::from_marginal(&marginal);
         let mcmc_seed = mcmc::try_build_seed(&kernel, mcmc.size);
         let t4 = std::time::Instant::now();
+        let conditional = ConditionalPrepared::build(&kernel, &marginal, &tree);
+        let t5 = std::time::Instant::now();
         ModelEntry {
             name: name.into(),
             kernel,
@@ -135,15 +153,23 @@ impl ModelEntry {
             tree,
             mcmc,
             mcmc_seed,
+            conditional,
             backend: backend::active_kind(),
             prep_seconds: PrepTimes {
                 marginal: (t1 - t0).as_secs_f64(),
                 spectral: (t2 - t1).as_secs_f64(),
                 tree: (t3 - t2).as_secs_f64(),
                 mcmc_seed: (t4 - t3).as_secs_f64(),
+                conditional: (t5 - t4).as_secs_f64(),
             },
             dense: OnceLock::new(),
         }
+    }
+
+    /// Largest observed basket this model can condition on (`|J| <= 2K`;
+    /// beyond it `Pr(J ⊆ Y) = 0`).
+    pub fn max_given(&self) -> usize {
+        2 * self.kernel.k()
     }
 
     /// The shared dense prepared core, built on first use.  Refuses ground

@@ -4,8 +4,13 @@
 //!
 //! ```text
 //! -> {"op":"sample","model":"books","n":4,"seed":11,"algo":"rejection",
-//!     "deadline_ms":250}
-//!    (algo: cholesky | rejection | mcmc | dense; deadline_ms optional)
+//!     "deadline_ms":250,"given":[3,17]}
+//!    (algo: cholesky | rejection | mcmc | dense; deadline_ms optional;
+//!     given optional — condition on an observed basket: samples are drawn
+//!     from Pr(Y | given ⊆ Y) and always contain the given items.  Items
+//!     are validated per request: distinct, < M, |given| <= 2K,
+//!     nonsingular L_J; dense does not support conditioning.  An empty /
+//!     absent given is the unconditional path.)
 //! <- {"ok":true,"seed":11,"proposals":9,"latency_s":0.004,
 //!     "samples":[[3,17],[4],[],[8,90,411]]}
 //! -> {"op":"batch","requests":[{"model":"books","n":1,"seed":1},
@@ -155,6 +160,26 @@ fn err_json(msg: &str) -> Json {
 /// entry.
 fn parse_sample_request(req: &Json) -> Result<SampleRequest> {
     let kind = SamplerKind::parse(&req.str_or("algo", "rejection"))?;
+    // `given`: optional array of item indices.  Malformed entries are a
+    // parse error here; semantic validation (range vs the model's M,
+    // duplicates, |given| <= 2K, singular L_J) happens per request in the
+    // service, so one bad basket in a batch answers in place and never
+    // poisons its neighbors.
+    let given = match req.get("given") {
+        None => Vec::new(),
+        Some(g) => {
+            let arr = g
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'given' must be an array of item indices"))?;
+            arr.iter()
+                .map(|v| {
+                    v.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("'given' entries must be nonnegative integers")
+                    })
+                })
+                .collect::<Result<Vec<usize>>>()?
+        }
+    };
     Ok(SampleRequest {
         model: req.str_or("model", ""),
         n: req.usize_or("n", 1),
@@ -164,6 +189,7 @@ fn parse_sample_request(req: &Json) -> Result<SampleRequest> {
             .get("deadline_ms")
             .and_then(|d| d.as_u64())
             .map(Duration::from_millis),
+        given,
     })
 }
 
@@ -192,12 +218,27 @@ fn model_detail_json(entry: &crate::coordinator::registry::ModelEntry) -> Json {
         .map(|k| Json::Str(k.as_str().to_string()))
         .collect();
     let prep = &entry.prep_seconds;
+    // which samplers can serve `given`-bearing requests for this model
+    let cond_samplers: Vec<Json> = SamplerKind::ALL
+        .into_iter()
+        .filter(|k| k.supports_conditioning())
+        .map(|k| Json::Str(k.as_str().to_string()))
+        .collect();
+    let conditioning = Json::obj()
+        .with("supported", true)
+        .with("max_given", entry.max_given())
+        .with("samplers", Json::Arr(cond_samplers))
+        // the dense baseline has no conditioned prepared form; whether it
+        // is even servable unconditionally depends on the M^3 cap
+        .with("dense", false)
+        .with("dense_available", entry.kernel.m() <= SamplerKind::DENSE_MAX_M);
     Json::obj()
         .with("name", entry.name.clone())
         .with("m", entry.kernel.m())
         .with("k2", 2 * entry.kernel.k())
         .with("backend", entry.backend.as_str())
         .with("samplers", Json::Arr(samplers))
+        .with("conditioning", conditioning)
         .with("expected_rejections", entry.proposal.expected_rejections())
         .with("mcmc_size", entry.mcmc.size)
         .with("tree_bytes", entry.tree.memory_bytes())
@@ -208,6 +249,7 @@ fn model_detail_json(entry: &crate::coordinator::registry::ModelEntry) -> Json {
                 .with("spectral", prep.spectral)
                 .with("tree", prep.tree)
                 .with("mcmc_seed", prep.mcmc_seed)
+                .with("conditional", prep.conditional)
                 .with("total", prep.total()),
         )
 }
@@ -330,6 +372,33 @@ impl Client {
         Ok(parse_samples(&resp))
     }
 
+    /// Conditional (basket-completion) sampling: `sample` with a `given`
+    /// basket.  Every returned set contains the given items.
+    pub fn sample_given(
+        &mut self,
+        model: &str,
+        n: usize,
+        seed: u64,
+        algo: &str,
+        given: &[usize],
+    ) -> Result<Vec<Vec<usize>>> {
+        let resp = self.call(
+            &Json::obj()
+                .with("op", "sample")
+                .with("model", model)
+                .with("n", n)
+                .with("seed", seed)
+                .with("algo", algo)
+                .with("given", Json::arr(given.iter().map(|&i| Json::Num(i as f64)))),
+        )?;
+        anyhow::ensure!(
+            resp.get("ok").and_then(|o| o.as_bool()) == Some(true),
+            "server error: {}",
+            resp.str_or("error", "unknown")
+        );
+        Ok(parse_samples(&resp))
+    }
+
     /// Issue one `batch` op; returns the per-entry response objects.
     pub fn sample_batch(&mut self, requests: Vec<Json>) -> Result<Vec<Json>> {
         let resp = self.call(
@@ -406,6 +475,13 @@ mod tests {
         assert!(!detail.str_or("backend", "").is_empty());
         assert_eq!(detail.get("samplers").unwrap().as_arr().unwrap().len(), 4);
         assert!(detail.get("prep_s").unwrap().f64_or("total", -1.0) >= 0.0);
+        assert!(detail.get("prep_s").unwrap().f64_or("conditional", -1.0) >= 0.0);
+        // conditioning audit: supported, capped at 2K, dense excluded
+        let cond = detail.get("conditioning").unwrap();
+        assert_eq!(cond.get("supported").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(cond.f64_or("max_given", 0.0), 8.0);
+        assert_eq!(cond.get("samplers").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(cond.get("dense").and_then(|b| b.as_bool()), Some(false));
         // sample (deterministic by seed)
         let s1 = client.sample("toy", 3, 42, "rejection").unwrap();
         let s2 = client.sample("toy", 3, 42, "rejection").unwrap();
@@ -413,6 +489,26 @@ mod tests {
         assert_eq!(s1.len(), 3);
         let c = client.sample("toy", 2, 1, "cholesky").unwrap();
         assert_eq!(c.len(), 2);
+        // conditional sampling over the wire: deterministic, contains given
+        let g1 = client.sample_given("toy", 2, 77, "cholesky", &[1, 5]).unwrap();
+        let g2 = client.sample_given("toy", 2, 77, "cholesky", &[1, 5]).unwrap();
+        assert_eq!(g1, g2);
+        for y in &g1 {
+            assert!(y.contains(&1) && y.contains(&5), "lost given: {y:?}");
+        }
+        // given=[] is the unconditional path, byte-identical to omitting it
+        let e1 = client.sample_given("toy", 2, 1, "cholesky", &[]).unwrap();
+        assert_eq!(e1, c);
+        // bad given entries are a structured error, not a hang/panic
+        let bad_given = client
+            .call(
+                &Json::obj()
+                    .with("op", "sample")
+                    .with("model", "toy")
+                    .with("given", Json::arr([Json::Str("x".into())].into_iter())),
+            )
+            .unwrap();
+        assert_eq!(bad_given.get("ok").and_then(|b| b.as_bool()), Some(false));
         // the dense O(M^3) baseline is reachable over the wire at small M
         let d1 = client.sample("toy", 2, 8, "dense").unwrap();
         let d2 = client.sample("toy", 2, 8, "dense").unwrap();

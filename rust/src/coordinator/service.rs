@@ -40,12 +40,20 @@ use crate::coordinator::metrics::{Metrics, RejectReason};
 use crate::coordinator::registry::{ModelEntry, Registry, SamplerKind};
 use crate::linalg::backend::{self, BackendKind};
 use crate::ndpp::NdppKernel;
-use crate::rng;
+use crate::rng::{self, Xoshiro};
 use crate::sampler::{
-    cholesky, dense, CholeskyScratch, DenseScratch, ElementaryScratch, McmcSampler,
-    RejectionSampler, Sampler,
+    cholesky, dense, CholeskyScratch, ConditionalScratch, DenseScratch, ElementaryScratch,
+    McmcSampler, RejectionSampler, Sampler,
 };
 use crate::util::Timer;
+
+/// Conditional (`given`-bearing) rejection requests whose conditioned
+/// proposal implies more expected proposals per sample than this are
+/// refused with a structured per-request error pointing at MCMC:
+/// conditioning can inflate `U = det(L̂'+I)/det(L'+I)` far past the
+/// unconditional Theorem 2 bound, and a worker looping millions of
+/// proposals would block its shard far beyond any deadline.
+const MAX_CONDITIONAL_EXPECTED_REJECTIONS: f64 = 1e4;
 
 /// Shard count when `ServiceConfig::shards == 0`: one worker per core,
 /// coordinated with the blocked backend so GEMM threads and shard workers
@@ -109,6 +117,12 @@ pub struct SampleRequest {
     pub kind: SamplerKind,
     /// per-request deadline override (`None` = `ServiceConfig::deadline`)
     pub deadline: Option<Duration>,
+    /// observed basket to condition on (basket completion): samples are
+    /// drawn from `Pr(Y | given ⊆ Y)` and always contain `given`.  Items
+    /// are validated per request (in-range, distinct, `|given| <= 2K`,
+    /// nonsingular `L_J`); an empty list is the unconditional path,
+    /// byte-identical to omitting the field.
+    pub given: Vec<usize>,
 }
 
 impl Default for SampleRequest {
@@ -119,6 +133,7 @@ impl Default for SampleRequest {
             seed: None,
             kind: SamplerKind::Cholesky,
             deadline: None,
+            given: Vec::new(),
         }
     }
 }
@@ -176,6 +191,10 @@ struct WorkerScratch {
     cholesky: Option<CholeskyScratch>,
     elementary: Option<ElementaryScratch>,
     dense: Option<DenseScratch>,
+    /// conditional (basket-completion) workspace: `G_J` + conditioned
+    /// marginal/proposal buffers, re-conditioned per `given`-bearing
+    /// request, hot buffers reused across requests
+    conditional: Option<ConditionalScratch>,
 }
 
 /// The coordinator service.
@@ -457,71 +476,13 @@ impl SamplingService {
             // unit of work per sample: proposal draws for the rejection
             // sampler, chain steps for MCMC, one sweep for cholesky/dense
             let mut proposals = 0u64;
-            let result: Result<Vec<Vec<usize>>> = match p.req.kind {
-                SamplerKind::Cholesky => {
-                    let scratch = ws
-                        .cholesky
-                        .get_or_insert_with(|| CholeskyScratch::for_marginal(&entry.marginal));
-                    Ok((0..p.req.n)
-                        .map(|_| {
-                            proposals += 1;
-                            cholesky::sample_with_logprob_into(&entry.marginal, scratch, &mut rng)
-                                .0
-                        })
-                        .collect())
-                }
-                SamplerKind::Rejection => {
-                    let scratch = ws.elementary.take().unwrap_or_else(|| {
-                        ElementaryScratch::with_rank(entry.tree.spectral().rank())
-                    });
-                    let mut s = RejectionSampler::with_scratch(
-                        &entry.kernel,
-                        &entry.proposal,
-                        &entry.tree,
-                        scratch,
-                    );
-                    let out = (0..p.req.n)
-                        .map(|_| {
-                            let y = s.sample(&mut rng);
-                            proposals += s.last_proposals as u64;
-                            y
-                        })
-                        .collect();
-                    ws.elementary = Some(s.into_scratch());
-                    Ok(out)
-                }
-                SamplerKind::Mcmc => match &entry.mcmc_seed {
-                    None => Err(anyhow!(
-                        "model '{}' has no MCMC warm start: the kernel admits no size-{} \
-                         subset with positive probability (numerically rank-deficient); \
-                         use cholesky or rejection for this model",
-                        entry.name,
-                        entry.mcmc.size
-                    )),
-                    Some(seed) => {
-                        let mut s =
-                            McmcSampler::with_seed(&entry.kernel, entry.mcmc, seed.clone());
-                        Ok((0..p.req.n)
-                            .map(|_| {
-                                let y = s.sample(&mut rng);
-                                proposals += s.last_steps as u64;
-                                y
-                            })
-                            .collect())
-                    }
-                },
-                SamplerKind::Dense => match entry.dense_prepared() {
-                    Err(e) => Err(e),
-                    Ok(prepared) => {
-                        let scratch = ws.dense.get_or_insert_with(DenseScratch::new);
-                        Ok((0..p.req.n)
-                            .map(|_| {
-                                proposals += 1;
-                                dense::sample_into(&prepared, scratch, &mut rng)
-                            })
-                            .collect())
-                    }
-                },
+            // conditional (given-bearing) requests take their own
+            // dispatch; an empty `given` stays on the unconditional paths
+            // below, byte-identical to a request without the field
+            let result: Result<Vec<Vec<usize>>> = if !p.req.given.is_empty() {
+                Self::run_conditional(entry, ws, &p.req, &mut rng, &mut proposals)
+            } else {
+                Self::run_unconditional(entry, ws, &p.req, &mut rng, &mut proposals)
             };
             let latency = p.enqueued.secs();
             match result {
@@ -533,6 +494,13 @@ impl SamplingService {
                         p.req.n as u64,
                         proposals,
                     );
+                    if !p.req.given.is_empty() {
+                        metrics.record_conditional(
+                            &entry.name,
+                            p.req.given.len(),
+                            p.req.n as u64,
+                        );
+                    }
                     let _ = p.reply.send(Ok(SampleResponse {
                         samples,
                         proposals,
@@ -545,6 +513,151 @@ impl SamplingService {
                     let _ = p.reply.send(Err(e));
                 }
             }
+        }
+    }
+
+    /// Serve one `given`-bearing request: condition the worker's
+    /// [`ConditionalScratch`] on the observed basket (validated per
+    /// request — a bad basket is a per-request error, never a poisoned
+    /// batch), then draw from the requested conditional sampler.  The
+    /// prepared tree/marginal are reused; only `2K`/`R`-sized state is
+    /// rebuilt.
+    fn run_conditional(
+        entry: &ModelEntry,
+        ws: &mut WorkerScratch,
+        req: &SampleRequest,
+        rng: &mut Xoshiro,
+        proposals: &mut u64,
+    ) -> Result<Vec<Vec<usize>>> {
+        if !req.kind.supports_conditioning() {
+            return Err(anyhow!(
+                "sampler '{}' does not support conditioning — use cholesky, \
+                 rejection, or mcmc for 'given'-bearing requests",
+                req.kind.as_str()
+            ));
+        }
+        let scratch = ws.conditional.get_or_insert_with(ConditionalScratch::new);
+        let z = &entry.marginal.z;
+        scratch
+            .condition(&entry.conditional, z, &req.given)
+            .map_err(|e| anyhow!("model '{}': {e}", entry.name))?;
+        match req.kind {
+            SamplerKind::Cholesky => Ok((0..req.n)
+                .map(|_| {
+                    *proposals += 1;
+                    scratch.sample_cholesky(z, rng).0
+                })
+                .collect()),
+            SamplerKind::Rejection => {
+                scratch.ensure_rejection(&entry.conditional, &entry.tree);
+                // conditioning can inflate the rejection rate far past the
+                // unconditional Theorem 2 bound; an infeasible basket gets
+                // a structured error instead of spinning this shard worker
+                // for millions of proposals (the comparison is inverted so
+                // a NaN expectation also refuses)
+                let u = scratch.expected_rejections();
+                if !(u <= MAX_CONDITIONAL_EXPECTED_REJECTIONS) {
+                    return Err(anyhow!(
+                        "conditional rejection is infeasible for this basket on model \
+                         '{}': expected {u:.3e} proposals per sample (cap {:.0e}) — \
+                         use mcmc or cholesky for this 'given'",
+                        entry.name,
+                        MAX_CONDITIONAL_EXPECTED_REJECTIONS
+                    ));
+                }
+                Ok((0..req.n)
+                    .map(|_| {
+                        let y = scratch.sample_rejection(z, &entry.tree, rng);
+                        *proposals += scratch.last_proposals as u64;
+                        y
+                    })
+                    .collect())
+            }
+            SamplerKind::Mcmc => {
+                scratch.ensure_mcmc(&entry.conditional, z, &entry.kernel);
+                Ok((0..req.n)
+                    .map(|_| {
+                        let (y, steps) = scratch.sample_mcmc(&entry.kernel, rng);
+                        *proposals += steps;
+                        y
+                    })
+                    .collect())
+            }
+            SamplerKind::Dense => unreachable!("rejected above"),
+        }
+    }
+
+    /// The unconditional per-request dispatch (the original hot path).
+    fn run_unconditional(
+        entry: &ModelEntry,
+        ws: &mut WorkerScratch,
+        req: &SampleRequest,
+        rng: &mut Xoshiro,
+        proposals: &mut u64,
+    ) -> Result<Vec<Vec<usize>>> {
+        match req.kind {
+            SamplerKind::Cholesky => {
+                let scratch = ws
+                    .cholesky
+                    .get_or_insert_with(|| CholeskyScratch::for_marginal(&entry.marginal));
+                Ok((0..req.n)
+                    .map(|_| {
+                        *proposals += 1;
+                        cholesky::sample_with_logprob_into(&entry.marginal, scratch, rng).0
+                    })
+                    .collect())
+            }
+            SamplerKind::Rejection => {
+                let scratch = ws.elementary.take().unwrap_or_else(|| {
+                    ElementaryScratch::with_rank(entry.tree.spectral().rank())
+                });
+                let mut s = RejectionSampler::with_scratch(
+                    &entry.kernel,
+                    &entry.proposal,
+                    &entry.tree,
+                    scratch,
+                );
+                let out = (0..req.n)
+                    .map(|_| {
+                        let y = s.sample(rng);
+                        *proposals += s.last_proposals as u64;
+                        y
+                    })
+                    .collect();
+                ws.elementary = Some(s.into_scratch());
+                Ok(out)
+            }
+            SamplerKind::Mcmc => match &entry.mcmc_seed {
+                None => Err(anyhow!(
+                    "model '{}' has no MCMC warm start: the kernel admits no size-{} \
+                     subset with positive probability (numerically rank-deficient); \
+                     use cholesky or rejection for this model",
+                    entry.name,
+                    entry.mcmc.size
+                )),
+                Some(seed) => {
+                    let mut s = McmcSampler::with_seed(&entry.kernel, entry.mcmc, seed.clone());
+                    Ok((0..req.n)
+                        .map(|_| {
+                            let y = s.sample(rng);
+                            *proposals += s.last_steps as u64;
+                            y
+                        })
+                        .collect())
+                }
+            },
+            SamplerKind::Dense => match entry.dense_prepared() {
+                Err(e) => Err(e),
+                Ok(prepared) => {
+                    let scratch = ws.dense.get_or_insert_with(DenseScratch::new);
+                    Ok((0..req.n)
+                        .map(|_| {
+                            *proposals += 1;
+                            dense::sample_into(&prepared, scratch, rng)
+                        })
+                        .collect())
+                }
+            },
         }
     }
 }
@@ -590,6 +703,7 @@ mod tests {
                     seed: Some(7),
                     kind,
                     deadline: None,
+                    given: Vec::new(),
                 })
                 .unwrap();
             assert_eq!(resp.samples.len(), 5, "{}", kind.as_str());
@@ -614,6 +728,75 @@ mod tests {
     }
 
     #[test]
+    fn conditional_requests_contain_given_and_are_counted() {
+        let svc = service_with_model(40, 4);
+        let given = vec![3usize, 17];
+        for kind in [SamplerKind::Cholesky, SamplerKind::Rejection, SamplerKind::Mcmc] {
+            let resp = svc
+                .sample(SampleRequest {
+                    model: "test".into(),
+                    n: 4,
+                    seed: Some(11),
+                    kind,
+                    deadline: None,
+                    given: given.clone(),
+                })
+                .unwrap();
+            assert_eq!(resp.samples.len(), 4, "{}", kind.as_str());
+            for y in &resp.samples {
+                assert!(
+                    given.iter().all(|g| y.contains(g)),
+                    "{} lost given: {y:?}",
+                    kind.as_str()
+                );
+                assert!(y.windows(2).all(|w| w[0] < w[1]), "unsorted: {y:?}");
+            }
+        }
+        assert_eq!(svc.metrics().conditional_count("test"), 3);
+        let snap = svc.metrics().snapshot();
+        let c = snap.get("test").and_then(|t| t.get("conditional")).cloned().unwrap();
+        assert_eq!(c.f64_or("requests", 0.0), 3.0);
+        assert_eq!(c.f64_or("samples", 0.0), 12.0);
+        assert_eq!(c.f64_or("given_sum", 0.0), 6.0);
+    }
+
+    #[test]
+    fn conditional_validation_errors_do_not_poison_batch() {
+        let svc = SamplingService::new(ServiceConfig {
+            shards: 1,
+            max_batch: 16,
+            ..Default::default()
+        });
+        let mut rng = Xoshiro::seeded(3);
+        svc.register("test", NdppKernel::random_ondpp(24, 4, &mut rng));
+        let req = |kind: SamplerKind, given: Vec<usize>| SampleRequest {
+            model: "test".into(),
+            n: 1,
+            seed: Some(1),
+            kind,
+            deadline: None,
+            given,
+        };
+        let rx_dup = svc.submit(req(SamplerKind::Cholesky, vec![2, 2]));
+        let rx_oob = svc.submit(req(SamplerKind::Cholesky, vec![99]));
+        let rx_big = svc.submit(req(SamplerKind::Cholesky, (0..9).collect()));
+        let rx_dense = svc.submit(req(SamplerKind::Dense, vec![1]));
+        let rx_ok = svc.submit(req(SamplerKind::Cholesky, vec![5]));
+        for (rx, frag) in [
+            (rx_dup, "more than once"),
+            (rx_oob, "outside the ground set"),
+            (rx_big, "exceeds the kernel rank"),
+            (rx_dense, "does not support conditioning"),
+        ] {
+            let err = rx.recv().unwrap().unwrap_err();
+            assert!(format!("{err:#}").contains(frag), "got: {err:#}");
+        }
+        // a bad basket never poisons its batch neighbors
+        let ok = rx_ok.recv().unwrap().unwrap();
+        assert!(ok.samples[0].contains(&5));
+    }
+
+    #[test]
     fn unknown_model_is_an_error() {
         let svc = service_with_model(24, 4);
         let err = svc.sample(SampleRequest {
@@ -622,6 +805,7 @@ mod tests {
             seed: Some(1),
             kind: SamplerKind::Cholesky,
             deadline: None,
+            given: Vec::new(),
         });
         assert!(err.is_err());
     }
@@ -635,6 +819,7 @@ mod tests {
             seed: Some(seed),
             kind: SamplerKind::Rejection,
             deadline: None,
+            given: Vec::new(),
         };
         // fire a pile of concurrent requests to force coalescing
         let rxs: Vec<_> = (0..20).map(|i| svc.submit(req(100 + (i % 4)))).collect();
@@ -659,6 +844,7 @@ mod tests {
                 seed: Some(500 + i),
                 kind: SamplerKind::Cholesky,
                 deadline: None,
+                given: Vec::new(),
             })
             .collect();
         let responses = svc.sample_batch(reqs);
@@ -674,6 +860,7 @@ mod tests {
                     seed: Some(500 + i as u64),
                     kind: SamplerKind::Cholesky,
                     deadline: None,
+                    given: Vec::new(),
                 })
                 .unwrap();
             assert_eq!(r.samples, single.samples);
@@ -698,6 +885,7 @@ mod tests {
             seed: Some(1),
             kind: SamplerKind::Dense,
             deadline: None,
+            given: Vec::new(),
         });
         let chol_rx = svc.submit(SampleRequest {
             model: "big".into(),
@@ -705,6 +893,7 @@ mod tests {
             seed: Some(2),
             kind: SamplerKind::Cholesky,
             deadline: None,
+            given: Vec::new(),
         });
         let err = dense_rx.recv().unwrap();
         assert!(err.is_err(), "oversized dense request must be rejected");
@@ -739,6 +928,7 @@ mod tests {
                 seed: None,
                 kind: SamplerKind::Cholesky,
                 deadline: None,
+                given: Vec::new(),
             })
             .unwrap();
         }
@@ -761,6 +951,7 @@ mod tests {
                     seed: Some(i),
                     kind: SamplerKind::Cholesky,
                     deadline: None,
+                    given: Vec::new(),
                 })
             })
             .collect();

@@ -13,9 +13,13 @@
 //! the whole catalog is one `O(M K^2)` pass (the same shape as the
 //! `bilinear_diag` Pallas kernel; the rust-native path uses the identical
 //! blocked contraction).
+//!
+//! The Schur-complement machinery itself lives in
+//! [`crate::ndpp::conditional`] (the conditional-sampling subsystem shares
+//! it); this module only layers the §6.1 metrics on top.
 
-use crate::linalg::{lu::Lu, Matrix};
-use crate::ndpp::{probability, NdppKernel};
+use crate::linalg::Matrix;
+use crate::ndpp::{conditional, probability, NdppKernel};
 use crate::rng::Xoshiro;
 
 /// Summary of all §6.1 metrics for one model/dataset pair.
@@ -29,37 +33,20 @@ pub struct EvalReport {
 /// The conditioned inner matrix `G_J = X - X Z_J^T L_J^{-1} Z_J X`, such
 /// that `p_{i,J} = z_i^T G_J z_i`.  Returns `None` when `L_J` is singular
 /// (e.g. `|J| > 2K`).
+///
+/// Thin compatibility wrapper over
+/// [`crate::ndpp::conditional::conditional_inner_zx`], the single source
+/// of truth for the Schur reduction.
 pub fn conditional_inner(kernel: &NdppKernel, j_set: &[usize]) -> Option<Matrix> {
-    let x = kernel.x_matrix();
-    if j_set.is_empty() {
-        return Some(x);
-    }
-    let z = kernel.z();
-    let z_j = z.gather_rows(j_set); // |J| x 2K
-    let zx = z_j.matmul(&x); // |J| x 2K
-    let l_j = zx.matmul_t(&z_j); // |J| x |J|
-    let lu = Lu::factor(&l_j);
-    if lu.singular || lu.det().abs() < 1e-250 {
-        return None;
-    }
-    // X Z_J^T L_J^{-1} Z_J X — note X is NONSYMMETRIC, so the left factor
-    // is X Z_J^T, not (Z_J X)^T = X^T Z_J^T.
-    let inv = lu.inverse();
-    let xzt = x.matmul_t(&z_j); // 2K x |J|
-    let t = xzt.matmul(&inv.matmul(&zx)); // 2K x 2K
-    Some(x.sub(&t))
+    conditional::conditional_inner_zx(&kernel.z(), &kernel.x_matrix(), j_set)
+        .ok()
+        .map(|(g, _)| g)
 }
 
 /// Next-item scores for every catalog item given observed `J`.
 pub fn conditional_scores(kernel: &NdppKernel, j_set: &[usize]) -> Option<Vec<f64>> {
-    let g = conditional_inner(kernel, j_set)?;
-    let z = kernel.z();
-    let zg = z.matmul(&g);
-    Some(
-        (0..kernel.m())
-            .map(|i| crate::linalg::matrix::dot(zg.row(i), z.row(i)))
-            .collect(),
-    )
+    let cond = conditional::ConditionedKernel::build(kernel, j_set).ok()?;
+    Some(cond.scores(&kernel.z()))
 }
 
 /// Mean percentile rank (Appendix B.1): for each test basket, hold out one

@@ -112,6 +112,49 @@
 //! rows carry `requests_per_s` and latency percentiles per
 //! (algorithm × client-count) config.
 //!
+//! ## Conditional sampling / basket completion
+//!
+//! The predictive workload behind NDPPs (paper §6.1) is next-item and
+//! basket completion: reason about `Y ⊇ J` for an observed partial basket
+//! `J`.  The [`ndpp::conditional`] module reduces conditioning to a
+//! `2K x 2K` Schur complement `G_J = X − X Z_J^T L_J^{-1} Z_J X`
+//! (`O(|J| K^2 + |J|^3)`, no `M`-sized work), and
+//! [`sampler::conditional`] drives all three fast sampler families from
+//! it:
+//!
+//! * **Conditional Cholesky** (`algo=cholesky` + `given`) — exact,
+//!   `O(M K^2)`: the conditioned marginal `W_J = G_J (I + Gram·G_J)^{-1}`
+//!   uses the registration-time catalog Gram, then the standard sweep
+//!   skips `J`.  With `given=[]` it is byte-identical to the
+//!   unconditional sampler.  The default: always correct, linear time.
+//! * **Conditional rejection** (`algo=rejection` + `given`) — sublinear:
+//!   the prepared [`sampler::SampleTree`]'s node statistics are sums of
+//!   `v_j v_j^T` that do not depend on the kernel's inner matrix, so a
+//!   conditioned proposal reuses the tree **verbatim**; per request only
+//!   an `R x R` eigendecomposition is rebuilt (sym part + polar of the
+//!   skew part of `G_J`, expressed in the prepared eigenbasis).  Prefer
+//!   it when `M` is large and the conditional expected rejection count
+//!   ([`sampler::ConditionalScratch::expected_rejections`]) stays small;
+//!   note conditioning can grow `U` beyond the unconditional Theorem 2
+//!   bound, so check it per basket — the serving pipeline does this for
+//!   you and refuses baskets whose conditioned `U` exceeds `1e4` with a
+//!   structured error pointing at MCMC.
+//! * **Conditional fixed-size MCMC** (`algo=mcmc` + `given`) — an
+//!   [`ndpp::probability::IncrementalMinor`] seeded from `J` plus a
+//!   deterministic greedy completion; the up-down chain swaps only
+//!   non-`J` positions.  Use it when the conditional rejection rate
+//!   diverges.
+//!
+//! On the wire, every `sample` / `batch` entry takes a `given: [items]`
+//! field (validated per request: distinct, `< M`, `|given| <= 2K`,
+//! nonsingular `L_J`; errors answer that entry alone).  The `models` op
+//! reports each model's conditioning audit (`max_given = 2K`, supported
+//! samplers).  CLI: `ndpp sample --given 3,17,42`, and `ndpp complete`
+//! ranks top next-item scores alongside sampled sets.  Scoring
+//! (`learn::eval`'s MPR/AUC) consumes the same
+//! [`ndpp::ConditionedKernel`], so serving and evaluation can never
+//! drift.  See `examples/basket_completion.rs` for the full walkthrough.
+//!
 //! ## Serving at scale
 //!
 //! [`coordinator::SamplingService`] is a sharded pipeline built on the
@@ -168,11 +211,11 @@ pub mod util;
 /// Convenient re-exports of the main public types.
 pub mod prelude {
     pub use crate::linalg::{BackendKind, Matrix};
-    pub use crate::ndpp::{NdppKernel, Proposal};
+    pub use crate::ndpp::{ConditionedKernel, NdppKernel, Proposal};
     pub use crate::rng::Xoshiro;
     pub use crate::sampler::{
-        CholeskySampler, DenseCholeskySampler, McmcConfig, McmcSampler, RejectionSampler,
-        SampleTree, Sampler, TreeConfig,
+        CholeskySampler, ConditionalPrepared, ConditionalScratch, DenseCholeskySampler,
+        McmcConfig, McmcSampler, RejectionSampler, SampleTree, Sampler, TreeConfig,
     };
 }
 

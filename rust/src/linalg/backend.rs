@@ -475,8 +475,10 @@ fn blas2_threads(elems: usize, rows: usize) -> usize {
 /// boundaries depend only on `threads` (itself a pure function of shape
 /// and configuration), never on scheduling, so results are deterministic.
 /// Both the blocked and simd backends route every banded primitive
-/// through this driver.
-fn fan_out_rows(
+/// through this driver, and other subsystems with independent row-shaped
+/// work units (e.g. [`crate::sampler::SampleTree`]'s leaf statistics) may
+/// reuse it — pair it with [`configured_threads`] for sizing.
+pub fn fan_out_rows(
     c: &mut [f64],
     n: usize,
     rows: usize,

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! ndpp sample     draw samples from a kernel (cholesky | rejection | mcmc | dense)
+//! ndpp complete   basket completion: condition on --given, rank + sample
 //! ndpp serve      run the TCP sampling service
 //! ndpp train      learn an ONDPP kernel from a basket dataset (AOT/PJRT)
 //! ndpp gen-data   generate a synthetic basket dataset
@@ -48,6 +49,7 @@ fn run(argv: &[String]) -> Result<()> {
     let rest = &argv[1..];
     match cmd.as_str() {
         "sample" => cmd_sample(rest),
+        "complete" => cmd_complete(rest),
         "serve" => cmd_serve(rest),
         "train" => cmd_train(rest),
         "gen-data" => cmd_gen_data(rest),
@@ -67,7 +69,8 @@ fn print_usage() {
         "ndpp — scalable sampling for nonsymmetric determinantal point processes\n\
          (ICLR 2022 reproduction; see README.md)\n\n\
          commands:\n\
-         \x20 sample     draw samples from a random/loaded kernel\n\
+         \x20 sample     draw samples from a random/loaded kernel (--given conditions)\n\
+         \x20 complete   basket completion: top next-item scores + conditional samples\n\
          \x20 serve      run the TCP sampling service\n\
          \x20 train      learn an ONDPP kernel (AOT train_step via PJRT)\n\
          \x20 gen-data   generate a synthetic basket dataset\n\
@@ -96,9 +99,25 @@ const SAMPLE_SPECS: &[Spec] = &[
     Spec::opt_default("n", "5", "number of samples"),
     Spec::opt_default("seed", "0", "rng seed"),
     Spec::opt_default("algo", "rejection", "cholesky | rejection | mcmc | dense | both | all"),
+    Spec::opt(
+        "given",
+        "comma-separated observed items; samples are conditioned on containing them",
+    ),
     Spec::opt("backend", BACKEND_HELP),
     Spec::flag("help", "show help"),
 ];
+
+/// Parse `--given 3,17,42` into item indices.
+fn parse_given_arg(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|p| p.trim())
+        .filter(|p| !p.is_empty())
+        .map(|p| {
+            p.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad --given item '{p}' (want an item index)"))
+        })
+        .collect()
+}
 
 fn cmd_sample(argv: &[String]) -> Result<()> {
     let a = Args::parse(argv, SAMPLE_SPECS)?;
@@ -128,6 +147,14 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
             experiments::tablelike_kernel(m, k, &mut rng)
         }
     };
+
+    let given = match a.get("given") {
+        Some(g) => parse_given_arg(g)?,
+        None => Vec::new(),
+    };
+    if !given.is_empty() {
+        return sample_conditional(&kernel, &given, &algo, n, &rng);
+    }
 
     if algo == "cholesky" || algo == "both" || algo == "all" {
         let mut s = CholeskySampler::new(&kernel);
@@ -183,6 +210,139 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
                 println!("dense[{i}]: {:?}", s.sample(&mut r));
             }
         }
+    }
+    Ok(())
+}
+
+/// `ndpp sample --given …` — conditional sampling through the
+/// basket-completion subsystem: condition once, then drive the requested
+/// sampler families from the shared conditioned state.
+fn sample_conditional(
+    kernel: &ndpp::ndpp::NdppKernel,
+    given: &[usize],
+    algo: &str,
+    n: usize,
+    rng: &Xoshiro,
+) -> Result<()> {
+    use ndpp::sampler::{ConditionalPrepared, ConditionalScratch};
+    let marginal = MarginalKernel::build(kernel);
+    let proposal = Proposal::build(kernel);
+    let tree = SampleTree::build(&proposal.spectral(), TreeConfig::default());
+    let prep = ConditionalPrepared::build(kernel, &marginal, &tree);
+    let mut scratch = ConditionalScratch::new();
+    scratch
+        .condition(&prep, &marginal.z, given)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "conditioned on {:?} (E[completion size] = {:.2})",
+        scratch.given(),
+        scratch.expected_completion_size(&prep)
+    );
+    if algo == "cholesky" || algo == "both" || algo == "all" {
+        let mut r = rng.split(1);
+        for i in 0..n {
+            let (y, lp) = scratch.sample_cholesky(&marginal.z, &mut r);
+            println!("cholesky[{i}] (logp {lp:.2}): {y:?}");
+        }
+    }
+    if algo == "rejection" || algo == "both" || algo == "all" {
+        scratch.ensure_rejection(&prep, &tree);
+        let mut r = rng.split(2);
+        for i in 0..n {
+            let y = scratch.sample_rejection(&marginal.z, &tree, &mut r);
+            println!("rejection[{i}] ({} proposals): {y:?}", scratch.last_proposals);
+        }
+        println!("conditional E[rejections]: {:.2}", scratch.expected_rejections());
+    }
+    if algo == "mcmc" || algo == "all" {
+        scratch.ensure_mcmc(&prep, &marginal.z, kernel);
+        let mut r = rng.split(3);
+        for i in 0..n {
+            let (y, _) = scratch.sample_mcmc(kernel, &mut r);
+            println!("mcmc[{i}] (|Y| = {}): {y:?}", y.len());
+        }
+        let cfg = scratch.mcmc_config();
+        println!("mcmc: completion size {} | burn-in {}", cfg.size, cfg.burn_in);
+    }
+    if algo == "dense" || algo == "all" {
+        println!("dense: conditioning is not supported (use cholesky | rejection | mcmc)");
+    }
+    Ok(())
+}
+
+const COMPLETE_SPECS: &[Spec] = &[
+    Spec::opt("kernel", "load a saved kernel file instead of a random one"),
+    Spec::opt_default("m", "4096", "ground-set size (random kernel)"),
+    Spec::opt_default("k", "32", "per-part kernel rank K"),
+    Spec::opt("given", "comma-separated observed basket (required)"),
+    Spec::opt_default("top", "10", "how many top-scoring completions to rank"),
+    Spec::opt_default("n", "3", "how many conditional set samples to draw"),
+    Spec::opt_default("algo", "cholesky", "cholesky | rejection | mcmc (set sampler)"),
+    Spec::opt_default("seed", "0", "rng seed"),
+    Spec::opt("backend", BACKEND_HELP),
+    Spec::flag("help", "show help"),
+];
+
+/// `ndpp complete` — the basket-completion surface: rank every catalog
+/// item by its next-item score `det(L_{J ∪ i})/det(L_J)` and draw a few
+/// full conditional sets alongside.
+fn cmd_complete(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, COMPLETE_SPECS)?;
+    if a.flag("help") {
+        print!(
+            "{}",
+            help_text("complete", "rank + sample basket completions", COMPLETE_SPECS)
+        );
+        return Ok(());
+    }
+    apply_backend_flag(&a)?;
+    let Some(gstr) = a.get("given") else {
+        bail!("--given is required (e.g. --given 3,17,42)");
+    };
+    let given = parse_given_arg(gstr)?;
+    if given.is_empty() {
+        bail!("--given must name at least one observed item");
+    }
+    let seed = a.u64_or("seed", 0)?;
+    let mut rng = Xoshiro::seeded(seed);
+    let kernel = match a.get("kernel") {
+        Some(path) => {
+            let k = ndpp::ndpp::NdppKernel::load(path)?;
+            println!("loaded kernel from {path}: M={}, 2K={}", k.m(), 2 * k.k());
+            k
+        }
+        None => {
+            let (m, k) = (a.usize_or("m", 4096)?, a.usize_or("k", 32)?);
+            println!("random ONDPP kernel: M={m}, 2K={}", 2 * k);
+            experiments::tablelike_kernel(m, k, &mut rng)
+        }
+    };
+
+    use ndpp::ndpp::ConditionedKernel;
+    let z = kernel.z();
+    let cond = ConditionedKernel::build(&kernel, &given).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let scores = cond.scores(&z);
+    let mut ranked: Vec<(usize, f64)> = scores
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !cond.given().contains(i))
+        .map(|(i, &s)| (i, s))
+        .collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+    let top = a.usize_or("top", 10)?;
+    println!("\ntop {} completions of {:?}:", top.min(ranked.len()), cond.given());
+    for (rank, (item, score)) in ranked.iter().take(top).enumerate() {
+        println!("  #{:<3} item {:<8} score {:.6}", rank + 1, item, score);
+    }
+
+    let n = a.usize_or("n", 3)?;
+    if n > 0 {
+        let algo = a.str_or("algo", "cholesky");
+        if !["cholesky", "rejection", "mcmc"].contains(&algo.as_str()) {
+            bail!("unknown --algo '{algo}' (cholesky | rejection | mcmc)");
+        }
+        println!("\nsampled completions ({algo}):");
+        sample_conditional(&kernel, &given, &algo, n, &rng)?;
     }
     Ok(())
 }

@@ -12,7 +12,11 @@
 //!   tree-based sampling, and Theorem 2's expected rejection count.
 //! * [`probability`] — subset log-probabilities under both `L` and `L̂`
 //!   (the acceptance-ratio arithmetic of Algorithm 2).
+//! * [`conditional`] — Schur-complement conditioning on an observed
+//!   partial basket (`G_J = X − X Z_J^T L_J^{-1} Z_J X`), the shared core
+//!   of basket-completion scoring and conditional sampling.
 
+pub mod conditional;
 pub mod io;
 pub mod kernel;
 pub mod marginal;
@@ -20,6 +24,7 @@ pub mod probability;
 pub mod proposal;
 pub mod youla;
 
+pub use conditional::{ConditionError, ConditionedKernel};
 pub use kernel::NdppKernel;
 pub use marginal::MarginalKernel;
 pub use proposal::{Proposal, SpectralDpp};

@@ -88,15 +88,36 @@ pub fn sample_with_logprob_into(
     scratch: &mut CholeskyScratch,
     rng: &mut Xoshiro,
 ) -> (Vec<usize>, f64) {
-    let m = marginal.m();
-    let k2 = marginal.k2();
+    sweep_skipping(&marginal.z, &marginal.w, scratch, &[], rng)
+}
+
+/// The Cholesky sweep over an explicit `(Z, W)` pair, skipping the sorted
+/// items in `skip` entirely (no uniform draw, no rank-1 update) — the
+/// conditional sampler's entry point, where `W` is the conditioned
+/// marginal inner matrix and `skip` the observed basket.  With an empty
+/// `skip` this is byte-identical to the unconditional sweep (identical
+/// arithmetic on the identical rng stream).
+pub(crate) fn sweep_skipping(
+    z: &Matrix,
+    w: &Matrix,
+    scratch: &mut CholeskyScratch,
+    skip: &[usize],
+    rng: &mut Xoshiro,
+) -> (Vec<usize>, f64) {
+    let m = z.rows;
+    let k2 = z.cols;
     scratch.ensure(k2);
-    scratch.q.data.copy_from_slice(&marginal.w.data);
+    scratch.q.data.copy_from_slice(&w.data);
     let mut out = Vec::new();
     let mut logp = 0.0;
+    let mut skip_at = 0usize;
 
     for i in 0..m {
-        let zi = marginal.z.row(i);
+        if skip_at < skip.len() && skip[skip_at] == i {
+            skip_at += 1;
+            continue;
+        }
+        let zi = z.row(i);
         // fused pass over Q's rows: qz[r] = <Q_r, z_i> and
         // zq += z_i[r] * Q_r  (one traversal instead of two — §Perf)
         scratch.zq.iter_mut().for_each(|x| *x = 0.0);

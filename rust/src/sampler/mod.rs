@@ -10,7 +10,10 @@
 //! plus the building blocks: [`elementary`] (elementary-DPP sampling from a
 //! spectral kernel, the mixture components of Eq. (10)) and [`tree`]
 //! (Gillenwater et al. 2019's binary tree with the paper's improved
-//! `O(k^2)`-per-node inner products, Proposition 1).
+//! `O(k^2)`-per-node inner products, Proposition 1), and the
+//! [`conditional`] subsystem, which drives all three fast families from a
+//! Schur-complement [`crate::ndpp::ConditionedKernel`] for
+//! basket-completion workloads (observed items `J`, sample `Y ⊇ J`).
 //!
 //! All samplers implement [`Sampler`] and draw randomness from an explicit
 //! [`Xoshiro`] stream, so every sample is reproducible from `(kernel, seed)`.
@@ -37,6 +40,7 @@
 //! per (worker, model).
 
 pub mod cholesky;
+pub mod conditional;
 pub mod dense;
 pub mod elementary;
 pub mod fixed_size;
@@ -45,6 +49,7 @@ pub mod rejection;
 pub mod tree;
 
 pub use cholesky::{CholeskySampler, CholeskyScratch};
+pub use conditional::{ConditionalPrepared, ConditionalScratch};
 pub use dense::{DenseCholeskySampler, DensePrepared, DenseScratch};
 pub use elementary::ElementaryScratch;
 pub use fixed_size::{sample_fixed_size, size_distribution};

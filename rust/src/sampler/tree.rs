@@ -22,11 +22,27 @@
 //! DESIGN.md §4) at a negligible latency cost, and is ablated in
 //! `benches/ablation.rs`.
 
-use crate::linalg::backend::Backend as _;
+use crate::linalg::backend::{self, Backend as _};
 use crate::linalg::Matrix;
 use crate::ndpp::proposal::SpectralDpp;
 use crate::rng::Xoshiro;
 use crate::sampler::elementary::{item_score, select_elementary_into, ElementaryScratch};
+
+thread_local! {
+    /// Count of [`SampleTree::build`] calls on this thread — the
+    /// observable half of the conditional subsystem's prep-free contract:
+    /// conditional rejection sampling must reuse a prepared tree verbatim,
+    /// so drawing any number of `given`-bearing samples leaves the calling
+    /// thread's counter unchanged (asserted in `tests/conditional.rs`).
+    /// Thread-local so concurrently running tests cannot race the
+    /// assertion.
+    static BUILD_COUNT: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of trees built *by the calling thread* so far.
+pub fn build_count() -> u64 {
+    BUILD_COUNT.with(|c| c.get())
+}
 
 /// Tree layout parameters.
 #[derive(Debug, Clone, Copy)]
@@ -65,34 +81,81 @@ pub struct SampleTree {
 impl SampleTree {
     /// `ConstructTree` (Algorithm 3 lines 10-11): `O(M R^2)` work in the
     /// leaf sweep, `O((M / leaf_size) R^2)` for internal sums.
+    ///
+    /// The leaf SYRKs are mutually independent, so they are fanned out
+    /// across the backend's worker threads
+    /// ([`backend::fan_out_rows`]) above a small work threshold;
+    /// band boundaries are a pure function of shape and thread
+    /// configuration and each leaf's statistic is the same backend SYRK
+    /// call either way, so the tree is bit-identical to a serial build.
     pub fn build(spectral: &SpectralDpp, config: TreeConfig) -> SampleTree {
         let m = spectral.m();
         assert!(m > 0, "empty ground set");
+        BUILD_COUNT.with(|c| c.set(c.get() + 1));
         let leaf = config.leaf_size.max(1);
-        let mut nodes: Vec<Node> = Vec::with_capacity(2 * m.div_ceil(leaf));
-        let root = Self::branch(spectral, 0, m, leaf, &mut nodes);
+        // leaf ranges first (same splits as the recursion, left-first)
+        let mut leaves: Vec<(usize, usize)> = Vec::with_capacity(m.div_ceil(leaf));
+        Self::collect_leaves(0, m, leaf, &mut leaves);
+        let r = spectral.rank();
+        let rr = r * r;
+        let mut sigmas = vec![0.0f64; leaves.len() * rr];
+        if rr > 0 {
+            // total leaf work ~ M R^2 multiply-adds; fan out only when it
+            // dwarfs thread-spawn overhead (same spirit as the backend's
+            // own GEMM threshold)
+            let threads = if m * rr >= 4_000_000 {
+                backend::configured_threads()
+            } else {
+                1
+            };
+            let leaves_ref = &leaves;
+            backend::fan_out_rows(&mut sigmas, rr, leaves.len(), threads, |chunk, l0, l1| {
+                for (off, li) in (l0..l1).enumerate() {
+                    let (s, e) = leaves_ref[li];
+                    let sig = backend::active().syrk(&spectral.vecs, s, e);
+                    chunk[off * rr..(off + 1) * rr].copy_from_slice(&sig.data);
+                }
+            });
+        }
+        let mut nodes: Vec<Node> = Vec::with_capacity(2 * leaves.len());
+        let mut next_leaf = 0usize;
+        let root = Self::branch(0, m, leaf, &mut nodes, &sigmas, rr, &mut next_leaf);
+        debug_assert_eq!(next_leaf, leaves.len());
         SampleTree { spectral: spectral.clone(), nodes, root, config }
     }
 
+    /// The leaf ranges of the recursion in DFS (left-first) order.
+    fn collect_leaves(start: usize, end: usize, leaf: usize, out: &mut Vec<(usize, usize)>) {
+        if end - start <= leaf {
+            out.push((start, end));
+            return;
+        }
+        let mid = start + (end - start) / 2;
+        Self::collect_leaves(start, mid, leaf, out);
+        Self::collect_leaves(mid, end, leaf, out);
+    }
+
     fn branch(
-        spectral: &SpectralDpp,
         start: usize,
         end: usize,
         leaf: usize,
         nodes: &mut Vec<Node>,
+        leaf_sigmas: &[f64],
+        rr: usize,
+        next_leaf: &mut usize,
     ) -> usize {
         if end - start <= leaf {
-            // bucket leaf: Sigma = sum of z_j z_j^T over the bucket — the
-            // backend's row-range SYRK, flattened row-major
-            let sigma = crate::linalg::backend::active()
-                .syrk(&spectral.vecs, start, end)
-                .data;
+            // bucket leaf: Sigma = sum of z_j z_j^T over the bucket —
+            // precomputed above (backend row-range SYRK, flattened
+            // row-major), consumed in the same DFS order it was laid out
+            let sigma = leaf_sigmas[*next_leaf * rr..(*next_leaf + 1) * rr].to_vec();
+            *next_leaf += 1;
             nodes.push(Node { start, end, sigma, left: NONE, right: NONE });
             return nodes.len() - 1;
         }
         let mid = start + (end - start) / 2;
-        let l = Self::branch(spectral, start, mid, leaf, nodes);
-        let rgt = Self::branch(spectral, mid, end, leaf, nodes);
+        let l = Self::branch(start, mid, leaf, nodes, leaf_sigmas, rr, next_leaf);
+        let rgt = Self::branch(mid, end, leaf, nodes, leaf_sigmas, rr, next_leaf);
         let mut sigma = nodes[l].sigma.clone();
         for (s, &x) in sigma.iter_mut().zip(&nodes[rgt].sigma) {
             *s += x;
@@ -233,6 +296,161 @@ impl SampleTree {
                 self.sample_item(e, q, scores, rng)
             };
             scratch.condition_on(self.spectral.vecs.row(j), e);
+            y.push(j);
+        }
+        y.sort_unstable();
+        y
+    }
+
+    // ---- projected (conditional) descent --------------------------------
+    //
+    // The conditional rejection sampler (`sampler::conditional`) samples a
+    // *different* symmetric DPP over the same item features: the prepared
+    // proposal conditioned/recombined per request.  Its elementary
+    // components are eigenvectors of an `R x R` inner matrix, i.e. linear
+    // combinations of the prepared eigenbasis — so instead of an
+    // `|E| x |E|` projector over selected coordinates, the descent carries
+    // a full-rank `R x R` projector `Q̃` (the selected subspace expressed
+    // in the prepared basis).  Node probabilities become the *unrestricted*
+    // inner products `<Q̃, Sigma_A>`, which reuse the prepared node
+    // statistics verbatim: conditioning never touches the tree.
+
+    /// `<Q̃, Sigma_node>` over the full `R x R` statistics.
+    #[inline]
+    fn sigma_inner_projected(&self, node: usize, q: &Matrix) -> f64 {
+        let r = self.spectral.rank();
+        let sigma = &self.nodes[node].sigma;
+        let mut acc = 0.0;
+        for a in 0..r {
+            let qrow = q.row(a);
+            let base = a * r;
+            for b in 0..r {
+                acc += qrow[b] * sigma[base + b];
+            }
+        }
+        acc
+    }
+
+    /// Score of one item under the projector: `v_j^T Q̃ v_j`.
+    #[inline]
+    fn item_score_projected(&self, j: usize, q: &Matrix) -> f64 {
+        let row = self.spectral.vecs.row(j);
+        let r = row.len();
+        let mut acc = 0.0;
+        for a in 0..r {
+            let va = row[a];
+            if va == 0.0 {
+                continue;
+            }
+            let qrow = q.row(a);
+            let mut inner = 0.0;
+            for b in 0..r {
+                inner += qrow[b] * row[b];
+            }
+            acc += va * inner;
+        }
+        acc
+    }
+
+    /// One tree descent under a full-rank projector `Q̃`.  Items in
+    /// `excluded` (sorted) carry exactly-zero mass under a conditioned
+    /// projector; their scores are clamped to zero against floating-point
+    /// leakage, and the measure-zero dead-bucket fallback never returns
+    /// them.
+    fn sample_item_projected(
+        &self,
+        q: &Matrix,
+        scores: &mut Vec<f64>,
+        excluded: &[usize],
+        rng: &mut Xoshiro,
+    ) -> usize {
+        let mut node = self.root;
+        loop {
+            let n = &self.nodes[node];
+            if n.left == NONE {
+                scores.clear();
+                scores.extend((n.start..n.end).map(|j| {
+                    if excluded.binary_search(&j).is_ok() {
+                        0.0
+                    } else {
+                        self.item_score_projected(j, q).max(0.0)
+                    }
+                }));
+                let total: f64 = scores.iter().sum();
+                if total > 0.0 {
+                    return n.start + rng.weighted(scores);
+                }
+                // numerically-dead bucket (rounding only): uniform over the
+                // bucket's admissible items, walking forward when the
+                // bucket is entirely excluded
+                let free: Vec<usize> = (n.start..n.end)
+                    .filter(|j| excluded.binary_search(j).is_err())
+                    .collect();
+                if !free.is_empty() {
+                    return free[rng.below(free.len())];
+                }
+                let m = self.m();
+                let mut j = n.end % m;
+                while excluded.binary_search(&j).is_ok() {
+                    j = (j + 1) % m;
+                }
+                return j;
+            }
+            let pl = self.sigma_inner_projected(n.left, q).max(0.0);
+            let pr = self.sigma_inner_projected(n.right, q).max(0.0);
+            let total = pl + pr;
+            node = if total <= 0.0 {
+                if rng.uniform() < 0.5 { n.left } else { n.right }
+            } else if rng.uniform() <= pl / total {
+                n.left
+            } else {
+                n.right
+            };
+        }
+    }
+
+    /// Draw exactly `count` items from the elementary DPP whose selected
+    /// subspace is encoded in the `R x R` projector `q` (initialized by
+    /// the caller to `U_E U_E^T` for selected eigenvector columns `U_E` in
+    /// the prepared basis).  After each pick with feature row `v`, `q` is
+    /// downdated in place with the same Gram–Schmidt step as
+    /// [`ElementaryScratch::condition_on`]:
+    /// `Q̃ <- Q̃ − (Q̃ v)(Q̃ v)^T / (v^T Q̃ v)`.
+    ///
+    /// `qa` and `scores` are caller-owned buffers (no allocation here
+    /// beyond the returned subset); `excluded` (sorted) is never sampled.
+    pub fn sample_projected_with(
+        &self,
+        q: &mut Matrix,
+        count: usize,
+        excluded: &[usize],
+        qa: &mut Vec<f64>,
+        scores: &mut Vec<f64>,
+        rng: &mut Xoshiro,
+    ) -> Vec<usize> {
+        let r = self.spectral.rank();
+        debug_assert_eq!((q.rows, q.cols), (r, r));
+        let mut y: Vec<usize> = Vec::with_capacity(count);
+        for _ in 0..count {
+            let j = self.sample_item_projected(q, scores, excluded, rng);
+            // downdate: qa = Q̃ v_j (Q̃ symmetric), p = v_j^T qa
+            let row = self.spectral.vecs.row(j);
+            qa.clear();
+            for a in 0..r {
+                qa.push(crate::linalg::matrix::dot(q.row(a), row));
+            }
+            let p: f64 = crate::linalg::matrix::dot(row, qa);
+            let inv = 1.0 / p.max(1e-300);
+            for a in 0..r {
+                let f = qa[a] * inv;
+                if f == 0.0 {
+                    continue;
+                }
+                let qrow = q.row_mut(a);
+                for (qv, &qb) in qrow.iter_mut().zip(qa.iter()) {
+                    *qv -= f * qb;
+                }
+            }
             y.push(j);
         }
         y.sort_unstable();

@@ -1,0 +1,482 @@
+//! Conditional sampling (basket completion) end to end.
+//!
+//! * all three conditional samplers against the brute-force
+//!   `Pr(Y | J ⊆ Y)` enumeration (TV + calibrated chi-square);
+//! * conditional rejection's prep-free contract: the prepared
+//!   `SampleTree` is reused verbatim — zero tree builds while sampling;
+//! * empty-`given` ≡ unconditional byte-identity;
+//! * structural error paths (`|J| > 2K`, singular `L_J`, bad indices)
+//!   as per-entry errors that never poison a batch, direct and over TCP;
+//! * replay determinism through the sharded service (shard counts 1/2/8,
+//!   batch vs single submission).
+
+use std::sync::Arc;
+
+use ndpp::coordinator::{server, SampleRequest, SamplerKind, SamplingService, ServiceConfig};
+use ndpp::ndpp::conditional::ConditionError;
+use ndpp::ndpp::{probability, ConditionedKernel, MarginalKernel, NdppKernel, Proposal};
+use ndpp::rng::Xoshiro;
+use ndpp::sampler::{
+    cholesky, tree, CholeskyScratch, ConditionalPrepared, ConditionalScratch, SampleTree,
+    TreeConfig,
+};
+use ndpp::util::json::Json;
+use ndpp::util::testing::{chi_square_gof, conditioned_on_size, empirical_from, tv};
+
+const N: usize = 30_000;
+const TV_LIMIT: f64 = 0.035;
+
+/// `Pr(Y | J ⊆ Y)`: the enumerated subset distribution restricted to
+/// supersets of `J` and renormalized — the exact law every conditional
+/// sampler must match (samplers return the full set `J ∪ S`).
+fn superset_conditioned(probs: &[f64], j: &[usize]) -> Vec<f64> {
+    let jmask: usize = j.iter().map(|&i| 1usize << i).sum();
+    let mut out = vec![0.0; probs.len()];
+    let mut mass = 0.0;
+    for (mask, &p) in probs.iter().enumerate() {
+        if mask & jmask == jmask {
+            out[mask] = p;
+            mass += p;
+        }
+    }
+    assert!(mass > 0.0, "Pr(J ⊆ Y) = 0 — bad fixture");
+    for o in &mut out {
+        *o /= mass;
+    }
+    out
+}
+
+fn prepared(kernel: &NdppKernel) -> (MarginalKernel, SampleTree, ConditionalPrepared) {
+    let marginal = MarginalKernel::build(kernel);
+    let proposal = Proposal::build(kernel);
+    let tree = SampleTree::build(&proposal.spectral(), TreeConfig { leaf_size: 2 });
+    let prep = ConditionalPrepared::build(kernel, &marginal, &tree);
+    (marginal, tree, prep)
+}
+
+fn check(name: &str, freq: &[f64], want: &[f64]) {
+    let d = tv(freq, want);
+    assert!(d < TV_LIMIT, "{name}: tv={d}");
+    let cs = chi_square_gof(freq, want, N);
+    assert!(
+        cs.passes(),
+        "{name}: chi2 stat {:.1} > crit {:.1} (df {})",
+        cs.stat,
+        cs.crit_999,
+        cs.df
+    );
+}
+
+fn conformance_on(kernel: &NdppKernel, m: usize, j: &[usize], seed: u64) {
+    let mut rng = Xoshiro::seeded(seed);
+    let probs = probability::enumerate_probs(kernel);
+    let want = superset_conditioned(&probs, j);
+    let (marginal, tree, prep) = prepared(kernel);
+    let mut scratch = ConditionalScratch::new();
+    scratch.condition(&prep, &marginal.z, j).unwrap();
+
+    // conditional Cholesky — exact linear-time sweep
+    let f_chol = empirical_from(m, N, &mut rng, |r| scratch.sample_cholesky(&marginal.z, r).0);
+    check("conditional-cholesky", &f_chol, &want);
+
+    // conditional rejection — tree-reuse proposal, with the prep-free
+    // contract pinned: zero tree builds on this thread while sampling
+    scratch.ensure_rejection(&prep, &tree);
+    let builds_before = tree::build_count();
+    let mut proposals = 0u64;
+    let f_rej = empirical_from(m, N, &mut rng, |r| {
+        let y = scratch.sample_rejection(&marginal.z, &tree, r);
+        proposals += scratch.last_proposals as u64;
+        y
+    });
+    assert_eq!(
+        tree::build_count(),
+        builds_before,
+        "conditional rejection rebuilt the tree"
+    );
+    check("conditional-rejection", &f_rej, &want);
+    // observed proposals per sample tracks det(L̂'+I)/det(L'+I)
+    let observed = proposals as f64 / N as f64;
+    let expected = scratch.expected_rejections();
+    assert!(
+        (observed - expected).abs() < 0.1 * expected + 0.1,
+        "observed U={observed} expected U={expected}"
+    );
+
+    // conditional MCMC targets the size-conditioned completion law at the
+    // size it derived from the conditional marginal trace
+    scratch.ensure_mcmc(&prep, &marginal.z, kernel);
+    let size = scratch.mcmc_config().size;
+    assert!(size >= 1, "fixture too degenerate: completion size 0");
+    let cond_want = conditioned_on_size(&want, j.len() + size);
+    let f_mcmc = empirical_from(m, N, &mut rng, |r| scratch.sample_mcmc(kernel, r).0);
+    check("conditional-mcmc", &f_mcmc, &cond_want);
+}
+
+#[test]
+fn conformance_on_ondpp_kernel() {
+    let mut rng = Xoshiro::seeded(101);
+    let kernel = NdppKernel::random_ondpp(7, 2, &mut rng);
+    conformance_on(&kernel, 7, &[1, 4], 102);
+}
+
+#[test]
+fn conformance_on_nonorthogonal_kernel() {
+    let mut rng = Xoshiro::seeded(103);
+    let kernel = NdppKernel::random_ndpp(7, 2, &mut rng);
+    conformance_on(&kernel, 7, &[2], 104);
+}
+
+#[test]
+fn empty_given_is_byte_identical_to_unconditional() {
+    let mut rng = Xoshiro::seeded(105);
+    let kernel = NdppKernel::random_ondpp(32, 4, &mut rng);
+    let (marginal, _tree, prep) = prepared(&kernel);
+    let mut scratch = ConditionalScratch::new();
+    scratch.condition(&prep, &marginal.z, &[]).unwrap();
+    let mut chol = CholeskyScratch::for_marginal(&marginal);
+    let mut r1 = Xoshiro::seeded(9);
+    let mut r2 = Xoshiro::seeded(9);
+    for _ in 0..20 {
+        let (y1, lp1) = scratch.sample_cholesky(&marginal.z, &mut r1);
+        let (y2, lp2) = cholesky::sample_with_logprob_into(&marginal, &mut chol, &mut r2);
+        assert_eq!(y1, y2);
+        assert_eq!(lp1.to_bits(), lp2.to_bits(), "log-probs drifted");
+    }
+
+    // through the service: `given: []` takes the unconditional path for
+    // every algorithm and is counted as unconditional traffic
+    let svc = SamplingService::new(ServiceConfig { shards: 2, ..Default::default() });
+    let mut krng = Xoshiro::seeded(105);
+    svc.register("m", NdppKernel::random_ondpp(32, 4, &mut krng));
+    for kind in SamplerKind::ALL {
+        let with_empty = svc
+            .sample(SampleRequest {
+                model: "m".into(),
+                n: 3,
+                seed: Some(41),
+                kind,
+                deadline: None,
+                given: Vec::new(),
+            })
+            .unwrap();
+        let plain = svc
+            .sample(SampleRequest {
+                model: "m".into(),
+                n: 3,
+                seed: Some(41),
+                kind,
+                deadline: None,
+                given: Vec::new(),
+            })
+            .unwrap();
+        assert_eq!(with_empty.samples, plain.samples, "kind={}", kind.as_str());
+    }
+    assert_eq!(svc.metrics().conditional_count("m"), 0);
+}
+
+#[test]
+fn structural_error_paths() {
+    let mut rng = Xoshiro::seeded(107);
+    let kernel = NdppKernel::random_ondpp(10, 2, &mut rng); // 2K = 4
+    // |J| > 2K
+    assert!(matches!(
+        ConditionedKernel::build(&kernel, &[0, 1, 2, 3, 4]),
+        Err(ConditionError::TooLarge { len: 5, k2: 4 })
+    ));
+    // duplicate item
+    assert!(matches!(
+        ConditionedKernel::build(&kernel, &[7, 7]),
+        Err(ConditionError::DuplicateItem(7))
+    ));
+    // out of range
+    assert!(matches!(
+        ConditionedKernel::build(&kernel, &[10]),
+        Err(ConditionError::ItemOutOfRange { item: 10, m: 10 })
+    ));
+    // singular L_J: two items with identical feature rows
+    let mut dup = kernel.clone();
+    for c in 0..dup.v.cols {
+        dup.v[(5, c)] = dup.v[(4, c)];
+        dup.b[(5, c)] = dup.b[(4, c)];
+    }
+    assert!(matches!(
+        ConditionedKernel::build(&dup, &[4, 5]),
+        Err(ConditionError::SingularMinor)
+    ));
+    // the same errors surface through the sampler layer
+    let (marginal, _tree, prep) = prepared(&kernel);
+    let mut scratch = ConditionalScratch::new();
+    assert!(scratch.condition(&prep, &marginal.z, &[3, 3]).is_err());
+    // and a failed conditioning leaves the scratch reusable
+    scratch.condition(&prep, &marginal.z, &[3]).unwrap();
+    let (y, _) = scratch.sample_cholesky(&marginal.z, &mut rng);
+    assert!(y.contains(&3));
+}
+
+/// Same `(model, seed, n, algo, given)` ⇒ byte-identical full baskets for
+/// shard counts 1, 2, and 8, and under batch vs single submission.
+#[test]
+fn replay_across_shard_counts_and_submission_modes() {
+    let kinds = [SamplerKind::Cholesky, SamplerKind::Rejection, SamplerKind::Mcmc];
+    let baskets: [&[usize]; 3] = [&[0], &[5, 11], &[2, 19, 33]];
+    let collect = |shards: usize| -> Vec<Vec<Vec<usize>>> {
+        let svc = SamplingService::new(ServiceConfig {
+            shards,
+            max_batch: 8,
+            ..Default::default()
+        });
+        let mut rng = Xoshiro::seeded(11);
+        svc.register("m", NdppKernel::random_ondpp(48, 4, &mut rng));
+        let mut out = Vec::new();
+        for kind in kinds {
+            for (i, given) in baskets.iter().enumerate() {
+                let resp = svc
+                    .sample(SampleRequest {
+                        model: "m".into(),
+                        n: 3,
+                        seed: Some(900 + i as u64),
+                        kind,
+                        deadline: None,
+                        given: given.to_vec(),
+                    })
+                    .unwrap();
+                for y in &resp.samples {
+                    assert!(given.iter().all(|g| y.contains(g)), "lost given: {y:?}");
+                }
+                out.push(resp.samples);
+            }
+        }
+        out
+    };
+    let one = collect(1);
+    assert_eq!(one, collect(2), "shards=2 diverged");
+    assert_eq!(one, collect(8), "shards=8 diverged");
+
+    // batch submission is byte-identical to single ops
+    let svc = SamplingService::new(ServiceConfig {
+        shards: 4,
+        max_batch: 8,
+        ..Default::default()
+    });
+    let mut rng = Xoshiro::seeded(11);
+    svc.register("m", NdppKernel::random_ondpp(48, 4, &mut rng));
+    let reqs: Vec<SampleRequest> = kinds
+        .into_iter()
+        .flat_map(|kind| {
+            baskets.iter().enumerate().map(move |(i, given)| SampleRequest {
+                model: "m".into(),
+                n: 3,
+                seed: Some(900 + i as u64),
+                kind,
+                deadline: None,
+                given: given.to_vec(),
+            })
+        })
+        .collect();
+    let batched: Vec<Vec<Vec<usize>>> = svc
+        .sample_batch(reqs)
+        .into_iter()
+        .map(|r| r.unwrap().samples)
+        .collect();
+    assert_eq!(one, batched, "batch submission diverged");
+}
+
+/// Registration builds the tree exactly once; serving conditional
+/// rejection traffic never rebuilds it, and the prep-time audit records
+/// the tree + conditioning stages.
+#[test]
+fn service_conditional_rejection_is_prep_free() {
+    let svc = SamplingService::new(ServiceConfig {
+        shards: 1,
+        ..Default::default()
+    });
+    let mut rng = Xoshiro::seeded(13);
+    svc.register("m", NdppKernel::random_ondpp(64, 4, &mut rng));
+    let entry = svc.registry().get("m").unwrap();
+    assert!(entry.prep_seconds.tree >= 0.0);
+    assert!(entry.prep_seconds.conditional >= 0.0);
+    assert!(entry.prep_seconds.total() >= entry.prep_seconds.conditional);
+    assert_eq!(entry.max_given(), 8);
+
+    // direct-path prep-free pin on this thread (the service worker runs
+    // the identical ConditionalScratch code)
+    let prep = &entry.conditional;
+    let z = &entry.marginal.z;
+    let mut scratch = ConditionalScratch::new();
+    scratch.condition(prep, z, &[7, 30]).unwrap();
+    scratch.ensure_rejection(prep, &entry.tree);
+    let before = tree::build_count();
+    for _ in 0..200 {
+        let y = scratch.sample_rejection(z, &entry.tree, &mut rng);
+        assert!(y.contains(&7) && y.contains(&30));
+    }
+    assert_eq!(tree::build_count(), before, "sampling rebuilt the tree");
+
+    // and through the service, responses arrive + are counted
+    for seed in 0..5u64 {
+        let resp = svc
+            .sample(SampleRequest {
+                model: "m".into(),
+                n: 2,
+                seed: Some(seed),
+                kind: SamplerKind::Rejection,
+                deadline: None,
+                given: vec![7, 30],
+            })
+            .unwrap();
+        assert_eq!(resp.samples.len(), 2);
+        assert!(resp.proposals >= 2);
+    }
+    assert_eq!(svc.metrics().conditional_count("m"), 5);
+}
+
+/// A basket whose conditioned rejection rate diverges (nonorthogonal
+/// sigma~1 kernel: `U ~ 2^{K/2}`) is refused with a structured
+/// per-request error instead of spinning the shard worker toward the
+/// 5M-proposal panic; the same basket stays servable via MCMC.
+#[test]
+fn infeasible_conditional_rejection_is_refused() {
+    let svc = SamplingService::new(ServiceConfig {
+        shards: 1,
+        ..Default::default()
+    });
+    let mut rng = Xoshiro::seeded(19);
+    let kernel = ndpp::bench::experiments::nonorthogonal_kernel(96, 48, 1.0, &mut rng);
+    svc.register("hard", kernel);
+    let err = svc
+        .sample(SampleRequest {
+            model: "hard".into(),
+            n: 1,
+            seed: Some(1),
+            kind: SamplerKind::Rejection,
+            deadline: None,
+            given: vec![0],
+        })
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("infeasible"), "got: {err:#}");
+    // the error path never poisons the worker: MCMC serves the basket
+    let ok = svc
+        .sample(SampleRequest {
+            model: "hard".into(),
+            n: 1,
+            seed: Some(2),
+            kind: SamplerKind::Mcmc,
+            deadline: None,
+            given: vec![0],
+        })
+        .unwrap();
+    assert!(ok.samples[0].contains(&0));
+}
+
+/// Satellite bugfix pin: over TCP, a `batch` op with bad `given` entries
+/// answers those entries in place with structured errors and serves the
+/// rest — no batch poisoning, no hang.
+#[test]
+fn tcp_batch_bad_given_is_a_per_entry_error() {
+    let svc = Arc::new(SamplingService::new(ServiceConfig {
+        shards: 2,
+        ..Default::default()
+    }));
+    let mut rng = Xoshiro::seeded(15);
+    svc.register("net", NdppKernel::random_ondpp(24, 4, &mut rng));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let svc2 = Arc::clone(&svc);
+    let server_thread = std::thread::spawn(move || {
+        server::serve(svc2, "127.0.0.1:0", move |a| {
+            let _ = addr_tx.send(a);
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv().unwrap().to_string();
+    let mut c = server::Client::connect(&addr).unwrap();
+
+    let given = |items: &[usize]| Json::arr(items.iter().map(|&i| Json::Num(i as f64)));
+    let batch = c
+        .sample_batch(vec![
+            // good conditional entry
+            Json::obj()
+                .with("model", "net")
+                .with("n", 2)
+                .with("seed", 1)
+                .with("algo", "cholesky")
+                .with("given", given(&[3, 9])),
+            // index >= M: structured per-entry error
+            Json::obj()
+                .with("model", "net")
+                .with("n", 1)
+                .with("seed", 2)
+                .with("algo", "cholesky")
+                .with("given", given(&[24])),
+            // duplicate item
+            Json::obj()
+                .with("model", "net")
+                .with("n", 1)
+                .with("seed", 3)
+                .with("algo", "cholesky")
+                .with("given", given(&[4, 4])),
+            // dense cannot condition
+            Json::obj()
+                .with("model", "net")
+                .with("n", 1)
+                .with("seed", 4)
+                .with("algo", "dense")
+                .with("given", given(&[4])),
+            // good unconditional entry rides along untouched
+            Json::obj().with("model", "net").with("n", 1).with("seed", 5),
+        ])
+        .unwrap();
+    assert_eq!(batch.len(), 5);
+    assert_eq!(batch[0].get("ok").and_then(|b| b.as_bool()), Some(true));
+    for y in server::parse_samples(&batch[0]) {
+        assert!(y.contains(&3) && y.contains(&9), "lost given: {y:?}");
+    }
+    for (idx, frag) in [
+        (1usize, "outside the ground set"),
+        (2, "more than once"),
+        (3, "does not support conditioning"),
+    ] {
+        assert_eq!(
+            batch[idx].get("ok").and_then(|b| b.as_bool()),
+            Some(false),
+            "entry {idx} should fail"
+        );
+        let err = batch[idx].str_or("error", "");
+        assert!(err.contains(frag), "entry {idx}: got '{err}'");
+    }
+    assert_eq!(batch[4].get("ok").and_then(|b| b.as_bool()), Some(true));
+
+    // models op reports the conditioning audit
+    let models = c.call(&Json::obj().with("op", "models")).unwrap();
+    let detail = &models.get("detail").unwrap().as_arr().unwrap()[0];
+    let cond = detail.get("conditioning").unwrap();
+    assert_eq!(cond.get("supported").and_then(|b| b.as_bool()), Some(true));
+    assert_eq!(cond.f64_or("max_given", 0.0), 8.0);
+    // metrics op carries the conditional counters
+    let m = c.call(&Json::obj().with("op", "metrics")).unwrap();
+    let net = m.get("metrics").unwrap().get("net").unwrap();
+    assert_eq!(net.get("conditional").unwrap().f64_or("requests", -1.0), 1.0);
+
+    let stop = c.call(&Json::obj().with("op", "shutdown")).unwrap();
+    assert_eq!(stop.get("ok").and_then(|b| b.as_bool()), Some(true));
+    server_thread.join().unwrap();
+}
+
+/// The parallel leaf construction is bit-identical to what the serial
+/// recursion would produce: two builds of the same spectral kernel agree
+/// exactly, across leaf sizes, and sampling streams are unchanged.
+#[test]
+fn tree_build_is_deterministic_across_leaf_layouts() {
+    let mut rng = Xoshiro::seeded(17);
+    let kernel = NdppKernel::random_ondpp(300, 8, &mut rng);
+    let spectral = Proposal::build(&kernel).spectral();
+    for leaf in [1usize, 4, 64, 300] {
+        let t1 = SampleTree::build(&spectral, TreeConfig { leaf_size: leaf });
+        let t2 = SampleTree::build(&spectral, TreeConfig { leaf_size: leaf });
+        let mut r1 = Xoshiro::seeded(5);
+        let mut r2 = Xoshiro::seeded(5);
+        for _ in 0..5 {
+            assert_eq!(t1.sample_dpp(&mut r1), t2.sample_dpp(&mut r2), "leaf={leaf}");
+        }
+    }
+}

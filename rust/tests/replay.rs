@@ -65,6 +65,7 @@ fn service_matches_direct_sampler_for_every_algorithm() {
                     seed: Some(seed),
                     kind,
                     deadline: None,
+                    given: Vec::new(),
                 })
                 .unwrap();
             assert_eq!(
@@ -95,6 +96,7 @@ fn coalesced_mcmc_requests_do_not_leak_chain_state() {
         seed: Some(4242),
         kind: SamplerKind::Mcmc,
         deadline: None,
+        given: Vec::new(),
     };
     let rxs: Vec<_> = (0..12).map(|_| svc.submit(req())).collect();
     let responses: Vec<_> = rxs
@@ -126,6 +128,7 @@ fn replay_is_stable_across_service_instances() {
                     seed: Some(1000 + s),
                     kind,
                     deadline: None,
+                    given: Vec::new(),
                 })
                 .unwrap()
                 .samples

@@ -40,6 +40,7 @@ fn concurrent_multi_model_load() {
                 seed: Some(i),
                 kind: if i % 3 == 0 { SamplerKind::Cholesky } else { SamplerKind::Rejection },
                 deadline: None,
+                given: Vec::new(),
             })
         })
         .collect();
@@ -70,6 +71,7 @@ fn errors_do_not_poison_the_pipeline() {
                 seed: Some(i),
                 kind: SamplerKind::Cholesky,
                 deadline: None,
+                given: Vec::new(),
             })
         })
         .collect();
@@ -97,6 +99,7 @@ fn determinism_under_batching_pressure() {
             seed: Some(1234),
             kind: SamplerKind::Rejection,
             deadline: None,
+            given: Vec::new(),
         })
         .unwrap();
     // flood with noise and re-issue
@@ -108,6 +111,7 @@ fn determinism_under_batching_pressure() {
                 seed: Some(i),
                 kind: SamplerKind::Rejection,
                 deadline: None,
+                given: Vec::new(),
             })
         })
         .collect();
@@ -118,6 +122,7 @@ fn determinism_under_batching_pressure() {
             seed: Some(1234),
             kind: SamplerKind::Rejection,
             deadline: None,
+            given: Vec::new(),
         })
         .unwrap();
     for rx in noise {

@@ -44,6 +44,7 @@ fn identical_samples_across_shard_counts_and_submission_modes() {
                         seed: Some(seed),
                         kind,
                         deadline: None,
+                        given: Vec::new(),
                     })
                     .unwrap()
                     .samples,
@@ -68,6 +69,7 @@ fn identical_samples_across_shard_counts_and_submission_modes() {
                 seed: Some(seed),
                 kind,
                 deadline: None,
+                given: Vec::new(),
             })
         })
         .collect();
@@ -111,6 +113,7 @@ fn stress_many_clients_many_models_deterministic() {
                                 seed: Some(seed),
                                 kind,
                                 deadline: None,
+                                given: Vec::new(),
                             })
                             .unwrap();
                         assert_eq!(resp.samples.len(), 2);
@@ -139,6 +142,7 @@ fn stress_many_clients_many_models_deterministic() {
                 seed: Some(*seed),
                 kind: *kind,
                 deadline: None,
+                given: Vec::new(),
             })
             .unwrap();
         assert_eq!(
@@ -167,6 +171,7 @@ fn queue_full_rejects_without_poisoning_neighbors() {
                 seed: Some(i),
                 kind: SamplerKind::Cholesky,
                 deadline: None,
+                given: Vec::new(),
             })
         })
         .collect();
@@ -180,6 +185,7 @@ fn queue_full_rejects_without_poisoning_neighbors() {
                 seed: Some(100 + i),
                 kind: SamplerKind::Cholesky,
                 deadline: None,
+                given: Vec::new(),
             })
         })
         .collect();
@@ -218,6 +224,7 @@ fn queue_full_rejects_without_poisoning_neighbors() {
             seed: Some(999),
             kind: SamplerKind::Cholesky,
             deadline: None,
+            given: Vec::new(),
         })
         .unwrap();
     assert_eq!(after.samples.len(), 1);
@@ -236,6 +243,7 @@ fn expired_deadline_is_rejected_and_counted() {
         seed: Some(1),
         kind: SamplerKind::Cholesky,
         deadline: None,
+        given: Vec::new(),
     });
     let doomed = svc.submit(SampleRequest {
         model: "m".into(),
@@ -243,6 +251,7 @@ fn expired_deadline_is_rejected_and_counted() {
         seed: Some(2),
         kind: SamplerKind::Cholesky,
         deadline: Some(Duration::from_micros(1)),
+        given: Vec::new(),
     });
     let fine = svc.submit(SampleRequest {
         model: "m".into(),
@@ -250,6 +259,7 @@ fn expired_deadline_is_rejected_and_counted() {
         seed: Some(3),
         kind: SamplerKind::Cholesky,
         deadline: Some(Duration::from_secs(60)),
+        given: Vec::new(),
     });
     let err = doomed.recv().unwrap().unwrap_err();
     assert!(format!("{err:#}").contains("deadline"), "got: {err:#}");

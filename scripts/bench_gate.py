@@ -16,7 +16,11 @@ Gates (all on the quick-mode numbers CI produces):
   runner has no vector unit for the simd backend to use;
 * every serving sweep config must report a strictly positive
   ``requests_per_s`` (0 means the pipeline wedged or every request was
-  rejected).
+  rejected);
+* every conditional (``given``-bearing) serving config
+  (``serving.conditional[]``) must likewise report a strictly positive
+  ``requests_per_s`` — a wedge in the per-request conditioning path fails
+  the build even when unconditional traffic still flows.
 
 Exit status is non-zero with one line per violation; on success a short
 summary table is printed.  The merged trajectory is written even when
@@ -107,6 +111,23 @@ def check_serving(serving: dict) -> list[str]:
                 f"serving: {algo} x {clients} clients reports "
                 f"{rps!r} req/s — the pipeline served nothing"
             )
+    conditional = serving.get("conditional", [])
+    if not conditional:
+        errors.append(
+            "serving: no conditional sweep (serving.conditional[]) — the "
+            "given-bearing bench column is missing"
+        )
+    for row in conditional:
+        algo = row.get("algo", "?")
+        clients = row.get("clients", "?")
+        given = row.get("given_len", "?")
+        rps = row.get("requests_per_s")
+        if not isinstance(rps, (int, float)) or rps <= 0.0:
+            errors.append(
+                f"serving: conditional {algo} x {clients} clients "
+                f"(|given|={given}) reports {rps!r} req/s — the "
+                f"conditioning path served nothing"
+            )
     return errors
 
 
@@ -126,6 +147,16 @@ def summarize(linalg: dict, serving: dict) -> None:
         print(
             "bench_gate: serving %-10s %2s clients  %8.1f req/s"
             % (srow.get("algo", "?"), srow.get("clients", "?"), srow.get("requests_per_s", 0.0))
+        )
+    for srow in serving.get("conditional", []):
+        print(
+            "bench_gate: serving %-10s %2s clients  %8.1f req/s  (given=%s)"
+            % (
+                srow.get("algo", "?"),
+                srow.get("clients", "?"),
+                srow.get("requests_per_s", 0.0),
+                srow.get("given_len", "?"),
+            )
         )
 
 
