@@ -8,11 +8,17 @@
 //! `sample(model, n, seed)` requests back to back, for every algorithm in
 //! `cholesky / rejection / mcmc`, plus a `given`-bearing conditional
 //! sweep (`1 / 4` clients, every request paying per-request Schur
-//! conditioning).  Reports per-config request throughput, sample
-//! throughput, and latency percentiles, and writes `BENCH_serving.json`
-//! (override the path with `NDPP_BENCH_OUT`; `sweep[]` + `conditional[]`
-//! rows) — the serving entry of the repo's `BENCH_*` trajectory, uploaded
-//! as a CI artifact next to `BENCH_linalg.json`.
+//! conditioning) and a **hot-basket sweep**: Zipf-repeated baskets driven
+//! through identical request schedules with the conditioning cache off
+//! and on, so the cache's effect on conditional throughput (and its
+//! hit/eviction behavior) lands in the benchmark record.  Reports
+//! per-config request throughput, sample throughput, and latency
+//! percentiles, and writes `BENCH_serving.json` (override the path with
+//! `NDPP_BENCH_OUT`; `sweep[]` + `conditional[]` + `cache[]` rows) — the
+//! serving entry of the repo's `BENCH_*` trajectory, uploaded as a CI
+//! artifact next to `BENCH_linalg.json`.  `scripts/bench_gate.py` fails
+//! the build if the `cache[]` column goes missing or the warm (cache-on)
+//! config falls below the cold one.
 
 use std::sync::Arc;
 
@@ -134,6 +140,8 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
     }
     println!("\n== closed-loop serving sweep (M={m}, 2K={}) ==\n{}", 2 * k, table.render());
 
+    let cache_rows = hot_basket_sweep(quick)?;
+
     let json = Json::obj()
         .with("bench", "serving")
         .with("quick", quick)
@@ -142,10 +150,92 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
         .with("shards", svc.shards())
         .with("samples_per_request", SAMPLES_PER_REQUEST)
         .with("sweep", Json::Arr(rows))
-        .with("conditional", Json::Arr(cond_rows));
+        .with("conditional", Json::Arr(cond_rows))
+        .with("cache", Json::Arr(cache_rows));
     std::fs::write(out_path, json.to_string_pretty())?;
     println!("(written to {out_path})");
     Ok(json)
+}
+
+/// Zipf-repeated hot-basket schedule, replayed against a cache-off and a
+/// cache-on deployment of the same model.  Conditional cholesky requests
+/// are dominated by the per-request conditioning build at this rank, so
+/// the warm-hit win (and the LRU's hit/miss/eviction behavior) is
+/// directly visible in requests/s.  The schedule — seeds, baskets, and
+/// client interleaving — is identical across configs; only the cache
+/// budget differs.
+fn hot_basket_sweep(quick: bool) -> Result<Vec<Json>> {
+    let (m, k, requests_per_client) = if quick { (512, 24, 40) } else { (2048, 32, 120) };
+    let clients = 4usize;
+    // a pool of distinct baskets drawn Zipf-style: basket b gets weight
+    // 1/(b+1), so a handful of baskets take most of the traffic — the
+    // shape a recommender's "popular cart" workload has
+    let pool: Vec<Vec<usize>> = (0..16).map(|b| vec![3 * b + 1, 3 * b + 2]).collect();
+    let weights: Vec<f64> = (0..pool.len()).map(|b| 1.0 / (b + 1) as f64).collect();
+    let mut sched_rng = Xoshiro::seeded(99);
+    let schedule: Vec<Vec<usize>> = (0..clients * requests_per_client)
+        .map(|_| pool[sched_rng.weighted(&weights)].clone())
+        .collect();
+
+    let mut table = Table::new(&["cache", "clients", "req/s", "hits", "misses", "evict", "bytes"]);
+    let mut rows: Vec<Json> = Vec::new();
+    for (config, budget) in [("off", 0usize), ("on", 64 << 20)] {
+        let svc = Arc::new(SamplingService::new(ServiceConfig {
+            shards: 4,
+            conditioning_cache_bytes: budget,
+            ..Default::default()
+        }));
+        let mut rng = Xoshiro::seeded(7);
+        svc.register("hot", tablelike_kernel(m, k, &mut rng));
+        let wall = Timer::start();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let svc = Arc::clone(&svc);
+                let lo = c * requests_per_client;
+                let slice: Vec<Vec<usize>> = schedule[lo..lo + requests_per_client].to_vec();
+                scope.spawn(move || {
+                    for (i, given) in slice.into_iter().enumerate() {
+                        svc.sample(SampleRequest {
+                            model: "hot".into(),
+                            n: SAMPLES_PER_REQUEST,
+                            seed: Some(((c as u64) << 32) | i as u64),
+                            kind: SamplerKind::Cholesky,
+                            deadline: None,
+                            given,
+                        })
+                        .expect("hot-basket request failed");
+                    }
+                });
+            }
+        });
+        let wall = wall.secs();
+        let total = (clients * requests_per_client) as f64;
+        let req_s = total / wall;
+        let stats = svc.conditioning_cache().stats();
+        table.row(vec![
+            config.to_string(),
+            format!("{clients}"),
+            format!("{req_s:.0}"),
+            format!("{}", stats.hits),
+            format!("{}", stats.misses),
+            format!("{}", stats.evictions),
+            format!("{}", stats.bytes),
+        ]);
+        rows.push(
+            Json::obj()
+                .with("config", config)
+                .with("clients", clients)
+                .with("requests", total)
+                .with("wall_s", wall)
+                .with("requests_per_s", req_s)
+                .with("hits", stats.hits)
+                .with("misses", stats.misses)
+                .with("evictions", stats.evictions)
+                .with("bytes", stats.bytes),
+        );
+    }
+    println!("\n== hot-basket conditioning cache (M={m}, 2K={}) ==\n{}", 2 * k, table.render());
+    Ok(rows)
 }
 
 /// `clients` threads each issue `iters` synchronous requests back to back

@@ -1,0 +1,344 @@
+//! Hot-basket conditioning cache: per-`(model, basket)` LRU over shared
+//! [`ConditionedState`] values under a byte budget.
+//!
+//! Production basket-completion traffic is Zipf-like — a small set of
+//! popular baskets dominates — yet conditioning is stateless per request:
+//! every arrival re-pays the Schur complement, the conditioned marginal
+//! solve, and (for the rejection path) an `R x R` eigendecomposition.
+//! This cache closes that gap.  A shard worker that conditions a basket
+//! publishes the resulting immutable [`ConditionedState`] here; the next
+//! request for the same `(model, J)` adopts it
+//! ([`crate::sampler::conditional::ConditionalScratch::adopt`]) and
+//! performs **zero** linear algebra before sampling.
+//!
+//! Three properties the test layer pins:
+//!
+//! * **Transparency** — a cached state is a pure function of
+//!   `(model, J, backend)`, so adopting it cannot change sampled bytes;
+//!   `tests/conditional.rs` replays identical request streams with the
+//!   cache on and off and compares byte-for-byte.
+//! * **Bounded memory** — entries are charged
+//!   [`ConditionedState::memory_bytes`] against `budget`; inserts evict
+//!   least-recently-used entries until the gauge fits, so `bytes` never
+//!   exceeds the budget (a state larger than the whole budget is simply
+//!   not admitted).
+//! * **No cross-model aliasing** — keys are `(model name, sorted J)`;
+//!   two models with the same basket never share an entry.
+//!
+//! Upgrades merge instead of clobbering: the rejection proposal and the
+//! MCMC warm start are built lazily by different request paths, and
+//! re-publishing one must not discard the other
+//! ([`ConditionedState::merged`]).
+//!
+//! A budget of `0` disables the cache entirely: `get` returns `None`
+//! without counting and `insert` is a no-op, which is also the
+//! configuration the transparency tests use as the ground-truth side.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::sampler::conditional::ConditionedState;
+
+/// Aggregate cache counters, surfaced by the `metrics` TCP op.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// current gauge: bytes held across all entries (never exceeds budget)
+    pub bytes: usize,
+    /// current number of cached `(model, basket)` entries
+    pub entries: usize,
+    /// configured byte budget (0 = disabled)
+    pub budget: usize,
+}
+
+/// Per-model cache counters, surfaced in the `models` audit.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ModelCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub bytes: usize,
+}
+
+#[derive(Debug, Default)]
+struct ModelCounters {
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+struct Entry {
+    state: Arc<ConditionedState>,
+    bytes: usize,
+    /// recency stamp; key into `Inner::lru`
+    seq: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<(String, Vec<usize>), Entry>,
+    /// recency order: oldest stamp first (BTreeMap iterates ascending)
+    lru: BTreeMap<u64, (String, Vec<usize>)>,
+    seq: u64,
+    bytes: usize,
+    per_model: HashMap<String, ModelCounters>,
+}
+
+impl Inner {
+    fn touch(&mut self, key: &(String, Vec<usize>)) {
+        let entry = self.map.get_mut(key).expect("touch of present key");
+        self.lru.remove(&entry.seq);
+        self.seq += 1;
+        entry.seq = self.seq;
+        self.lru.insert(self.seq, key.clone());
+    }
+
+    fn evict_oldest(&mut self) {
+        let Some((&seq, _)) = self.lru.iter().next() else {
+            return;
+        };
+        let key = self.lru.remove(&seq).expect("seq taken from iteration");
+        let entry = self.map.remove(&key).expect("lru and map agree");
+        self.bytes -= entry.bytes;
+        self.per_model.entry(key.0).or_default().evictions += 1;
+    }
+}
+
+/// The shared per-service conditioning cache (one per
+/// [`crate::coordinator::SamplingService`], shared by every shard
+/// worker).  All operations take one short critical section; the heavy
+/// linear algebra happens outside, in the workers.
+pub struct ConditioningCache {
+    budget: usize,
+    inner: Mutex<Inner>,
+}
+
+impl ConditioningCache {
+    /// A cache holding at most `budget` bytes of conditioned state
+    /// (`0` disables caching).
+    pub fn new(budget: usize) -> ConditioningCache {
+        ConditioningCache { budget, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Whether a non-zero budget was configured.
+    pub fn enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    /// Configured byte budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Look up the conditioned state for `(model, given)`; `given` must
+    /// be sorted (callers pass the validated basket, which is).  Counts a
+    /// hit or miss per call; a disabled cache returns `None` without
+    /// counting.
+    pub fn get(&self, model: &str, given: &[usize]) -> Option<Arc<ConditionedState>> {
+        if !self.enabled() {
+            return None;
+        }
+        let key = (model.to_string(), given.to_vec());
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.contains_key(&key) {
+            inner.touch(&key);
+            let state = Arc::clone(&inner.map[&key].state);
+            inner.per_model.entry(key.0).or_default().hits += 1;
+            Some(state)
+        } else {
+            inner.per_model.entry(key.0).or_default().misses += 1;
+            None
+        }
+    }
+
+    /// Publish a conditioned state under `(model, state.given())`.  An
+    /// existing entry for the basket is merged
+    /// ([`ConditionedState::merged`]) so lazily built parts accumulate;
+    /// least-recently-used entries are evicted until the byte gauge fits
+    /// the budget.  States larger than the whole budget are not admitted.
+    pub fn insert(&self, model: &str, state: Arc<ConditionedState>) {
+        if !self.enabled() {
+            return;
+        }
+        let key = (model.to_string(), state.given().to_vec());
+        let mut inner = self.inner.lock().unwrap();
+        let state = match inner.map.get(&key) {
+            Some(old) => ConditionedState::merged(&state, &old.state),
+            None => state,
+        };
+        let bytes = state.memory_bytes();
+        if bytes > self.budget {
+            // would evict the entire cache and still not fit; on replace,
+            // drop the old entry too (the merged state supersedes it)
+            if let Some(old) = inner.map.remove(&key) {
+                inner.lru.remove(&old.seq);
+                inner.bytes -= old.bytes;
+                inner.per_model.entry(key.0).or_default().evictions += 1;
+            }
+            return;
+        }
+        if let Some(old) = inner.map.remove(&key) {
+            inner.lru.remove(&old.seq);
+            inner.bytes -= old.bytes;
+        }
+        inner.seq += 1;
+        let seq = inner.seq;
+        inner.lru.insert(seq, key.clone());
+        inner.map.insert(key, Entry { state, bytes, seq });
+        inner.bytes += bytes;
+        while inner.bytes > self.budget && !inner.lru.is_empty() {
+            inner.evict_oldest();
+        }
+    }
+
+    /// Aggregate counters + gauges across all models.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        let mut s = CacheStats {
+            bytes: inner.bytes,
+            entries: inner.map.len(),
+            budget: self.budget,
+            ..CacheStats::default()
+        };
+        for c in inner.per_model.values() {
+            s.hits += c.hits;
+            s.misses += c.misses;
+            s.evictions += c.evictions;
+        }
+        s
+    }
+
+    /// Counters + gauges for one model (zeros when the model has no cache
+    /// traffic).
+    pub fn model_stats(&self, model: &str) -> ModelCacheStats {
+        let inner = self.inner.lock().unwrap();
+        let mut s = ModelCacheStats::default();
+        if let Some(c) = inner.per_model.get(model) {
+            s.hits = c.hits;
+            s.misses = c.misses;
+            s.evictions = c.evictions;
+        }
+        for ((m, _), entry) in inner.map.iter() {
+            if m == model {
+                s.entries += 1;
+                s.bytes += entry.bytes;
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ndpp::{MarginalKernel, NdppKernel, Proposal};
+    use crate::rng::Xoshiro;
+    use crate::sampler::conditional::{ConditionalPrepared, ConditionalScratch};
+    use crate::sampler::{SampleTree, TreeConfig};
+
+    fn states(baskets: &[&[usize]]) -> Vec<Arc<ConditionedState>> {
+        let mut rng = Xoshiro::seeded(91);
+        let kernel = NdppKernel::random_ondpp(24, 4, &mut rng);
+        let marginal = MarginalKernel::build(&kernel);
+        let proposal = Proposal::build(&kernel);
+        let tree = SampleTree::build(&proposal.spectral(), TreeConfig { leaf_size: 4 });
+        let prep = ConditionalPrepared::build(&kernel, &marginal, &tree);
+        let mut scratch = ConditionalScratch::new();
+        baskets
+            .iter()
+            .map(|j| {
+                scratch.condition(&prep, &marginal.z, j).unwrap();
+                scratch.ensure_rejection(&prep, &tree);
+                scratch.shared_state().unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn hit_miss_and_eviction_counters_track_traffic() {
+        let st = states(&[&[0], &[1], &[2]]);
+        let per_entry = st[0].memory_bytes();
+        // room for exactly two entries
+        let cache = ConditioningCache::new(2 * per_entry + per_entry / 2);
+        assert!(cache.enabled());
+        assert!(cache.get("m", &[0]).is_none(), "cold cache must miss");
+        cache.insert("m", Arc::clone(&st[0]));
+        cache.insert("m", Arc::clone(&st[1]));
+        assert!(cache.get("m", &[0]).is_some());
+        assert!(cache.get("m", &[1]).is_some());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (2, 1, 0));
+        assert_eq!(s.entries, 2);
+        assert!(s.bytes <= s.budget, "gauge {} over budget {}", s.bytes, s.budget);
+        // the gets re-stamped [0] then [1], so [0] is now the oldest and
+        // the third insert evicts exactly it
+        cache.insert("m", Arc::clone(&st[2]));
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        assert!(s.bytes <= s.budget);
+        assert!(cache.get("m", &[0]).is_none(), "oldest entry survived eviction");
+        assert!(cache.get("m", &[1]).is_some());
+        assert!(cache.get("m", &[2]).is_some());
+    }
+
+    #[test]
+    fn disabled_cache_neither_stores_nor_counts() {
+        let st = states(&[&[0]]);
+        let cache = ConditioningCache::new(0);
+        assert!(!cache.enabled());
+        cache.insert("m", Arc::clone(&st[0]));
+        assert!(cache.get("m", &[0]).is_none());
+        assert_eq!(cache.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn models_never_alias_and_oversized_states_are_skipped() {
+        let st = states(&[&[0], &[1]]);
+        let per_entry = st[0].memory_bytes();
+        let cache = ConditioningCache::new(8 * per_entry);
+        cache.insert("alpha", Arc::clone(&st[0]));
+        assert!(cache.get("beta", &[0]).is_none(), "basket leaked across models");
+        assert!(cache.get("alpha", &[0]).is_some());
+        let alpha = cache.model_stats("alpha");
+        assert_eq!((alpha.hits, alpha.misses, alpha.entries), (1, 0, 1));
+        assert!(alpha.bytes > 0);
+        let beta = cache.model_stats("beta");
+        assert_eq!((beta.hits, beta.misses, beta.entries), (0, 1, 0));
+        // a state larger than the whole budget is not admitted
+        let tiny = ConditioningCache::new(16);
+        tiny.insert("alpha", Arc::clone(&st[1]));
+        let s = tiny.stats();
+        assert_eq!((s.entries, s.bytes), (0, 0));
+    }
+
+    #[test]
+    fn reinsert_merges_lazily_built_parts() {
+        // same basket published twice: once with only the rejection part,
+        // once with only the MCMC part — the cache must end up with both
+        let mut rng = Xoshiro::seeded(92);
+        let kernel = NdppKernel::random_ondpp(24, 4, &mut rng);
+        let marginal = MarginalKernel::build(&kernel);
+        let proposal = Proposal::build(&kernel);
+        let tree = SampleTree::build(&proposal.spectral(), TreeConfig { leaf_size: 4 });
+        let prep = ConditionalPrepared::build(&kernel, &marginal, &tree);
+        let mut scratch = ConditionalScratch::new();
+        scratch.condition(&prep, &marginal.z, &[3]).unwrap();
+        scratch.ensure_rejection(&prep, &tree);
+        let with_rejection = scratch.shared_state().unwrap();
+        scratch.condition(&prep, &marginal.z, &[3]).unwrap();
+        scratch.ensure_mcmc(&prep, &marginal.z, &kernel);
+        let with_mcmc = scratch.shared_state().unwrap();
+
+        let cache = ConditioningCache::new(1 << 20);
+        cache.insert("m", with_rejection);
+        cache.insert("m", with_mcmc);
+        let merged = cache.get("m", &[3]).unwrap();
+        assert!(merged.has_rejection(), "merge dropped the rejection part");
+        assert!(merged.has_mcmc(), "merge dropped the mcmc part");
+        assert_eq!(cache.stats().entries, 1);
+    }
+}

@@ -56,6 +56,10 @@ struct ModelMetrics {
     /// sum of `|given|` over conditional requests (mean basket size =
     /// `conditional_given_sum / conditional_requests`)
     conditional_given_sum: u64,
+    /// steering-router decisions keyed by [`Metrics::record_steering`]'s
+    /// decision strings (`auto_rejection`, `auto_mcmc`,
+    /// `refused_infeasible`)
+    steering: HashMap<&'static str, u64>,
 }
 
 impl ModelMetrics {
@@ -71,6 +75,7 @@ impl ModelMetrics {
             conditional_requests: 0,
             conditional_samples: 0,
             conditional_given_sum: 0,
+            steering: HashMap::new(),
         }
     }
 
@@ -181,6 +186,31 @@ impl Metrics {
         m.conditional_given_sum += given_len as u64;
     }
 
+    /// Record one steering-router decision for a conditional request.
+    /// Decisions are `"auto_rejection"` (feasible `auto`, served by
+    /// rejection), `"auto_mcmc"` (`auto` steered to MCMC because the
+    /// expected proposal count exceeded the threshold), and
+    /// `"refused_infeasible"` (client pinned `rejection` on an infeasible
+    /// basket and got the structured error).
+    pub fn record_steering(&self, model: &str, decision: &'static str) {
+        let mut map = self.inner.lock().unwrap();
+        *map.entry(model.to_string())
+            .or_insert_with(ModelMetrics::new)
+            .steering
+            .entry(decision)
+            .or_insert(0) += 1;
+    }
+
+    /// Steering decisions recorded for `(model, decision)` so far.
+    pub fn steering_count(&self, model: &str, decision: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(model)
+            .and_then(|m| m.steering.get(decision).copied())
+            .unwrap_or(0)
+    }
+
     /// Conditional requests served for `model` so far.
     pub fn conditional_count(&self, model: &str) -> u64 {
         self.inner
@@ -229,6 +259,10 @@ impl Metrics {
                 .with("requests", m.conditional_requests)
                 .with("samples", m.conditional_samples)
                 .with("given_sum", m.conditional_given_sum);
+            let mut steering = Json::obj();
+            for (&decision, &count) in m.steering.iter() {
+                steering.set(decision, count);
+            }
             obj.set(
                 name,
                 Json::obj()
@@ -238,6 +272,7 @@ impl Metrics {
                     .with("errors", m.errors)
                     .with("rejected", rejected)
                     .with("conditional", conditional)
+                    .with("steering", steering)
                     .with("latency_mean_s", m.latency.mean())
                     .with("latency_p50_s", m.latency.quantile(0.5))
                     .with("latency_p95_s", m.latency.quantile(0.95))
@@ -320,6 +355,24 @@ mod tests {
         assert_eq!(c.f64_or("requests", 0.0), 2.0);
         assert_eq!(c.f64_or("samples", 0.0), 5.0);
         assert_eq!(c.f64_or("given_sum", 0.0), 5.0);
+    }
+
+    #[test]
+    fn steering_decisions_accumulate() {
+        let m = Metrics::new();
+        m.record_steering("a", "auto_mcmc");
+        m.record_steering("a", "auto_mcmc");
+        m.record_steering("a", "auto_rejection");
+        m.record_steering("b", "refused_infeasible");
+        assert_eq!(m.steering_count("a", "auto_mcmc"), 2);
+        assert_eq!(m.steering_count("a", "auto_rejection"), 1);
+        assert_eq!(m.steering_count("a", "refused_infeasible"), 0);
+        assert_eq!(m.steering_count("b", "refused_infeasible"), 1);
+        assert_eq!(m.steering_count("c", "auto_mcmc"), 0);
+        let snap = m.snapshot();
+        let s = snap.get("a").and_then(|a| a.get("steering")).unwrap();
+        assert_eq!(s.f64_or("auto_mcmc", 0.0), 2.0);
+        assert_eq!(s.f64_or("auto_rejection", 0.0), 1.0);
     }
 
     #[test]

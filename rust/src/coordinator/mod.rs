@@ -14,19 +14,26 @@
 //!   drains gracefully.  Per-request seed streams
 //!   ([`crate::rng::request_stream`]) make results independent of shard
 //!   count, shard assignment, and batch composition.
+//! * [`cache`] — the hot-basket **conditioning cache**: an LRU of
+//!   prepared conditional state keyed `(model, sorted basket)` under a
+//!   byte budget, shared by the shard workers so repeat baskets skip
+//!   their per-request eigendecompositions; paired with shard-affinity
+//!   routing in [`service`] so hot baskets land on warm workers.
 //! * [`server`] — line-delimited-JSON TCP front end (single and `batch`
 //!   ops, model audit, shard-aware metrics) + a small client.
-//! * [`metrics`] — latency histograms, throughput counters, rejection and
-//!   per-shard batch statistics.
+//! * [`metrics`] — latency histograms, throughput counters, rejection,
+//!   steering-decision and per-shard batch statistics.
 //! * [`pool`] — the generic worker thread pool (used by tooling; the
 //!   serving path runs on the shard workers above).
 
+pub mod cache;
 pub mod metrics;
 pub mod pool;
 pub mod registry;
 pub mod server;
 pub mod service;
 
+pub use cache::{CacheStats, ConditioningCache, ModelCacheStats};
 pub use metrics::{Metrics, RejectReason};
 pub use pool::WorkerPool;
 pub use registry::{ModelEntry, Registry, SamplerKind};

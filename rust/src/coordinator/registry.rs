@@ -26,6 +26,12 @@ pub enum SamplerKind {
     /// dense `O(M^3)` Algorithm 1 LHS baseline — small-M debugging and
     /// conformance runs only (capped at [`SamplerKind::DENSE_MAX_M`])
     Dense,
+    /// let the service pick per request: rejection when the conditioned
+    /// expected-proposal count is feasible, steered to MCMC otherwise
+    /// (unconditional `auto` resolves to rejection).  The wire default
+    /// for `given`-bearing requests; responses report the resolved
+    /// concrete algorithm.
+    Auto,
 }
 
 impl SamplerKind {
@@ -40,8 +46,9 @@ impl SamplerKind {
             "rejection" | "tree" => Ok(SamplerKind::Rejection),
             "mcmc" | "updown" => Ok(SamplerKind::Mcmc),
             "dense" => Ok(SamplerKind::Dense),
+            "auto" => Ok(SamplerKind::Auto),
             other => {
-                Err(anyhow!("unknown sampler '{other}' (cholesky|rejection|mcmc|dense)"))
+                Err(anyhow!("unknown sampler '{other}' (auto|cholesky|rejection|mcmc|dense)"))
             }
         }
     }
@@ -52,10 +59,13 @@ impl SamplerKind {
             SamplerKind::Rejection => "rejection",
             SamplerKind::Mcmc => "mcmc",
             SamplerKind::Dense => "dense",
+            SamplerKind::Auto => "auto",
         }
     }
 
-    /// All algorithms, for sweep-style tests and benches.
+    /// All *concrete* algorithms, for sweep-style tests and benches
+    /// ([`SamplerKind::Auto`] is a routing policy, not a fifth sampler —
+    /// it always resolves to one of these).
     pub const ALL: [SamplerKind; 4] = [
         SamplerKind::Cholesky,
         SamplerKind::Rejection,
@@ -64,8 +74,9 @@ impl SamplerKind {
     ];
 
     /// True when this algorithm can serve `given`-bearing (conditional)
-    /// requests: every low-rank sampler can; the dense `O(M^3)` baseline
-    /// has no conditioned prepared form and cannot.
+    /// requests: every low-rank sampler can (and `auto` routes between
+    /// them); the dense `O(M^3)` baseline has no conditioned prepared
+    /// form and cannot.
     pub fn supports_conditioning(self) -> bool {
         !matches!(self, SamplerKind::Dense)
     }
@@ -266,13 +277,18 @@ mod tests {
         assert_eq!(SamplerKind::parse("mcmc").unwrap(), SamplerKind::Mcmc);
         assert_eq!(SamplerKind::parse("updown").unwrap(), SamplerKind::Mcmc);
         assert_eq!(SamplerKind::parse("dense").unwrap(), SamplerKind::Dense);
+        assert_eq!(SamplerKind::parse("auto").unwrap(), SamplerKind::Auto);
         assert!(SamplerKind::parse("bogus").is_err());
         assert_eq!(SamplerKind::Rejection.as_str(), "rejection");
         assert_eq!(SamplerKind::Mcmc.as_str(), "mcmc");
         assert_eq!(SamplerKind::Dense.as_str(), "dense");
+        assert_eq!(SamplerKind::Auto.as_str(), "auto");
         for kind in SamplerKind::ALL {
             assert_eq!(SamplerKind::parse(kind.as_str()).unwrap(), kind);
         }
+        // auto routes conditional requests but is not a concrete sampler
+        assert!(SamplerKind::Auto.supports_conditioning());
+        assert!(!SamplerKind::ALL.contains(&SamplerKind::Auto));
     }
 
     #[test]

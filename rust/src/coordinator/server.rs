@@ -3,16 +3,24 @@
 //! Protocol (one JSON object per line, response per line):
 //!
 //! ```text
-//! -> {"op":"sample","model":"books","n":4,"seed":11,"algo":"rejection",
+//! -> {"op":"sample","model":"books","n":4,"seed":11,"algo":"auto",
 //!     "deadline_ms":250,"given":[3,17]}
-//!    (algo: cholesky | rejection | mcmc | dense; deadline_ms optional;
-//!     given optional — condition on an observed basket: samples are drawn
+//!    (algo: auto | cholesky | rejection | mcmc | dense.  When omitted it
+//!     defaults to rejection for unconditional requests and to auto for
+//!     `given`-bearing ones; auto lets the steering router use the
+//!     rejection sampler when the conditioned basket is feasible and fall
+//!     through to mcmc when it is not.  deadline_ms optional; given
+//!     optional — condition on an observed basket: samples are drawn
 //!     from Pr(Y | given ⊆ Y) and always contain the given items.  Items
 //!     are validated per request: distinct, < M, |given| <= 2K,
 //!     nonsingular L_J; dense does not support conditioning.  An empty /
 //!     absent given is the unconditional path.)
 //! <- {"ok":true,"seed":11,"proposals":9,"latency_s":0.004,
+//!     "algo":"rejection","expected_rejections":2.31,
 //!     "samples":[[3,17],[4],[],[8,90,411]]}
+//!    (algo echoes the *resolved* algorithm — for auto requests, where the
+//!     router sent them; expected_rejections is the feasibility estimate U
+//!     when the rejection check ran for this request)
 //! -> {"op":"batch","requests":[{"model":"books","n":1,"seed":1},
 //!                              {"model":"books","n":2,"seed":2}]}
 //!    (each entry takes the same fields as a `sample` op; entries fan out
@@ -23,7 +31,9 @@
 //! <- {"ok":true,"models":["books"],"detail":[{"name":"books","m":...,
 //!     "k2":...,"backend":"blocked","samplers":[...],"prep_s":{...}}]}
 //! -> {"op":"metrics"}
-//! <- {"ok":true,"metrics":{...},"shards":8,"queue_depths":[0,...]}
+//! <- {"ok":true,"metrics":{...},"cache":{"hits":...,"misses":...,
+//!     "evictions":...,"bytes":...,"entries":...,"budget":...},
+//!     "shards":8,"queue_depths":[0,...]}
 //! -> {"op":"ping"} / {"op":"shutdown"}
 //! ```
 //!
@@ -159,12 +169,13 @@ fn err_json(msg: &str) -> Json {
 /// Parse the request fields shared by the `sample` op and each `batch`
 /// entry.
 fn parse_sample_request(req: &Json) -> Result<SampleRequest> {
-    let kind = SamplerKind::parse(&req.str_or("algo", "rejection"))?;
     // `given`: optional array of item indices.  Malformed entries are a
     // parse error here; semantic validation (range vs the model's M,
     // duplicates, |given| <= 2K, singular L_J) happens per request in the
     // service, so one bad basket in a batch answers in place and never
-    // poisons its neighbors.
+    // poisons its neighbors.  Parsed before `algo` because the default
+    // algorithm depends on it: unconditional requests keep the paper's
+    // rejection sampler, `given`-bearing ones get the steering router.
     let given = match req.get("given") {
         None => Vec::new(),
         Some(g) => {
@@ -180,6 +191,8 @@ fn parse_sample_request(req: &Json) -> Result<SampleRequest> {
                 .collect::<Result<Vec<usize>>>()?
         }
     };
+    let default_algo = if given.is_empty() { "rejection" } else { "auto" };
+    let kind = SamplerKind::parse(&req.str_or("algo", default_algo))?;
     Ok(SampleRequest {
         model: req.str_or("model", ""),
         n: req.usize_or("n", 1),
@@ -199,17 +212,28 @@ fn sample_response_json(resp: &SampleResponse) -> Json {
             .iter()
             .map(|y| Json::arr(y.iter().map(|&i| Json::Num(i as f64)))),
     );
-    Json::obj()
+    let mut out = Json::obj()
         .with("ok", true)
         .with("seed", resp.seed)
         .with("proposals", resp.proposals)
         .with("latency_s", resp.latency_secs)
-        .with("samples", samples)
+        // the *resolved* algorithm: auto requests report where the
+        // steering router actually sent them
+        .with("algo", resp.algo.as_str());
+    if let Some(u) = resp.expected_rejections {
+        out = out.with("expected_rejections", u);
+    }
+    out.with("samples", samples)
 }
 
 /// The per-model audit record of the `models` op: what a deployment is
-/// serving, with which preprocessing, built by which backend, how fast.
-fn model_detail_json(entry: &crate::coordinator::registry::ModelEntry) -> Json {
+/// serving, with which preprocessing, built by which backend, how fast —
+/// plus where its conditional traffic went (steering counters) and how
+/// much conditioned state the cache holds for it.
+fn model_detail_json(
+    entry: &crate::coordinator::registry::ModelEntry,
+    service: &SamplingService,
+) -> Json {
     let samplers: Vec<Json> = SamplerKind::ALL
         .into_iter()
         .filter(|&k| {
@@ -218,12 +242,16 @@ fn model_detail_json(entry: &crate::coordinator::registry::ModelEntry) -> Json {
         .map(|k| Json::Str(k.as_str().to_string()))
         .collect();
     let prep = &entry.prep_seconds;
-    // which samplers can serve `given`-bearing requests for this model
-    let cond_samplers: Vec<Json> = SamplerKind::ALL
-        .into_iter()
-        .filter(|k| k.supports_conditioning())
-        .map(|k| Json::Str(k.as_str().to_string()))
-        .collect();
+    // which samplers can serve `given`-bearing requests for this model;
+    // auto (the routing policy, and the wire default for given-bearing
+    // requests) is listed first, then the concrete algorithms
+    let mut cond_samplers: Vec<Json> = vec![Json::Str(SamplerKind::Auto.as_str().to_string())];
+    cond_samplers.extend(
+        SamplerKind::ALL
+            .into_iter()
+            .filter(|k| k.supports_conditioning())
+            .map(|k| Json::Str(k.as_str().to_string())),
+    );
     let conditioning = Json::obj()
         .with("supported", true)
         .with("max_given", entry.max_given())
@@ -232,6 +260,22 @@ fn model_detail_json(entry: &crate::coordinator::registry::ModelEntry) -> Json {
         // is even servable unconditionally depends on the M^3 cap
         .with("dense", false)
         .with("dense_available", entry.kernel.m() <= SamplerKind::DENSE_MAX_M);
+    let metrics = service.metrics();
+    let steering = Json::obj()
+        .with("threshold", service.config().steer_threshold)
+        .with("auto_rejection", metrics.steering_count(&entry.name, "auto_rejection"))
+        .with("auto_mcmc", metrics.steering_count(&entry.name, "auto_mcmc"))
+        .with(
+            "refused_infeasible",
+            metrics.steering_count(&entry.name, "refused_infeasible"),
+        );
+    let cs = service.conditioning_cache().model_stats(&entry.name);
+    let cache = Json::obj()
+        .with("hits", cs.hits)
+        .with("misses", cs.misses)
+        .with("evictions", cs.evictions)
+        .with("entries", cs.entries)
+        .with("bytes", cs.bytes);
     Json::obj()
         .with("name", entry.name.clone())
         .with("m", entry.kernel.m())
@@ -239,6 +283,8 @@ fn model_detail_json(entry: &crate::coordinator::registry::ModelEntry) -> Json {
         .with("backend", entry.backend.as_str())
         .with("samplers", Json::Arr(samplers))
         .with("conditioning", conditioning)
+        .with("steering", steering)
+        .with("cache", cache)
         .with("expected_rejections", entry.proposal.expected_rejections())
         .with("mcmc_size", entry.mcmc.size)
         .with("tree_bytes", entry.tree.memory_bytes())
@@ -274,17 +320,30 @@ fn handle_line(line: &str, service: &SamplingService, stop: &AtomicBool) -> Json
                         .registry()
                         .entries()
                         .iter()
-                        .map(|e| model_detail_json(e)),
+                        .map(|e| model_detail_json(e, service)),
                 ),
             ),
-        "metrics" => Json::obj()
-            .with("ok", true)
-            .with("metrics", service.metrics().snapshot())
-            .with("shards", service.shards())
-            .with(
-                "queue_depths",
-                Json::arr(service.queue_depths().into_iter().map(|d| Json::Num(d as f64))),
-            ),
+        "metrics" => {
+            let cs = service.conditioning_cache().stats();
+            Json::obj()
+                .with("ok", true)
+                .with("metrics", service.metrics().snapshot())
+                .with(
+                    "cache",
+                    Json::obj()
+                        .with("hits", cs.hits)
+                        .with("misses", cs.misses)
+                        .with("evictions", cs.evictions)
+                        .with("bytes", cs.bytes)
+                        .with("entries", cs.entries)
+                        .with("budget", cs.budget),
+                )
+                .with("shards", service.shards())
+                .with(
+                    "queue_depths",
+                    Json::arr(service.queue_depths().into_iter().map(|d| Json::Num(d as f64))),
+                )
+        }
         "shutdown" => {
             stop.store(true, Ordering::Relaxed);
             Json::obj().with("ok", true).with("stopping", true)
@@ -476,12 +535,20 @@ mod tests {
         assert_eq!(detail.get("samplers").unwrap().as_arr().unwrap().len(), 4);
         assert!(detail.get("prep_s").unwrap().f64_or("total", -1.0) >= 0.0);
         assert!(detail.get("prep_s").unwrap().f64_or("conditional", -1.0) >= 0.0);
-        // conditioning audit: supported, capped at 2K, dense excluded
+        // conditioning audit: supported, capped at 2K, dense excluded,
+        // auto listed ahead of the three concrete conditional samplers
         let cond = detail.get("conditioning").unwrap();
         assert_eq!(cond.get("supported").and_then(|b| b.as_bool()), Some(true));
         assert_eq!(cond.f64_or("max_given", 0.0), 8.0);
-        assert_eq!(cond.get("samplers").unwrap().as_arr().unwrap().len(), 3);
+        let cond_samplers = cond.get("samplers").unwrap().as_arr().unwrap();
+        assert_eq!(cond_samplers.len(), 4);
+        assert_eq!(cond_samplers[0].as_str(), Some("auto"));
         assert_eq!(cond.get("dense").and_then(|b| b.as_bool()), Some(false));
+        // steering + cache audit blocks are present with the defaults
+        let steer = detail.get("steering").unwrap();
+        assert!(steer.f64_or("threshold", 0.0) > 0.0);
+        assert_eq!(steer.f64_or("refused_infeasible", -1.0), 0.0);
+        assert_eq!(detail.get("cache").unwrap().f64_or("entries", -1.0), 0.0);
         // sample (deterministic by seed)
         let s1 = client.sample("toy", 3, 42, "rejection").unwrap();
         let s2 = client.sample("toy", 3, 42, "rejection").unwrap();
@@ -499,6 +566,52 @@ mod tests {
         // given=[] is the unconditional path, byte-identical to omitting it
         let e1 = client.sample_given("toy", 2, 1, "cholesky", &[]).unwrap();
         assert_eq!(e1, c);
+        // the response reports the resolved algorithm and, when the
+        // rejection feasibility check ran, the expected-proposals count
+        let full = client
+            .call(
+                &Json::obj()
+                    .with("op", "sample")
+                    .with("model", "toy")
+                    .with("n", 2)
+                    .with("seed", 42)
+                    .with("algo", "rejection"),
+            )
+            .unwrap();
+        assert_eq!(full.str_or("algo", ""), "rejection");
+        assert!(full.f64_or("expected_rejections", 0.0) >= 1.0);
+        // a given-bearing request with no algo defaults to auto and echoes
+        // the router's concrete pick; a feasible toy basket stays on
+        // rejection
+        let auto = client
+            .call(
+                &Json::obj()
+                    .with("op", "sample")
+                    .with("model", "toy")
+                    .with("n", 2)
+                    .with("seed", 43)
+                    .with("given", Json::arr([1usize, 5].iter().map(|&i| Json::Num(i as f64)))),
+            )
+            .unwrap();
+        assert_eq!(auto.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(auto.str_or("algo", ""), "rejection");
+        assert!(auto.f64_or("expected_rejections", 0.0) >= 1.0);
+        for y in parse_samples(&auto) {
+            assert!(y.contains(&1) && y.contains(&5));
+        }
+        // a pinned cholesky request never runs the feasibility check
+        let chol = client
+            .call(
+                &Json::obj()
+                    .with("op", "sample")
+                    .with("model", "toy")
+                    .with("n", 1)
+                    .with("seed", 44)
+                    .with("algo", "cholesky"),
+            )
+            .unwrap();
+        assert_eq!(chol.str_or("algo", ""), "cholesky");
+        assert!(chol.get("expected_rejections").is_none());
         // bad given entries are a structured error, not a hang/panic
         let bad_given = client
             .call(
@@ -534,11 +647,15 @@ mod tests {
         // error paths
         let bad = client.call(&Json::obj().with("op", "sample").with("model", "nope")).unwrap();
         assert_eq!(bad.get("ok").and_then(|b| b.as_bool()), Some(false));
-        // metrics now carry shard info
+        // metrics now carry shard info and the conditioning-cache gauges
         let m = client.call(&Json::obj().with("op", "metrics")).unwrap();
         assert!(m.get("metrics").unwrap().get("toy").is_some());
         assert_eq!(m.f64_or("shards", 0.0), 2.0);
         assert_eq!(m.get("queue_depths").unwrap().as_arr().unwrap().len(), 2);
+        let mc = m.get("cache").unwrap();
+        assert!(mc.f64_or("budget", 0.0) > 0.0);
+        assert!(mc.f64_or("misses", 0.0) >= 1.0, "conditional requests built state");
+        assert!(mc.f64_or("bytes", 0.0) > 0.0);
         // shutdown
         let stop = client.call(&Json::obj().with("op", "shutdown")).unwrap();
         assert_eq!(stop.get("ok").and_then(|b| b.as_bool()), Some(true));

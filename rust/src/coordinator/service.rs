@@ -36,9 +36,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::coordinator::cache::ConditioningCache;
 use crate::coordinator::metrics::{Metrics, RejectReason};
 use crate::coordinator::registry::{ModelEntry, Registry, SamplerKind};
 use crate::linalg::backend::{self, BackendKind};
+use crate::ndpp::conditional::validate_given;
 use crate::ndpp::NdppKernel;
 use crate::rng::{self, Xoshiro};
 use crate::sampler::{
@@ -47,13 +49,20 @@ use crate::sampler::{
 };
 use crate::util::Timer;
 
-/// Conditional (`given`-bearing) rejection requests whose conditioned
-/// proposal implies more expected proposals per sample than this are
-/// refused with a structured per-request error pointing at MCMC:
-/// conditioning can inflate `U = det(L̂'+I)/det(L'+I)` far past the
-/// unconditional Theorem 2 bound, and a worker looping millions of
-/// proposals would block its shard far beyond any deadline.
-const MAX_CONDITIONAL_EXPECTED_REJECTIONS: f64 = 1e4;
+/// Default [`ServiceConfig::steer_threshold`]: conditional
+/// (`given`-bearing) requests whose conditioned proposal implies more
+/// expected proposals per sample than this are steered away from the
+/// rejection sampler — conditioning can inflate
+/// `U = det(L̂'+I)/det(L'+I)` far past the unconditional Theorem 2
+/// bound, and a worker looping millions of proposals would block its
+/// shard far beyond any deadline.  `auto` requests silently fall through
+/// to the fixed-size MCMC chain; requests that pinned `rejection` get
+/// the structured refusal instead.
+pub const DEFAULT_STEER_THRESHOLD: f64 = 1e4;
+
+/// Default [`ServiceConfig::conditioning_cache_bytes`]: 64 MiB of
+/// conditioned state — thousands of hot baskets at typical ranks.
+pub const DEFAULT_CONDITIONING_CACHE_BYTES: usize = 64 << 20;
 
 /// Shard count when `ServiceConfig::shards == 0`: one worker per core,
 /// coordinated with the blocked backend so GEMM threads and shard workers
@@ -93,6 +102,16 @@ pub struct ServiceConfig {
     /// pin the process-wide linalg backend for this deployment
     /// (`None` = leave the `NDPP_BACKEND` / default selection in place)
     pub backend: Option<BackendKind>,
+    /// byte budget for the hot-basket conditioning cache shared by every
+    /// shard worker (`0` disables caching; the default is
+    /// [`DEFAULT_CONDITIONING_CACHE_BYTES`]).  The cache is invisible in
+    /// sampled bytes — it only removes repeated per-request linear
+    /// algebra for popular baskets.
+    pub conditioning_cache_bytes: usize,
+    /// expected-proposals-per-sample bound above which the steering
+    /// router keeps conditional requests off the rejection sampler
+    /// (default [`DEFAULT_STEER_THRESHOLD`])
+    pub steer_threshold: f64,
 }
 
 impl Default for ServiceConfig {
@@ -104,6 +123,8 @@ impl Default for ServiceConfig {
             max_batch: 64,
             tree: crate::sampler::TreeConfig::default(),
             backend: None,
+            conditioning_cache_bytes: DEFAULT_CONDITIONING_CACHE_BYTES,
+            steer_threshold: DEFAULT_STEER_THRESHOLD,
         }
     }
 }
@@ -146,6 +167,16 @@ pub struct SampleResponse {
     pub proposals: u64,
     pub seed: u64,
     pub latency_secs: f64,
+    /// the *concrete* algorithm that produced the samples — for
+    /// [`SamplerKind::Auto`] requests this is the steering router's
+    /// decision (`Rejection` when feasible, `Mcmc` when steered), so
+    /// clients and routers can observe where auto traffic went
+    pub algo: SamplerKind,
+    /// expected proposals per accepted sample (`U`) when the rejection
+    /// feasibility check ran for this request — populated for
+    /// `rejection` and `auto` requests, `None` for pinned
+    /// cholesky/mcmc/dense
+    pub expected_rejections: Option<f64>,
 }
 
 struct Pending {
@@ -201,11 +232,40 @@ struct WorkerScratch {
 pub struct SamplingService {
     registry: Arc<Registry>,
     metrics: Arc<Metrics>,
+    cache: Arc<ConditioningCache>,
     config: ServiceConfig,
     shards: Vec<Arc<Shard>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     rr: AtomicUsize,
     seed_counter: AtomicU64,
+}
+
+/// Stable shard choice for `given`-bearing requests: FNV-1a over the
+/// model name and the sorted basket, so repeat submissions of a hot
+/// basket land on the same shard worker — the one whose adopted cache
+/// entries and warm scratch already hold that basket's state.  Routing
+/// is applied whether or not the cache is enabled: results are
+/// shard-independent by construction ([`crate::rng::request_stream`]),
+/// so affinity affects only locality, and keeping it unconditional keeps
+/// queue behavior identical between cache-on and cache-off deployments.
+fn basket_shard(model: &str, given: &[usize], shards: usize) -> usize {
+    fn eat(h: &mut u64, b: u8) {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    let mut sorted = given.to_vec();
+    sorted.sort_unstable();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in model.as_bytes() {
+        eat(&mut h, b);
+    }
+    eat(&mut h, 0xFF); // separator: model name and basket never blur
+    for &i in &sorted {
+        for b in (i as u64).to_le_bytes() {
+            eat(&mut h, b);
+        }
+    }
+    (h % shards.max(1) as u64) as usize
 }
 
 impl SamplingService {
@@ -220,6 +280,7 @@ impl SamplingService {
         config.queue_depth = config.queue_depth.max(1);
         let registry = Arc::new(Registry::new());
         let metrics = Arc::new(Metrics::with_shards(config.shards));
+        let cache = Arc::new(ConditioningCache::new(config.conditioning_cache_bytes));
         let shards: Vec<Arc<Shard>> =
             (0..config.shards).map(|_| Arc::new(Shard::new())).collect();
 
@@ -230,10 +291,22 @@ impl SamplingService {
                 let shard = Arc::clone(shard);
                 let registry = Arc::clone(&registry);
                 let metrics = Arc::clone(&metrics);
+                let cache = Arc::clone(&cache);
                 let max_batch = config.max_batch;
+                let steer_threshold = config.steer_threshold;
                 std::thread::Builder::new()
                     .name(format!("ndpp-shard-{i}"))
-                    .spawn(move || Self::worker_loop(i, &shard, &registry, &metrics, max_batch))
+                    .spawn(move || {
+                        Self::worker_loop(
+                            i,
+                            &shard,
+                            &registry,
+                            &metrics,
+                            &cache,
+                            steer_threshold,
+                            max_batch,
+                        )
+                    })
                     .expect("spawning shard worker")
             })
             .collect();
@@ -241,6 +314,7 @@ impl SamplingService {
         SamplingService {
             registry,
             metrics,
+            cache,
             config,
             shards,
             workers,
@@ -275,6 +349,13 @@ impl SamplingService {
         &self.metrics
     }
 
+    /// The hot-basket conditioning cache shared by the shard workers
+    /// (counters/gauges for the `metrics` op and tests; disabled when
+    /// [`ServiceConfig::conditioning_cache_bytes`] is 0).
+    pub fn conditioning_cache(&self) -> &ConditioningCache {
+        &self.cache
+    }
+
     /// Shard worker count.
     pub fn shards(&self) -> usize {
         self.shards.len()
@@ -304,7 +385,13 @@ impl SamplingService {
             .deadline
             .or(self.config.deadline)
             .map(|d| Instant::now() + d);
-        let shard_idx = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        // shard affinity: hot baskets hash to a stable (warm) shard;
+        // unconditional traffic spreads round-robin as before
+        let shard_idx = if req.given.is_empty() {
+            self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len()
+        } else {
+            basket_shard(&req.model, &req.given, self.shards.len())
+        };
         let shard = &self.shards[shard_idx];
         {
             let mut st = shard.state.lock().unwrap();
@@ -372,6 +459,8 @@ impl SamplingService {
         shard: &Shard,
         registry: &Registry,
         metrics: &Metrics,
+        cache: &ConditioningCache,
+        steer_threshold: f64,
         max_batch: usize,
     ) {
         let mut scratches: HashMap<String, WorkerScratch> = HashMap::new();
@@ -400,7 +489,7 @@ impl SamplingService {
                     // senders, so blocked callers get an error, not a hang;
                     // scratches are fully reset at next use.
                     let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        Self::run_batch(&entry, ws, metrics, batch);
+                        Self::run_batch(&entry, ws, metrics, cache, steer_threshold, batch);
                     }));
                     if run.is_err() {
                         crate::warnlog!(
@@ -458,6 +547,8 @@ impl SamplingService {
         entry: &ModelEntry,
         ws: &mut WorkerScratch,
         metrics: &Metrics,
+        cache: &ConditioningCache,
+        steer_threshold: f64,
         batch: Vec<Pending>,
     ) {
         for p in batch {
@@ -479,17 +570,41 @@ impl SamplingService {
             // conditional (given-bearing) requests take their own
             // dispatch; an empty `given` stays on the unconditional paths
             // below, byte-identical to a request without the field
-            let result: Result<Vec<Vec<usize>>> = if !p.req.given.is_empty() {
-                Self::run_conditional(entry, ws, &p.req, &mut rng, &mut proposals)
+            let (result, algo, expected_rejections) = if !p.req.given.is_empty() {
+                match Self::run_conditional(
+                    entry,
+                    ws,
+                    cache,
+                    steer_threshold,
+                    metrics,
+                    &p.req,
+                    &mut rng,
+                    &mut proposals,
+                ) {
+                    Ok((samples, algo, u)) => (Ok(samples), algo, u),
+                    Err(e) => (Err(e), p.req.kind, None),
+                }
             } else {
-                Self::run_unconditional(entry, ws, &p.req, &mut rng, &mut proposals)
+                // unconditional `auto` has nothing to steer around:
+                // resolve to the rejection sampler, the paper's default
+                let kind = match p.req.kind {
+                    SamplerKind::Auto => SamplerKind::Rejection,
+                    k => k,
+                };
+                let u = (kind == SamplerKind::Rejection)
+                    .then(|| entry.proposal.expected_rejections());
+                let result =
+                    Self::run_unconditional(entry, ws, kind, p.req.n, &mut rng, &mut proposals);
+                (result, kind, u)
             };
             let latency = p.enqueued.secs();
             match result {
                 Ok(samples) => {
+                    // attributed to the *resolved* algorithm, so steered
+                    // auto traffic shows up where the work happened
                     metrics.record_algo(
                         &entry.name,
-                        p.req.kind.as_str(),
+                        algo.as_str(),
                         latency,
                         p.req.n as u64,
                         proposals,
@@ -506,6 +621,8 @@ impl SamplingService {
                         proposals,
                         seed: p.seed,
                         latency_secs: latency,
+                        algo,
+                        expected_rejections,
                     }));
                 }
                 Err(e) => {
@@ -516,72 +633,128 @@ impl SamplingService {
         }
     }
 
-    /// Serve one `given`-bearing request: condition the worker's
-    /// [`ConditionalScratch`] on the observed basket (validated per
-    /// request — a bad basket is a per-request error, never a poisoned
-    /// batch), then draw from the requested conditional sampler.  The
-    /// prepared tree/marginal are reused; only `2K`/`R`-sized state is
-    /// rebuilt.
+    /// Serve one `given`-bearing request: look the validated basket up in
+    /// the conditioning cache (adopting the shared state on a hit) or
+    /// condition the worker's [`ConditionalScratch`] and publish the
+    /// result, then draw from the requested conditional sampler — with
+    /// the steering router deciding where `auto` (and infeasible
+    /// `rejection`) traffic goes.  Returns the samples, the *resolved*
+    /// concrete algorithm, and the expected-proposals count when the
+    /// feasibility check ran.
+    ///
+    /// The cache is invisible in sampled bytes: a [`ConditionedState`] is
+    /// a pure function of `(model, sorted basket, backend)` and no RNG is
+    /// consumed before sampling, so the hit and miss paths draw identical
+    /// streams (`tests/conditional.rs` replays this byte for byte).
+    ///
+    /// [`ConditionedState`]: crate::sampler::conditional::ConditionedState
+    #[allow(clippy::too_many_arguments)]
     fn run_conditional(
         entry: &ModelEntry,
         ws: &mut WorkerScratch,
+        cache: &ConditioningCache,
+        steer_threshold: f64,
+        metrics: &Metrics,
         req: &SampleRequest,
         rng: &mut Xoshiro,
         proposals: &mut u64,
-    ) -> Result<Vec<Vec<usize>>> {
+    ) -> Result<(Vec<Vec<usize>>, SamplerKind, Option<f64>)> {
         if !req.kind.supports_conditioning() {
             return Err(anyhow!(
-                "sampler '{}' does not support conditioning — use cholesky, \
+                "sampler '{}' does not support conditioning — use auto, cholesky, \
                  rejection, or mcmc for 'given'-bearing requests",
                 req.kind.as_str()
             ));
         }
+        // validate before touching the cache: a malformed basket is a
+        // per-request error and must not count as a miss (or insert junk
+        // keys); the sorted result is the canonical cache key
+        let given = validate_given(&req.given, entry.kernel.m(), entry.conditional.k2())
+            .map_err(|e| anyhow!("model '{}': {e}", entry.name))?;
         let scratch = ws.conditional.get_or_insert_with(ConditionalScratch::new);
         let z = &entry.marginal.z;
-        scratch
-            .condition(&entry.conditional, z, &req.given)
-            .map_err(|e| anyhow!("model '{}': {e}", entry.name))?;
+        match cache.get(&entry.name, &given) {
+            Some(state) => scratch.adopt(state),
+            None => {
+                scratch
+                    .condition(&entry.conditional, z, &given)
+                    .map_err(|e| anyhow!("model '{}': {e}", entry.name))?;
+                cache.insert(&entry.name, scratch.shared_state().expect("just conditioned"));
+            }
+        }
         match req.kind {
-            SamplerKind::Cholesky => Ok((0..req.n)
-                .map(|_| {
-                    *proposals += 1;
-                    scratch.sample_cholesky(z, rng).0
-                })
-                .collect()),
-            SamplerKind::Rejection => {
-                scratch.ensure_rejection(&entry.conditional, &entry.tree);
-                // conditioning can inflate the rejection rate far past the
-                // unconditional Theorem 2 bound; an infeasible basket gets
-                // a structured error instead of spinning this shard worker
-                // for millions of proposals (the comparison is inverted so
-                // a NaN expectation also refuses)
-                let u = scratch.expected_rejections();
-                if !(u <= MAX_CONDITIONAL_EXPECTED_REJECTIONS) {
-                    return Err(anyhow!(
-                        "conditional rejection is infeasible for this basket on model \
-                         '{}': expected {u:.3e} proposals per sample (cap {:.0e}) — \
-                         use mcmc or cholesky for this 'given'",
-                        entry.name,
-                        MAX_CONDITIONAL_EXPECTED_REJECTIONS
-                    ));
+            SamplerKind::Cholesky => {
+                let samples = (0..req.n)
+                    .map(|_| {
+                        *proposals += 1;
+                        scratch.sample_cholesky(z, rng).0
+                    })
+                    .collect();
+                Ok((samples, SamplerKind::Cholesky, None))
+            }
+            SamplerKind::Rejection | SamplerKind::Auto => {
+                if scratch.ensure_rejection(&entry.conditional, &entry.tree) {
+                    cache.insert(&entry.name, scratch.shared_state().expect("just conditioned"));
                 }
-                Ok((0..req.n)
+                // conditioning can inflate the rejection rate far past
+                // the unconditional Theorem 2 bound; the router keeps
+                // such baskets off this shard worker's proposal loop (the
+                // comparison is inverted so a NaN expectation also
+                // steers/refuses)
+                let u = scratch.expected_rejections();
+                if !(u <= steer_threshold) {
+                    if req.kind == SamplerKind::Rejection {
+                        metrics.record_steering(&entry.name, "refused_infeasible");
+                        return Err(anyhow!(
+                            "conditional rejection is infeasible for this basket on model \
+                             '{}': expected {u:.3e} proposals per sample (cap {:.0e}) — \
+                             use algo=auto to steer to mcmc, or pin mcmc/cholesky for \
+                             this 'given'",
+                            entry.name,
+                            steer_threshold
+                        ));
+                    }
+                    // auto: silently steer to the fixed-size MCMC chain
+                    metrics.record_steering(&entry.name, "auto_mcmc");
+                    if scratch.ensure_mcmc(&entry.conditional, z, &entry.kernel) {
+                        cache.insert(
+                            &entry.name,
+                            scratch.shared_state().expect("just conditioned"),
+                        );
+                    }
+                    let samples = (0..req.n)
+                        .map(|_| {
+                            let (y, steps) = scratch.sample_mcmc(&entry.kernel, rng);
+                            *proposals += steps;
+                            y
+                        })
+                        .collect();
+                    return Ok((samples, SamplerKind::Mcmc, Some(u)));
+                }
+                if req.kind == SamplerKind::Auto {
+                    metrics.record_steering(&entry.name, "auto_rejection");
+                }
+                let samples = (0..req.n)
                     .map(|_| {
                         let y = scratch.sample_rejection(z, &entry.tree, rng);
                         *proposals += scratch.last_proposals as u64;
                         y
                     })
-                    .collect())
+                    .collect();
+                Ok((samples, SamplerKind::Rejection, Some(u)))
             }
             SamplerKind::Mcmc => {
-                scratch.ensure_mcmc(&entry.conditional, z, &entry.kernel);
-                Ok((0..req.n)
+                if scratch.ensure_mcmc(&entry.conditional, z, &entry.kernel) {
+                    cache.insert(&entry.name, scratch.shared_state().expect("just conditioned"));
+                }
+                let samples = (0..req.n)
                     .map(|_| {
                         let (y, steps) = scratch.sample_mcmc(&entry.kernel, rng);
                         *proposals += steps;
                         y
                     })
-                    .collect())
+                    .collect();
+                Ok((samples, SamplerKind::Mcmc, None))
             }
             SamplerKind::Dense => unreachable!("rejected above"),
         }
@@ -591,16 +764,18 @@ impl SamplingService {
     fn run_unconditional(
         entry: &ModelEntry,
         ws: &mut WorkerScratch,
-        req: &SampleRequest,
+        kind: SamplerKind,
+        n: usize,
         rng: &mut Xoshiro,
         proposals: &mut u64,
     ) -> Result<Vec<Vec<usize>>> {
-        match req.kind {
+        match kind {
+            SamplerKind::Auto => unreachable!("auto is resolved before unconditional dispatch"),
             SamplerKind::Cholesky => {
                 let scratch = ws
                     .cholesky
                     .get_or_insert_with(|| CholeskyScratch::for_marginal(&entry.marginal));
-                Ok((0..req.n)
+                Ok((0..n)
                     .map(|_| {
                         *proposals += 1;
                         cholesky::sample_with_logprob_into(&entry.marginal, scratch, rng).0
@@ -617,7 +792,7 @@ impl SamplingService {
                     &entry.tree,
                     scratch,
                 );
-                let out = (0..req.n)
+                let out = (0..n)
                     .map(|_| {
                         let y = s.sample(rng);
                         *proposals += s.last_proposals as u64;
@@ -637,7 +812,7 @@ impl SamplingService {
                 )),
                 Some(seed) => {
                     let mut s = McmcSampler::with_seed(&entry.kernel, entry.mcmc, seed.clone());
-                    Ok((0..req.n)
+                    Ok((0..n)
                         .map(|_| {
                             let y = s.sample(rng);
                             *proposals += s.last_steps as u64;
@@ -650,7 +825,7 @@ impl SamplingService {
                 Err(e) => Err(e),
                 Ok(prepared) => {
                     let scratch = ws.dense.get_or_insert_with(DenseScratch::new);
-                    Ok((0..req.n)
+                    Ok((0..n)
                         .map(|_| {
                             *proposals += 1;
                             dense::sample_into(&prepared, scratch, rng)
@@ -968,5 +1143,119 @@ mod tests {
         let svc = SamplingService::new(ServiceConfig::default());
         assert!(svc.shards() >= 1);
         assert_eq!(svc.queue_depths().len(), svc.shards());
+    }
+
+    #[test]
+    fn config_defaults_enable_cache_and_steering() {
+        let cfg = ServiceConfig::default();
+        assert_eq!(cfg.conditioning_cache_bytes, DEFAULT_CONDITIONING_CACHE_BYTES);
+        assert_eq!(cfg.steer_threshold, DEFAULT_STEER_THRESHOLD);
+        let svc = SamplingService::new(cfg);
+        assert!(svc.conditioning_cache().enabled());
+        assert_eq!(svc.conditioning_cache().budget(), DEFAULT_CONDITIONING_CACHE_BYTES);
+    }
+
+    #[test]
+    fn unconditional_auto_resolves_to_rejection() {
+        let svc = service_with_model(32, 4);
+        let resp = svc
+            .sample(SampleRequest {
+                model: "test".into(),
+                n: 3,
+                seed: Some(21),
+                kind: SamplerKind::Auto,
+                deadline: None,
+                given: Vec::new(),
+            })
+            .unwrap();
+        assert_eq!(resp.algo, SamplerKind::Rejection);
+        let u = resp.expected_rejections.expect("feasibility check ran");
+        assert!(u >= 1.0 && u.is_finite(), "U = {u}");
+        // the samples match a pinned-rejection request with the same seed
+        let pinned = svc
+            .sample(SampleRequest {
+                model: "test".into(),
+                n: 3,
+                seed: Some(21),
+                kind: SamplerKind::Rejection,
+                deadline: None,
+                given: Vec::new(),
+            })
+            .unwrap();
+        assert_eq!(resp.samples, pinned.samples);
+        // attribution lands on the resolved algorithm
+        assert_eq!(svc.metrics().steering_count("test", "auto_mcmc"), 0);
+    }
+
+    #[test]
+    fn conditional_auto_on_a_feasible_basket_uses_rejection() {
+        let svc = service_with_model(40, 4);
+        let resp = svc
+            .sample(SampleRequest {
+                model: "test".into(),
+                n: 4,
+                seed: Some(33),
+                kind: SamplerKind::Auto,
+                deadline: None,
+                given: vec![3, 17],
+            })
+            .unwrap();
+        assert_eq!(resp.algo, SamplerKind::Rejection);
+        assert!(resp.expected_rejections.unwrap() >= 1.0);
+        for y in &resp.samples {
+            assert!(y.contains(&3) && y.contains(&17));
+        }
+        assert_eq!(svc.metrics().steering_count("test", "auto_rejection"), 1);
+        assert_eq!(svc.metrics().steering_count("test", "auto_mcmc"), 0);
+    }
+
+    #[test]
+    fn repeat_baskets_hit_the_cache_without_changing_bytes() {
+        let svc = SamplingService::new(ServiceConfig {
+            shards: 1,
+            max_batch: 8,
+            ..Default::default()
+        });
+        let mut rng = Xoshiro::seeded(3);
+        svc.register("test", NdppKernel::random_ondpp(40, 4, &mut rng));
+        let req = |seed| SampleRequest {
+            model: "test".into(),
+            n: 2,
+            seed: Some(seed),
+            kind: SamplerKind::Cholesky,
+            deadline: None,
+            given: vec![17, 3], // unsorted on purpose: the key is canonical
+        };
+        let first = svc.sample(req(41)).unwrap();
+        let second = svc.sample(req(42)).unwrap();
+        let replay = svc.sample(req(41)).unwrap();
+        assert_eq!(first.samples, replay.samples);
+        let stats = svc.conditioning_cache().stats();
+        assert_eq!(stats.misses, 1, "one basket, one build");
+        assert_eq!(stats.hits, 2, "both repeats adopted the cached state");
+        assert!(stats.bytes > 0 && stats.entries == 1);
+        // an uncached deployment serves the same bytes
+        let cold = SamplingService::new(ServiceConfig {
+            shards: 1,
+            max_batch: 8,
+            conditioning_cache_bytes: 0,
+            ..Default::default()
+        });
+        let mut rng = Xoshiro::seeded(3);
+        cold.register("test", NdppKernel::random_ondpp(40, 4, &mut rng));
+        assert_eq!(cold.sample(req(41)).unwrap().samples, first.samples);
+        assert_eq!(cold.sample(req(42)).unwrap().samples, second.samples);
+        assert_eq!(cold.conditioning_cache().stats().misses, 0, "disabled cache counts nothing");
+    }
+
+    #[test]
+    fn basket_shard_is_order_insensitive_and_model_separated() {
+        assert_eq!(basket_shard("m", &[3, 17], 8), basket_shard("m", &[17, 3], 8));
+        assert_eq!(basket_shard("m", &[5], 1), 0);
+        // different models with the same basket need not collide (FNV over
+        // the name + separator); spot-check a pair known to differ
+        let spread: std::collections::HashSet<usize> =
+            (0..64).map(|i| basket_shard("m", &[i], 8)).collect();
+        assert!(spread.len() > 1, "hash must actually spread baskets");
     }
 }

@@ -136,9 +136,10 @@
 //!   it when `M` is large and the conditional expected rejection count
 //!   ([`sampler::ConditionalScratch::expected_rejections`]) stays small;
 //!   note conditioning can grow `U` beyond the unconditional Theorem 2
-//!   bound, so check it per basket — the serving pipeline does this for
-//!   you and refuses baskets whose conditioned `U` exceeds `1e4` with a
-//!   structured error pointing at MCMC.
+//!   bound, so check it per basket — the serving pipeline measures it per
+//!   request and, under `algo=auto`, *steers* infeasible baskets to the
+//!   conditional MCMC chain instead of refusing them (see *Request
+//!   economics* below).
 //! * **Conditional fixed-size MCMC** (`algo=mcmc` + `given`) — an
 //!   [`ndpp::probability::IncrementalMinor`] seeded from `J` plus a
 //!   deterministic greedy completion; the up-down chain swaps only
@@ -154,6 +155,48 @@
 //! (`learn::eval`'s MPR/AUC) consumes the same
 //! [`ndpp::ConditionedKernel`], so serving and evaluation can never
 //! drift.  See `examples/basket_completion.rs` for the full walkthrough.
+//!
+//! ## Request economics: steering and the conditioning cache
+//!
+//! Two per-request costs dominate conditional serving, and the pipeline
+//! manages both so clients can default to `algo=auto` and forget about
+//! them:
+//!
+//! * **Proposal cost (steering).**  A conditioned rejection run pays
+//!   `U_J = exp(log det(L̂_J + I) − log det(L_J + I))` proposal draws per
+//!   sample, and `U_J` is a per-basket quantity that conditioning can
+//!   push far past the unconditional Theorem 2 bound.  The service
+//!   computes it before sampling; when it exceeds
+//!   [`coordinator::ServiceConfig`]'s `steer_threshold` (default `1e4`,
+//!   `--steer-threshold` on `ndpp serve`), an `algo=auto` request — the
+//!   wire default whenever `given` is present — silently falls through
+//!   to the conditional fixed-size MCMC chain, whose per-step cost is
+//!   independent of `U_J`.  Only a client that *pinned* `algo=rejection`
+//!   gets the structured infeasibility error.  Every response reports
+//!   the sampler that actually ran (`algo`) and, on the
+//!   rejection-family paths, the measured `expected_rejections`, so
+//!   clients can audit routing without a second round trip.  Decisions
+//!   are counted per model (`auto_rejection` / `auto_mcmc` /
+//!   `refused_infeasible`) in the `metrics` op and the `models` audit.
+//! * **Conditioning cost (the hot-basket cache).**  Building a
+//!   conditioned sampler costs a `2K x 2K` Schur complement plus, on the
+//!   rejection path, an `R x R` eigendecomposition — per request.  Real
+//!   basket-completion traffic is Zipf-shaped (a handful of popular
+//!   carts dominates), so the service keeps a per-model LRU of immutable
+//!   [`sampler::conditional::ConditionedState`]s keyed by the canonical
+//!   (sorted) basket, bounded by [`coordinator::ServiceConfig`]'s
+//!   `conditioning_cache_bytes` (default 64 MiB; `--cache-bytes`, `0`
+//!   disables).  Given-bearing requests are routed to their shard by a
+//!   hash of `(model, basket)` — not round robin — so repeat baskets
+//!   land where their state is warm.  The cache is
+//!   **sampling-transparent**: cached states hold only RNG-free
+//!   conditioning products, so any request stream returns byte-identical
+//!   samples with the cache on, off, or thrashing (the `cache_`-prefixed
+//!   suites in `tests/conditional.rs` pin this).  Occupancy and
+//!   effectiveness (`hits` / `misses` / `evictions` / `bytes` vs
+//!   `budget`) are exported in the `metrics` op, per model in the
+//!   `models` audit, and swept by `cargo bench --bench serving` (the
+//!   `cache[]` rows `scripts/bench_gate.py` gates on).
 //!
 //! ## Serving at scale
 //!

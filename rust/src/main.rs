@@ -365,6 +365,16 @@ const SERVE_SPECS: &[Spec] = &[
         "0",
         "default per-request deadline in milliseconds (0 = none)",
     ),
+    Spec::opt_default(
+        "cache-bytes",
+        "67108864",
+        "byte budget for the hot-basket conditioning cache (0 = disable)",
+    ),
+    Spec::opt_default(
+        "steer-threshold",
+        "10000",
+        "expected proposals/sample above which algo=auto conditionals steer to mcmc",
+    ),
     Spec::opt_default("seed", "0", "rng seed for model generation"),
     Spec::opt("backend", BACKEND_HELP),
     Spec::flag("help", "show help"),
@@ -379,6 +389,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let mut config = ServiceConfig {
         shards: a.usize_or("shards", 0)?,
         queue_depth: a.usize_or("queue-depth", 1024)?,
+        conditioning_cache_bytes: a.usize_or(
+            "cache-bytes",
+            ndpp::coordinator::service::DEFAULT_CONDITIONING_CACHE_BYTES,
+        )?,
+        steer_threshold: a.f64_or(
+            "steer-threshold",
+            ndpp::coordinator::service::DEFAULT_STEER_THRESHOLD,
+        )?,
         ..Default::default()
     };
     let deadline_ms = a.u64_or("deadline-ms", 0)?;
@@ -390,14 +408,21 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     let service = Arc::new(SamplingService::new(config));
     println!(
-        "serving with {} shard workers, queue depth {}, deadline {}",
+        "serving with {} shard workers, queue depth {}, deadline {}, \
+         conditioning cache {}, steer threshold {:.0}",
         service.shards(),
         service.config().queue_depth,
         service
             .config()
             .deadline
             .map(|d| format!("{} ms", d.as_millis()))
-            .unwrap_or_else(|| "none".into())
+            .unwrap_or_else(|| "none".into()),
+        if service.conditioning_cache().enabled() {
+            format!("{} B", service.conditioning_cache().budget())
+        } else {
+            "off".into()
+        },
+        service.config().steer_threshold
     );
     let seed = a.u64_or("seed", 0)?;
     let mut rng = Xoshiro::seeded(seed);

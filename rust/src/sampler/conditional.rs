@@ -30,12 +30,28 @@
 //!   only the non-`J` positions, targeting
 //!   `Pr(S) ∝ det(L_{J ∪ S})` at fixed `|S|`.
 //!
+//! ## The conditioned-state split
+//!
+//! Everything a basket's requests share — `G_J`, the conditioned marginal
+//! `W_J`, the rebuilt proposal eigendecomposition, the MCMC greedy seed —
+//! lives in an immutable [`ConditionedState`] behind an `Arc`, so the
+//! serving layer can cache it per `(model, J)` and hand it to any shard
+//! worker ([`crate::coordinator::ConditioningCache`]).  The
+//! [`ConditionalScratch`] keeps only the mutable per-worker hot buffers
+//! (Cholesky sweep workspace, descent projector, greedy temporaries) and
+//! either builds a state ([`ConditionalScratch::condition`]) or adopts a
+//! cached one ([`ConditionalScratch::adopt`]) — adoption performs **zero**
+//! eigendecompositions, which [`condition_build_count`] makes observable
+//! (the conditional analogue of [`crate::sampler::tree::build_count`]).
+//!
 //! Per-request conditioning costs `O(|J| K^2 + K^3)` (`+ O(M K^2)` once
 //! for the MCMC greedy seed) and allocates only `2K`-sized temporaries;
 //! the per-sample hot loops run entirely in the [`ConditionalScratch`]
 //! buffers with zero heap allocation beyond the returned subsets, and the
 //! prepared tree is never rebuilt (`tests/conditional.rs` pins this via
 //! [`crate::sampler::tree::build_count`]).
+
+use std::sync::Arc;
 
 use crate::linalg::backend::{self, Backend as _};
 use crate::linalg::{lu, matrix::dot, tridiag::sym_eigen, Matrix};
@@ -51,6 +67,27 @@ use crate::sampler::SampleTree;
 /// Safety valve for the conditional rejection loop (same contract as the
 /// unconditional [`crate::sampler::RejectionSampler`]).
 const MAX_PROPOSALS: usize = 5_000_000;
+
+thread_local! {
+    /// Count of conditioned-state builds on this thread — every Schur
+    /// complement + conditioned-marginal construction, conditioned-proposal
+    /// eigendecomposition, and MCMC greedy-seed run increments it.  The
+    /// observable half of the hot-basket cache contract: adopting a cached
+    /// [`ConditionedState`] leaves the calling thread's counter unchanged
+    /// (asserted in `tests/conditional.rs`).  Thread-local so concurrently
+    /// running tests cannot race the assertion.
+    static CONDITION_BUILDS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of conditioned-state builds performed *by the calling thread*
+/// so far (see the thread-local above).
+pub fn condition_build_count() -> u64 {
+    CONDITION_BUILDS.with(|c| c.get())
+}
+
+fn note_condition_build() {
+    CONDITION_BUILDS.with(|c| c.set(c.get() + 1));
+}
 
 /// Registration-time products shared by every conditional request — the
 /// *Prepared* half of the conditional subsystem, frozen on the
@@ -87,25 +124,12 @@ impl ConditionalPrepared {
     }
 }
 
-/// Per-worker conditional workspace: holds the current request's
-/// conditioned state (`G_J`, conditioned marginal, lazily the conditioned
-/// proposal eigendecomposition and the MCMC greedy seed) plus every hot
-/// buffer the sample loops touch.  One scratch per (worker, model); a new
-/// request re-conditions in place, samples within a request reuse
-/// everything.
-pub struct ConditionalScratch {
-    /// sorted observed basket of the current request
-    given: Vec<usize>,
-    /// the conditioned kernel (`G_J` + `log det(L_J)`)
-    cond: Option<ConditionedKernel>,
-    /// conditioned marginal inner matrix `W_J = G (I + Gram G)^{-1}`
-    w: Matrix,
-    /// `log det(L' + I) = log det(I + Gram G)` — the completion normalizer
-    logdet_cond: f64,
-    /// Cholesky sweep workspace
-    chol: CholeskyScratch,
-    // --- conditioned proposal (lazy per request) -------------------------
-    rejection_ready: bool,
+/// The conditioned rejection proposal: the rebuilt `R x R`
+/// eigendecomposition of `L̂' = sym(L') + |skew(L')|` in the prepared
+/// basis.  Built lazily per basket by
+/// [`ConditionalScratch::ensure_rejection`].
+#[derive(Debug, Clone)]
+struct RejectionState {
     /// conditioned proposal inner matrix `Ĝ` in the prepared basis (R x R)
     ghat: Matrix,
     /// kept eigenvalues of `Ĝ`
@@ -114,6 +138,131 @@ pub struct ConditionalScratch {
     ucols: Matrix,
     /// `log det(L̂' + I) = Σ log(1 + λ̂_i)`
     logdet_prop_cond: f64,
+}
+
+/// The conditional MCMC warm start: chain configuration + deterministic
+/// greedy completion seed.  Built lazily per basket by
+/// [`ConditionalScratch::ensure_mcmc`].
+#[derive(Debug, Clone)]
+struct McmcState {
+    cfg: McmcConfig,
+    /// deterministic greedy completion seed (completion items only)
+    seed: Vec<usize>,
+}
+
+/// Everything one observed basket's requests share, immutable after
+/// construction: `G_J` + `log det(L_J)`, the conditioned marginal `W_J`,
+/// and (lazily, see the `ensure_*` upgrades) the conditioned rejection
+/// proposal and the MCMC warm start.  `Send + Sync`, shared behind an
+/// `Arc` — this is the value the serving layer caches per `(model, J)`
+/// so hot baskets skip every per-request eigendecomposition.
+#[derive(Debug, Clone)]
+pub struct ConditionedState {
+    /// sorted observed basket
+    given: Vec<usize>,
+    /// the conditioned kernel (`G_J` + `log det(L_J)`)
+    cond: ConditionedKernel,
+    /// conditioned marginal inner matrix `W_J = G (I + Gram G)^{-1}`
+    w: Matrix,
+    /// `log det(L' + I) = log det(I + Gram G)` — the completion normalizer
+    logdet_cond: f64,
+    rejection: Option<RejectionState>,
+    mcmc: Option<McmcState>,
+}
+
+impl ConditionedState {
+    /// The sorted observed basket this state conditions on.
+    pub fn given(&self) -> &[usize] {
+        &self.given
+    }
+
+    /// Whether the conditioned rejection proposal has been built.
+    pub fn has_rejection(&self) -> bool {
+        self.rejection.is_some()
+    }
+
+    /// Whether the conditional MCMC warm start has been built.
+    pub fn has_mcmc(&self) -> bool {
+        self.mcmc.is_some()
+    }
+
+    /// Heap bytes held by this state (cache byte-budget accounting): the
+    /// `2K`/`R`-sized matrices and index vectors, plus a fixed allowance
+    /// for the container overheads.
+    pub fn memory_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f64>();
+        let u = std::mem::size_of::<usize>();
+        let mut bytes = 256; // struct + Vec/Arc bookkeeping allowance
+        bytes += self.given.len() * u * 2; // own copy + the kernel's copy
+        bytes += self.cond.g().data.len() * f;
+        bytes += self.w.data.len() * f;
+        if let Some(r) = &self.rejection {
+            bytes += r.ghat.data.len() * f;
+            bytes += r.lambda_c.len() * f;
+            bytes += r.ucols.data.len() * f;
+        }
+        if let Some(m) = &self.mcmc {
+            bytes += m.seed.len() * u;
+        }
+        bytes
+    }
+
+    /// Union of two states for the same basket: start from `new` and take
+    /// any lazily built part only `old` has.  The cache's merge-on-insert
+    /// uses this so an MCMC upgrade published later never discards a
+    /// rejection upgrade published earlier (and vice versa) — without it,
+    /// mixed-algorithm hot baskets would thrash between part rebuilds.
+    pub fn merged(
+        new: &Arc<ConditionedState>,
+        old: &Arc<ConditionedState>,
+    ) -> Arc<ConditionedState> {
+        let need_rejection = new.rejection.is_none() && old.rejection.is_some();
+        let need_mcmc = new.mcmc.is_none() && old.mcmc.is_some();
+        if !need_rejection && !need_mcmc {
+            return Arc::clone(new);
+        }
+        let mut merged = (**new).clone();
+        if need_rejection {
+            merged.rejection = old.rejection.clone();
+        }
+        if need_mcmc {
+            merged.mcmc = old.mcmc.clone();
+        }
+        Arc::new(merged)
+    }
+}
+
+/// Merge the (sorted) completion with the (sorted) observed basket into
+/// the full sampled set.
+fn merge_sorted(given: &[usize], s: Vec<usize>) -> Vec<usize> {
+    if given.is_empty() {
+        return s;
+    }
+    let mut out = Vec::with_capacity(given.len() + s.len());
+    let (mut a, mut b) = (0usize, 0usize);
+    while a < given.len() || b < s.len() {
+        let take_given = b >= s.len() || (a < given.len() && given[a] < s[b]);
+        if take_given {
+            out.push(given[a]);
+            a += 1;
+        } else {
+            out.push(s[b]);
+            b += 1;
+        }
+    }
+    out
+}
+
+/// Per-worker conditional workspace: the current request's (possibly
+/// cache-adopted) [`ConditionedState`] plus every mutable hot buffer the
+/// sample loops touch.  One scratch per (worker, model); a new request
+/// re-conditions (or adopts) in place, samples within a request reuse
+/// everything.
+pub struct ConditionalScratch {
+    /// shared conditioned products of the current request's basket
+    state: Option<Arc<ConditionedState>>,
+    /// Cholesky sweep workspace
+    chol: CholeskyScratch,
     /// descent projector `Q̃` (R x R) + downdate / score buffers
     qt: Matrix,
     qa: Vec<f64>,
@@ -122,11 +271,6 @@ pub struct ConditionalScratch {
     e: Vec<usize>,
     /// proposals drawn for the most recent rejection sample
     pub last_proposals: usize,
-    // --- conditional MCMC (lazy per request) -----------------------------
-    mcmc_ready: bool,
-    mcmc_cfg: McmcConfig,
-    /// deterministic greedy completion seed (completion items only)
-    mcmc_seed: Vec<usize>,
     /// greedy workspace: running `G_T`, per-item scores, two matvecs
     gt: Matrix,
     item_scores: Vec<f64>,
@@ -137,24 +281,13 @@ pub struct ConditionalScratch {
 impl Default for ConditionalScratch {
     fn default() -> ConditionalScratch {
         ConditionalScratch {
-            given: Vec::new(),
-            cond: None,
-            w: Matrix::default(),
-            logdet_cond: 0.0,
+            state: None,
             chol: CholeskyScratch::new(),
-            rejection_ready: false,
-            ghat: Matrix::default(),
-            lambda_c: Vec::new(),
-            ucols: Matrix::default(),
-            logdet_prop_cond: 0.0,
             qt: Matrix::default(),
             qa: Vec::new(),
             scores: Vec::new(),
             e: Vec::new(),
             last_proposals: 0,
-            mcmc_ready: false,
-            mcmc_cfg: McmcConfig { size: 0, burn_in: 0, thinning: 1, refresh_every: 64 },
-            mcmc_seed: Vec::new(),
             gt: Matrix::default(),
             item_scores: Vec::new(),
             gu: Vec::new(),
@@ -169,9 +302,9 @@ impl ConditionalScratch {
     }
 
     /// Condition on a new observed basket: validates `given`, computes
-    /// `G_J` and the conditioned marginal, and invalidates the lazily
-    /// derived per-request state.  `z` is the model's `M x 2K` factor
-    /// (shared, e.g. [`MarginalKernel::z`]).
+    /// `G_J` and the conditioned marginal, and replaces any previously
+    /// held state.  `z` is the model's `M x 2K` factor (shared, e.g.
+    /// [`MarginalKernel::z`]).
     pub fn condition(
         &mut self,
         prep: &ConditionalPrepared,
@@ -188,19 +321,45 @@ impl ConditionalScratch {
         if lu.singular || sign <= 0.0 || !logdet.is_finite() {
             return Err(ConditionError::SingularMinor);
         }
-        self.w = cond.g().matmul(&lu.inverse());
-        self.logdet_cond = logdet;
-        self.given = cond.given().to_vec();
-        self.cond = Some(cond);
-        self.rejection_ready = false;
-        self.mcmc_ready = false;
+        let w = cond.g().matmul(&lu.inverse());
+        self.state = Some(Arc::new(ConditionedState {
+            given: cond.given().to_vec(),
+            cond,
+            w,
+            logdet_cond: logdet,
+            rejection: None,
+            mcmc: None,
+        }));
         self.last_proposals = 0;
+        note_condition_build();
         Ok(())
     }
 
-    /// The sorted observed basket of the current request.
+    /// Adopt a previously built (cached) state for the current request —
+    /// the cache-hit path.  Performs no linear algebra at all: the state
+    /// already holds `G_J`, `W_J`, and whatever `ensure_*` upgrades its
+    /// builder ran, so [`condition_build_count`] stays unchanged.
+    pub fn adopt(&mut self, state: Arc<ConditionedState>) {
+        self.state = Some(state);
+        self.last_proposals = 0;
+    }
+
+    /// The shareable conditioned state of the current request (`None`
+    /// before the first successful [`ConditionalScratch::condition`] /
+    /// [`ConditionalScratch::adopt`]).  Cheap `Arc` clone — this is what
+    /// the serving layer publishes to the conditioning cache.
+    pub fn shared_state(&self) -> Option<Arc<ConditionedState>> {
+        self.state.clone()
+    }
+
+    fn state(&self) -> &ConditionedState {
+        self.state.as_deref().expect("condition() before sampling")
+    }
+
+    /// The sorted observed basket of the current request (empty before
+    /// conditioning).
     pub fn given(&self) -> &[usize] {
-        &self.given
+        self.state.as_deref().map(|s| s.given.as_slice()).unwrap_or(&[])
     }
 
     /// The conditioned kernel of the current request.
@@ -208,44 +367,37 @@ impl ConditionalScratch {
     /// # Panics
     /// When no [`ConditionalScratch::condition`] call has succeeded yet.
     pub fn conditioned(&self) -> &ConditionedKernel {
-        self.cond.as_ref().expect("condition() before sampling")
+        &self.state().cond
     }
 
     /// `log det(L' + I)` — the completion NDPP's normalizer.
     pub fn logdet_cond(&self) -> f64 {
-        self.logdet_cond
+        self.state().logdet_cond
+    }
+
+    /// Whether the conditioned rejection proposal is built for the current
+    /// basket (either by [`ConditionalScratch::ensure_rejection`] or by
+    /// the builder of an adopted cached state).
+    pub fn rejection_ready(&self) -> bool {
+        self.state.as_deref().is_some_and(|s| s.rejection.is_some())
+    }
+
+    /// Whether the conditional MCMC warm start is built for the current
+    /// basket.
+    pub fn mcmc_ready(&self) -> bool {
+        self.state.as_deref().is_some_and(|s| s.mcmc.is_some())
     }
 
     /// Expected completion size `E|S| = tr(K') = tr(W_J · Gram)`.
     pub fn expected_completion_size(&self, prep: &ConditionalPrepared) -> f64 {
         let k2 = prep.k2();
+        let w = &self.state().w;
         let mut tr = 0.0;
         for i in 0..k2 {
             // Gram is symmetric, so its i-th column is its i-th row
-            tr += dot(self.w.row(i), prep.gram.row(i));
+            tr += dot(w.row(i), prep.gram.row(i));
         }
         tr
-    }
-
-    /// Merge the (sorted) completion with the (sorted) observed basket
-    /// into the full sampled set.
-    fn merge_with_given(&self, s: Vec<usize>) -> Vec<usize> {
-        if self.given.is_empty() {
-            return s;
-        }
-        let mut out = Vec::with_capacity(self.given.len() + s.len());
-        let (mut a, mut b) = (0usize, 0usize);
-        while a < self.given.len() || b < s.len() {
-            let take_given = b >= s.len() || (a < self.given.len() && self.given[a] < s[b]);
-            if take_given {
-                out.push(self.given[a]);
-                a += 1;
-            } else {
-                out.push(s[b]);
-                b += 1;
-            }
-        }
-        out
     }
 
     // ---- conditional Cholesky -------------------------------------------
@@ -255,8 +407,9 @@ impl ConditionalScratch {
     /// basket (`J ∪ S`, sorted) and the completion's log-probability
     /// `log Pr(S | J ⊆ Y)`.
     pub fn sample_cholesky(&mut self, z: &Matrix, rng: &mut Xoshiro) -> (Vec<usize>, f64) {
-        let (s, logp) = cholesky::sweep_skipping(z, &self.w, &mut self.chol, &self.given, rng);
-        (self.merge_with_given(s), logp)
+        let st = self.state.clone().expect("condition() before sampling");
+        let (s, logp) = cholesky::sweep_skipping(z, &st.w, &mut self.chol, &st.given, rng);
+        (merge_sorted(&st.given, s), logp)
     }
 
     // ---- conditional rejection (tree reuse) -----------------------------
@@ -268,38 +421,46 @@ impl ConditionalScratch {
     /// eigendecompose the resulting `R x R` inner matrix.  This is the
     /// *only* per-request preprocessing of the rejection path — the
     /// prepared [`SampleTree`] is reused untouched.
-    pub fn ensure_rejection(&mut self, prep: &ConditionalPrepared, tree: &SampleTree) {
-        if self.rejection_ready {
-            return;
+    ///
+    /// Returns `true` when the proposal was built here (the state gained a
+    /// part, so a caching layer should re-publish it) and `false` when the
+    /// current state already carried it (cache hit: zero work).
+    pub fn ensure_rejection(&mut self, prep: &ConditionalPrepared, tree: &SampleTree) -> bool {
+        if self.rejection_ready() {
+            return false;
         }
-        let g = self.conditioned().g();
-        let k2 = g.rows;
-        let r = tree.spectral().rank();
-        let gs = Matrix::from_fn(k2, k2, |i, j| 0.5 * (g[(i, j)] + g[(j, i)]));
-        let ga = Matrix::from_fn(k2, k2, |i, j| 0.5 * (g[(i, j)] - g[(j, i)]));
-        // sym and skew inner matrices in the prepared orthonormal basis
-        let bsym = prep.basis_map.matmul(&gs).matmul_t(&prep.basis_map);
-        let bskew = prep.basis_map.matmul(&ga).matmul_t(&prep.basis_map);
-        // |skew| via its polar factor (A^T A = -A^2 is symmetric PSD)
-        let polar = sym_eigen(&bskew.t_matmul(&bskew)).sqrt();
-        self.ghat = bsym.add(&polar);
-        let eig = sym_eigen(&self.ghat);
-        self.logdet_prop_cond = eig.values.iter().map(|&l| (1.0 + l.max(0.0)).ln()).sum();
-        let max_l = eig.values.first().copied().unwrap_or(0.0).max(0.0);
-        let cutoff = 1e-12 * max_l.max(1e-300);
-        let kept: Vec<usize> = (0..eig.values.len()).filter(|&i| eig.values[i] > cutoff).collect();
-        self.lambda_c.clear();
-        self.lambda_c.extend(kept.iter().map(|&i| eig.values[i]));
-        self.ucols.reset_zeros(r, kept.len());
-        for (out_i, &i) in kept.iter().enumerate() {
-            for a in 0..r {
-                self.ucols[(a, out_i)] = eig.vectors[(a, i)];
+        let part = {
+            let st = self.state();
+            let g = st.cond.g();
+            let k2 = g.rows;
+            let r = tree.spectral().rank();
+            let gs = Matrix::from_fn(k2, k2, |i, j| 0.5 * (g[(i, j)] + g[(j, i)]));
+            let ga = Matrix::from_fn(k2, k2, |i, j| 0.5 * (g[(i, j)] - g[(j, i)]));
+            // sym and skew inner matrices in the prepared orthonormal basis
+            let bsym = prep.basis_map.matmul(&gs).matmul_t(&prep.basis_map);
+            let bskew = prep.basis_map.matmul(&ga).matmul_t(&prep.basis_map);
+            // |skew| via its polar factor (A^T A = -A^2 is symmetric PSD)
+            let polar = sym_eigen(&bskew.t_matmul(&bskew)).sqrt();
+            let ghat = bsym.add(&polar);
+            let eig = sym_eigen(&ghat);
+            let logdet_prop_cond =
+                eig.values.iter().map(|&l| (1.0 + l.max(0.0)).ln()).sum();
+            let max_l = eig.values.first().copied().unwrap_or(0.0).max(0.0);
+            let cutoff = 1e-12 * max_l.max(1e-300);
+            let kept: Vec<usize> =
+                (0..eig.values.len()).filter(|&i| eig.values[i] > cutoff).collect();
+            let lambda_c: Vec<f64> = kept.iter().map(|&i| eig.values[i]).collect();
+            let mut ucols = Matrix::zeros(r, kept.len());
+            for (out_i, &i) in kept.iter().enumerate() {
+                for a in 0..r {
+                    ucols[(a, out_i)] = eig.vectors[(a, i)];
+                }
             }
-        }
-        self.qt.reset_zeros(r, r);
-        self.qa.clear();
-        self.qa.reserve(r);
-        self.rejection_ready = true;
+            RejectionState { ghat, lambda_c, ucols, logdet_prop_cond }
+        };
+        Arc::make_mut(self.state.as_mut().expect("state checked above")).rejection = Some(part);
+        note_condition_build();
+        true
     }
 
     /// Expected proposals per accepted conditional sample:
@@ -307,10 +468,11 @@ impl ConditionalScratch {
     ///
     /// # Panics
     /// When [`ConditionalScratch::ensure_rejection`] has not run for the
-    /// current request.
+    /// current basket (and the adopted state does not carry the proposal).
     pub fn expected_rejections(&self) -> f64 {
-        assert!(self.rejection_ready, "ensure_rejection() first");
-        (self.logdet_prop_cond - self.logdet_cond).exp()
+        let st = self.state();
+        let rej = st.rejection.as_ref().expect("ensure_rejection() first");
+        (rej.logdet_prop_cond - st.logdet_cond).exp()
     }
 
     /// Draw one conditional sample by rejection: propose from the
@@ -322,41 +484,45 @@ impl ConditionalScratch {
         tree: &SampleTree,
         rng: &mut Xoshiro,
     ) -> Vec<usize> {
-        assert!(self.rejection_ready, "ensure_rejection() first");
+        let st = self.state.clone().expect("condition() before sampling");
+        let rej = st.rejection.as_ref().expect("ensure_rejection() first");
         let r = tree.spectral().rank();
         for attempt in 1..=MAX_PROPOSALS {
-            let s = {
-                let ConditionalScratch { e, qt, qa, scores, given, lambda_c, ucols, .. } =
-                    &mut *self;
-                select_elementary_into(lambda_c, e, rng);
-                if e.is_empty() {
-                    Vec::new()
-                } else {
-                    // Q̃ = U_E U_E^T — the selected subspace in the
-                    // prepared basis
-                    qt.reset_zeros(r, r);
-                    for &ei in e.iter() {
-                        for a in 0..r {
-                            let ua = ucols[(a, ei)];
-                            if ua == 0.0 {
-                                continue;
-                            }
-                            let qrow = qt.row_mut(a);
-                            for (b, qv) in qrow.iter_mut().enumerate() {
-                                *qv += ua * ucols[(b, ei)];
-                            }
+            select_elementary_into(&rej.lambda_c, &mut self.e, rng);
+            let s = if self.e.is_empty() {
+                Vec::new()
+            } else {
+                // Q̃ = U_E U_E^T — the selected subspace in the prepared
+                // basis
+                self.qt.reset_zeros(r, r);
+                for &ei in self.e.iter() {
+                    for a in 0..r {
+                        let ua = rej.ucols[(a, ei)];
+                        if ua == 0.0 {
+                            continue;
+                        }
+                        let qrow = self.qt.row_mut(a);
+                        for (b, qv) in qrow.iter_mut().enumerate() {
+                            *qv += ua * rej.ucols[(b, ei)];
                         }
                     }
-                    tree.sample_projected_with(qt, e.len(), given, qa, scores, rng)
                 }
+                tree.sample_projected_with(
+                    &mut self.qt,
+                    self.e.len(),
+                    &st.given,
+                    &mut self.qa,
+                    &mut self.scores,
+                    rng,
+                )
             };
             // acceptance: det(L'_S) / det(L̂'_S)
             let accept = if s.is_empty() {
                 1.0
             } else {
-                let num = self.conditioned().completion_det(z, &s);
+                let num = st.cond.completion_det(z, &s);
                 let v_s = tree.spectral().vecs.gather_rows(&s);
-                let den = lu::det(&v_s.matmul(&self.ghat).matmul_t(&v_s));
+                let den = lu::det(&v_s.matmul(&rej.ghat).matmul_t(&v_s));
                 if den <= 0.0 {
                     0.0
                 } else {
@@ -365,7 +531,7 @@ impl ConditionalScratch {
             };
             if rng.uniform() <= accept {
                 self.last_proposals = attempt;
-                return self.merge_with_given(s);
+                return merge_sorted(&st.given, s);
             }
         }
         panic!(
@@ -384,13 +550,22 @@ impl ConditionalScratch {
     /// pick) and validated against the exact `IncrementalMinor`
     /// factorization the chain uses — a numerically borderline basket
     /// shrinks the seed instead of panicking later in a served request.
-    pub fn ensure_mcmc(&mut self, prep: &ConditionalPrepared, z: &Matrix, kernel: &NdppKernel) {
-        if self.mcmc_ready {
-            return;
+    ///
+    /// Returns `true` when the warm start was built here (re-publish to
+    /// the cache) and `false` when the state already carried it.
+    pub fn ensure_mcmc(
+        &mut self,
+        prep: &ConditionalPrepared,
+        z: &Matrix,
+        kernel: &NdppKernel,
+    ) -> bool {
+        if self.mcmc_ready() {
+            return false;
         }
+        let st = self.state.clone().expect("condition() before sampling");
         let m = z.rows;
         let k2 = prep.k2();
-        let cap = (k2.saturating_sub(self.given.len())).min(m - self.given.len());
+        let cap = (k2.saturating_sub(st.given.len())).min(m - st.given.len());
         let size = if cap == 0 {
             0
         } else {
@@ -398,24 +573,23 @@ impl ConditionalScratch {
         };
         // greedy seed: repeatedly take the highest conditional score,
         // updating G_T by the Schur rank-1 downdate after each pick
+        let mut seed: Vec<usize> = Vec::with_capacity(size);
         {
-            let ConditionalScratch { gt, cond, item_scores, given, gu, gv, mcmc_seed, .. } =
-                &mut *self;
-            let g = cond.as_ref().expect("condition() before sampling").g();
+            let g = st.cond.g();
+            let ConditionalScratch { gt, item_scores, gu, gv, .. } = &mut *self;
             gt.reset_zeros(k2, k2);
             gt.data.copy_from_slice(&g.data);
             item_scores.clear();
             item_scores.extend((0..m).map(|i| gt.bilinear(z.row(i), z.row(i))));
-            for &a in given.iter() {
+            for &a in st.given.iter() {
                 item_scores[a] = 0.0;
             }
             let scale = item_scores.iter().cloned().fold(0.0f64, f64::max).max(1e-300);
-            mcmc_seed.clear();
             for _ in 0..size {
                 let mut best = usize::MAX;
                 let mut best_p = 1e-12 * scale;
                 for (i, &p) in item_scores.iter().enumerate() {
-                    if p > best_p && !mcmc_seed.contains(&i) {
+                    if p > best_p && !seed.contains(&i) {
                         best = i;
                         best_p = p;
                     }
@@ -448,7 +622,7 @@ impl ConditionalScratch {
                 }
                 gt.rank1_sub(gu, gv, inv);
                 item_scores[best] = 0.0;
-                mcmc_seed.push(best);
+                seed.push(best);
             }
         }
         // The greedy Schur chain and a fresh LU can disagree on
@@ -458,25 +632,25 @@ impl ConditionalScratch {
         // shrink until the minor admits it, so serving never panics on
         // request content; the chain then runs at the admitted size
         // (possibly 0 = observed basket only).
-        while !self.mcmc_seed.is_empty() {
-            let start: Vec<usize> =
-                self.given.iter().chain(self.mcmc_seed.iter()).copied().collect();
+        while !seed.is_empty() {
+            let start: Vec<usize> = st.given.iter().chain(seed.iter()).copied().collect();
             if IncrementalMinor::new(kernel, start).is_some() {
                 break;
             }
-            self.mcmc_seed.pop();
+            seed.pop();
         }
-        let actual = self.mcmc_seed.len();
+        let actual = seed.len();
         let mut cfg = McmcConfig::for_size(actual, m);
         cfg.size = actual;
-        self.mcmc_cfg = cfg;
-        self.mcmc_ready = true;
+        Arc::make_mut(self.state.as_mut().expect("state checked above")).mcmc =
+            Some(McmcState { cfg, seed });
+        note_condition_build();
+        true
     }
 
     /// The chain configuration chosen by [`ConditionalScratch::ensure_mcmc`].
     pub fn mcmc_config(&self) -> McmcConfig {
-        assert!(self.mcmc_ready, "ensure_mcmc() first");
-        self.mcmc_cfg
+        self.state().mcmc.as_ref().expect("ensure_mcmc() first").cfg
     }
 
     /// Draw one conditional fixed-size sample: restart the up-down chain
@@ -484,20 +658,21 @@ impl ConditionalScratch {
     /// (target `Pr(S) ∝ det(L_{J ∪ S})`, `|S|` fixed), and return the full
     /// basket together with the chain steps spent.
     pub fn sample_mcmc(&mut self, kernel: &NdppKernel, rng: &mut Xoshiro) -> (Vec<usize>, u64) {
-        assert!(self.mcmc_ready, "ensure_mcmc() first");
-        let cfg = self.mcmc_cfg;
+        let st = self.state.clone().expect("condition() before sampling");
+        let mc = st.mcmc.as_ref().expect("ensure_mcmc() first");
+        let cfg = mc.cfg;
         if cfg.size == 0 {
-            return (self.given.clone(), 0);
+            return (st.given.clone(), 0);
         }
         let m = kernel.m();
-        let jlen = self.given.len();
-        let start: Vec<usize> = self.given.iter().chain(self.mcmc_seed.iter()).copied().collect();
+        let jlen = st.given.len();
+        let start: Vec<usize> = st.given.iter().chain(mc.seed.iter()).copied().collect();
         // ensure_mcmc validated this exact (deterministic) factorization;
         // degrade to the observed basket rather than panicking a served
         // request if a caller mixed up kernels across models
         let Some(mut minor) = IncrementalMinor::new(kernel, start.clone()) else {
             debug_assert!(false, "seed validated by ensure_mcmc but minor refused it");
-            return (self.given.clone(), 0);
+            return (st.given.clone(), 0);
         };
         minor.refresh_every = cfg.refresh_every.max(1);
         for _ in 0..cfg.burn_in {
@@ -545,7 +720,11 @@ mod tests {
         let (marginal, _tree, prep) = prepared(&kernel);
         let mut scratch = ConditionalScratch::new();
         scratch.condition(&prep, &marginal.z, &[]).unwrap();
-        assert_eq!(scratch.w.data, marginal.w.data, "conditioned W_∅ must equal W");
+        assert_eq!(
+            scratch.state().w.data,
+            marginal.w.data,
+            "conditioned W_∅ must equal W"
+        );
         let mut chol = CholeskyScratch::for_marginal(&marginal);
         let mut r1 = Xoshiro::seeded(77);
         let mut r2 = Xoshiro::seeded(77);
@@ -565,8 +744,8 @@ mod tests {
         let mut scratch = ConditionalScratch::new();
         let given = vec![3usize, 11];
         scratch.condition(&prep, &marginal.z, &given).unwrap();
-        scratch.ensure_rejection(&prep, &tree);
-        scratch.ensure_mcmc(&prep, &marginal.z, &kernel);
+        assert!(scratch.ensure_rejection(&prep, &tree), "first build reports an upgrade");
+        assert!(scratch.ensure_mcmc(&prep, &marginal.z, &kernel));
         for _ in 0..20 {
             let (y, _) = scratch.sample_cholesky(&marginal.z, &mut rng);
             assert!(given.iter().all(|g| y.contains(g)), "cholesky lost given: {y:?}");
@@ -604,7 +783,7 @@ mod tests {
         let u1 = scratch.expected_rejections();
         // new basket invalidates the conditioned proposal + seed
         scratch.condition(&prep, &marginal.z, &[1, 6]).unwrap();
-        assert!(!scratch.rejection_ready && !scratch.mcmc_ready);
+        assert!(!scratch.rejection_ready() && !scratch.mcmc_ready());
         scratch.ensure_rejection(&prep, &tree);
         scratch.ensure_mcmc(&prep, &marginal.z, &kernel);
         let u2 = scratch.expected_rejections();
@@ -612,6 +791,75 @@ mod tests {
         // samples from the new basket contain the new item
         let y = scratch.sample_rejection(&marginal.z, &tree, &mut rng);
         assert!(y.contains(&6));
+    }
+
+    #[test]
+    fn adopted_state_samples_identically_with_zero_builds() {
+        // build once, adopt into a fresh scratch: same request stream is
+        // byte-identical and the adopting thread performs zero builds
+        let mut krng = Xoshiro::seeded(26);
+        let kernel = NdppKernel::random_ondpp(24, 4, &mut krng);
+        let (marginal, tree, prep) = prepared(&kernel);
+        let mut builder = ConditionalScratch::new();
+        builder.condition(&prep, &marginal.z, &[2, 9]).unwrap();
+        builder.ensure_rejection(&prep, &tree);
+        builder.ensure_mcmc(&prep, &marginal.z, &kernel);
+        let state = builder.shared_state().expect("state exists after condition");
+        assert!(state.has_rejection() && state.has_mcmc());
+        assert!(state.memory_bytes() > 0);
+
+        let mut adopter = ConditionalScratch::new();
+        let before = condition_build_count();
+        adopter.adopt(Arc::clone(&state));
+        assert!(!adopter.ensure_rejection(&prep, &tree), "adopted proposal rebuilt");
+        assert!(!adopter.ensure_mcmc(&prep, &marginal.z, &kernel), "adopted seed rebuilt");
+        assert_eq!(condition_build_count(), before, "adoption must be build-free");
+        assert_eq!(
+            adopter.expected_rejections().to_bits(),
+            builder.expected_rejections().to_bits()
+        );
+        let mut r1 = Xoshiro::seeded(5);
+        let mut r2 = Xoshiro::seeded(5);
+        for _ in 0..10 {
+            assert_eq!(
+                builder.sample_rejection(&marginal.z, &tree, &mut r1),
+                adopter.sample_rejection(&marginal.z, &tree, &mut r2)
+            );
+        }
+        let mut r1 = Xoshiro::seeded(6);
+        let mut r2 = Xoshiro::seeded(6);
+        for _ in 0..5 {
+            assert_eq!(
+                builder.sample_mcmc(&kernel, &mut r1),
+                adopter.sample_mcmc(&kernel, &mut r2)
+            );
+            assert_eq!(
+                builder.sample_cholesky(&marginal.z, &mut r1),
+                adopter.sample_cholesky(&marginal.z, &mut r2)
+            );
+        }
+    }
+
+    #[test]
+    fn merged_states_keep_the_union_of_parts() {
+        let mut krng = Xoshiro::seeded(27);
+        let kernel = NdppKernel::random_ondpp(20, 4, &mut krng);
+        let (marginal, tree, prep) = prepared(&kernel);
+        let mut a = ConditionalScratch::new();
+        a.condition(&prep, &marginal.z, &[3]).unwrap();
+        a.ensure_rejection(&prep, &tree);
+        let rej_only = a.shared_state().unwrap();
+        let mut b = ConditionalScratch::new();
+        b.condition(&prep, &marginal.z, &[3]).unwrap();
+        b.ensure_mcmc(&prep, &marginal.z, &kernel);
+        let mcmc_only = b.shared_state().unwrap();
+
+        let merged = ConditionedState::merged(&mcmc_only, &rej_only);
+        assert!(merged.has_rejection() && merged.has_mcmc());
+        assert!(merged.memory_bytes() >= rej_only.memory_bytes());
+        // no parts to graft: merged() returns the new state unchanged
+        let same = ConditionedState::merged(&merged, &rej_only);
+        assert!(Arc::ptr_eq(&same, &merged));
     }
 
     #[test]

@@ -8,14 +8,27 @@
 //! * structural error paths (`|J| > 2K`, singular `L_J`, bad indices)
 //!   as per-entry errors that never poison a batch, direct and over TCP;
 //! * replay determinism through the sharded service (shard counts 1/2/8,
-//!   batch vs single submission).
+//!   batch vs single submission);
+//! * cache transparency (`cache_` tests): byte-identical request streams
+//!   with the conditioning cache off, on, and under forced evictions,
+//!   plus the zero-build pin — adopting a cached state performs no
+//!   conditioning eigendecompositions
+//!   (`sampler::conditional::condition_build_count`, mirroring
+//!   `sampler::tree::build_count`);
+//! * steering conformance (`steering_` tests): `algo=auto` requests whose
+//!   conditioned rejection rate exceeds the threshold silently route to
+//!   MCMC and still match the enumerated `Pr(Y | J ⊆ Y)` law, while
+//!   pinned `rejection` requests are refused with a structured error.
 
 use std::sync::Arc;
 
-use ndpp::coordinator::{server, SampleRequest, SamplerKind, SamplingService, ServiceConfig};
+use ndpp::coordinator::{
+    server, ConditioningCache, SampleRequest, SamplerKind, SamplingService, ServiceConfig,
+};
 use ndpp::ndpp::conditional::ConditionError;
 use ndpp::ndpp::{probability, ConditionedKernel, MarginalKernel, NdppKernel, Proposal};
 use ndpp::rng::Xoshiro;
+use ndpp::sampler::conditional::condition_build_count;
 use ndpp::sampler::{
     cholesky, tree, CholeskyScratch, ConditionalPrepared, ConditionalScratch, SampleTree,
     TreeConfig,
@@ -333,8 +346,9 @@ fn service_conditional_rejection_is_prep_free() {
 
 /// A basket whose conditioned rejection rate diverges (nonorthogonal
 /// sigma~1 kernel: `U ~ 2^{K/2}`) is refused with a structured
-/// per-request error instead of spinning the shard worker toward the
-/// 5M-proposal panic; the same basket stays servable via MCMC.
+/// per-request error — but only when the client *pinned* `rejection`.
+/// The same basket under `algo=auto` silently steers to the MCMC chain,
+/// and pinned MCMC keeps serving it too.
 #[test]
 fn infeasible_conditional_rejection_is_refused() {
     let svc = SamplingService::new(ServiceConfig {
@@ -355,17 +369,45 @@ fn infeasible_conditional_rejection_is_refused() {
         })
         .unwrap_err();
     assert!(format!("{err:#}").contains("infeasible"), "got: {err:#}");
-    // the error path never poisons the worker: MCMC serves the basket
-    let ok = svc
+    // the refusal points at the steering escape hatch and is counted
+    assert!(format!("{err:#}").contains("algo=auto"), "got: {err:#}");
+    assert_eq!(svc.metrics().steering_count("hard", "refused_infeasible"), 1);
+
+    // algo=auto on the identical basket routes to MCMC instead of
+    // refusing, reports the resolved algorithm + the U that triggered
+    // the steer, and still completes the basket
+    let auto = svc
         .sample(SampleRequest {
             model: "hard".into(),
             n: 1,
             seed: Some(2),
+            kind: SamplerKind::Auto,
+            deadline: None,
+            given: vec![0],
+        })
+        .unwrap();
+    assert_eq!(auto.algo, SamplerKind::Mcmc, "auto must steer, not refuse");
+    let u = auto.expected_rejections.expect("feasibility check ran");
+    assert!(
+        !(u <= ndpp::coordinator::service::DEFAULT_STEER_THRESHOLD),
+        "U = {u} should exceed the default threshold"
+    );
+    assert!(auto.samples[0].contains(&0));
+    assert_eq!(svc.metrics().steering_count("hard", "auto_mcmc"), 1);
+
+    // the error path never poisons the worker: pinned MCMC serves too
+    let ok = svc
+        .sample(SampleRequest {
+            model: "hard".into(),
+            n: 1,
+            seed: Some(3),
             kind: SamplerKind::Mcmc,
             deadline: None,
             given: vec![0],
         })
         .unwrap();
+    assert_eq!(ok.algo, SamplerKind::Mcmc);
+    assert!(ok.expected_rejections.is_none(), "pinned mcmc never runs the check");
     assert!(ok.samples[0].contains(&0));
 }
 
@@ -460,6 +502,264 @@ fn tcp_batch_bad_given_is_a_per_entry_error() {
     let stop = c.call(&Json::obj().with("op", "shutdown")).unwrap();
     assert_eq!(stop.get("ok").and_then(|b| b.as_bool()), Some(true));
     server_thread.join().unwrap();
+}
+
+// ---- cache transparency (`cache_` suite) -------------------------------
+
+/// Subset frequencies from already-drawn service samples (the service
+/// analogue of `empirical_from`).
+fn empirical_of(m: usize, samples: &[Vec<usize>]) -> Vec<f64> {
+    let mut freq = vec![0.0; 1usize << m];
+    for y in samples {
+        let mask: usize = y.iter().map(|&i| 1usize << i).sum();
+        freq[mask] += 1.0 / samples.len() as f64;
+    }
+    freq
+}
+
+/// Run one fixed conditional request stream — three algorithms x three
+/// baskets x three repeats, every position with its own seed — through a
+/// fresh service, via single ops or one batch op.  Returns the sampled
+/// baskets in stream order plus the cache counters afterward.
+fn cache_run(
+    shards: usize,
+    budget: usize,
+    batch: bool,
+) -> (Vec<Vec<Vec<usize>>>, ndpp::coordinator::CacheStats) {
+    let svc = SamplingService::new(ServiceConfig {
+        shards,
+        max_batch: 8,
+        conditioning_cache_bytes: budget,
+        ..Default::default()
+    });
+    let mut rng = Xoshiro::seeded(11);
+    svc.register("m", NdppKernel::random_ondpp(48, 4, &mut rng));
+    let kinds = [SamplerKind::Cholesky, SamplerKind::Rejection, SamplerKind::Mcmc];
+    let baskets: [&[usize]; 3] = [&[0], &[5, 11], &[2, 19, 33]];
+    let mut reqs = Vec::new();
+    let mut idx = 0u64;
+    for _repeat in 0..3 {
+        for kind in kinds {
+            for given in baskets {
+                reqs.push(SampleRequest {
+                    model: "m".into(),
+                    n: 2,
+                    seed: Some(1000 + idx),
+                    kind,
+                    deadline: None,
+                    given: given.to_vec(),
+                });
+                idx += 1;
+            }
+        }
+    }
+    let out: Vec<Vec<Vec<usize>>> = if batch {
+        svc.sample_batch(reqs).into_iter().map(|r| r.unwrap().samples).collect()
+    } else {
+        reqs.into_iter().map(|r| svc.sample(r).unwrap().samples).collect()
+    };
+    (out, svc.conditioning_cache().stats())
+}
+
+/// The tentpole transparency pin: the cache must be invisible in sampled
+/// bytes.  The identical request stream replays byte-for-byte with the
+/// cache off, on, and under forced evictions (a budget sized for ~1.5 of
+/// the 3 baskets), across shard counts 1/2/8 and batch vs single
+/// submission — and the hit/miss counters prove the hot path reused
+/// cached state instead of rebuilding it.
+#[test]
+fn cache_replay_is_byte_identical_across_budgets_shards_and_batching() {
+    let (base, off_stats) = cache_run(1, 0, false);
+    assert_eq!(off_stats.misses, 0, "disabled cache must not count traffic");
+    assert_eq!(off_stats.entries, 0);
+
+    // size the eviction-churn budget off a full-budget run: room for ~1.5
+    // of the three (roughly equal-sized) entries
+    let (_, full) = cache_run(1, 64 << 20, false);
+    assert_eq!(full.entries, 3);
+    let tiny = full.bytes / 2;
+
+    for shards in [1usize, 2, 8] {
+        for budget in [0usize, 64 << 20, tiny] {
+            for batch in [false, true] {
+                let (out, stats) = cache_run(shards, budget, batch);
+                assert_eq!(
+                    out, base,
+                    "diverged: shards={shards} budget={budget} batch={batch}"
+                );
+                assert!(stats.bytes <= budget, "gauge {} over budget {budget}", stats.bytes);
+                if budget == 64 << 20 {
+                    // 27 requests over 3 distinct baskets: one miss each,
+                    // every repeat adopts — zero extra conditioning builds
+                    assert_eq!(stats.misses, 3, "shards={shards} batch={batch}");
+                    assert_eq!(stats.hits, 24, "shards={shards} batch={batch}");
+                    assert_eq!(stats.evictions, 0);
+                } else if budget == tiny {
+                    assert!(stats.evictions > 0, "tiny budget must churn");
+                }
+            }
+        }
+    }
+}
+
+/// The zero-build pin, on this thread where the counter is visible:
+/// adopting a cached state performs no conditioning eigendecompositions
+/// (`condition_build_count` is the conditional analogue of
+/// `tree::build_count`), the already-built rejection part is not rebuilt,
+/// and the adopter's sample stream is byte-identical to the builder's.
+#[test]
+fn cache_adoption_performs_zero_conditioning_builds() {
+    let mut rng = Xoshiro::seeded(23);
+    let kernel = NdppKernel::random_ondpp(48, 4, &mut rng);
+    let (marginal, tree_, prep) = prepared(&kernel);
+    let cache = ConditioningCache::new(64 << 20);
+    let j = vec![5usize, 11];
+
+    // first request: miss -> condition() builds and publishes
+    assert!(cache.get("m", &j).is_none());
+    let mut builder = ConditionalScratch::new();
+    builder.condition(&prep, &marginal.z, &j).unwrap();
+    assert!(builder.ensure_rejection(&prep, &tree_));
+    cache.insert("m", builder.shared_state().unwrap());
+
+    // repeats: adopt from the cache — zero builds, identical bytes
+    let before = condition_build_count();
+    let mut adopter = ConditionalScratch::new();
+    for seed in 0..5u64 {
+        let state = cache.get("m", &j).expect("hot basket must hit");
+        adopter.adopt(state);
+        assert!(
+            !adopter.ensure_rejection(&prep, &tree_),
+            "adoption rebuilt the rejection part"
+        );
+        let mut r1 = Xoshiro::seeded(seed);
+        let mut r2 = Xoshiro::seeded(seed);
+        for _ in 0..4 {
+            let y1 = adopter.sample_rejection(&marginal.z, &tree_, &mut r1);
+            let y2 = builder.sample_rejection(&marginal.z, &tree_, &mut r2);
+            assert_eq!(y1, y2, "adopted state diverged from built state");
+        }
+        let (c1, lp1) = adopter.sample_cholesky(&marginal.z, &mut r1);
+        let (c2, lp2) = builder.sample_cholesky(&marginal.z, &mut r2);
+        assert_eq!(c1, c2);
+        assert_eq!(lp1.to_bits(), lp2.to_bits(), "log-probs drifted");
+    }
+    assert_eq!(
+        condition_build_count(),
+        before,
+        "adopting a cached basket performed an eigendecomposition"
+    );
+    assert_eq!(cache.stats().hits, 5);
+}
+
+// ---- steering conformance (`steering_` suite) --------------------------
+
+/// `algo=auto` over a threshold the basket exceeds silently falls through
+/// to conditional MCMC — and the steered samples still obey the
+/// enumerated conditional law (TV + chi-square against
+/// `Pr(Y | J ⊆ Y)` conditioned on the chain's completion size).  The
+/// same basket pinned to `rejection` is refused.
+#[test]
+fn steering_auto_falls_through_to_mcmc_and_matches_the_conditional_law() {
+    let m = 7usize;
+    let j = [2usize];
+    let mut krng = Xoshiro::seeded(103);
+    let kernel = NdppKernel::random_ndpp(m, 2, &mut krng);
+
+    // exact law + the chain's completion size (from the direct sampler,
+    // which the service worker runs verbatim)
+    let probs = probability::enumerate_probs(&kernel);
+    let want = superset_conditioned(&probs, &j);
+    let (marginal, _tree, prep) = prepared(&kernel);
+    let mut scratch = ConditionalScratch::new();
+    scratch.condition(&prep, &marginal.z, &j).unwrap();
+    scratch.ensure_mcmc(&prep, &marginal.z, &kernel);
+    let size = scratch.mcmc_config().size;
+    assert!(size >= 1, "fixture too degenerate: completion size 0");
+    let cond_want = conditioned_on_size(&want, j.len() + size);
+
+    // U = det(L̂'+I)/det(L'+I) >= 1 always, so a 0.5 threshold forces
+    // every auto request through the MCMC fallthrough
+    let svc = SamplingService::new(ServiceConfig {
+        shards: 1,
+        steer_threshold: 0.5,
+        ..Default::default()
+    });
+    svc.register("steer", kernel.clone());
+    let resp = svc
+        .sample(SampleRequest {
+            model: "steer".into(),
+            n: N,
+            seed: Some(104),
+            kind: SamplerKind::Auto,
+            deadline: None,
+            given: j.to_vec(),
+        })
+        .unwrap();
+    assert_eq!(resp.algo, SamplerKind::Mcmc, "auto must steer to mcmc");
+    let u = resp.expected_rejections.expect("feasibility check ran");
+    assert!(!(u <= 0.5), "U = {u} should exceed the forced threshold");
+    assert_eq!(resp.samples.len(), N);
+    for y in &resp.samples {
+        assert!(y.contains(&2), "steered sample lost given: {y:?}");
+    }
+    check("steering-auto-mcmc", &empirical_of(m, &resp.samples), &cond_want);
+    assert_eq!(svc.metrics().steering_count("steer", "auto_mcmc"), 1);
+    assert_eq!(svc.metrics().steering_count("steer", "auto_rejection"), 0);
+
+    // pinned rejection under the same threshold is refused, and the
+    // refusal is a counted per-request error, not a worker panic
+    let err = svc
+        .sample(SampleRequest {
+            model: "steer".into(),
+            n: 1,
+            seed: Some(105),
+            kind: SamplerKind::Rejection,
+            deadline: None,
+            given: j.to_vec(),
+        })
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("infeasible"), "got: {err:#}");
+    assert_eq!(svc.metrics().steering_count("steer", "refused_infeasible"), 1);
+}
+
+/// Below the threshold, `auto` resolves to the rejection sampler — and
+/// the auto request's samples are byte-identical to a pinned `rejection`
+/// request with the same seed, so steering adds no RNG consumption.
+#[test]
+fn steering_feasible_auto_is_byte_identical_to_pinned_rejection() {
+    let svc = SamplingService::new(ServiceConfig {
+        shards: 1,
+        ..Default::default()
+    });
+    let mut rng = Xoshiro::seeded(29);
+    svc.register("m", NdppKernel::random_ondpp(48, 4, &mut rng));
+    let given = vec![5usize, 11];
+    let auto = svc
+        .sample(SampleRequest {
+            model: "m".into(),
+            n: 4,
+            seed: Some(301),
+            kind: SamplerKind::Auto,
+            deadline: None,
+            given: given.clone(),
+        })
+        .unwrap();
+    assert_eq!(auto.algo, SamplerKind::Rejection);
+    let pinned = svc
+        .sample(SampleRequest {
+            model: "m".into(),
+            n: 4,
+            seed: Some(301),
+            kind: SamplerKind::Rejection,
+            deadline: None,
+            given,
+        })
+        .unwrap();
+    assert_eq!(auto.samples, pinned.samples, "steering changed sampled bytes");
+    assert_eq!(auto.expected_rejections, pinned.expected_rejections);
+    assert_eq!(svc.metrics().steering_count("m", "auto_rejection"), 1);
+    assert_eq!(svc.metrics().steering_count("m", "auto_mcmc"), 0);
 }
 
 /// The parallel leaf construction is bit-identical to what the serial

@@ -1,6 +1,7 @@
 //! Sharded serving pipeline end-to-end: determinism across shard counts
 //! and submission modes, concurrency stress across models, admission
-//! control (queue_full + deadlines), and graceful drain.
+//! control (queue_full + deadlines), graceful drain, and the hot-basket
+//! conditioning cache under concurrent eviction churn.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -266,6 +267,130 @@ fn expired_deadline_is_rejected_and_counted() {
     assert_eq!(fine.recv().unwrap().unwrap().samples.len(), 1);
     assert_eq!(heavy.recv().unwrap().unwrap().samples.len(), 60);
     assert_eq!(svc.metrics().rejected_count("m", RejectReason::Deadline), 1);
+}
+
+/// Concurrent cache stress: 8 clients hammer 3 models with overlapping
+/// hot baskets under a deliberately tiny conditioning-cache budget, so
+/// hits, misses, inserts, and evictions race across shard workers.  The
+/// service must not panic, the byte gauge must respect the budget, the
+/// hit/miss/eviction counters must be monotone across waves, entries must
+/// never alias across models — and a cache-off replay of every response
+/// must be byte-identical.
+#[test]
+fn cache_stress_concurrent_eviction_churn_stays_correct() {
+    let budget = 8 * 1024; // a few entries at most: constant churn
+    let svc = Arc::new(SamplingService::new(ServiceConfig {
+        shards: 4,
+        queue_depth: 4096,
+        max_batch: 8,
+        conditioning_cache_bytes: budget,
+        ..Default::default()
+    }));
+    let models = ["alpha", "beta", "gamma"];
+    for (i, name) in models.iter().enumerate() {
+        svc.register(name, test_kernel(20 + i as u64, 40 + 16 * i, 4));
+    }
+    let kinds = [SamplerKind::Cholesky, SamplerKind::Rejection, SamplerKind::Mcmc];
+    // every model sees the same basket values — aliasing across models
+    // would serve another kernel's conditioned state and break replay
+    let baskets: [&[usize]; 3] = [&[1], &[3, 17], &[2, 9, 21]];
+    let clients = 8usize;
+    let per_client = 18usize;
+
+    let mut results: Vec<(String, u64, SamplerKind, Vec<usize>, Vec<Vec<usize>>)> = Vec::new();
+    let mut wave_stats = Vec::new();
+    for wave in 0..2u64 {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let svc = Arc::clone(&svc);
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        for i in 0..per_client {
+                            let model = models[(c + i) % models.len()];
+                            let kind = kinds[i % kinds.len()];
+                            let given = baskets[(c + 2 * i) % baskets.len()];
+                            let seed = wave * 10_000 + (c * per_client + i) as u64;
+                            let resp = svc
+                                .sample(SampleRequest {
+                                    model: model.into(),
+                                    n: 2,
+                                    seed: Some(seed),
+                                    kind,
+                                    deadline: None,
+                                    given: given.to_vec(),
+                                })
+                                .unwrap();
+                            assert_eq!(resp.samples.len(), 2);
+                            for y in &resp.samples {
+                                assert!(
+                                    given.iter().all(|g| y.contains(g)),
+                                    "{model} lost given: {y:?}"
+                                );
+                            }
+                            out.push((
+                                model.to_string(),
+                                seed,
+                                kind,
+                                given.to_vec(),
+                                resp.samples,
+                            ));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            for h in handles {
+                results.extend(h.join().expect("client thread panicked"));
+            }
+        });
+        let stats = svc.conditioning_cache().stats();
+        assert!(stats.bytes <= budget, "gauge {} over budget {budget}", stats.bytes);
+        wave_stats.push(stats);
+    }
+    assert_eq!(results.len(), 2 * clients * per_client);
+    // counters are monotone across waves, and the tiny budget churned
+    let (w1, w2) = (wave_stats[0], wave_stats[1]);
+    assert!(w2.hits >= w1.hits && w2.misses >= w1.misses && w2.evictions >= w1.evictions);
+    assert!(w2.misses > 0, "churn must produce misses");
+    assert!(w2.evictions > 0, "tiny budget must evict");
+    // per-model counters fold back to the aggregate; gauges stay sane
+    let per_model: Vec<_> =
+        models.iter().map(|m| svc.conditioning_cache().model_stats(m)).collect();
+    assert_eq!(per_model.iter().map(|s| s.hits).sum::<u64>(), w2.hits);
+    assert_eq!(per_model.iter().map(|s| s.misses).sum::<u64>(), w2.misses);
+    assert_eq!(per_model.iter().map(|s| s.evictions).sum::<u64>(), w2.evictions);
+    assert_eq!(per_model.iter().map(|s| s.bytes).sum::<usize>(), w2.bytes);
+
+    // cache-off sequential replay: byte-identical responses prove no
+    // cross-model aliasing and no cache-dependent sampling
+    let replay = SamplingService::new(ServiceConfig {
+        shards: 1,
+        queue_depth: 4096,
+        max_batch: 8,
+        conditioning_cache_bytes: 0,
+        ..Default::default()
+    });
+    for (i, name) in models.iter().enumerate() {
+        replay.register(name, test_kernel(20 + i as u64, 40 + 16 * i, 4));
+    }
+    for (model, seed, kind, given, samples) in &results {
+        let again = replay
+            .sample(SampleRequest {
+                model: model.clone(),
+                n: 2,
+                seed: Some(*seed),
+                kind: *kind,
+                deadline: None,
+                given: given.clone(),
+            })
+            .unwrap();
+        assert_eq!(
+            &again.samples, samples,
+            "{model} seed={seed} kind={} given={given:?} diverged under churn",
+            kind.as_str()
+        );
+    }
 }
 
 /// The TCP `batch` op returns per-entry results identical to individual

@@ -20,7 +20,12 @@ Gates (all on the quick-mode numbers CI produces):
 * every conditional (``given``-bearing) serving config
   (``serving.conditional[]``) must likewise report a strictly positive
   ``requests_per_s`` — a wedge in the per-request conditioning path fails
-  the build even when unconditional traffic still flows.
+  the build even when unconditional traffic still flows;
+* the hot-basket cache sweep (``serving.cache[]``) must be present with
+  both a cache-off and a cache-on row, each serving a strictly positive
+  ``requests_per_s``, and the warm (cache-on) config must not fall below
+  the cold (cache-off) one — a cache that loses throughput on a
+  Zipf-repeated basket workload is a regression.
 
 Exit status is non-zero with one line per violation; on success a short
 summary table is printed.  The merged trajectory is written even when
@@ -128,6 +133,45 @@ def check_serving(serving: dict) -> list[str]:
                 f"(|given|={given}) reports {rps!r} req/s — the "
                 f"conditioning path served nothing"
             )
+    errors += check_cache(serving)
+    return errors
+
+
+def check_cache(serving: dict) -> list[str]:
+    """Gates over the hot-basket conditioning-cache sweep."""
+    errors: list[str] = []
+    cache = serving.get("cache", [])
+    if not cache:
+        return [
+            "serving: no hot-basket cache sweep (serving.cache[]) — the "
+            "conditioning-cache bench column is missing"
+        ]
+    rps_by_config: dict[str, float] = {}
+    for row in cache:
+        config = row.get("config", "?")
+        rps = row.get("requests_per_s")
+        if not isinstance(rps, (int, float)) or rps <= 0.0:
+            errors.append(
+                f"serving: cache={config} reports {rps!r} req/s — the "
+                f"hot-basket path served nothing"
+            )
+        else:
+            rps_by_config[config] = float(rps)
+    for required in ("off", "on"):
+        if required not in rps_by_config and not any(
+            row.get("config") == required for row in cache
+        ):
+            errors.append(
+                f"serving: cache sweep has no '{required}' config row"
+            )
+    if "off" in rps_by_config and "on" in rps_by_config:
+        cold, warm = rps_by_config["off"], rps_by_config["on"]
+        if warm < cold:
+            errors.append(
+                f"serving: warm-hit throughput {warm:.1f} req/s fell below "
+                f"the cold {cold:.1f} req/s — the conditioning cache is a "
+                f"net loss on the Zipf workload"
+            )
     return errors
 
 
@@ -156,6 +200,19 @@ def summarize(linalg: dict, serving: dict) -> None:
                 srow.get("clients", "?"),
                 srow.get("requests_per_s", 0.0),
                 srow.get("given_len", "?"),
+            )
+        )
+    for srow in serving.get("cache", []):
+        print(
+            "bench_gate: serving cache=%-4s %2s clients  %8.1f req/s  "
+            "(hits=%s misses=%s evictions=%s)"
+            % (
+                srow.get("config", "?"),
+                srow.get("clients", "?"),
+                srow.get("requests_per_s", 0.0),
+                srow.get("hits", "?"),
+                srow.get("misses", "?"),
+                srow.get("evictions", "?"),
             )
         )
 
