@@ -1,14 +1,27 @@
 //! `cargo bench --bench linalg_backends` — the compute-backend sweep
-//! (three-way: naive / blocked / simd, with the detected SIMD ISA
-//! recorded in the JSON).
+//! (three-way: naive / blocked / simd, with the detected SIMD ISA and
+//! the resolved thread budget recorded in the JSON).
 //!
-//! Two measurement families, each run under every [`BackendKind`]:
+//! Four measurement families:
 //!
 //! 1. **GEMM shapes** — square products at 128/256/512 (plus 1024 in full
 //!    mode) and the skinny `M x 2K` panel shapes the samplers actually
-//!    produce.  Backends are invoked directly (no global flipping), so the
-//!    comparison is apples-to-apples on identical inputs.
-//! 2. **End-to-end preprocessing** — [`ModelEntry::prepare`] (marginal
+//!    produce, under every [`BackendKind`] plus the simd backend's
+//!    unpacked reference walk, so the packed-panel win lands in the
+//!    record as `packed_vs_unpacked`.  Backends are invoked directly (no
+//!    global flipping), so the comparison is apples-to-apples on
+//!    identical inputs.
+//! 2. **Pool vs spawn** — the skinny `M x 2K` panel sweep run through the
+//!    persistent compute pool ([`backend::fan_out_rows`]) and through
+//!    the legacy spawn-per-call fan-out
+//!    ([`crate::linalg::backend::SimdBackend::gemm_spawn_fanout`]); small
+//!    panels are exactly where `std::thread::scope` spawn cost used to
+//!    dominate.
+//! 3. **Serving interference** — the 512³ GEMM measured idle and again
+//!    while closed-loop sampling load saturates the shard workers, so
+//!    the GEMM-vs-shards core split shows up as a number instead of an
+//!    anecdote.
+//! 4. **End-to-end preprocessing** — [`ModelEntry::prepare`] (marginal
 //!    kernel + Youla/proposal + spectral + tree) at `M ∈ {1k, 4k, 16k}`
 //!    (quick mode stops at 4k), with the process-wide backend pinned per
 //!    measurement — this is the registry path a deployment pays on every
@@ -17,16 +30,21 @@
 //! Results are printed as tables and written as `BENCH_linalg.json`
 //! (override the path with `NDPP_BENCH_OUT`), the first entry of the
 //! repo's `BENCH_*` trajectory.  CI runs quick mode, feeds the JSON
-//! through `scripts/bench_gate.py` (which enforces the blocked-vs-naive
-//! and simd-vs-blocked speedup floors on the 512³ row and merges it into
+//! through `scripts/bench_gate.py` (which enforces the blocked-vs-naive,
+//! simd-vs-blocked, and packed-vs-unpacked speedup floors on the 512³
+//! row, the pool-vs-spawn floor on the panel sweep, and merges it into
 //! `BENCH_trajectory.json`), and uploads both as artifacts.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::bench::experiments::tablelike_kernel;
 use crate::bench::runner::{BenchRunner, Table};
 use crate::coordinator::registry::ModelEntry;
-use crate::linalg::backend::{self, Backend as _, BackendKind};
+use crate::coordinator::{SampleRequest, SamplerKind, SamplingService, ServiceConfig};
+use crate::linalg::backend::{self, Backend as _, BackendKind, SimdBackend};
 use crate::linalg::Matrix;
 use crate::rng::Xoshiro;
 use crate::sampler::TreeConfig;
@@ -65,6 +83,23 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
     }
     let (gemm_table, gemm_rows) = gemm_sweep(&runner, &shapes);
     println!("\n== GEMM by backend ==\n{}", gemm_table.render());
+
+    // ---- pool vs spawn-per-call on the skinny panel sweep -----------------
+    let mut pool_shapes: Vec<(usize, usize, usize)> = vec![(4096, 64, 64)];
+    if !quick {
+        pool_shapes.push((16384, 64, 64));
+    }
+    let (pool_table, pool_rows) = pool_sweep(&runner, &pool_shapes);
+    println!("== pool vs spawn fan-out (simd backend) ==\n{}", pool_table.render());
+
+    // ---- GEMM under serving load ------------------------------------------
+    let interference = interference_case(&runner, quick);
+    println!(
+        "== 512^3 simd GEMM under serving load: idle {} vs loaded {} (x{:.2}) ==\n",
+        fmt_secs(interference.f64_or("idle_s", 0.0)),
+        fmt_secs(interference.f64_or("loaded_s", 0.0)),
+        interference.f64_or("slowdown", 0.0),
+    );
 
     // ---- end-to-end registry preprocessing --------------------------------
     let ms: Vec<usize> = if quick {
@@ -114,25 +149,47 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
         prep_table.render()
     );
 
+    let budget = backend::thread_budget();
     let json = Json::obj()
         .with("bench", "linalg_backends")
         .with("quick", quick)
         .with("threads", backend::configured_threads())
+        .with(
+            "budget",
+            Json::obj()
+                .with("cores", budget.cores)
+                .with("backend_threads", budget.backend)
+                .with("pool_workers", budget.pool_workers)
+                .with("default_shards", budget.shards)
+                .with("explicit", budget.explicit),
+        )
         .with("isa", backend::simd_isa().as_str())
         .with("gemm", Json::Arr(gemm_rows))
+        .with("pool", Json::Arr(pool_rows))
+        .with("interference", interference)
         .with("preprocess", Json::Arr(prep_rows));
     std::fs::write(out_path, json.to_string_pretty())?;
     println!("(written to {out_path})");
     Ok(json)
 }
 
-/// Measure `gemm` on each backend for every shape.  Backends are invoked
-/// as instances — the process-global selection is untouched, so this part
-/// is safe to exercise from unit tests running next to other tests.
+/// Measure `gemm` on each backend for every shape, plus the simd
+/// backend's unpacked reference walk so the packed-panel win is recorded
+/// per shape.  Backends are invoked as instances — the process-global
+/// selection is untouched, so this part is safe to exercise from unit
+/// tests running next to other tests.
 fn gemm_sweep(runner: &BenchRunner, shapes: &[(usize, usize, usize)]) -> (Table, Vec<Json>) {
-    let mut table =
-        Table::new(&["shape (m x k x n)", "naive", "blocked", "simd", "blk/naive", "simd/blk"]);
+    let mut table = Table::new(&[
+        "shape (m x k x n)",
+        "naive",
+        "blocked",
+        "simd",
+        "blk/naive",
+        "simd/blk",
+        "packed/unpacked",
+    ]);
     let mut rows: Vec<Json> = Vec::new();
+    let simd = SimdBackend::detect();
     for &(m, k, n) in shapes {
         let mut rng = Xoshiro::seeded((m * 31 + n) as u64);
         let a = Matrix::randn(m, k, 1.0, &mut rng);
@@ -145,9 +202,15 @@ fn gemm_sweep(runner: &BenchRunner, shapes: &[(usize, usize, usize)]) -> (Table,
             });
             means.push(meas.mean());
         }
+        let unpacked_s = runner
+            .measure("simd_unpacked", || {
+                let _ = simd.gemm_unpacked(&a, &b);
+            })
+            .mean();
         let (naive_s, blocked_s, simd_s) = (means[0], means[1], means[2]);
         let speedup = naive_s / blocked_s.max(1e-12);
         let simd_vs_blocked = blocked_s / simd_s.max(1e-12);
+        let packed_vs_unpacked = unpacked_s / simd_s.max(1e-12);
         table.row(vec![
             format!("{m} x {k} x {n}"),
             fmt_secs(naive_s),
@@ -155,6 +218,7 @@ fn gemm_sweep(runner: &BenchRunner, shapes: &[(usize, usize, usize)]) -> (Table,
             fmt_secs(simd_s),
             format!("x{speedup:.2}"),
             format!("x{simd_vs_blocked:.2}"),
+            format!("x{packed_vs_unpacked:.2}"),
         ]);
         rows.push(
             Json::obj()
@@ -164,11 +228,113 @@ fn gemm_sweep(runner: &BenchRunner, shapes: &[(usize, usize, usize)]) -> (Table,
                 .with("naive_s", naive_s)
                 .with("blocked_s", blocked_s)
                 .with("simd_s", simd_s)
+                .with("simd_unpacked_s", unpacked_s)
                 .with("speedup", speedup)
-                .with("simd_vs_blocked", simd_vs_blocked),
+                .with("simd_vs_blocked", simd_vs_blocked)
+                .with("packed_vs_unpacked", packed_vs_unpacked),
         );
     }
     (table, rows)
+}
+
+/// Measure the simd GEMM with its band fan-out on the persistent pool
+/// against the same bands on spawn-per-call `std::thread::scope`
+/// threads.  The skinny `M x 2K` panel shapes are where handoff cost
+/// matters: the product is over the fan-out floor but each band is
+/// small, so per-call thread spawn used to eat the parallel win.
+fn pool_sweep(runner: &BenchRunner, shapes: &[(usize, usize, usize)]) -> (Table, Vec<Json>) {
+    let mut table = Table::new(&["shape (m x k x n)", "pool", "spawn", "pool/spawn"]);
+    let mut rows: Vec<Json> = Vec::new();
+    let simd = SimdBackend::detect();
+    for &(m, k, n) in shapes {
+        let mut rng = Xoshiro::seeded((m * 17 + n) as u64);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let pool_s = runner
+            .measure("pool", || {
+                let _ = simd.gemm(&a, &b);
+            })
+            .mean();
+        let spawn_s = runner
+            .measure("spawn", || {
+                let _ = simd.gemm_spawn_fanout(&a, &b);
+            })
+            .mean();
+        let pool_vs_spawn = spawn_s / pool_s.max(1e-12);
+        table.row(vec![
+            format!("{m} x {k} x {n}"),
+            fmt_secs(pool_s),
+            fmt_secs(spawn_s),
+            format!("x{pool_vs_spawn:.2}"),
+        ]);
+        rows.push(
+            Json::obj()
+                .with("m", m)
+                .with("k", k)
+                .with("n", n)
+                .with("pool_s", pool_s)
+                .with("spawn_s", spawn_s)
+                .with("pool_vs_spawn", pool_vs_spawn),
+        );
+    }
+    (table, rows)
+}
+
+/// Measure the 512³ simd GEMM idle, then again while closed-loop
+/// sampling clients keep every shard worker of an in-process
+/// [`SamplingService`] busy — the contention a deployment sees when
+/// model registration (GEMM-heavy) lands on a box already serving
+/// traffic.  Returns `{idle_s, loaded_s, slowdown}`.
+fn interference_case(runner: &BenchRunner, quick: bool) -> Json {
+    let simd = SimdBackend::detect();
+    let dim = 512;
+    let mut rng = Xoshiro::seeded(dim as u64);
+    let a = Matrix::randn(dim, dim, 1.0, &mut rng);
+    let b = Matrix::randn(dim, dim, 1.0, &mut rng);
+    let idle_s = runner
+        .measure("gemm idle", || {
+            let _ = simd.gemm(&a, &b);
+        })
+        .mean();
+
+    let (m, k) = if quick { (512, 8) } else { (2048, 16) };
+    let svc = Arc::new(SamplingService::new(ServiceConfig::default()));
+    let mut krng = Xoshiro::seeded(11);
+    svc.register("interf", tablelike_kernel(m, k, &mut krng));
+    let stop = Arc::new(AtomicBool::new(false));
+    let loaded_s = std::thread::scope(|scope| {
+        // one closed-loop client per shard keeps the workers saturated
+        // while the foreground thread re-runs the GEMM measurement
+        for c in 0..svc.shards() {
+            let svc = Arc::clone(&svc);
+            let stop = Arc::clone(&stop);
+            scope.spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = svc.sample(SampleRequest {
+                        model: "interf".into(),
+                        n: 2,
+                        seed: Some(((c as u64) << 32) | i),
+                        kind: SamplerKind::Cholesky,
+                        deadline: None,
+                        given: Vec::new(),
+                    });
+                    i += 1;
+                }
+            });
+        }
+        let loaded = runner
+            .measure("gemm loaded", || {
+                let _ = simd.gemm(&a, &b);
+            })
+            .mean();
+        stop.store(true, Ordering::Relaxed);
+        loaded
+    });
+    Json::obj()
+        .with("idle_s", idle_s)
+        .with("loaded_s", loaded_s)
+        .with("slowdown", loaded_s / idle_s.max(1e-12))
 }
 
 #[cfg(test)]
@@ -190,9 +356,22 @@ mod tests {
             assert!(row.f64_or("naive_s", -1.0) > 0.0);
             assert!(row.f64_or("blocked_s", -1.0) > 0.0);
             assert!(row.f64_or("simd_s", -1.0) > 0.0);
+            assert!(row.f64_or("simd_unpacked_s", -1.0) > 0.0);
             assert!(row.f64_or("speedup", -1.0) > 0.0);
             assert!(row.f64_or("simd_vs_blocked", -1.0) > 0.0);
+            assert!(row.f64_or("packed_vs_unpacked", -1.0) > 0.0);
         }
         assert!(table.render().contains("24 x 16 x 24"));
+    }
+
+    #[test]
+    fn pool_sweep_produces_timings() {
+        let runner = BenchRunner { warmup: 1, iters: 3, max_secs: 0.5 };
+        let (table, rows) = pool_sweep(&runner, &[(96, 16, 16)]);
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].f64_or("pool_s", -1.0) > 0.0);
+        assert!(rows[0].f64_or("spawn_s", -1.0) > 0.0);
+        assert!(rows[0].f64_or("pool_vs_spawn", -1.0) > 0.0);
+        assert!(table.render().contains("96 x 16 x 16"));
     }
 }

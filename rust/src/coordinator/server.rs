@@ -51,6 +51,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::registry::SamplerKind;
 use crate::coordinator::service::{SampleRequest, SampleResponse, SamplingService};
+use crate::linalg::backend;
 use crate::util::json::Json;
 
 /// How often a blocked connection read re-checks the shutdown flag.
@@ -226,6 +227,24 @@ fn sample_response_json(resp: &SampleResponse) -> Json {
     out.with("samples", samples)
 }
 
+/// The process-wide compute inventory the deployment runs on: the
+/// resolved [`backend::thread_budget`] (cores, GEMM fan-out width,
+/// persistent-pool workers, default shard count, whether
+/// `NDPP_BACKEND_THREADS` pinned the split) plus the SIMD instruction
+/// set the `simd` backend would dispatch to.  Attached to the `models`
+/// audit and the `metrics` op so operators can see how cores are split
+/// without shell access to the serving host.
+fn compute_budget_json() -> Json {
+    let budget = backend::thread_budget();
+    Json::obj()
+        .with("cores", budget.cores)
+        .with("backend_threads", budget.backend)
+        .with("pool_workers", budget.pool_workers)
+        .with("default_shards", budget.shards)
+        .with("explicit", budget.explicit)
+        .with("simd_isa", backend::simd_isa().as_str())
+}
+
 /// The per-model audit record of the `models` op: what a deployment is
 /// serving, with which preprocessing, built by which backend, how fast —
 /// plus where its conditional traffic went (steering counters) and how
@@ -313,6 +332,7 @@ fn handle_line(line: &str, service: &SamplingService, stop: &AtomicBool) -> Json
                 "models",
                 Json::arr(service.registry().names().into_iter().map(Json::Str)),
             )
+            .with("compute", compute_budget_json())
             .with(
                 "detail",
                 Json::arr(
@@ -339,6 +359,7 @@ fn handle_line(line: &str, service: &SamplingService, stop: &AtomicBool) -> Json
                         .with("budget", cs.budget),
                 )
                 .with("shards", service.shards())
+                .with("compute", compute_budget_json())
                 .with(
                     "queue_depths",
                     Json::arr(service.queue_depths().into_iter().map(|d| Json::Num(d as f64))),
@@ -527,6 +548,13 @@ mod tests {
         // models: names + audit detail
         let models = client.call(&Json::obj().with("op", "models")).unwrap();
         assert_eq!(models.get("models").unwrap().as_arr().unwrap().len(), 1);
+        // compute inventory: the resolved thread budget plus the SIMD ISA
+        let compute = models.get("compute").unwrap();
+        assert!(compute.f64_or("cores", 0.0) >= 1.0);
+        assert!(compute.f64_or("backend_threads", 0.0) >= 1.0);
+        assert!(compute.f64_or("pool_workers", -1.0) >= 0.0);
+        assert!(compute.f64_or("default_shards", 0.0) >= 1.0);
+        assert!(!compute.str_or("simd_isa", "").is_empty());
         let detail = &models.get("detail").unwrap().as_arr().unwrap()[0];
         assert_eq!(detail.str_or("name", ""), "toy");
         assert_eq!(detail.f64_or("m", 0.0), 24.0);
@@ -652,6 +680,7 @@ mod tests {
         assert!(m.get("metrics").unwrap().get("toy").is_some());
         assert_eq!(m.f64_or("shards", 0.0), 2.0);
         assert_eq!(m.get("queue_depths").unwrap().as_arr().unwrap().len(), 2);
+        assert!(m.get("compute").unwrap().f64_or("cores", 0.0) >= 1.0);
         let mc = m.get("cache").unwrap();
         assert!(mc.f64_or("budget", 0.0) > 0.0);
         assert!(mc.f64_or("misses", 0.0) >= 1.0, "conditional requests built state");

@@ -64,25 +64,17 @@ pub const DEFAULT_STEER_THRESHOLD: f64 = 1e4;
 /// conditioned state — thousands of hot baskets at typical ranks.
 pub const DEFAULT_CONDITIONING_CACHE_BYTES: usize = 64 << 20;
 
-/// Shard count when `ServiceConfig::shards == 0`: one worker per core,
-/// coordinated with the blocked backend so GEMM threads and shard workers
-/// do not oversubscribe.  The backend only fans out above ~16 MFLOP —
-/// registration-time work — while steady-state per-sample kernels are
-/// single-threaded, so by default every core gets a shard; when the
-/// operator explicitly caps `NDPP_BACKEND_THREADS` *below* the core count,
-/// the cap is treated as a deliberate split and those cores are left to
-/// the backend.
+/// Shard count when `ServiceConfig::shards == 0`: the `shards` column of
+/// the process-wide [`backend::thread_budget`], which derives GEMM
+/// fan-out and shard workers from one core inventory.  The backend only
+/// fans out above [`backend::PAR_MIN_FLOPS`] — mostly registration-time
+/// work — while steady-state per-sample kernels are single-threaded, so
+/// by default every core gets a shard; when the operator explicitly caps
+/// `NDPP_BACKEND_THREADS` *below* the core count, the cap is treated as
+/// a deliberate split and those cores are left to the backend's compute
+/// pool.
 pub fn default_shards() -> usize {
-    let cores = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(2);
-    match std::env::var("NDPP_BACKEND_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-    {
-        Some(t) if t > 0 && t < cores => (cores - t).max(1),
-        _ => cores,
-    }
+    backend::thread_budget().shards
 }
 
 /// Service tuning knobs.

@@ -76,19 +76,25 @@
 //! incremental-minor refreshes — routes through the pluggable
 //! [`linalg::backend`] layer:
 //!
-//! * `blocked` (default) — cache-blocked kernels, multithreaded over row
-//!   bands (`available_parallelism`, capped by `NDPP_BACKEND_THREADS`).
-//! * `simd` — the blocked panelization and threading with explicit f64x4
-//!   microkernels in the inner loops: AVX2+FMA on x86_64, NEON on
-//!   aarch64.  The instruction set is probed **at runtime**
-//!   (`is_x86_feature_detected!`); on hardware without AVX2/FMA the
-//!   backend silently falls back to portable 4-wide unrolled lanes, so
+//! * `blocked` (default) — cache-blocked kernels, with large products
+//!   fanned out over row bands on a persistent compute pool
+//!   ([`linalg::pool`]).
+//! * `simd` — the blocked panelization and pool threading, plus a packed
+//!   `B`-panel layout and explicit vector microkernels in the inner
+//!   loops.  Each `KC`-deep panel of `B` is packed once per band into a
+//!   per-thread scratch buffer (reused across panels — no steady-state
+//!   allocation) in exactly the order the microkernel consumes it, so
+//!   the inner FMA loop streams unit-stride loads.  The instruction set
+//!   is probed **at runtime** (`is_x86_feature_detected!`) across four
+//!   tiers: AVX-512F (8-wide lanes) → AVX2+FMA (4-wide) on x86_64, NEON
+//!   on aarch64, and portable 4-wide unrolled lanes everywhere else, so
 //!   selecting `simd` is always safe — `ndpp info` and the
-//!   `BENCH_linalg.json` `isa` field report what was actually detected.
-//!   Pick `simd` when sampler preprocessing (model registration, Gram /
-//!   spectral / tree construction) dominates; pick `blocked` when you
-//!   need the exact numerics CI's default leg runs; `naive` is for
-//!   debugging only.
+//!   `BENCH_linalg.json` `isa` field report what was actually detected,
+//!   and `NDPP_SIMD_ISA=portable|avx2|avx512|neon` forces a tier for
+//!   testing.  Pick `simd` when sampler preprocessing (model
+//!   registration, Gram / spectral / tree construction) dominates; pick
+//!   `blocked` when you need the exact numerics CI's default leg runs;
+//!   `naive` is for debugging only.
 //! * `naive` — the single-threaded reference loops, kept as the
 //!   correctness oracle the fast kernels are property-tested against
 //!   (`tests/backend_equivalence.rs`).
@@ -97,19 +103,35 @@
 //! programmatically with [`linalg::backend::set_active`], per deployment
 //! with [`coordinator::ServiceConfig`]'s `backend` field, or per CLI run
 //! with `--backend`.  `cargo bench --bench linalg_backends` sweeps all
-//! three backends over GEMM shapes and end-to-end registry preprocessing
-//! and writes `BENCH_linalg.json`.
+//! three backends over GEMM shapes (packed vs unpacked, pool vs
+//! spawn-per-call, serving interference) and end-to-end registry
+//! preprocessing and writes `BENCH_linalg.json`.
+//!
+//! **Thread budget.**  One core inventory drives every knob:
+//! [`linalg::backend::thread_budget`] resolves
+//! `available_parallelism`, applies `NDPP_BACKEND_THREADS` (if set),
+//! and derives the split the rest of the system uses — `t` threads per
+//! backend op means a persistent pool of `t - 1` parked workers plus
+//! the calling thread, and when `t` is pinned below the core count the
+//! remaining `cores - t` cores become the default serving-shard count.
+//! `ndpp info`, the wire-protocol `models`/`metrics` ops, and
+//! `BENCH_linalg.json` all record the resolved budget.
 //!
 //! **Reading `BENCH_trajectory.json`.**  CI merges `BENCH_linalg.json`
 //! and `BENCH_serving.json` into one `BENCH_trajectory.json` artifact per
 //! commit (`scripts/bench_gate.py`, which also *fails* the build when
 //! blocked-vs-naive GEMM speedup at 512³ drops below 2x, simd-vs-blocked
-//! below 1.2x, or any serving config collapses to 0 req/s).  Inside it,
-//! `linalg.gemm[*]` rows carry `naive_s` / `blocked_s` / `simd_s` wall
-//! times plus `speedup` (naive/blocked) and `simd_vs_blocked`;
-//! `linalg.isa` records the detected instruction set (gates on the simd
-//! column are relaxed when it reports `portable`); `serving.sweep[*]`
-//! rows carry `requests_per_s` and latency percentiles per
+//! below 1.4x, packed-vs-unpacked below 1.15x, any pool-vs-spawn row
+//! below 1.0x, or any serving config collapses to 0 req/s).  Inside it,
+//! `linalg.gemm[*]` rows carry `naive_s` / `blocked_s` / `simd_s` /
+//! `simd_unpacked_s` wall times plus `speedup` (naive/blocked),
+//! `simd_vs_blocked`, and `packed_vs_unpacked`; `linalg.pool[*]` rows
+//! compare the persistent pool against spawn-per-call fan-out on skinny
+//! panel shapes; `linalg.interference` times a 512³ GEMM while a
+//! saturating serving load runs on the same budget; `linalg.isa` records
+//! the detected instruction set (gates on the simd and packed columns
+//! are relaxed when it reports `portable`); `serving.sweep[*]` rows
+//! carry `requests_per_s` and latency percentiles per
 //! (algorithm × client-count) config.
 //!
 //! ## Conditional sampling / basket completion
@@ -211,11 +233,14 @@
 //! `examples/serve_shards.rs` for a walkthrough.
 //!
 //! **Shard sizing.** `ServiceConfig::shards == 0` resolves via
-//! [`coordinator::default_shards`]: one worker per core, minus the cores
-//! explicitly reserved for GEMM fan-out when `NDPP_BACKEND_THREADS` is
-//! capped below the core count (registration-time preprocessing is the
-//! only GEMM-threaded phase; steady-state sampling is single-threaded per
-//! shard).  Rule of thumb: CPU-bound sampling wants `shards = cores`;
+//! [`coordinator::default_shards`], which reads the same
+//! [`linalg::backend::thread_budget`] split as the compute pool: one
+//! worker per core by default, minus the cores explicitly reserved for
+//! GEMM fan-out when `NDPP_BACKEND_THREADS` is pinned below the core
+//! count (registration-time preprocessing is the only GEMM-threaded
+//! phase; steady-state sampling is single-threaded per shard).  The
+//! resolved split is visible in `ndpp info` and the `models`/`metrics`
+//! wire ops.  Rule of thumb: CPU-bound sampling wants `shards = cores`;
 //! deployments that re-register models under live traffic should leave
 //! the backend 1–2 cores.
 //!

@@ -17,21 +17,28 @@
 //!   correctness oracle.  Single-threaded, no blocking.
 //! * [`BlockedBackend`] — cache-blocked kernels (k-panelized GEMM with a
 //!   4-row register tile, tiled transpose, banded SYRK) that split work
-//!   over row bands with `std::thread::scope` once an operation is large
-//!   enough to amortize thread spawn.  Thread count comes from
-//!   `available_parallelism`, overridable with `NDPP_BACKEND_THREADS`.
+//!   over row bands on the persistent compute pool
+//!   ([`crate::linalg::pool`]) once an operation clears
+//!   [`PAR_MIN_FLOPS`].  The fan-out width comes from [`thread_budget`]
+//!   (`NDPP_BACKEND_THREADS` override, else `available_parallelism`).
 //! * [`SimdBackend`] — the same panelization, band splitting, and thread
-//!   fan-out as `blocked`, with the inner loops replaced by the explicit
-//!   f64x4 microkernels of [`crate::linalg::simd`] (AVX2+FMA on x86_64,
-//!   NEON `vfmaq_f64` pairs on aarch64, a portable 4-wide unrolled
-//!   fallback elsewhere).  The instruction set is probed once at runtime
-//!   via `is_x86_feature_detected!` — on hardware without AVX2/FMA the
-//!   backend still works, running the portable lanes.  [`simd_isa`]
-//!   reports what was detected.
+//!   fan-out as `blocked`, with the inner loops replaced by the
+//!   runtime-dispatched microkernels of [`crate::linalg::simd`]
+//!   (AVX-512F 8-wide tiles or AVX2+FMA f64x4 on x86_64, NEON
+//!   `vfmaq_f64` pairs on aarch64, a portable 4-wide unrolled fallback
+//!   elsewhere), and with `B` packed per `KC` panel into contiguous
+//!   micro-panels (per-thread scratch, reused across panels — zero
+//!   steady-state allocation) so the register tile streams unit-stride
+//!   loads; the `gemm_tn`/`syrk` streaming paths transpose-pack their
+//!   `MR`-column A groups the same way.  The instruction set is probed
+//!   once at runtime via `is_x86_feature_detected!` — on hardware
+//!   without the vector features the backend still works, running the
+//!   portable lanes ([`simd_isa`] reports what was picked;
+//!   `NDPP_SIMD_ISA` overrides the probe).
 //!
 //! **Dispatch design.**  The blocked and simd backends share every layer
-//! above the innermost loop: `fan_out_rows` splits output rows over
-//! scoped threads with thread-count-independent chunk boundaries,
+//! above the innermost loop: `fan_out_rows` splits output rows over the
+//! persistent pool with thread-count-independent chunk boundaries,
 //! `panel_reduce` forms fixed-size chunk partials for reduction-shaped
 //! panel ops, and the band kernels walk the same `KC`-deep k panels with
 //! the same `MR`-row register tile.  They differ only in the micro
@@ -39,13 +46,23 @@
 //! [`crate::linalg::simd::Kernels`], which dispatches per-ISA exactly
 //! once per call (a single enum test — no per-element branching).
 //!
+//! **Thread budget.**  [`thread_budget`] resolves the core inventory
+//! once per process: how wide one backend op fans out (`backend`, which
+//! also sizes the pool), and how many serving shards a default
+//! [`crate::coordinator::ServiceConfig`] spins up (`shards`).  Setting
+//! `NDPP_BACKEND_THREADS` below the core count carves an explicit
+//! GEMM-vs-shards split; unset, both sides see every core and the
+//! kernel scheduler arbitrates.
+//!
 //! Determinism: for a fixed input shape every output element is accumulated
 //! in a fixed order that does not depend on the number of worker threads,
-//! so results are reproducible across runs on the same build and machine.
-//! The backends may differ from each other by normal floating-point
-//! re-association and FMA rounding (bounded well below the 1e-10 the
-//! equivalence suite enforces); samples remain reproducible because a
-//! process sticks to one backend.
+//! the packing layout, or the SIMD lane width, so results are
+//! reproducible across runs on the same build and machine (packed and
+//! unpacked walks are bitwise identical per ISA).  The backends may
+//! differ from each other by normal floating-point re-association and
+//! FMA rounding (bounded well below the 1e-10 the equivalence suite
+//! enforces); samples remain reproducible because a process sticks to
+//! one backend.
 //!
 //! Future backends (an XLA/PJRT device backend via [`crate::runtime`])
 //! only need to implement the trait and register a [`BackendKind`].
@@ -56,6 +73,7 @@ use std::sync::OnceLock;
 use anyhow::{anyhow, Result};
 
 use crate::linalg::matrix::{dot, Matrix};
+use crate::linalg::pool;
 use crate::linalg::simd;
 
 /// Dense compute primitives over row-major [`Matrix`] data.
@@ -129,8 +147,9 @@ pub enum BackendKind {
     Naive,
     /// Cache-blocked kernels with row-band multithreading (the default).
     Blocked,
-    /// Blocked panelization + threading with explicit f64x4 SIMD
-    /// microkernels (AVX2/NEON, portable fallback) in the inner loops.
+    /// Blocked panelization + threading with packed micro-panels and
+    /// explicit SIMD microkernels (AVX-512/AVX2/NEON, portable
+    /// fallback) in the inner loops.
     Simd,
 }
 
@@ -177,8 +196,9 @@ fn simd_instance() -> &'static SimdBackend {
 }
 
 /// The SIMD instruction set the `simd` backend dispatches to on this
-/// host (`avx2` / `neon` / `portable`), probing the CPU on first call.
-/// Surfaced by `ndpp info` and recorded in `BENCH_linalg.json`.
+/// host (`avx512` / `avx2` / `neon` / `portable`), probing the CPU on
+/// first call (`NDPP_SIMD_ISA` overrides the probe).  Surfaced by
+/// `ndpp info` and recorded in `BENCH_linalg.json`.
 pub fn simd_isa() -> simd::Isa {
     simd_instance().isa()
 }
@@ -228,19 +248,67 @@ pub fn set_active(kind: BackendKind) {
     ACTIVE.store(kind_code(kind), Ordering::Relaxed);
 }
 
-/// Worker threads the blocked backend may use for one operation
-/// (`NDPP_BACKEND_THREADS` override, else `available_parallelism`).
-pub fn configured_threads() -> usize {
-    static MAX: OnceLock<usize> = OnceLock::new();
-    *MAX.get_or_init(|| {
-        std::env::var("NDPP_BACKEND_THREADS")
+/// The process-wide compute-thread inventory: how many logical cores
+/// exist and how they are split between backend GEMM fan-out and
+/// serving-shard workers.
+///
+/// Resolved once per process by [`thread_budget`].  With
+/// `NDPP_BACKEND_THREADS` unset, both sides see every core — the
+/// backend fans one op out machine-wide and a default
+/// [`crate::coordinator::ServiceConfig`] runs one shard per core; the
+/// kernel scheduler arbitrates (shard workers mostly block on queue
+/// handoff, so the oversubscription is benign).  Setting
+/// `NDPP_BACKEND_THREADS=t` with `t < cores` carves an explicit split:
+/// `t` threads per backend op, `cores - t` default shards.
+#[derive(Debug, Clone, Copy)]
+pub struct ThreadBudget {
+    /// Logical cores reported by `available_parallelism` (1 if unknown).
+    pub cores: usize,
+    /// Fan-out width for one backend operation: the
+    /// `NDPP_BACKEND_THREADS` override when set, else `cores`.
+    pub backend: usize,
+    /// Persistent [`crate::linalg::pool::ComputePool`] workers backing
+    /// [`fan_out_rows`]: `backend - 1`, because the submitting thread
+    /// runs the remaining band itself.
+    pub pool_workers: usize,
+    /// Shard count a [`crate::coordinator::ServiceConfig`] with
+    /// `shards == 0` resolves to.
+    pub shards: usize,
+    /// Whether `NDPP_BACKEND_THREADS` was set to a positive integer.
+    pub explicit: bool,
+}
+
+/// The resolved [`ThreadBudget`], computed once from
+/// `NDPP_BACKEND_THREADS` / `available_parallelism` and cached for the
+/// process lifetime.  Surfaced by `ndpp info`, the server's `models`
+/// audit, and `BENCH_linalg.json`.
+pub fn thread_budget() -> ThreadBudget {
+    static BUDGET: OnceLock<ThreadBudget> = OnceLock::new();
+    *BUDGET.get_or_init(|| {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let env = std::env::var("NDPP_BACKEND_THREADS")
             .ok()
             .and_then(|s| s.parse::<usize>().ok())
-            .filter(|&n| n > 0)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            })
+            .filter(|&t| t > 0);
+        let backend = env.unwrap_or(cores);
+        let shards = match env {
+            Some(t) if t < cores => (cores - t).max(1),
+            _ => cores,
+        };
+        ThreadBudget {
+            cores,
+            backend,
+            pool_workers: backend.saturating_sub(1),
+            shards,
+            explicit: env.is_some(),
+        }
     })
+}
+
+/// Worker threads the fast backends may use for one operation — the
+/// `backend` column of [`thread_budget`].
+pub fn configured_threads() -> usize {
+    thread_budget().backend
 }
 
 // ======================================================================
@@ -427,13 +495,18 @@ const KC: usize = 256;
 /// Register tile: rows of `A`/`C` processed together, so each `B` row
 /// loaded from cache feeds 4 output rows.
 const MR: usize = 4;
-/// Minimum FLOP count (2mnk) before an op fans out over threads — below
-/// this, spawn cost dominates.  Tree-leaf SYRKs and `2K x 2K` products
-/// deliberately stay under it.
-const PAR_MIN_FLOPS: usize = 1 << 24;
+/// Minimum FLOP count (2mnk) before an op fans out over the persistent
+/// compute pool.  Under spawn-per-call this sat at `1 << 24` (~16.8
+/// MFLOP) so `std::thread` creation could amortize; pool handoff is a
+/// queue push plus a wake (microseconds), so the profitable floor drops
+/// to ~4.2 MFLOP.  Public so row-shaped callers outside the backends
+/// (e.g. [`crate::sampler::SampleTree`]'s leaf statistics) gate on the
+/// same constant instead of hand-rolled thresholds.
+pub const PAR_MIN_FLOPS: usize = 1 << 22;
 /// Minimum element count before BLAS-1/2 ops (matvec, rank-1, panels)
-/// fan out.
-const PAR_MIN_ELEMS: usize = 1 << 20;
+/// fan out.  Memory-bound work, so the floor stays high relative to its
+/// arithmetic — fanning out buys nothing once bands saturate DRAM.
+pub const PAR_MIN_ELEMS: usize = 1 << 20;
 /// Fixed row-chunk size for reduction-style ops (`panel_t_matvec`):
 /// partials are formed per chunk and summed in chunk order, keeping the
 /// result independent of the thread count the chunks are spread over.
@@ -447,10 +520,10 @@ const TN_STREAM_MAX_P: usize = 256;
 ///
 /// GEMM packs no buffers (row-major inputs are already contiguous) but
 /// k-panelizes with `KC` and register-tiles `MR` rows of the output so
-/// each loaded `B` row is reused 4x; large ops split output rows over
-/// `std::thread::scope` bands.  Every output element is accumulated in a
-/// thread-count-independent order, so results are deterministic for a
-/// fixed build.
+/// each loaded `B` row is reused 4x; large ops split output rows into
+/// bands on the persistent compute pool.  Every output element is
+/// accumulated in a thread-count-independent order, so results are
+/// deterministic for a fixed build.
 pub struct BlockedBackend;
 
 fn gemm_threads(flops: usize, rows: usize) -> usize {
@@ -469,15 +542,27 @@ fn blas2_threads(elems: usize, rows: usize) -> usize {
     }
 }
 
+/// Raw band base pointer handed to pool workers.  Safe to share because
+/// [`fan_out_rows`] carves strictly disjoint row ranges per task index
+/// and blocks until the pool drains the batch.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
 /// Shared thread fan-out for row-banded output: split `c` (`rows` rows of
 /// width `n`) into contiguous per-thread bands and run `band(chunk, r0,
-/// r1)` on each (absolute row range).  `threads <= 1` runs inline.  Band
-/// boundaries depend only on `threads` (itself a pure function of shape
-/// and configuration), never on scheduling, so results are deterministic.
-/// Both the blocked and simd backends route every banded primitive
-/// through this driver, and other subsystems with independent row-shaped
-/// work units (e.g. [`crate::sampler::SampleTree`]'s leaf statistics) may
-/// reuse it — pair it with [`configured_threads`] for sizing.
+/// r1)` on each (absolute row range).  `threads <= 1` runs inline;
+/// larger fan-outs hand the bands to the persistent
+/// [`crate::linalg::pool::ComputePool`] (the calling thread works
+/// alongside the pool, so `threads` bands occupy `threads` cores with
+/// zero thread spawns).  Band boundaries depend only on `threads`
+/// (itself a pure function of shape and configuration), never on
+/// scheduling or pool size, so results are deterministic.  Both the
+/// blocked and simd backends route every banded primitive through this
+/// driver, and other subsystems with independent row-shaped work units
+/// (e.g. [`crate::sampler::SampleTree`]'s leaf statistics) may reuse it
+/// — pair it with [`configured_threads`] for sizing.
 pub fn fan_out_rows(
     c: &mut [f64],
     n: usize,
@@ -485,7 +570,42 @@ pub fn fan_out_rows(
     threads: usize,
     band: impl Fn(&mut [f64], usize, usize) + Sync,
 ) {
-    if threads <= 1 || rows == 0 {
+    if threads <= 1 || rows == 0 || n == 0 {
+        band(c, 0, rows);
+        return;
+    }
+    debug_assert!(c.len() >= rows * n, "fan_out_rows: output shorter than rows * n");
+    let rows_per = rows.div_ceil(threads);
+    let tasks = rows.div_ceil(rows_per);
+    let len = c.len();
+    let base = SendPtr(c.as_mut_ptr());
+    pool::global().run(tasks, &|t| {
+        let i0 = t * rows_per;
+        let i1 = ((t + 1) * rows_per).min(rows);
+        let start = (i0 * n).min(len);
+        let end = (i1 * n).min(len);
+        // SAFETY: task indices map to disjoint `i0*n..i1*n` ranges of
+        // `c`, and `run` blocks until every task completes, so the
+        // mutable borrow of `c` outlives all band work.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        band(chunk, i0, i1);
+    });
+}
+
+/// The legacy spawn-per-call fan-out: identical band partitioning to
+/// [`fan_out_rows`], executed on fresh `std::thread::scope` threads
+/// instead of the persistent pool.  Kept public as the bench/test
+/// reference so `benches/linalg_backends.rs` can quantify pool-vs-spawn
+/// handoff cost and the equivalence suite can pin the two bitwise
+/// equal.
+pub fn fan_out_rows_spawn(
+    c: &mut [f64],
+    n: usize,
+    rows: usize,
+    threads: usize,
+    band: impl Fn(&mut [f64], usize, usize) + Sync,
+) {
+    if threads <= 1 || rows == 0 || n == 0 {
         band(c, 0, rows);
         return;
     }
@@ -501,10 +621,12 @@ pub fn fan_out_rows(
 
 /// Shared driver for `panel_t_matvec`-shaped reductions: serial below the
 /// fan-out threshold, otherwise partial sums formed per fixed-size
-/// [`PANEL_CHUNK`] row chunk and reduced in chunk-index order, keeping
-/// the result independent of how many threads the chunks land on.
-/// `accum(w, x, arow)` must implement `w += x * arow`; the blocked
-/// backend passes the scalar loop, the simd backend its `axpy` kernel.
+/// [`PANEL_CHUNK`] row chunk on the persistent pool (one flat partial
+/// row per chunk, routed through [`fan_out_rows`]) and reduced in
+/// chunk-index order, keeping the result independent of how many
+/// threads the chunks land on.  `accum(w, x, arow)` must implement
+/// `w += x * arow`; the blocked backend passes the scalar loop, the
+/// simd backend its `axpy` kernel.
 fn panel_reduce(
     a: &Matrix,
     row0: usize,
@@ -515,7 +637,7 @@ fn panel_reduce(
     accum: impl Fn(&mut [f64], f64, &[f64]) + Sync,
 ) -> Vec<f64> {
     let threads = blas2_threads(nrows * ncols, nrows);
-    if threads <= 1 {
+    if threads <= 1 || ncols == 0 {
         let mut w = vec![0.0; ncols];
         for (i, &x) in v.iter().enumerate().take(nrows) {
             if x == 0.0 {
@@ -525,42 +647,32 @@ fn panel_reduce(
         }
         return w;
     }
+    // One `ncols`-wide partial per PANEL_CHUNK row chunk, laid out as a
+    // `nchunks x ncols` scratch so the existing band driver spreads the
+    // chunks over the pool.
     let nchunks = nrows.div_ceil(PANEL_CHUNK);
-    let chunks_per_band = nchunks.div_ceil(threads);
-    let mut w = vec![0.0; ncols];
-    std::thread::scope(|s| {
-        let accum = &accum;
-        let mut handles = Vec::with_capacity(threads);
-        let mut c0 = 0;
-        while c0 < nchunks {
-            let c1 = (c0 + chunks_per_band).min(nchunks);
-            handles.push(s.spawn(move || {
-                let mut parts: Vec<Vec<f64>> = Vec::with_capacity(c1 - c0);
-                for chunk in c0..c1 {
-                    let r0 = chunk * PANEL_CHUNK;
-                    let r1 = (r0 + PANEL_CHUNK).min(nrows);
-                    let mut part = vec![0.0; ncols];
-                    for i in r0..r1 {
-                        let x = v[i];
-                        if x == 0.0 {
-                            continue;
-                        }
-                        accum(&mut part, x, &a.row(row0 + i)[col0..]);
-                    }
-                    parts.push(part);
+    let mut parts = vec![0.0; nchunks * ncols];
+    fan_out_rows(&mut parts, ncols, nchunks, threads.min(nchunks), |band, c0, c1| {
+        for chunk in c0..c1 {
+            let part = &mut band[(chunk - c0) * ncols..(chunk - c0 + 1) * ncols];
+            let r0 = chunk * PANEL_CHUNK;
+            let r1 = (r0 + PANEL_CHUNK).min(nrows);
+            for i in r0..r1 {
+                let x = v[i];
+                if x == 0.0 {
+                    continue;
                 }
-                parts
-            }));
-            c0 = c1;
-        }
-        for h in handles {
-            for part in h.join().expect("backend worker panicked") {
-                for (o, p) in w.iter_mut().zip(&part) {
-                    *o += p;
-                }
+                accum(part, x, &a.row(row0 + i)[col0..]);
             }
         }
     });
+    let mut w = vec![0.0; ncols];
+    for chunk in 0..nchunks {
+        let part = &parts[chunk * ncols..(chunk + 1) * ncols];
+        for (o, p) in w.iter_mut().zip(part) {
+            *o += p;
+        }
+    }
     w
 }
 
@@ -708,19 +820,21 @@ impl Backend for BlockedBackend {
 }
 
 // ======================================================================
-// SIMD backend — blocked structure, f64x4 microkernel inner loops
+// SIMD backend — blocked structure, packed panels, vector microkernels
 // ======================================================================
 
 /// [`BlockedBackend`]'s panelization, band splitting, and thread fan-out
-/// with the inner loops replaced by the runtime-dispatched f64x4
-/// microkernels of [`crate::linalg::simd`].
+/// with `B` packed per `KC` panel into microkernel-ordered scratch and
+/// the inner loops replaced by the runtime-dispatched microkernels of
+/// [`crate::linalg::simd`].
 ///
-/// Construction probes the CPU once ([`SimdBackend::detect`]): AVX2+FMA
-/// on x86_64, NEON on aarch64, otherwise the portable 4-wide lanes — so
-/// the backend is always safe to select, merely slower without vector
-/// hardware.  [`SimdBackend::portable`] pins the fallback lanes, which
-/// the equivalence suite uses to hold the intrinsic paths to the portable
-/// ones on the same machine.
+/// Construction probes the CPU once ([`SimdBackend::detect`]): AVX-512F
+/// or AVX2+FMA on x86_64, NEON on aarch64, otherwise the portable
+/// 4-wide lanes — so the backend is always safe to select, merely
+/// slower without vector hardware.  [`SimdBackend::portable`] pins the
+/// fallback lanes, which the equivalence suite uses to hold the
+/// intrinsic paths to the portable ones on the same machine;
+/// `NDPP_SIMD_ISA` overrides the probe process-wide.
 pub struct SimdBackend {
     kernels: simd::Kernels,
 }
@@ -742,6 +856,41 @@ impl SimdBackend {
     /// The instruction set actually driving the microkernels.
     pub fn isa(&self) -> simd::Isa {
         self.kernels.isa()
+    }
+
+    /// `A @ B` through the pre-packing band walk — the unpacked
+    /// reference for the packed fast path.  Bitwise identical to
+    /// [`Backend::gemm`] on this backend (packing reorders memory, not
+    /// arithmetic); kept public so `benches/linalg_backends.rs` can
+    /// time packed vs unpacked and the equivalence suite can pin them
+    /// equal.
+    pub fn gemm_unpacked(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+        let (m, n, k) = (a.rows, b.cols, a.cols);
+        let mut c = Matrix::zeros(m, n);
+        let threads = gemm_threads(2 * m * n * k, m);
+        let ker = self.kernels;
+        fan_out_rows(&mut c.data, n, m, threads, |chunk, i0, i1| {
+            simd_gemm_band_unpacked(ker, a, b, chunk, i0, i1)
+        });
+        c
+    }
+
+    /// `A @ B` with the band fan-out on spawn-per-call
+    /// [`fan_out_rows_spawn`] instead of the persistent pool — the
+    /// legacy execution model, kept public so the bench can quantify
+    /// pool-vs-spawn handoff cost.  Same bands, same packed kernels,
+    /// bitwise identical results.
+    pub fn gemm_spawn_fanout(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+        let (m, n, k) = (a.rows, b.cols, a.cols);
+        let mut c = Matrix::zeros(m, n);
+        let threads = gemm_threads(2 * m * n * k, m);
+        let ker = self.kernels;
+        fan_out_rows_spawn(&mut c.data, n, m, threads, |chunk, i0, i1| {
+            simd_gemm_band(ker, a, b, chunk, i0, i1)
+        });
+        c
     }
 }
 
@@ -896,12 +1045,99 @@ impl Backend for SimdBackend {
     }
 }
 
+thread_local! {
+    /// Per-thread packing scratch reused across panels and calls: the
+    /// packed `B` micro-panel and the transpose-packed `MR`-column `A`
+    /// group.  Pool workers are process-lived, so steady state
+    /// allocates nothing once the buffers have grown to the largest
+    /// panel seen.
+    static PACK_SCRATCH: std::cell::RefCell<(Vec<f64>, Vec<f64>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Run `f` with the calling thread's packing scratch (packed-B buffer,
+/// packed-A buffer).
+fn with_pack_scratch<R>(f: impl FnOnce(&mut Vec<f64>, &mut Vec<f64>) -> R) -> R {
+    PACK_SCRATCH.with(|cell| {
+        let mut guard = cell.borrow_mut();
+        let (bbuf, abuf) = &mut *guard;
+        f(bbuf, abuf)
+    })
+}
+
+/// Transpose-pack columns `col0..col0 + MR` of rows `r0..r1` of `a`
+/// into `buf` as four contiguous length-`r1 - r0` vectors, so the
+/// register tile reads its `A` operand unit-stride instead of striding
+/// by the row width once per k step.
+fn pack_a_cols(buf: &mut Vec<f64>, a: &Matrix, r0: usize, r1: usize, col0: usize) {
+    let kdepth = r1 - r0;
+    buf.resize(MR * kdepth, 0.0);
+    for d in 0..kdepth {
+        let row = a.row(r0 + d);
+        for l in 0..MR {
+            buf[l * kdepth + d] = row[col0 + l];
+        }
+    }
+}
+
 /// SIMD GEMM band: the same `KC`-panel / [`MR`]-row-tile walk as
-/// [`gemm_band`], with the full 4-row tile handled by the register-tiled
-/// [`simd::Kernels::gemm4`] microkernel and remainder rows by vectorized
-/// axpy.  Per output element the accumulation order (`kk` panel, `dk`
-/// ascending) is identical to the scalar band.
+/// [`gemm_band`], with `B` packed once per k panel into the micro-panel
+/// layout of [`simd::Kernels::pack_b`] (shared by every row tile in the
+/// band, held in per-thread scratch) so [`simd::Kernels::gemm4_packed`]
+/// streams unit-stride loads.  Remainder rows (< `MR` at the band end)
+/// use vectorized axpy against the unpacked `B`.  Per output element
+/// the accumulation order (`kk` panel, `dk` ascending) is identical to
+/// [`simd_gemm_band_unpacked`] and the scalar band; packed and unpacked
+/// are bitwise identical per ISA.
 fn simd_gemm_band(
+    ker: simd::Kernels,
+    a: &Matrix,
+    b: &Matrix,
+    c_band: &mut [f64],
+    i0: usize,
+    i1: usize,
+) {
+    let n = b.cols;
+    let kdim = a.cols;
+    if i1 - i0 < MR || n == 0 || kdim == 0 {
+        simd_gemm_band_unpacked(ker, a, b, c_band, i0, i1);
+        return;
+    }
+    let tiles_end = i0 + (i1 - i0) / MR * MR;
+    with_pack_scratch(|packed, _abuf| {
+        for kk in (0..kdim).step_by(KC) {
+            let kend = (kk + KC).min(kdim);
+            ker.pack_b(packed, &b.data, n, kk, kend);
+            let mut i = i0;
+            while i < tiles_end {
+                let base = (i - i0) * n;
+                ker.gemm4_packed(
+                    &mut c_band[base..base + MR * n],
+                    n,
+                    [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)],
+                    packed,
+                    kk,
+                    kend,
+                );
+                i += MR;
+            }
+            for r in tiles_end..i1 {
+                let arow = a.row(r);
+                let crow = &mut c_band[(r - i0) * n..(r - i0 + 1) * n];
+                for dk in kk..kend {
+                    ker.axpy(crow, arow[dk], b.row(dk));
+                }
+            }
+        }
+    });
+}
+
+/// The pre-packing SIMD GEMM band: `KC`-panel / `MR`-row tiles through
+/// [`simd::Kernels::gemm4`] straight off the row-major `B`.  Kept as
+/// the degenerate-shape path (bands shorter than `MR`, empty dims) and
+/// as the bench/test reference for the packed walk — bitwise identical
+/// to [`simd_gemm_band`] per ISA.
+fn simd_gemm_band_unpacked(
     ker: simd::Kernels,
     a: &Matrix,
     b: &Matrix,
@@ -940,9 +1176,71 @@ fn simd_gemm_band(
     }
 }
 
-/// SIMD `A^T B` band: one streaming pass like [`gemm_tn_band`], row
-/// contributions vectorized.
+/// SIMD `A^T B` band over output rows `j0..j1` (columns of `A`): the
+/// streaming pass of [`gemm_tn_band`] restructured into `KC`-deep
+/// source-row panels with both factors packed — `B` rows through
+/// [`simd::Kernels::pack_b`], each `MR`-column group of `A`
+/// transpose-packed by [`pack_a_cols`] — so the register tile streams
+/// unit-stride loads instead of re-striding `A` once per source row.
+/// Remainder output rows (< `MR`) keep the vectorized streaming walk.
+/// Per output element the accumulation order is source rows ascending,
+/// matching the scalar band.
 fn simd_gemm_tn_band(
+    ker: simd::Kernels,
+    a: &Matrix,
+    b: &Matrix,
+    c_band: &mut [f64],
+    j0: usize,
+    j1: usize,
+) {
+    let n = b.cols;
+    let m = a.rows;
+    if j1 - j0 < MR || n == 0 || m == 0 {
+        simd_gemm_tn_band_streaming(ker, a, b, c_band, j0, j1);
+        return;
+    }
+    let tiles_end = j0 + (j1 - j0) / MR * MR;
+    with_pack_scratch(|bbuf, abuf| {
+        for kk in (0..m).step_by(KC) {
+            let kend = (kk + KC).min(m);
+            let kdepth = kend - kk;
+            ker.pack_b(bbuf, &b.data, n, kk, kend);
+            let mut j = j0;
+            while j < tiles_end {
+                pack_a_cols(abuf, a, kk, kend, j);
+                let (a0, rest) = abuf.split_at(kdepth);
+                let (a1, rest) = rest.split_at(kdepth);
+                let (a2, a3) = rest.split_at(kdepth);
+                let base = (j - j0) * n;
+                ker.gemm4_packed(
+                    &mut c_band[base..base + MR * n],
+                    n,
+                    [a0, a1, a2, a3],
+                    bbuf,
+                    0,
+                    kdepth,
+                );
+                j += MR;
+            }
+        }
+        for r in 0..m {
+            let arow = a.row(r);
+            let brow = b.row(r);
+            for i in tiles_end..j1 {
+                let x = arow[i];
+                if x == 0.0 {
+                    continue;
+                }
+                ker.axpy(&mut c_band[(i - j0) * n..(i - j0 + 1) * n], x, brow);
+            }
+        }
+    });
+}
+
+/// Streaming SIMD `A^T B` band: one pass over source rows like
+/// [`gemm_tn_band`], row contributions vectorized.  The
+/// degenerate-shape path of [`simd_gemm_tn_band`].
+fn simd_gemm_tn_band_streaming(
     ker: simd::Kernels,
     a: &Matrix,
     b: &Matrix,
@@ -983,8 +1281,68 @@ fn simd_gemm_nt_band(
     }
 }
 
-/// SIMD SYRK band: rank-1 accumulation like [`syrk_band`], vectorized.
+/// SIMD SYRK band over output rows `j0..j1`: `sum_i a_i a_i^T`
+/// restructured like [`simd_gemm_tn_band`] — the `lo..hi` source rows
+/// packed per `KC` panel as the `B` factor, each `MR`-column group
+/// transpose-packed as the `A` factor — so the register tile streams
+/// unit-stride instead of re-reading `A` once per source row per output
+/// row.  Remainder output rows keep the vectorized rank-1 walk of
+/// [`syrk_band`].  Per output element, source rows accumulate ascending.
 fn simd_syrk_band(
+    ker: simd::Kernels,
+    a: &Matrix,
+    lo: usize,
+    hi: usize,
+    c_band: &mut [f64],
+    j0: usize,
+    j1: usize,
+) {
+    let p = a.cols;
+    let rows = hi - lo;
+    if j1 - j0 < MR || p == 0 || rows == 0 {
+        simd_syrk_band_streaming(ker, a, lo, hi, c_band, j0, j1);
+        return;
+    }
+    let tiles_end = j0 + (j1 - j0) / MR * MR;
+    with_pack_scratch(|bbuf, abuf| {
+        for kk in (0..rows).step_by(KC) {
+            let kend = (kk + KC).min(rows);
+            let kdepth = kend - kk;
+            ker.pack_b(bbuf, &a.data[lo * p..hi * p], p, kk, kend);
+            let mut j = j0;
+            while j < tiles_end {
+                pack_a_cols(abuf, a, lo + kk, lo + kend, j);
+                let (a0, rest) = abuf.split_at(kdepth);
+                let (a1, rest) = rest.split_at(kdepth);
+                let (a2, a3) = rest.split_at(kdepth);
+                let base = (j - j0) * p;
+                ker.gemm4_packed(
+                    &mut c_band[base..base + MR * p],
+                    p,
+                    [a0, a1, a2, a3],
+                    bbuf,
+                    0,
+                    kdepth,
+                );
+                j += MR;
+            }
+        }
+        for i in lo..hi {
+            let arow = a.row(i);
+            for jr in tiles_end..j1 {
+                let x = arow[jr];
+                if x == 0.0 {
+                    continue;
+                }
+                ker.axpy(&mut c_band[(jr - j0) * p..(jr - j0 + 1) * p], x, arow);
+            }
+        }
+    });
+}
+
+/// Streaming SIMD SYRK band: rank-1 accumulation like [`syrk_band`],
+/// vectorized.  The degenerate-shape path of [`simd_syrk_band`].
+fn simd_syrk_band_streaming(
     ker: simd::Kernels,
     a: &Matrix,
     lo: usize,
@@ -1371,5 +1729,84 @@ mod tests {
         assert_eq!(BackendKind::parse(kind.as_str()).unwrap(), kind);
         assert_eq!(active().name(), kind.as_str());
         assert!(configured_threads() >= 1);
+    }
+
+    #[test]
+    fn thread_budget_is_coherent() {
+        let budget = thread_budget();
+        assert!(budget.cores >= 1);
+        assert!(budget.backend >= 1);
+        assert!(budget.shards >= 1);
+        assert_eq!(budget.pool_workers, budget.backend - 1);
+        assert_eq!(configured_threads(), budget.backend);
+        if budget.explicit && budget.backend < budget.cores {
+            assert_eq!(budget.shards, budget.cores - budget.backend);
+        } else {
+            assert_eq!(budget.shards, budget.cores);
+        }
+    }
+
+    #[test]
+    fn fan_out_rows_is_thread_count_invariant() {
+        // pool-size 1 vs N pin: band boundaries are a pure function of
+        // (rows, threads); the pool only changes which OS thread runs a
+        // band, never what it computes.
+        let rows = 37;
+        let n = 13;
+        let fill = |c: &mut [f64], i0: usize, i1: usize| {
+            for i in i0..i1 {
+                for j in 0..n {
+                    c[(i - i0) * n + j] = (i * n + j) as f64 * 0.5 - 3.0;
+                }
+            }
+        };
+        let mut want = vec![0.0; rows * n];
+        fan_out_rows(&mut want, n, rows, 1, fill);
+        for threads in [2, 3, 5, 8, 64] {
+            let mut pooled = vec![0.0; rows * n];
+            fan_out_rows(&mut pooled, n, rows, threads, fill);
+            assert_eq!(pooled, want, "pool fan-out, threads={threads}");
+            let mut spawned = vec![0.0; rows * n];
+            fan_out_rows_spawn(&mut spawned, n, rows, threads, fill);
+            assert_eq!(spawned, want, "spawn fan-out, threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pool_and_spawn_fanout_agree_bitwise() {
+        // large enough to clear PAR_MIN_FLOPS so both paths actually fan
+        // out over multiple bands
+        assert!(2 * 192 * 160 * 96 >= PAR_MIN_FLOPS);
+        let be = SimdBackend::detect();
+        let mut rng = Xoshiro::seeded(13);
+        let a = Matrix::randn(192, 160, 1.0, &mut rng);
+        let b = Matrix::randn(160, 96, 1.0, &mut rng);
+        let pooled = be.gemm(&a, &b);
+        let spawned = be.gemm_spawn_fanout(&a, &b);
+        assert_eq!(pooled.data, spawned.data);
+    }
+
+    #[test]
+    fn packed_gemm_matches_unpacked_bitwise() {
+        // packing reorders memory, not arithmetic: the packed walk must
+        // reproduce the unpacked walk bit for bit on every ISA, across
+        // MR/NR tails, k = 1, and KC-straddling depths
+        let mut rng = Xoshiro::seeded(17);
+        for be in [SimdBackend::detect(), SimdBackend::portable()] {
+            for (m, k, n) in [
+                (1, 1, 1),
+                (4, 1, 9),
+                (5, 7, 3),
+                (8, 16, 16),
+                (9, KC + 1, 17),
+                (23, 33, 12),
+            ] {
+                let a = Matrix::randn(m, k, 1.0, &mut rng);
+                let b = Matrix::randn(k, n, 1.0, &mut rng);
+                let packed = be.gemm(&a, &b);
+                let unpacked = be.gemm_unpacked(&a, &b);
+                assert_eq!(packed.data, unpacked.data, "{m}x{k}x{n} isa={}", be.isa().as_str());
+            }
+        }
     }
 }

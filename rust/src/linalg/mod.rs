@@ -9,17 +9,22 @@
 //! statistics — are real GEMMs, so they route through a pluggable
 //! [`backend`]: [`backend::NaiveBackend`] (reference loops, correctness
 //! oracle), [`backend::BlockedBackend`] (cache-blocked, multithreaded;
-//! the default), or [`backend::SimdBackend`] (blocked structure with the
-//! runtime-dispatched f64x4 microkernels of [`simd`]).  Select with
-//! `NDPP_BACKEND=naive|blocked|simd`, [`backend::set_active`], or
-//! [`crate::coordinator::ServiceConfig`].
+//! the default), or [`backend::SimdBackend`] (blocked structure with
+//! packed micro-panels and the runtime-dispatched microkernels of
+//! [`simd`]).  Select with `NDPP_BACKEND=naive|blocked|simd`,
+//! [`backend::set_active`], or [`crate::coordinator::ServiceConfig`].
+//! Threaded ops run on the persistent worker pool of [`pool`], sized by
+//! [`backend::thread_budget`].
 //!
 //! Contents:
 //! * [`Matrix`] — row-major dense matrix; its `matmul`/`matvec`/`rank1_sub`
 //!   family delegates to the active backend.
-//! * [`backend`] — the compute-backend trait, implementations, selection.
-//! * [`simd`] — runtime-dispatched f64x4 microkernels (AVX2 / NEON /
-//!   portable) under the `simd` backend.
+//! * [`backend`] — the compute-backend trait, implementations, selection,
+//!   and the process-wide thread budget.
+//! * [`simd`] — runtime-dispatched microkernels (AVX-512 / AVX2 / NEON /
+//!   portable) and panel packing under the `simd` backend.
+//! * [`pool`] — lazily-initialized persistent compute pool behind
+//!   [`backend::fan_out_rows`].
 //! * [`lu`] — LU with partial pivoting: determinant, solve, inverse.
 //! * [`qr`] — Householder QR: orthonormalization, least squares (panel
 //!   updates through the backend).
@@ -33,6 +38,7 @@ pub mod chol;
 pub mod eigen;
 pub mod lu;
 pub mod matrix;
+pub mod pool;
 pub mod qr;
 pub mod simd;
 pub mod skew;

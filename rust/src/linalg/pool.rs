@@ -1,0 +1,343 @@
+//! Persistent compute-thread pool backing the backend fan-out drivers.
+//!
+//! Before this module existed every sizable `Backend` call paid a
+//! `std::thread::scope` spawn: ~100µs+ of thread creation and teardown
+//! per GEMM, on top of whatever the kernel itself cost, and each call
+//! competed blindly with the serving shards for cores.  The pool
+//! replaces that with workers spawned once per process (sized by
+//! [`crate::linalg::backend::thread_budget`]) that park on a condvar
+//! between calls; handing a batch of band tasks to a parked worker is a
+//! mutex push + wake, microseconds instead of spawns.
+//!
+//! ## Execution model
+//!
+//! [`ComputePool::run`] submits one *batch* — `tasks` indices, each
+//! handed exactly once to the task closure — then the **calling thread
+//! participates**: it claims indices alongside the workers and only
+//! waits once the batch is fully claimed.  That keeps two properties
+//! the backends rely on:
+//!
+//! * **No deadlock on nesting.**  A band task that itself calls
+//!   `run` (e.g. a tree-build band invoking a threaded SYRK) makes
+//!   progress even if every worker is busy, because the submitter
+//!   drains its own batch.
+//! * **Borrowed data is safe.**  `run` blocks until every claimed index
+//!   has finished, so the task closure may borrow stack data; the
+//!   lifetime-erased pointer handed to workers is never dereferenced
+//!   after `run` returns (a fully-claimed batch is popped, and stale
+//!   entries are only ever popped, not executed).
+//!
+//! Band *partitioning* stays with the caller ([`fan_out_rows`] computes
+//! the same deterministic row bands as the old spawn path), so moving
+//! to the pool cannot change which elements are accumulated in which
+//! order — the determinism contract survives by construction.
+//!
+//! Worker panics are caught per index ([`std::panic::catch_unwind`]),
+//! recorded on the batch, and re-raised on the submitting thread once
+//! the batch completes — the same containment the old
+//! `thread::scope` path provided via join, without poisoning the
+//! long-lived workers.
+//!
+//! [`fan_out_rows`]: crate::linalg::backend::fan_out_rows
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Lifetime-erased pointer to a batch's task closure.  Constructed only
+/// inside [`ComputePool::run`], which keeps the closure alive (and the
+/// submitting thread blocked) until every index has finished.
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (it is called concurrently from many
+// workers by design) and `run` guarantees it outlives every
+// dereference, so shipping the pointer across threads is sound.
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+impl TaskRef {
+    /// Erase the closure's borrow lifetime so workers can hold the
+    /// pointer.
+    ///
+    /// # Safety
+    /// The caller must keep `task` alive and in place until the batch's
+    /// `pending` count reaches zero — [`ComputePool::run`] does so by
+    /// blocking on `done_cv` before returning.
+    unsafe fn erase<'a>(task: &'a (dyn Fn(usize) + Sync + 'a)) -> TaskRef {
+        let short: *const (dyn Fn(usize) + Sync + 'a) = task;
+        TaskRef(std::mem::transmute::<
+            *const (dyn Fn(usize) + Sync + 'a),
+            *const (dyn Fn(usize) + Sync + 'static),
+        >(short))
+    }
+}
+
+/// One `run` call: a fixed number of task indices claimed atomically by
+/// whichever threads get there first.
+struct Batch {
+    task: TaskRef,
+    /// Number of task indices in the batch.
+    total: usize,
+    /// Next unclaimed index; claims past `total` mean "exhausted".
+    next: AtomicUsize,
+    /// Indices claimed but not yet finished, initially `total`.
+    pending: AtomicUsize,
+    /// Set when any index panicked; re-raised by the submitter.
+    poisoned: AtomicBool,
+    /// Pairs with `done_cv`: the submitter waits here for `pending == 0`.
+    done: Mutex<()>,
+    done_cv: Condvar,
+}
+
+impl Batch {
+    /// Claim the next unexecuted index, or `None` if the batch is
+    /// exhausted.
+    fn claim(&self) -> Option<usize> {
+        // Relaxed is enough: the index values carry no data dependency
+        // (task inputs were published by the queue mutex) and
+        // fetch_add already serializes claimants.
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        if i < self.total {
+            Some(i)
+        } else {
+            None
+        }
+    }
+
+    /// Run one claimed index, containing panics, and signal the
+    /// submitter when the batch drains.
+    fn run_index(&self, i: usize) {
+        // SAFETY: `ComputePool::run` keeps the closure alive until
+        // `pending` reaches zero, which cannot happen before this call
+        // completes (our decrement below is what releases it).
+        let task = unsafe { &*self.task.0 };
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(i))).is_ok();
+        if !ok {
+            self.poisoned.store(true, Ordering::Relaxed);
+        }
+        // Release pairs with the submitter's Acquire load: its read of
+        // pending == 0 makes every task's writes (band output rows)
+        // visible before `run` returns.
+        if self.pending.fetch_sub(1, Ordering::Release) == 1 {
+            let _guard = self.done.lock().expect("compute pool batch mutex poisoned");
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Arc<Batch>>>,
+    work_cv: Condvar,
+}
+
+/// A fixed set of persistent worker threads executing index batches.
+///
+/// Obtain the process-wide instance through [`global`]; constructing
+/// additional pools is possible (tests size their own) but each pool
+/// spawns its own OS threads.
+pub struct ComputePool {
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+impl ComputePool {
+    /// Spawn `workers` parked worker threads.  The submitting thread
+    /// participates in every batch, so a pool sized `N-1` saturates `N`
+    /// cores.
+    pub fn new(workers: usize) -> ComputePool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+        });
+        for w in 0..workers {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("ndpp-compute-{w}"))
+                .spawn(move || worker_loop(&shared))
+                .expect("failed to spawn compute pool worker");
+        }
+        ComputePool { shared, workers }
+    }
+
+    /// Number of worker threads (excluding the participating caller).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute `task(0..tasks)`, each index exactly once, across the
+    /// workers and the calling thread; returns when all have finished.
+    ///
+    /// Panics if any task panicked (after the whole batch has drained,
+    /// so sibling bands are never abandoned half-written).
+    pub fn run(&self, tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if tasks == 0 {
+            return;
+        }
+        if tasks == 1 || self.workers == 0 {
+            for i in 0..tasks {
+                task(i);
+            }
+            return;
+        }
+        // SAFETY: this frame blocks on `done_cv` until `pending == 0`,
+        // i.e. until no thread can touch the pointer again.
+        let erased = unsafe { TaskRef::erase(task) };
+        let batch = Arc::new(Batch {
+            task: erased,
+            total: tasks,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(tasks),
+            poisoned: AtomicBool::new(false),
+            done: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut queue = self
+                .shared
+                .queue
+                .lock()
+                .expect("compute pool queue poisoned");
+            queue.push_back(Arc::clone(&batch));
+        }
+        self.shared.work_cv.notify_all();
+        // Participate: drain indices alongside the workers.
+        while let Some(i) = batch.claim() {
+            batch.run_index(i);
+        }
+        let mut guard = batch.done.lock().expect("compute pool batch mutex poisoned");
+        while batch.pending.load(Ordering::Acquire) > 0 {
+            guard = batch
+                .done_cv
+                .wait(guard)
+                .expect("compute pool batch mutex poisoned");
+        }
+        drop(guard);
+        if batch.poisoned.load(Ordering::Relaxed) {
+            panic!("backend worker panicked");
+        }
+    }
+}
+
+/// Worker body: claim indices from the front batch, pop exhausted
+/// batches, park when the queue is empty.  Workers live for the process
+/// lifetime (the global pool is never torn down), so there is no
+/// shutdown path.
+fn worker_loop(shared: &Shared) {
+    let mut queue = shared.queue.lock().expect("compute pool queue poisoned");
+    loop {
+        if let Some(front) = queue.front() {
+            if let Some(i) = front.claim() {
+                let batch = Arc::clone(front);
+                drop(queue);
+                batch.run_index(i);
+                queue = shared.queue.lock().expect("compute pool queue poisoned");
+            } else {
+                // Exhausted: every index is claimed (the claimants are
+                // responsible for finishing them); retire the batch.
+                queue.pop_front();
+            }
+        } else {
+            queue = shared
+                .work_cv
+                .wait(queue)
+                .expect("compute pool queue poisoned");
+        }
+    }
+}
+
+/// The process-wide pool, created on first use with
+/// [`thread_budget().pool_workers`](crate::linalg::backend::thread_budget)
+/// workers (the submitting thread supplies the remaining band, so the
+/// fan-out width stays `thread_budget().backend`).
+pub fn global() -> &'static ComputePool {
+    static POOL: std::sync::OnceLock<ComputePool> = std::sync::OnceLock::new();
+    POOL.get_or_init(|| ComputePool::new(super::backend::thread_budget().pool_workers))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let pool = ComputePool::new(3);
+        for tasks in [0usize, 1, 2, 3, 7, 64, 1000] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(tasks, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} of {tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = ComputePool::new(0);
+        let hits: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(5, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn nested_run_makes_progress() {
+        // A task that submits its own batch must not deadlock even when
+        // the outer batch occupies every worker.
+        let pool = ComputePool::new(2);
+        let inner_hits = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            pool.run(4, &|_| {
+                inner_hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(inner_hits.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn sequential_batches_reuse_workers() {
+        let pool = ComputePool::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(6, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 300);
+    }
+
+    #[test]
+    #[should_panic(expected = "backend worker panicked")]
+    fn task_panic_propagates_to_submitter() {
+        let pool = ComputePool::new(2);
+        pool.run(4, &|i| {
+            if i == 2 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_poisoned_batch() {
+        let pool = ComputePool::new(2);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, &|_| panic!("boom"));
+        }));
+        assert!(outcome.is_err());
+        // Workers must still be alive and serving.
+        let total = AtomicUsize::new(0);
+        pool.run(16, &|_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn global_pool_matches_thread_budget() {
+        let budget = crate::linalg::backend::thread_budget();
+        assert_eq!(global().workers(), budget.pool_workers);
+    }
+}

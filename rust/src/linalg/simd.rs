@@ -1,9 +1,13 @@
-//! Runtime-dispatched f64x4 SIMD microkernels — the instruction-level
-//! floor of [`crate::linalg::backend::SimdBackend`].
+//! Runtime-dispatched SIMD microkernels — the instruction-level floor
+//! of [`crate::linalg::backend::SimdBackend`].
 //!
-//! Three implementations of the same small kernel set live here, selected
+//! Four implementations of the same small kernel set live here, selected
 //! once per process by probing the CPU:
 //!
+//! * **AVX-512F** (`x86_64`) — `_mm512_*` intrinsics: 8-lane `f64x8`
+//!   GEMM tiles with fused multiply-add.  Chosen when
+//!   `is_x86_feature_detected!("avx512f")` holds (plus AVX2+FMA, which
+//!   the BLAS-1 kernels keep using — see below).
 //! * **AVX2 + FMA** (`x86_64`) — `_mm256_*` intrinsics: 4-lane `f64x4`
 //!   vectors with fused multiply-add.  Chosen when
 //!   `is_x86_feature_detected!("avx2")` *and* `("fma")` both hold.
@@ -15,41 +19,64 @@
 //!   `(l0 + l2) + (l1 + l3)`), used on every other CPU.  LLVM
 //!   autovectorizes what it can; correctness never depends on that.
 //!
+//! `NDPP_SIMD_ISA` (`auto`, `portable`, `avx2`, `avx512`, `neon`)
+//! overrides the probe, read once per process; requesting an ISA the
+//! CPU does not support falls back to the probed best, so the safety
+//! invariant below survives misconfiguration.  The CI backend matrix
+//! uses `NDPP_SIMD_ISA=portable` to exercise the fallback lanes on
+//! hardware that would otherwise always take an intrinsic path.
+//!
 //! The kernel set is deliberately tiny — `axpy` (`y += a * x`), `dot`,
-//! and `gemm4` (the 4-row register-tiled GEMM panel update) — because
-//! every `Backend` primitive decomposes into those three plus control
-//! flow that lives in `backend.rs`.
+//! `gemm4` (the 4-row register-tiled GEMM panel update), and its
+//! packed-panel sibling `pack_b`/`gemm4_packed` (same arithmetic, B
+//! pre-packed into contiguous `NR`-column micro-panels so the inner
+//! loop streams unit-stride loads) — because every `Backend` primitive
+//! decomposes into those plus control flow that lives in `backend.rs`.
 //!
 //! **Determinism & equivalence.** For each output element every kernel
 //! accumulates in ascending index order, exactly like the scalar
 //! backends; vector paths differ from scalar only by lane regrouping of
 //! reductions and by FMA's single rounding, both bounded far below the
-//! 1e-10 the equivalence suite enforces.  Repeated runs on the same
-//! machine are bitwise identical (the ISA never changes under a process).
+//! 1e-10 the equivalence suite enforces.  Lane *width* never enters:
+//! `gemm4` performs one FMA per `(element, dk)` pair regardless of how
+//! many columns share a vector, so the AVX-512 tier agrees with AVX2
+//! bitwise on vector-covered columns, and `gemm4_packed` is bitwise
+//! identical to `gemm4` per ISA.  The AVX-512 tier deliberately keeps
+//! `axpy`/`dot` on the AVX2 kernels (the probe requires AVX2+FMA) so
+//! the documented 4-lane reduction grouping is identical across the two
+//! tiers.  Repeated runs on the same machine are bitwise identical (the
+//! ISA never changes under a process).
 //!
 //! **Safety.** The unsafe intrinsic paths are only reachable through
 //! [`Kernels`], whose ISA field is private and can only be populated by
 //! [`Kernels::detect`] (probes the CPU) or [`Kernels::portable`] (no
-//! unsafe at all) — so an AVX2 kernel can never be invoked on a CPU that
-//! did not report AVX2+FMA.  Every kernel bounds its loops by the slice
-//! lengths it receives; `gemm4` validates its panel geometry up front.
+//! unsafe at all) — so an AVX2 or AVX-512 kernel can never be invoked
+//! on a CPU that did not report the feature.  Every kernel bounds its
+//! loops by the slice lengths it receives; `gemm4`/`gemm4_packed`
+//! validate their panel geometry up front.
+
+use std::sync::OnceLock;
 
 /// Instruction set driving the microkernels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Isa {
+    /// AVX-512F `_mm512_*` f64x8 GEMM tiles (x86_64); BLAS-1 stays on
+    /// the AVX2 kernels, which the probe also requires.
+    Avx512,
     /// AVX2 + FMA `_mm256_*` f64x4 intrinsics (x86_64).
     Avx2,
     /// NEON `vfmaq_f64` f64x2 pairs (aarch64 baseline).
     Neon,
     /// 4-wide lane-structured scalar loops — the fallback on CPUs
-    /// without AVX2/FMA, and the reference the intrinsic paths are
-    /// tested against.
+    /// without AVX-512/AVX2/FMA, and the reference the intrinsic paths
+    /// are tested against.
     Portable,
 }
 
 impl Isa {
     pub fn as_str(&self) -> &'static str {
         match self {
+            Isa::Avx512 => "avx512",
             Isa::Avx2 => "avx2",
             Isa::Neon => "neon",
             Isa::Portable => "portable",
@@ -57,13 +84,58 @@ impl Isa {
     }
 }
 
-/// Probe the CPU once and return the best supported [`Isa`].
+/// Resolve the ISA once per process: probe the CPU, then apply the
+/// `NDPP_SIMD_ISA` override (if set) against what the probe actually
+/// found.  Cached so repeated [`Kernels::detect`] calls never re-read
+/// the environment.
 fn detect_isa() -> Isa {
+    static ISA: OnceLock<Isa> = OnceLock::new();
+    *ISA.get_or_init(|| {
+        let request = std::env::var("NDPP_SIMD_ISA").ok();
+        resolve_isa(request.as_deref())
+    })
+}
+
+/// Apply an `NDPP_SIMD_ISA` request against the probed capability set.
+/// `portable` is always honored; any other requested ISA is honored
+/// only if the CPU supports it (otherwise the probed best wins, so an
+/// intrinsic path can never run on hardware that lacks it).
+fn resolve_isa(request: Option<&str>) -> Isa {
+    let probed = probe_isa();
+    let want = match request {
+        None | Some("") | Some("auto") => return probed,
+        Some("portable") => return Isa::Portable,
+        Some("avx512") => Isa::Avx512,
+        Some("avx2") => Isa::Avx2,
+        Some("neon") => Isa::Neon,
+        Some(other) => panic!(
+            "NDPP_SIMD_ISA: unknown ISA {other:?} \
+             (expected auto, portable, avx2, avx512, or neon)"
+        ),
+    };
+    let supported = match want {
+        Isa::Portable => true,
+        Isa::Avx2 => matches!(probed, Isa::Avx2 | Isa::Avx512),
+        Isa::Avx512 => probed == Isa::Avx512,
+        Isa::Neon => probed == Isa::Neon,
+    };
+    if supported {
+        want
+    } else {
+        probed
+    }
+}
+
+/// Probe the CPU and return the best supported [`Isa`].
+fn probe_isa() -> Isa {
     #[cfg(target_arch = "x86_64")]
     {
-        if std::arch::is_x86_feature_detected!("avx2")
-            && std::arch::is_x86_feature_detected!("fma")
-        {
+        let avx2 = std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma");
+        if avx2 && std::arch::is_x86_feature_detected!("avx512f") {
+            return Isa::Avx512;
+        }
+        if avx2 {
             return Isa::Avx2;
         }
         Isa::Portable
@@ -109,13 +181,27 @@ impl Kernels {
         self.isa
     }
 
+    /// Width in columns of the packed-B micro-panel block this ISA's
+    /// [`Kernels::gemm4_packed`] consumes: 8 on AVX-512, 4 everywhere
+    /// else.
+    #[inline]
+    pub fn nr(&self) -> usize {
+        match self.isa {
+            Isa::Avx512 => 8,
+            _ => 4,
+        }
+    }
+
     /// `y[i] += a * x[i]` over the common prefix of `y` and `x`.
     #[inline]
     pub fn axpy(&self, y: &mut [f64], a: f64, x: &[f64]) {
         #[cfg(target_arch = "x86_64")]
-        if self.isa == Isa::Avx2 {
-            // SAFETY: Isa::Avx2 is only constructed by detect_isa() after
-            // confirming AVX2 and FMA support on this CPU.
+        if matches!(self.isa, Isa::Avx2 | Isa::Avx512) {
+            // SAFETY: both ISAs are only constructed by detect_isa()
+            // after confirming AVX2 and FMA support on this CPU (the
+            // AVX-512 probe requires them too).  BLAS-1 stays on the
+            // 4-lane AVX2 kernels so the documented lane grouping is
+            // identical across the two tiers.
             unsafe { avx2::axpy(y, a, x) };
             return;
         }
@@ -133,7 +219,7 @@ impl Kernels {
     #[inline]
     pub fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
         #[cfg(target_arch = "x86_64")]
-        if self.isa == Isa::Avx2 {
+        if matches!(self.isa, Isa::Avx2 | Isa::Avx512) {
             // SAFETY: see `axpy`.
             return unsafe { avx2::dot(a, b) };
         }
@@ -169,6 +255,14 @@ impl Kernels {
             assert!(arow.len() >= kend, "gemm4: a row shorter than kend {kend}");
         }
         #[cfg(target_arch = "x86_64")]
+        if self.isa == Isa::Avx512 {
+            // SAFETY: Isa::Avx512 is only constructed by detect_isa()
+            // after confirming AVX-512F support; geometry validated
+            // above.
+            unsafe { avx512::gemm4(c, n, a, b, kk, kend) };
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
         if self.isa == Isa::Avx2 {
             // SAFETY: see `axpy`; geometry validated above.
             unsafe { avx2::gemm4(c, n, a, b, kk, kend) };
@@ -181,6 +275,94 @@ impl Kernels {
             return;
         }
         portable::gemm4(c, n, a, b, kk, kend);
+    }
+
+    /// Pack rows `kk..kend` of the row-major `b` (width `n`) into the
+    /// micro-panel layout [`Kernels::gemm4_packed`] reads: `NR`-column
+    /// blocks (`NR` = [`Kernels::nr`]), each holding its `kend - kk`
+    /// rows contiguously, with the final block zero-padded past column
+    /// `n`.  Element `(dk, jb * NR + l)` of the panel lands at
+    /// `buf[(jb * (kend - kk) + dk - kk) * NR + l]`.
+    ///
+    /// `buf` is resized to exactly the panel size and every retained
+    /// entry is overwritten, so callers can reuse one buffer across
+    /// panels — steady state allocates nothing once the buffer has
+    /// grown to the largest panel seen.
+    pub fn pack_b(&self, buf: &mut Vec<f64>, b: &[f64], n: usize, kk: usize, kend: usize) {
+        assert!(kk <= kend, "pack_b: inverted k range {kk}..{kend}");
+        assert!(b.len() >= kend * n, "pack_b: b too short for {kend} rows of {n}");
+        let nr = self.nr();
+        let kdepth = kend - kk;
+        let blocks = n.div_ceil(nr);
+        buf.resize(blocks * nr * kdepth, 0.0);
+        let full = n / nr;
+        for jb in 0..full {
+            let col0 = jb * nr;
+            let dst0 = jb * kdepth * nr;
+            for d in 0..kdepth {
+                let src = (kk + d) * n + col0;
+                buf[dst0 + d * nr..dst0 + (d + 1) * nr].copy_from_slice(&b[src..src + nr]);
+            }
+        }
+        if full < blocks {
+            let col0 = full * nr;
+            let dst0 = full * kdepth * nr;
+            for d in 0..kdepth {
+                for l in 0..nr {
+                    let col = col0 + l;
+                    buf[dst0 + d * nr + l] = if col < n { b[(kk + d) * n + col] } else { 0.0 };
+                }
+            }
+        }
+    }
+
+    /// 4-row register-tiled GEMM panel update reading a packed B panel
+    /// produced by [`Kernels::pack_b`] for the same `kk..kend` range.
+    ///
+    /// Identical arithmetic to [`Kernels::gemm4`] — per output element
+    /// one FMA per `dk`, `dk` ascending — so the packed and unpacked
+    /// walks are bitwise identical per ISA; only the B access pattern
+    /// changes (unit-stride streams through the micro-panels instead of
+    /// `n`-strided row walks).
+    pub fn gemm4_packed(
+        &self,
+        c: &mut [f64],
+        n: usize,
+        a: [&[f64]; 4],
+        packed: &[f64],
+        kk: usize,
+        kend: usize,
+    ) {
+        let nr = self.nr();
+        assert!(c.len() >= 4 * n, "gemm4_packed: c too short for 4 rows of {n}");
+        assert!(kk <= kend, "gemm4_packed: inverted k range {kk}..{kend}");
+        assert!(
+            packed.len() >= n.div_ceil(nr) * nr * (kend - kk),
+            "gemm4_packed: panel too short for {} rows of {n} at NR={nr}",
+            kend - kk
+        );
+        for arow in &a {
+            assert!(arow.len() >= kend, "gemm4_packed: a row shorter than kend {kend}");
+        }
+        #[cfg(target_arch = "x86_64")]
+        if self.isa == Isa::Avx512 {
+            // SAFETY: see `gemm4`; geometry validated above.
+            unsafe { avx512::gemm4_packed(c, n, a, packed, kk, kend) };
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if self.isa == Isa::Avx2 {
+            // SAFETY: see `axpy`; geometry validated above.
+            unsafe { avx2::gemm4_packed(c, n, a, packed, kk, kend) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if self.isa == Isa::Neon {
+            // SAFETY: see `axpy`; geometry validated above.
+            unsafe { neon::gemm4_packed(c, n, a, packed, kk, kend) };
+            return;
+        }
+        portable::gemm4_packed(c, n, a, packed, kk, kend);
     }
 }
 
@@ -213,12 +395,38 @@ fn gemm4_tail(
     }
 }
 
+/// Scalar tail shared by every `gemm4_packed` implementation: the final
+/// (possibly partial) `nr`-column micro-panel `block` (row stride
+/// `nr`), covering output columns `j0..n`.  `a` holds the four A-row
+/// segments pre-sliced to the panel's k range, so the packed row index
+/// `d` and the A index coincide; per element the accumulation is `d`
+/// ascending — the same order as [`gemm4_tail`] walks its columns.
+fn gemm4_packed_tail(c: &mut [f64], n: usize, a: [&[f64]; 4], block: &[f64], nr: usize, j0: usize) {
+    let [a0, a1, a2, a3] = a;
+    let kdepth = a0.len();
+    for l in 0..(n - j0) {
+        let j = j0 + l;
+        let mut s = [c[j], c[n + j], c[2 * n + j], c[3 * n + j]];
+        for d in 0..kdepth {
+            let bj = block[d * nr + l];
+            s[0] += a0[d] * bj;
+            s[1] += a1[d] * bj;
+            s[2] += a2[d] * bj;
+            s[3] += a3[d] * bj;
+        }
+        c[j] = s[0];
+        c[n + j] = s[1];
+        c[2 * n + j] = s[2];
+        c[3 * n + j] = s[3];
+    }
+}
+
 // ======================================================================
 // Portable lanes — the fallback and the testing reference
 // ======================================================================
 
 mod portable {
-    use super::gemm4_tail;
+    use super::{gemm4_packed_tail, gemm4_tail};
 
     /// `y[i] += a * x[i]` — no reduction, so per-element results match
     /// any vector width; LLVM autovectorizes the zip.
@@ -286,6 +494,50 @@ mod portable {
         }
         gemm4_tail(c, n, [a0, a1, a2, a3], b, kk, kend, 4 * quads);
     }
+
+    /// Packed-panel 4x4 register tile: the same arithmetic as [`gemm4`]
+    /// (bitwise), reading the NR=4 micro-panel layout of
+    /// [`super::Kernels::pack_b`].
+    pub fn gemm4_packed(
+        c: &mut [f64],
+        n: usize,
+        a: [&[f64]; 4],
+        packed: &[f64],
+        kk: usize,
+        kend: usize,
+    ) {
+        let [a0, a1, a2, a3] = a;
+        let kdepth = kend - kk;
+        let quads = n / 4;
+        for q in 0..quads {
+            let j = 4 * q;
+            let base = q * kdepth * 4;
+            let mut t0 = [0.0f64; 4];
+            let mut t1 = [0.0f64; 4];
+            let mut t2 = [0.0f64; 4];
+            let mut t3 = [0.0f64; 4];
+            t0.copy_from_slice(&c[j..j + 4]);
+            t1.copy_from_slice(&c[n + j..n + j + 4]);
+            t2.copy_from_slice(&c[2 * n + j..2 * n + j + 4]);
+            t3.copy_from_slice(&c[3 * n + j..3 * n + j + 4]);
+            for d in 0..kdepth {
+                let bv = &packed[base + d * 4..base + (d + 1) * 4];
+                let dk = kk + d;
+                fma4(&mut t0, a0[dk], bv);
+                fma4(&mut t1, a1[dk], bv);
+                fma4(&mut t2, a2[dk], bv);
+                fma4(&mut t3, a3[dk], bv);
+            }
+            c[j..j + 4].copy_from_slice(&t0);
+            c[n + j..n + j + 4].copy_from_slice(&t1);
+            c[2 * n + j..2 * n + j + 4].copy_from_slice(&t2);
+            c[3 * n + j..3 * n + j + 4].copy_from_slice(&t3);
+        }
+        if 4 * quads < n {
+            let tail = [&a0[kk..kend], &a1[kk..kend], &a2[kk..kend], &a3[kk..kend]];
+            gemm4_packed_tail(c, n, tail, &packed[quads * kdepth * 4..], 4, 4 * quads);
+        }
+    }
 }
 
 // ======================================================================
@@ -300,7 +552,7 @@ mod avx2 {
         _mm_cvtsd_f64, _mm_unpackhi_pd,
     };
 
-    use super::gemm4_tail;
+    use super::{gemm4_packed_tail, gemm4_tail};
 
     /// Sum the four lanes of `v` as `(l0 + l2) + (l1 + l3)` — the same
     /// grouping as the portable lanes.
@@ -400,6 +652,155 @@ mod avx2 {
         }
         gemm4_tail(c, n, [a0, a1, a2, a3], b, kk, kend, 4 * quads);
     }
+
+    /// Packed-panel 4x4 register tile: the same FMA sequence as
+    /// [`gemm4`] (bitwise), reading the NR=4 micro-panel layout so
+    /// every `b` load is unit-stride.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 and FMA; geometry is
+    /// validated by [`super::Kernels::gemm4_packed`].
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemm4_packed(
+        c: &mut [f64],
+        n: usize,
+        a: [&[f64]; 4],
+        packed: &[f64],
+        kk: usize,
+        kend: usize,
+    ) {
+        let [a0, a1, a2, a3] = a;
+        let cp = c.as_mut_ptr();
+        let pp = packed.as_ptr();
+        let kdepth = kend - kk;
+        let quads = n / 4;
+        for q in 0..quads {
+            let j = 4 * q;
+            let base = q * kdepth * 4;
+            let mut v0 = _mm256_loadu_pd(cp.add(j));
+            let mut v1 = _mm256_loadu_pd(cp.add(n + j));
+            let mut v2 = _mm256_loadu_pd(cp.add(2 * n + j));
+            let mut v3 = _mm256_loadu_pd(cp.add(3 * n + j));
+            for d in 0..kdepth {
+                let bv = _mm256_loadu_pd(pp.add(base + d * 4));
+                let dk = kk + d;
+                v0 = _mm256_fmadd_pd(_mm256_set1_pd(*a0.get_unchecked(dk)), bv, v0);
+                v1 = _mm256_fmadd_pd(_mm256_set1_pd(*a1.get_unchecked(dk)), bv, v1);
+                v2 = _mm256_fmadd_pd(_mm256_set1_pd(*a2.get_unchecked(dk)), bv, v2);
+                v3 = _mm256_fmadd_pd(_mm256_set1_pd(*a3.get_unchecked(dk)), bv, v3);
+            }
+            _mm256_storeu_pd(cp.add(j), v0);
+            _mm256_storeu_pd(cp.add(n + j), v1);
+            _mm256_storeu_pd(cp.add(2 * n + j), v2);
+            _mm256_storeu_pd(cp.add(3 * n + j), v3);
+        }
+        if 4 * quads < n {
+            let tail = [&a0[kk..kend], &a1[kk..kend], &a2[kk..kend], &a3[kk..kend]];
+            gemm4_packed_tail(c, n, tail, &packed[quads * kdepth * 4..], 4, 4 * quads);
+        }
+    }
+}
+
+// ======================================================================
+// AVX-512F (x86_64) — f64x8 vectors, 4x8 register tile
+// ======================================================================
+
+#[cfg(target_arch = "x86_64")]
+mod avx512 {
+    use core::arch::x86_64::{_mm512_fmadd_pd, _mm512_loadu_pd, _mm512_set1_pd, _mm512_storeu_pd};
+
+    use super::{gemm4_packed_tail, gemm4_tail};
+
+    /// 4x8 register tile: four `__m512d` accumulators (one per output
+    /// row) held across the whole k panel.  Per output element this is
+    /// still one FMA per `dk`, `dk` ascending — the lane width only
+    /// changes which *columns* share a vector, never the per-element
+    /// operation sequence, so vector-covered columns match the AVX2
+    /// tier bitwise.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX-512F; geometry is
+    /// validated by [`super::Kernels::gemm4`].
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn gemm4(
+        c: &mut [f64],
+        n: usize,
+        a: [&[f64]; 4],
+        b: &[f64],
+        kk: usize,
+        kend: usize,
+    ) {
+        let [a0, a1, a2, a3] = a;
+        let cp = c.as_mut_ptr();
+        let bp = b.as_ptr();
+        let octs = n / 8;
+        for o in 0..octs {
+            let j = 8 * o;
+            let mut v0 = _mm512_loadu_pd(cp.add(j));
+            let mut v1 = _mm512_loadu_pd(cp.add(n + j));
+            let mut v2 = _mm512_loadu_pd(cp.add(2 * n + j));
+            let mut v3 = _mm512_loadu_pd(cp.add(3 * n + j));
+            for dk in kk..kend {
+                let bv = _mm512_loadu_pd(bp.add(dk * n + j));
+                v0 = _mm512_fmadd_pd(_mm512_set1_pd(*a0.get_unchecked(dk)), bv, v0);
+                v1 = _mm512_fmadd_pd(_mm512_set1_pd(*a1.get_unchecked(dk)), bv, v1);
+                v2 = _mm512_fmadd_pd(_mm512_set1_pd(*a2.get_unchecked(dk)), bv, v2);
+                v3 = _mm512_fmadd_pd(_mm512_set1_pd(*a3.get_unchecked(dk)), bv, v3);
+            }
+            _mm512_storeu_pd(cp.add(j), v0);
+            _mm512_storeu_pd(cp.add(n + j), v1);
+            _mm512_storeu_pd(cp.add(2 * n + j), v2);
+            _mm512_storeu_pd(cp.add(3 * n + j), v3);
+        }
+        gemm4_tail(c, n, [a0, a1, a2, a3], b, kk, kend, 8 * octs);
+    }
+
+    /// Packed-panel 4x8 register tile: the same FMA sequence as
+    /// [`gemm4`] (bitwise), reading the NR=8 micro-panel layout so
+    /// every `b` load is unit-stride.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX-512F; geometry is
+    /// validated by [`super::Kernels::gemm4_packed`].
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn gemm4_packed(
+        c: &mut [f64],
+        n: usize,
+        a: [&[f64]; 4],
+        packed: &[f64],
+        kk: usize,
+        kend: usize,
+    ) {
+        let [a0, a1, a2, a3] = a;
+        let cp = c.as_mut_ptr();
+        let pp = packed.as_ptr();
+        let kdepth = kend - kk;
+        let octs = n / 8;
+        for o in 0..octs {
+            let j = 8 * o;
+            let base = o * kdepth * 8;
+            let mut v0 = _mm512_loadu_pd(cp.add(j));
+            let mut v1 = _mm512_loadu_pd(cp.add(n + j));
+            let mut v2 = _mm512_loadu_pd(cp.add(2 * n + j));
+            let mut v3 = _mm512_loadu_pd(cp.add(3 * n + j));
+            for d in 0..kdepth {
+                let bv = _mm512_loadu_pd(pp.add(base + d * 8));
+                let dk = kk + d;
+                v0 = _mm512_fmadd_pd(_mm512_set1_pd(*a0.get_unchecked(dk)), bv, v0);
+                v1 = _mm512_fmadd_pd(_mm512_set1_pd(*a1.get_unchecked(dk)), bv, v1);
+                v2 = _mm512_fmadd_pd(_mm512_set1_pd(*a2.get_unchecked(dk)), bv, v2);
+                v3 = _mm512_fmadd_pd(_mm512_set1_pd(*a3.get_unchecked(dk)), bv, v3);
+            }
+            _mm512_storeu_pd(cp.add(j), v0);
+            _mm512_storeu_pd(cp.add(n + j), v1);
+            _mm512_storeu_pd(cp.add(2 * n + j), v2);
+            _mm512_storeu_pd(cp.add(3 * n + j), v3);
+        }
+        if 8 * octs < n {
+            let tail = [&a0[kk..kend], &a1[kk..kend], &a2[kk..kend], &a3[kk..kend]];
+            gemm4_packed_tail(c, n, tail, &packed[octs * kdepth * 8..], 8, 8 * octs);
+        }
+    }
 }
 
 // ======================================================================
@@ -412,7 +813,7 @@ mod neon {
         vaddq_f64, vdupq_n_f64, vfmaq_f64, vgetq_lane_f64, vld1q_f64, vst1q_f64,
     };
 
-    use super::gemm4_tail;
+    use super::{gemm4_packed_tail, gemm4_tail};
 
     /// `y[i] += a * x[i]`, two `f64x2` FMAs per step.
     ///
@@ -518,6 +919,69 @@ mod neon {
         }
         gemm4_tail(c, n, [a0, a1, a2, a3], b, kk, kend, 4 * quads);
     }
+
+    /// Packed-panel 4x4 register tile: the same FMA sequence as
+    /// [`gemm4`] (bitwise), reading the NR=4 micro-panel layout so
+    /// every `b` load is unit-stride.
+    ///
+    /// # Safety
+    /// See [`axpy`]; geometry validated by
+    /// [`super::Kernels::gemm4_packed`].
+    pub unsafe fn gemm4_packed(
+        c: &mut [f64],
+        n: usize,
+        a: [&[f64]; 4],
+        packed: &[f64],
+        kk: usize,
+        kend: usize,
+    ) {
+        let [a0, a1, a2, a3] = a;
+        let cp = c.as_mut_ptr();
+        let pp = packed.as_ptr();
+        let kdepth = kend - kk;
+        let quads = n / 4;
+        for q in 0..quads {
+            let j = 4 * q;
+            let base = q * kdepth * 4;
+            let mut v00 = vld1q_f64(cp.add(j));
+            let mut v01 = vld1q_f64(cp.add(j + 2));
+            let mut v10 = vld1q_f64(cp.add(n + j));
+            let mut v11 = vld1q_f64(cp.add(n + j + 2));
+            let mut v20 = vld1q_f64(cp.add(2 * n + j));
+            let mut v21 = vld1q_f64(cp.add(2 * n + j + 2));
+            let mut v30 = vld1q_f64(cp.add(3 * n + j));
+            let mut v31 = vld1q_f64(cp.add(3 * n + j + 2));
+            for d in 0..kdepth {
+                let b0 = vld1q_f64(pp.add(base + d * 4));
+                let b1 = vld1q_f64(pp.add(base + d * 4 + 2));
+                let dk = kk + d;
+                let x0 = vdupq_n_f64(*a0.get_unchecked(dk));
+                let x1 = vdupq_n_f64(*a1.get_unchecked(dk));
+                let x2 = vdupq_n_f64(*a2.get_unchecked(dk));
+                let x3 = vdupq_n_f64(*a3.get_unchecked(dk));
+                v00 = vfmaq_f64(v00, x0, b0);
+                v01 = vfmaq_f64(v01, x0, b1);
+                v10 = vfmaq_f64(v10, x1, b0);
+                v11 = vfmaq_f64(v11, x1, b1);
+                v20 = vfmaq_f64(v20, x2, b0);
+                v21 = vfmaq_f64(v21, x2, b1);
+                v30 = vfmaq_f64(v30, x3, b0);
+                v31 = vfmaq_f64(v31, x3, b1);
+            }
+            vst1q_f64(cp.add(j), v00);
+            vst1q_f64(cp.add(j + 2), v01);
+            vst1q_f64(cp.add(n + j), v10);
+            vst1q_f64(cp.add(n + j + 2), v11);
+            vst1q_f64(cp.add(2 * n + j), v20);
+            vst1q_f64(cp.add(2 * n + j + 2), v21);
+            vst1q_f64(cp.add(3 * n + j), v30);
+            vst1q_f64(cp.add(3 * n + j + 2), v31);
+        }
+        if 4 * quads < n {
+            let tail = [&a0[kk..kend], &a1[kk..kend], &a2[kk..kend], &a3[kk..kend]];
+            gemm4_packed_tail(c, n, tail, &packed[quads * kdepth * 4..], 4, 4 * quads);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -611,5 +1075,98 @@ mod tests {
         let mut c = vec![0.0; 8];
         let b = vec![0.0; 3]; // needs kend * n = 2 * 2 = 4
         k.gemm4(&mut c, 2, [&row, &row, &row, &row], &b, 0, 2);
+    }
+
+    #[test]
+    fn nr_matches_isa() {
+        assert_eq!(Kernels::portable().nr(), 4);
+        let det = Kernels::detect();
+        let want = if det.isa() == Isa::Avx512 { 8 } else { 4 };
+        assert_eq!(det.nr(), want);
+    }
+
+    #[test]
+    fn env_override_forces_portable_lanes() {
+        // Trivially passes when NDPP_SIMD_ISA is unset; on the CI
+        // forced-portable matrix leg it pins the override end to end.
+        if std::env::var("NDPP_SIMD_ISA").as_deref() == Ok("portable") {
+            assert_eq!(Kernels::detect().isa(), Isa::Portable);
+        }
+    }
+
+    #[test]
+    fn pack_b_layout_roundtrip() {
+        // Every panel entry lands where gemm4_packed expects it, and the
+        // final block is zero-padded past column n — for both the
+        // detected NR and the portable NR=4.
+        let mut rng = Xoshiro::seeded(31);
+        for k in [Kernels::detect(), Kernels::portable()] {
+            let nr = k.nr();
+            for (n, kdim) in [(1usize, 3usize), (4, 7), (7, 5), (8, 3), (9, 2), (12, 6), (17, 9)] {
+                let b = randv(kdim * n, &mut rng);
+                for (kk, kend) in [(0, kdim), (1, kdim), (0, 1), (kdim / 2, kdim)] {
+                    let mut buf = Vec::new();
+                    k.pack_b(&mut buf, &b, n, kk, kend);
+                    let kdepth = kend - kk;
+                    assert_eq!(buf.len(), n.div_ceil(nr) * nr * kdepth);
+                    for jb in 0..n.div_ceil(nr) {
+                        for d in 0..kdepth {
+                            for l in 0..nr {
+                                let col = jb * nr + l;
+                                let got = buf[(jb * kdepth + d) * nr + l];
+                                let want = if col < n { b[(kk + d) * n + col] } else { 0.0 };
+                                assert_eq!(got, want, "block {jb} row {d} lane {l}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm4_packed_is_bitwise_identical_to_gemm4() {
+        // The packed walk re-orders memory, never arithmetic: per ISA it
+        // must reproduce the unpacked kernel bit for bit, including
+        // NR-straddling widths, partial tail blocks, and k=1 panels.
+        let mut rng = Xoshiro::seeded(41);
+        let shapes = [
+            (1usize, 3usize),
+            (4, 7),
+            (5, 2),
+            (7, 19),
+            (8, 5),
+            (9, 4),
+            (12, 33),
+            (16, 8),
+            (19, 64),
+        ];
+        for k in [Kernels::detect(), Kernels::portable()] {
+            for (n, kdim) in shapes {
+                let rows: Vec<Vec<f64>> = (0..4).map(|_| randv(kdim, &mut rng)).collect();
+                let a = [&rows[0][..], &rows[1][..], &rows[2][..], &rows[3][..]];
+                let b = randv(kdim * n, &mut rng);
+                let c0 = randv(4 * n, &mut rng);
+                for (kk, kend) in [(0, kdim), (0, 1), (kdim / 2, kdim)] {
+                    let mut unpacked = c0.clone();
+                    k.gemm4(&mut unpacked, n, a, &b, kk, kend);
+                    let mut buf = Vec::new();
+                    k.pack_b(&mut buf, &b, n, kk, kend);
+                    let mut packed = c0.clone();
+                    k.gemm4_packed(&mut packed, n, a, &buf, kk, kend);
+                    assert_eq!(unpacked, packed, "packed walk must match unpacked bitwise");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "gemm4_packed: panel too short")]
+    fn gemm4_packed_validates_geometry() {
+        let k = Kernels::portable();
+        let row = [1.0, 2.0];
+        let mut c = vec![0.0; 8];
+        let packed = vec![0.0; 3]; // needs div_ceil(2, 4) * 4 * 2 = 8
+        k.gemm4_packed(&mut c, 2, [&row, &row, &row, &row], &packed, 0, 2);
     }
 }

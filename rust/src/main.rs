@@ -353,7 +353,7 @@ const SERVE_SPECS: &[Spec] = &[
     Spec::opt_default(
         "shards",
         "0",
-        "shard worker threads (0 = auto: cores, coordinated with NDPP_BACKEND_THREADS)",
+        "shard worker threads (0 = auto: the thread-budget split, see `ndpp info`)",
     ),
     Spec::opt_default(
         "queue-depth",
@@ -641,18 +641,27 @@ fn cmd_map(argv: &[String]) -> Result<()> {
 
 fn cmd_info() -> Result<()> {
     println!("ndpp {} — three-layer rust+jax+pallas NDPP sampling", env!("CARGO_PKG_VERSION"));
+    let budget = ndpp::linalg::backend::thread_budget();
     println!(
-        "cores: {}",
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        "cores: {} ({})",
+        budget.cores,
+        if budget.explicit {
+            "split pinned by NDPP_BACKEND_THREADS"
+        } else {
+            "auto split; NDPP_BACKEND_THREADS to pin"
+        }
     );
     println!(
-        "linalg backend: {} ({} worker threads; NDPP_BACKEND / --backend to change)",
+        "linalg backend: {} ({} threads per op = persistent pool of {} + caller; \
+         NDPP_BACKEND / --backend to change)",
         ndpp::linalg::backend::active_kind().as_str(),
-        ndpp::linalg::backend::configured_threads()
+        budget.backend,
+        budget.pool_workers
     );
+    println!("serving shards (default): {}", budget.shards);
     println!(
-        "simd ISA: {} (runtime-detected; `simd` backend falls back to portable lanes \
-         when no vector unit is found)",
+        "simd ISA: {} (runtime-detected, NDPP_SIMD_ISA to override; `simd` backend \
+         falls back avx512 -> avx2 -> portable / neon when a tier is missing)",
         ndpp::linalg::backend::simd_isa().as_str()
     );
     match ModelOps::discover() {

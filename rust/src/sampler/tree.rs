@@ -100,10 +100,10 @@ impl SampleTree {
         let rr = r * r;
         let mut sigmas = vec![0.0f64; leaves.len() * rr];
         if rr > 0 {
-            // total leaf work ~ M R^2 multiply-adds; fan out only when it
-            // dwarfs thread-spawn overhead (same spirit as the backend's
-            // own GEMM threshold)
-            let threads = if m * rr >= 4_000_000 {
+            // total leaf work ~ 2 M R^2 flops; gate on the backend's own
+            // fan-out floor so the tree and the GEMM kernels share one
+            // tuned threshold
+            let threads = if 2 * m * rr >= backend::PAR_MIN_FLOPS {
                 backend::configured_threads()
             } else {
                 1

@@ -2,14 +2,18 @@
 //! `SimdBackend`) must agree with `NaiveBackend` (the reference loops) to
 //! 1e-10 on every primitive, across awkward shapes — non-square, k = 1,
 //! empty dimensions, sizes that are not multiples of the register tile,
-//! the k-panel, or the 4-wide vector width, and sizes large enough to
-//! cross the multithreading thresholds.  The simd backend is exercised
-//! both under its runtime-detected ISA and pinned to the portable
-//! fallback lanes, and the two are held to *each other* (the
-//! fallback-equals-intrinsics guarantee).  A final pass re-runs the
-//! sampler conformance checks with each fast backend pinned
-//! process-wide, tying kernel-level equivalence to end-to-end sampling
-//! distributions.
+//! the k-panel, or the 4- and 8-wide vector widths, and sizes large
+//! enough to cross the multithreading thresholds.  The simd backend is
+//! exercised both under its runtime-detected ISA and pinned to the
+//! portable fallback lanes, and the two are held to *each other* (the
+//! fallback-equals-intrinsics guarantee); where the CPU has AVX-512F,
+//! the avx512 tier is additionally held to the portable lanes and its
+//! packed walk pinned bitwise to the unpacked one.  The persistent
+//! compute pool behind `fan_out_rows` is pinned thread-count-invariant
+//! and bitwise equal to the legacy spawn-per-call fan-out.  A final pass
+//! re-runs the sampler conformance checks with each fast backend pinned
+//! process-wide (bands running on the pool), tying kernel-level
+//! equivalence to end-to-end sampling distributions.
 //!
 //! CI runs this file on its own (`cargo test --release --test
 //! backend_equivalence`) so a fast-kernel regression fails the build
@@ -18,6 +22,7 @@
 use ndpp::linalg::backend::{
     self, Backend, BackendKind, BlockedBackend, NaiveBackend, SimdBackend,
 };
+use ndpp::linalg::simd::Isa;
 use ndpp::linalg::Matrix;
 use ndpp::ndpp::{probability, NdppKernel, Proposal};
 use ndpp::rng::Xoshiro;
@@ -161,6 +166,119 @@ fn equivalence_on_edge_shapes() {
         for be in &fast {
             check_shape(be.as_ref(), m, k, n, (m * 100 + k * 10 + n) as u64);
         }
+    }
+}
+
+#[test]
+fn equivalence_on_packed_panel_edge_shapes() {
+    // the packed-B micro-panel path: B widths straddling the NR = 4 and
+    // NR = 8 (avx512) block widths, MR tail rows (m % 4 != 0), k = 1
+    // panels, and a KC-straddling depth — each against the naive oracle
+    let fast = fast_backends();
+    for &m in &[3usize, 4, 5, 8, 11] {
+        for &n in &[1usize, 7, 8, 9, 15, 16, 17] {
+            for &k in &[1usize, 5, 257] {
+                for be in &fast {
+                    check_shape(be.as_ref(), m, k, n, (m * 10_000 + k * 100 + n) as u64);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_pool_and_spawn_paths_are_bitwise_identical() {
+    // three executions of the same logical GEMM — packed bands on the
+    // pool (the production path), unpacked bands on the pool, and packed
+    // bands on spawn-per-call threads — must agree bit for bit: packing
+    // reorders memory and the pool reorders scheduling, never the
+    // per-element accumulation
+    for be in [SimdBackend::detect(), SimdBackend::portable()] {
+        for &(m, k, n) in &[
+            (5usize, 7usize, 3usize),
+            (9, 257, 17),
+            (33, 64, 15),
+            (192, 160, 96), // over PAR_MIN_FLOPS: multi-band fan-out
+        ] {
+            let mut rng = Xoshiro::seeded((m * 13 + k * 5 + n) as u64);
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let isa = be.isa().as_str();
+            let packed = be.gemm(&a, &b);
+            let unpacked = be.gemm_unpacked(&a, &b);
+            assert_eq!(packed.data, unpacked.data, "{isa} packed vs unpacked {m}x{k}x{n}");
+            let spawned = be.gemm_spawn_fanout(&a, &b);
+            assert_eq!(packed.data, spawned.data, "{isa} pool vs spawn {m}x{k}x{n}");
+        }
+    }
+}
+
+#[test]
+fn pool_banding_is_thread_count_invariant() {
+    // pool-size 1 vs N determinism pin, straight on the public band
+    // driver: whatever thread budget fan_out_rows is handed, the bands
+    // it carves and the rows each band covers are identical
+    let rows = 53;
+    let n = 9;
+    let stamp = |c: &mut [f64], i0: usize, i1: usize| {
+        for i in i0..i1 {
+            for j in 0..n {
+                c[(i - i0) * n + j] = (i * n + j) as f64 * 1.5 - 7.0;
+            }
+        }
+    };
+    let mut want = vec![0.0; rows * n];
+    backend::fan_out_rows(&mut want, n, rows, 1, stamp);
+    for threads in [2usize, 3, 8] {
+        let mut got = vec![0.0; rows * n];
+        backend::fan_out_rows(&mut got, n, rows, threads, stamp);
+        assert_eq!(got, want, "threads={threads}");
+        let mut spawned = vec![0.0; rows * n];
+        backend::fan_out_rows_spawn(&mut spawned, n, rows, threads, stamp);
+        assert_eq!(spawned, want, "spawn threads={threads}");
+    }
+}
+
+#[test]
+fn avx512_tier_matches_portable_and_packs_bitwise() {
+    // Gated on runtime detection: on AVX-512F hardware, hold the 8-wide
+    // tier to the portable lanes at the fallback tolerance (FMA's single
+    // rounding is the only divergence), pin its packed walk bitwise to
+    // its unpacked walk, and pin repeated runs bitwise.  Elsewhere the
+    // test reports the skip and exits green — the forced-portable CI leg
+    // (NDPP_SIMD_ISA=portable) covers the fallback path there.
+    let det = SimdBackend::detect();
+    if det.isa() != Isa::Avx512 {
+        eprintln!(
+            "avx512_tier_matches_portable_and_packs_bitwise: skipped \
+             (detected ISA {}, no AVX-512F)",
+            det.isa().as_str()
+        );
+        return;
+    }
+    let port = SimdBackend::portable();
+    for &(m, k, n) in &[
+        (5usize, 7usize, 9usize), // 8-wide tail: n % 8 == 1
+        (12, 33, 16),             // exact 8-wide blocks
+        (9, 257, 23),             // KC straddle + 7-column tail
+        (258, 130, 77),
+    ] {
+        let mut rng = Xoshiro::seeded((m * 3 + k * 11 + n) as u64);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let tight = 1e-11 * (k as f64 + 1.0);
+        assert_close(&det.gemm(&a, &b), &port.gemm(&a, &b), tight, "avx512 vs portable gemm");
+        assert_close(
+            &det.syrk(&a, 0, m),
+            &port.syrk(&a, 0, m),
+            1e-11 * (m as f64 + 1.0),
+            "avx512 vs portable syrk",
+        );
+        let packed = det.gemm(&a, &b);
+        let unpacked = det.gemm_unpacked(&a, &b);
+        assert_eq!(packed.data, unpacked.data, "avx512 packed vs unpacked {m}x{k}x{n}");
+        let again = det.gemm(&a, &b);
+        assert_eq!(packed.data, again.data, "avx512 gemm nondeterministic {m}x{k}x{n}");
     }
 }
 

@@ -11,9 +11,19 @@ Gates (all on the quick-mode numbers CI produces):
 * blocked-vs-naive GEMM speedup on the 512x512x512 row must be at least
   ``--min-blocked-speedup`` (default 2.0);
 * simd-vs-blocked GEMM speedup on the same row must be at least
-  ``--min-simd-speedup`` (default 1.2) — relaxed to >= 1.0 (a "no
-  regression" bound) when the bench reports ``isa: portable``, i.e. the
-  runner has no vector unit for the simd backend to use;
+  ``--min-simd-speedup`` (default 1.4, now that the simd backend packs
+  its B panels) — relaxed to >= 1.0 (a "no regression" bound) when the
+  bench reports ``isa: portable``, i.e. the runner has no vector unit
+  for the simd backend to use;
+* packed-vs-unpacked simd GEMM speedup on the same row must be at least
+  ``--min-packed-speedup`` (default 1.15) — on ``isa: portable`` runners
+  the column only has to be present and positive (scalar lanes are
+  cache-friendly either way, so packing buys little there);
+* every ``linalg.pool[]`` row (the skinny ``M x 2K`` panel sweep) must
+  report ``pool_vs_spawn`` of at least ``--min-pool-speedup`` (default
+  1.0): the persistent pool must never lose to spawn-per-call fan-out;
+* ``linalg.interference`` must be present with positive idle/loaded
+  timings — the serving-concurrency case must actually have run;
 * every serving sweep config must report a strictly positive
   ``requests_per_s`` (0 means the pipeline wedged or every request was
   rejected);
@@ -67,7 +77,13 @@ def gate_row(linalg: dict) -> dict | None:
     return None
 
 
-def check_linalg(linalg: dict, min_blocked: float, min_simd: float) -> list[str]:
+def check_linalg(
+    linalg: dict,
+    min_blocked: float,
+    min_simd: float,
+    min_packed: float,
+    min_pool: float,
+) -> list[str]:
     errors: list[str] = []
     row = gate_row(linalg)
     if row is None:
@@ -98,6 +114,52 @@ def check_linalg(linalg: dict, min_blocked: float, min_simd: float) -> list[str]
         errors.append(
             f"linalg: simd-vs-blocked GEMM speedup {simd:.2f}x on 512^3 is "
             f"below the {simd_floor:.2f}x floor (isa: {isa})"
+        )
+
+    packed = row.get("packed_vs_unpacked")
+    # Packing reorders memory for the vector microkernels; scalar lanes
+    # stream row-major B just fine, so portable runners only need the
+    # column present and positive.
+    packed_floor = min_packed if isa != "portable" else 0.0
+    if not isinstance(packed, (int, float)) or packed <= 0.0:
+        errors.append(
+            "linalg: 512^3 row has no positive 'packed_vs_unpacked' field — "
+            "the packed-panel bench column is missing"
+        )
+    elif packed < packed_floor:
+        errors.append(
+            f"linalg: packed-vs-unpacked GEMM speedup {packed:.2f}x on 512^3 "
+            f"is below the {packed_floor:.2f}x floor (isa: {isa})"
+        )
+
+    pool = linalg.get("pool", [])
+    if not pool:
+        errors.append(
+            "linalg: no pool-vs-spawn sweep (linalg.pool[]) — the persistent-"
+            "pool bench column is missing"
+        )
+    for prow in pool:
+        shape = "%sx%sx%s" % (prow.get("m", "?"), prow.get("k", "?"), prow.get("n", "?"))
+        ratio = prow.get("pool_vs_spawn")
+        if not isinstance(ratio, (int, float)) or ratio <= 0.0:
+            errors.append(
+                f"linalg: pool row {shape} has no positive 'pool_vs_spawn'"
+            )
+        elif ratio < min_pool:
+            errors.append(
+                f"linalg: pool-vs-spawn {ratio:.2f}x on {shape} is below the "
+                f"{min_pool:.2f}x floor — the persistent pool lost to "
+                f"spawn-per-call fan-out"
+            )
+
+    interference = linalg.get("interference")
+    if not isinstance(interference, dict) or not all(
+        isinstance(interference.get(key), (int, float)) and interference.get(key) > 0.0
+        for key in ("idle_s", "loaded_s")
+    ):
+        errors.append(
+            "linalg: no serving-interference case (linalg.interference with "
+            "positive idle_s/loaded_s) — the concurrency bench is missing"
         )
     return errors
 
@@ -179,13 +241,29 @@ def summarize(linalg: dict, serving: dict) -> None:
     row = gate_row(linalg) or {}
     print(
         "bench_gate: 512^3 GEMM blocked-vs-naive x%.2f, simd-vs-blocked "
-        "x%.2f (isa: %s, %s threads)"
+        "x%.2f, packed-vs-unpacked x%.2f (isa: %s, %s threads)"
         % (
             row.get("speedup", float("nan")),
             row.get("simd_vs_blocked", float("nan")),
+            row.get("packed_vs_unpacked", float("nan")),
             linalg.get("isa", "unknown"),
             linalg.get("threads", "?"),
         )
+    )
+    for prow in linalg.get("pool", []):
+        print(
+            "bench_gate: pool-vs-spawn x%.2f on %sx%sx%s"
+            % (
+                prow.get("pool_vs_spawn", float("nan")),
+                prow.get("m", "?"),
+                prow.get("k", "?"),
+                prow.get("n", "?"),
+            )
+        )
+    interference = linalg.get("interference") or {}
+    print(
+        "bench_gate: 512^3 GEMM under serving load: x%.2f slowdown"
+        % interference.get("slowdown", float("nan"))
     )
     for srow in serving.get("sweep", []):
         print(
@@ -223,7 +301,9 @@ def main() -> int:
     ap.add_argument("--serving", default="BENCH_serving.json")
     ap.add_argument("--out", default="BENCH_trajectory.json")
     ap.add_argument("--min-blocked-speedup", type=float, default=2.0)
-    ap.add_argument("--min-simd-speedup", type=float, default=1.2)
+    ap.add_argument("--min-simd-speedup", type=float, default=1.4)
+    ap.add_argument("--min-packed-speedup", type=float, default=1.15)
+    ap.add_argument("--min-pool-speedup", type=float, default=1.0)
     args = ap.parse_args()
 
     linalg = load(args.linalg)
@@ -242,7 +322,13 @@ def main() -> int:
         fh.write("\n")
     print(f"bench_gate: wrote {args.out}")
 
-    errors = check_linalg(linalg, args.min_blocked_speedup, args.min_simd_speedup)
+    errors = check_linalg(
+        linalg,
+        args.min_blocked_speedup,
+        args.min_simd_speedup,
+        args.min_packed_speedup,
+        args.min_pool_speedup,
+    )
     errors += check_serving(serving)
     if errors:
         for e in errors:
