@@ -318,6 +318,7 @@ fn interference_case(runner: &BenchRunner, quick: bool) -> Json {
                         kind: SamplerKind::Cholesky,
                         deadline: None,
                         given: Vec::new(),
+                        chain: false,
                     });
                     i += 1;
                 }

@@ -11,25 +11,35 @@
 //! conditioning) and a **hot-basket sweep**: Zipf-repeated baskets driven
 //! through identical request schedules with the conditioning cache off
 //! and on, so the cache's effect on conditional throughput (and its
-//! hit/eviction behavior) lands in the benchmark record.  Reports
-//! per-config request throughput, sample throughput, and latency
-//! percentiles, and writes `BENCH_serving.json` (override the path with
-//! `NDPP_BENCH_OUT`; `sweep[]` + `conditional[]` + `cache[]` rows) — the
+//! hit/eviction behavior) lands in the benchmark record, and a **mixing
+//! sweep** (`mcmc_mixing[]`): burn-in steps-to-TV against an enumerated
+//! sigma~1 nonorthogonal kernel plus steered closed-loop throughput, per
+//! proposal kind (uniform oracle vs tree-driven).  Reports per-config
+//! request throughput, sample throughput, and latency percentiles, and
+//! writes `BENCH_serving.json` (override the path with `NDPP_BENCH_OUT`;
+//! `sweep[]` + `conditional[]` + `cache[]` + `mcmc_mixing[]` rows) — the
 //! serving entry of the repo's `BENCH_*` trajectory, uploaded as a CI
 //! artifact next to `BENCH_linalg.json`.  `scripts/bench_gate.py` fails
-//! the build if the `cache[]` column goes missing or the warm (cache-on)
-//! config falls below the cold one.
+//! the build if the `cache[]` column goes missing, the warm (cache-on)
+//! config falls below the cold one, the `mcmc_mixing[]` column goes
+//! missing, any steered config serves zero throughput, or the tree
+//! proposal needs more burn-in than the uniform oracle.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::bench::experiments::tablelike_kernel;
+use crate::bench::experiments::{nonorthogonal_kernel, tablelike_kernel};
 use crate::bench::runner::Table;
 use crate::coordinator::{SampleRequest, SamplerKind, SamplingService, ServiceConfig};
+use crate::ndpp::{probability, Proposal};
 use crate::rng::Xoshiro;
+use crate::sampler::{
+    McmcConfig, ProposalKind, SampleTree, Sampler as _, TreeConfig, VariableMcmcSampler,
+};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+use crate::util::testing::{empirical_from, tv};
 use crate::util::timer::fmt_secs;
 use crate::util::Timer;
 
@@ -141,6 +151,7 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
     println!("\n== closed-loop serving sweep (M={m}, 2K={}) ==\n{}", 2 * k, table.render());
 
     let cache_rows = hot_basket_sweep(quick)?;
+    let mixing_rows = mcmc_mixing_sweep(quick)?;
 
     let json = Json::obj()
         .with("bench", "serving")
@@ -151,7 +162,8 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
         .with("samples_per_request", SAMPLES_PER_REQUEST)
         .with("sweep", Json::Arr(rows))
         .with("conditional", Json::Arr(cond_rows))
-        .with("cache", Json::Arr(cache_rows));
+        .with("cache", Json::Arr(cache_rows))
+        .with("mcmc_mixing", Json::Arr(mixing_rows));
     std::fs::write(out_path, json.to_string_pretty())?;
     println!("(written to {out_path})");
     Ok(json)
@@ -202,6 +214,7 @@ fn hot_basket_sweep(quick: bool) -> Result<Vec<Json>> {
                             kind: SamplerKind::Cholesky,
                             deadline: None,
                             given,
+                            chain: false,
                         })
                         .expect("hot-basket request failed");
                     }
@@ -238,6 +251,132 @@ fn hot_basket_sweep(quick: bool) -> Result<Vec<Json>> {
     Ok(rows)
 }
 
+/// Mixing-time sweep for the up/down/swap chain, tree vs uniform proposal
+/// (`serving.mcmc_mixing[]`).  Two measurements per proposal kind:
+///
+/// 1. **Steps-to-TV** on an enumerable sigma~1 nonorthogonal kernel — the
+///    regime rejection can't touch, where MCMC is the only sampler left.
+///    The chain is restarted with a fixed burn-in budget from a
+///    power-of-two grid (adaptive burn-in off, so every sample pays
+///    exactly `g` steps) and the empirical subset distribution is
+///    compared against `probability::enumerate_probs` in total variation;
+///    `steps_to_tv` is the first grid value under the target.
+/// 2. **Steered closed-loop throughput**: a `steer_threshold = 0`
+///    deployment forces every `auto` basket request through the
+///    conditional variable-size chain; requests/s and the chain's
+///    measured acceptance rate land in the row.
+///
+/// `scripts/bench_gate.py` fails the build if the column is missing, any
+/// config's throughput is zero, or the tree proposal needs *more* burn-in
+/// steps than the uniform oracle it replaces.
+fn mcmc_mixing_sweep(quick: bool) -> Result<Vec<Json>> {
+    // small enough to enumerate (2^7 states), sigma ~ 1 so rejection's
+    // U ~ 2^{K/2} bound is gone and steering always picks the chain
+    let (mix_m, mix_k, chains) = if quick { (7usize, 2usize, 4_000usize) } else { (7, 2, 12_000) };
+    let grid: &[usize] = if quick { &[8, 16, 32, 64, 128] } else { &[8, 16, 32, 64, 128, 256] };
+    const TV_TARGET: f64 = 0.12;
+
+    let mut krng = Xoshiro::seeded(17);
+    let kernel = nonorthogonal_kernel(mix_m, mix_k, 1.0, &mut krng);
+    let want = probability::enumerate_probs(&kernel);
+    let proposal = Proposal::build(&kernel);
+    let sample_tree = SampleTree::build(&proposal.spectral(), TreeConfig { leaf_size: 2 });
+    let base = McmcConfig::for_kernel(&kernel);
+
+    // serving-sized kernel for the steered closed loop
+    let (srv_m, srv_k, iters) = if quick { (256usize, 8usize, 10usize) } else { (1024, 16, 30) };
+    let clients = 4usize;
+
+    let mut table =
+        Table::new(&["proposal", "steps_to_tv", "final_tv", "acceptance", "steered req/s"]);
+    let mut rows: Vec<Json> = Vec::new();
+    for kind in [ProposalKind::Uniform, ProposalKind::Tree] {
+        // --- mixing: burn-in grid against the enumerated law ---
+        let mut config = base;
+        config.proposal = kind;
+        config.adaptive_burn_in = false;
+        let mut steps_to_tv = *grid.last().expect("grid nonempty");
+        let mut final_tv = f64::INFINITY;
+        let mut acceptance = 0.0;
+        let mut hit = false;
+        for &g in grid {
+            let mut cfg = config;
+            cfg.burn_in = g;
+            let mut rng = Xoshiro::seeded(18);
+            let mut chain = VariableMcmcSampler::new(&kernel, cfg).with_tree(&sample_tree);
+            let freq = empirical_from(mix_m, chains, &mut rng, |r| chain.sample(r));
+            final_tv = tv(&freq, &want);
+            acceptance = chain.acceptance_rate();
+            if !hit && final_tv <= TV_TARGET {
+                steps_to_tv = g;
+                hit = true;
+            }
+        }
+
+        // --- steered closed loop: threshold 0 routes every auto request
+        // with a basket through the conditional variable-size chain ---
+        let svc = Arc::new(SamplingService::new(ServiceConfig {
+            shards: 4,
+            steer_threshold: 0.0,
+            mcmc_proposal: kind,
+            ..Default::default()
+        }));
+        let mut rng = Xoshiro::seeded(19);
+        svc.register("steer", nonorthogonal_kernel(srv_m, srv_k, 1.0, &mut rng));
+        let wall = Timer::start();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let svc = Arc::clone(&svc);
+                scope.spawn(move || {
+                    for i in 0..iters {
+                        svc.sample(SampleRequest {
+                            model: "steer".into(),
+                            n: SAMPLES_PER_REQUEST,
+                            seed: Some(((c as u64) << 32) | i as u64),
+                            kind: SamplerKind::Auto,
+                            given: vec![1, 7],
+                            ..Default::default()
+                        })
+                        .expect("steered request failed");
+                    }
+                });
+            }
+        });
+        let wall = wall.secs();
+        let req_s = (clients * iters) as f64 / wall;
+        let (srv_reqs, srv_steps, srv_accepts) = svc.metrics().mcmc_counts("steer", kind.as_str());
+        assert_eq!(srv_reqs as usize, clients * iters, "steering missed requests");
+
+        table.row(vec![
+            kind.as_str().to_string(),
+            format!("{steps_to_tv}{}", if hit { "" } else { "+" }),
+            format!("{final_tv:.3}"),
+            format!("{acceptance:.3}"),
+            format!("{req_s:.0}"),
+        ]);
+        rows.push(
+            Json::obj()
+                .with("proposal", kind.as_str())
+                .with("m", mix_m)
+                .with("chains", chains)
+                .with("tv_target", TV_TARGET)
+                .with("steps_to_tv", steps_to_tv)
+                .with("converged", hit)
+                .with("final_tv", final_tv)
+                .with("acceptance", acceptance)
+                .with("steered_m", srv_m)
+                .with("steered_clients", clients)
+                .with("steered_requests", clients * iters)
+                .with("steered_wall_s", wall)
+                .with("steered_requests_per_s", req_s)
+                .with("steered_chain_steps", srv_steps)
+                .with("steered_chain_accepts", srv_accepts),
+        );
+    }
+    println!("\n== mcmc mixing: tree vs uniform proposal (M={mix_m}, sigma=1) ==\n{}", table.render());
+    Ok(rows)
+}
+
 /// `clients` threads each issue `iters` synchronous requests back to back
 /// (each carrying the `given` basket — empty for unconditional traffic);
 /// returns (wall seconds, every per-request latency).
@@ -266,6 +405,7 @@ fn closed_loop(
                             kind,
                             deadline: None,
                             given: given.clone(),
+                            chain: false,
                         })
                         .expect("bench request failed");
                         lats.push(t.secs());

@@ -60,6 +60,18 @@ struct ModelMetrics {
     /// decision strings (`auto_rejection`, `auto_mcmc`,
     /// `refused_infeasible`)
     steering: HashMap<&'static str, u64>,
+    /// MCMC chain telemetry keyed by proposal kind (`"tree"` /
+    /// `"uniform"`): requests served, Metropolis steps taken, moves
+    /// accepted — acceptance rate and steps-per-sample derive from these
+    mcmc: HashMap<String, McmcChainMetrics>,
+}
+
+/// Per-(model, proposal-kind) MCMC chain counters.
+#[derive(Debug, Default)]
+struct McmcChainMetrics {
+    requests: u64,
+    steps: u64,
+    accepts: u64,
 }
 
 impl ModelMetrics {
@@ -76,6 +88,7 @@ impl ModelMetrics {
             conditional_samples: 0,
             conditional_given_sum: 0,
             steering: HashMap::new(),
+            mcmc: HashMap::new(),
         }
     }
 
@@ -201,6 +214,36 @@ impl Metrics {
             .or_insert(0) += 1;
     }
 
+    /// Record one MCMC-served request's chain telemetry: the proposal
+    /// kind that drove it, the Metropolis steps taken (burn-in included),
+    /// and the accepted moves among them.  Called next to
+    /// [`Metrics::record_algo`] whenever a chain produced the samples
+    /// (pinned `mcmc` or steered `auto`).
+    pub fn record_mcmc(&self, model: &str, proposal: &str, steps: u64, accepts: u64) {
+        let mut map = self.inner.lock().unwrap();
+        let c = map
+            .entry(model.to_string())
+            .or_insert_with(ModelMetrics::new)
+            .mcmc
+            .entry(proposal.to_string())
+            .or_default();
+        c.requests += 1;
+        c.steps += steps;
+        c.accepts += accepts;
+    }
+
+    /// `(requests, steps, accepts)` recorded for `(model, proposal)` so
+    /// far (`proposal` is `"tree"` or `"uniform"`).
+    pub fn mcmc_counts(&self, model: &str, proposal: &str) -> (u64, u64, u64) {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(model)
+            .and_then(|m| m.mcmc.get(proposal))
+            .map(|c| (c.requests, c.steps, c.accepts))
+            .unwrap_or((0, 0, 0))
+    }
+
     /// Steering decisions recorded for `(model, decision)` so far.
     pub fn steering_count(&self, model: &str, decision: &str) -> u64 {
         self.inner
@@ -263,6 +306,22 @@ impl Metrics {
             for (&decision, &count) in m.steering.iter() {
                 steering.set(decision, count);
             }
+            let mut mcmc = Json::obj();
+            for (proposal, c) in m.mcmc.iter() {
+                let acceptance = if c.steps == 0 {
+                    0.0
+                } else {
+                    c.accepts as f64 / c.steps as f64
+                };
+                mcmc.set(
+                    proposal,
+                    Json::obj()
+                        .with("requests", c.requests)
+                        .with("steps", c.steps)
+                        .with("accepts", c.accepts)
+                        .with("acceptance", acceptance),
+                );
+            }
             obj.set(
                 name,
                 Json::obj()
@@ -273,6 +332,7 @@ impl Metrics {
                     .with("rejected", rejected)
                     .with("conditional", conditional)
                     .with("steering", steering)
+                    .with("mcmc", mcmc)
                     .with("latency_mean_s", m.latency.mean())
                     .with("latency_p50_s", m.latency.quantile(0.5))
                     .with("latency_p95_s", m.latency.quantile(0.95))
@@ -373,6 +433,27 @@ mod tests {
         let s = snap.get("a").and_then(|a| a.get("steering")).unwrap();
         assert_eq!(s.f64_or("auto_mcmc", 0.0), 2.0);
         assert_eq!(s.f64_or("auto_rejection", 0.0), 1.0);
+    }
+
+    #[test]
+    fn mcmc_chain_counters_accumulate_per_proposal() {
+        let m = Metrics::new();
+        m.record_mcmc("a", "tree", 100, 40);
+        m.record_mcmc("a", "tree", 300, 60);
+        m.record_mcmc("a", "uniform", 1000, 50);
+        assert_eq!(m.mcmc_counts("a", "tree"), (2, 400, 100));
+        assert_eq!(m.mcmc_counts("a", "uniform"), (1, 1000, 50));
+        assert_eq!(m.mcmc_counts("b", "tree"), (0, 0, 0));
+        let snap = m.snapshot();
+        let t = snap
+            .get("a")
+            .and_then(|a| a.get("mcmc"))
+            .and_then(|c| c.get("tree"))
+            .cloned()
+            .unwrap();
+        assert_eq!(t.f64_or("requests", 0.0), 2.0);
+        assert_eq!(t.f64_or("steps", 0.0), 400.0);
+        assert!((t.f64_or("acceptance", 0.0) - 0.25).abs() < 1e-12);
     }
 
     #[test]

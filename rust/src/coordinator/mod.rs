@@ -38,5 +38,5 @@ pub use metrics::{Metrics, RejectReason};
 pub use pool::WorkerPool;
 pub use registry::{ModelEntry, Registry, SamplerKind};
 pub use service::{
-    default_shards, SampleRequest, SampleResponse, SamplingService, ServiceConfig,
+    default_shards, McmcInfo, SampleRequest, SampleResponse, SamplingService, ServiceConfig,
 };

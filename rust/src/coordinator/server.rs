@@ -4,23 +4,30 @@
 //!
 //! ```text
 //! -> {"op":"sample","model":"books","n":4,"seed":11,"algo":"auto",
-//!     "deadline_ms":250,"given":[3,17]}
+//!     "deadline_ms":250,"given":[3,17],"chain":false}
 //!    (algo: auto | cholesky | rejection | mcmc | dense.  When omitted it
 //!     defaults to rejection for unconditional requests and to auto for
 //!     `given`-bearing ones; auto lets the steering router use the
 //!     rejection sampler when the conditioned basket is feasible and fall
-//!     through to mcmc when it is not.  deadline_ms optional; given
-//!     optional — condition on an observed basket: samples are drawn
-//!     from Pr(Y | given ⊆ Y) and always contain the given items.  Items
-//!     are validated per request: distinct, < M, |given| <= 2K,
-//!     nonsingular L_J; dense does not support conditioning.  An empty /
-//!     absent given is the unconditional path.)
+//!     through to the variable-size mcmc chain when it is not.
+//!     deadline_ms optional; given optional — condition on an observed
+//!     basket: samples are drawn from Pr(Y | given ⊆ Y) and always
+//!     contain the given items.  Items are validated per request:
+//!     distinct, < M, |given| <= 2K, nonsingular L_J; dense does not
+//!     support conditioning.  An empty / absent given is the
+//!     unconditional path.  chain (optional, mcmc-served n > 1 only):
+//!     draw all n samples from one thinned chain instead of per-sample
+//!     restarts.)
 //! <- {"ok":true,"seed":11,"proposals":9,"latency_s":0.004,
 //!     "algo":"rejection","expected_rejections":2.31,
+//!     "mcmc":{"proposal":"tree","steps":812,"acceptance":0.43,
+//!             "chain":false},
 //!     "samples":[[3,17],[4],[],[8,90,411]]}
 //!    (algo echoes the *resolved* algorithm — for auto requests, where the
 //!     router sent them; expected_rejections is the feasibility estimate U
-//!     when the rejection check ran for this request)
+//!     when the rejection check ran for this request; mcmc is chain
+//!     telemetry — proposal kind, Metropolis steps, acceptance rate —
+//!     when a chain produced the samples)
 //! -> {"op":"batch","requests":[{"model":"books","n":1,"seed":1},
 //!                              {"model":"books","n":2,"seed":2}]}
 //!    (each entry takes the same fields as a `sample` op; entries fan out
@@ -204,6 +211,7 @@ fn parse_sample_request(req: &Json) -> Result<SampleRequest> {
             .and_then(|d| d.as_u64())
             .map(Duration::from_millis),
         given,
+        chain: req.get("chain").and_then(|b| b.as_bool()).unwrap_or(false),
     })
 }
 
@@ -223,6 +231,16 @@ fn sample_response_json(resp: &SampleResponse) -> Json {
         .with("algo", resp.algo.as_str());
     if let Some(u) = resp.expected_rejections {
         out = out.with("expected_rejections", u);
+    }
+    if let Some(info) = &resp.mcmc {
+        out = out.with(
+            "mcmc",
+            Json::obj()
+                .with("proposal", info.proposal.as_str())
+                .with("steps", info.steps)
+                .with("acceptance", info.acceptance())
+                .with("chain", info.chain),
+        );
     }
     out.with("samples", samples)
 }
@@ -306,6 +324,18 @@ fn model_detail_json(
         .with("cache", cache)
         .with("expected_rejections", entry.proposal.expected_rejections())
         .with("mcmc_size", entry.mcmc.size)
+        // the full chain configuration steered / pinned mcmc traffic runs
+        // with, next to the steering block that decides when it is used
+        .with(
+            "mcmc",
+            Json::obj()
+                .with("size", entry.mcmc.size)
+                .with("burn_in", entry.mcmc.burn_in)
+                .with("thinning", entry.mcmc.thinning)
+                .with("refresh_every", entry.mcmc.refresh_every)
+                .with("proposal", entry.mcmc.proposal.as_str())
+                .with("adaptive_burn_in", entry.mcmc.adaptive_burn_in),
+        )
         .with("tree_bytes", entry.tree.memory_bytes())
         .with(
             "prep_s",
@@ -577,6 +607,13 @@ mod tests {
         assert!(steer.f64_or("threshold", 0.0) > 0.0);
         assert_eq!(steer.f64_or("refused_infeasible", -1.0), 0.0);
         assert_eq!(detail.get("cache").unwrap().f64_or("entries", -1.0), 0.0);
+        // the mcmc audit block carries the active chain configuration
+        let mcfg = detail.get("mcmc").unwrap();
+        assert!(mcfg.f64_or("size", 0.0) >= 1.0);
+        assert!(mcfg.f64_or("burn_in", 0.0) >= 1.0);
+        assert!(mcfg.f64_or("thinning", 0.0) >= 1.0);
+        assert_eq!(mcfg.str_or("proposal", ""), "tree");
+        assert_eq!(mcfg.get("adaptive_burn_in").and_then(|b| b.as_bool()), Some(true));
         // sample (deterministic by seed)
         let s1 = client.sample("toy", 3, 42, "rejection").unwrap();
         let s2 = client.sample("toy", 3, 42, "rejection").unwrap();
@@ -627,6 +664,42 @@ mod tests {
         for y in parse_samples(&auto) {
             assert!(y.contains(&1) && y.contains(&5));
         }
+        // a pinned mcmc request reports chain telemetry next to the
+        // samples, and the chain flag round-trips over the wire
+        let mc1 = client
+            .call(
+                &Json::obj()
+                    .with("op", "sample")
+                    .with("model", "toy")
+                    .with("n", 3)
+                    .with("seed", 45)
+                    .with("algo", "mcmc"),
+            )
+            .unwrap();
+        assert_eq!(mc1.str_or("algo", ""), "mcmc");
+        let info = mc1.get("mcmc").unwrap();
+        assert_eq!(info.str_or("proposal", ""), "tree");
+        assert!(info.f64_or("steps", 0.0) > 0.0);
+        assert!(info.f64_or("acceptance", -1.0) >= 0.0);
+        assert_eq!(info.get("chain").and_then(|b| b.as_bool()), Some(false));
+        let mc2 = client
+            .call(
+                &Json::obj()
+                    .with("op", "sample")
+                    .with("model", "toy")
+                    .with("n", 3)
+                    .with("seed", 45)
+                    .with("algo", "mcmc")
+                    .with("chain", true),
+            )
+            .unwrap();
+        assert_eq!(mc2.get("mcmc").unwrap().get("chain").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(parse_samples(&mc2).len(), 3);
+        // chain mode amortizes burn-in: fewer steps than 3 restarts
+        assert!(
+            mc2.get("mcmc").unwrap().f64_or("steps", 0.0)
+                < mc1.get("mcmc").unwrap().f64_or("steps", f64::MAX)
+        );
         // a pinned cholesky request never runs the feasibility check
         let chol = client
             .call(
@@ -685,6 +758,16 @@ mod tests {
         assert!(mc.f64_or("budget", 0.0) > 0.0);
         assert!(mc.f64_or("misses", 0.0) >= 1.0, "conditional requests built state");
         assert!(mc.f64_or("bytes", 0.0) > 0.0);
+        // per-model mcmc telemetry accumulated from the pinned requests
+        let chain_stats = m
+            .get("metrics")
+            .and_then(|t| t.get("toy"))
+            .and_then(|t| t.get("mcmc"))
+            .and_then(|c| c.get("tree"))
+            .cloned()
+            .unwrap();
+        assert!(chain_stats.f64_or("requests", 0.0) >= 2.0);
+        assert!(chain_stats.f64_or("steps", 0.0) > 0.0);
         // shutdown
         let stop = client.call(&Json::obj().with("op", "shutdown")).unwrap();
         assert_eq!(stop.get("ok").and_then(|b| b.as_bool()), Some(true));

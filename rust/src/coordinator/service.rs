@@ -45,7 +45,7 @@ use crate::ndpp::NdppKernel;
 use crate::rng::{self, Xoshiro};
 use crate::sampler::{
     cholesky, dense, CholeskyScratch, ConditionalScratch, DenseScratch, ElementaryScratch,
-    McmcSampler, RejectionSampler, Sampler,
+    McmcSampler, ProposalKind, RejectionSampler, Sampler,
 };
 use crate::util::Timer;
 
@@ -104,6 +104,13 @@ pub struct ServiceConfig {
     /// router keeps conditional requests off the rejection sampler
     /// (default [`DEFAULT_STEER_THRESHOLD`])
     pub steer_threshold: f64,
+    /// item-proposal distribution for every MCMC chain this deployment
+    /// runs (steered `auto` traffic and pinned `mcmc` requests alike).
+    /// The default tree-driven proposal draws candidates proportional
+    /// to their conditioned marginal weight in `O(log M)` per step;
+    /// [`ProposalKind::Uniform`] pins the uniform oracle — same law,
+    /// slower mixing — for A/B validation and the bench gate.
+    pub mcmc_proposal: ProposalKind,
 }
 
 impl Default for ServiceConfig {
@@ -117,6 +124,7 @@ impl Default for ServiceConfig {
             backend: None,
             conditioning_cache_bytes: DEFAULT_CONDITIONING_CACHE_BYTES,
             steer_threshold: DEFAULT_STEER_THRESHOLD,
+            mcmc_proposal: ProposalKind::default(),
         }
     }
 }
@@ -136,6 +144,13 @@ pub struct SampleRequest {
     /// nonsingular `L_J`); an empty list is the unconditional path,
     /// byte-identical to omitting the field.
     pub given: Vec<usize>,
+    /// MCMC-only, `n > 1`: draw all `n` samples from **one** thinned
+    /// chain instead of restarting the chain per sample (the default
+    /// restart mode keeps every sample an independent replayable draw).
+    /// Chain mode amortizes burn-in across the batch; samples are
+    /// thinned by the model's `McmcConfig::thinning`.  Ignored by the
+    /// non-MCMC samplers.
+    pub chain: bool,
 }
 
 impl Default for SampleRequest {
@@ -147,6 +162,7 @@ impl Default for SampleRequest {
             kind: SamplerKind::Cholesky,
             deadline: None,
             given: Vec::new(),
+            chain: false,
         }
     }
 }
@@ -169,6 +185,36 @@ pub struct SampleResponse {
     /// `rejection` and `auto` requests, `None` for pinned
     /// cholesky/mcmc/dense
     pub expected_rejections: Option<f64>,
+    /// chain telemetry when an MCMC sampler produced the samples
+    /// (pinned `mcmc` or steered `auto`), `None` otherwise — sits next
+    /// to `expected_rejections` so clients can see both why traffic was
+    /// steered and how the chain that served it mixed
+    pub mcmc: Option<McmcInfo>,
+}
+
+/// Per-request MCMC chain telemetry, reported in [`SampleResponse`] and
+/// aggregated per model in [`Metrics`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct McmcInfo {
+    /// item-proposal distribution the chain actually used
+    pub proposal: ProposalKind,
+    /// Metropolis steps taken for this request (burn-in + sampling)
+    pub steps: u64,
+    /// accepted moves among those steps
+    pub accepts: u64,
+    /// true when the request ran in single-chain (`chain: true`) mode
+    pub chain: bool,
+}
+
+impl McmcInfo {
+    /// Fraction of proposed moves accepted (0 when no steps ran).
+    pub fn acceptance(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.accepts as f64 / self.steps as f64
+        }
+    }
 }
 
 struct Pending {
@@ -286,6 +332,7 @@ impl SamplingService {
                 let cache = Arc::clone(&cache);
                 let max_batch = config.max_batch;
                 let steer_threshold = config.steer_threshold;
+                let mcmc_proposal = config.mcmc_proposal;
                 std::thread::Builder::new()
                     .name(format!("ndpp-shard-{i}"))
                     .spawn(move || {
@@ -296,6 +343,7 @@ impl SamplingService {
                             &metrics,
                             &cache,
                             steer_threshold,
+                            mcmc_proposal,
                             max_batch,
                         )
                     })
@@ -318,7 +366,11 @@ impl SamplingService {
     /// Register a model: runs all sampler preprocessing (marginal kernel,
     /// Youla/proposal, tree, MCMC warm start).
     pub fn register(&self, name: &str, kernel: NdppKernel) {
-        let entry = ModelEntry::prepare(name, kernel, self.config.tree);
+        let mut entry = ModelEntry::prepare(name, kernel, self.config.tree);
+        // the deployment-wide proposal pin reaches the *unconditional*
+        // chains through the entry's baked config; conditional chains
+        // get it per worker via ConditionalScratch::set_mcmc_proposal
+        entry.mcmc.proposal = self.config.mcmc_proposal;
         crate::info!(
             "service",
             "registered '{name}' (M={}, 2K={}, E[rejections]={:.2}, tree={}B, backend={}, \
@@ -446,6 +498,7 @@ impl SamplingService {
 
     // ---- shard worker ---------------------------------------------------
 
+    #[allow(clippy::too_many_arguments)]
     fn worker_loop(
         shard_idx: usize,
         shard: &Shard,
@@ -453,6 +506,7 @@ impl SamplingService {
         metrics: &Metrics,
         cache: &ConditioningCache,
         steer_threshold: f64,
+        mcmc_proposal: ProposalKind,
         max_batch: usize,
     ) {
         let mut scratches: HashMap<String, WorkerScratch> = HashMap::new();
@@ -481,7 +535,15 @@ impl SamplingService {
                     // senders, so blocked callers get an error, not a hang;
                     // scratches are fully reset at next use.
                     let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        Self::run_batch(&entry, ws, metrics, cache, steer_threshold, batch);
+                        Self::run_batch(
+                            &entry,
+                            ws,
+                            metrics,
+                            cache,
+                            steer_threshold,
+                            mcmc_proposal,
+                            batch,
+                        );
                     }));
                     if run.is_err() {
                         crate::warnlog!(
@@ -541,6 +603,7 @@ impl SamplingService {
         metrics: &Metrics,
         cache: &ConditioningCache,
         steer_threshold: f64,
+        mcmc_proposal: ProposalKind,
         batch: Vec<Pending>,
     ) {
         for p in batch {
@@ -562,19 +625,20 @@ impl SamplingService {
             // conditional (given-bearing) requests take their own
             // dispatch; an empty `given` stays on the unconditional paths
             // below, byte-identical to a request without the field
-            let (result, algo, expected_rejections) = if !p.req.given.is_empty() {
+            let (result, algo, expected_rejections, mcmc) = if !p.req.given.is_empty() {
                 match Self::run_conditional(
                     entry,
                     ws,
                     cache,
                     steer_threshold,
+                    mcmc_proposal,
                     metrics,
                     &p.req,
                     &mut rng,
                     &mut proposals,
                 ) {
-                    Ok((samples, algo, u)) => (Ok(samples), algo, u),
-                    Err(e) => (Err(e), p.req.kind, None),
+                    Ok((samples, algo, u, info)) => (Ok(samples), algo, u, info),
+                    Err(e) => (Err(e), p.req.kind, None, None),
                 }
             } else {
                 // unconditional `auto` has nothing to steer around:
@@ -585,9 +649,18 @@ impl SamplingService {
                 };
                 let u = (kind == SamplerKind::Rejection)
                     .then(|| entry.proposal.expected_rejections());
-                let result =
-                    Self::run_unconditional(entry, ws, kind, p.req.n, &mut rng, &mut proposals);
-                (result, kind, u)
+                match Self::run_unconditional(
+                    entry,
+                    ws,
+                    kind,
+                    p.req.n,
+                    p.req.chain,
+                    &mut rng,
+                    &mut proposals,
+                ) {
+                    Ok((samples, info)) => (Ok(samples), kind, u, info),
+                    Err(e) => (Err(e), kind, u, None),
+                }
             };
             let latency = p.enqueued.secs();
             match result {
@@ -608,6 +681,14 @@ impl SamplingService {
                             p.req.n as u64,
                         );
                     }
+                    if let Some(info) = &mcmc {
+                        metrics.record_mcmc(
+                            &entry.name,
+                            info.proposal.as_str(),
+                            info.steps,
+                            info.accepts,
+                        );
+                    }
                     let _ = p.reply.send(Ok(SampleResponse {
                         samples,
                         proposals,
@@ -615,6 +696,7 @@ impl SamplingService {
                         latency_secs: latency,
                         algo,
                         expected_rejections,
+                        mcmc,
                     }));
                 }
                 Err(e) => {
@@ -646,11 +728,12 @@ impl SamplingService {
         ws: &mut WorkerScratch,
         cache: &ConditioningCache,
         steer_threshold: f64,
+        mcmc_proposal: ProposalKind,
         metrics: &Metrics,
         req: &SampleRequest,
         rng: &mut Xoshiro,
         proposals: &mut u64,
-    ) -> Result<(Vec<Vec<usize>>, SamplerKind, Option<f64>)> {
+    ) -> Result<(Vec<Vec<usize>>, SamplerKind, Option<f64>, Option<McmcInfo>)> {
         if !req.kind.supports_conditioning() {
             return Err(anyhow!(
                 "sampler '{}' does not support conditioning — use auto, cholesky, \
@@ -682,7 +765,7 @@ impl SamplingService {
                         scratch.sample_cholesky(z, rng).0
                     })
                     .collect();
-                Ok((samples, SamplerKind::Cholesky, None))
+                Ok((samples, SamplerKind::Cholesky, None, None))
             }
             SamplerKind::Rejection | SamplerKind::Auto => {
                 if scratch.ensure_rejection(&entry.conditional, &entry.tree) {
@@ -706,22 +789,47 @@ impl SamplingService {
                             steer_threshold
                         ));
                     }
-                    // auto: silently steer to the fixed-size MCMC chain
+                    // auto: silently steer to the *variable-size* MCMC
+                    // chain — like the rejection sampler it replaces, it
+                    // targets the full conditional law Pr(Y | J ⊆ Y), so
+                    // steering changes how samples are produced, not what
+                    // distribution they follow
                     metrics.record_steering(&entry.name, "auto_mcmc");
+                    scratch.set_mcmc_proposal(mcmc_proposal);
                     if scratch.ensure_mcmc(&entry.conditional, z, &entry.kernel) {
                         cache.insert(
                             &entry.name,
                             scratch.shared_state().expect("just conditioned"),
                         );
                     }
-                    let samples = (0..req.n)
-                        .map(|_| {
-                            let (y, steps) = scratch.sample_mcmc(&entry.kernel, rng);
-                            *proposals += steps;
-                            y
-                        })
-                        .collect();
-                    return Ok((samples, SamplerKind::Mcmc, Some(u)));
+                    let chain = req.chain && req.n > 1;
+                    let samples = if chain {
+                        let (ys, steps) = scratch.sample_mcmc_variable_chain(
+                            &entry.kernel,
+                            &entry.tree,
+                            req.n,
+                            rng,
+                        );
+                        *proposals += steps;
+                        ys
+                    } else {
+                        (0..req.n)
+                            .map(|_| {
+                                let (y, steps) =
+                                    scratch.sample_mcmc_variable(&entry.kernel, &entry.tree, rng);
+                                *proposals += steps;
+                                y
+                            })
+                            .collect()
+                    };
+                    let (steps, accepts) = scratch.take_mcmc_stats();
+                    let info = McmcInfo {
+                        proposal: scratch.mcmc_proposal_kind(),
+                        steps,
+                        accepts,
+                        chain,
+                    };
+                    return Ok((samples, SamplerKind::Mcmc, Some(u), Some(info)));
                 }
                 if req.kind == SamplerKind::Auto {
                     metrics.record_steering(&entry.name, "auto_rejection");
@@ -733,20 +841,38 @@ impl SamplingService {
                         y
                     })
                     .collect();
-                Ok((samples, SamplerKind::Rejection, Some(u)))
+                Ok((samples, SamplerKind::Rejection, Some(u), None))
             }
             SamplerKind::Mcmc => {
+                scratch.set_mcmc_proposal(mcmc_proposal);
                 if scratch.ensure_mcmc(&entry.conditional, z, &entry.kernel) {
                     cache.insert(&entry.name, scratch.shared_state().expect("just conditioned"));
                 }
-                let samples = (0..req.n)
-                    .map(|_| {
-                        let (y, steps) = scratch.sample_mcmc(&entry.kernel, rng);
-                        *proposals += steps;
-                        y
-                    })
-                    .collect();
-                Ok((samples, SamplerKind::Mcmc, None))
+                // pinned mcmc keeps the fixed-size chain (conditioned on
+                // the model's target cardinality, the pre-PR contract)
+                let chain = req.chain && req.n > 1;
+                let samples = if chain {
+                    let (ys, steps) =
+                        scratch.sample_mcmc_chain(&entry.kernel, &entry.tree, req.n, rng);
+                    *proposals += steps;
+                    ys
+                } else {
+                    (0..req.n)
+                        .map(|_| {
+                            let (y, steps) = scratch.sample_mcmc(&entry.kernel, &entry.tree, rng);
+                            *proposals += steps;
+                            y
+                        })
+                        .collect()
+                };
+                let (steps, accepts) = scratch.take_mcmc_stats();
+                let info = McmcInfo {
+                    proposal: scratch.mcmc_proposal_kind(),
+                    steps,
+                    accepts,
+                    chain,
+                };
+                Ok((samples, SamplerKind::Mcmc, None, Some(info)))
             }
             SamplerKind::Dense => unreachable!("rejected above"),
         }
@@ -758,21 +884,25 @@ impl SamplingService {
         ws: &mut WorkerScratch,
         kind: SamplerKind,
         n: usize,
+        chain: bool,
         rng: &mut Xoshiro,
         proposals: &mut u64,
-    ) -> Result<Vec<Vec<usize>>> {
+    ) -> Result<(Vec<Vec<usize>>, Option<McmcInfo>)> {
         match kind {
             SamplerKind::Auto => unreachable!("auto is resolved before unconditional dispatch"),
             SamplerKind::Cholesky => {
                 let scratch = ws
                     .cholesky
                     .get_or_insert_with(|| CholeskyScratch::for_marginal(&entry.marginal));
-                Ok((0..n)
-                    .map(|_| {
-                        *proposals += 1;
-                        cholesky::sample_with_logprob_into(&entry.marginal, scratch, rng).0
-                    })
-                    .collect())
+                Ok((
+                    (0..n)
+                        .map(|_| {
+                            *proposals += 1;
+                            cholesky::sample_with_logprob_into(&entry.marginal, scratch, rng).0
+                        })
+                        .collect(),
+                    None,
+                ))
             }
             SamplerKind::Rejection => {
                 let scratch = ws.elementary.take().unwrap_or_else(|| {
@@ -792,7 +922,7 @@ impl SamplingService {
                     })
                     .collect();
                 ws.elementary = Some(s.into_scratch());
-                Ok(out)
+                Ok((out, None))
             }
             SamplerKind::Mcmc => match &entry.mcmc_seed {
                 None => Err(anyhow!(
@@ -803,26 +933,47 @@ impl SamplingService {
                     entry.mcmc.size
                 )),
                 Some(seed) => {
-                    let mut s = McmcSampler::with_seed(&entry.kernel, entry.mcmc, seed.clone());
-                    Ok((0..n)
-                        .map(|_| {
-                            let y = s.sample(rng);
-                            *proposals += s.last_steps as u64;
-                            y
-                        })
-                        .collect())
+                    let mut s = McmcSampler::with_seed(&entry.kernel, entry.mcmc, seed.clone())
+                        .with_tree(&entry.tree);
+                    let chain = chain && n > 1;
+                    let samples = if chain {
+                        let ys = s.sample_chain(n, rng);
+                        *proposals += s.last_steps as u64;
+                        ys
+                    } else {
+                        (0..n)
+                            .map(|_| {
+                                let y = s.sample(rng);
+                                *proposals += s.last_steps as u64;
+                                y
+                            })
+                            .collect()
+                    };
+                    let (steps, accepts) = s.chain_stats();
+                    Ok((
+                        samples,
+                        Some(McmcInfo {
+                            proposal: s.proposal_kind(),
+                            steps,
+                            accepts,
+                            chain,
+                        }),
+                    ))
                 }
             },
             SamplerKind::Dense => match entry.dense_prepared() {
                 Err(e) => Err(e),
                 Ok(prepared) => {
                     let scratch = ws.dense.get_or_insert_with(DenseScratch::new);
-                    Ok((0..n)
-                        .map(|_| {
-                            *proposals += 1;
-                            dense::sample_into(&prepared, scratch, rng)
-                        })
-                        .collect())
+                    Ok((
+                        (0..n)
+                            .map(|_| {
+                                *proposals += 1;
+                                dense::sample_into(&prepared, scratch, rng)
+                            })
+                            .collect(),
+                        None,
+                    ))
                 }
             },
         }
@@ -871,6 +1022,7 @@ mod tests {
                     kind,
                     deadline: None,
                     given: Vec::new(),
+                    chain: false,
                 })
                 .unwrap();
             assert_eq!(resp.samples.len(), 5, "{}", kind.as_str());
@@ -907,6 +1059,7 @@ mod tests {
                     kind,
                     deadline: None,
                     given: given.clone(),
+                    chain: false,
                 })
                 .unwrap();
             assert_eq!(resp.samples.len(), 4, "{}", kind.as_str());
@@ -943,6 +1096,7 @@ mod tests {
             kind,
             deadline: None,
             given,
+            chain: false,
         };
         let rx_dup = svc.submit(req(SamplerKind::Cholesky, vec![2, 2]));
         let rx_oob = svc.submit(req(SamplerKind::Cholesky, vec![99]));
@@ -973,6 +1127,7 @@ mod tests {
             kind: SamplerKind::Cholesky,
             deadline: None,
             given: Vec::new(),
+            chain: false,
         });
         assert!(err.is_err());
     }
@@ -987,6 +1142,7 @@ mod tests {
             kind: SamplerKind::Rejection,
             deadline: None,
             given: Vec::new(),
+            chain: false,
         };
         // fire a pile of concurrent requests to force coalescing
         let rxs: Vec<_> = (0..20).map(|i| svc.submit(req(100 + (i % 4)))).collect();
@@ -1012,6 +1168,7 @@ mod tests {
                 kind: SamplerKind::Cholesky,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
             .collect();
         let responses = svc.sample_batch(reqs);
@@ -1028,6 +1185,7 @@ mod tests {
                     kind: SamplerKind::Cholesky,
                     deadline: None,
                     given: Vec::new(),
+                    chain: false,
                 })
                 .unwrap();
             assert_eq!(r.samples, single.samples);
@@ -1053,6 +1211,7 @@ mod tests {
             kind: SamplerKind::Dense,
             deadline: None,
             given: Vec::new(),
+            chain: false,
         });
         let chol_rx = svc.submit(SampleRequest {
             model: "big".into(),
@@ -1061,6 +1220,7 @@ mod tests {
             kind: SamplerKind::Cholesky,
             deadline: None,
             given: Vec::new(),
+            chain: false,
         });
         let err = dense_rx.recv().unwrap();
         assert!(err.is_err(), "oversized dense request must be rejected");
@@ -1096,6 +1256,7 @@ mod tests {
                 kind: SamplerKind::Cholesky,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
             .unwrap();
         }
@@ -1119,6 +1280,7 @@ mod tests {
                     kind: SamplerKind::Cholesky,
                     deadline: None,
                     given: Vec::new(),
+                    chain: false,
                 })
             })
             .collect();
@@ -1158,6 +1320,7 @@ mod tests {
                 kind: SamplerKind::Auto,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
             .unwrap();
         assert_eq!(resp.algo, SamplerKind::Rejection);
@@ -1172,6 +1335,7 @@ mod tests {
                 kind: SamplerKind::Rejection,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
             .unwrap();
         assert_eq!(resp.samples, pinned.samples);
@@ -1190,6 +1354,7 @@ mod tests {
                 kind: SamplerKind::Auto,
                 deadline: None,
                 given: vec![3, 17],
+                chain: false,
             })
             .unwrap();
         assert_eq!(resp.algo, SamplerKind::Rejection);
@@ -1217,6 +1382,7 @@ mod tests {
             kind: SamplerKind::Cholesky,
             deadline: None,
             given: vec![17, 3], // unsorted on purpose: the key is canonical
+            chain: false,
         };
         let first = svc.sample(req(41)).unwrap();
         let second = svc.sample(req(42)).unwrap();

@@ -45,10 +45,23 @@
 //! // Fixed-size (k-NDPP) MCMC up-down sampler — use when
 //! // `proposal.expected_rejections()` diverges (relaxed orthogonality /
 //! // unregularized sigmas): O(k^2 + kK) per chain step, independent of
-//! // both M and the rejection rate.
-//! let mut mcmc = McmcSampler::new(&kernel, McmcConfig::for_kernel(&kernel));
+//! // both M and the rejection rate.  Attaching the prepared tree turns
+//! // the uniform candidate oracle into the tree-driven proposal: each
+//! // candidate is drawn in O(log M) descent proportional to its
+//! // conditioned marginal weight, so far fewer Metropolis steps are
+//! // wasted on near-zero-weight items.
+//! let mut mcmc =
+//!     McmcSampler::new(&kernel, McmcConfig::for_kernel(&kernel)).with_tree(&tree);
 //! let sample3 = mcmc.sample(&mut rng);
-//! # let _ = (sample, sample2, sample3);
+//!
+//! // Variable-size up/down/swap chain — same per-step costs, but targets
+//! // the FULL law Pr(Y) ∝ det(L_Y), cardinality included: the drop-in
+//! // MCMC replacement wherever rejection sampling is the semantic target
+//! // but its proposal count U has diverged.
+//! let mut var =
+//!     VariableMcmcSampler::new(&kernel, McmcConfig::for_kernel(&kernel)).with_tree(&tree);
+//! let sample4 = var.sample(&mut rng);
+//! # let _ = (sample, sample2, sample3, sample4);
 //! ```
 //!
 //! ## Choosing a sampler
@@ -64,6 +77,28 @@
 //!   `O(k^2 + kK)` no matter how large `U` gets.  Prefer it when
 //!   `Proposal::expected_rejections()` is large (rule of thumb: over a few
 //!   hundred) or when the workload wants exactly-k-item samples.
+//! * [`VariableMcmcSampler`](sampler::VariableMcmcSampler) — the
+//!   variable-size up/down/swap chain over the **full** law
+//!   `Pr(Y) ∝ det(L_Y)`, cardinality included; what `algo=auto` steering
+//!   falls through to when a basket's conditional rejection rate
+//!   diverges, because it targets the same distribution rejection would
+//!   have sampled.
+//!
+//! Both chains draw their candidate items through the prepared
+//! [`SampleTree`](sampler::SampleTree) by default
+//! ([`ProposalKind::Tree`](sampler::ProposalKind), `with_tree`): one
+//! `O(log M)` descent proposes item `j` with probability proportional to
+//! its conditioned marginal weight (ε-mixed with uniform for
+//! irreducibility), and the exact descent probability feeds the
+//! Metropolis correction, so detailed balance is preserved while far
+//! fewer steps self-loop on zero-weight candidates than under the
+//! uniform oracle — the win grows with catalog size and marginal skew.
+//! Pin `ProposalKind::Uniform` (`--mcmc-proposal uniform`,
+//! `McmcConfig.proposal`) to recover the classical chain; burn-in adapts
+//! online from the log-det trajectory's autocorrelation
+//! (`McmcConfig.adaptive_burn_in`) and both chains expose restart mode
+//! (independent samples) and thinned chain mode (`sample_chain`, the wire
+//! `chain: true` flag) plus acceptance-rate/step telemetry.
 //! * [`DenseCholeskySampler`](sampler::DenseCholeskySampler) — the dense
 //!   `O(M^3)` baseline, exposed end to end (`SamplerKind::Dense`, service
 //!   dispatch, wire protocol, CLI `--algo dense`) for small-M debugging
@@ -132,7 +167,12 @@
 //! the detected instruction set (gates on the simd and packed columns
 //! are relaxed when it reports `portable`); `serving.sweep[*]` rows
 //! carry `requests_per_s` and latency percentiles per
-//! (algorithm × client-count) config.
+//! (algorithm × client-count) config; `serving.mcmc_mixing[*]` rows
+//! compare the tree-driven proposal against the uniform oracle — burn-in
+//! `steps_to_tv` against an enumerated law, `acceptance`, and steered
+//! closed-loop `steered_requests_per_s` — and the gate fails if the tree
+//! proposal needs more burn-in than uniform or any steered config serves
+//! nothing.
 //!
 //! ## Conditional sampling / basket completion
 //!
@@ -192,14 +232,25 @@
 //!   [`coordinator::ServiceConfig`]'s `steer_threshold` (default `1e4`,
 //!   `--steer-threshold` on `ndpp serve`), an `algo=auto` request — the
 //!   wire default whenever `given` is present — silently falls through
-//!   to the conditional fixed-size MCMC chain, whose per-step cost is
-//!   independent of `U_J`.  Only a client that *pinned* `algo=rejection`
-//!   gets the structured infeasibility error.  Every response reports
-//!   the sampler that actually ran (`algo`) and, on the
-//!   rejection-family paths, the measured `expected_rejections`, so
-//!   clients can audit routing without a second round trip.  Decisions
-//!   are counted per model (`auto_rejection` / `auto_mcmc` /
-//!   `refused_infeasible`) in the `metrics` op and the `models` audit.
+//!   to the conditional **variable-size** MCMC chain, whose per-step cost
+//!   is independent of `U_J` and whose stationary law is the same
+//!   `Pr(Y | J ⊆ Y)` the rejection sampler targets, so steering is
+//!   invisible in distribution (pinned `tests/conditional.rs`
+//!   `steering_` conformance).  Only a client that *pinned*
+//!   `algo=rejection` gets the structured infeasibility error.  The
+//!   chain's candidate items come from the model's prepared tree
+//!   (restricted to the conditioned basis) unless the deployment pins
+//!   `--mcmc-proposal uniform`; a request with `chain: true` and `n > 1`
+//!   opts into one thinned trajectory instead of `n` independent
+//!   restarts (cheaper by ~`burn_in/thinning`, successive samples
+//!   correlated).  Every response reports the sampler that actually ran
+//!   (`algo`), the rejection-family paths add the measured
+//!   `expected_rejections`, and the MCMC paths add an `mcmc` block
+//!   (`proposal`, `steps`, `acceptance`, `chain`).  Decisions are
+//!   counted per model (`auto_rejection` / `auto_mcmc` /
+//!   `refused_infeasible`) in the `metrics` op and the `models` audit,
+//!   which also carry per-proposal chain counters
+//!   (requests/steps/acceptance) and the active chain config.
 //! * **Conditioning cost (the hot-basket cache).**  Building a
 //!   conditioned sampler costs a `2K x 2K` Schur complement plus, on the
 //!   rejection path, an `R x R` eigendecomposition — per request.  Real
@@ -283,7 +334,8 @@ pub mod prelude {
     pub use crate::rng::Xoshiro;
     pub use crate::sampler::{
         CholeskySampler, ConditionalPrepared, ConditionalScratch, DenseCholeskySampler,
-        McmcConfig, McmcSampler, RejectionSampler, SampleTree, Sampler, TreeConfig,
+        McmcConfig, McmcSampler, ProposalKind, RejectionSampler, SampleTree, Sampler, TreeConfig,
+        VariableMcmcSampler,
     };
 }
 

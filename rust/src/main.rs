@@ -24,8 +24,8 @@ use ndpp::ndpp::{MarginalKernel, Proposal};
 use ndpp::rng::Xoshiro;
 use ndpp::runtime::ModelOps;
 use ndpp::sampler::{
-    CholeskySampler, DenseCholeskySampler, McmcConfig, McmcSampler, RejectionSampler, SampleTree,
-    Sampler, TreeConfig,
+    CholeskySampler, DenseCholeskySampler, McmcConfig, McmcSampler, ProposalKind,
+    RejectionSampler, SampleTree, Sampler, TreeConfig,
 };
 use ndpp::util::args::{help_text, Args, Spec};
 
@@ -103,9 +103,20 @@ const SAMPLE_SPECS: &[Spec] = &[
         "given",
         "comma-separated observed items; samples are conditioned on containing them",
     ),
+    Spec::opt_default("mcmc-proposal", "tree", MCMC_PROPOSAL_HELP),
     Spec::opt("backend", BACKEND_HELP),
     Spec::flag("help", "show help"),
 ];
+
+const MCMC_PROPOSAL_HELP: &str =
+    "mcmc item proposal: tree (O(log M) marginal-weighted descent) | uniform (oracle)";
+
+/// Parse `--mcmc-proposal tree|uniform`.
+fn parse_proposal_arg(a: &Args) -> Result<ProposalKind> {
+    let s = a.str_or("mcmc-proposal", "tree");
+    ProposalKind::parse(&s)
+        .ok_or_else(|| anyhow::anyhow!("bad --mcmc-proposal '{s}' (tree | uniform)"))
+}
 
 /// Parse `--given 3,17,42` into item indices.
 fn parse_given_arg(s: &str) -> Result<Vec<usize>> {
@@ -152,8 +163,9 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
         Some(g) => parse_given_arg(g)?,
         None => Vec::new(),
     };
+    let proposal_kind = parse_proposal_arg(&a)?;
     if !given.is_empty() {
-        return sample_conditional(&kernel, &given, &algo, n, &rng);
+        return sample_conditional(&kernel, &given, &algo, n, proposal_kind, &rng);
     }
 
     if algo == "cholesky" || algo == "both" || algo == "all" {
@@ -181,18 +193,24 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
         );
     }
     if algo == "mcmc" || algo == "all" {
-        let config = McmcConfig::for_kernel(&kernel);
-        let mut s = McmcSampler::new(&kernel, config);
+        let mut config = McmcConfig::for_kernel(&kernel);
+        config.proposal = proposal_kind;
+        let proposal = Proposal::build(&kernel);
+        let tree = SampleTree::build(&proposal.spectral(), TreeConfig::default());
+        let mut s = McmcSampler::new(&kernel, config).with_tree(&tree);
         let mut r = rng.split(3);
         // one chain for the whole batch: burn-in amortized, thinned draws
         for (i, y) in s.sample_chain(n, &mut r).into_iter().enumerate() {
             println!("mcmc[{i}] (|Y| = {}): {y:?}", y.len());
         }
         println!(
-            "mcmc: size {} | burn-in {} | thinning {} | acceptance {:.2}",
+            "mcmc: size {} | burn-in {} (adaptive: {}) | thinning {} | proposal {} | \
+             acceptance {:.2}",
             config.size,
-            config.burn_in,
+            s.last_burn_in,
+            config.adaptive_burn_in,
             config.thinning,
+            s.proposal_kind().as_str(),
             s.acceptance_rate()
         );
     }
@@ -222,6 +240,7 @@ fn sample_conditional(
     given: &[usize],
     algo: &str,
     n: usize,
+    proposal_kind: ProposalKind,
     rng: &Xoshiro,
 ) -> Result<()> {
     use ndpp::sampler::{ConditionalPrepared, ConditionalScratch};
@@ -255,14 +274,22 @@ fn sample_conditional(
         println!("conditional E[rejections]: {:.2}", scratch.expected_rejections());
     }
     if algo == "mcmc" || algo == "all" {
+        scratch.set_mcmc_proposal(proposal_kind);
         scratch.ensure_mcmc(&prep, &marginal.z, kernel);
         let mut r = rng.split(3);
         for i in 0..n {
-            let (y, _) = scratch.sample_mcmc(kernel, &mut r);
+            let (y, _) = scratch.sample_mcmc(kernel, &tree, &mut r);
             println!("mcmc[{i}] (|Y| = {}): {y:?}", y.len());
         }
         let cfg = scratch.mcmc_config();
-        println!("mcmc: completion size {} | burn-in {}", cfg.size, cfg.burn_in);
+        let (steps, accepts) = scratch.take_mcmc_stats();
+        println!(
+            "mcmc: completion size {} | burn-in cap {} | proposal {} | acceptance {:.2}",
+            cfg.size,
+            cfg.burn_in,
+            scratch.mcmc_proposal_kind().as_str(),
+            if steps == 0 { 0.0 } else { accepts as f64 / steps as f64 }
+        );
     }
     if algo == "dense" || algo == "all" {
         println!("dense: conditioning is not supported (use cholesky | rejection | mcmc)");
@@ -278,6 +305,7 @@ const COMPLETE_SPECS: &[Spec] = &[
     Spec::opt_default("top", "10", "how many top-scoring completions to rank"),
     Spec::opt_default("n", "3", "how many conditional set samples to draw"),
     Spec::opt_default("algo", "cholesky", "cholesky | rejection | mcmc (set sampler)"),
+    Spec::opt_default("mcmc-proposal", "tree", MCMC_PROPOSAL_HELP),
     Spec::opt_default("seed", "0", "rng seed"),
     Spec::opt("backend", BACKEND_HELP),
     Spec::flag("help", "show help"),
@@ -342,7 +370,7 @@ fn cmd_complete(argv: &[String]) -> Result<()> {
             bail!("unknown --algo '{algo}' (cholesky | rejection | mcmc)");
         }
         println!("\nsampled completions ({algo}):");
-        sample_conditional(&kernel, &given, &algo, n, &rng)?;
+        sample_conditional(&kernel, &given, &algo, n, parse_proposal_arg(&a)?, &rng)?;
     }
     Ok(())
 }
@@ -375,6 +403,7 @@ const SERVE_SPECS: &[Spec] = &[
         "10000",
         "expected proposals/sample above which algo=auto conditionals steer to mcmc",
     ),
+    Spec::opt_default("mcmc-proposal", "tree", MCMC_PROPOSAL_HELP),
     Spec::opt_default("seed", "0", "rng seed for model generation"),
     Spec::opt("backend", BACKEND_HELP),
     Spec::flag("help", "show help"),
@@ -397,6 +426,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "steer-threshold",
             ndpp::coordinator::service::DEFAULT_STEER_THRESHOLD,
         )?,
+        mcmc_proposal: parse_proposal_arg(&a)?,
         ..Default::default()
     };
     let deadline_ms = a.u64_or("deadline-ms", 0)?;
@@ -409,7 +439,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let service = Arc::new(SamplingService::new(config));
     println!(
         "serving with {} shard workers, queue depth {}, deadline {}, \
-         conditioning cache {}, steer threshold {:.0}",
+         conditioning cache {}, steer threshold {:.0}, mcmc proposal {}",
         service.shards(),
         service.config().queue_depth,
         service
@@ -422,7 +452,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         } else {
             "off".into()
         },
-        service.config().steer_threshold
+        service.config().steer_threshold,
+        service.config().mcmc_proposal.as_str()
     );
     let seed = a.u64_or("seed", 0)?;
     let mut rng = Xoshiro::seeded(seed);
@@ -659,6 +690,18 @@ fn cmd_info() -> Result<()> {
         budget.pool_workers
     );
     println!("serving shards (default): {}", budget.shards);
+    let serving = ndpp::coordinator::ServiceConfig::default();
+    println!(
+        "serving steering (default): steer threshold {:.0} expected proposals/sample \
+         (--steer-threshold), mcmc proposal {} (--mcmc-proposal tree|uniform)",
+        serving.steer_threshold,
+        serving.mcmc_proposal.as_str()
+    );
+    println!(
+        "serving mcmc chains: steered auto runs the variable-size up/down/swap chain, \
+         pinned mcmc the fixed-size swap chain; burn-in is adaptive (lag-1 \
+         autocorrelation), bounded by the per-model McmcConfig"
+    );
     println!(
         "simd ISA: {} (runtime-detected, NDPP_SIMD_ISA to override; `simd` backend \
          falls back avx512 -> avx2 -> portable / neon when a tier is missing)",

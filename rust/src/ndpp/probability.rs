@@ -254,6 +254,123 @@ impl<'a> IncrementalMinor<'a> {
         );
     }
 
+    /// Compute the grow ratio `det(L_{Y ∪ {j}}) / det(L_Y)` (the Schur
+    /// complement `s = L_jj - L[j,Y] (L_Y)^{-1} L[Y,j]` of the appended
+    /// item) and, if `accept(ratio)` says so, append `j` to the set —
+    /// the up-move of the variable-size chain
+    /// ([`crate::sampler::VariableMcmcSampler`]).  The inverse is extended
+    /// by the `2x2`-block inversion formula, so an accepted grow costs
+    /// `O(k^2 + k K)` like a swap (plus the one unavoidable `O(k^2)`
+    /// allocation for the larger inverse); a rejected probe allocates
+    /// nothing.  `accept` is only consulted for positive ratios.  Returns
+    /// `(ratio, applied)`.
+    pub fn grow_if(&mut self, j: usize, accept: impl FnOnce(f64) -> bool) -> (f64, bool) {
+        debug_assert!(!self.items.contains(&j), "grow target already in set");
+        let k = self.items.len();
+        let d = l_entry(self.kernel, j, j);
+        if k == 0 {
+            // det(L_∅) = 1, so the ratio is the diagonal entry itself
+            if !(d > 0.0 && accept(d)) {
+                return (d, false);
+            }
+            self.items.push(j);
+            self.inv = Matrix::zeros(1, 1);
+            self.inv[(0, 0)] = 1.0 / d;
+            self.log_det += d.ln();
+            self.swaps_since_refresh = 0; // 1x1 inverse is exact
+            return (d, true);
+        }
+        // r = L[j, Y] (row), c = L[Y, j] (column) — one O(k K) entry pass
+        self.buf_row.clear();
+        self.buf_col.clear();
+        for &yc in &self.items {
+            self.buf_row.push(l_entry(self.kernel, j, yc));
+            self.buf_col.push(l_entry(self.kernel, yc, j));
+        }
+        // w = A^{-1} c, s = d - r^T w
+        matvec_into(&self.inv, &self.buf_col, &mut self.buf_w);
+        let s = d - dot(&self.buf_row, &self.buf_w);
+        if !(s > 0.0 && accept(s)) {
+            return (s, false);
+        }
+        // v^T = r^T A^{-1}; block inverse of [[A, c], [r^T, d]]:
+        //   [[A^{-1} + w v^T / s,  -w / s],
+        //    [      -v^T / s,      1 / s]]
+        t_matvec_into(&self.inv, &self.buf_row, &mut self.buf_v);
+        let si = 1.0 / s;
+        let mut grown = Matrix::zeros(k + 1, k + 1);
+        for r in 0..k {
+            for c in 0..k {
+                grown[(r, c)] = self.inv[(r, c)] + self.buf_w[r] * self.buf_v[c] * si;
+            }
+            grown[(r, k)] = -self.buf_w[r] * si;
+            grown[(k, r)] = -self.buf_v[r] * si;
+        }
+        grown[(k, k)] = si;
+        self.inv = grown;
+        self.items.push(j);
+        self.log_det += s.ln();
+        self.swaps_since_refresh += 1;
+        if self.swaps_since_refresh >= self.refresh_every {
+            self.refresh();
+        }
+        (s, true)
+    }
+
+    /// Compute the shrink ratio `det(L_{Y \ {i}}) / det(L_Y)` for removing
+    /// the item at `pos` and, if `accept(ratio)` says so, remove it — the
+    /// down-move of the variable-size chain.  By the cofactor identity the
+    /// ratio is simply `((L_Y)^{-1})_{pos,pos}` (valid for nonsymmetric
+    /// minors: the diagonal cofactor carries sign `(-1)^{2 pos}`), so a
+    /// probe is `O(1)`; an accepted shrink downdates the inverse in one
+    /// `O(k^2)` pass.  Positions after `pos` shift down by one, mirroring
+    /// `Vec::remove` — callers tracking per-position state must mirror the
+    /// shift.  `accept` is only consulted for positive ratios.  Returns
+    /// `(ratio, applied)`.
+    pub fn shrink_if(&mut self, pos: usize, accept: impl FnOnce(f64) -> bool) -> (f64, bool) {
+        let k = self.items.len();
+        assert!(pos < k, "shrink position {pos} out of range (k = {k})");
+        let ratio = self.inv[(pos, pos)];
+        if !(ratio > 0.0 && accept(ratio)) {
+            return (ratio, false);
+        }
+        if k == 1 {
+            self.items.clear();
+            self.inv = Matrix::zeros(0, 0);
+            self.log_det = 0.0; // det(L_∅) = 1, exactly
+            self.swaps_since_refresh = 0;
+            return (ratio, true);
+        }
+        // (L_{Y'})^{-1}[r, c] = B[r, c] - B[r, pos] B[pos, c] / B[pos, pos]
+        // for B = (L_Y)^{-1} with row/column `pos` deleted (the inverse of
+        // the block-inverse extension applied in `grow_if`).
+        let mut shrunk = Matrix::zeros(k - 1, k - 1);
+        let mut ri = 0;
+        for r in 0..k {
+            if r == pos {
+                continue;
+            }
+            let scale = self.inv[(r, pos)] / ratio;
+            let mut ci = 0;
+            for c in 0..k {
+                if c == pos {
+                    continue;
+                }
+                shrunk[(ri, ci)] = self.inv[(r, c)] - scale * self.inv[(pos, c)];
+                ci += 1;
+            }
+            ri += 1;
+        }
+        self.inv = shrunk;
+        self.items.remove(pos);
+        self.log_det += ratio.ln();
+        self.swaps_since_refresh += 1;
+        if self.swaps_since_refresh >= self.refresh_every {
+            self.refresh();
+        }
+        (ratio, true)
+    }
+
     /// Row/column difference vectors for the swap `items[pos] <- j`:
     /// `rowdiff[c] = L[j, y_c] - L[i, y_c]` over the old set and
     /// `coldiff[c] = L[y'_c, j] - L[y'_c, i]` over the new set
@@ -546,6 +663,99 @@ mod tests {
             }
         }
         assert!(applied >= 60, "only {applied} swaps applied");
+    }
+
+    #[test]
+    fn grow_and_shrink_ratios_match_direct_determinants() {
+        prop::check("prob_grow_shrink", 12, |g| {
+            let khalf = g.usize_in(1, 3);
+            let k = 2 * khalf;
+            let m = 2 * k + g.usize_in(2, 10);
+            let mut rng = Xoshiro::seeded(g.seed);
+            let kernel = NdppKernel::random_ndpp(m, k, &mut rng);
+            for _ in 0..6 {
+                let size = 1 + rng.below(m.min(6));
+                let items = rng.choose_distinct(m, size);
+                let Some(mut minor) = IncrementalMinor::new(&kernel, items.clone()) else {
+                    continue;
+                };
+                let base = det_l_y(&kernel, &items);
+                // grow probe against the direct determinant of the grown set
+                let j = (0..m).find(|j| !items.contains(j)).unwrap();
+                let mut grown = items.clone();
+                grown.push(j);
+                let want_grow = det_l_y(&kernel, &grown) / base;
+                let (got_grow, applied) = minor.grow_if(j, |_| false);
+                assert!(!applied, "accept=false must not mutate");
+                assert_eq!(minor.items(), &items[..]);
+                assert!(
+                    (got_grow - want_grow).abs() < 1e-7 * (1.0 + want_grow.abs()),
+                    "grow got={got_grow} want={want_grow}"
+                );
+                // shrink probe against the direct determinant of the minor
+                // with one position deleted
+                let pos = rng.below(size);
+                let mut small = items.clone();
+                small.remove(pos);
+                let want_shrink = det_l_y(&kernel, &small) / base;
+                let (got_shrink, applied) = minor.shrink_if(pos, |_| false);
+                assert!(!applied);
+                assert_eq!(minor.items(), &items[..]);
+                assert!(
+                    (got_shrink - want_shrink).abs() < 1e-7 * (1.0 + want_shrink.abs()),
+                    "shrink got={got_shrink} want={want_shrink}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn mixed_move_chain_stays_consistent_through_empty() {
+        // random accepted grows/shrinks/swaps — including draining the set
+        // to empty and regrowing — with a small refresh interval; log-det
+        // and the probe ratios must track direct determinants throughout
+        let mut rng = Xoshiro::seeded(83);
+        let kernel = NdppKernel::random_ndpp(20, 4, &mut rng);
+        let mut minor = IncrementalMinor::new(&kernel, vec![]).expect("empty start");
+        minor.refresh_every = 5;
+        assert_eq!(minor.log_det(), 0.0);
+        let mut applied = 0;
+        let mut emptied = 0;
+        for step in 0..4000 {
+            if applied >= 150 && emptied > 0 {
+                break;
+            }
+            let k = minor.items().len();
+            let mv = rng.below(3);
+            let ok = if mv == 0 || k == 0 {
+                let j = rng.below(20);
+                !minor.items().contains(&j) && minor.grow_if(j, |r| r > 0.05).1
+            } else if mv == 1 {
+                let drained = minor.shrink_if(rng.below(k), |r| r > 0.05).1;
+                if drained && minor.items().is_empty() {
+                    emptied += 1;
+                }
+                drained
+            } else {
+                let j = rng.below(20);
+                !minor.items().contains(&j)
+                    && minor.swap_if(rng.below(k), j, |r| r > 0.05).1
+            };
+            if !ok {
+                continue;
+            }
+            applied += 1;
+            let direct = det_l_y(&kernel, minor.items()).ln();
+            assert!(
+                (minor.log_det() - direct).abs() < 1e-6 * (1.0 + direct.abs()),
+                "step={step} k={} logdet={} direct={direct}",
+                minor.items().len(),
+                minor.log_det()
+            );
+        }
+        assert!(applied >= 150, "only {applied} moves applied");
+        assert!(emptied > 0, "chain never drained to the empty set");
+        assert!(minor.is_healthy());
     }
 
     #[test]

@@ -61,7 +61,9 @@ use crate::ndpp::{MarginalKernel, NdppKernel};
 use crate::rng::Xoshiro;
 use crate::sampler::cholesky::{self, CholeskyScratch};
 use crate::sampler::elementary::select_elementary_into;
-use crate::sampler::mcmc::McmcConfig;
+use crate::sampler::mcmc::{
+    fill_pos_probs, swap_move, variable_move, BurnInMeter, ItemProposal, McmcConfig, ProposalKind,
+};
 use crate::sampler::SampleTree;
 
 /// Safety valve for the conditional rejection loop (same contract as the
@@ -148,6 +150,13 @@ struct McmcState {
     cfg: McmcConfig,
     /// deterministic greedy completion seed (completion items only)
     seed: Vec<usize>,
+    /// conditioned tree-descent weight `basis_map · W_J · basis_map^T`
+    /// (`R x R`): item scores under it are the conditioned marginals
+    /// `K'_jj`, so tree-driven up-moves propose items proportional to their
+    /// completion probability.  Built once per basket from the shared `W_J`
+    /// — a [`ConditionedState`] product the cache already distributes —
+    /// and cached alongside the seed.
+    weight: Matrix,
 }
 
 /// Everything one observed basket's requests share, immutable after
@@ -276,6 +285,18 @@ pub struct ConditionalScratch {
     item_scores: Vec<f64>,
     gu: Vec<f64>,
     gv: Vec<f64>,
+    /// proposal kind the next `ensure_mcmc` bakes into the chain config
+    /// (the service sets this from its registration-time default)
+    mcmc_proposal: ProposalKind,
+    /// chain proposal of the current basket (weight + leaf scratch),
+    /// rebuilt lazily when the state changes
+    chain_prop: Option<ItemProposal>,
+    /// per-position proposal probabilities of the running chain
+    pos_prob: Vec<f64>,
+    /// chain move counters since the last [`ConditionalScratch::
+    /// take_mcmc_stats`] — proposed and accepted
+    mcmc_steps: u64,
+    mcmc_accepts: u64,
 }
 
 impl Default for ConditionalScratch {
@@ -292,6 +313,11 @@ impl Default for ConditionalScratch {
             item_scores: Vec::new(),
             gu: Vec::new(),
             gv: Vec::new(),
+            mcmc_proposal: ProposalKind::default(),
+            chain_prop: None,
+            pos_prob: Vec::new(),
+            mcmc_steps: 0,
+            mcmc_accepts: 0,
         }
     }
 }
@@ -331,6 +357,7 @@ impl ConditionalScratch {
             mcmc: None,
         }));
         self.last_proposals = 0;
+        self.chain_prop = None;
         note_condition_build();
         Ok(())
     }
@@ -342,6 +369,7 @@ impl ConditionalScratch {
     pub fn adopt(&mut self, state: Arc<ConditionedState>) {
         self.state = Some(state);
         self.last_proposals = 0;
+        self.chain_prop = None;
     }
 
     /// The shareable conditioned state of the current request (`None`
@@ -642,8 +670,17 @@ impl ConditionalScratch {
         let actual = seed.len();
         let mut cfg = McmcConfig::for_size(actual, m);
         cfg.size = actual;
+        cfg.proposal = self.mcmc_proposal;
+        // conditioned descent weight in the prepared basis: item scores
+        // under `basis_map W_J basis_map^T` are the conditioned marginals
+        // `K'_jj = z_j^T W_J z_j`, so up-moves propose proportional to
+        // completion probability.  Deterministic in `(kernel, J)` alone —
+        // never in which other lazy parts the cached state happens to
+        // carry — so replay across shard counts is unaffected.
+        let weight = prep.basis_map.matmul(&st.w).matmul_t(&prep.basis_map);
         Arc::make_mut(self.state.as_mut().expect("state checked above")).mcmc =
-            Some(McmcState { cfg, seed });
+            Some(McmcState { cfg, seed, weight });
+        self.chain_prop = None;
         note_condition_build();
         true
     }
@@ -653,49 +690,201 @@ impl ConditionalScratch {
         self.state().mcmc.as_ref().expect("ensure_mcmc() first").cfg
     }
 
+    /// Set the proposal kind the next [`ConditionalScratch::ensure_mcmc`]
+    /// bakes into the chain config (the service's registration-time
+    /// default; [`ProposalKind::Tree`] unless pinned).
+    pub fn set_mcmc_proposal(&mut self, kind: ProposalKind) {
+        self.mcmc_proposal = kind;
+    }
+
+    /// The proposal kind conditional chains run with: from the built warm
+    /// start when ready, otherwise the configured default.
+    pub fn mcmc_proposal_kind(&self) -> ProposalKind {
+        self.state
+            .as_deref()
+            .and_then(|s| s.mcmc.as_ref())
+            .map(|mc| mc.cfg.proposal)
+            .unwrap_or(self.mcmc_proposal)
+    }
+
+    /// `(proposed, accepted)` chain moves since the last call, for
+    /// per-request acceptance-rate reporting.  Resets the counters.
+    pub fn take_mcmc_stats(&mut self) -> (u64, u64) {
+        let out = (self.mcmc_steps, self.mcmc_accepts);
+        self.mcmc_steps = 0;
+        self.mcmc_accepts = 0;
+        out
+    }
+
+    /// Build (or reuse) the chain's candidate-item proposal for the
+    /// current basket: the conditioned descent weight cached on the warm
+    /// start, with `J` statically excluded.
+    fn ensure_chain_prop(&mut self, st: &ConditionedState, m: usize) {
+        if self.chain_prop.is_some() {
+            return;
+        }
+        let mc = st.mcmc.as_ref().expect("ensure_mcmc() first");
+        self.chain_prop = Some(match mc.cfg.proposal {
+            ProposalKind::Uniform => ItemProposal::uniform(m),
+            ProposalKind::Tree => ItemProposal::tree(mc.weight.clone(), st.given.clone(), m),
+        });
+    }
+
     /// Draw one conditional fixed-size sample: restart the up-down chain
-    /// from `J ∪ seed`, swap only non-`J` positions for `burn_in` steps
-    /// (target `Pr(S) ∝ det(L_{J ∪ S})`, `|S|` fixed), and return the full
-    /// basket together with the chain steps spent.
-    pub fn sample_mcmc(&mut self, kernel: &NdppKernel, rng: &mut Xoshiro) -> (Vec<usize>, u64) {
+    /// from `J ∪ seed`, swap only non-`J` positions (target
+    /// `Pr(S) ∝ det(L_{J ∪ S})`, `|S|` fixed), with candidates drawn
+    /// through the prepared tree under the conditioned weight (uniform
+    /// when pinned) and adaptive burn-in bounded by the config knobs.
+    /// Returns the full basket together with the chain steps spent.
+    pub fn sample_mcmc(
+        &mut self,
+        kernel: &NdppKernel,
+        tree: &SampleTree,
+        rng: &mut Xoshiro,
+    ) -> (Vec<usize>, u64) {
+        let (mut sets, steps) = self.run_mcmc_chain(kernel, tree, 1, false, rng);
+        (sets.pop().expect("one chain state"), steps)
+    }
+
+    /// Satellite of the tree-proposal chain: draw `n` conditional samples
+    /// from **one** thinned chain instead of `n` burn-in restarts —
+    /// amortized burn-in for `n > 1` requests that opt into chain mode on
+    /// the wire.  Successive states are correlated at lags shorter than
+    /// the chain's mixing time; restart mode stays the replay default.
+    pub fn sample_mcmc_chain(
+        &mut self,
+        kernel: &NdppKernel,
+        tree: &SampleTree,
+        n: usize,
+        rng: &mut Xoshiro,
+    ) -> (Vec<Vec<usize>>, u64) {
+        self.run_mcmc_chain(kernel, tree, n, false, rng)
+    }
+
+    /// Variable-size conditional chain: target the **full** conditional
+    /// law `Pr(Y | J ⊆ Y) ∝ det(L_Y)` over completions of any size (the
+    /// same law the rejection path samples), via up/down/swap moves over
+    /// the non-`J` positions.  This is what the steering router's
+    /// `auto` → MCMC fallthrough runs, so steered answers match the
+    /// distribution the feasible path would have produced.
+    pub fn sample_mcmc_variable(
+        &mut self,
+        kernel: &NdppKernel,
+        tree: &SampleTree,
+        rng: &mut Xoshiro,
+    ) -> (Vec<usize>, u64) {
+        let (mut sets, steps) = self.run_mcmc_chain(kernel, tree, 1, true, rng);
+        (sets.pop().expect("one chain state"), steps)
+    }
+
+    /// Variable-size chain-mode batch (see
+    /// [`ConditionalScratch::sample_mcmc_chain`]).
+    pub fn sample_mcmc_variable_chain(
+        &mut self,
+        kernel: &NdppKernel,
+        tree: &SampleTree,
+        n: usize,
+        rng: &mut Xoshiro,
+    ) -> (Vec<Vec<usize>>, u64) {
+        self.run_mcmc_chain(kernel, tree, n, true, rng)
+    }
+
+    /// Shared chain driver behind the four `sample_mcmc*` entry points:
+    /// adaptive burn-in from the validated `J ∪ seed` start, then `n - 1`
+    /// thinned records.  `variable` selects up/down/swap moves over the
+    /// completion positions (cardinality-free target) versus swap-only
+    /// (fixed completion size).
+    fn run_mcmc_chain(
+        &mut self,
+        kernel: &NdppKernel,
+        tree: &SampleTree,
+        n: usize,
+        variable: bool,
+        rng: &mut Xoshiro,
+    ) -> (Vec<Vec<usize>>, u64) {
         let st = self.state.clone().expect("condition() before sampling");
         let mc = st.mcmc.as_ref().expect("ensure_mcmc() first");
         let cfg = mc.cfg;
-        if cfg.size == 0 {
-            return (st.given.clone(), 0);
+        if n == 0 {
+            return (Vec::new(), 0);
+        }
+        let jlen = st.given.len();
+        if cfg.size == 0 && !variable {
+            return (vec![st.given.clone(); n], 0);
         }
         let m = kernel.m();
-        let jlen = st.given.len();
+        let cap = m.min(2 * kernel.k());
         let start: Vec<usize> = st.given.iter().chain(mc.seed.iter()).copied().collect();
         // ensure_mcmc validated this exact (deterministic) factorization;
         // degrade to the observed basket rather than panicking a served
         // request if a caller mixed up kernels across models
         let Some(mut minor) = IncrementalMinor::new(kernel, start.clone()) else {
             debug_assert!(false, "seed validated by ensure_mcmc but minor refused it");
-            return (st.given.clone(), 0);
+            return (vec![st.given.clone(); n], 0);
         };
         minor.refresh_every = cfg.refresh_every.max(1);
-        for _ in 0..cfg.burn_in {
-            let pos = jlen + rng.below(cfg.size);
-            let j = rng.below(m);
-            if !minor.items().contains(&j) {
-                minor.swap_if(pos, j, |ratio| rng.uniform() < ratio);
+        self.ensure_chain_prop(&st, m);
+        let ConditionalScratch { chain_prop, pos_prob, mcmc_steps, mcmc_accepts, .. } =
+            &mut *self;
+        let prop = chain_prop.as_mut().expect("just built");
+        fill_pos_probs(prop, Some(tree), minor.items(), pos_prob);
+        let burn_cap = cfg.burn_in;
+        let floor = (burn_cap / 4).max(crate::sampler::mcmc::BURN_WINDOW).min(burn_cap);
+        let mut meter = BurnInMeter::new();
+        let mut steps: u64 = 0;
+        let mut one_move = |minor: &mut IncrementalMinor<'_>,
+                            pos_prob: &mut Vec<f64>,
+                            prop: &mut ItemProposal,
+                            rng: &mut Xoshiro| {
+            *mcmc_steps += 1;
+            let accepted = if variable {
+                variable_move(minor, jlen, cap, prop, Some(tree), pos_prob, rng)
+            } else {
+                swap_move(minor, jlen, prop, Some(tree), pos_prob, rng)
+            };
+            if accepted {
+                *mcmc_accepts += 1;
             }
             if !minor.is_healthy() {
                 // drift recovery: restart from the validated seed (same
                 // deterministic construction as above, so it succeeds)
                 match IncrementalMinor::new(kernel, start.clone()) {
-                    Some(fresh) => {
-                        minor = fresh;
-                        minor.refresh_every = cfg.refresh_every.max(1);
+                    Some(mut fresh) => {
+                        fresh.refresh_every = cfg.refresh_every.max(1);
+                        fill_pos_probs(prop, Some(tree), fresh.items(), pos_prob);
+                        *minor = fresh;
                     }
-                    None => break,
+                    None => return false,
                 }
             }
+            true
+        };
+        let mut burn = 0usize;
+        while burn < burn_cap {
+            if !one_move(&mut minor, pos_prob, prop, rng) {
+                break;
+            }
+            burn += 1;
+            if cfg.adaptive_burn_in && meter.record(minor.log_det()) && burn >= floor {
+                break;
+            }
         }
-        let mut y = minor.items().to_vec();
-        y.sort_unstable();
-        (y, cfg.burn_in as u64)
+        steps += burn as u64;
+        let mut out = Vec::with_capacity(n);
+        for idx in 0..n {
+            if idx > 0 {
+                for _ in 0..cfg.thinning {
+                    if !one_move(&mut minor, pos_prob, prop, rng) {
+                        break;
+                    }
+                    steps += 1;
+                }
+            }
+            let mut y = minor.items().to_vec();
+            y.sort_unstable();
+            out.push(y);
+        }
+        (out, steps)
     }
 }
 
@@ -753,7 +942,7 @@ mod tests {
             let y = scratch.sample_rejection(&marginal.z, &tree, &mut rng);
             assert!(given.iter().all(|g| y.contains(g)), "rejection lost given: {y:?}");
             assert!(y.windows(2).all(|w| w[0] < w[1]));
-            let (y, _) = scratch.sample_mcmc(&kernel, &mut rng);
+            let (y, _) = scratch.sample_mcmc(&kernel, &tree, &mut rng);
             assert!(given.iter().all(|g| y.contains(g)), "mcmc lost given: {y:?}");
             assert!(y.windows(2).all(|w| w[0] < w[1]));
         }
@@ -830,8 +1019,8 @@ mod tests {
         let mut r2 = Xoshiro::seeded(6);
         for _ in 0..5 {
             assert_eq!(
-                builder.sample_mcmc(&kernel, &mut r1),
-                adopter.sample_mcmc(&kernel, &mut r2)
+                builder.sample_mcmc(&kernel, &tree, &mut r1),
+                adopter.sample_mcmc(&kernel, &tree, &mut r2)
             );
             assert_eq!(
                 builder.sample_cholesky(&marginal.z, &mut r1),
@@ -877,7 +1066,8 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(scratch.sample_cholesky(&marginal.z, &mut rng).0, given);
             assert_eq!(scratch.sample_rejection(&marginal.z, &tree, &mut rng), given);
-            assert_eq!(scratch.sample_mcmc(&kernel, &mut rng).0, given);
+            assert_eq!(scratch.sample_mcmc(&kernel, &tree, &mut rng).0, given);
+            assert_eq!(scratch.sample_mcmc_variable(&kernel, &tree, &mut rng).0, given);
         }
     }
 }

@@ -1,63 +1,137 @@
-//! Fixed-size (k-NDPP) MCMC up-down sampler.
+//! MCMC up-down samplers with tree-driven proposals.
 //!
 //! The rejection sampler's cost is governed by `U = det(L̂+I)/det(L+I)`,
 //! which explodes (`~2^{K/2}`) once the ONDPP orthogonality/regularization
 //! that Theorem 2 relies on is relaxed — exactly the kernels the follow-up
 //! paper *Scalable MCMC Sampling for Nonsymmetric Determinantal Point
 //! Processes* (Han, Gartrell, Dohmatob, Karbasi 2022) targets with a
-//! low-rank up-down random walk.  This module implements that walk for the
-//! fixed-size target
+//! low-rank up-down random walk.  This module implements that walk for two
+//! targets:
 //!
 //! ```text
-//!   Pr(Y) ∝ det(L_Y) · 1[|Y| = k]
+//!   fixed size ([`McmcSampler`]):       Pr(Y) ∝ det(L_Y) · 1[|Y| = k]
+//!   variable size ([`VariableMcmcSampler`]): Pr(Y) ∝ det(L_Y)
 //! ```
 //!
-//! as a Metropolis chain over k-subsets: propose replacing a uniformly
-//! chosen position of `Y` with a uniformly chosen catalog item and accept
-//! with probability `min(1, det(L_{Y'})/det(L_Y))`.  The proposal is
-//! symmetric, so the chain is reversible with the k-NDPP as its stationary
-//! distribution; every principal minor of `L = V V^T + B C B^T` is
-//! nonnegative, so the acceptance ratio is well defined.
+//! ## Proposals: uniform vs tree-driven
 //!
-//! Per-step cost is `O(k^2 + k K)` via the incrementally maintained minor
-//! ([`IncrementalMinor`]: determinant-lemma ratio + two Sherman–Morrison
-//! inverse updates), independent of both `M` and `U` — the sampler of
-//! choice whenever `Proposal::expected_rejections()` diverges.
+//! The textbook chain proposes candidate items uniformly from the catalog,
+//! so the probability of proposing any *useful* item — one carrying
+//! proposal-DPP mass — shrinks like `O(K/M)` and mixing time scales with
+//! `M`.  The tree-driven proposal ([`ProposalKind::Tree`], the default)
+//! instead descends the registration-time [`SampleTree`] under the weight
+//! matrix `W = diag(λ/(1+λ))`, drawing item `j` with probability
+//! proportional to its proposal marginal `K̂_jj = z_j^T W z_j` in
+//! `O(R^2 log M)` per draw.  The descent returns the **exact** probability
+//! of the item it drew (the walk is single-path by construction, including
+//! its dead-branch fallbacks), so the Metropolis correction
+//! `min(1, ratio · q(i)/q(j))` uses exact proposal odds and the chain is
+//! reversible for the same stationary law as the uniform chain — only the
+//! *mixing speed* changes.  A fixed `ε = 0.1` uniform mixture keeps the
+//! proposal strictly positive everywhere (irreducibility even for items
+//! with zero proposal marginal), and per-position proposal probabilities
+//! are cached (`q` is a static function of the kernel), so a step costs
+//! one tree descent plus the usual `O(k^2 + kK)` minor update — still
+//! independent of `M` up to the `log M` descent.
+//!
+//! Per-step minor cost is `O(k^2 + k K)` via [`IncrementalMinor`]
+//! (determinant-lemma ratios + Sherman–Morrison/block-inverse updates),
+//! independent of both `M` and `U` — the sampler of choice whenever
+//! `Proposal::expected_rejections()` diverges.
+//!
+//! ## Adaptive burn-in
+//!
+//! With `adaptive_burn_in` (default on) the chain monitors the lag-1
+//! autocorrelation of `log det(L_Y)` over a sliding 64-step window and
+//! stops burning in once the trajectory decorrelates (`ρ₁ ≤ 0.2`), bounded
+//! below by `burn_in/4` and above by the configured `burn_in` — the knobs
+//! keep their meaning as hard bounds.  The decision is a pure function of
+//! the chain trajectory, so replay determinism is untouched.
 //!
 //! ## Reproducibility contract
 //!
 //! [`Sampler::sample`] restarts the chain from the (lazily computed,
-//! kernel-deterministic) greedy MAP seed and runs `burn_in` steps, so each
-//! sample is a pure function of `(kernel, rng state)` — the property the
+//! kernel-deterministic) greedy MAP seed and burns in, so each sample is a
+//! pure function of `(kernel, config, rng state)` — the property the
 //! coordinator's batching determinism tests demand.  [`McmcSampler::
 //! sample_chain`] amortizes burn-in across a batch by thinning a single
 //! chain instead; use it in throughput-sensitive loops where samples may
-//! share one request's RNG stream.
+//! share one request's RNG stream (opt-in on the wire via the `chain`
+//! flag).
 
 use crate::learn::map_inference::greedy_map;
+use crate::linalg::Matrix;
 use crate::ndpp::probability::IncrementalMinor;
+use crate::ndpp::proposal::SpectralDpp;
 use crate::ndpp::{MarginalKernel, NdppKernel};
 use crate::rng::Xoshiro;
+use crate::sampler::tree::SampleTree;
 use crate::sampler::Sampler;
 
-/// Mixing-time knobs for the up-down chain.
+/// Uniform-mixture weight of the tree proposal: `q(j) = ε/M + (1-ε)
+/// q_tree(j)`.  Keeps every item proposable (irreducibility) even when
+/// its proposal marginal is numerically zero.
+const UNIFORM_MIX: f64 = 0.1;
+
+/// Sliding-window length of the adaptive burn-in autocorrelation estimate.
+pub(crate) const BURN_WINDOW: usize = 64;
+
+/// How the up/swap moves draw candidate items.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProposalKind {
+    /// Uniform over the catalog — the oracle baseline; mixing scales with
+    /// `M`.  Kept behind a config pin for equivalence tests and replay of
+    /// pre-tree-proposal deployments.
+    Uniform,
+    /// Descend the prepared [`SampleTree`] under the proposal-marginal
+    /// weight: `O(log M)` per draw, `M`-independent mixing.
+    #[default]
+    Tree,
+}
+
+impl ProposalKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ProposalKind::Uniform => "uniform",
+            ProposalKind::Tree => "tree",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ProposalKind> {
+        match s {
+            "uniform" => Some(ProposalKind::Uniform),
+            "tree" => Some(ProposalKind::Tree),
+            _ => None,
+        }
+    }
+}
+
+/// Mixing-time knobs for the up-down chains.
 #[derive(Debug, Clone, Copy)]
 pub struct McmcConfig {
     /// Target sample size `k` (`1 <= k <= min(M, 2K)` for a nonsingular
-    /// chain; `0` degenerates to the empty set).
+    /// chain; `0` degenerates to the empty set).  The variable-size chain
+    /// uses it as the seed size only.
     pub size: usize,
-    /// Steps run before the first state is trusted.
+    /// Upper bound on steps run before the first state is trusted (the
+    /// exact count when `adaptive_burn_in` is off).
     pub burn_in: usize,
     /// Steps between recorded states in [`McmcSampler::sample_chain`].
     pub thinning: usize,
-    /// Applied swaps between full refactorizations of the minor.
+    /// Applied moves between full refactorizations of the minor.
     pub refresh_every: usize,
+    /// Candidate-item proposal for up/swap moves.
+    pub proposal: ProposalKind,
+    /// Stop burn-in early once the `log det` trajectory decorrelates
+    /// (never before `burn_in / 4` steps, never after `burn_in`).
+    pub adaptive_burn_in: bool,
 }
 
 impl McmcConfig {
     /// Defaults for a target size on a catalog of `m` items: burn-in scales
     /// with `k log M` (the chain must be able to replace every coordinate
-    /// several times), thinning with `k`.
+    /// several times), thinning with `k`; tree proposal and adaptive
+    /// burn-in on.
     pub fn for_size(size: usize, m: usize) -> McmcConfig {
         let log_m = (m.max(2) as f64).log2().ceil() as usize;
         McmcConfig {
@@ -65,12 +139,15 @@ impl McmcConfig {
             burn_in: (30 * size * log_m).max(200),
             thinning: (2 * size).max(1),
             refresh_every: 64,
+            proposal: ProposalKind::Tree,
+            adaptive_burn_in: true,
         }
     }
 
     /// Pick the size from the kernel's expected sample size
     /// `E|Y| = tr(K)` (rounded, clamped to `[1, 2K]`) — the fixed-size
     /// sampler then behaves like the unconstrained NDPP conditioned on its
+    /// typical cardinality, and the variable-size chain seeds at its
     /// typical cardinality.
     pub fn from_marginal(marginal: &MarginalKernel) -> McmcConfig {
         let expected: f64 = marginal.marginals().iter().sum();
@@ -85,19 +162,271 @@ impl McmcConfig {
     }
 }
 
+/// Proposed / accepted move counters shared by all chain drivers.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct ChainStats {
+    pub steps: u64,
+    pub accepts: u64,
+}
+
+/// Candidate-item proposal distribution: either uniform over the catalog
+/// or the ε-mixed tree descent.  Owns the descent weight matrix and leaf
+/// scratch so repeated draws allocate nothing — the Scratch half of the
+/// Prepared/Scratch split (the tree itself is the shared Prepared half).
+///
+/// `excluded` is the *static* conditioning set (the request basket `J` on
+/// conditional chains, empty otherwise): descent probabilities are defined
+/// with those items clamped to zero, so `q` never depends on the evolving
+/// chain state and per-position probabilities can be cached.  Collisions
+/// with the *current* chain state are handled by Metropolis self-loops,
+/// not by the proposal.
+pub(crate) enum ItemProposal {
+    Uniform {
+        m: usize,
+    },
+    Tree {
+        weight: Matrix,
+        scores: Vec<f64>,
+        excluded: Vec<usize>,
+        m: usize,
+    },
+}
+
+impl ItemProposal {
+    pub fn uniform(m: usize) -> ItemProposal {
+        ItemProposal::Uniform { m }
+    }
+
+    /// Tree proposal under an explicit `R x R` weight (conditional chains
+    /// pass the conditioned `U diag(λᶜ/(1+λᶜ)) U^T`).  `excluded` must be
+    /// sorted ascending.
+    pub fn tree(weight: Matrix, excluded: Vec<usize>, m: usize) -> ItemProposal {
+        debug_assert!(excluded.windows(2).all(|w| w[0] < w[1]), "excluded must be sorted");
+        ItemProposal::Tree { weight, scores: Vec::new(), excluded, m }
+    }
+
+    /// Unconditional tree proposal: weight `diag(λ/(1+λ))`, so the item
+    /// odds are the proposal-DPP marginals `K̂_jj`.
+    pub fn marginal_tree(spectral: &SpectralDpp, m: usize) -> ItemProposal {
+        let r = spectral.rank();
+        let mut w = Matrix::zeros(r, r);
+        for i in 0..r {
+            w[(i, i)] = spectral.lambda[i] / (1.0 + spectral.lambda[i]);
+        }
+        ItemProposal::tree(w, Vec::new(), m)
+    }
+
+    pub fn kind(&self) -> ProposalKind {
+        match self {
+            ItemProposal::Uniform { .. } => ProposalKind::Uniform,
+            ItemProposal::Tree { .. } => ProposalKind::Tree,
+        }
+    }
+
+    /// Draw a candidate item; returns `(j, q(j))` with `q` the exact
+    /// probability this proposal assigns to `j`.
+    pub fn draw(&mut self, tree: Option<&SampleTree>, rng: &mut Xoshiro) -> (usize, f64) {
+        match self {
+            ItemProposal::Uniform { m } => (rng.below(*m), 1.0 / *m as f64),
+            ItemProposal::Tree { weight, scores, excluded, m } => {
+                let tree = tree.expect("tree proposal constructed without a SampleTree");
+                let mf = *m as f64;
+                if rng.uniform() < UNIFORM_MIX {
+                    // uniform leg; the mixture probability still needs the
+                    // tree's point mass at the drawn item
+                    let j = rng.below(*m);
+                    let p = tree.proposal_prob(j, weight, scores, excluded);
+                    (j, UNIFORM_MIX / mf + (1.0 - UNIFORM_MIX) * p)
+                } else {
+                    let (j, p) = tree.propose_item_with(weight, scores, excluded, rng);
+                    (j, UNIFORM_MIX / mf + (1.0 - UNIFORM_MIX) * p)
+                }
+            }
+        }
+    }
+
+    /// Exact probability the proposal assigns to item `j` (a deterministic
+    /// root-to-leaf walk on the tree variant).
+    pub fn prob(&mut self, tree: Option<&SampleTree>, j: usize) -> f64 {
+        match self {
+            ItemProposal::Uniform { m } => 1.0 / *m as f64,
+            ItemProposal::Tree { weight, scores, excluded, m } => {
+                let tree = tree.expect("tree proposal constructed without a SampleTree");
+                let p = tree.proposal_prob(j, weight, scores, excluded);
+                UNIFORM_MIX / *m as f64 + (1.0 - UNIFORM_MIX) * p
+            }
+        }
+    }
+}
+
+/// One Metropolis swap probe over the free positions `[pinned..]`:
+/// uniform position, proposal-drawn candidate, acceptance
+/// `min(1, ratio · q(i)/q(j))`.  Returns whether the move was applied.
+/// `pos_prob` caches `q` per position and is kept in sync on acceptance.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn swap_move(
+    minor: &mut IncrementalMinor<'_>,
+    pinned: usize,
+    prop: &mut ItemProposal,
+    tree: Option<&SampleTree>,
+    pos_prob: &mut [f64],
+    rng: &mut Xoshiro,
+) -> bool {
+    let free = minor.items().len() - pinned;
+    let pos = pinned + rng.below(free);
+    let (j, qj) = prop.draw(tree, rng);
+    if minor.items().contains(&j) {
+        return false; // self-loop: proposal keeps Y unchanged
+    }
+    // swap_if computes the acceptance ratio once and reuses it for the
+    // inverse update; the uniform is only drawn for positive ratios.  For
+    // the uniform proposal q(i)/q(j) = 1 exactly, reproducing the
+    // symmetric-proposal chain bit for bit.
+    let qi = pos_prob[pos];
+    let (_, accepted) = minor.swap_if(pos, j, |ratio| rng.uniform() < ratio * (qi / qj));
+    if accepted {
+        pos_prob[pos] = qj;
+    }
+    accepted
+}
+
+/// One variable-size chain move: up with probability 0.4, down with 0.4,
+/// swap with 0.2.  Up/down share their move-type probability, so the
+/// Metropolis ratios reduce to
+///
+/// ```text
+///   up   (Y -> Y ∪ {j}):  min(1, ratio / ((free+1) · q(j)))
+///   down (Y -> Y \ {i}):  min(1, ratio · free · q(i))
+/// ```
+///
+/// with `free` the number of unpinned positions *before* the move.
+/// Out-of-range proposals (up at the `cap`, down/swap on an empty free
+/// region, candidate already in `Y`) are lazy self-loops — valid
+/// Metropolis moves that keep the kernel reversible.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn variable_move(
+    minor: &mut IncrementalMinor<'_>,
+    pinned: usize,
+    cap: usize,
+    prop: &mut ItemProposal,
+    tree: Option<&SampleTree>,
+    pos_prob: &mut Vec<f64>,
+    rng: &mut Xoshiro,
+) -> bool {
+    let free = minor.items().len() - pinned;
+    let u = rng.uniform();
+    if u < 0.4 {
+        // up-move
+        if minor.items().len() >= cap {
+            return false;
+        }
+        let (j, qj) = prop.draw(tree, rng);
+        if minor.items().contains(&j) {
+            return false;
+        }
+        let reverse = 1.0 / ((free + 1) as f64 * qj);
+        let (_, accepted) = minor.grow_if(j, |ratio| rng.uniform() < ratio * reverse);
+        if accepted {
+            pos_prob.push(qj);
+        }
+        accepted
+    } else if u < 0.8 {
+        // down-move
+        if free == 0 {
+            return false;
+        }
+        let pos = pinned + rng.below(free);
+        let qi = pos_prob[pos];
+        let (_, accepted) = minor.shrink_if(pos, |ratio| rng.uniform() < ratio * free as f64 * qi);
+        if accepted {
+            pos_prob.remove(pos); // mirror IncrementalMinor's Vec::remove
+        }
+        accepted
+    } else {
+        // swap keeps the size — same move as the fixed-size chain
+        if free == 0 {
+            return false;
+        }
+        swap_move(minor, pinned, prop, tree, pos_prob, rng)
+    }
+}
+
+/// Refill the per-position proposal-probability cache for a fresh minor.
+/// Pinned positions get real values too (uniform bookkeeping; they are
+/// never read by the move kernels, which only touch `[pinned..]`).
+pub(crate) fn fill_pos_probs(
+    prop: &mut ItemProposal,
+    tree: Option<&SampleTree>,
+    items: &[usize],
+    pos_prob: &mut Vec<f64>,
+) {
+    pos_prob.clear();
+    for &i in items {
+        pos_prob.push(prop.prob(tree, i));
+    }
+}
+
+/// Online mixedness detector: lag-1 autocorrelation of `log det(L_Y)`
+/// over a sliding [`BURN_WINDOW`]-step window, evaluated each time the
+/// window refills.  A pure function of the recorded trajectory, so replay
+/// determinism is preserved.
+#[derive(Debug)]
+pub(crate) struct BurnInMeter {
+    window: [f64; BURN_WINDOW],
+    steps: usize,
+}
+
+impl BurnInMeter {
+    pub fn new() -> BurnInMeter {
+        BurnInMeter { window: [0.0; BURN_WINDOW], steps: 0 }
+    }
+
+    /// Record the post-step `log det`; returns true when a full, freshly
+    /// rolled-over window looks decorrelated (`ρ₁ ≤ 0.2` with a variance
+    /// floor: a frozen trajectory — every proposal rejected — is *not*
+    /// mixed, it is stuck, and must keep burning toward the cap).
+    pub fn record(&mut self, log_det: f64) -> bool {
+        self.window[self.steps % BURN_WINDOW] = log_det;
+        self.steps += 1;
+        if self.steps < BURN_WINDOW || self.steps % BURN_WINDOW != 0 {
+            return false;
+        }
+        // window is in trajectory order exactly at rollover points
+        let n = BURN_WINDOW as f64;
+        let mean: f64 = self.window.iter().sum::<f64>() / n;
+        let var: f64 = self.window.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        if var <= 1e-12 * (1.0 + mean * mean) {
+            return false;
+        }
+        let mut cov = 0.0;
+        for w in self.window.windows(2) {
+            cov += (w[0] - mean) * (w[1] - mean);
+        }
+        cov / (n - 1.0) / var <= 0.2
+    }
+}
+
 /// Fixed-size up-down Metropolis sampler.  Borrow-based like
-/// [`crate::sampler::RejectionSampler`]: the kernel is shared, read-only
-/// preprocessing; all chain state is local.
+/// [`crate::sampler::RejectionSampler`]: the kernel and the (optional)
+/// proposal tree are shared, read-only preprocessing; all chain state is
+/// local.
 pub struct McmcSampler<'a> {
     kernel: &'a NdppKernel,
     config: McmcConfig,
+    /// prepared tree for [`ProposalKind::Tree`]; without one the sampler
+    /// silently degrades to the uniform proposal (same stationary law)
+    tree: Option<&'a SampleTree>,
+    prop: Option<ItemProposal>,
     /// greedy MAP warm start, computed lazily on first use
     seed_set: Option<Vec<usize>>,
+    /// per-position proposal probabilities of the current chain state
+    pos_prob: Vec<f64>,
+    stats: ChainStats,
     /// chain steps spent on the most recent sample / batch
     pub last_steps: usize,
-    /// running totals for acceptance-rate reporting
-    pub total_steps: u64,
-    pub total_accepts: u64,
+    /// burn-in steps actually run on the most recent restart (< config
+    /// burn_in when the adaptive meter stopped early)
+    pub last_burn_in: usize,
     pub total_samples: u64,
 }
 
@@ -118,10 +447,13 @@ impl<'a> McmcSampler<'a> {
         McmcSampler {
             kernel,
             config,
+            tree: None,
+            prop: None,
             seed_set: None,
+            pos_prob: Vec::new(),
+            stats: ChainStats::default(),
             last_steps: 0,
-            total_steps: 0,
-            total_accepts: 0,
+            last_burn_in: 0,
             total_samples: 0,
         }
     }
@@ -149,18 +481,43 @@ impl<'a> McmcSampler<'a> {
         s
     }
 
+    /// Attach the prepared [`SampleTree`] so [`ProposalKind::Tree`] configs
+    /// actually descend it.  The tree is the same read-only structure the
+    /// rejection path samples from, built once at registration — attaching
+    /// it here rebuilds nothing (pinned by `sampler::tree::build_count`
+    /// tests).
+    pub fn with_tree(mut self, tree: &'a SampleTree) -> McmcSampler<'a> {
+        self.tree = tree.into();
+        self.prop = None; // rebuild on next use with the tree attached
+        self
+    }
+
     pub fn config(&self) -> McmcConfig {
         self.config
     }
 
-    /// Fraction of proposed swaps accepted so far (diagnostic: healthy
+    /// The proposal the chain will actually run with (`Tree` only when a
+    /// tree is attached *and* the config asks for it).
+    pub fn proposal_kind(&self) -> ProposalKind {
+        match (self.config.proposal, self.tree) {
+            (ProposalKind::Tree, Some(_)) => ProposalKind::Tree,
+            _ => ProposalKind::Uniform,
+        }
+    }
+
+    /// Fraction of proposed moves accepted so far (diagnostic: healthy
     /// chains sit well above a few percent).
     pub fn acceptance_rate(&self) -> f64 {
-        if self.total_steps == 0 {
+        if self.stats.steps == 0 {
             0.0
         } else {
-            self.total_accepts as f64 / self.total_steps as f64
+            self.stats.accepts as f64 / self.stats.steps as f64
         }
+    }
+
+    /// `(proposed, accepted)` move totals since construction.
+    pub fn chain_stats(&self) -> (u64, u64) {
+        (self.stats.steps, self.stats.accepts)
     }
 
     /// The greedy-MAP warm start (lazy; deterministic in the kernel).  The
@@ -174,19 +531,32 @@ impl<'a> McmcSampler<'a> {
         self.seed_set.as_deref().expect("just initialized")
     }
 
+    fn proposal(&mut self) -> &mut ItemProposal {
+        if self.prop.is_none() {
+            self.prop = Some(match (self.config.proposal, self.tree) {
+                (ProposalKind::Tree, Some(t)) => {
+                    ItemProposal::marginal_tree(t.spectral(), self.kernel.m())
+                }
+                _ => ItemProposal::uniform(self.kernel.m()),
+            });
+        }
+        self.prop.as_mut().expect("just initialized")
+    }
+
     /// One proposed up-down move; returns whether it was accepted.
     fn step(&mut self, minor: &mut IncrementalMinor<'_>, rng: &mut Xoshiro) -> bool {
-        let pos = rng.below(self.config.size);
-        let j = rng.below(self.kernel.m());
-        self.total_steps += 1;
-        if minor.items().contains(&j) {
-            return false; // self-loop: proposal keeps Y unchanged
-        }
-        // swap_if computes the acceptance ratio once and reuses it for the
-        // inverse update; the uniform is only drawn for positive ratios
-        let (_, accepted) = minor.swap_if(pos, j, |ratio| rng.uniform() < ratio);
+        self.proposal();
+        self.stats.steps += 1;
+        let accepted = swap_move(
+            minor,
+            0,
+            self.prop.as_mut().expect("proposal ready"),
+            self.tree,
+            &mut self.pos_prob,
+            rng,
+        );
         if accepted {
-            self.total_accepts += 1;
+            self.stats.accepts += 1;
         }
         accepted
     }
@@ -201,6 +571,13 @@ impl<'a> McmcSampler<'a> {
         let mut minor = IncrementalMinor::new(self.kernel, seed)
             .expect("greedy MAP seed has positive determinant");
         minor.refresh_every = self.config.refresh_every.max(1);
+        self.proposal();
+        fill_pos_probs(
+            self.prop.as_mut().expect("proposal ready"),
+            self.tree,
+            minor.items(),
+            &mut self.pos_prob,
+        );
         minor
     }
 
@@ -216,9 +593,25 @@ impl<'a> McmcSampler<'a> {
 
     fn start_chain(&mut self, rng: &mut Xoshiro) -> IncrementalMinor<'a> {
         let mut minor = self.fresh_minor();
-        for _ in 0..self.config.burn_in {
-            self.step_or_reseed(&mut minor, rng);
+        let cap = self.config.burn_in;
+        if !self.config.adaptive_burn_in {
+            for _ in 0..cap {
+                self.step_or_reseed(&mut minor, rng);
+            }
+            self.last_burn_in = cap;
+            return minor;
         }
+        let floor = (cap / 4).max(BURN_WINDOW).min(cap);
+        let mut meter = BurnInMeter::new();
+        let mut steps = 0;
+        while steps < cap {
+            self.step_or_reseed(&mut minor, rng);
+            steps += 1;
+            if meter.record(minor.log_det()) && steps >= floor {
+                break;
+            }
+        }
+        self.last_burn_in = steps;
         minor
     }
 
@@ -232,7 +625,7 @@ impl<'a> McmcSampler<'a> {
             return vec![Vec::new(); n];
         }
         let mut minor = self.start_chain(rng);
-        let mut steps = self.config.burn_in;
+        let mut steps = self.last_burn_in;
         let mut out = Vec::with_capacity(n);
         for idx in 0..n {
             if idx > 0 {
@@ -259,7 +652,7 @@ impl Sampler for McmcSampler<'_> {
             return Vec::new();
         }
         let minor = self.start_chain(rng);
-        self.last_steps = self.config.burn_in;
+        self.last_steps = self.last_burn_in;
         self.total_samples += 1;
         let mut y = minor.items().to_vec();
         y.sort_unstable();
@@ -268,6 +661,216 @@ impl Sampler for McmcSampler<'_> {
 
     fn name(&self) -> &'static str {
         "mcmc-updown"
+    }
+}
+
+/// Variable-size up/down/swap Metropolis sampler for the unconstrained
+/// target `Pr(Y) ∝ det(L_Y)` — the full NDPP law, cardinality included,
+/// for kernels where rejection's `U` diverges and no fast exact sampler
+/// exists.  Seeds at the kernel's typical cardinality (`config.size`) and
+/// walks sizes `0 ..= min(M, 2K)`.
+pub struct VariableMcmcSampler<'a> {
+    kernel: &'a NdppKernel,
+    config: McmcConfig,
+    tree: Option<&'a SampleTree>,
+    prop: Option<ItemProposal>,
+    seed_set: Option<Vec<usize>>,
+    pos_prob: Vec<f64>,
+    stats: ChainStats,
+    /// hard size ceiling `min(M, 2K)`: beyond the kernel rank every minor
+    /// is singular, so up-moves there are wasted probes
+    cap: usize,
+    pub last_steps: usize,
+    pub last_burn_in: usize,
+    pub total_samples: u64,
+}
+
+impl<'a> VariableMcmcSampler<'a> {
+    pub fn new(kernel: &'a NdppKernel, config: McmcConfig) -> VariableMcmcSampler<'a> {
+        let cap = kernel.m().min(2 * kernel.k());
+        assert!(
+            config.size <= cap,
+            "seed size {} exceeds the chain's size ceiling min(M, 2K) = {cap}",
+            config.size
+        );
+        VariableMcmcSampler {
+            kernel,
+            config,
+            tree: None,
+            prop: None,
+            seed_set: None,
+            pos_prob: Vec::new(),
+            stats: ChainStats::default(),
+            cap,
+            last_steps: 0,
+            last_burn_in: 0,
+            total_samples: 0,
+        }
+    }
+
+    /// Attach the prepared [`SampleTree`] (see [`McmcSampler::with_tree`]).
+    pub fn with_tree(mut self, tree: &'a SampleTree) -> VariableMcmcSampler<'a> {
+        self.tree = tree.into();
+        self.prop = None;
+        self
+    }
+
+    /// Precomputed warm start, as [`McmcSampler::with_seed`].
+    pub fn with_seed(
+        kernel: &'a NdppKernel,
+        config: McmcConfig,
+        seed_items: Vec<usize>,
+    ) -> VariableMcmcSampler<'a> {
+        assert_eq!(
+            seed_items.len(),
+            config.size,
+            "warm start has {} items but the chain seeds at size {}",
+            seed_items.len(),
+            config.size
+        );
+        let mut s = VariableMcmcSampler::new(kernel, config);
+        s.seed_set = Some(seed_items);
+        s
+    }
+
+    pub fn config(&self) -> McmcConfig {
+        self.config
+    }
+
+    pub fn proposal_kind(&self) -> ProposalKind {
+        match (self.config.proposal, self.tree) {
+            (ProposalKind::Tree, Some(_)) => ProposalKind::Tree,
+            _ => ProposalKind::Uniform,
+        }
+    }
+
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.stats.steps == 0 {
+            0.0
+        } else {
+            self.stats.accepts as f64 / self.stats.steps as f64
+        }
+    }
+
+    pub fn chain_stats(&self) -> (u64, u64) {
+        (self.stats.steps, self.stats.accepts)
+    }
+
+    fn proposal(&mut self) -> &mut ItemProposal {
+        if self.prop.is_none() {
+            self.prop = Some(match (self.config.proposal, self.tree) {
+                (ProposalKind::Tree, Some(t)) => {
+                    ItemProposal::marginal_tree(t.spectral(), self.kernel.m())
+                }
+                _ => ItemProposal::uniform(self.kernel.m()),
+            });
+        }
+        self.prop.as_mut().expect("just initialized")
+    }
+
+    fn seed_items(&mut self) -> &[usize] {
+        if self.seed_set.is_none() {
+            self.seed_set = Some(build_seed(self.kernel, self.config.size));
+        }
+        self.seed_set.as_deref().expect("just initialized")
+    }
+
+    fn fresh_minor(&mut self) -> IncrementalMinor<'a> {
+        let seed = self.seed_items().to_vec();
+        let mut minor = IncrementalMinor::new(self.kernel, seed)
+            .expect("greedy MAP seed has positive determinant");
+        minor.refresh_every = self.config.refresh_every.max(1);
+        self.proposal();
+        fill_pos_probs(
+            self.prop.as_mut().expect("proposal ready"),
+            self.tree,
+            minor.items(),
+            &mut self.pos_prob,
+        );
+        minor
+    }
+
+    fn step_or_reseed(&mut self, minor: &mut IncrementalMinor<'a>, rng: &mut Xoshiro) {
+        self.proposal();
+        self.stats.steps += 1;
+        let accepted = variable_move(
+            minor,
+            0,
+            self.cap,
+            self.prop.as_mut().expect("proposal ready"),
+            self.tree,
+            &mut self.pos_prob,
+            rng,
+        );
+        if accepted {
+            self.stats.accepts += 1;
+        }
+        if !minor.is_healthy() {
+            *minor = self.fresh_minor();
+        }
+    }
+
+    fn start_chain(&mut self, rng: &mut Xoshiro) -> IncrementalMinor<'a> {
+        let mut minor = self.fresh_minor();
+        let cap = self.config.burn_in;
+        if !self.config.adaptive_burn_in {
+            for _ in 0..cap {
+                self.step_or_reseed(&mut minor, rng);
+            }
+            self.last_burn_in = cap;
+            return minor;
+        }
+        let floor = (cap / 4).max(BURN_WINDOW).min(cap);
+        let mut meter = BurnInMeter::new();
+        let mut steps = 0;
+        while steps < cap {
+            self.step_or_reseed(&mut minor, rng);
+            steps += 1;
+            if meter.record(minor.log_det()) && steps >= floor {
+                break;
+            }
+        }
+        self.last_burn_in = steps;
+        minor
+    }
+
+    /// Thinned single-chain batch, as [`McmcSampler::sample_chain`].
+    pub fn sample_chain(&mut self, n: usize, rng: &mut Xoshiro) -> Vec<Vec<usize>> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut minor = self.start_chain(rng);
+        let mut steps = self.last_burn_in;
+        let mut out = Vec::with_capacity(n);
+        for idx in 0..n {
+            if idx > 0 {
+                for _ in 0..self.config.thinning {
+                    self.step_or_reseed(&mut minor, rng);
+                }
+                steps += self.config.thinning;
+            }
+            let mut y = minor.items().to_vec();
+            y.sort_unstable();
+            out.push(y);
+        }
+        self.last_steps = steps;
+        self.total_samples += n as u64;
+        out
+    }
+}
+
+impl Sampler for VariableMcmcSampler<'_> {
+    fn sample(&mut self, rng: &mut Xoshiro) -> Vec<usize> {
+        let minor = self.start_chain(rng);
+        self.last_steps = self.last_burn_in;
+        self.total_samples += 1;
+        let mut y = minor.items().to_vec();
+        y.sort_unstable();
+        y
+    }
+
+    fn name(&self) -> &'static str {
+        "mcmc-updown-var"
     }
 }
 
@@ -312,9 +915,15 @@ pub fn try_build_seed(kernel: &NdppKernel, size: usize) -> Option<Vec<usize>> {
 mod tests {
     use super::*;
     use crate::ndpp::probability::{det_l_y, enumerate_probs};
+    use crate::ndpp::Proposal;
+    use crate::sampler::TreeConfig;
     use crate::util::testing::{
         chi_square_gof, conditioned_on_size, empirical, empirical_from, tv,
     };
+
+    fn tree_for(kernel: &NdppKernel) -> SampleTree {
+        SampleTree::build(&Proposal::build(kernel).spectral(), TreeConfig { leaf_size: 4 })
+    }
 
     /// Module-level statistical sanity check, deliberately smaller than
     /// the exhaustive cross-sampler suite in `tests/conformance.rs` (which
@@ -337,6 +946,42 @@ mod tests {
     }
 
     #[test]
+    fn tree_proposal_holds_the_same_law() {
+        // the tentpole invariant: switching the proposal must not move the
+        // stationary distribution, only the mixing speed
+        let mut rng = Xoshiro::seeded(62);
+        let kernel = NdppKernel::random_ondpp(7, 2, &mut rng);
+        let size = 3;
+        let tree = tree_for(&kernel);
+        let want = conditioned_on_size(&enumerate_probs(&kernel), size);
+        let mut s = McmcSampler::new(&kernel, McmcConfig::for_size(size, 7)).with_tree(&tree);
+        assert_eq!(s.proposal_kind(), ProposalKind::Tree);
+        let n = 8_000;
+        let got = empirical(&mut s, 7, n, &mut rng);
+        let d = tv(&got, &want);
+        assert!(d < 0.06, "tv={d}");
+        let cs = chi_square_gof(&got, &want, n);
+        assert!(cs.passes(), "chi2 stat={} crit={} df={}", cs.stat, cs.crit_999, cs.df);
+        assert!(s.acceptance_rate() > 0.02, "acceptance {}", s.acceptance_rate());
+    }
+
+    #[test]
+    fn variable_chain_matches_unconstrained_law() {
+        let mut rng = Xoshiro::seeded(71);
+        let kernel = NdppKernel::random_ondpp(6, 2, &mut rng);
+        let tree = tree_for(&kernel);
+        let want = enumerate_probs(&kernel);
+        let mut s =
+            VariableMcmcSampler::new(&kernel, McmcConfig::for_kernel(&kernel)).with_tree(&tree);
+        let n = 12_000;
+        let got = empirical(&mut s, 6, n, &mut rng);
+        let d = tv(&got, &want);
+        assert!(d < 0.06, "tv={d}");
+        let cs = chi_square_gof(&got, &want, n);
+        assert!(cs.passes(), "chi2 stat={} crit={} df={}", cs.stat, cs.crit_999, cs.df);
+    }
+
+    #[test]
     fn chain_mode_matches_restart_distribution() {
         let mut rng = Xoshiro::seeded(63);
         let kernel = NdppKernel::random_ondpp(6, 2, &mut rng);
@@ -352,10 +997,30 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_burn_in_stays_within_config_bounds() {
+        let mut rng = Xoshiro::seeded(72);
+        let kernel = NdppKernel::random_ondpp(20, 3, &mut rng);
+        let tree = tree_for(&kernel);
+        let cfg = McmcConfig::for_size(3, 20);
+        assert!(cfg.adaptive_burn_in);
+        let mut s = McmcSampler::new(&kernel, cfg).with_tree(&tree);
+        let _ = s.sample(&mut rng);
+        assert!(s.last_burn_in <= cfg.burn_in);
+        assert!(s.last_burn_in >= (cfg.burn_in / 4).max(BURN_WINDOW).min(cfg.burn_in));
+        // pinned off, the knob is exact
+        let mut fixed_cfg = cfg;
+        fixed_cfg.adaptive_burn_in = false;
+        let mut s2 = McmcSampler::new(&kernel, fixed_cfg).with_tree(&tree);
+        let _ = s2.sample(&mut rng);
+        assert_eq!(s2.last_burn_in, cfg.burn_in);
+    }
+
+    #[test]
     fn samples_are_valid_k_subsets() {
         let mut rng = Xoshiro::seeded(64);
         let kernel = NdppKernel::random_ondpp(40, 4, &mut rng);
-        let mut s = McmcSampler::new(&kernel, McmcConfig::for_size(4, 40));
+        let tree = tree_for(&kernel);
+        let mut s = McmcSampler::new(&kernel, McmcConfig::for_size(4, 40)).with_tree(&tree);
         for _ in 0..10 {
             let y = s.sample(&mut rng);
             assert_eq!(y.len(), 4);
@@ -366,24 +1031,55 @@ mod tests {
     }
 
     #[test]
+    fn variable_samples_are_valid_subsets() {
+        let mut rng = Xoshiro::seeded(73);
+        let kernel = NdppKernel::random_ondpp(30, 4, &mut rng);
+        let tree = tree_for(&kernel);
+        let mut s =
+            VariableMcmcSampler::new(&kernel, McmcConfig::for_kernel(&kernel)).with_tree(&tree);
+        let mut sizes = std::collections::BTreeSet::new();
+        for _ in 0..30 {
+            let y = s.sample(&mut rng);
+            assert!(y.len() <= 8, "above the rank ceiling: {y:?}");
+            assert!(y.windows(2).all(|w| w[0] < w[1]), "sorted distinct: {y:?}");
+            assert!(y.iter().all(|&i| i < 30));
+            if !y.is_empty() {
+                assert!(det_l_y(&kernel, &y) > 0.0);
+            }
+            sizes.insert(y.len());
+        }
+        assert!(sizes.len() > 1, "variable chain never changed size: {sizes:?}");
+    }
+
+    #[test]
     fn deterministic_given_seed() {
         let mut rng_k = Xoshiro::seeded(65);
         let kernel = NdppKernel::random_ondpp(30, 4, &mut rng_k);
+        let tree = tree_for(&kernel);
         let cfg = McmcConfig::for_size(3, 30);
-        let mut s1 = McmcSampler::new(&kernel, cfg);
-        let mut s2 = McmcSampler::new(&kernel, cfg);
+        let mut s1 = McmcSampler::new(&kernel, cfg).with_tree(&tree);
+        let mut s2 = McmcSampler::new(&kernel, cfg).with_tree(&tree);
         let mut r1 = Xoshiro::seeded(9);
         let mut r2 = Xoshiro::seeded(9);
         for _ in 0..5 {
             assert_eq!(s1.sample(&mut r1), s2.sample(&mut r2));
         }
         // restart semantics: a fresh sampler at the same rng point agrees
-        let mut s3 = McmcSampler::new(&kernel, cfg);
+        let mut s3 = McmcSampler::new(&kernel, cfg).with_tree(&tree);
         let mut r3 = Xoshiro::seeded(9);
         let first = s3.sample(&mut r3);
-        let mut s4 = McmcSampler::new(&kernel, cfg);
+        let mut s4 = McmcSampler::new(&kernel, cfg).with_tree(&tree);
         let mut r4 = Xoshiro::seeded(9);
         assert_eq!(first, s4.sample(&mut r4));
+        // and the variable chain likewise
+        let vcfg = McmcConfig::for_kernel(&kernel);
+        let mut v1 = VariableMcmcSampler::new(&kernel, vcfg).with_tree(&tree);
+        let mut v2 = VariableMcmcSampler::new(&kernel, vcfg).with_tree(&tree);
+        let mut r5 = Xoshiro::seeded(9);
+        let mut r6 = Xoshiro::seeded(9);
+        for _ in 0..5 {
+            assert_eq!(v1.sample(&mut r5), v2.sample(&mut r6));
+        }
     }
 
     #[test]
@@ -392,14 +1088,35 @@ mod tests {
         // MAP) must be byte-identical per rng stream
         let mut rng_k = Xoshiro::seeded(70);
         let kernel = NdppKernel::random_ondpp(30, 4, &mut rng_k);
+        let tree = tree_for(&kernel);
         let cfg = McmcConfig::for_size(3, 30);
         let seed = try_build_seed(&kernel, 3).expect("healthy kernel has a seed");
-        let mut lazy = McmcSampler::new(&kernel, cfg);
-        let mut warm = McmcSampler::with_seed(&kernel, cfg, seed);
+        let mut lazy = McmcSampler::new(&kernel, cfg).with_tree(&tree);
+        let mut warm = McmcSampler::with_seed(&kernel, cfg, seed).with_tree(&tree);
         let mut r1 = Xoshiro::seeded(5);
         let mut r2 = Xoshiro::seeded(5);
         for _ in 0..3 {
             assert_eq!(lazy.sample(&mut r1), warm.sample(&mut r2));
+        }
+    }
+
+    #[test]
+    fn uniform_pin_without_tree_matches_tree_bearing_uniform() {
+        // the config pin, not tree availability, selects the proposal:
+        // a Uniform-pinned sampler ignores an attached tree entirely
+        let mut rng_k = Xoshiro::seeded(74);
+        let kernel = NdppKernel::random_ondpp(20, 3, &mut rng_k);
+        let tree = tree_for(&kernel);
+        let mut cfg = McmcConfig::for_size(3, 20);
+        cfg.proposal = ProposalKind::Uniform;
+        let mut bare = McmcSampler::new(&kernel, cfg);
+        let mut pinned = McmcSampler::new(&kernel, cfg).with_tree(&tree);
+        assert_eq!(bare.proposal_kind(), ProposalKind::Uniform);
+        assert_eq!(pinned.proposal_kind(), ProposalKind::Uniform);
+        let mut r1 = Xoshiro::seeded(6);
+        let mut r2 = Xoshiro::seeded(6);
+        for _ in 0..4 {
+            assert_eq!(bare.sample(&mut r1), pinned.sample(&mut r2));
         }
     }
 
@@ -413,6 +1130,8 @@ mod tests {
         assert_eq!(cfg.size, (expected.round() as usize).clamp(1, 8));
         assert!(cfg.burn_in >= 200);
         assert!(cfg.thinning >= 1);
+        assert_eq!(cfg.proposal, ProposalKind::Tree);
+        assert!(cfg.adaptive_burn_in);
     }
 
     #[test]
@@ -423,7 +1142,8 @@ mod tests {
         let kernel = crate::bench::experiments::nonorthogonal_kernel(64, 24, 1.0, &mut rng);
         let u = crate::ndpp::Proposal::build(&kernel).expected_rejections();
         assert!(u > 100.0, "construction too tame: U={u}");
-        let mut s = McmcSampler::new(&kernel, McmcConfig::for_size(10, 64));
+        let tree = tree_for(&kernel);
+        let mut s = McmcSampler::new(&kernel, McmcConfig::for_size(10, 64)).with_tree(&tree);
         for _ in 0..3 {
             let y = s.sample(&mut rng);
             assert_eq!(y.len(), 10);
@@ -438,7 +1158,14 @@ mod tests {
         let kernel = NdppKernel::random_ondpp(12, 2, &mut rng);
         let mut s = McmcSampler::new(
             &kernel,
-            McmcConfig { size: 0, burn_in: 10, thinning: 1, refresh_every: 8 },
+            McmcConfig {
+                size: 0,
+                burn_in: 10,
+                thinning: 1,
+                refresh_every: 8,
+                proposal: ProposalKind::Tree,
+                adaptive_burn_in: true,
+            },
         );
         assert!(s.sample(&mut rng).is_empty());
         assert_eq!(s.sample_chain(3, &mut rng), vec![Vec::<usize>::new(); 3]);

@@ -5,7 +5,8 @@
 //! | [`DenseCholeskySampler`] | Alg 1 (LHS), Poulson 2019 | `O(M^3)` | baseline, small M only |
 //! | [`CholeskySampler`] | Alg 1 (RHS), §3 | `O(M K^2)` | linear-time, low-rank |
 //! | [`RejectionSampler`] | Alg 2, §4 | `O((K + k^3 log M + k^4) U)` | sublinear, needs proposal + tree |
-//! | [`McmcSampler`] | Han et al. 2022 follow-up | `O((k^2 + k K) · steps)` | fixed-size k-NDPP, immune to diverging `U` |
+//! | [`McmcSampler`] | Han et al. 2022 follow-up | `O((k^2 + k K + R^2 log M) · steps)` | fixed-size k-NDPP, immune to diverging `U`; tree-driven proposals by default |
+//! | [`VariableMcmcSampler`] | Han et al. 2022 follow-up | `O((k^2 + k K + R^2 log M) · steps)` | unconstrained cardinality, same chain machinery |
 //!
 //! plus the building blocks: [`elementary`] (elementary-DPP sampling from a
 //! spectral kernel, the mixture components of Eq. (10)) and [`tree`]
@@ -53,7 +54,7 @@ pub use conditional::{ConditionalPrepared, ConditionalScratch};
 pub use dense::{DenseCholeskySampler, DensePrepared, DenseScratch};
 pub use elementary::ElementaryScratch;
 pub use fixed_size::{sample_fixed_size, size_distribution};
-pub use mcmc::{McmcConfig, McmcSampler};
+pub use mcmc::{McmcConfig, McmcSampler, ProposalKind, VariableMcmcSampler};
 pub use rejection::RejectionSampler;
 pub use tree::{SampleTree, TreeConfig};
 

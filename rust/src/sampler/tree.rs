@@ -409,6 +409,134 @@ impl SampleTree {
         }
     }
 
+    // ---- tree-driven MCMC proposals -------------------------------------
+    //
+    // The up-down chain (`sampler::mcmc`) needs a proposal distribution
+    // over single items that (a) concentrates on items the target gives
+    // mass to, (b) is drawable in sublinear time, and (c) has *exactly*
+    // computable point probabilities for the Hastings correction.  The
+    // prepared node statistics give all three: under an `R x R` PSD weight
+    // matrix `W` the descent below draws item `j` with probability
+    // proportional to `v_j^T W v_j` (e.g. `W = diag(lambda/(1+lambda))`
+    // makes that the proposal-DPP marginal `K̂_jj`), and because the
+    // measure is defined *by the descent itself* — branch odds from
+    // `<W, Sigma_child>`, leaf odds from the clamped item scores, with the
+    // same deterministic fallbacks on numerically-dead mass — the exact
+    // probability of any item is recoverable by a root-to-leaf walk.
+
+    /// Leaf-bucket scores under `w` with `excluded` (sorted) clamped to
+    /// zero; returns the bucket total.
+    fn fill_bucket_scores(
+        &self,
+        node: &Node,
+        w: &Matrix,
+        excluded: &[usize],
+        scores: &mut Vec<f64>,
+    ) -> f64 {
+        scores.clear();
+        scores.extend((node.start..node.end).map(|j| {
+            if excluded.binary_search(&j).is_ok() {
+                0.0
+            } else {
+                self.item_score_projected(j, w).max(0.0)
+            }
+        }));
+        scores.iter().sum()
+    }
+
+    /// One weighted descent for the MCMC up-move proposal: draws an item
+    /// with probability proportional to `v_j^T W v_j` (items in `excluded`
+    /// carry zero leaf mass) and returns `(item, probability)` where the
+    /// probability is the **exact** mass the descent measure assigns to the
+    /// returned item — the product of the branch odds along the path times
+    /// the leaf odds, including the uniform fallbacks taken on
+    /// numerically-dead nodes/buckets.  `O((log M + leaf_size) R^2)` per
+    /// draw, zero allocation (`scores` is the caller's scratch).
+    ///
+    /// A dead bucket falls back to uniform over its *full* span, so the
+    /// returned item may be excluded; Metropolis callers treat proposing an
+    /// excluded/held item as a rejected self-loop, which keeps the point
+    /// probabilities single-path and exact.
+    pub fn propose_item_with(
+        &self,
+        w: &Matrix,
+        scores: &mut Vec<f64>,
+        excluded: &[usize],
+        rng: &mut Xoshiro,
+    ) -> (usize, f64) {
+        let mut node = self.root;
+        let mut prob = 1.0f64;
+        loop {
+            let n = &self.nodes[node];
+            if n.left == NONE {
+                let total = self.fill_bucket_scores(n, w, excluded, scores);
+                if total > 0.0 {
+                    let idx = rng.weighted(scores);
+                    return (n.start + idx, prob * scores[idx] / total);
+                }
+                // numerically-dead bucket: uniform over the full span (the
+                // walk in `proposal_prob` reproduces this measure exactly)
+                let len = n.end - n.start;
+                return (n.start + rng.below(len), prob / len as f64);
+            }
+            let pl = self.sigma_inner_projected(n.left, w).max(0.0);
+            let pr = self.sigma_inner_projected(n.right, w).max(0.0);
+            let total = pl + pr;
+            if total <= 0.0 {
+                prob *= 0.5;
+                node = if rng.uniform() < 0.5 { n.left } else { n.right };
+            } else {
+                let frac = pl / total;
+                if rng.uniform() <= frac {
+                    prob *= frac;
+                    node = n.left;
+                } else {
+                    prob *= 1.0 - frac;
+                    node = n.right;
+                }
+            }
+        }
+    }
+
+    /// The exact probability [`SampleTree::propose_item_with`] (same `w`,
+    /// same `excluded`) assigns to item `j` — a deterministic root-to-leaf
+    /// walk through the same branch odds, `O((log M + leaf_size) R^2)`.
+    /// Zero for an excluded (or zero-score) item in a live bucket; nonzero
+    /// for every item of a dead bucket.
+    pub fn proposal_prob(
+        &self,
+        j: usize,
+        w: &Matrix,
+        scores: &mut Vec<f64>,
+        excluded: &[usize],
+    ) -> f64 {
+        assert!(j < self.m(), "item {j} out of range (M = {})", self.m());
+        let mut node = self.root;
+        let mut prob = 1.0f64;
+        loop {
+            let n = &self.nodes[node];
+            if n.left == NONE {
+                let total = self.fill_bucket_scores(n, w, excluded, scores);
+                return if total > 0.0 {
+                    prob * scores[j - n.start] / total
+                } else {
+                    prob / (n.end - n.start) as f64
+                };
+            }
+            let pl = self.sigma_inner_projected(n.left, w).max(0.0);
+            let pr = self.sigma_inner_projected(n.right, w).max(0.0);
+            let total = pl + pr;
+            let go_left = j < self.nodes[n.left].end;
+            if total <= 0.0 {
+                prob *= 0.5;
+            } else {
+                let frac = pl / total;
+                prob *= if go_left { frac } else { 1.0 - frac };
+            }
+            node = if go_left { n.left } else { n.right };
+        }
+    }
+
     /// Draw exactly `count` items from the elementary DPP whose selected
     /// subspace is encoded in the `R x R` projector `q` (initialized by
     /// the caller to `U_E U_E^T` for selected eigenvector columns `U_E` in
@@ -569,6 +697,85 @@ mod tests {
                 tree.sample_dpp(&mut r2)
             );
         }
+    }
+
+    /// Dense `diag(lambda / (1 + lambda))` — the proposal-marginal weight
+    /// the MCMC tree proposal descends under.
+    fn marginal_weight(s: &SpectralDpp) -> Matrix {
+        let r = s.rank();
+        let mut w = Matrix::zeros(r, r);
+        for i in 0..r {
+            w[(i, i)] = s.lambda[i] / (1.0 + s.lambda[i]);
+        }
+        w
+    }
+
+    #[test]
+    fn proposal_prob_is_a_distribution_matching_item_weights() {
+        prop::check("tree_proposal_prob", 8, |g| {
+            let m = g.usize_in(9, 40);
+            let s = spectral_fixture(g.seed, m.max(17), 2);
+            let m = s.m();
+            let leaf = *g.choice(&[1usize, 4, 16]);
+            let tree = SampleTree::build(&s, TreeConfig { leaf_size: leaf });
+            let w = marginal_weight(&s);
+            let mut scores = Vec::new();
+            for excluded in [vec![], vec![0, m / 2, m - 1]] {
+                let probs: Vec<f64> =
+                    (0..m).map(|j| tree.proposal_prob(j, &w, &mut scores, &excluded)).collect();
+                let total: f64 = probs.iter().sum();
+                assert!((total - 1.0).abs() < 1e-9, "leaf={leaf} total={total}");
+                // live buckets: mass proportional to v_j^T W v_j, zero on
+                // the excluded items
+                let weights: Vec<f64> = (0..m)
+                    .map(|j| {
+                        if excluded.contains(&j) {
+                            0.0
+                        } else {
+                            tree.item_score_projected(j, &w).max(0.0)
+                        }
+                    })
+                    .collect();
+                let wtotal: f64 = weights.iter().sum();
+                for j in 0..m {
+                    assert!(
+                        (probs[j] - weights[j] / wtotal).abs() < 1e-9,
+                        "leaf={leaf} j={j} got={} want={}",
+                        probs[j],
+                        weights[j] / wtotal
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn propose_item_matches_walked_probability_and_frequency() {
+        let s = spectral_fixture(47, 23, 2);
+        let m = s.m();
+        let tree = SampleTree::build(&s, TreeConfig { leaf_size: 4 });
+        let w = marginal_weight(&s);
+        let mut scores = Vec::new();
+        let excluded = vec![2usize, 11];
+        let mut rng = Xoshiro::seeded(13);
+        let n = 60_000;
+        let mut counts = vec![0.0f64; m];
+        for _ in 0..n {
+            let (j, p) = tree.propose_item_with(&w, &mut scores, &excluded, &mut rng);
+            assert!(j < m);
+            // the returned probability must be the walked probability
+            let walked = tree.proposal_prob(j, &w, &mut scores, &excluded);
+            assert!((p - walked).abs() < 1e-12 * (1.0 + walked), "j={j} p={p} walked={walked}");
+            assert!(!excluded.contains(&j), "live buckets never propose excluded items");
+            counts[j] += 1.0;
+        }
+        for c in &mut counts {
+            *c /= n as f64;
+        }
+        let want: Vec<f64> =
+            (0..m).map(|j| tree.proposal_prob(j, &w, &mut scores, &excluded)).collect();
+        let d = tv(&counts, &want);
+        assert!(d < 0.02, "tv={d}");
     }
 
     #[test]

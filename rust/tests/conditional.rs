@@ -17,8 +17,10 @@
 //!   `sampler::tree::build_count`);
 //! * steering conformance (`steering_` tests): `algo=auto` requests whose
 //!   conditioned rejection rate exceeds the threshold silently route to
-//!   MCMC and still match the enumerated `Pr(Y | J ⊆ Y)` law, while
-//!   pinned `rejection` requests are refused with a structured error.
+//!   the *variable-size* conditional MCMC chain and still match the full
+//!   enumerated `Pr(Y | J ⊆ Y)` law (so steering is invisible in
+//!   distribution), while pinned `rejection` requests are refused with a
+//!   structured error.
 
 use std::sync::Arc;
 
@@ -116,14 +118,34 @@ fn conformance_on(kernel: &NdppKernel, m: usize, j: &[usize], seed: u64) {
         "observed U={observed} expected U={expected}"
     );
 
-    // conditional MCMC targets the size-conditioned completion law at the
-    // size it derived from the conditional marginal trace
+    // conditional MCMC (fixed-size, tree-driven proposal) targets the
+    // size-conditioned completion law at the size it derived from the
+    // conditional marginal trace — and never rebuilds the prepared tree
     scratch.ensure_mcmc(&prep, &marginal.z, kernel);
     let size = scratch.mcmc_config().size;
     assert!(size >= 1, "fixture too degenerate: completion size 0");
     let cond_want = conditioned_on_size(&want, j.len() + size);
-    let f_mcmc = empirical_from(m, N, &mut rng, |r| scratch.sample_mcmc(kernel, r).0);
+    let builds_before = tree::build_count();
+    let f_mcmc = empirical_from(m, N, &mut rng, |r| scratch.sample_mcmc(kernel, &tree, r).0);
+    assert_eq!(tree::build_count(), builds_before, "conditional mcmc rebuilt the tree");
     check("conditional-mcmc", &f_mcmc, &cond_want);
+    let (steps, accepts) = scratch.take_mcmc_stats();
+    assert!(steps > 0 && accepts > 0, "chain never moved: {steps} steps, {accepts} accepts");
+
+    // the variable-size chain targets the FULL conditional law — the same
+    // distribution the rejection path samples, no size conditioning
+    let f_var =
+        empirical_from(m, N, &mut rng, |r| scratch.sample_mcmc_variable(kernel, &tree, r).0);
+    check("conditional-mcmc-variable", &f_var, &want);
+
+    // the uniform-proposal oracle holds the same fixed-size law (proposal
+    // equivalence: q enters only through the Metropolis correction)
+    let mut uni = ConditionalScratch::new();
+    uni.set_mcmc_proposal(ndpp::sampler::ProposalKind::Uniform);
+    uni.condition(&prep, &marginal.z, j).unwrap();
+    uni.ensure_mcmc(&prep, &marginal.z, kernel);
+    let f_uni = empirical_from(m, N, &mut rng, |r| uni.sample_mcmc(kernel, &tree, r).0);
+    check("conditional-mcmc-uniform", &f_uni, &cond_want);
 }
 
 #[test]
@@ -171,6 +193,7 @@ fn empty_given_is_byte_identical_to_unconditional() {
                 kind,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
             .unwrap();
         let plain = svc
@@ -181,6 +204,7 @@ fn empty_given_is_byte_identical_to_unconditional() {
                 kind,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
             .unwrap();
         assert_eq!(with_empty.samples, plain.samples, "kind={}", kind.as_str());
@@ -252,6 +276,7 @@ fn replay_across_shard_counts_and_submission_modes() {
                         kind,
                         deadline: None,
                         given: given.to_vec(),
+                        chain: false,
                     })
                     .unwrap();
                 for y in &resp.samples {
@@ -284,6 +309,7 @@ fn replay_across_shard_counts_and_submission_modes() {
                 kind,
                 deadline: None,
                 given: given.to_vec(),
+                chain: false,
             })
         })
         .collect();
@@ -336,6 +362,7 @@ fn service_conditional_rejection_is_prep_free() {
                 kind: SamplerKind::Rejection,
                 deadline: None,
                 given: vec![7, 30],
+                chain: false,
             })
             .unwrap();
         assert_eq!(resp.samples.len(), 2);
@@ -366,6 +393,7 @@ fn infeasible_conditional_rejection_is_refused() {
             kind: SamplerKind::Rejection,
             deadline: None,
             given: vec![0],
+            chain: false,
         })
         .unwrap_err();
     assert!(format!("{err:#}").contains("infeasible"), "got: {err:#}");
@@ -384,6 +412,7 @@ fn infeasible_conditional_rejection_is_refused() {
             kind: SamplerKind::Auto,
             deadline: None,
             given: vec![0],
+            chain: false,
         })
         .unwrap();
     assert_eq!(auto.algo, SamplerKind::Mcmc, "auto must steer, not refuse");
@@ -404,6 +433,7 @@ fn infeasible_conditional_rejection_is_refused() {
             kind: SamplerKind::Mcmc,
             deadline: None,
             given: vec![0],
+            chain: false,
         })
         .unwrap();
     assert_eq!(ok.algo, SamplerKind::Mcmc);
@@ -548,6 +578,7 @@ fn cache_run(
                     kind,
                     deadline: None,
                     given: given.to_vec(),
+                    chain: false,
                 });
                 idx += 1;
             }
@@ -655,10 +686,11 @@ fn cache_adoption_performs_zero_conditioning_builds() {
 // ---- steering conformance (`steering_` suite) --------------------------
 
 /// `algo=auto` over a threshold the basket exceeds silently falls through
-/// to conditional MCMC — and the steered samples still obey the
-/// enumerated conditional law (TV + chi-square against
-/// `Pr(Y | J ⊆ Y)` conditioned on the chain's completion size).  The
-/// same basket pinned to `rejection` is refused.
+/// to the *variable-size* conditional MCMC chain — and the steered
+/// samples obey the **full** enumerated conditional law
+/// `Pr(Y | J ⊆ Y)` (TV + chi-square), the same distribution the
+/// rejection sampler would have produced.  The same basket pinned to
+/// `rejection` is refused.
 #[test]
 fn steering_auto_falls_through_to_mcmc_and_matches_the_conditional_law() {
     let m = 7usize;
@@ -666,17 +698,10 @@ fn steering_auto_falls_through_to_mcmc_and_matches_the_conditional_law() {
     let mut krng = Xoshiro::seeded(103);
     let kernel = NdppKernel::random_ndpp(m, 2, &mut krng);
 
-    // exact law + the chain's completion size (from the direct sampler,
-    // which the service worker runs verbatim)
+    // exact law over ALL completion sizes — steered auto answers must be
+    // distributed identically to the feasible rejection path
     let probs = probability::enumerate_probs(&kernel);
     let want = superset_conditioned(&probs, &j);
-    let (marginal, _tree, prep) = prepared(&kernel);
-    let mut scratch = ConditionalScratch::new();
-    scratch.condition(&prep, &marginal.z, &j).unwrap();
-    scratch.ensure_mcmc(&prep, &marginal.z, &kernel);
-    let size = scratch.mcmc_config().size;
-    assert!(size >= 1, "fixture too degenerate: completion size 0");
-    let cond_want = conditioned_on_size(&want, j.len() + size);
 
     // U = det(L̂'+I)/det(L'+I) >= 1 always, so a 0.5 threshold forces
     // every auto request through the MCMC fallthrough
@@ -694,6 +719,7 @@ fn steering_auto_falls_through_to_mcmc_and_matches_the_conditional_law() {
             kind: SamplerKind::Auto,
             deadline: None,
             given: j.to_vec(),
+            chain: false,
         })
         .unwrap();
     assert_eq!(resp.algo, SamplerKind::Mcmc, "auto must steer to mcmc");
@@ -703,9 +729,16 @@ fn steering_auto_falls_through_to_mcmc_and_matches_the_conditional_law() {
     for y in &resp.samples {
         assert!(y.contains(&2), "steered sample lost given: {y:?}");
     }
-    check("steering-auto-mcmc", &empirical_of(m, &resp.samples), &cond_want);
+    check("steering-auto-mcmc", &empirical_of(m, &resp.samples), &want);
+    let info = resp.mcmc.expect("steered response carries chain telemetry");
+    assert_eq!(info.proposal, ndpp::sampler::ProposalKind::Tree);
+    assert!(info.steps > 0 && info.acceptance() > 0.0, "chain never moved");
+    assert!(!info.chain, "restart mode is the default");
     assert_eq!(svc.metrics().steering_count("steer", "auto_mcmc"), 1);
     assert_eq!(svc.metrics().steering_count("steer", "auto_rejection"), 0);
+    let (reqs, steps, _) = svc.metrics().mcmc_counts("steer", "tree");
+    assert_eq!(reqs, 1);
+    assert_eq!(steps, info.steps);
 
     // pinned rejection under the same threshold is refused, and the
     // refusal is a counted per-request error, not a worker panic
@@ -717,6 +750,7 @@ fn steering_auto_falls_through_to_mcmc_and_matches_the_conditional_law() {
             kind: SamplerKind::Rejection,
             deadline: None,
             given: j.to_vec(),
+            chain: false,
         })
         .unwrap_err();
     assert!(format!("{err:#}").contains("infeasible"), "got: {err:#}");
@@ -743,6 +777,7 @@ fn steering_feasible_auto_is_byte_identical_to_pinned_rejection() {
             kind: SamplerKind::Auto,
             deadline: None,
             given: given.clone(),
+            chain: false,
         })
         .unwrap();
     assert_eq!(auto.algo, SamplerKind::Rejection);
@@ -754,6 +789,7 @@ fn steering_feasible_auto_is_byte_identical_to_pinned_rejection() {
             kind: SamplerKind::Rejection,
             deadline: None,
             given,
+            chain: false,
         })
         .unwrap();
     assert_eq!(auto.samples, pinned.samples, "steering changed sampled bytes");

@@ -1,8 +1,10 @@
 //! Cross-sampler statistical conformance suite.
 //!
 //! Every sampler family — Dense Cholesky, low-rank Cholesky, tree
-//! rejection, and the fixed-size MCMC up-down chain — is held to the exact
-//! subset probabilities from `ndpp::probability::enumerate_probs` on tiny
+//! rejection, and the MCMC chains (fixed-size up-down and variable-size
+//! up/down/swap, under both the uniform and the tree-driven proposal, in
+//! restart and thinned chain mode) — is held to the exact subset
+//! probabilities from `ndpp::probability::enumerate_probs` on tiny
 //! ground sets, with BOTH a total-variation threshold (the historical
 //! check) and a calibrated Pearson chi-square goodness-of-fit at the 99.9%
 //! level (`ndpp::util::testing`).  The samplers are then compared pairwise,
@@ -11,8 +13,8 @@
 use ndpp::ndpp::{probability, NdppKernel, Proposal};
 use ndpp::rng::Xoshiro;
 use ndpp::sampler::{
-    sample_fixed_size, CholeskySampler, DenseCholeskySampler, McmcConfig, McmcSampler,
-    RejectionSampler, SampleTree, Sampler, TreeConfig,
+    sample_fixed_size, tree, CholeskySampler, DenseCholeskySampler, McmcConfig, McmcSampler,
+    ProposalKind, RejectionSampler, SampleTree, Sampler, TreeConfig, VariableMcmcSampler,
 };
 use ndpp::util::testing::{chi_square_gof, conditioned_on_size, empirical, empirical_from, tv};
 
@@ -92,6 +94,118 @@ fn conformance_on_nonorthogonal_kernel() {
     let mut rng = Xoshiro::seeded(93);
     let kernel = NdppKernel::random_ndpp(6, 2, &mut rng);
     conformance_on(&kernel, 6, 2, 94);
+}
+
+/// The tree-driven proposal is a drop-in replacement for the uniform
+/// oracle on the fixed-size chain: with either proposal the chain targets
+/// the same size-conditioned law (TV + 99.9% chi-square, on both ONDPP
+/// and nonorthogonal kernels), chain mode's thinned trajectory matches
+/// the restart law, and drawing through an attached prepared tree never
+/// rebuilds it (`sampler::tree::build_count` stays pinned).
+#[test]
+fn mcmc_tree_proposal_conformance_and_uniform_equivalence() {
+    let mut krng = Xoshiro::seeded(191);
+    for (name, kernel) in [
+        ("ondpp", NdppKernel::random_ondpp(6, 2, &mut krng)),
+        ("ndpp", NdppKernel::random_ndpp(6, 2, &mut krng)),
+    ] {
+        let (m, size) = (6usize, 2usize);
+        let mut rng = Xoshiro::seeded(192);
+        let want = probability::enumerate_probs(&kernel);
+        let cond = conditioned_on_size(&want, size);
+
+        let proposal = Proposal::build(&kernel);
+        let sample_tree = SampleTree::build(&proposal.spectral(), TreeConfig { leaf_size: 2 });
+        let builds = tree::build_count();
+
+        // restart mode with the tree proposal
+        let mut treed =
+            McmcSampler::new(&kernel, McmcConfig::for_size(size, m)).with_tree(&sample_tree);
+        assert_eq!(treed.proposal_kind(), ProposalKind::Tree);
+        let f_tree = check_against(&format!("mcmc-tree/{name}"), &mut treed, m, &cond, &mut rng);
+        assert!(treed.acceptance_rate() > 0.0, "{name}: chain never moved");
+
+        // chain mode: one thinned trajectory, same law (thinning widened
+        // well past the mixing time so the chi-square gate — calibrated
+        // for independent draws — sees effectively decorrelated samples)
+        let mut ccfg = McmcConfig::for_size(size, m);
+        ccfg.thinning = 16;
+        let mut chained = McmcSampler::new(&kernel, ccfg).with_tree(&sample_tree);
+        let states = chained.sample_chain(N, &mut rng);
+        let mut it = states.into_iter();
+        let f_chain = empirical_from(m, N, &mut rng, |_| it.next().unwrap());
+        let d = tv(&f_chain, &cond);
+        assert!(d < TV_LIMIT, "mcmc-tree-chain/{name}: tv={d}");
+        let cs = chi_square_gof(&f_chain, &cond, N);
+        assert!(cs.passes(), "mcmc-tree-chain/{name}: chi2 {:.1} > {:.1}", cs.stat, cs.crit_999);
+
+        // the pinned uniform oracle targets the identical law
+        let mut ucfg = McmcConfig::for_size(size, m);
+        ucfg.proposal = ProposalKind::Uniform;
+        let mut uni = McmcSampler::new(&kernel, ucfg);
+        assert_eq!(uni.proposal_kind(), ProposalKind::Uniform);
+        let f_uni = check_against(&format!("mcmc-uniform/{name}"), &mut uni, m, &cond, &mut rng);
+        let d = tv(&f_tree, &f_uni);
+        assert!(d < 2.0 * TV_LIMIT, "{name}: tree vs uniform proposal tv={d}");
+
+        assert_eq!(tree::build_count(), builds, "{name}: sampling rebuilt the tree");
+    }
+}
+
+/// The variable-size up/down/swap chain targets the FULL unconstrained
+/// law `Pr(Y)` — the distribution rejection sampling produces on kernels
+/// it can serve — with the tree proposal, in both restart and thinned
+/// chain mode, on ONDPP and nonorthogonal fixtures; the uniform oracle
+/// agrees.
+#[test]
+fn mcmc_variable_chain_matches_the_full_law() {
+    let mut krng = Xoshiro::seeded(193);
+    for (name, kernel) in [
+        ("ondpp", NdppKernel::random_ondpp(6, 2, &mut krng)),
+        ("ndpp", NdppKernel::random_ndpp(6, 2, &mut krng)),
+    ] {
+        let m = 6usize;
+        let mut rng = Xoshiro::seeded(194);
+        let want = probability::enumerate_probs(&kernel);
+
+        let proposal = Proposal::build(&kernel);
+        let sample_tree = SampleTree::build(&proposal.spectral(), TreeConfig { leaf_size: 2 });
+        let config = McmcConfig::for_kernel(&kernel);
+
+        let mut chain = VariableMcmcSampler::new(&kernel, config).with_tree(&sample_tree);
+        assert_eq!(chain.proposal_kind(), ProposalKind::Tree);
+        let f_tree =
+            check_against(&format!("mcmc-var-tree/{name}"), &mut chain, m, &want, &mut rng);
+        assert!(chain.acceptance_rate() > 0.0, "{name}: chain never moved");
+
+        // thinned chain mode, same full law (decorrelating thinning, as
+        // in the fixed-size chain-mode check above)
+        let mut ccfg = config;
+        ccfg.thinning = 16;
+        let mut chained = VariableMcmcSampler::new(&kernel, ccfg).with_tree(&sample_tree);
+        let states = chained.sample_chain(N, &mut rng);
+        let mut it = states.into_iter();
+        let f_chain = empirical_from(m, N, &mut rng, |_| it.next().unwrap());
+        let d = tv(&f_chain, &want);
+        assert!(d < TV_LIMIT, "mcmc-var-chain/{name}: tv={d}");
+        let cs = chi_square_gof(&f_chain, &want, N);
+        assert!(
+            cs.passes(),
+            "mcmc-var-chain/{name}: chi2 {:.1} > {:.1}",
+            cs.stat,
+            cs.crit_999
+        );
+
+        // uniform-proposal variable chain: identical target law
+        let mut ucfg = config;
+        ucfg.proposal = ProposalKind::Uniform;
+        let mut uni = VariableMcmcSampler::new(&kernel, ucfg);
+        assert_eq!(uni.proposal_kind(), ProposalKind::Uniform);
+        let f_uni =
+            check_against(&format!("mcmc-var-uniform/{name}"), &mut uni, m, &want, &mut rng);
+        let d = tv(&f_tree, &f_uni);
+        assert!(d < 2.0 * TV_LIMIT, "{name}: variable tree vs uniform tv={d}");
+    }
 }
 
 #[test]

@@ -28,7 +28,9 @@ fn direct_samples(entry: &ModelEntry, kind: SamplerKind, seed: u64, n: usize) ->
             (0..n).map(|_| s.sample(&mut rng)).collect()
         }
         SamplerKind::Mcmc => {
-            let mut s = McmcSampler::new(&entry.kernel, entry.mcmc);
+            // the service attaches the model's prepared tree so the chain
+            // runs the tree-driven proposal; mirror that exactly
+            let mut s = McmcSampler::new(&entry.kernel, entry.mcmc).with_tree(&entry.tree);
             (0..n).map(|_| s.sample(&mut rng)).collect()
         }
         SamplerKind::Dense => {
@@ -66,6 +68,7 @@ fn service_matches_direct_sampler_for_every_algorithm() {
                     kind,
                     deadline: None,
                     given: Vec::new(),
+                    chain: false,
                 })
                 .unwrap();
             assert_eq!(
@@ -97,6 +100,7 @@ fn coalesced_mcmc_requests_do_not_leak_chain_state() {
         kind: SamplerKind::Mcmc,
         deadline: None,
         given: Vec::new(),
+        chain: false,
     };
     let rxs: Vec<_> = (0..12).map(|_| svc.submit(req())).collect();
     let responses: Vec<_> = rxs
@@ -106,6 +110,49 @@ fn coalesced_mcmc_requests_do_not_leak_chain_state() {
     for r in &responses[1..] {
         assert_eq!(r.samples, responses[0].samples);
     }
+}
+
+#[test]
+fn steered_mcmc_chains_replay_across_shard_counts() {
+    // steering every conditional auto request to the variable-size MCMC
+    // chain (threshold 0) must stay byte-identical across shard counts,
+    // in both restart and chain mode — the conditioned descent weight is
+    // a pure function of (kernel, basket), never of cache or shard state
+    let collect = |shards: usize| -> Vec<Vec<Vec<usize>>> {
+        let svc = SamplingService::new(ServiceConfig {
+            shards,
+            max_batch: 8,
+            steer_threshold: 0.0,
+            ..Default::default()
+        });
+        svc.register("m", test_kernel(58, 32, 4));
+        let mut out = Vec::new();
+        for (seed, chain) in [(1u64, false), (2, true), (3, false), (3, true)] {
+            let resp = svc
+                .sample(SampleRequest {
+                    model: "m".into(),
+                    n: 3,
+                    seed: Some(seed),
+                    kind: SamplerKind::Auto,
+                    given: vec![2, 9],
+                    chain,
+                    ..Default::default()
+                })
+                .unwrap();
+            assert_eq!(resp.algo, SamplerKind::Mcmc, "threshold 0 must steer");
+            let info = resp.mcmc.expect("steered responses carry chain telemetry");
+            assert_eq!(info.chain, chain);
+            assert!(info.steps > 0);
+            for y in &resp.samples {
+                assert!(y.contains(&2) && y.contains(&9), "lost given: {y:?}");
+            }
+            out.push(resp.samples);
+        }
+        out
+    };
+    let one = collect(1);
+    assert_eq!(one, collect(2), "2 shards diverged from 1");
+    assert_eq!(one, collect(8), "8 shards diverged from 1");
 }
 
 #[test]
@@ -129,6 +176,7 @@ fn replay_is_stable_across_service_instances() {
                     kind,
                     deadline: None,
                     given: Vec::new(),
+                    chain: false,
                 })
                 .unwrap()
                 .samples

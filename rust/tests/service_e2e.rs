@@ -41,6 +41,7 @@ fn concurrent_multi_model_load() {
                 kind: if i % 3 == 0 { SamplerKind::Cholesky } else { SamplerKind::Rejection },
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
         })
         .collect();
@@ -72,6 +73,7 @@ fn errors_do_not_poison_the_pipeline() {
                 kind: SamplerKind::Cholesky,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
         })
         .collect();
@@ -100,6 +102,7 @@ fn determinism_under_batching_pressure() {
             kind: SamplerKind::Rejection,
             deadline: None,
             given: Vec::new(),
+            chain: false,
         })
         .unwrap();
     // flood with noise and re-issue
@@ -112,6 +115,7 @@ fn determinism_under_batching_pressure() {
                 kind: SamplerKind::Rejection,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
         })
         .collect();
@@ -123,6 +127,7 @@ fn determinism_under_batching_pressure() {
             kind: SamplerKind::Rejection,
             deadline: None,
             given: Vec::new(),
+            chain: false,
         })
         .unwrap();
     for rx in noise {

@@ -46,6 +46,7 @@ fn identical_samples_across_shard_counts_and_submission_modes() {
                         kind,
                         deadline: None,
                         given: Vec::new(),
+                        chain: false,
                     })
                     .unwrap()
                     .samples,
@@ -71,6 +72,7 @@ fn identical_samples_across_shard_counts_and_submission_modes() {
                 kind,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
         })
         .collect();
@@ -115,6 +117,7 @@ fn stress_many_clients_many_models_deterministic() {
                                 kind,
                                 deadline: None,
                                 given: Vec::new(),
+                                chain: false,
                             })
                             .unwrap();
                         assert_eq!(resp.samples.len(), 2);
@@ -144,6 +147,7 @@ fn stress_many_clients_many_models_deterministic() {
                 kind: *kind,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
             .unwrap();
         assert_eq!(
@@ -173,6 +177,7 @@ fn queue_full_rejects_without_poisoning_neighbors() {
                 kind: SamplerKind::Cholesky,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
         })
         .collect();
@@ -187,6 +192,7 @@ fn queue_full_rejects_without_poisoning_neighbors() {
                 kind: SamplerKind::Cholesky,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
         })
         .collect();
@@ -226,6 +232,7 @@ fn queue_full_rejects_without_poisoning_neighbors() {
             kind: SamplerKind::Cholesky,
             deadline: None,
             given: Vec::new(),
+            chain: false,
         })
         .unwrap();
     assert_eq!(after.samples.len(), 1);
@@ -245,6 +252,7 @@ fn expired_deadline_is_rejected_and_counted() {
         kind: SamplerKind::Cholesky,
         deadline: None,
         given: Vec::new(),
+        chain: false,
     });
     let doomed = svc.submit(SampleRequest {
         model: "m".into(),
@@ -253,6 +261,7 @@ fn expired_deadline_is_rejected_and_counted() {
         kind: SamplerKind::Cholesky,
         deadline: Some(Duration::from_micros(1)),
         given: Vec::new(),
+        chain: false,
     });
     let fine = svc.submit(SampleRequest {
         model: "m".into(),
@@ -261,6 +270,7 @@ fn expired_deadline_is_rejected_and_counted() {
         kind: SamplerKind::Cholesky,
         deadline: Some(Duration::from_secs(60)),
         given: Vec::new(),
+        chain: false,
     });
     let err = doomed.recv().unwrap().unwrap_err();
     assert!(format!("{err:#}").contains("deadline"), "got: {err:#}");
@@ -319,6 +329,7 @@ fn cache_stress_concurrent_eviction_churn_stays_correct() {
                                     kind,
                                     deadline: None,
                                     given: given.to_vec(),
+                                    chain: false,
                                 })
                                 .unwrap();
                             assert_eq!(resp.samples.len(), 2);
@@ -383,6 +394,7 @@ fn cache_stress_concurrent_eviction_churn_stays_correct() {
                 kind: *kind,
                 deadline: None,
                 given: given.clone(),
+                chain: false,
             })
             .unwrap();
         assert_eq!(

@@ -35,7 +35,14 @@ Gates (all on the quick-mode numbers CI produces):
   both a cache-off and a cache-on row, each serving a strictly positive
   ``requests_per_s``, and the warm (cache-on) config must not fall below
   the cold (cache-off) one — a cache that loses throughput on a
-  Zipf-repeated basket workload is a regression.
+  Zipf-repeated basket workload is a regression;
+* the MCMC mixing sweep (``serving.mcmc_mixing[]``) must be present with
+  both a ``uniform`` and a ``tree`` proposal row, every row must report a
+  strictly positive ``steered_requests_per_s`` (a wedged steering path
+  fails the build even when pinned traffic flows), and the tree-driven
+  proposal must not need *more* burn-in steps to reach the TV target
+  than the uniform oracle it replaces (``tree.steps_to_tv <=
+  uniform.steps_to_tv``).
 
 Exit status is non-zero with one line per violation; on success a short
 summary table is printed.  The merged trajectory is written even when
@@ -196,6 +203,52 @@ def check_serving(serving: dict) -> list[str]:
                 f"conditioning path served nothing"
             )
     errors += check_cache(serving)
+    errors += check_mcmc_mixing(serving)
+    return errors
+
+
+def check_mcmc_mixing(serving: dict) -> list[str]:
+    """Gates over the tree-vs-uniform MCMC proposal mixing sweep."""
+    errors: list[str] = []
+    mixing = serving.get("mcmc_mixing", [])
+    if not mixing:
+        return [
+            "serving: no MCMC mixing sweep (serving.mcmc_mixing[]) — the "
+            "proposal mixing-time bench column is missing"
+        ]
+    steps_by_proposal: dict[str, float] = {}
+    for row in mixing:
+        proposal = row.get("proposal", "?")
+        rps = row.get("steered_requests_per_s")
+        if not isinstance(rps, (int, float)) or rps <= 0.0:
+            errors.append(
+                f"serving: mcmc_mixing proposal={proposal} reports {rps!r} "
+                f"steered req/s — the steered chain path served nothing"
+            )
+        steps = row.get("steps_to_tv")
+        if not isinstance(steps, (int, float)) or steps <= 0:
+            errors.append(
+                f"serving: mcmc_mixing proposal={proposal} has no positive "
+                f"'steps_to_tv' field"
+            )
+        else:
+            steps_by_proposal[proposal] = float(steps)
+    for required in ("uniform", "tree"):
+        if required not in steps_by_proposal and not any(
+            row.get("proposal") == required for row in mixing
+        ):
+            errors.append(
+                f"serving: mcmc_mixing sweep has no '{required}' proposal row"
+            )
+    if "uniform" in steps_by_proposal and "tree" in steps_by_proposal:
+        uniform, tree = steps_by_proposal["uniform"], steps_by_proposal["tree"]
+        if tree > uniform:
+            errors.append(
+                f"serving: tree proposal needs {tree:.0f} burn-in steps to "
+                f"reach the TV target vs {uniform:.0f} for the uniform "
+                f"oracle — the tree-driven chain mixes slower than what it "
+                f"replaces"
+            )
     return errors
 
 
@@ -291,6 +344,18 @@ def summarize(linalg: dict, serving: dict) -> None:
                 srow.get("hits", "?"),
                 srow.get("misses", "?"),
                 srow.get("evictions", "?"),
+            )
+        )
+    for srow in serving.get("mcmc_mixing", []):
+        print(
+            "bench_gate: mcmc proposal=%-7s steps_to_tv=%-4s final_tv=%.3f  "
+            "acceptance=%.3f  steered %8.1f req/s"
+            % (
+                srow.get("proposal", "?"),
+                srow.get("steps_to_tv", "?"),
+                srow.get("final_tv", float("nan")),
+                srow.get("acceptance", float("nan")),
+                srow.get("steered_requests_per_s", 0.0),
             )
         )
 
