@@ -88,6 +88,7 @@ fn main() {
         kind: SamplerKind::Rejection,
         deadline: None,
         given: cart.clone(),
+        chain: false,
     };
     let a = svc.sample(req.clone()).unwrap();
     let b = svc.sample(req).unwrap();

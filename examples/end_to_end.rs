@@ -138,6 +138,7 @@ fn main() -> anyhow::Result<()> {
                 kind: if i % 2 == 0 { SamplerKind::Rejection } else { SamplerKind::Cholesky },
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
         })
         .collect();

@@ -1,0 +1,123 @@
+//! Model-lifecycle walkthrough: train a candidate, stage it as a canary,
+//! watch the deterministic traffic split, run the gated promote, pin the
+//! old version, and roll back — the full zero-downtime rollout loop, in
+//! process.  The operator's runbook for the same cycle over the wire is
+//! `docs/OPERATIONS.md`; `tests/lifecycle.rs` pins the invariants shown
+//! here.
+//!
+//! ```bash
+//! cargo run --release --example lifecycle_rollout
+//! ```
+
+use std::sync::Arc;
+
+use ndpp::coordinator::{SampleRequest, SamplerKind, SamplingService, ServiceConfig};
+use ndpp::data::synthetic::{generate_baskets, BasketGenConfig};
+use ndpp::learn::{NativeTrainer, TrainConfig};
+use ndpp::prelude::*;
+
+fn req(model: &str, seed: u64) -> SampleRequest {
+    SampleRequest {
+        model: model.into(),
+        n: 3,
+        seed: Some(seed),
+        kind: SamplerKind::Cholesky,
+        ..Default::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- a deployment with a 20% canary slice ------------------------------
+    let service = Arc::new(SamplingService::new(ServiceConfig {
+        shards: 4,
+        canary_fraction: 0.20,
+        ..Default::default()
+    }));
+
+    // --- v1: the live baseline ---------------------------------------------
+    let mut rng = Xoshiro::seeded(7);
+    let m = 60usize;
+    let v1 = service.register("shop", NdppKernel::random_ondpp(m, 4, &mut rng));
+    println!("registered live baseline: shop@{v1}");
+    let before = service.sample(req("shop", 42))?;
+    assert_eq!(before.version, 1);
+
+    // --- train a candidate on synthetic basket data ------------------------
+    // (the `ndpp train` CLI wraps the same trainer; here we stay in-process)
+    let mut data_rng = Xoshiro::seeded(8);
+    let cfg = BasketGenConfig {
+        name: "shop".into(),
+        m,
+        n_baskets: 300,
+        ..Default::default()
+    };
+    let mut ds = generate_baskets(&cfg, &mut data_rng);
+    ds.trim(8);
+    let mut split_rng = Xoshiro::seeded(9);
+    let split = ds.split(20, 60, &mut split_rng);
+    let mu = ds.item_frequencies();
+    let trained = NativeTrainer::new(
+        ds.m,
+        split.train.clone(),
+        mu,
+        TrainConfig { k: 4, kmax: 8, batch_size: 24, steps: 40, seed: 10, ..Default::default() },
+    )?
+    .run(|step, loss| {
+        if step % 20 == 0 {
+            println!("  train step {step:>3}: loss {loss:.4}");
+        }
+    })?;
+
+    // --- stage the candidate as a canary -----------------------------------
+    let v2 = service.register_candidate("shop", trained.kernel)?;
+    println!("staged canary: shop@{v2} (live alias still -> shop@{v1})");
+
+    // --- the deterministic canary split ------------------------------------
+    // 20% of bare-alias traffic resolves to the canary, keyed by the
+    // request seed: a replayed seed always lands on the same side.
+    let mut canary_hits = 0usize;
+    for seed in 0..50u64 {
+        let resp = service.sample(req("shop", seed))?;
+        assert_eq!(resp.version, if resp.canary { v2 } else { v1 });
+        canary_hits += resp.canary as usize;
+    }
+    println!("canary slice served {canary_hits}/50 bare-alias requests");
+    // explicit pins bypass the split for smoke checks
+    assert!(!service.sample(req("shop@2", 1))?.canary);
+
+    // --- gated promote ------------------------------------------------------
+    // Candidate and live are scored on held-out MPR/AUC; a worse candidate
+    // would be refused with a `promotion_gated` error and the alias left
+    // untouched.  The swap is atomic at admission: in-flight requests
+    // finish on the version they resolved.
+    match service.promote_gated("shop", Some(v2), &split.test, 17) {
+        Ok((v, cand, live)) => println!(
+            "promoted shop@{v}: candidate MPR {:.2} AUC {:.4} vs live MPR {:.2} AUC {:.4}",
+            cand.0, cand.1, live.0, live.1
+        ),
+        Err(e) => {
+            println!("gate refused the candidate ({e:#}); promoting ungated for the demo");
+            service.promote("shop", Some(v2))?;
+        }
+    }
+    assert_eq!(service.sample(req("shop", 42))?.version, v2);
+
+    // --- the old version is retained, not replaced -------------------------
+    let pinned = service.sample(req("shop@1", 42))?;
+    assert_eq!(pinned.samples, before.samples, "pinned v1 replays byte-identically");
+    println!("shop@1 still pinnable; replay of seed 42 is byte-identical");
+
+    // --- rollback ------------------------------------------------------------
+    let restored = service.rollback("shop")?;
+    let after = service.sample(req("shop", 42))?;
+    assert_eq!((restored, after.version), (v1, v1));
+    assert_eq!(after.samples, before.samples, "rollback restores byte-identical replay");
+    println!("rolled back to shop@{restored}; bare-alias replay matches the pre-swap bytes");
+
+    // --- the audit trail -----------------------------------------------------
+    let (live, canary, previous) = service.registry().alias_state("shop")?;
+    println!("alias now: live={live} canary={canary:?} previous={previous:?}");
+    let retired = service.conditioning_cache().stats().retired;
+    println!("cache entries retired by the swaps so far: {retired}");
+    Ok(())
+}

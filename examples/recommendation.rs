@@ -73,6 +73,7 @@ fn main() -> anyhow::Result<()> {
             kind: SamplerKind::Rejection,
             deadline: None,
             given: Vec::new(),
+            chain: false,
         })?;
         println!(
             "  set {i}: {:?} ({} proposals, {:.1} ms)",
@@ -93,6 +94,7 @@ fn main() -> anyhow::Result<()> {
                 kind: SamplerKind::Rejection,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
         })
         .collect();

@@ -58,6 +58,7 @@ fn main() -> anyhow::Result<()> {
                             kind: SamplerKind::Rejection,
                             deadline: None, // inherit the service default
                             given: Vec::new(),
+                            chain: false,
                         })
                         .expect("request failed");
                 }
@@ -77,6 +78,7 @@ fn main() -> anyhow::Result<()> {
             kind: SamplerKind::Rejection,
             deadline: None,
             given: Vec::new(),
+            chain: false,
         })?
         .samples;
     let via_batch = service
@@ -88,6 +90,7 @@ fn main() -> anyhow::Result<()> {
                 kind: SamplerKind::Rejection,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             },
             SampleRequest {
                 model: "movies".into(),
@@ -96,6 +99,7 @@ fn main() -> anyhow::Result<()> {
                 kind: SamplerKind::Cholesky,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             },
         ])
         .remove(0)?
@@ -122,6 +126,7 @@ fn main() -> anyhow::Result<()> {
                 kind: SamplerKind::Cholesky,
                 deadline: None,
                 given: Vec::new(),
+                chain: false,
             })
         })
         .collect();

@@ -17,13 +17,16 @@
 //! proposal kind (uniform oracle vs tree-driven).  Reports per-config
 //! request throughput, sample throughput, and latency percentiles, and
 //! writes `BENCH_serving.json` (override the path with `NDPP_BENCH_OUT`;
-//! `sweep[]` + `conditional[]` + `cache[]` + `mcmc_mixing[]` rows) — the
-//! serving entry of the repo's `BENCH_*` trajectory, uploaded as a CI
-//! artifact next to `BENCH_linalg.json`.  `scripts/bench_gate.py` fails
-//! the build if the `cache[]` column goes missing, the warm (cache-on)
-//! config falls below the cold one, the `mcmc_mixing[]` column goes
-//! missing, any steered config serves zero throughput, or the tree
-//! proposal needs more burn-in than the uniform oracle.
+//! `sweep[]` + `conditional[]` + `cache[]` + `mcmc_mixing[]` +
+//! `lifecycle.eval[]` rows) — the serving entry of the repo's `BENCH_*`
+//! trajectory, uploaded as a CI artifact next to `BENCH_linalg.json`.
+//! `scripts/bench_gate.py` fails the build if the `cache[]` column goes
+//! missing, the warm (cache-on) config falls below the cold one, the
+//! `mcmc_mixing[]` column goes missing, any steered config serves zero
+//! throughput, the tree proposal needs more burn-in than the uniform
+//! oracle, the `lifecycle.eval[]` promotion-gate column goes missing, a
+//! must-promote control fails its gate, or any recorded gate decision is
+//! inconsistent with its own MPR/AUC scores.
 
 use std::sync::Arc;
 
@@ -152,6 +155,7 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
 
     let cache_rows = hot_basket_sweep(quick)?;
     let mixing_rows = mcmc_mixing_sweep(quick)?;
+    let lifecycle = lifecycle_sweep(quick)?;
 
     let json = Json::obj()
         .with("bench", "serving")
@@ -163,7 +167,8 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
         .with("sweep", Json::Arr(rows))
         .with("conditional", Json::Arr(cond_rows))
         .with("cache", Json::Arr(cache_rows))
-        .with("mcmc_mixing", Json::Arr(mixing_rows));
+        .with("mcmc_mixing", Json::Arr(mixing_rows))
+        .with("lifecycle", lifecycle);
     std::fs::write(out_path, json.to_string_pretty())?;
     println!("(written to {out_path})");
     Ok(json)
@@ -375,6 +380,108 @@ fn mcmc_mixing_sweep(quick: bool) -> Result<Vec<Json>> {
     }
     println!("\n== mcmc mixing: tree vs uniform proposal (M={mix_m}, sigma=1) ==\n{}", table.render());
     Ok(rows)
+}
+
+/// Promotion-gate sweep (`serving.lifecycle.eval[]`): run the train →
+/// canary → gated-promote cycle against a live deployment and record the
+/// MPR/AUC scores the gate saw plus its decision, one row per scenario:
+///
+/// 1. **identity** — the candidate is the live kernel re-registered, so
+///    both sides score identically and the non-regression gate *must*
+///    promote (`must_promote: true` — `scripts/bench_gate.py` fails the
+///    build if it didn't).
+/// 2. **trained** — a [`crate::learn::NativeTrainer`] candidate learned
+///    from the same basket distribution the holdout was drawn from; the
+///    gate decision is recorded and checked for *consistency* (promoted
+///    iff the candidate was not worse on either metric), whichever way
+///    the scores land.
+fn lifecycle_sweep(quick: bool) -> Result<Json> {
+    use crate::data::synthetic::{generate_baskets, BasketGenConfig};
+    use crate::learn::{NativeTrainer, TrainConfig};
+
+    let (m, k, steps) = if quick { (48usize, 4usize, 30usize) } else { (96, 8, 80) };
+    let gen = BasketGenConfig {
+        m,
+        n_baskets: if quick { 240 } else { 600 },
+        mean_size: 4.0,
+        ..Default::default()
+    };
+    let mut drng = Xoshiro::seeded(31);
+    let ds = generate_baskets(&gen, &mut drng);
+    let mut ds = ds;
+    ds.trim(2 * k);
+    let mut srng = Xoshiro::seeded(32);
+    let split = ds.split(20, 60, &mut srng);
+    let mu = ds.item_frequencies();
+
+    let svc = Arc::new(SamplingService::new(ServiceConfig {
+        shards: 2,
+        ..Default::default()
+    }));
+    let mut krng = Xoshiro::seeded(33);
+    let live_kernel = crate::ndpp::NdppKernel::random_ondpp(m, k, &mut krng);
+    svc.register("lifecycle", live_kernel.clone());
+
+    let eps = 1e-9;
+    let mut table = Table::new(&["scenario", "cand MPR", "cand AUC", "live MPR", "live AUC", "promoted"]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut gate = |scenario: &str,
+                    candidate: crate::ndpp::NdppKernel,
+                    must_promote: bool|
+     -> Result<()> {
+        let version = svc.register_candidate("lifecycle", candidate)?;
+        let (live_v, _, _) = svc.registry().alias_state("lifecycle")?;
+        let outcome = svc.promote_gated("lifecycle", Some(version), &split.test, 41);
+        let (promoted, cand_scores, live_scores) = match &outcome {
+            Ok((_, c, l)) => (true, *c, *l),
+            Err(_) => {
+                // scores are reproducible: re-evaluate both sides with the
+                // gate's seed to record what it compared
+                let c = svc.evaluate(&format!("lifecycle@{version}"), &split.test, 41)?;
+                let l = svc.evaluate(&format!("lifecycle@{live_v}"), &split.test, 41)?;
+                (false, c, l)
+            }
+        };
+        table.row(vec![
+            scenario.to_string(),
+            format!("{:.2}", cand_scores.0),
+            format!("{:.4}", cand_scores.1),
+            format!("{:.2}", live_scores.0),
+            format!("{:.4}", live_scores.1),
+            format!("{promoted}"),
+        ]);
+        rows.push(
+            Json::obj()
+                .with("scenario", scenario)
+                .with("candidate_version", version)
+                .with("live_version", live_v)
+                .with("candidate_mpr", cand_scores.0)
+                .with("candidate_auc", cand_scores.1)
+                .with("live_mpr", live_scores.0)
+                .with("live_auc", live_scores.1)
+                .with("eps", eps)
+                .with("promoted", promoted)
+                .with("must_promote", must_promote),
+        );
+        Ok(())
+    };
+
+    // 1: identical candidate — equal scores, the gate must pass
+    gate("identity", live_kernel, true)?;
+    // 2: a natively trained candidate against whatever is live now
+    let tc = TrainConfig {
+        k,
+        batch_size: 24,
+        kmax: 2 * k,
+        steps,
+        seed: 34,
+        ..Default::default()
+    };
+    let trained = NativeTrainer::new(m, split.train.clone(), mu, tc)?.run(|_, _| {})?;
+    gate("trained", trained.kernel, false)?;
+
+    println!("\n== lifecycle promotion gate (M={m}, 2K={}) ==\n{}", 2 * k, table.render());
+    Ok(Json::obj().with("eval", Json::Arr(rows)))
 }
 
 /// `clients` threads each issue `iters` synchronous requests back to back

@@ -45,6 +45,9 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// entries dropped by [`ConditioningCache::retire`] when a model
+    /// version was displaced by a hot-swap (distinct from LRU pressure)
+    pub retired: u64,
     /// current gauge: bytes held across all entries (never exceeds budget)
     pub bytes: usize,
     /// current number of cached `(model, basket)` entries
@@ -59,6 +62,8 @@ pub struct ModelCacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// entries dropped because this model version was swapped out
+    pub retired: u64,
     pub entries: usize,
     pub bytes: usize,
 }
@@ -68,6 +73,17 @@ struct ModelCounters {
     hits: u64,
     misses: u64,
     evictions: u64,
+    retired: u64,
+}
+
+/// Whether cache key `key` belongs to the family named by `model`: either
+/// an exact match, or `key` is a versioned `model@N` reference whose base
+/// is `model`.  Lets `model_stats("m")` aggregate over every version of
+/// `m` while `model_stats("m@2")` stays an exact per-version view.
+fn family_matches(key: &str, model: &str) -> bool {
+    key == model
+        || crate::coordinator::registry::split_versioned(key)
+            .map_or(false, |(base, _)| base == model)
 }
 
 struct Entry {
@@ -194,6 +210,33 @@ impl ConditioningCache {
         }
     }
 
+    /// Drop every entry cached under exactly `model` (a versioned
+    /// `name@N` key in the serving path).  Called by the service when a
+    /// version is displaced by a register / promote / rollback, so a
+    /// rolled model can never serve a stale predecessor's conditioned
+    /// state.  Returns the number of entries dropped; they are counted
+    /// under `retired`, not `evictions`, so swaps and LRU pressure stay
+    /// distinguishable in the metrics.
+    pub fn retire(&self, model: &str) -> usize {
+        if !self.enabled() {
+            return 0;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let keys: Vec<(String, Vec<usize>)> = inner
+            .map
+            .keys()
+            .filter(|(m, _)| m == model)
+            .cloned()
+            .collect();
+        for key in &keys {
+            let entry = inner.map.remove(key).expect("key taken from map iteration");
+            inner.lru.remove(&entry.seq);
+            inner.bytes -= entry.bytes;
+            inner.per_model.entry(key.0.clone()).or_default().retired += 1;
+        }
+        keys.len()
+    }
+
     /// Aggregate counters + gauges across all models.
     pub fn stats(&self) -> CacheStats {
         let inner = self.inner.lock().unwrap();
@@ -207,22 +250,27 @@ impl ConditioningCache {
             s.hits += c.hits;
             s.misses += c.misses;
             s.evictions += c.evictions;
+            s.retired += c.retired;
         }
         s
     }
 
     /// Counters + gauges for one model (zeros when the model has no cache
-    /// traffic).
+    /// traffic).  A bare family name aggregates over every `name@N`
+    /// version; a versioned reference stays an exact per-version view.
     pub fn model_stats(&self, model: &str) -> ModelCacheStats {
         let inner = self.inner.lock().unwrap();
         let mut s = ModelCacheStats::default();
-        if let Some(c) = inner.per_model.get(model) {
-            s.hits = c.hits;
-            s.misses = c.misses;
-            s.evictions = c.evictions;
+        for (m, c) in inner.per_model.iter() {
+            if family_matches(m, model) {
+                s.hits += c.hits;
+                s.misses += c.misses;
+                s.evictions += c.evictions;
+                s.retired += c.retired;
+            }
         }
         for ((m, _), entry) in inner.map.iter() {
-            if m == model {
+            if family_matches(m, model) {
                 s.entries += 1;
                 s.bytes += entry.bytes;
             }
@@ -313,6 +361,37 @@ mod tests {
         tiny.insert("alpha", Arc::clone(&st[1]));
         let s = tiny.stats();
         assert_eq!((s.entries, s.bytes), (0, 0));
+    }
+
+    #[test]
+    fn retire_drops_exactly_one_version_and_family_stats_aggregate() {
+        let st = states(&[&[0], &[1], &[2]]);
+        let cache = ConditioningCache::new(1 << 20);
+        // two versions of family "m" plus an unrelated family
+        cache.insert("m@1", Arc::clone(&st[0]));
+        cache.insert("m@1", Arc::clone(&st[1]));
+        cache.insert("m@2", Arc::clone(&st[2]));
+        cache.insert("other", Arc::clone(&st[0]));
+        assert!(cache.get("m@1", &[0]).is_some());
+        assert!(cache.get("m@2", &[2]).is_some());
+        // bare-name stats aggregate both versions, not "other"
+        let fam = cache.model_stats("m");
+        assert_eq!(fam.entries, 3);
+        assert_eq!(fam.hits, 2);
+        let v1 = cache.model_stats("m@1");
+        assert_eq!((v1.entries, v1.hits), (2, 1));
+        // retiring v1 drops exactly its entries; v2 and "other" survive
+        assert_eq!(cache.retire("m@1"), 2);
+        assert!(cache.get("m@1", &[0]).is_none(), "retired state served");
+        assert!(cache.get("m@2", &[2]).is_some());
+        assert!(cache.get("other", &[0]).is_some());
+        let s = cache.stats();
+        assert_eq!(s.retired, 2);
+        assert_eq!(s.evictions, 0, "retirement must not masquerade as LRU pressure");
+        assert_eq!(s.entries, 2);
+        assert_eq!(cache.model_stats("m").retired, 2);
+        // retiring an unknown version is a counted no-op
+        assert_eq!(cache.retire("m@9"), 0);
     }
 
     #[test]

@@ -64,6 +64,23 @@ struct ModelMetrics {
     /// `"uniform"`): requests served, Metropolis steps taken, moves
     /// accepted — acceptance rate and steps-per-sample derive from these
     mcmc: HashMap<String, McmcChainMetrics>,
+    /// per-version traffic split, keyed by registry version number —
+    /// the audit trail for canary rollouts and hot-swaps (which version
+    /// actually served each request, and how much of it arrived through
+    /// the canary slice)
+    versions: HashMap<u64, VersionMetrics>,
+}
+
+/// Per-(model, version) counters — the canary-split audit trail.
+#[derive(Debug, Default)]
+struct VersionMetrics {
+    requests: u64,
+    samples: u64,
+    errors: u64,
+    /// requests that reached this version via the canary traffic slice
+    /// (as opposed to resolving it as the live alias or an explicit pin)
+    canary_requests: u64,
+    latency_sum: f64,
 }
 
 /// Per-(model, proposal-kind) MCMC chain counters.
@@ -89,6 +106,7 @@ impl ModelMetrics {
             conditional_given_sum: 0,
             steering: HashMap::new(),
             mcmc: HashMap::new(),
+            versions: HashMap::new(),
         }
     }
 
@@ -264,6 +282,58 @@ impl Metrics {
             .unwrap_or(0)
     }
 
+    /// Record one completed request against the model **version** that
+    /// served it — called next to [`Metrics::record_algo`] by the service
+    /// (which attributes aggregates to the family name, keeping every
+    /// pre-lifecycle dashboard key stable, while this per-version split
+    /// makes canary rollouts and hot-swaps auditable).  `canary` marks
+    /// requests that reached the version via the canary traffic slice.
+    pub fn record_version(
+        &self,
+        model: &str,
+        version: u64,
+        canary: bool,
+        latency_secs: f64,
+        n_samples: u64,
+    ) {
+        let mut map = self.inner.lock().unwrap();
+        let v = map
+            .entry(model.to_string())
+            .or_insert_with(ModelMetrics::new)
+            .versions
+            .entry(version)
+            .or_default();
+        v.requests += 1;
+        v.samples += n_samples;
+        v.latency_sum += latency_secs;
+        if canary {
+            v.canary_requests += 1;
+        }
+    }
+
+    /// Record one failed request against the version that raised it.
+    pub fn record_version_error(&self, model: &str, version: u64) {
+        let mut map = self.inner.lock().unwrap();
+        map.entry(model.to_string())
+            .or_insert_with(ModelMetrics::new)
+            .versions
+            .entry(version)
+            .or_default()
+            .errors += 1;
+    }
+
+    /// `(requests, samples, canary_requests, errors)` recorded for
+    /// `(model, version)` so far.
+    pub fn version_counts(&self, model: &str, version: u64) -> (u64, u64, u64, u64) {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(model)
+            .and_then(|m| m.versions.get(&version))
+            .map(|v| (v.requests, v.samples, v.canary_requests, v.errors))
+            .unwrap_or((0, 0, 0, 0))
+    }
+
     pub fn record_error(&self, model: &str) {
         let mut map = self.inner.lock().unwrap();
         map.entry(model.to_string())
@@ -322,10 +392,31 @@ impl Metrics {
                         .with("acceptance", acceptance),
                 );
             }
+            let mut versions = Json::obj();
+            let mut version_ids: Vec<u64> = m.versions.keys().copied().collect();
+            version_ids.sort_unstable();
+            for v in version_ids {
+                let c = &m.versions[&v];
+                let mean = if c.requests == 0 {
+                    0.0
+                } else {
+                    c.latency_sum / c.requests as f64
+                };
+                versions.set(
+                    &v.to_string(),
+                    Json::obj()
+                        .with("requests", c.requests)
+                        .with("samples", c.samples)
+                        .with("canary_requests", c.canary_requests)
+                        .with("errors", c.errors)
+                        .with("latency_mean_s", mean),
+                );
+            }
             obj.set(
                 name,
                 Json::obj()
                     .with("requests", m.latency.count)
+                    .with("versions", versions)
                     .with("samples", m.samples)
                     .with("proposals", m.proposals)
                     .with("errors", m.errors)
@@ -454,6 +545,28 @@ mod tests {
         assert_eq!(t.f64_or("requests", 0.0), 2.0);
         assert_eq!(t.f64_or("steps", 0.0), 400.0);
         assert!((t.f64_or("acceptance", 0.0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn version_split_accumulates_and_snapshots() {
+        let m = Metrics::new();
+        m.record_version("a", 1, false, 0.010, 4);
+        m.record_version("a", 1, false, 0.030, 4);
+        m.record_version("a", 2, true, 0.020, 2);
+        m.record_version_error("a", 2);
+        assert_eq!(m.version_counts("a", 1), (2, 8, 0, 0));
+        assert_eq!(m.version_counts("a", 2), (1, 2, 1, 1));
+        assert_eq!(m.version_counts("a", 3), (0, 0, 0, 0));
+        assert_eq!(m.version_counts("b", 1), (0, 0, 0, 0));
+        let snap = m.snapshot();
+        let versions = snap.get("a").and_then(|a| a.get("versions")).unwrap();
+        let v1 = versions.get("1").unwrap();
+        assert_eq!(v1.f64_or("requests", 0.0), 2.0);
+        assert_eq!(v1.f64_or("canary_requests", 0.0), 0.0);
+        assert!((v1.f64_or("latency_mean_s", 0.0) - 0.020).abs() < 1e-12);
+        let v2 = versions.get("2").unwrap();
+        assert_eq!(v2.f64_or("canary_requests", 0.0), 1.0);
+        assert_eq!(v2.f64_or("errors", 0.0), 1.0);
     }
 
     #[test]

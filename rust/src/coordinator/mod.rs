@@ -36,7 +36,7 @@ pub mod service;
 pub use cache::{CacheStats, ConditioningCache, ModelCacheStats};
 pub use metrics::{Metrics, RejectReason};
 pub use pool::WorkerPool;
-pub use registry::{ModelEntry, Registry, SamplerKind};
+pub use registry::{split_versioned, ModelEntry, Registry, SamplerKind, Swap, VersionRole};
 pub use service::{
     default_shards, McmcInfo, SampleRequest, SampleResponse, SamplingService, ServiceConfig,
 };

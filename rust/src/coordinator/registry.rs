@@ -5,7 +5,7 @@
 //! tree building for the rejection sampler — and freezes them in an
 //! `Arc<ModelEntry>` that every worker thread samples from without locks.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, OnceLock, RwLock};
 
 use anyhow::{anyhow, Result};
@@ -87,6 +87,13 @@ impl SamplerKind {
 /// of shard workers sample it concurrently without locks.
 pub struct ModelEntry {
     pub name: String,
+    /// registry-assigned version number (1-based; `0` until the entry is
+    /// inserted into a [`Registry`]).  The pair `name@version` is the
+    /// immutable identity every piece of per-model mutable state — queue,
+    /// worker scratch, conditioning-cache entry — is keyed by, which is
+    /// what makes hot-swap safe: state built for one version can never be
+    /// consulted by another.
+    pub version: u64,
     pub kernel: NdppKernel,
     pub marginal: MarginalKernel,
     pub proposal: Proposal,
@@ -158,6 +165,7 @@ impl ModelEntry {
         let t5 = std::time::Instant::now();
         ModelEntry {
             name: name.into(),
+            version: 0,
             kernel,
             marginal,
             proposal,
@@ -183,6 +191,14 @@ impl ModelEntry {
         2 * self.kernel.k()
     }
 
+    /// `name@version` — the immutable identity of this prepared model.
+    /// Every piece of mutable per-model serving state (shard queues,
+    /// worker scratches, conditioning-cache entries) is keyed by this
+    /// string, never by the bare alias.
+    pub fn versioned_key(&self) -> String {
+        format!("{}@{}", self.name, self.version)
+    }
+
     /// The shared dense prepared core, built on first use.  Refuses ground
     /// sets beyond [`SamplerKind::DENSE_MAX_M`] — each dense sample is
     /// `O(M^3)`, so anything bigger is a caller mistake, not a workload.
@@ -202,10 +218,66 @@ impl ModelEntry {
     }
 }
 
-/// Thread-safe name -> model map.
+/// One model family: every prepared version ever registered under a name,
+/// plus the mutable alias state (`live`, optional `canary`, optional
+/// `previous` for rollback).  Versions are retained after being displaced
+/// so `name@N` pins and `rollback` keep working; their *mutable* serving
+/// state (cache entries, scratches) is retired by the service on swap.
+struct Family {
+    versions: BTreeMap<u64, Arc<ModelEntry>>,
+    /// version the bare-name alias resolves to
+    live: u64,
+    /// candidate version receiving the canary traffic slice, if any
+    canary: Option<u64>,
+    /// version the alias pointed at before the last swap (rollback target)
+    previous: Option<u64>,
+}
+
+impl Family {
+    fn next_version(&self) -> u64 {
+        self.versions.keys().next_back().copied().unwrap_or(0) + 1
+    }
+}
+
+/// The result of an alias move (register / promote / rollback): the entry
+/// the alias now resolves to, and the displaced version whose mutable
+/// serving state (conditioning-cache entries, worker scratches) must be
+/// retired so a rolled model can never serve a stale predecessor's
+/// conditioned state.
+#[derive(Clone)]
+pub struct Swap {
+    /// the now-live (or now-canary) entry
+    pub entry: Arc<ModelEntry>,
+    /// the version the alias (or canary slot) moved away from, if any
+    pub retired: Option<Arc<ModelEntry>>,
+}
+
+/// A version's role within its family, for audit views.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VersionRole {
+    Live,
+    Canary,
+    Previous,
+    Retired,
+}
+
+impl VersionRole {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            VersionRole::Live => "live",
+            VersionRole::Canary => "canary",
+            VersionRole::Previous => "previous",
+            VersionRole::Retired => "retired",
+        }
+    }
+}
+
+/// Thread-safe versioned model map: families of `name@version` entries
+/// behind a mutable bare-name alias.  All alias moves are atomic — a
+/// reader either resolves the old `Arc` or the new one, never a mix.
 #[derive(Default)]
 pub struct Registry {
-    models: RwLock<HashMap<String, Arc<ModelEntry>>>,
+    families: RwLock<HashMap<String, Family>>,
 }
 
 impl Registry {
@@ -213,43 +285,208 @@ impl Registry {
         Registry::default()
     }
 
-    pub fn insert(&self, entry: ModelEntry) {
-        self.models
-            .write()
-            .unwrap()
-            .insert(entry.name.clone(), Arc::new(entry));
+    /// Register `entry` as a **new live version** of its family and move
+    /// the bare-name alias to it.  Registering under an existing name is
+    /// an upgrade, not a silent replacement: the displaced version stays
+    /// in the family (pinnable as `name@N`, restorable via
+    /// [`Registry::rollback`]) and is returned in [`Swap::retired`] so the
+    /// caller can retire its cached serving state.
+    pub fn insert(&self, mut entry: ModelEntry) -> Swap {
+        let mut fams = self.families.write().unwrap();
+        let fam = fams.entry(entry.name.clone()).or_insert_with(|| Family {
+            versions: BTreeMap::new(),
+            live: 0,
+            canary: None,
+            previous: None,
+        });
+        let version = fam.next_version();
+        entry.version = version;
+        let arc = Arc::new(entry);
+        fam.versions.insert(version, Arc::clone(&arc));
+        let retired = fam.versions.get(&fam.live).cloned();
+        if retired.is_some() {
+            fam.previous = Some(fam.live);
+        }
+        fam.live = version;
+        if fam.canary == Some(version) {
+            fam.canary = None;
+        }
+        Swap { entry: arc, retired }
     }
 
-    pub fn get(&self, name: &str) -> Result<Arc<ModelEntry>> {
-        self.models
-            .read()
-            .unwrap()
-            .get(name)
+    /// Register `entry` as a **canary candidate**: it joins the family and
+    /// occupies the canary slot, but the bare-name alias is untouched —
+    /// only the canary traffic slice (see `ServiceConfig.canary_fraction`)
+    /// reaches it until [`Registry::promote`] moves the alias.  Errors if
+    /// the family does not exist yet (a canary needs a live baseline).
+    pub fn insert_candidate(&self, mut entry: ModelEntry) -> Result<Swap> {
+        let mut fams = self.families.write().unwrap();
+        let fam = fams
+            .get_mut(&entry.name)
+            .ok_or_else(|| anyhow!("model '{}' not registered (canary needs a live baseline)", entry.name))?;
+        let version = fam.next_version();
+        entry.version = version;
+        let arc = Arc::new(entry);
+        fam.versions.insert(version, Arc::clone(&arc));
+        let retired = fam.canary.and_then(|v| fam.versions.get(&v).cloned());
+        fam.canary = Some(version);
+        Ok(Swap { entry: arc, retired })
+    }
+
+    /// Atomically move the alias to `version` (or to the current canary
+    /// when `version` is `None`).  The displaced live version is retained
+    /// as the rollback target and returned in [`Swap::retired`].
+    pub fn promote(&self, name: &str, version: Option<u64>) -> Result<Swap> {
+        let mut fams = self.families.write().unwrap();
+        let fam = fams
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("model '{name}' not registered"))?;
+        let target = match version {
+            Some(v) => v,
+            None => fam
+                .canary
+                .ok_or_else(|| anyhow!("model '{name}' has no canary to promote"))?,
+        };
+        let arc = fam
+            .versions
+            .get(&target)
             .cloned()
+            .ok_or_else(|| anyhow!("model '{name}' has no version {target}"))?;
+        if target == fam.live {
+            return Ok(Swap { entry: arc, retired: None });
+        }
+        let retired = fam.versions.get(&fam.live).cloned();
+        fam.previous = Some(fam.live);
+        fam.live = target;
+        if fam.canary == Some(target) {
+            fam.canary = None;
+        }
+        Ok(Swap { entry: arc, retired })
+    }
+
+    /// Atomically move the alias back to the version it pointed at before
+    /// the last swap.  The rolled-back-from version is returned in
+    /// [`Swap::retired`] so its cached state is purged — this is what
+    /// guarantees a rolled model never serves the bad candidate's
+    /// conditioned state.
+    pub fn rollback(&self, name: &str) -> Result<Swap> {
+        let mut fams = self.families.write().unwrap();
+        let fam = fams
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("model '{name}' not registered"))?;
+        let prev = fam
+            .previous
+            .ok_or_else(|| anyhow!("model '{name}' has no previous version to roll back to"))?;
+        let arc = fam
+            .versions
+            .get(&prev)
+            .cloned()
+            .ok_or_else(|| anyhow!("model '{name}' lost version {prev}"))?;
+        let retired = fam.versions.get(&fam.live).cloned();
+        fam.previous = Some(fam.live);
+        fam.live = prev;
+        Ok(Swap { entry: arc, retired })
+    }
+
+    /// Resolve a model reference: a bare name follows the alias to the
+    /// live version; `name@N` pins version `N` exactly (any retained
+    /// version, live or not).
+    pub fn get(&self, name: &str) -> Result<Arc<ModelEntry>> {
+        let fams = self.families.read().unwrap();
+        if let Some((base, ver)) = split_versioned(name) {
+            let fam = fams
+                .get(base)
+                .ok_or_else(|| anyhow!("model '{base}' not registered"))?;
+            return fam
+                .versions
+                .get(&ver)
+                .cloned()
+                .ok_or_else(|| anyhow!("model '{base}' has no version {ver}"));
+        }
+        fams.get(name)
+            .and_then(|f| f.versions.get(&f.live).cloned())
             .ok_or_else(|| anyhow!("model '{name}' not registered"))
     }
 
+    /// The current canary candidate for `name`, if one is staged.
+    pub fn canary(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        let fams = self.families.read().unwrap();
+        let fam = fams.get(name)?;
+        fam.canary.and_then(|v| fam.versions.get(&v).cloned())
+    }
+
+    /// `(live, canary, previous)` version numbers for `name`.
+    pub fn alias_state(&self, name: &str) -> Result<(u64, Option<u64>, Option<u64>)> {
+        let fams = self.families.read().unwrap();
+        let fam = fams
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not registered"))?;
+        Ok((fam.live, fam.canary, fam.previous))
+    }
+
+    /// Every retained version of `name` with its role, ascending by
+    /// version — the `versions` wire op's audit view.
+    pub fn versions(&self, name: &str) -> Result<Vec<(Arc<ModelEntry>, VersionRole)>> {
+        let fams = self.families.read().unwrap();
+        let fam = fams
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not registered"))?;
+        Ok(fam
+            .versions
+            .values()
+            .map(|e| {
+                let role = if e.version == fam.live {
+                    VersionRole::Live
+                } else if Some(e.version) == fam.canary {
+                    VersionRole::Canary
+                } else if Some(e.version) == fam.previous {
+                    VersionRole::Previous
+                } else {
+                    VersionRole::Retired
+                };
+                (Arc::clone(e), role)
+            })
+            .collect())
+    }
+
+    /// Family (alias) names, sorted.
     pub fn names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.models.read().unwrap().keys().cloned().collect();
+        let mut v: Vec<String> = self.families.read().unwrap().keys().cloned().collect();
         v.sort();
         v
     }
 
-    /// All entries, sorted by name (the `models` wire op's audit view).
+    /// Live entries, sorted by name (the `models` wire op's audit view).
     pub fn entries(&self) -> Vec<Arc<ModelEntry>> {
-        let mut v: Vec<Arc<ModelEntry>> =
-            self.models.read().unwrap().values().cloned().collect();
+        let fams = self.families.read().unwrap();
+        let mut v: Vec<Arc<ModelEntry>> = fams
+            .values()
+            .filter_map(|f| f.versions.get(&f.live).cloned())
+            .collect();
         v.sort_by(|a, b| a.name.cmp(&b.name));
         v
     }
 
+    /// Number of families (not versions).
     pub fn len(&self) -> usize {
-        self.models.read().unwrap().len()
+        self.families.read().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+}
+
+/// Split a `name@N` reference into `(name, N)`; `None` for bare names.
+/// Only the **last** `@`-segment is tried as a version so model names
+/// containing `@` keep working as long as their final segment is not a
+/// bare integer.
+pub fn split_versioned(reference: &str) -> Option<(&str, u64)> {
+    let (base, ver) = reference.rsplit_once('@')?;
+    if base.is_empty() {
+        return None;
+    }
+    ver.parse::<u64>().ok().map(|v| (base, v))
 }
 
 #[cfg(test)]
@@ -264,10 +501,79 @@ mod tests {
         let entry = ModelEntry::prepare("m1", kernel, TreeConfig::default());
         assert!(entry.prep_seconds.marginal >= 0.0);
         let reg = Registry::new();
-        reg.insert(entry);
+        let swap = reg.insert(entry);
+        assert_eq!(swap.entry.version, 1);
+        assert!(swap.retired.is_none(), "first version displaces nothing");
         assert_eq!(reg.names(), vec!["m1"]);
         assert!(reg.get("m1").is_ok());
+        assert!(reg.get("m1@1").is_ok());
+        assert!(reg.get("m1@2").is_err());
         assert!(reg.get("nope").is_err());
+    }
+
+    #[test]
+    fn reregister_creates_new_version_behind_alias() {
+        let mut rng = Xoshiro::seeded(7);
+        let k1 = NdppKernel::random_ondpp(24, 4, &mut rng);
+        let k2 = NdppKernel::random_ondpp(24, 4, &mut rng);
+        let reg = Registry::new();
+        reg.insert(ModelEntry::prepare("m", k1, TreeConfig::default()));
+        let swap = reg.insert(ModelEntry::prepare("m", k2, TreeConfig::default()));
+        assert_eq!(swap.entry.version, 2);
+        let retired = swap.retired.expect("v1 was displaced");
+        assert_eq!(retired.version, 1);
+        // alias follows the newest register; both versions stay pinnable
+        assert_eq!(reg.get("m").unwrap().version, 2);
+        assert_eq!(reg.get("m@1").unwrap().version, 1);
+        assert_eq!(reg.get("m@2").unwrap().version, 2);
+        assert_eq!(reg.len(), 1, "one family, two versions");
+        let (live, canary, previous) = reg.alias_state("m").unwrap();
+        assert_eq!((live, canary, previous), (2, None, Some(1)));
+    }
+
+    #[test]
+    fn canary_promote_rollback_cycle() {
+        let mut rng = Xoshiro::seeded(8);
+        let k1 = NdppKernel::random_ondpp(24, 4, &mut rng);
+        let k2 = NdppKernel::random_ondpp(24, 4, &mut rng);
+        let reg = Registry::new();
+        // no canary without a live baseline
+        let orphan = ModelEntry::prepare("m", NdppKernel::random_ondpp(24, 4, &mut rng), TreeConfig::default());
+        assert!(reg.insert_candidate(orphan).is_err());
+        reg.insert(ModelEntry::prepare("m", k1, TreeConfig::default()));
+        let cand = reg
+            .insert_candidate(ModelEntry::prepare("m", k2, TreeConfig::default()))
+            .unwrap();
+        assert_eq!(cand.entry.version, 2);
+        // candidate staged: alias still v1, canary v2
+        assert_eq!(reg.get("m").unwrap().version, 1);
+        assert_eq!(reg.canary("m").unwrap().version, 2);
+        // promote moves the alias and clears the canary slot
+        let promoted = reg.promote("m", None).unwrap();
+        assert_eq!(promoted.entry.version, 2);
+        assert_eq!(promoted.retired.as_ref().unwrap().version, 1);
+        assert_eq!(reg.get("m").unwrap().version, 2);
+        assert!(reg.canary("m").is_none());
+        // rollback restores v1 and retires v2
+        let rolled = reg.rollback("m").unwrap();
+        assert_eq!(rolled.entry.version, 1);
+        assert_eq!(rolled.retired.as_ref().unwrap().version, 2);
+        assert_eq!(reg.get("m").unwrap().version, 1);
+        // no second canary, no double promote surprises
+        assert!(reg.promote("m", None).is_err());
+        // explicit version promote works for any retained version
+        assert_eq!(reg.promote("m", Some(2)).unwrap().entry.version, 2);
+        assert!(reg.promote("m", Some(9)).is_err());
+    }
+
+    #[test]
+    fn versioned_reference_parsing() {
+        assert_eq!(split_versioned("m@3"), Some(("m", 3)));
+        assert_eq!(split_versioned("a@b@12"), Some(("a@b", 12)));
+        assert_eq!(split_versioned("m"), None);
+        assert_eq!(split_versioned("m@"), None);
+        assert_eq!(split_versioned("m@x"), None);
+        assert_eq!(split_versioned("@3"), None);
     }
 
     #[test]

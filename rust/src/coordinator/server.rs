@@ -19,15 +19,21 @@
 //!     draw all n samples from one thinned chain instead of per-sample
 //!     restarts.)
 //! <- {"ok":true,"seed":11,"proposals":9,"latency_s":0.004,
-//!     "algo":"rejection","expected_rejections":2.31,
+//!     "algo":"rejection","version":2,"canary":false,
+//!     "expected_rejections":2.31,
 //!     "mcmc":{"proposal":"tree","steps":812,"acceptance":0.43,
 //!             "chain":false},
 //!     "samples":[[3,17],[4],[],[8,90,411]]}
 //!    (algo echoes the *resolved* algorithm — for auto requests, where the
-//!     router sent them; expected_rejections is the feasibility estimate U
-//!     when the rejection check ran for this request; mcmc is chain
-//!     telemetry — proposal kind, Metropolis steps, acceptance rate —
-//!     when a chain produced the samples)
+//!     router sent them; version is the model version the request was
+//!     served by and canary whether the deterministic canary slice routed
+//!     it to a staged candidate; expected_rejections is the feasibility
+//!     estimate U when the rejection check ran for this request; mcmc is
+//!     chain telemetry — proposal kind, Metropolis steps, acceptance
+//!     rate — when a chain produced the samples.  model accepts a bare
+//!     alias ("books", resolved to the live version — or the canary for
+//!     the configured traffic slice) or a version pin ("books@3", exact
+//!     version, bypasses the canary split).)
 //! -> {"op":"batch","requests":[{"model":"books","n":1,"seed":1},
 //!                              {"model":"books","n":2,"seed":2}]}
 //!    (each entry takes the same fields as a `sample` op; entries fan out
@@ -35,18 +41,65 @@
 //!     identical to individual `sample` ops)
 //! <- {"ok":true,"responses":[{"ok":true,...},{"ok":false,"error":"..."}]}
 //! -> {"op":"models"}
-//! <- {"ok":true,"models":["books"],"detail":[{"name":"books","m":...,
-//!     "k2":...,"backend":"blocked","samplers":[...],"prep_s":{...}}]}
+//! <- {"ok":true,"models":["books"],"detail":[{"name":"books","version":2,
+//!     "alias":{"live":2,"canary":3,"previous":1},"m":...,"k2":...,
+//!     "backend":"blocked","samplers":[...],"prep_s":{...}}]}
+//!    (detail lists the *live* entry per family; alias shows where the
+//!     mutable name points — live version, staged canary, rollback target)
 //! -> {"op":"metrics"}
 //! <- {"ok":true,"metrics":{...},"cache":{"hits":...,"misses":...,
-//!     "evictions":...,"bytes":...,"entries":...,"budget":...},
-//!     "shards":8,"queue_depths":[0,...]}
+//!     "evictions":...,"retired":...,"bytes":...,"entries":...,
+//!     "budget":...},"shards":8,"queue_depths":[0,...]}
+//!    (each model's metrics block carries a per-version "versions"
+//!     sub-block: requests / samples / canary_requests / errors /
+//!     latency_mean_s split by the version that served them)
+//! -> {"op":"versions","model":"books"}
+//! <- {"ok":true,"model":"books","live":2,"canary":3,"previous":1,
+//!     "versions":[{"version":1,"role":"previous","m":...,"k2":...,
+//!     "backend":"...","requests":...,"samples":...,
+//!     "canary_requests":...,"errors":...,"prep_total_s":...},...]}
+//!    (the full version audit for one family: every retained version,
+//!     its alias role — live | canary | previous | retired — and the
+//!     per-version serving counters)
+//! -> {"op":"register","model":"books","kernel":"/path/k.txt",
+//!     "canary":false}
+//! <- {"ok":true,"model":"books","version":3,"canary":false}
+//!    (load an `ndpp-kernel v1` file from the server's disk and prepare
+//!     it as a new version.  canary:false — or a first-time name — makes
+//!     it live immediately (atomic alias swap, predecessor retired);
+//!     canary:true stages it as the family's canary, served only to the
+//!     configured traffic slice until promoted)
+//! -> {"op":"promote","model":"books","version":3,"data":"/h.baskets",
+//!     "eval_seed":17}
+//! <- {"ok":true,"model":"books","version":3,
+//!     "gate":{"candidate":{"mpr":...,"auc":...},
+//!             "live":{"mpr":...,"auc":...}}}
+//!    (move the alias to `version` — or to the staged canary when
+//!     version is omitted.  With "data" (a server-side `ndpp-baskets`
+//!     holdout file) the promotion is *gated*: candidate and live are
+//!     scored on MPR/AUC and a worse-scoring candidate is refused with a
+//!     "promotion_gated" error, alias untouched.  Without "data" the
+//!     promote is unconditional.  eval_seed defaults to 0.)
+//! -> {"op":"rollback","model":"books"}
+//! <- {"ok":true,"model":"books","version":1}
+//!    (move the alias back to the previous live version; the rolled-back
+//!     version stays pinnable as "books@N" and becomes the new rollback
+//!     target, so two rollbacks toggle between the last two versions)
 //! -> {"op":"ping"} / {"op":"shutdown"}
 //! ```
 //!
 //! `shutdown` stops the accept loop, lets every connection thread finish
 //! its in-flight request, and joins them before `serve` returns; the
 //! service itself then drains its shard queues when dropped.
+//!
+//! Lifecycle swaps (`register` of an existing name, `promote`,
+//! `rollback`) are atomic at request admission: requests resolve the
+//! alias once when submitted, so in-flight work finishes on the version
+//! it resolved while new requests observe the new version — no request
+//! ever sees two versions.  A displaced version's conditioning-cache
+//! entries and warm per-shard scratch state are retired on the spot
+//! (`retired` cache counter); the frozen version itself is retained and
+//! pinnable via `"model":"name@N"`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -228,7 +281,11 @@ fn sample_response_json(resp: &SampleResponse) -> Json {
         .with("latency_s", resp.latency_secs)
         // the *resolved* algorithm: auto requests report where the
         // steering router actually sent them
-        .with("algo", resp.algo.as_str());
+        .with("algo", resp.algo.as_str())
+        // which model version served this request, and whether the
+        // canary slice routed it there
+        .with("version", resp.version)
+        .with("canary", resp.canary);
     if let Some(u) = resp.expected_rejections {
         out = out.with("expected_rejections", u);
     }
@@ -311,10 +368,23 @@ fn model_detail_json(
         .with("hits", cs.hits)
         .with("misses", cs.misses)
         .with("evictions", cs.evictions)
+        .with("retired", cs.retired)
         .with("entries", cs.entries)
         .with("bytes", cs.bytes);
+    // where the mutable alias points right now: the live version this
+    // detail record describes, the staged canary (if any), and the
+    // rollback target
+    let alias = match service.registry().alias_state(&entry.name) {
+        Ok((live, canary, previous)) => Json::obj()
+            .with("live", live)
+            .with("canary", canary.map_or(Json::Null, Json::from))
+            .with("previous", previous.map_or(Json::Null, Json::from)),
+        Err(_) => Json::obj(),
+    };
     Json::obj()
         .with("name", entry.name.clone())
+        .with("version", entry.version)
+        .with("alias", alias)
         .with("m", entry.kernel.m())
         .with("k2", 2 * entry.kernel.k())
         .with("backend", entry.backend.as_str())
@@ -384,6 +454,7 @@ fn handle_line(line: &str, service: &SamplingService, stop: &AtomicBool) -> Json
                         .with("hits", cs.hits)
                         .with("misses", cs.misses)
                         .with("evictions", cs.evictions)
+                        .with("retired", cs.retired)
                         .with("bytes", cs.bytes)
                         .with("entries", cs.entries)
                         .with("budget", cs.budget),
@@ -394,6 +465,120 @@ fn handle_line(line: &str, service: &SamplingService, stop: &AtomicBool) -> Json
                     "queue_depths",
                     Json::arr(service.queue_depths().into_iter().map(|d| Json::Num(d as f64))),
                 )
+        }
+        "versions" => {
+            let model = req.str_or("model", "");
+            if model.is_empty() {
+                return err_json("versions op needs a 'model'");
+            }
+            let (live, canary, previous) = match service.registry().alias_state(&model) {
+                Ok(s) => s,
+                Err(e) => return err_json(&e.to_string()),
+            };
+            let entries = match service.registry().versions(&model) {
+                Ok(v) => v,
+                Err(e) => return err_json(&e.to_string()),
+            };
+            let metrics = service.metrics();
+            let versions = entries.iter().map(|(entry, role)| {
+                let (requests, samples, canary_requests, errors) =
+                    metrics.version_counts(&model, entry.version);
+                Json::obj()
+                    .with("version", entry.version)
+                    .with("role", role.as_str())
+                    .with("m", entry.kernel.m())
+                    .with("k2", 2 * entry.kernel.k())
+                    .with("backend", entry.backend.as_str())
+                    .with("requests", requests)
+                    .with("samples", samples)
+                    .with("canary_requests", canary_requests)
+                    .with("errors", errors)
+                    .with("prep_total_s", entry.prep_seconds.total())
+            });
+            Json::obj()
+                .with("ok", true)
+                .with("model", model)
+                .with("live", live)
+                .with("canary", canary.map_or(Json::Null, Json::from))
+                .with("previous", previous.map_or(Json::Null, Json::from))
+                .with("versions", Json::arr(versions))
+        }
+        "register" => {
+            let model = req.str_or("model", "");
+            let path = req.str_or("kernel", "");
+            if model.is_empty() || path.is_empty() {
+                return err_json("register op needs 'model' and 'kernel' (a server-side path)");
+            }
+            let kernel = match crate::ndpp::NdppKernel::load(&path) {
+                Ok(k) => k,
+                Err(e) => return err_json(&format!("loading kernel '{path}': {e}")),
+            };
+            let as_canary = req.get("canary").and_then(|b| b.as_bool()).unwrap_or(false);
+            let version = if as_canary {
+                match service.register_candidate(&model, kernel) {
+                    Ok(v) => v,
+                    Err(e) => return err_json(&e.to_string()),
+                }
+            } else {
+                service.register(&model, kernel)
+            };
+            Json::obj()
+                .with("ok", true)
+                .with("model", model)
+                .with("version", version)
+                .with("canary", as_canary)
+        }
+        "promote" => {
+            let model = req.str_or("model", "");
+            if model.is_empty() {
+                return err_json("promote op needs a 'model'");
+            }
+            let version = req.get("version").and_then(|v| v.as_u64());
+            let data = req.str_or("data", "");
+            if data.is_empty() {
+                // ungated: move the alias unconditionally
+                match service.promote(&model, version) {
+                    Ok(v) => Json::obj().with("ok", true).with("model", model).with("version", v),
+                    Err(e) => err_json(&e.to_string()),
+                }
+            } else {
+                // gated: score candidate vs live on a held-out basket
+                // file; a worse candidate is refused and the alias stays
+                let holdout = match crate::data::BasketDataset::load(&data) {
+                    Ok(d) => d.baskets,
+                    Err(e) => return err_json(&format!("loading holdout '{data}': {e}")),
+                };
+                let eval_seed = req.get("eval_seed").and_then(|s| s.as_u64()).unwrap_or(0);
+                match service.promote_gated(&model, version, &holdout, eval_seed) {
+                    Ok((v, cand, live)) => Json::obj()
+                        .with("ok", true)
+                        .with("model", model)
+                        .with("version", v)
+                        .with(
+                            "gate",
+                            Json::obj()
+                                .with(
+                                    "candidate",
+                                    Json::obj().with("mpr", cand.0).with("auc", cand.1),
+                                )
+                                .with(
+                                    "live",
+                                    Json::obj().with("mpr", live.0).with("auc", live.1),
+                                ),
+                        ),
+                    Err(e) => err_json(&e.to_string()),
+                }
+            }
+        }
+        "rollback" => {
+            let model = req.str_or("model", "");
+            if model.is_empty() {
+                return err_json("rollback op needs a 'model'");
+            }
+            match service.rollback(&model) {
+                Ok(v) => Json::obj().with("ok", true).with("model", model).with("version", v),
+                Err(e) => err_json(&e.to_string()),
+            }
         }
         "shutdown" => {
             stop.store(true, Ordering::Relaxed);
@@ -527,6 +712,69 @@ impl Client {
             .context("missing responses")?
             .to_vec())
     }
+
+    /// Register a kernel file (server-side path) as a new version of
+    /// `model`; with `canary` it is staged instead of made live.
+    /// Returns the assigned version number.
+    pub fn register_model(&mut self, model: &str, kernel_path: &str, canary: bool) -> Result<u64> {
+        let resp = self.call(
+            &Json::obj()
+                .with("op", "register")
+                .with("model", model)
+                .with("kernel", kernel_path)
+                .with("canary", canary),
+        )?;
+        Self::expect_version(&resp)
+    }
+
+    /// Promote `version` (or the staged canary when `None`) to live.
+    /// With `data` (a server-side `ndpp-baskets` holdout path) the
+    /// promotion is gated on MPR/AUC non-regression.
+    pub fn promote(
+        &mut self,
+        model: &str,
+        version: Option<u64>,
+        data: Option<&str>,
+        eval_seed: u64,
+    ) -> Result<Json> {
+        let mut req = Json::obj().with("op", "promote").with("model", model);
+        if let Some(v) = version {
+            req = req.with("version", v);
+        }
+        if let Some(d) = data {
+            req = req.with("data", d).with("eval_seed", eval_seed);
+        }
+        let resp = self.call(&req)?;
+        Self::expect_version(&resp)?;
+        Ok(resp)
+    }
+
+    /// Move the alias back to the previous live version.
+    pub fn rollback(&mut self, model: &str) -> Result<u64> {
+        let resp =
+            self.call(&Json::obj().with("op", "rollback").with("model", model))?;
+        Self::expect_version(&resp)
+    }
+
+    /// Fetch the full version audit for one model family.
+    pub fn versions(&mut self, model: &str) -> Result<Json> {
+        let resp = self.call(&Json::obj().with("op", "versions").with("model", model))?;
+        anyhow::ensure!(
+            resp.get("ok").and_then(|o| o.as_bool()) == Some(true),
+            "server error: {}",
+            resp.str_or("error", "unknown")
+        );
+        Ok(resp)
+    }
+
+    fn expect_version(resp: &Json) -> Result<u64> {
+        anyhow::ensure!(
+            resp.get("ok").and_then(|o| o.as_bool()) == Some(true),
+            "server error: {}",
+            resp.str_or("error", "unknown")
+        );
+        resp.get("version").and_then(|v| v.as_u64()).context("missing version")
+    }
 }
 
 /// Extract the `samples` array of a successful response.
@@ -587,6 +835,10 @@ mod tests {
         assert!(!compute.str_or("simd_isa", "").is_empty());
         let detail = &models.get("detail").unwrap().as_arr().unwrap()[0];
         assert_eq!(detail.str_or("name", ""), "toy");
+        // the audit names the live version and where the alias points
+        assert_eq!(detail.f64_or("version", 0.0), 1.0);
+        assert_eq!(detail.get("alias").unwrap().f64_or("live", 0.0), 1.0);
+        assert_eq!(detail.get("alias").unwrap().get("canary"), Some(&Json::Null));
         assert_eq!(detail.f64_or("m", 0.0), 24.0);
         assert_eq!(detail.f64_or("k2", 0.0), 8.0);
         assert!(!detail.str_or("backend", "").is_empty());
@@ -645,6 +897,9 @@ mod tests {
             .unwrap();
         assert_eq!(full.str_or("algo", ""), "rejection");
         assert!(full.f64_or("expected_rejections", 0.0) >= 1.0);
+        // every response is stamped with the serving version
+        assert_eq!(full.f64_or("version", 0.0), 1.0);
+        assert_eq!(full.get("canary").and_then(|b| b.as_bool()), Some(false));
         // a given-bearing request with no algo defaults to auto and echoes
         // the router's concrete pick; a feasible toy basket stays on
         // rejection
@@ -756,6 +1011,7 @@ mod tests {
         assert!(m.get("compute").unwrap().f64_or("cores", 0.0) >= 1.0);
         let mc = m.get("cache").unwrap();
         assert!(mc.f64_or("budget", 0.0) > 0.0);
+        assert_eq!(mc.f64_or("retired", -1.0), 0.0, "no swaps happened");
         assert!(mc.f64_or("misses", 0.0) >= 1.0, "conditional requests built state");
         assert!(mc.f64_or("bytes", 0.0) > 0.0);
         // per-model mcmc telemetry accumulated from the pinned requests
@@ -772,5 +1028,161 @@ mod tests {
         let stop = client.call(&Json::obj().with("op", "shutdown")).unwrap();
         assert_eq!(stop.get("ok").and_then(|b| b.as_bool()), Some(true));
         server.join().unwrap();
+    }
+
+    #[test]
+    fn lifecycle_ops_over_tcp() {
+        // fixture files on the "server's" disk: a kernel to register (the
+        // same file twice gives a gate-neutral candidate — equal scores
+        // pass the non-regression gate) and a held-out basket set
+        let dir = std::env::temp_dir().join(format!("ndpp_lifecycle_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let kernel_path = dir.join("k.txt");
+        let holdout_path = dir.join("holdout.txt");
+        let mut rng = Xoshiro::seeded(9);
+        NdppKernel::random_ondpp(24, 4, &mut rng).save(&kernel_path).unwrap();
+        crate::data::BasketDataset {
+            name: "holdout".into(),
+            m: 24,
+            baskets: (0..10).map(|i| vec![i % 24, (i * 7 + 3) % 24]).collect(),
+        }
+        .save(&holdout_path)
+        .unwrap();
+        let kpath = kernel_path.to_str().unwrap().to_string();
+        let hpath = holdout_path.to_str().unwrap().to_string();
+
+        let svc = Arc::new(SamplingService::new(ServiceConfig {
+            shards: 2,
+            ..Default::default()
+        }));
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        let svc2 = Arc::clone(&svc);
+        let server = std::thread::spawn(move || {
+            serve(svc2, "127.0.0.1:0", move |a| {
+                let _ = addr_tx.send(a);
+            })
+            .unwrap();
+        });
+        let addr = addr_rx.recv().unwrap();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+
+        // register over the wire: first version of the family goes live
+        assert_eq!(client.register_model("toy", &kpath, false).unwrap(), 1);
+        let s1 = client
+            .call(
+                &Json::obj()
+                    .with("op", "sample")
+                    .with("model", "toy")
+                    .with("n", 2)
+                    .with("seed", 7)
+                    .with("algo", "cholesky"),
+            )
+            .unwrap();
+        assert_eq!(s1.f64_or("version", 0.0), 1.0);
+        // stage a canary: alias untouched, both versions audited
+        assert_eq!(client.register_model("toy", &kpath, true).unwrap(), 2);
+        let audit = client.versions("toy").unwrap();
+        assert_eq!(audit.f64_or("live", 0.0), 1.0);
+        assert_eq!(audit.f64_or("canary", 0.0), 2.0);
+        let vs = audit.get("versions").unwrap().as_arr().unwrap();
+        assert_eq!(vs.len(), 2);
+        assert_eq!(vs[0].str_or("role", ""), "live");
+        assert_eq!(vs[1].str_or("role", ""), "canary");
+        assert!(vs[0].f64_or("requests", 0.0) >= 1.0, "v1 served the sample");
+        // bare traffic stays on v1 (canary_fraction defaults to 0)
+        let s2 = client
+            .call(
+                &Json::obj()
+                    .with("op", "sample")
+                    .with("model", "toy")
+                    .with("n", 2)
+                    .with("seed", 7)
+                    .with("algo", "cholesky"),
+            )
+            .unwrap();
+        assert_eq!(s2.f64_or("version", 0.0), 1.0);
+        // gated promote of the staged canary: identical kernel scores
+        // identically, so the non-regression gate passes and reports both
+        let promoted = client.promote("toy", None, Some(&hpath), 17).unwrap();
+        assert_eq!(promoted.f64_or("version", 0.0), 2.0);
+        let gate = promoted.get("gate").unwrap();
+        let cand = gate.get("candidate").unwrap();
+        let live = gate.get("live").unwrap();
+        assert!((cand.f64_or("mpr", -1.0) - live.f64_or("mpr", -2.0)).abs() < 1e-9);
+        assert!((cand.f64_or("auc", -1.0) - live.f64_or("auc", -2.0)).abs() < 1e-9);
+        // the swap is visible to new requests and the audit moves
+        let s3 = client
+            .call(
+                &Json::obj()
+                    .with("op", "sample")
+                    .with("model", "toy")
+                    .with("n", 2)
+                    .with("seed", 7)
+                    .with("algo", "cholesky"),
+            )
+            .unwrap();
+        assert_eq!(s3.f64_or("version", 0.0), 2.0);
+        // equal seeds on an identical kernel replay byte-identically
+        assert_eq!(parse_samples(&s3), parse_samples(&s1));
+        let audit = client.versions("toy").unwrap();
+        assert_eq!(audit.f64_or("live", 0.0), 2.0);
+        assert_eq!(audit.get("canary"), Some(&Json::Null));
+        assert_eq!(audit.f64_or("previous", 0.0), 1.0);
+        // the displaced version stays pinnable
+        let pinned = client
+            .call(
+                &Json::obj()
+                    .with("op", "sample")
+                    .with("model", "toy@1")
+                    .with("n", 2)
+                    .with("seed", 7)
+                    .with("algo", "cholesky"),
+            )
+            .unwrap();
+        assert_eq!(pinned.f64_or("version", 0.0), 1.0);
+        assert_eq!(parse_samples(&pinned), parse_samples(&s1));
+        // rollback over the wire restores v1 behind the alias
+        assert_eq!(client.rollback("toy").unwrap(), 1);
+        let s4 = client
+            .call(
+                &Json::obj()
+                    .with("op", "sample")
+                    .with("model", "toy")
+                    .with("n", 2)
+                    .with("seed", 7)
+                    .with("algo", "cholesky"),
+            )
+            .unwrap();
+        assert_eq!(s4.f64_or("version", 0.0), 1.0);
+        // ungated promote pins an explicit version back to live
+        let p2 = client.promote("toy", Some(2), None, 0).unwrap();
+        assert_eq!(p2.f64_or("version", 0.0), 2.0);
+        assert!(p2.get("gate").is_none(), "ungated promote reports no gate");
+        // error paths are structured errors, not hangs
+        for bad in [
+            Json::obj().with("op", "versions").with("model", "nope"),
+            Json::obj().with("op", "rollback").with("model", "nope"),
+            Json::obj().with("op", "promote").with("model", "nope"),
+            Json::obj()
+                .with("op", "register")
+                .with("model", "toy")
+                .with("kernel", "/no/such/file"),
+            Json::obj().with("op", "register").with("model", "toy"),
+        ] {
+            let resp = client.call(&bad).unwrap();
+            assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(false), "{bad}");
+        }
+        // lifecycle churn showed up in the cache retire counter and the
+        // per-version metrics split
+        let m = client.call(&Json::obj().with("op", "metrics")).unwrap();
+        let toy = m.get("metrics").unwrap().get("toy").unwrap();
+        let versions = toy.get("versions").unwrap();
+        assert!(versions.get("1").unwrap().f64_or("requests", 0.0) >= 3.0);
+        assert!(versions.get("2").unwrap().f64_or("requests", 0.0) >= 1.0);
+
+        let stop = client.call(&Json::obj().with("op", "shutdown")).unwrap();
+        assert_eq!(stop.get("ok").and_then(|b| b.as_bool()), Some(true));
+        server.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -38,7 +38,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::cache::ConditioningCache;
 use crate::coordinator::metrics::{Metrics, RejectReason};
-use crate::coordinator::registry::{ModelEntry, Registry, SamplerKind};
+use crate::coordinator::registry::{split_versioned, ModelEntry, Registry, SamplerKind, Swap};
 use crate::linalg::backend::{self, BackendKind};
 use crate::ndpp::conditional::validate_given;
 use crate::ndpp::NdppKernel;
@@ -111,6 +111,15 @@ pub struct ServiceConfig {
     /// [`ProposalKind::Uniform`] pins the uniform oracle — same law,
     /// slower mixing — for A/B validation and the bench gate.
     pub mcmc_proposal: ProposalKind,
+    /// fraction of bare-name traffic (in `[0, 1]`) diverted to a staged
+    /// canary version while one exists
+    /// ([`SamplingService::register_candidate`]).  The slice is a
+    /// **deterministic** hash of the request seed, so a replayed request
+    /// lands on the same side of the split it did in production, and the
+    /// per-version metrics stay an exact audit of who served what.
+    /// Explicit `name@N` pins always bypass the split.  `0.0` (the
+    /// default) disables canary routing entirely.
+    pub canary_fraction: f64,
 }
 
 impl Default for ServiceConfig {
@@ -125,6 +134,7 @@ impl Default for ServiceConfig {
             conditioning_cache_bytes: DEFAULT_CONDITIONING_CACHE_BYTES,
             steer_threshold: DEFAULT_STEER_THRESHOLD,
             mcmc_proposal: ProposalKind::default(),
+            canary_fraction: 0.0,
         }
     }
 }
@@ -190,6 +200,13 @@ pub struct SampleResponse {
     /// to `expected_rejections` so clients can see both why traffic was
     /// steered and how the chain that served it mixed
     pub mcmc: Option<McmcInfo>,
+    /// registry version of the model that actually served this request —
+    /// the hot-swap audit trail: a request resolved before a promote
+    /// reports the old version, one resolved after reports the new
+    pub version: u64,
+    /// true when the request reached its version through the canary
+    /// traffic slice rather than the live alias or an explicit pin
+    pub canary: bool,
 }
 
 /// Per-request MCMC chain telemetry, reported in [`SampleResponse`] and
@@ -220,13 +237,22 @@ impl McmcInfo {
 struct Pending {
     req: SampleRequest,
     seed: u64,
+    /// the model version this request resolved at admission — the request
+    /// is served by exactly this prepared state no matter how many swaps
+    /// land while it queues ("in-flight requests finish on the version
+    /// they resolved")
+    entry: Arc<ModelEntry>,
+    /// resolved through the canary traffic slice
+    canary: bool,
     enqueued: Timer,
     deadline: Option<Instant>,
     reply: Sender<Result<SampleResponse>>,
 }
 
-/// Per-shard queue space: one FIFO per model, guarded by one lock per
-/// shard (never a global lock).
+/// Per-shard queue space: one FIFO per model **version** (keyed by
+/// `name@version`, so a batch is always version-homogeneous and a swap
+/// never mixes prepared states within one coalesced batch), guarded by
+/// one lock per shard (never a global lock).
 struct ShardState {
     queues: HashMap<String, VecDeque<Pending>>,
     /// total requests queued in this shard (fast emptiness check)
@@ -276,6 +302,11 @@ pub struct SamplingService {
     workers: Vec<std::thread::JoinHandle<()>>,
     rr: AtomicUsize,
     seed_counter: AtomicU64,
+    /// bumped on every swap that displaces a version; shard workers watch
+    /// it and drop scratch workspaces for versions that are no longer
+    /// live or canary, so a retired version's prepared state cannot
+    /// linger warm on a worker
+    swap_epoch: Arc<AtomicU64>,
 }
 
 /// Stable shard choice for `given`-bearing requests: FNV-1a over the
@@ -306,6 +337,24 @@ fn basket_shard(model: &str, given: &[usize], shards: usize) -> usize {
     (h % shards.max(1) as u64) as usize
 }
 
+/// Deterministic canary-split decision: map the request seed through one
+/// splitmix64 round (domain-separated from every sampling stream) onto
+/// `[0, 1)` and divert the request when it lands under `fraction`.
+/// Seed-keyed rather than random so a replayed request deterministically
+/// lands on the same side of the split it did in production — replay
+/// determinism survives the rollout.
+fn canary_slice(seed: u64, fraction: f64) -> bool {
+    if fraction <= 0.0 {
+        return false;
+    }
+    if fraction >= 1.0 {
+        return true;
+    }
+    let mut state = seed ^ 0xCAAB_A27F_1E8D_95C3;
+    let h = rng::splitmix64(&mut state);
+    ((h >> 11) as f64 / (1u64 << 53) as f64) < fraction
+}
+
 impl SamplingService {
     pub fn new(mut config: ServiceConfig) -> SamplingService {
         if let Some(kind) = config.backend {
@@ -316,9 +365,11 @@ impl SamplingService {
         }
         config.max_batch = config.max_batch.max(1);
         config.queue_depth = config.queue_depth.max(1);
+        config.canary_fraction = config.canary_fraction.clamp(0.0, 1.0);
         let registry = Arc::new(Registry::new());
         let metrics = Arc::new(Metrics::with_shards(config.shards));
         let cache = Arc::new(ConditioningCache::new(config.conditioning_cache_bytes));
+        let swap_epoch = Arc::new(AtomicU64::new(0));
         let shards: Vec<Arc<Shard>> =
             (0..config.shards).map(|_| Arc::new(Shard::new())).collect();
 
@@ -330,6 +381,7 @@ impl SamplingService {
                 let registry = Arc::clone(&registry);
                 let metrics = Arc::clone(&metrics);
                 let cache = Arc::clone(&cache);
+                let swap_epoch = Arc::clone(&swap_epoch);
                 let max_batch = config.max_batch;
                 let steer_threshold = config.steer_threshold;
                 let mcmc_proposal = config.mcmc_proposal;
@@ -342,6 +394,7 @@ impl SamplingService {
                             &registry,
                             &metrics,
                             &cache,
+                            &swap_epoch,
                             steer_threshold,
                             mcmc_proposal,
                             max_batch,
@@ -360,12 +413,13 @@ impl SamplingService {
             workers,
             rr: AtomicUsize::new(0),
             seed_counter: AtomicU64::new(0x5EED),
+            swap_epoch,
         }
     }
 
-    /// Register a model: runs all sampler preprocessing (marginal kernel,
-    /// Youla/proposal, tree, MCMC warm start).
-    pub fn register(&self, name: &str, kernel: NdppKernel) {
+    /// Run all sampler preprocessing (marginal kernel, Youla/proposal,
+    /// tree, MCMC warm start) for a kernel about to join the registry.
+    fn prepare_entry(&self, name: &str, kernel: NdppKernel) -> ModelEntry {
         let mut entry = ModelEntry::prepare(name, kernel, self.config.tree);
         // the deployment-wide proposal pin reaches the *unconditional*
         // chains through the entry's baked config; conditional chains
@@ -373,7 +427,7 @@ impl SamplingService {
         entry.mcmc.proposal = self.config.mcmc_proposal;
         crate::info!(
             "service",
-            "registered '{name}' (M={}, 2K={}, E[rejections]={:.2}, tree={}B, backend={}, \
+            "prepared '{name}' (M={}, 2K={}, E[rejections]={:.2}, tree={}B, backend={}, \
              prep={:.3}s)",
             entry.kernel.m(),
             2 * entry.kernel.k(),
@@ -382,7 +436,149 @@ impl SamplingService {
             entry.backend.as_str(),
             entry.prep_seconds.total()
         );
-        self.registry.insert(entry);
+        entry
+    }
+
+    /// Register a model as the **live** version of its family and return
+    /// the assigned version number.  A first register creates version 1;
+    /// registering under an existing name creates the next version and
+    /// atomically moves the alias to it (the displaced version stays
+    /// pinnable as `name@N` and restorable via
+    /// [`SamplingService::rollback`], but its cached conditioned state is
+    /// retired immediately).
+    pub fn register(&self, name: &str, kernel: NdppKernel) -> u64 {
+        let entry = self.prepare_entry(name, kernel);
+        let swap = self.registry.insert(entry);
+        self.retire_displaced(&swap);
+        crate::info!(
+            "service",
+            "registered '{name}' as live version {}",
+            swap.entry.version
+        );
+        swap.entry.version
+    }
+
+    /// Register a model as a **canary candidate**: it joins the family
+    /// and receives only the [`ServiceConfig::canary_fraction`] traffic
+    /// slice (plus explicit `name@N` pins) until
+    /// [`SamplingService::promote`] moves the alias.  Errors when the
+    /// family has no live baseline yet.
+    pub fn register_candidate(&self, name: &str, kernel: NdppKernel) -> Result<u64> {
+        let entry = self.prepare_entry(name, kernel);
+        let swap = self.registry.insert_candidate(entry)?;
+        // a replaced earlier canary is retired exactly like a displaced
+        // live version — nothing may keep serving its cached state
+        self.retire_displaced(&swap);
+        crate::info!(
+            "service",
+            "staged '{name}' canary version {} (canary_fraction={})",
+            swap.entry.version,
+            self.config.canary_fraction
+        );
+        Ok(swap.entry.version)
+    }
+
+    /// Atomically move the alias to `version` (or the staged canary when
+    /// `None`) and retire the displaced version's cached state.  This is
+    /// the hot-swap: requests already admitted finish on the version they
+    /// resolved; every request admitted after this call resolves the new
+    /// version.
+    pub fn promote(&self, name: &str, version: Option<u64>) -> Result<u64> {
+        let swap = self.registry.promote(name, version)?;
+        self.retire_displaced(&swap);
+        crate::info!(
+            "service",
+            "promoted '{name}' to version {} (displaced: {})",
+            swap.entry.version,
+            swap.retired.as_ref().map(|e| e.version).unwrap_or(0)
+        );
+        Ok(swap.entry.version)
+    }
+
+    /// Move the alias back to the version it pointed at before the last
+    /// swap and retire the rolled-back-from version's cached state, so a
+    /// rolled model can never serve the bad candidate's conditioned
+    /// state.  Returns the restored version number.
+    pub fn rollback(&self, name: &str) -> Result<u64> {
+        let swap = self.registry.rollback(name)?;
+        self.retire_displaced(&swap);
+        crate::info!("service", "rolled back '{name}' to version {}", swap.entry.version);
+        Ok(swap.entry.version)
+    }
+
+    /// Score a model version on a held-out basket set: `(MPR, AUC)` from
+    /// the paper's §6.1 metrics, seeded for reproducibility.  Accepts any
+    /// resolvable reference (bare alias, `name@N` pin).
+    pub fn evaluate(&self, reference: &str, holdout: &[Vec<usize>], seed: u64) -> Result<(f64, f64)> {
+        let entry = self.registry.get(reference)?;
+        let mut rng = rng::request_stream(seed);
+        let mpr = crate::learn::mpr(&entry.kernel, holdout, &mut rng);
+        let auc = crate::learn::auc(
+            &entry.kernel,
+            entry.marginal.logdet_l_plus_i,
+            holdout,
+            &mut rng,
+        );
+        Ok((mpr, auc))
+    }
+
+    /// **Gated** promote: score the candidate (`version`, or the staged
+    /// canary when `None`) and the live version on `holdout`, and refuse
+    /// the swap when the candidate is worse on either MPR or AUC — a
+    /// worse-scoring candidate cannot be promoted.  Returns
+    /// `(promoted version, candidate (mpr, auc), live (mpr, auc))`.
+    pub fn promote_gated(
+        &self,
+        name: &str,
+        version: Option<u64>,
+        holdout: &[Vec<usize>],
+        eval_seed: u64,
+    ) -> Result<(u64, (f64, f64), (f64, f64))> {
+        let (live, canary, _) = self.registry.alias_state(name)?;
+        let candidate = match version {
+            Some(v) => v,
+            None => canary.ok_or_else(|| anyhow!("model '{name}' has no canary to promote"))?,
+        };
+        let cand_scores = self.evaluate(&format!("{name}@{candidate}"), holdout, eval_seed)?;
+        let live_scores = self.evaluate(&format!("{name}@{live}"), holdout, eval_seed)?;
+        let eps = 1e-9;
+        if cand_scores.0 + eps < live_scores.0 || cand_scores.1 + eps < live_scores.1 {
+            return Err(anyhow!(
+                "promotion_gated: candidate '{name}@{candidate}' scores worse than live \
+                 '{name}@{live}' on the held-out baskets (candidate MPR {:.3} AUC {:.4} \
+                 vs live MPR {:.3} AUC {:.4}) — fix the candidate or promote with \
+                 gate disabled",
+                cand_scores.0,
+                cand_scores.1,
+                live_scores.0,
+                live_scores.1
+            ));
+        }
+        let promoted = self.promote(name, Some(candidate))?;
+        Ok((promoted, cand_scores, live_scores))
+    }
+
+    /// Retire the serving state of a version displaced by a swap: purge
+    /// its conditioning-cache entries and signal the shard workers to
+    /// drop its warm scratch workspaces.  In-flight requests that
+    /// resolved the displaced version still finish on it (their `Pending`
+    /// holds the `Arc` and rebuilds conditioned state from the entry if
+    /// the cache no longer has it) — retirement guarantees only that no
+    /// *future* resolution can observe the predecessor's state.
+    fn retire_displaced(&self, swap: &Swap) {
+        if let Some(old) = &swap.retired {
+            let key = old.versioned_key();
+            let dropped = self.cache.retire(&key);
+            self.swap_epoch.fetch_add(1, Ordering::Release);
+            // wake idle workers so scratch pruning is prompt, not lazy
+            for shard in &self.shards {
+                shard.cv.notify_all();
+            }
+            crate::info!(
+                "service",
+                "retired '{key}' ({dropped} cached conditioned baskets dropped)"
+            );
+        }
     }
 
     pub fn registry(&self) -> &Registry {
@@ -417,24 +613,58 @@ impl SamplingService {
             .collect()
     }
 
-    /// Enqueue a request; returns a receiver for the response.  Admission
-    /// control happens here: a full (model, shard) queue or a draining
-    /// service rejects immediately through the same channel.
+    /// Resolve a request's model reference to the version that will serve
+    /// it: explicit `name@N` pins resolve exactly; bare names are first
+    /// offered to the canary slice (seed-deterministic, so replays land
+    /// on the same side) and otherwise follow the alias to the live
+    /// version.  Returns the entry plus whether the canary slice routed
+    /// it.
+    fn resolve(&self, reference: &str, seed: u64) -> Result<(Arc<ModelEntry>, bool)> {
+        if self.config.canary_fraction > 0.0 && split_versioned(reference).is_none() {
+            if let Some(candidate) = self.registry.canary(reference) {
+                if canary_slice(seed, self.config.canary_fraction) {
+                    return Ok((candidate, true));
+                }
+            }
+        }
+        Ok((self.registry.get(reference)?, false))
+    }
+
+    /// Enqueue a request; returns a receiver for the response.  The model
+    /// reference resolves to a concrete **version** here, at admission —
+    /// this is the hot-swap atom: the alias is read once, so a concurrent
+    /// promote lands *between* requests, never within one, and every
+    /// admitted request finishes on the version it resolved.  Admission
+    /// control also happens here: an unknown model, a full
+    /// (version, shard) queue, or a draining service rejects immediately
+    /// through the same channel.
     pub fn submit(&self, req: SampleRequest) -> Receiver<Result<SampleResponse>> {
         let (tx, rx) = channel();
         let seed = req
             .seed
             .unwrap_or_else(|| self.seed_counter.fetch_add(1, Ordering::Relaxed));
+        let (entry, canary) = match self.resolve(&req.model, seed) {
+            Ok(resolved) => resolved,
+            Err(e) => {
+                self.metrics.record_error(&req.model);
+                let _ = tx.send(Err(e));
+                return rx;
+            }
+        };
+        let key = entry.versioned_key();
         let deadline = req
             .deadline
             .or(self.config.deadline)
             .map(|d| Instant::now() + d);
         // shard affinity: hot baskets hash to a stable (warm) shard;
-        // unconditional traffic spreads round-robin as before
+        // unconditional traffic spreads round-robin as before.  The hash
+        // covers the versioned key, so a swap also moves a basket's
+        // affinity onto the new version's (cold) state rather than the
+        // retired one's shard.
         let shard_idx = if req.given.is_empty() {
             self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len()
         } else {
-            basket_shard(&req.model, &req.given, self.shards.len())
+            basket_shard(&key, &req.given, self.shards.len())
         };
         let shard = &self.shards[shard_idx];
         {
@@ -448,7 +678,7 @@ impl SamplingService {
                 )));
                 return rx;
             }
-            let q = st.queues.entry(req.model.clone()).or_default();
+            let q = st.queues.entry(key).or_default();
             if q.len() >= self.config.queue_depth {
                 self.metrics
                     .record_rejected(&req.model, RejectReason::QueueFull);
@@ -463,6 +693,8 @@ impl SamplingService {
             q.push_back(Pending {
                 req,
                 seed,
+                entry,
+                canary,
                 enqueued: Timer::start(),
                 deadline,
                 reply: tx,
@@ -505,11 +737,13 @@ impl SamplingService {
         registry: &Registry,
         metrics: &Metrics,
         cache: &ConditioningCache,
+        swap_epoch: &AtomicU64,
         steer_threshold: f64,
         mcmc_proposal: ProposalKind,
         max_batch: usize,
     ) {
         let mut scratches: HashMap<String, WorkerScratch> = HashMap::new();
+        let mut seen_epoch = swap_epoch.load(Ordering::Acquire);
         loop {
             let batch = {
                 let mut st = shard.state.lock().unwrap();
@@ -520,47 +754,77 @@ impl SamplingService {
                     if st.stopping {
                         break None;
                     }
+                    if swap_epoch.load(Ordering::Acquire) != seen_epoch {
+                        // a swap landed while idle: wake with an empty
+                        // batch so the prune below runs promptly
+                        break Some((String::new(), Vec::new()));
+                    }
                     st = shard.cv.wait(st).unwrap();
                 }
             };
-            let Some((model, batch)) = batch else { break };
-            metrics.record_shard_batch(shard_idx, batch.len());
-            match registry.get(&model) {
-                Ok(entry) => {
-                    let ws = scratches.entry(model).or_default();
-                    // panic isolation (same contract the old WorkerPool
-                    // gave): a degenerate model panicking inside a sampler
-                    // must not kill the shard and strand its queue.  The
-                    // unreplied requests of the poisoned batch drop their
-                    // senders, so blocked callers get an error, not a hang;
-                    // scratches are fully reset at next use.
-                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        Self::run_batch(
-                            &entry,
-                            ws,
-                            metrics,
-                            cache,
-                            steer_threshold,
-                            mcmc_proposal,
-                            batch,
-                        );
-                    }));
-                    if run.is_err() {
-                        crate::warnlog!(
-                            "service",
-                            "batch for model '{}' panicked on shard {shard_idx}; \
-                             worker continues",
-                            entry.name
-                        );
-                    }
-                }
-                Err(err) => {
-                    for p in batch {
-                        metrics.record_error(&model);
-                        let _ = p.reply.send(Err(anyhow!("{err}")));
-                    }
-                }
+            let Some((key, batch)) = batch else { break };
+            // a version was displaced since the last pass: drop warm
+            // scratch workspaces for everything that is no longer live or
+            // canary, so a retired version's prepared state (e.g. a
+            // CholeskyScratch baked from its marginal) cannot survive the
+            // swap on this worker
+            let epoch = swap_epoch.load(Ordering::Acquire);
+            if epoch != seen_epoch {
+                seen_epoch = epoch;
+                scratches.retain(|k, _| Self::version_is_current(registry, k));
             }
+            if batch.is_empty() {
+                continue;
+            }
+            metrics.record_shard_batch(shard_idx, batch.len());
+            // queues are keyed by versioned key, so the batch is
+            // version-homogeneous and carries its own resolved entry —
+            // in-flight requests finish on it even if it was just retired
+            let entry = Arc::clone(&batch[0].entry);
+            let ws = scratches.entry(key.clone()).or_default();
+            // panic isolation (same contract the old WorkerPool
+            // gave): a degenerate model panicking inside a sampler
+            // must not kill the shard and strand its queue.  The
+            // unreplied requests of the poisoned batch drop their
+            // senders, so blocked callers get an error, not a hang;
+            // scratches are fully reset at next use.
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                Self::run_batch(
+                    &entry,
+                    ws,
+                    metrics,
+                    cache,
+                    steer_threshold,
+                    mcmc_proposal,
+                    batch,
+                );
+            }));
+            if run.is_err() {
+                crate::warnlog!(
+                    "service",
+                    "batch for model '{}' panicked on shard {shard_idx}; \
+                     worker continues",
+                    entry.name
+                );
+            }
+            // don't let the scratch of a retired version (rebuilt above
+            // to serve its in-flight tail) linger warm past the batch
+            if !Self::version_is_current(registry, &key) {
+                scratches.remove(&key);
+            }
+        }
+    }
+
+    /// Whether the versioned key still names a version the registry would
+    /// route *new* traffic to (live or canary of its family).  Bare
+    /// (unversioned) keys — not produced by the serving path — are
+    /// conservatively kept.
+    fn version_is_current(registry: &Registry, key: &str) -> bool {
+        match split_versioned(key) {
+            Some((base, ver)) => registry
+                .alias_state(base)
+                .map_or(false, |(live, canary, _)| ver == live || Some(ver) == canary),
+            None => true,
         }
     }
 
@@ -606,6 +870,10 @@ impl SamplingService {
         mcmc_proposal: ProposalKind,
         batch: Vec<Pending>,
     ) {
+        // cache entries are keyed by the versioned identity, never the
+        // bare alias — state conditioned for one version is structurally
+        // invisible to every other
+        let vkey = entry.versioned_key();
         for p in batch {
             if let Some(deadline) = p.deadline {
                 if Instant::now() > deadline {
@@ -628,6 +896,7 @@ impl SamplingService {
             let (result, algo, expected_rejections, mcmc) = if !p.req.given.is_empty() {
                 match Self::run_conditional(
                     entry,
+                    &vkey,
                     ws,
                     cache,
                     steer_threshold,
@@ -689,6 +958,15 @@ impl SamplingService {
                             info.accepts,
                         );
                     }
+                    // version split rides along with the family-keyed
+                    // aggregates — the canary/hot-swap audit trail
+                    metrics.record_version(
+                        &entry.name,
+                        entry.version,
+                        p.canary,
+                        latency,
+                        p.req.n as u64,
+                    );
                     let _ = p.reply.send(Ok(SampleResponse {
                         samples,
                         proposals,
@@ -697,10 +975,13 @@ impl SamplingService {
                         algo,
                         expected_rejections,
                         mcmc,
+                        version: entry.version,
+                        canary: p.canary,
                     }));
                 }
                 Err(e) => {
                     metrics.record_error(&entry.name);
+                    metrics.record_version_error(&entry.name, entry.version);
                     let _ = p.reply.send(Err(e));
                 }
             }
@@ -725,6 +1006,7 @@ impl SamplingService {
     #[allow(clippy::too_many_arguments)]
     fn run_conditional(
         entry: &ModelEntry,
+        vkey: &str,
         ws: &mut WorkerScratch,
         cache: &ConditioningCache,
         steer_threshold: f64,
@@ -748,13 +1030,13 @@ impl SamplingService {
             .map_err(|e| anyhow!("model '{}': {e}", entry.name))?;
         let scratch = ws.conditional.get_or_insert_with(ConditionalScratch::new);
         let z = &entry.marginal.z;
-        match cache.get(&entry.name, &given) {
+        match cache.get(vkey, &given) {
             Some(state) => scratch.adopt(state),
             None => {
                 scratch
                     .condition(&entry.conditional, z, &given)
                     .map_err(|e| anyhow!("model '{}': {e}", entry.name))?;
-                cache.insert(&entry.name, scratch.shared_state().expect("just conditioned"));
+                cache.insert(vkey, scratch.shared_state().expect("just conditioned"));
             }
         }
         match req.kind {
@@ -769,7 +1051,7 @@ impl SamplingService {
             }
             SamplerKind::Rejection | SamplerKind::Auto => {
                 if scratch.ensure_rejection(&entry.conditional, &entry.tree) {
-                    cache.insert(&entry.name, scratch.shared_state().expect("just conditioned"));
+                    cache.insert(vkey, scratch.shared_state().expect("just conditioned"));
                 }
                 // conditioning can inflate the rejection rate far past
                 // the unconditional Theorem 2 bound; the router keeps
@@ -798,7 +1080,7 @@ impl SamplingService {
                     scratch.set_mcmc_proposal(mcmc_proposal);
                     if scratch.ensure_mcmc(&entry.conditional, z, &entry.kernel) {
                         cache.insert(
-                            &entry.name,
+                            vkey,
                             scratch.shared_state().expect("just conditioned"),
                         );
                     }
@@ -846,7 +1128,7 @@ impl SamplingService {
             SamplerKind::Mcmc => {
                 scratch.set_mcmc_proposal(mcmc_proposal);
                 if scratch.ensure_mcmc(&entry.conditional, z, &entry.kernel) {
-                    cache.insert(&entry.name, scratch.shared_state().expect("just conditioned"));
+                    cache.insert(vkey, scratch.shared_state().expect("just conditioned"));
                 }
                 // pinned mcmc keeps the fixed-size chain (conditioned on
                 // the model's target cardinality, the pre-PR contract)
@@ -1404,6 +1686,157 @@ mod tests {
         assert_eq!(cold.sample(req(41)).unwrap().samples, first.samples);
         assert_eq!(cold.sample(req(42)).unwrap().samples, second.samples);
         assert_eq!(cold.conditioning_cache().stats().misses, 0, "disabled cache counts nothing");
+    }
+
+    #[test]
+    fn reregister_swaps_alias_and_retires_predecessor_cache() {
+        let svc = SamplingService::new(ServiceConfig {
+            shards: 1,
+            max_batch: 8,
+            ..Default::default()
+        });
+        let mut rng = Xoshiro::seeded(3);
+        let v1 = svc.register("test", NdppKernel::random_ondpp(40, 4, &mut rng));
+        assert_eq!(v1, 1);
+        let req = |seed, given: Vec<usize>| SampleRequest {
+            model: "test".into(),
+            n: 2,
+            seed: Some(seed),
+            kind: SamplerKind::Cholesky,
+            deadline: None,
+            given,
+            chain: false,
+        };
+        let before = svc.sample(req(41, vec![3, 17])).unwrap();
+        assert_eq!((before.version, before.canary), (1, false));
+        assert_eq!(svc.conditioning_cache().model_stats("test@1").entries, 1);
+        // same-name register: new version behind the alias, v1 retired
+        let v2 = svc.register("test", NdppKernel::random_ondpp(40, 4, &mut rng));
+        assert_eq!(v2, 2);
+        let stats = svc.conditioning_cache().stats();
+        assert_eq!(stats.retired, 1, "v1's conditioned basket must be purged");
+        assert_eq!(svc.conditioning_cache().model_stats("test@1").entries, 0);
+        let after = svc.sample(req(41, vec![3, 17])).unwrap();
+        assert_eq!(after.version, 2, "bare name resolves the new live version");
+        // the displaced version stays pinnable and replays its old bytes
+        let pinned = svc.sample(req(41, vec![3, 17])).unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(pinned.version, 2);
+        let old = svc
+            .sample(SampleRequest { model: "test@1".into(), ..req(41, vec![3, 17]) })
+            .unwrap();
+        assert_eq!(old.version, 1);
+        assert_eq!(old.samples, before.samples, "pinned v1 must replay byte-identically");
+        // family stats aggregate both versions
+        let fam = svc.conditioning_cache().model_stats("test");
+        assert_eq!(fam.retired, 1);
+        assert!(fam.entries >= 1);
+    }
+
+    #[test]
+    fn canary_split_is_deterministic_and_promote_rollback_move_alias() {
+        let svc = SamplingService::new(ServiceConfig {
+            shards: 2,
+            max_batch: 8,
+            canary_fraction: 0.5,
+            ..Default::default()
+        });
+        let mut rng = Xoshiro::seeded(5);
+        svc.register("test", NdppKernel::random_ondpp(32, 4, &mut rng));
+        svc.register_candidate("test", NdppKernel::random_ondpp(32, 4, &mut rng))
+            .unwrap();
+        // no candidate without a baseline
+        assert!(svc.register_candidate("fresh", NdppKernel::random_ondpp(32, 4, &mut rng)).is_err());
+        let req = |seed| SampleRequest {
+            model: "test".into(),
+            n: 1,
+            seed: Some(seed),
+            kind: SamplerKind::Cholesky,
+            deadline: None,
+            given: Vec::new(),
+            chain: false,
+        };
+        let first: Vec<(u64, bool)> = (0..32)
+            .map(|s| {
+                let r = svc.sample(req(s)).unwrap();
+                (r.version, r.canary)
+            })
+            .collect();
+        let versions: std::collections::HashSet<u64> =
+            first.iter().map(|&(v, _)| v).collect();
+        assert_eq!(
+            versions,
+            [1u64, 2u64].into_iter().collect(),
+            "a 50% canary over 32 seeds must hit both versions"
+        );
+        for &(v, canary) in &first {
+            assert_eq!(canary, v == 2, "canary flag must mark exactly candidate traffic");
+        }
+        // the split is a pure function of the seed: replays land identically
+        let replay: Vec<(u64, bool)> = (0..32)
+            .map(|s| {
+                let r = svc.sample(req(s)).unwrap();
+                (r.version, r.canary)
+            })
+            .collect();
+        assert_eq!(first, replay);
+        // per-version metrics audit the split
+        let (req1, _, canary1, _) = svc.metrics().version_counts("test", 1);
+        let (req2, _, canary2, _) = svc.metrics().version_counts("test", 2);
+        assert_eq!(req1 + req2, 64);
+        assert_eq!(canary1, 0);
+        assert_eq!(canary2, req2);
+        // explicit pins bypass the split
+        let pinned = svc
+            .sample(SampleRequest { model: "test@1".into(), ..req(2) })
+            .unwrap();
+        assert!(!pinned.canary);
+        assert_eq!(pinned.version, 1);
+        // promote the canary: all bare-name traffic moves to v2...
+        svc.promote("test", None).unwrap();
+        for s in 0..8 {
+            let r = svc.sample(req(s)).unwrap();
+            assert_eq!((r.version, r.canary), (2, false));
+        }
+        // ...and rollback restores v1
+        svc.rollback("test").unwrap();
+        for s in 0..8 {
+            assert_eq!(svc.sample(req(s)).unwrap().version, 1);
+        }
+    }
+
+    #[test]
+    fn promote_gated_agrees_with_evaluate_and_protects_the_alias() {
+        let svc = SamplingService::new(ServiceConfig {
+            shards: 1,
+            max_batch: 8,
+            ..Default::default()
+        });
+        let mut rng = Xoshiro::seeded(11);
+        svc.register("test", NdppKernel::random_ondpp(40, 4, &mut rng));
+        svc.register_candidate("test", NdppKernel::random_ondpp(40, 4, &mut rng))
+            .unwrap();
+        // held-out baskets over the ground set
+        let holdout: Vec<Vec<usize>> =
+            (0..12).map(|i| vec![i % 40, (i * 7 + 3) % 40]).collect();
+        let cand = svc.evaluate("test@2", &holdout, 77).unwrap();
+        let live = svc.evaluate("test@1", &holdout, 77).unwrap();
+        let passes = cand.0 + 1e-9 >= live.0 && cand.1 + 1e-9 >= live.1;
+        match svc.promote_gated("test", None, &holdout, 77) {
+            Ok((version, got_cand, got_live)) => {
+                assert!(passes, "gate passed a worse candidate: {got_cand:?} vs {got_live:?}");
+                assert_eq!(version, 2);
+                assert_eq!(got_cand, cand);
+                assert_eq!(got_live, live);
+                assert_eq!(svc.registry().get("test").unwrap().version, 2);
+            }
+            Err(e) => {
+                assert!(!passes, "gate refused a passing candidate: {e:#}");
+                assert!(format!("{e:#}").contains("promotion_gated"));
+                // a refused promote must leave the alias untouched
+                assert_eq!(svc.registry().get("test").unwrap().version, 1);
+                assert!(svc.registry().canary("test").is_some());
+            }
+        }
     }
 
     #[test]

@@ -1,9 +1,14 @@
 //! ONDPP learning (paper §5) and the paper's evaluation metrics (§6.1).
 //!
-//! Training runs **in rust** by driving the AOT-exported `train_step` graph
-//! (Adam + orthogonality projection, python/compile/train.py) through PJRT
-//! — python never runs at training time.  Evaluation (MPR, AUC, test
-//! log-likelihood) is implemented natively on the low-rank kernel algebra.
+//! Training runs **in rust**, two ways: [`Trainer`] drives the
+//! AOT-exported `train_step` graph (Adam + orthogonality projection,
+//! python/compile/train.py) through PJRT — python never runs at training
+//! time; [`NativeTrainer`] is the artifact-free fallback with the same
+//! minibatch objective and analytic gradients in pure rust, used by
+//! `ndpp train` (and the serving lifecycle's train → canary → promote
+//! path) when no `artifacts/` directory is present.  Evaluation (MPR,
+//! AUC, test log-likelihood) is implemented natively on the low-rank
+//! kernel algebra.
 
 pub mod eval;
 pub mod map_inference;
@@ -11,4 +16,4 @@ pub mod trainer;
 
 pub use eval::{auc, conditional_scores, mpr, test_loglik, EvalReport};
 pub use map_inference::{greedy_map, MapResult};
-pub use trainer::{TrainConfig, TrainedModel, Trainer};
+pub use trainer::{NativeTrainer, TrainConfig, TrainedModel, Trainer};

@@ -315,6 +315,48 @@
 //! are assigned from a counter and returned in the response, so every
 //! response is replayable.  `cargo bench --bench serving` runs a
 //! closed-loop multi-client sweep and writes `BENCH_serving.json`.
+//!
+//! ## Model lifecycle: train → canary → hot-swap → rollback
+//!
+//! Models in the registry are **versioned**: every
+//! [`coordinator::SamplingService::register`] of an existing name
+//! prepares a *new* immutable version behind the same mutable alias
+//! (never a silent replacement), and the whole family stays addressable —
+//! bare `"books"` resolves the live version, `"books@3"` pins one
+//! forever.  The rollout verbs:
+//!
+//! * **Train** — `ndpp train` learns an ONDPP kernel from baskets
+//!   ([`learn::Trainer`] over the AOT graph, or the artifact-free
+//!   [`learn::NativeTrainer`] on a bare host) and checkpoints it with
+//!   `--out`.
+//! * **Canary** — [`coordinator::SamplingService::register_candidate`]
+//!   (wire `register` with `canary: true`, CLI
+//!   `ndpp promote --kernel … --stage-only`) stages the new version; with
+//!   [`coordinator::ServiceConfig`]'s `canary_fraction > 0` a
+//!   **deterministic, seed-hashed** slice of bare-alias traffic serves
+//!   from it (replay-stable: the same request seed always lands on the
+//!   same side), stamped `canary: true` and split out per version in the
+//!   `metrics` op.
+//! * **Promote** — [`coordinator::SamplingService::promote_gated`] (wire
+//!   `promote` with `data`, CLI `ndpp promote --data …`) scores candidate
+//!   and live on held-out MPR/AUC and refuses a regressing candidate;
+//!   the same gate runs in CI over the bench trajectory artifact
+//!   (`scripts/bench_gate.py`, `lifecycle.eval[]` rows).  Promotion is an
+//!   **atomic alias move**: requests resolve their version once at
+//!   admission, so in-flight work finishes on the version it resolved
+//!   while the displaced version's conditioning-cache entries and warm
+//!   per-shard scratches are retired immediately (`retired` cache
+//!   counter) — zero dropped requests, pinned by `tests/lifecycle.rs`
+//!   under concurrent load.
+//! * **Rollback** — [`coordinator::SamplingService::rollback`] (wire
+//!   `rollback`, CLI `ndpp rollback`) moves the alias back one version;
+//!   replays against the restored version are byte-identical to before
+//!   the swap.
+//!
+//! `examples/lifecycle_rollout.rs` walks the full cycle end to end; the
+//! operator's runbook lives in `docs/OPERATIONS.md` and the complete wire
+//! reference in `docs/PROTOCOL.md` (kept op-complete by
+//! `scripts/check_protocol_doc.py` in CI).
 
 pub mod bench;
 pub mod coordinator;

@@ -4,7 +4,9 @@
 //! ndpp sample     draw samples from a kernel (cholesky | rejection | mcmc | dense)
 //! ndpp complete   basket completion: condition on --given, rank + sample
 //! ndpp serve      run the TCP sampling service
-//! ndpp train      learn an ONDPP kernel from a basket dataset (AOT/PJRT)
+//! ndpp train      learn an ONDPP kernel (AOT/PJRT, or the native fallback)
+//! ndpp promote    stage/promote a model version on a running server
+//! ndpp rollback   move a served model back to its previous version
 //! ndpp gen-data   generate a synthetic basket dataset
 //! ndpp reproduce  regenerate a paper table/figure (table1|table2|table3|fig1|fig2)
 //! ndpp info       environment + artifact status
@@ -52,6 +54,8 @@ fn run(argv: &[String]) -> Result<()> {
         "complete" => cmd_complete(rest),
         "serve" => cmd_serve(rest),
         "train" => cmd_train(rest),
+        "promote" => cmd_promote(rest),
+        "rollback" => cmd_rollback(rest),
         "gen-data" => cmd_gen_data(rest),
         "reproduce" => cmd_reproduce(rest),
         "map" => cmd_map(rest),
@@ -72,7 +76,9 @@ fn print_usage() {
          \x20 sample     draw samples from a random/loaded kernel (--given conditions)\n\
          \x20 complete   basket completion: top next-item scores + conditional samples\n\
          \x20 serve      run the TCP sampling service\n\
-         \x20 train      learn an ONDPP kernel (AOT train_step via PJRT)\n\
+         \x20 train      learn an ONDPP kernel (AOT via PJRT, or --native fallback)\n\
+         \x20 promote    stage/promote a model version on a running server\n\
+         \x20 rollback   move a served model back to its previous version\n\
          \x20 gen-data   generate a synthetic basket dataset\n\
          \x20 reproduce  regenerate a paper experiment (table1|table2|table3|fig1|fig2|mcmc|all)\n\
          \x20 map        greedy MAP inference (most-diverse set)\n\
@@ -403,6 +409,11 @@ const SERVE_SPECS: &[Spec] = &[
         "10000",
         "expected proposals/sample above which algo=auto conditionals steer to mcmc",
     ),
+    Spec::opt_default(
+        "canary-fraction",
+        "0",
+        "fraction of bare-alias traffic served by a staged canary version (0..1)",
+    ),
     Spec::opt_default("mcmc-proposal", "tree", MCMC_PROPOSAL_HELP),
     Spec::opt_default("seed", "0", "rng seed for model generation"),
     Spec::opt("backend", BACKEND_HELP),
@@ -426,6 +437,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "steer-threshold",
             ndpp::coordinator::service::DEFAULT_STEER_THRESHOLD,
         )?,
+        canary_fraction: a.f64_or("canary-fraction", 0.0)?,
         mcmc_proposal: parse_proposal_arg(&a)?,
         ..Default::default()
     };
@@ -439,7 +451,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let service = Arc::new(SamplingService::new(config));
     println!(
         "serving with {} shard workers, queue depth {}, deadline {}, \
-         conditioning cache {}, steer threshold {:.0}, mcmc proposal {}",
+         conditioning cache {}, steer threshold {:.0}, mcmc proposal {}, \
+         canary fraction {:.2}",
         service.shards(),
         service.config().queue_depth,
         service
@@ -453,7 +466,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "off".into()
         },
         service.config().steer_threshold,
-        service.config().mcmc_proposal.as_str()
+        service.config().mcmc_proposal.as_str(),
+        service.config().canary_fraction
     );
     let seed = a.u64_or("seed", 0)?;
     let mut rng = Xoshiro::seeded(seed);
@@ -476,7 +490,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     let addr = a.str_or("addr", "127.0.0.1:7433");
     println!(
-        "listening on {addr} (line-delimited JSON; op=sample|batch|models|metrics|ping|shutdown)"
+        "listening on {addr} (line-delimited JSON; op=sample|batch|models|metrics|\
+         versions|register|promote|rollback|ping|shutdown)"
     );
     server::serve(service, &addr, |bound| println!("bound {bound}"))
 }
@@ -487,8 +502,14 @@ const TRAIN_SPECS: &[Spec] = &[
     Spec::opt_default("steps", "200", "training steps"),
     Spec::opt_default("gamma", "0.1", "rejection-rate regularizer"),
     Spec::opt_default("lr", "0.05", "Adam learning rate"),
+    Spec::opt_default("k", "32", "per-part kernel rank K (native trainer only)"),
+    Spec::opt_default("batch", "64", "minibatch size (native trainer only)"),
     Spec::opt_default("seed", "0", "rng seed"),
     Spec::flag("free", "unconstrained NDPP (no orthogonality projection)"),
+    Spec::flag(
+        "native",
+        "force the pure-rust trainer even when AOT artifacts are present",
+    ),
     Spec::flag("help", "show help"),
 ];
 
@@ -498,23 +519,17 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         print!("{}", help_text("train", "learn an ONDPP kernel", TRAIN_SPECS));
         return Ok(());
     }
-    let ops = ModelOps::discover()
-        .ok_or_else(|| anyhow::anyhow!("artifacts/ not found — run `make artifacts`"))?;
+    let ops = if a.flag("native") { None } else { ModelOps::discover() };
+    let Some(ops) = ops else {
+        if !a.flag("native") {
+            println!("artifacts/ not found — using the native pure-rust trainer");
+        }
+        return cmd_train_native(&a);
+    };
     // trainable shape config (see python/compile/aot.py CONFIGS)
     let (m, k, bsz, kmax) = (2048usize, 32usize, 64usize, 16usize);
 
-    let ds = match a.get("data") {
-        Some(path) => BasketDataset::load(path)?,
-        None => {
-            println!("no --data given; generating uk_retail-like synthetic data at M={m}");
-            let recipe = recipes::dataset_by_name("uk_retail_synth", "fast").unwrap();
-            let mut cfg = recipe.config.clone();
-            cfg.m = m;
-            cfg.n_baskets = 2500;
-            let mut rng = Xoshiro::seeded(a.u64_or("seed", 0)?);
-            synthetic::generate_baskets(&cfg, &mut rng)
-        }
-    };
+    let ds = load_or_synthesize_train_data(&a, m)?;
     anyhow::ensure!(ds.m == m, "dataset M={} but artifacts are built for M={m}", ds.m);
     let mut ds = ds;
     ds.trim(kmax);
@@ -533,25 +548,172 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         seed: a.u64_or("seed", 0)?,
         ..Default::default()
     };
-    println!("training: {tc:?}");
+    println!("training (AOT/PJRT): {tc:?}");
     let trainer = Trainer::new(&ops, m, split.train.clone(), mu, tc)?;
     let model = trainer.run(|step, loss| {
         if step % 20 == 0 {
             println!("step {step:>5}  loss {loss:.4}");
         }
     })?;
+    report_and_save(&a, &model, &split.test)
+}
 
+/// The `ndpp train` fallback: the pure-rust [`learn::NativeTrainer`], no
+/// artifacts or PJRT required — this is the path the zero-downtime
+/// lifecycle (train → register canary → gated promote) uses on a serving
+/// host with no AOT toolchain.
+fn cmd_train_native(a: &Args) -> Result<()> {
+    let kmax = 16usize;
+    let mut ds = load_or_synthesize_train_data(a, 2048)?;
+    ds.trim(kmax);
+    let n = ds.baskets.len();
+    let (n_val, n_test) = ((n / 20).clamp(1, 100), (n / 5).clamp(1, 400));
+    let mut rng = Xoshiro::seeded(a.u64_or("seed", 0)?);
+    let split = ds.split(n_val, n_test, &mut rng);
+    let mu = ds.item_frequencies();
+
+    let tc = TrainConfig {
+        k: a.usize_or("k", 32)?,
+        batch_size: a.usize_or("batch", 64)?,
+        kmax,
+        steps: a.usize_or("steps", 200)?,
+        lr: a.f64_or("lr", 0.05)?,
+        gamma: a.f64_or("gamma", 0.1)?,
+        project: !a.flag("free"),
+        seed: a.u64_or("seed", 0)?,
+        ..Default::default()
+    };
+    println!("training (native, M={}): {tc:?}", ds.m);
+    let trainer = learn::NativeTrainer::new(ds.m, split.train.clone(), mu, tc)?;
+    let model = trainer.run(|step, loss| {
+        if step % 20 == 0 {
+            println!("step {step:>5}  loss {loss:.4}");
+        }
+    })?;
+    report_and_save(a, &model, &split.test)
+}
+
+/// `--data` file, or the synthetic uk_retail-like default at catalog
+/// size `m`.
+fn load_or_synthesize_train_data(a: &Args, m: usize) -> Result<BasketDataset> {
+    match a.get("data") {
+        Some(path) => BasketDataset::load(path),
+        None => {
+            println!("no --data given; generating uk_retail-like synthetic data at M={m}");
+            let recipe = recipes::dataset_by_name("uk_retail_synth", "fast").unwrap();
+            let mut cfg = recipe.config.clone();
+            cfg.m = m;
+            cfg.n_baskets = 2500;
+            let mut rng = Xoshiro::seeded(a.u64_or("seed", 0)?);
+            Ok(synthetic::generate_baskets(&cfg, &mut rng))
+        }
+    }
+}
+
+/// Shared tail of both trainers: §6.1 metrics on the held-out split,
+/// then `--out` checkpoint.
+fn report_and_save(a: &Args, model: &ndpp::learn::TrainedModel, test: &[Vec<usize>]) -> Result<()> {
     let mk = MarginalKernel::build(&model.kernel);
     let mut eval_rng = Xoshiro::seeded(1);
-    let mpr = learn::mpr(&model.kernel, &split.test, &mut eval_rng);
-    let auc = learn::auc(&model.kernel, mk.logdet_l_plus_i, &split.test, &mut eval_rng);
-    let ll = learn::test_loglik(&model.kernel, mk.logdet_l_plus_i, &split.test);
+    let mpr = learn::mpr(&model.kernel, test, &mut eval_rng);
+    let auc = learn::auc(&model.kernel, mk.logdet_l_plus_i, test, &mut eval_rng);
+    let ll = learn::test_loglik(&model.kernel, mk.logdet_l_plus_i, test);
     let rej = Proposal::build(&model.kernel).expected_rejections();
     println!("\nfinal: MPR {mpr:.2}  AUC {auc:.3}  test-loglik {ll:.3}  E[rejections] {rej:.2}");
     if let Some(out) = a.get("out") {
         model.kernel.save(out)?;
         println!("kernel saved to {out}");
     }
+    Ok(())
+}
+
+const PROMOTE_SPECS: &[Spec] = &[
+    Spec::opt_default("addr", "127.0.0.1:7433", "server address"),
+    Spec::opt("model", "model family name (required)"),
+    Spec::opt(
+        "kernel",
+        "register this saved kernel (path on the server's host) as a canary first",
+    ),
+    Spec::opt("version", "explicit version to promote (default: the staged canary)"),
+    Spec::opt(
+        "data",
+        "held-out ndpp-baskets file (server-side path): gate the promotion on \
+         MPR/AUC non-regression vs the live version",
+    ),
+    Spec::opt_default("eval-seed", "0", "seed for the gate's evaluation streams"),
+    Spec::flag("stage-only", "register the canary and stop without promoting"),
+    Spec::flag("help", "show help"),
+];
+
+/// `ndpp promote` — the operator's rollout verb: optionally stage a
+/// kernel file as a canary, then move the serving alias to it (gated on
+/// held-out MPR/AUC when `--data` is given).  The swap is atomic:
+/// in-flight requests finish on the version they resolved.
+fn cmd_promote(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, PROMOTE_SPECS)?;
+    if a.flag("help") {
+        print!("{}", help_text("promote", "stage/promote a model version", PROMOTE_SPECS));
+        return Ok(());
+    }
+    let Some(model) = a.get("model") else {
+        bail!("--model is required");
+    };
+    let addr = a.str_or("addr", "127.0.0.1:7433");
+    let mut client = server::Client::connect(&addr)?;
+    let mut version: Option<u64> = match a.get("version") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
+    if let Some(kpath) = a.get("kernel") {
+        let v = client.register_model(model, kpath, true)?;
+        println!("staged canary {model}@{v} from {kpath}");
+        version = Some(v);
+        if a.flag("stage-only") {
+            println!("(stage-only: promote later with `ndpp promote --model {model}`)");
+            return Ok(());
+        }
+    }
+    let resp = client.promote(model, version, a.get("data").map(|s| s.as_str()), a.u64_or("eval-seed", 0)?)?;
+    let v = resp.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
+    match resp.get("gate") {
+        Some(gate) => {
+            let c = gate.get("candidate").cloned().unwrap_or(ndpp::util::json::Json::obj());
+            let l = gate.get("live").cloned().unwrap_or(ndpp::util::json::Json::obj());
+            println!(
+                "promoted {model}@{v} (gate passed: candidate MPR {:.2} AUC {:.3} vs \
+                 live MPR {:.2} AUC {:.3})",
+                c.f64_or("mpr", f64::NAN),
+                c.f64_or("auc", f64::NAN),
+                l.f64_or("mpr", f64::NAN),
+                l.f64_or("auc", f64::NAN),
+            );
+        }
+        None => println!("promoted {model}@{v} (ungated)"),
+    }
+    Ok(())
+}
+
+const ROLLBACK_SPECS: &[Spec] = &[
+    Spec::opt_default("addr", "127.0.0.1:7433", "server address"),
+    Spec::opt("model", "model family name (required)"),
+    Spec::flag("help", "show help"),
+];
+
+/// `ndpp rollback` — move the serving alias back to the previous live
+/// version (the rolled-back version stays pinnable as `name@N`).
+fn cmd_rollback(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, ROLLBACK_SPECS)?;
+    if a.flag("help") {
+        print!("{}", help_text("rollback", "roll a model back one version", ROLLBACK_SPECS));
+        return Ok(());
+    }
+    let Some(model) = a.get("model") else {
+        bail!("--model is required");
+    };
+    let addr = a.str_or("addr", "127.0.0.1:7433");
+    let mut client = server::Client::connect(&addr)?;
+    let v = client.rollback(model)?;
+    println!("rolled back: {model} now serves version {v}");
     Ok(())
 }
 

@@ -405,6 +405,44 @@ fn cache_stress_concurrent_eviction_churn_stays_correct() {
     }
 }
 
+/// Registering under an existing name creates a **new version** behind
+/// the alias — it must not silently replace the old entry: the displaced
+/// version stays pinnable as `name@1` and serves byte-identical replays,
+/// while bare-alias traffic moves to the new version.
+#[test]
+fn reregister_same_name_creates_new_version_not_silent_replacement() {
+    let svc = service(2, 1024);
+    assert_eq!(svc.register("m", test_kernel(80, 48, 4)), 1);
+    let probe = |reference: &str| {
+        svc.sample(SampleRequest {
+            model: reference.into(),
+            n: 3,
+            seed: Some(42),
+            kind: SamplerKind::Cholesky,
+            deadline: None,
+            given: Vec::new(),
+            chain: false,
+        })
+        .unwrap()
+    };
+    let before = probe("m");
+    assert_eq!(before.version, 1);
+
+    // same name, different kernel: a second register is a version bump +
+    // alias move, not a replacement
+    assert_eq!(svc.register("m", test_kernel(81, 48, 4)), 2);
+    let (live, canary, previous) = svc.registry().alias_state("m").unwrap();
+    assert_eq!((live, canary, previous), (2, None, Some(1)));
+    assert_eq!(svc.registry().versions("m").unwrap().len(), 2);
+
+    // bare alias now serves v2; the displaced version is still pinnable
+    // and byte-identical — nothing was silently overwritten
+    assert_eq!(probe("m").version, 2);
+    let pinned = probe("m@1");
+    assert_eq!(pinned.version, 1);
+    assert_eq!(pinned.samples, before.samples, "v1 replay diverged after re-register");
+}
+
 /// The TCP `batch` op returns per-entry results identical to individual
 /// `sample` ops issued over the same connection.
 #[test]

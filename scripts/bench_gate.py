@@ -42,7 +42,17 @@ Gates (all on the quick-mode numbers CI produces):
   fails the build even when pinned traffic flows), and the tree-driven
   proposal must not need *more* burn-in steps to reach the TV target
   than the uniform oracle it replaces (``tree.steps_to_tv <=
-  uniform.steps_to_tv``).
+  uniform.steps_to_tv``);
+* the model-lifecycle promotion-gate column (``serving.lifecycle.eval[]``)
+  must be present, every row must carry finite candidate/live MPR and AUC
+  scores, any row flagged ``must_promote`` (the identity-candidate
+  control, whose scores are exactly the live model's) must have been
+  promoted, and every row's recorded ``promoted`` decision must be
+  consistent with its own scores: promoted iff the candidate is not
+  worse than live on either metric (up to the row's ``eps``).
+
+Run with ``--selftest`` to exercise the gate checks against synthetic
+bench JSON without touching real bench files.
 
 Exit status is non-zero with one line per violation; on success a short
 summary table is printed.  The merged trajectory is written even when
@@ -59,6 +69,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import sys
 
@@ -204,6 +215,82 @@ def check_serving(serving: dict) -> list[str]:
             )
     errors += check_cache(serving)
     errors += check_mcmc_mixing(serving)
+    errors += check_lifecycle(serving)
+    return errors
+
+
+def check_lifecycle(serving: dict) -> list[str]:
+    """Gates over the model-lifecycle promotion-gate sweep.
+
+    Each ``serving.lifecycle.eval[]`` row records one canary promotion
+    attempt: candidate and live MPR/AUC on the held-out baskets, the
+    gate's ``promoted`` decision, and whether the scenario is a control
+    that must always promote (the identity candidate — the live kernel
+    re-registered, so its scores are exactly the live scores).  The gate
+    is deterministic given the scores, so the decision is re-derived here
+    and any inconsistency (a worse candidate promoted, or a non-worse one
+    refused) fails the build.
+    """
+    errors: list[str] = []
+    rows = serving.get("lifecycle", {}).get("eval", [])
+    if not rows:
+        return [
+            "serving: no lifecycle promotion-gate sweep "
+            "(serving.lifecycle.eval[]) — the train/canary/promote bench "
+            "column is missing"
+        ]
+    for row in rows:
+        scenario = row.get("scenario", "?")
+        scores = {}
+        bad = False
+        for field in ("candidate_mpr", "candidate_auc", "live_mpr", "live_auc"):
+            v = row.get(field)
+            if not isinstance(v, (int, float)) or not math.isfinite(v):
+                errors.append(
+                    f"serving: lifecycle scenario={scenario} has no finite "
+                    f"'{field}' — the promotion gate scored nothing"
+                )
+                bad = True
+            else:
+                scores[field] = float(v)
+        promoted = row.get("promoted")
+        if not isinstance(promoted, bool):
+            errors.append(
+                f"serving: lifecycle scenario={scenario} has no boolean "
+                f"'promoted' decision"
+            )
+            bad = True
+        if bad:
+            continue
+        if row.get("must_promote") and not promoted:
+            errors.append(
+                f"serving: lifecycle scenario={scenario} is a must-promote "
+                f"control but the gate refused it — an identical candidate "
+                f"scored worse than live, the gate or evaluator broke"
+            )
+            continue
+        eps = row.get("eps", 1e-9)
+        eps = float(eps) if isinstance(eps, (int, float)) else 1e-9
+        not_worse = (
+            scores["candidate_mpr"] + eps >= scores["live_mpr"]
+            and scores["candidate_auc"] + eps >= scores["live_auc"]
+        )
+        if promoted != not_worse:
+            errors.append(
+                "serving: lifecycle scenario=%s gate decision promoted=%s is "
+                "inconsistent with its scores (candidate MPR %.4f AUC %.4f "
+                "vs live MPR %.4f AUC %.4f, eps %g): a candidate must be "
+                "promoted iff it is not worse on either metric"
+                % (
+                    scenario,
+                    promoted,
+                    scores["candidate_mpr"],
+                    scores["candidate_auc"],
+                    scores["live_mpr"],
+                    scores["live_auc"],
+                    eps,
+                )
+            )
     return errors
 
 
@@ -358,6 +445,92 @@ def summarize(linalg: dict, serving: dict) -> None:
                 srow.get("steered_requests_per_s", 0.0),
             )
         )
+    for srow in serving.get("lifecycle", {}).get("eval", []):
+        print(
+            "bench_gate: lifecycle %-9s candidate v%s MPR %.4f AUC %.4f  "
+            "vs live v%s MPR %.4f AUC %.4f  -> %s"
+            % (
+                srow.get("scenario", "?"),
+                srow.get("candidate_version", "?"),
+                srow.get("candidate_mpr", float("nan")),
+                srow.get("candidate_auc", float("nan")),
+                srow.get("live_version", "?"),
+                srow.get("live_mpr", float("nan")),
+                srow.get("live_auc", float("nan")),
+                "promoted" if srow.get("promoted") else "gated",
+            )
+        )
+
+
+def selftest() -> int:
+    """Unit tests for the gate checks against synthetic bench JSON."""
+    import unittest
+
+    def lifecycle_row(**overrides: object) -> dict:
+        row = {
+            "scenario": "trained",
+            "candidate_version": 2,
+            "live_version": 1,
+            "candidate_mpr": 81.0,
+            "candidate_auc": 0.71,
+            "live_mpr": 80.0,
+            "live_auc": 0.70,
+            "eps": 1e-9,
+            "promoted": True,
+            "must_promote": False,
+        }
+        row.update(overrides)
+        return row
+
+    class Lifecycle(unittest.TestCase):
+        def test_missing_column_fails(self):
+            errors = check_lifecycle({})
+            self.assertTrue(any("lifecycle" in e for e in errors))
+
+        def test_consistent_promotion_passes(self):
+            serving = {"lifecycle": {"eval": [lifecycle_row()]}}
+            self.assertEqual(check_lifecycle(serving), [])
+
+        def test_consistent_refusal_passes(self):
+            row = lifecycle_row(candidate_mpr=70.0, promoted=False)
+            self.assertEqual(check_lifecycle({"lifecycle": {"eval": [row]}}), [])
+
+        def test_equal_scores_must_promote(self):
+            # the identity control: candidate == live on both metrics
+            row = lifecycle_row(
+                candidate_mpr=80.0, candidate_auc=0.70, must_promote=True
+            )
+            self.assertEqual(check_lifecycle({"lifecycle": {"eval": [row]}}), [])
+
+        def test_refused_must_promote_control_fails(self):
+            row = lifecycle_row(promoted=False, must_promote=True)
+            errors = check_lifecycle({"lifecycle": {"eval": [row]}})
+            self.assertTrue(any("must-promote control" in e for e in errors))
+
+        def test_worse_candidate_promoted_fails(self):
+            row = lifecycle_row(candidate_auc=0.50)
+            errors = check_lifecycle({"lifecycle": {"eval": [row]}})
+            self.assertTrue(any("inconsistent" in e for e in errors))
+
+        def test_better_candidate_refused_fails(self):
+            row = lifecycle_row(promoted=False)
+            errors = check_lifecycle({"lifecycle": {"eval": [row]}})
+            self.assertTrue(any("inconsistent" in e for e in errors))
+
+        def test_non_finite_score_fails(self):
+            row = lifecycle_row(candidate_mpr=float("nan"))
+            errors = check_lifecycle({"lifecycle": {"eval": [row]}})
+            self.assertTrue(any("finite" in e for e in errors))
+
+        def test_missing_promoted_flag_fails(self):
+            row = lifecycle_row()
+            del row["promoted"]
+            errors = check_lifecycle({"lifecycle": {"eval": [row]}})
+            self.assertTrue(any("boolean 'promoted'" in e for e in errors))
+
+    suite = unittest.defaultTestLoader.loadTestsFromTestCase(Lifecycle)
+    result = unittest.TextTestRunner(verbosity=1).run(suite)
+    return 0 if result.wasSuccessful() else 1
 
 
 def main() -> int:
@@ -369,7 +542,10 @@ def main() -> int:
     ap.add_argument("--min-simd-speedup", type=float, default=1.4)
     ap.add_argument("--min-packed-speedup", type=float, default=1.15)
     ap.add_argument("--min-pool-speedup", type=float, default=1.0)
+    ap.add_argument("--selftest", action="store_true")
     args = ap.parse_args()
+    if args.selftest:
+        return selftest()
 
     linalg = load(args.linalg)
     serving = load(args.serving)

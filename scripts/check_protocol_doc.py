@@ -1,0 +1,184 @@
+#!/usr/bin/env python3
+"""CI gate: docs/PROTOCOL.md must document every wire op (stdlib only).
+
+Extracts the op names from the ``handle_line`` dispatch in
+``rust/src/coordinator/server.rs`` (the string-literal match arms of the
+top-level ``match req.str_or("op", ...)``) and requires a matching
+markdown heading (e.g. ``### `sample` ``) in ``docs/PROTOCOL.md`` for
+each.  Fails in both directions:
+
+* an op the server handles but the doc does not describe (the doc fell
+  behind the protocol), and
+* an op the doc describes but the server no longer handles (the doc
+  advertises a dead op).
+
+Run with ``--selftest`` to exercise the extractors against synthetic
+inputs without touching the repo files.
+
+Usage (what .github/workflows/ci.yml runs)::
+
+    python3 scripts/check_protocol_doc.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SERVER_RS = os.path.join(REPO, "rust", "src", "coordinator", "server.rs")
+PROTOCOL_MD = os.path.join(REPO, "docs", "PROTOCOL.md")
+
+# a string-literal match arm: `"sample" => ...`
+ARM_RE = re.compile(r'^\s*"([a-z_]+)"\s*=>')
+# a markdown heading naming an op: `### `sample`` (backticks optional)
+HEADING_RE = re.compile(r"^#{1,6}\s+`?([a-z_]+)`?\s*$")
+
+
+def server_ops(source: str) -> list[str]:
+    """Op names handled by ``handle_line``, in dispatch order."""
+    lines = source.splitlines()
+    ops: list[str] = []
+    in_fn = False
+    in_dispatch = False
+    for line in lines:
+        if line.startswith("fn handle_line"):
+            in_fn = True
+            continue
+        if not in_fn:
+            continue
+        if 'match req.str_or("op"' in line:
+            in_dispatch = True
+            continue
+        if not in_dispatch:
+            continue
+        # the catch-all arm ends the dispatch table
+        if re.match(r"^\s*other\s*=>", line) or re.match(r"^\s*_\s*=>", line):
+            break
+        m = ARM_RE.match(line)
+        # only top-level arms: nested matches inside an op's body are
+        # indented deeper than the 8-space dispatch arms
+        if m and len(line) - len(line.lstrip()) == 8:
+            ops.append(m.group(1))
+    return ops
+
+
+def documented_ops(doc: str) -> list[str]:
+    """Op names that have their own markdown heading in the doc."""
+    ops: list[str] = []
+    for line in doc.splitlines():
+        m = HEADING_RE.match(line)
+        if m:
+            ops.append(m.group(1))
+    return ops
+
+
+def check(source: str, doc: str) -> list[str]:
+    handled = server_ops(source)
+    documented = documented_ops(doc)
+    errors: list[str] = []
+    if not handled:
+        errors.append(
+            "no op match arms found in handle_line — the extractor no longer "
+            "matches server.rs's dispatch shape; fix ARM_RE or this script"
+        )
+    for op in handled:
+        if op not in documented:
+            errors.append(
+                f"op '{op}' is handled in server.rs but has no heading in "
+                f"docs/PROTOCOL.md — document the op (### `{op}`)"
+            )
+    for op in documented:
+        if op not in handled:
+            errors.append(
+                f"docs/PROTOCOL.md documents op '{op}' but server.rs no "
+                f"longer handles it — remove or update the section"
+            )
+    return errors
+
+
+def selftest() -> int:
+    import unittest
+
+    fake_server = "\n".join(
+        [
+            "fn handle_line(line: &str) -> Json {",
+            '    match req.str_or("op", "").as_str() {',
+            '        "ping" => Json::obj(),',
+            '        "sample" => match inner {',
+            '            "nested_not_an_op" => x,',
+            "        },",
+            '        other => err_json(&format!("unknown op \'{other}\'")),',
+            "    }",
+            "}",
+        ]
+    )
+
+    class Extractors(unittest.TestCase):
+        def test_server_ops_top_level_arms_only(self):
+            self.assertEqual(server_ops(fake_server), ["ping", "sample"])
+
+        def test_documented_ops_headings(self):
+            doc = "# Protocol\n### `ping`\ntext\n### sample\n#### not_two_words x\n"
+            self.assertEqual(documented_ops(doc), ["ping", "sample"])
+
+        def test_check_passes_when_in_sync(self):
+            doc = "### `ping`\n### `sample`\n"
+            self.assertEqual(check(fake_server, doc), [])
+
+        def test_check_fails_on_undocumented_op(self):
+            errors = check(fake_server, "### `ping`\n")
+            self.assertEqual(len(errors), 1)
+            self.assertIn("op 'sample' is handled", errors[0])
+
+        def test_check_fails_on_stale_doc_section(self):
+            errors = check(fake_server, "### `ping`\n### `sample`\n### `gone`\n")
+            self.assertEqual(len(errors), 1)
+            self.assertIn("'gone'", errors[0])
+
+        def test_check_fails_when_extractor_breaks(self):
+            errors = check("fn totally_different() {}", "### `ping`\n")
+            self.assertTrue(any("no op match arms" in e for e in errors))
+
+    suite = unittest.defaultTestLoader.loadTestsFromTestCase(Extractors)
+    result = unittest.TextTestRunner(verbosity=1).run(suite)
+    return 0 if result.wasSuccessful() else 1
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--server", default=SERVER_RS)
+    ap.add_argument("--doc", default=PROTOCOL_MD)
+    ap.add_argument("--selftest", action="store_true")
+    args = ap.parse_args()
+    if args.selftest:
+        return selftest()
+
+    try:
+        with open(args.server, "r", encoding="utf-8") as fh:
+            source = fh.read()
+    except FileNotFoundError:
+        sys.exit(f"check_protocol_doc: missing {args.server!r}")
+    try:
+        with open(args.doc, "r", encoding="utf-8") as fh:
+            doc = fh.read()
+    except FileNotFoundError:
+        sys.exit(
+            f"check_protocol_doc: missing {args.doc!r} — the wire protocol "
+            f"must be documented (see docs/PROTOCOL.md)"
+        )
+
+    errors = check(source, doc)
+    if errors:
+        for e in errors:
+            print(f"check_protocol_doc: FAIL {e}", file=sys.stderr)
+        return 1
+    ops = server_ops(source)
+    print(f"check_protocol_doc: PASS ({len(ops)} ops documented: {', '.join(ops)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
