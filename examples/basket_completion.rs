@@ -89,6 +89,7 @@ fn main() {
         deadline: None,
         given: cart.clone(),
         chain: false,
+        trace: false,
     };
     let a = svc.sample(req.clone()).unwrap();
     let b = svc.sample(req).unwrap();

@@ -139,6 +139,7 @@ fn main() -> anyhow::Result<()> {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
         })
         .collect();

@@ -74,6 +74,7 @@ fn main() -> anyhow::Result<()> {
             deadline: None,
             given: Vec::new(),
             chain: false,
+            trace: false,
         })?;
         println!(
             "  set {i}: {:?} ({} proposals, {:.1} ms)",
@@ -95,6 +96,7 @@ fn main() -> anyhow::Result<()> {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
         })
         .collect();

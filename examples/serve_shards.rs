@@ -59,6 +59,7 @@ fn main() -> anyhow::Result<()> {
                             deadline: None, // inherit the service default
                             given: Vec::new(),
                             chain: false,
+                            trace: false,
                         })
                         .expect("request failed");
                 }
@@ -79,6 +80,7 @@ fn main() -> anyhow::Result<()> {
             deadline: None,
             given: Vec::new(),
             chain: false,
+            trace: false,
         })?
         .samples;
     let via_batch = service
@@ -91,6 +93,7 @@ fn main() -> anyhow::Result<()> {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             },
             SampleRequest {
                 model: "movies".into(),
@@ -100,6 +103,7 @@ fn main() -> anyhow::Result<()> {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             },
         ])
         .remove(0)?
@@ -127,6 +131,7 @@ fn main() -> anyhow::Result<()> {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
         })
         .collect();

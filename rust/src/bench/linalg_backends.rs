@@ -319,6 +319,7 @@ fn interference_case(runner: &BenchRunner, quick: bool) -> Json {
                         deadline: None,
                         given: Vec::new(),
                         chain: false,
+                        trace: false,
                     });
                     i += 1;
                 }

@@ -18,15 +18,20 @@
 //! request throughput, sample throughput, and latency percentiles, and
 //! writes `BENCH_serving.json` (override the path with `NDPP_BENCH_OUT`;
 //! `sweep[]` + `conditional[]` + `cache[]` + `mcmc_mixing[]` +
-//! `lifecycle.eval[]` rows) — the serving entry of the repo's `BENCH_*`
-//! trajectory, uploaded as a CI artifact next to `BENCH_linalg.json`.
+//! `lifecycle.eval[]` + `tracing[]` rows) — the serving entry of the
+//! repo's `BENCH_*` trajectory, uploaded as a CI artifact next to
+//! `BENCH_linalg.json`.  The **tracing sweep** drives one identical
+//! closed-loop schedule with `trace: false` and `trace: true`, so the
+//! request-lifecycle tracing overhead is measured on every run.
 //! `scripts/bench_gate.py` fails the build if the `cache[]` column goes
 //! missing, the warm (cache-on) config falls below the cold one, the
 //! `mcmc_mixing[]` column goes missing, any steered config serves zero
 //! throughput, the tree proposal needs more burn-in than the uniform
 //! oracle, the `lifecycle.eval[]` promotion-gate column goes missing, a
-//! must-promote control fails its gate, or any recorded gate decision is
-//! inconsistent with its own MPR/AUC scores.
+//! must-promote control fails its gate, any recorded gate decision is
+//! inconsistent with its own MPR/AUC scores, the `tracing[]` column goes
+//! missing or serves zero throughput, or the traced config falls below
+//! 0.90× the untraced throughput.
 
 use std::sync::Arc;
 
@@ -34,7 +39,7 @@ use anyhow::Result;
 
 use crate::bench::experiments::{nonorthogonal_kernel, tablelike_kernel};
 use crate::bench::runner::Table;
-use crate::coordinator::{SampleRequest, SamplerKind, SamplingService, ServiceConfig};
+use crate::coordinator::{SampleRequest, SamplerKind, SamplingService, ServiceConfig, Trace};
 use crate::ndpp::{probability, Proposal};
 use crate::rng::Xoshiro;
 use crate::sampler::{
@@ -156,6 +161,7 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
     let cache_rows = hot_basket_sweep(quick)?;
     let mixing_rows = mcmc_mixing_sweep(quick)?;
     let lifecycle = lifecycle_sweep(quick)?;
+    let tracing_rows = tracing_sweep(quick)?;
 
     let json = Json::obj()
         .with("bench", "serving")
@@ -168,7 +174,8 @@ pub fn run(quick: bool, out_path: &str) -> Result<Json> {
         .with("conditional", Json::Arr(cond_rows))
         .with("cache", Json::Arr(cache_rows))
         .with("mcmc_mixing", Json::Arr(mixing_rows))
-        .with("lifecycle", lifecycle);
+        .with("lifecycle", lifecycle)
+        .with("tracing", Json::Arr(tracing_rows));
     std::fs::write(out_path, json.to_string_pretty())?;
     println!("(written to {out_path})");
     Ok(json)
@@ -220,6 +227,7 @@ fn hot_basket_sweep(quick: bool) -> Result<Vec<Json>> {
                             deadline: None,
                             given,
                             chain: false,
+                            trace: false,
                         })
                         .expect("hot-basket request failed");
                     }
@@ -484,6 +492,103 @@ fn lifecycle_sweep(quick: bool) -> Result<Json> {
     Ok(Json::obj().with("eval", Json::Arr(rows)))
 }
 
+/// Tracing-overhead sweep (`serving.tracing[]`): one identical
+/// closed-loop cholesky schedule — same seeds, same client interleaving —
+/// driven against fresh deployments of the same kernel with `trace:
+/// false` and `trace: true`.  Span stamping and per-stage histogram
+/// folding are always on (they are what the metrics op reports), so both
+/// configs pay them; the traced config additionally renders every
+/// response's span timeline to its JSON wire payload — the marginal work
+/// the opt-in `trace` field buys a dashboard-tailing client.
+/// `scripts/bench_gate.py` fails the build if the column is missing,
+/// either config serves zero throughput, or the traced config falls
+/// below 0.90x the untraced throughput.
+fn tracing_sweep(quick: bool) -> Result<Vec<Json>> {
+    let (m, k, iters) = if quick { (512, 8, 60) } else { (2048, 16, 160) };
+    let clients = 4usize;
+
+    let mut table = Table::new(&["tracing", "clients", "req/s", "p50", "p95", "spans/req"]);
+    let mut rows: Vec<Json> = Vec::new();
+    for (config, trace) in [("off", false), ("on", true)] {
+        let svc = Arc::new(SamplingService::new(ServiceConfig {
+            shards: 4,
+            ..Default::default()
+        }));
+        let mut rng = Xoshiro::seeded(7);
+        svc.register("traced", tablelike_kernel(m, k, &mut rng));
+        let wall = Timer::start();
+        let mut latencies: Vec<f64> = Vec::with_capacity(clients * iters);
+        let mut spans_seen = 0usize;
+        let mut span_bytes = 0usize;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let svc = Arc::clone(&svc);
+                    scope.spawn(move || {
+                        let mut lats = Vec::with_capacity(iters);
+                        let (mut spans, mut bytes) = (0usize, 0usize);
+                        for i in 0..iters {
+                            let t = Timer::start();
+                            let resp = svc
+                                .sample(SampleRequest {
+                                    model: "traced".into(),
+                                    n: SAMPLES_PER_REQUEST,
+                                    seed: Some(((c as u64) << 32) | i as u64),
+                                    kind: SamplerKind::Cholesky,
+                                    trace,
+                                    ..Default::default()
+                                })
+                                .expect("tracing bench request failed");
+                            if trace {
+                                // the serialization cost a traced wire
+                                // response pays on top of the samples
+                                bytes += Trace::spans_json(&resp.trace).to_string().len();
+                            }
+                            lats.push(t.secs());
+                            spans += resp.trace.len();
+                        }
+                        (lats, spans, bytes)
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (lats, spans, bytes) = h.join().expect("tracing bench client panicked");
+                latencies.extend(lats);
+                spans_seen += spans;
+                span_bytes += bytes;
+            }
+        });
+        let wall = wall.secs();
+        let requests = (clients * iters) as f64;
+        let req_s = requests / wall;
+        let lat = Summary::of(&latencies);
+        let spans_per_req = spans_seen as f64 / requests;
+        table.row(vec![
+            config.to_string(),
+            format!("{clients}"),
+            format!("{req_s:.0}"),
+            fmt_secs(lat.p50),
+            fmt_secs(lat.p95),
+            format!("{spans_per_req:.1}"),
+        ]);
+        rows.push(
+            Json::obj()
+                .with("config", config)
+                .with("clients", clients)
+                .with("requests", requests)
+                .with("wall_s", wall)
+                .with("requests_per_s", req_s)
+                .with("latency_p50_s", lat.p50)
+                .with("latency_p95_s", lat.p95)
+                .with("latency_mean_s", lat.mean)
+                .with("spans_per_request", spans_per_req)
+                .with("span_payload_bytes", span_bytes),
+        );
+    }
+    println!("\n== tracing overhead (M={m}, 2K={}) ==\n{}", 2 * k, table.render());
+    Ok(rows)
+}
+
 /// `clients` threads each issue `iters` synchronous requests back to back
 /// (each carrying the `given` basket — empty for unconditional traffic);
 /// returns (wall seconds, every per-request latency).
@@ -513,6 +618,7 @@ fn closed_loop(
                             deadline: None,
                             given: given.clone(),
                             chain: false,
+                            trace: false,
                         })
                         .expect("bench request failed");
                         lats.push(t.secs());

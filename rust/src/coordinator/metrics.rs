@@ -1,9 +1,15 @@
 //! Service metrics: latency histograms, request counters, admission-control
-//! rejection counters, and per-shard batch statistics.
+//! rejection counters, per-stage span histograms (queue / conditioning /
+//! sample / serialize, folded from [`crate::coordinator::trace`] spans at
+//! four aggregation levels: service-wide, per-model, per-algorithm, and
+//! per-version), and per-shard batch statistics.  Snapshots export as JSON
+//! (the `metrics` wire op) or as Prometheus text exposition
+//! ([`Metrics::prometheus`], the op's `format: "prometheus"` mode).
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::coordinator::trace::{Stage, StageSpan};
 use crate::util::json::Json;
 use crate::util::stats::ExpHistogram;
 
@@ -29,19 +35,130 @@ impl RejectReason {
     }
 }
 
-/// Per-(model, algorithm) counters.
-#[derive(Debug, Default)]
+/// 1µs base, 40 buckets -> covers up to ~18 minutes
+fn latency_histogram() -> ExpHistogram {
+    ExpHistogram::new(1e-6, 40)
+}
+
+/// Per-stage latency histograms — one [`ExpHistogram`] per histogrammed
+/// lifecycle stage (see [`crate::coordinator::trace::HISTOGRAM_STAGES`]).
+/// Kept at every aggregation level so canary-vs-live and algo-vs-algo
+/// stage deltas are directly readable.
+#[derive(Debug)]
+struct StageHistograms {
+    queue: ExpHistogram,
+    conditioning: ExpHistogram,
+    sample: ExpHistogram,
+    serialize: ExpHistogram,
+}
+
+impl StageHistograms {
+    fn new() -> StageHistograms {
+        StageHistograms {
+            queue: latency_histogram(),
+            conditioning: latency_histogram(),
+            sample: latency_histogram(),
+            serialize: latency_histogram(),
+        }
+    }
+
+    fn hist_mut(&mut self, stage: Stage) -> Option<&mut ExpHistogram> {
+        match stage {
+            Stage::Queue => Some(&mut self.queue),
+            Stage::Conditioning => Some(&mut self.conditioning),
+            Stage::Sample => Some(&mut self.sample),
+            Stage::Serialize => Some(&mut self.serialize),
+            // admission / dequeue spans stay on per-request timelines only
+            Stage::Admission | Stage::Dequeue => None,
+        }
+    }
+
+    fn record_spans(&mut self, spans: &[StageSpan]) {
+        for s in spans {
+            if let Some(h) = self.hist_mut(s.stage) {
+                h.record(s.dur_s);
+            }
+        }
+    }
+
+    fn iter(&self) -> [(&'static str, &ExpHistogram); 4] {
+        [
+            ("queue", &self.queue),
+            ("conditioning", &self.conditioning),
+            ("sample", &self.sample),
+            ("serialize", &self.serialize),
+        ]
+    }
+
+    fn has_data(&self) -> bool {
+        self.iter().iter().any(|(_, h)| h.count > 0)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for (name, h) in self.iter() {
+            if h.count > 0 {
+                obj.set(name, histogram_json(h));
+            }
+        }
+        obj
+    }
+}
+
+impl Default for StageHistograms {
+    fn default() -> StageHistograms {
+        StageHistograms::new()
+    }
+}
+
+/// The wire shape of one exported histogram: count / sum / mean plus the
+/// p50/p95/p99 bucket-edge quantiles and the raw `[upper_edge, count]`
+/// bucket pairs (non-empty buckets only — edges strictly increase).
+fn histogram_json(h: &ExpHistogram) -> Json {
+    Json::obj()
+        .with("count", h.count)
+        .with("sum_s", h.sum)
+        .with("mean_s", h.mean())
+        .with("p50_s", h.quantile(0.5))
+        .with("p95_s", h.quantile(0.95))
+        .with("p99_s", h.quantile(0.99))
+        .with(
+            "buckets",
+            Json::arr(
+                h.nonzero_buckets()
+                    .into_iter()
+                    .map(|(le, c)| Json::arr([Json::from(le), Json::from(c)])),
+            ),
+        )
+}
+
+/// Per-(model, algorithm) counters and latency histograms.
+#[derive(Debug)]
 struct AlgoMetrics {
     requests: u64,
     samples: u64,
     proposals: u64,
-    latency_sum: f64,
+    latency: ExpHistogram,
+    stages: StageHistograms,
+}
+
+impl Default for AlgoMetrics {
+    fn default() -> AlgoMetrics {
+        AlgoMetrics {
+            requests: 0,
+            samples: 0,
+            proposals: 0,
+            latency: latency_histogram(),
+            stages: StageHistograms::new(),
+        }
+    }
 }
 
 /// Per-model counters.
 #[derive(Debug)]
 struct ModelMetrics {
     latency: ExpHistogram,
+    stages: StageHistograms,
     samples: u64,
     proposals: u64,
     errors: u64,
@@ -62,7 +179,8 @@ struct ModelMetrics {
     steering: HashMap<&'static str, u64>,
     /// MCMC chain telemetry keyed by proposal kind (`"tree"` /
     /// `"uniform"`): requests served, Metropolis steps taken, moves
-    /// accepted — acceptance rate and steps-per-sample derive from these
+    /// accepted, and the Rao-Blackwellized expected-acceptance mass —
+    /// realized and expected acceptance rates derive from these
     mcmc: HashMap<String, McmcChainMetrics>,
     /// per-version traffic split, keyed by registry version number —
     /// the audit trail for canary rollouts and hot-swaps (which version
@@ -72,7 +190,7 @@ struct ModelMetrics {
 }
 
 /// Per-(model, version) counters — the canary-split audit trail.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct VersionMetrics {
     requests: u64,
     samples: u64,
@@ -80,7 +198,21 @@ struct VersionMetrics {
     /// requests that reached this version via the canary traffic slice
     /// (as opposed to resolving it as the live alias or an explicit pin)
     canary_requests: u64,
-    latency_sum: f64,
+    latency: ExpHistogram,
+    stages: StageHistograms,
+}
+
+impl Default for VersionMetrics {
+    fn default() -> VersionMetrics {
+        VersionMetrics {
+            requests: 0,
+            samples: 0,
+            errors: 0,
+            canary_requests: 0,
+            latency: latency_histogram(),
+            stages: StageHistograms::new(),
+        }
+    }
 }
 
 /// Per-(model, proposal-kind) MCMC chain counters.
@@ -89,13 +221,18 @@ struct McmcChainMetrics {
     requests: u64,
     steps: u64,
     accepts: u64,
+    /// sum of closed-form per-move acceptance probabilities (the
+    /// Rao-Blackwellized counterpart of `accepts`): `expected / steps`
+    /// and `accepts / steps` estimate the same rate, so a persistent gap
+    /// flags a broken proposal-probability computation
+    expected: f64,
 }
 
 impl ModelMetrics {
     fn new() -> ModelMetrics {
         ModelMetrics {
-            // 1µs base, 40 buckets -> covers up to ~18 minutes
-            latency: ExpHistogram::new(1e-6, 40),
+            latency: latency_histogram(),
+            stages: StageHistograms::new(),
             samples: 0,
             proposals: 0,
             errors: 0,
@@ -109,7 +246,6 @@ impl ModelMetrics {
             versions: HashMap::new(),
         }
     }
-
 }
 
 /// Per-shard-worker counters (indexed by shard id).
@@ -123,11 +259,35 @@ struct ShardMetrics {
     max_batch: u64,
 }
 
+/// Service-wide aggregates across every model: the end-to-end latency
+/// histogram plus the per-stage split (the `_overall` snapshot block).
+#[derive(Debug)]
+struct OverallMetrics {
+    latency: ExpHistogram,
+    stages: StageHistograms,
+}
+
+impl OverallMetrics {
+    fn new() -> OverallMetrics {
+        OverallMetrics { latency: latency_histogram(), stages: StageHistograms::new() }
+    }
+}
+
 /// Thread-safe metrics sink.
-#[derive(Default)]
 pub struct Metrics {
     inner: Mutex<HashMap<String, ModelMetrics>>,
     shards: Mutex<Vec<ShardMetrics>>,
+    overall: Mutex<OverallMetrics>,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            inner: Mutex::new(HashMap::new()),
+            shards: Mutex::new(Vec::new()),
+            overall: Mutex::new(OverallMetrics::new()),
+        }
+    }
 }
 
 impl Metrics {
@@ -140,6 +300,7 @@ impl Metrics {
         Metrics {
             inner: Mutex::new(HashMap::new()),
             shards: Mutex::new(vec![ShardMetrics::default(); n]),
+            overall: Mutex::new(OverallMetrics::new()),
         }
     }
 
@@ -175,17 +336,12 @@ impl Metrics {
         s.max_batch = s.max_batch.max(batch_len as u64);
     }
 
-    /// Record one completed sampling call with no algorithm attribution
-    /// (lands in the `"unattributed"` bucket, so the snapshot invariant
-    /// "algo splits sum to the aggregates" holds for every caller).
-    pub fn record(&self, model: &str, latency_secs: f64, n_samples: u64, proposals: u64) {
-        self.record_algo(model, "unattributed", latency_secs, n_samples, proposals);
-    }
-
     /// Record one completed sampling call attributed to an algorithm: the
     /// per-model aggregates plus the per-algorithm breakdown, under one
     /// lock acquisition so a concurrent snapshot never sees the aggregate
-    /// and its algo split disagree.
+    /// and its algo split disagree.  Every call site attributes the
+    /// **resolved** algorithm (for `auto`, the sampler the router
+    /// actually ran) — there is deliberately no unattributed variant.
     pub fn record_algo(
         &self,
         model: &str,
@@ -203,7 +359,43 @@ impl Metrics {
         a.requests += 1;
         a.samples += n_samples;
         a.proposals += proposals;
-        a.latency_sum += latency_secs;
+        a.latency.record(latency_secs);
+        drop(map);
+        self.overall.lock().unwrap().latency.record(latency_secs);
+    }
+
+    /// Fold one request's stage spans into the per-stage histograms at
+    /// all four aggregation levels (service-wide, model, algo, version).
+    /// Called with the queue/conditioning/sample spans by the service
+    /// when a request completes, and again with the serialize span by the
+    /// wire front end — both under the same resolved attribution.
+    pub fn record_stages(&self, model: &str, algo: &str, version: u64, spans: &[StageSpan]) {
+        let mut map = self.inner.lock().unwrap();
+        let m = map.entry(model.to_string()).or_insert_with(ModelMetrics::new);
+        m.stages.record_spans(spans);
+        m.by_algo.entry(algo.to_string()).or_default().stages.record_spans(spans);
+        m.versions.entry(version).or_default().stages.record_spans(spans);
+        drop(map);
+        self.overall.lock().unwrap().stages.record_spans(spans);
+    }
+
+    /// Summed duration recorded so far for `(model, stage)` — test and
+    /// audit accessor over the per-model stage histograms.
+    pub fn stage_total(&self, model: &str, stage: Stage) -> f64 {
+        let mut map = self.inner.lock().unwrap();
+        map.get_mut(model)
+            .and_then(|m| m.stages.hist_mut(stage))
+            .map(|h| h.sum)
+            .unwrap_or(0.0)
+    }
+
+    /// Observations recorded so far for `(model, stage)`.
+    pub fn stage_count(&self, model: &str, stage: Stage) -> u64 {
+        let mut map = self.inner.lock().unwrap();
+        map.get_mut(model)
+            .and_then(|m| m.stages.hist_mut(stage))
+            .map(|h| h.count)
+            .unwrap_or(0)
     }
 
     /// Record one served conditional (`given`-bearing) request — called
@@ -234,10 +426,11 @@ impl Metrics {
 
     /// Record one MCMC-served request's chain telemetry: the proposal
     /// kind that drove it, the Metropolis steps taken (burn-in included),
-    /// and the accepted moves among them.  Called next to
-    /// [`Metrics::record_algo`] whenever a chain produced the samples
-    /// (pinned `mcmc` or steered `auto`).
-    pub fn record_mcmc(&self, model: &str, proposal: &str, steps: u64, accepts: u64) {
+    /// the accepted moves among them, and the Rao-Blackwellized
+    /// expected-acceptance mass (sum of closed-form per-move acceptance
+    /// probabilities).  Called next to [`Metrics::record_algo`] whenever
+    /// a chain produced the samples (pinned `mcmc` or steered `auto`).
+    pub fn record_mcmc(&self, model: &str, proposal: &str, steps: u64, accepts: u64, expected: f64) {
         let mut map = self.inner.lock().unwrap();
         let c = map
             .entry(model.to_string())
@@ -248,6 +441,7 @@ impl Metrics {
         c.requests += 1;
         c.steps += steps;
         c.accepts += accepts;
+        c.expected += expected;
     }
 
     /// `(requests, steps, accepts)` recorded for `(model, proposal)` so
@@ -260,6 +454,18 @@ impl Metrics {
             .and_then(|m| m.mcmc.get(proposal))
             .map(|c| (c.requests, c.steps, c.accepts))
             .unwrap_or((0, 0, 0))
+    }
+
+    /// Rao-Blackwellized expected-acceptance mass recorded for
+    /// `(model, proposal)` so far.
+    pub fn mcmc_expected(&self, model: &str, proposal: &str) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(model)
+            .and_then(|m| m.mcmc.get(proposal))
+            .map(|c| c.expected)
+            .unwrap_or(0.0)
     }
 
     /// Steering decisions recorded for `(model, decision)` so far.
@@ -305,7 +511,7 @@ impl Metrics {
             .or_default();
         v.requests += 1;
         v.samples += n_samples;
-        v.latency_sum += latency_secs;
+        v.latency.record(latency_secs);
         if canary {
             v.canary_requests += 1;
         }
@@ -343,26 +549,27 @@ impl Metrics {
 
     /// Snapshot as JSON (the `metrics` op of the wire protocol).  Model
     /// names are the top-level keys; per-shard batch statistics ride along
-    /// under the reserved `"_shards"` key.
+    /// under the reserved `"_shards"` key and the service-wide aggregate
+    /// (end-to-end latency + per-stage histograms across every model)
+    /// under `"_overall"`.
     pub fn snapshot(&self) -> Json {
         let map = self.inner.lock().unwrap();
         let mut obj = Json::obj();
         for (name, m) in map.iter() {
             let mut algos = Json::obj();
             for (algo, a) in m.by_algo.iter() {
-                let mean = if a.requests == 0 {
-                    0.0
-                } else {
-                    a.latency_sum / a.requests as f64
-                };
-                algos.set(
-                    algo,
-                    Json::obj()
-                        .with("requests", a.requests)
-                        .with("samples", a.samples)
-                        .with("proposals", a.proposals)
-                        .with("latency_mean_s", mean),
-                );
+                let mut block = Json::obj()
+                    .with("requests", a.requests)
+                    .with("samples", a.samples)
+                    .with("proposals", a.proposals)
+                    .with("latency_mean_s", a.latency.mean())
+                    .with("latency_p50_s", a.latency.quantile(0.5))
+                    .with("latency_p95_s", a.latency.quantile(0.95))
+                    .with("latency_p99_s", a.latency.quantile(0.99));
+                if a.stages.has_data() {
+                    block.set("stages", a.stages.to_json());
+                }
+                algos.set(algo, block);
             }
             let mut rejected = Json::obj();
             for (&reason, &count) in m.rejected.iter() {
@@ -383,13 +590,20 @@ impl Metrics {
                 } else {
                     c.accepts as f64 / c.steps as f64
                 };
+                let expected_acceptance = if c.steps == 0 {
+                    0.0
+                } else {
+                    c.expected / c.steps as f64
+                };
                 mcmc.set(
                     proposal,
                     Json::obj()
                         .with("requests", c.requests)
                         .with("steps", c.steps)
                         .with("accepts", c.accepts)
-                        .with("acceptance", acceptance),
+                        .with("acceptance", acceptance)
+                        .with("expected_accepts", c.expected)
+                        .with("expected_acceptance", expected_acceptance),
                 );
             }
             let mut versions = Json::obj();
@@ -397,20 +611,19 @@ impl Metrics {
             version_ids.sort_unstable();
             for v in version_ids {
                 let c = &m.versions[&v];
-                let mean = if c.requests == 0 {
-                    0.0
-                } else {
-                    c.latency_sum / c.requests as f64
-                };
-                versions.set(
-                    &v.to_string(),
-                    Json::obj()
-                        .with("requests", c.requests)
-                        .with("samples", c.samples)
-                        .with("canary_requests", c.canary_requests)
-                        .with("errors", c.errors)
-                        .with("latency_mean_s", mean),
-                );
+                let mut block = Json::obj()
+                    .with("requests", c.requests)
+                    .with("samples", c.samples)
+                    .with("canary_requests", c.canary_requests)
+                    .with("errors", c.errors)
+                    .with("latency_mean_s", c.latency.mean())
+                    .with("latency_p50_s", c.latency.quantile(0.5))
+                    .with("latency_p95_s", c.latency.quantile(0.95))
+                    .with("latency_p99_s", c.latency.quantile(0.99));
+                if c.stages.has_data() {
+                    block.set("stages", c.stages.to_json());
+                }
+                versions.set(&v.to_string(), block);
             }
             obj.set(
                 name,
@@ -427,10 +640,31 @@ impl Metrics {
                     .with("latency_mean_s", m.latency.mean())
                     .with("latency_p50_s", m.latency.quantile(0.5))
                     .with("latency_p95_s", m.latency.quantile(0.95))
+                    .with("latency_p99_s", m.latency.quantile(0.99))
+                    .with(
+                        "latency_buckets",
+                        Json::arr(
+                            m.latency
+                                .nonzero_buckets()
+                                .into_iter()
+                                .map(|(le, c)| Json::arr([Json::from(le), Json::from(c)])),
+                        ),
+                    )
+                    .with("stages", m.stages.to_json())
                     .with("algos", algos),
             );
         }
         drop(map);
+        let overall = self.overall.lock().unwrap();
+        if overall.latency.count > 0 {
+            obj.set(
+                "_overall",
+                Json::obj()
+                    .with("latency", histogram_json(&overall.latency))
+                    .with("stages", overall.stages.to_json()),
+            );
+        }
+        drop(overall);
         let shards = self.shards.lock().unwrap();
         if !shards.is_empty() {
             obj.set(
@@ -445,6 +679,229 @@ impl Metrics {
         }
         obj
     }
+
+    /// Render the sink as Prometheus text exposition (format 0.0.4): the
+    /// per-model counters, the per-model end-to-end latency histogram,
+    /// and the per-(model, stage) span histograms, each with cumulative
+    /// `_bucket{le=...}` series, `_sum`, and `_count`.  Model names are
+    /// label-escaped; finer splits (per-algo, per-version histograms)
+    /// stay JSON-only to bound series cardinality.
+    pub fn prometheus(&self) -> String {
+        let map = self.inner.lock().unwrap();
+        let mut names: Vec<&String> = map.keys().collect();
+        names.sort();
+        let mut out = String::with_capacity(4096);
+
+        out.push_str("# TYPE ndpp_requests_total counter\n");
+        for name in &names {
+            let m = &map[*name];
+            for (algo, a) in sorted(&m.by_algo) {
+                push_metric(
+                    &mut out,
+                    "ndpp_requests_total",
+                    &[("model", name), ("algo", algo)],
+                    a.requests as f64,
+                );
+            }
+        }
+        out.push_str("# TYPE ndpp_samples_total counter\n");
+        for name in &names {
+            let m = &map[*name];
+            for (algo, a) in sorted(&m.by_algo) {
+                push_metric(
+                    &mut out,
+                    "ndpp_samples_total",
+                    &[("model", name), ("algo", algo)],
+                    a.samples as f64,
+                );
+            }
+        }
+        out.push_str("# TYPE ndpp_errors_total counter\n");
+        for name in &names {
+            push_metric(&mut out, "ndpp_errors_total", &[("model", name)], map[*name].errors as f64);
+        }
+        out.push_str("# TYPE ndpp_rejected_total counter\n");
+        for name in &names {
+            for (reason, &count) in sorted(&map[*name].rejected) {
+                push_metric(
+                    &mut out,
+                    "ndpp_rejected_total",
+                    &[("model", name), ("reason", reason)],
+                    count as f64,
+                );
+            }
+        }
+        out.push_str("# TYPE ndpp_steering_total counter\n");
+        for name in &names {
+            for (decision, &count) in sorted(&map[*name].steering) {
+                push_metric(
+                    &mut out,
+                    "ndpp_steering_total",
+                    &[("model", name), ("decision", decision)],
+                    count as f64,
+                );
+            }
+        }
+        out.push_str("# TYPE ndpp_mcmc_steps_total counter\n");
+        for name in &names {
+            for (proposal, c) in sorted(&map[*name].mcmc) {
+                push_metric(
+                    &mut out,
+                    "ndpp_mcmc_steps_total",
+                    &[("model", name), ("proposal", proposal)],
+                    c.steps as f64,
+                );
+            }
+        }
+        out.push_str("# TYPE ndpp_mcmc_accepts_total counter\n");
+        for name in &names {
+            for (proposal, c) in sorted(&map[*name].mcmc) {
+                push_metric(
+                    &mut out,
+                    "ndpp_mcmc_accepts_total",
+                    &[("model", name), ("proposal", proposal)],
+                    c.accepts as f64,
+                );
+            }
+        }
+        out.push_str("# TYPE ndpp_mcmc_expected_accepts_total counter\n");
+        for name in &names {
+            for (proposal, c) in sorted(&map[*name].mcmc) {
+                push_metric(
+                    &mut out,
+                    "ndpp_mcmc_expected_accepts_total",
+                    &[("model", name), ("proposal", proposal)],
+                    c.expected,
+                );
+            }
+        }
+        out.push_str("# TYPE ndpp_version_requests_total counter\n");
+        for name in &names {
+            let mut ids: Vec<u64> = map[*name].versions.keys().copied().collect();
+            ids.sort_unstable();
+            for v in ids {
+                let c = &map[*name].versions[&v];
+                let vs = v.to_string();
+                push_metric(
+                    &mut out,
+                    "ndpp_version_requests_total",
+                    &[("model", name), ("version", &vs)],
+                    c.requests as f64,
+                );
+            }
+        }
+        out.push_str("# TYPE ndpp_version_canary_requests_total counter\n");
+        for name in &names {
+            let mut ids: Vec<u64> = map[*name].versions.keys().copied().collect();
+            ids.sort_unstable();
+            for v in ids {
+                let c = &map[*name].versions[&v];
+                let vs = v.to_string();
+                push_metric(
+                    &mut out,
+                    "ndpp_version_canary_requests_total",
+                    &[("model", name), ("version", &vs)],
+                    c.canary_requests as f64,
+                );
+            }
+        }
+
+        out.push_str("# TYPE ndpp_latency_seconds histogram\n");
+        for name in &names {
+            push_histogram(&mut out, "ndpp_latency_seconds", &[("model", name)], &map[*name].latency);
+        }
+        out.push_str("# TYPE ndpp_stage_seconds histogram\n");
+        for name in &names {
+            for (stage, h) in map[*name].stages.iter() {
+                if h.count > 0 {
+                    push_histogram(
+                        &mut out,
+                        "ndpp_stage_seconds",
+                        &[("model", name), ("stage", stage)],
+                        h,
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Deterministic (sorted-key) iteration over a metrics sub-map, so the
+/// exposition is stable across snapshots.
+fn sorted<K: Ord, V>(map: &HashMap<K, V>) -> Vec<(&K, &V)> {
+    let mut entries: Vec<(&K, &V)> = map.iter().collect();
+    entries.sort_by(|a, b| a.0.cmp(b.0));
+    entries
+}
+
+/// Escape a Prometheus label value: backslash, double quote, newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn push_labels(out: &mut String, labels: &[(&str, &str)]) {
+    if labels.is_empty() {
+        return;
+    }
+    out.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(&escape_label(v));
+        out.push('"');
+    }
+    out.push('}');
+}
+
+fn push_metric(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    out.push_str(name);
+    push_labels(out, labels);
+    out.push(' ');
+    out.push_str(&format_value(value));
+    out.push('\n');
+}
+
+/// Integral values print without a fractional part (bucket counts must
+/// parse as integers); everything else uses Rust's shortest float form.
+fn format_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// One histogram in exposition format: cumulative `_bucket{le=...}`
+/// series over the non-empty buckets (cumulative counts stay monotone
+/// when zero-delta edges are skipped), the mandatory `le="+Inf"` bucket,
+/// `_sum`, and `_count`.
+fn push_histogram(out: &mut String, name: &str, labels: &[(&str, &str)], h: &ExpHistogram) {
+    let mut cumulative = 0u64;
+    for (le, c) in h.nonzero_buckets() {
+        cumulative += c;
+        let le_s = format!("{le}");
+        let mut bucket_labels: Vec<(&str, &str)> = labels.to_vec();
+        bucket_labels.push(("le", &le_s));
+        push_metric(out, &format!("{name}_bucket"), &bucket_labels, cumulative as f64);
+    }
+    let mut inf_labels: Vec<(&str, &str)> = labels.to_vec();
+    inf_labels.push(("le", "+Inf"));
+    push_metric(out, &format!("{name}_bucket"), &inf_labels, h.count as f64);
+    push_metric(out, &format!("{name}_sum"), labels, h.sum);
+    push_metric(out, &format!("{name}_count"), labels, h.count as f64);
 }
 
 #[cfg(test)]
@@ -469,6 +926,11 @@ mod tests {
         assert_eq!(mcmc.f64_or("requests", 0.0), 2.0);
         assert_eq!(mcmc.f64_or("proposals", 0.0), 1200.0);
         assert!((mcmc.f64_or("latency_mean_s", 0.0) - 0.030).abs() < 1e-12);
+        // per-algo blocks carry real histogram quantiles now
+        assert!(mcmc.f64_or("latency_p99_s", 0.0) >= 0.040);
+        // the service-wide aggregate saw every request
+        let overall = snap.get("_overall").and_then(|o| o.get("latency")).unwrap();
+        assert_eq!(overall.f64_or("count", 0.0), 3.0);
     }
 
     #[test]
@@ -529,12 +991,13 @@ mod tests {
     #[test]
     fn mcmc_chain_counters_accumulate_per_proposal() {
         let m = Metrics::new();
-        m.record_mcmc("a", "tree", 100, 40);
-        m.record_mcmc("a", "tree", 300, 60);
-        m.record_mcmc("a", "uniform", 1000, 50);
+        m.record_mcmc("a", "tree", 100, 40, 42.5);
+        m.record_mcmc("a", "tree", 300, 60, 57.5);
+        m.record_mcmc("a", "uniform", 1000, 50, 48.0);
         assert_eq!(m.mcmc_counts("a", "tree"), (2, 400, 100));
         assert_eq!(m.mcmc_counts("a", "uniform"), (1, 1000, 50));
         assert_eq!(m.mcmc_counts("b", "tree"), (0, 0, 0));
+        assert!((m.mcmc_expected("a", "tree") - 100.0).abs() < 1e-12);
         let snap = m.snapshot();
         let t = snap
             .get("a")
@@ -545,6 +1008,9 @@ mod tests {
         assert_eq!(t.f64_or("requests", 0.0), 2.0);
         assert_eq!(t.f64_or("steps", 0.0), 400.0);
         assert!((t.f64_or("acceptance", 0.0) - 0.25).abs() < 1e-12);
+        // expected-vs-realized: same rate here by construction
+        assert!((t.f64_or("expected_acceptance", 0.0) - 0.25).abs() < 1e-12);
+        assert!((t.f64_or("expected_accepts", 0.0) - 100.0).abs() < 1e-12);
     }
 
     #[test]
@@ -564,6 +1030,8 @@ mod tests {
         assert_eq!(v1.f64_or("requests", 0.0), 2.0);
         assert_eq!(v1.f64_or("canary_requests", 0.0), 0.0);
         assert!((v1.f64_or("latency_mean_s", 0.0) - 0.020).abs() < 1e-12);
+        // per-version blocks carry real histogram quantiles now
+        assert!(v1.f64_or("latency_p99_s", 0.0) >= 0.030);
         let v2 = versions.get("2").unwrap();
         assert_eq!(v2.f64_or("canary_requests", 0.0), 1.0);
         assert_eq!(v2.f64_or("errors", 0.0), 1.0);
@@ -572,10 +1040,10 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record("a", 0.010, 4, 7);
-        m.record("a", 0.020, 4, 9);
+        m.record_algo("a", "rejection", 0.010, 4, 7);
+        m.record_algo("a", "rejection", 0.020, 4, 9);
         m.record_error("a");
-        m.record("b", 0.001, 1, 1);
+        m.record_algo("b", "cholesky", 0.001, 1, 1);
         let snap = m.snapshot();
         let a = snap.get("a").unwrap();
         assert_eq!(a.f64_or("requests", 0.0), 2.0);
@@ -583,6 +1051,107 @@ mod tests {
         assert_eq!(a.f64_or("proposals", 0.0), 16.0);
         assert_eq!(a.f64_or("errors", 0.0), 1.0);
         assert!((a.f64_or("latency_mean_s", 0.0) - 0.015).abs() < 1e-9);
+        assert!(a.f64_or("latency_p99_s", 0.0) > 0.0);
+        assert!(!a.get("latency_buckets").and_then(|b| b.as_arr()).unwrap().is_empty());
         assert!(snap.get("b").is_some());
+    }
+
+    #[test]
+    fn stage_spans_fold_into_all_levels() {
+        let span = |stage, dur_s| StageSpan { stage, start_s: 0.0, dur_s, note: None };
+        let m = Metrics::new();
+        m.record_stages(
+            "a",
+            "rejection",
+            1,
+            &[span(Stage::Queue, 0.002), span(Stage::Sample, 0.010)],
+        );
+        m.record_stages("a", "rejection", 1, &[span(Stage::Serialize, 0.001)]);
+        m.record_stages(
+            "a",
+            "mcmc",
+            2,
+            &[span(Stage::Conditioning, 0.004), span(Stage::Sample, 0.020)],
+        );
+        assert_eq!(m.stage_count("a", Stage::Queue), 1);
+        assert_eq!(m.stage_count("a", Stage::Sample), 2);
+        assert!((m.stage_total("a", Stage::Sample) - 0.030).abs() < 1e-12);
+        assert!((m.stage_total("a", Stage::Serialize) - 0.001).abs() < 1e-12);
+        // admission/dequeue spans are timeline-only, never histogrammed
+        m.record_stages("a", "rejection", 1, &[span(Stage::Admission, 9.0)]);
+        assert_eq!(m.stage_total("a", Stage::Admission), 0.0);
+        let snap = m.snapshot();
+        let a = snap.get("a").unwrap();
+        let stages = a.get("stages").unwrap();
+        assert_eq!(stages.get("sample").unwrap().f64_or("count", 0.0), 2.0);
+        assert!(stages.get("sample").unwrap().f64_or("p99_s", 0.0) >= 0.020);
+        // per-algo split
+        let algo_stages = a
+            .get("algos")
+            .and_then(|al| al.get("mcmc"))
+            .and_then(|b| b.get("stages"))
+            .unwrap();
+        assert_eq!(algo_stages.get("conditioning").unwrap().f64_or("count", 0.0), 1.0);
+        // per-version split
+        let v1_stages = a
+            .get("versions")
+            .and_then(|v| v.get("1"))
+            .and_then(|b| b.get("stages"))
+            .unwrap();
+        assert_eq!(v1_stages.get("queue").unwrap().f64_or("count", 0.0), 1.0);
+        // service-wide aggregate
+        let overall = snap.get("_overall").and_then(|o| o.get("stages")).unwrap();
+        assert_eq!(overall.get("sample").unwrap().f64_or("count", 0.0), 2.0);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let span = |stage, dur_s| StageSpan { stage, start_s: 0.0, dur_s, note: None };
+        let m = Metrics::new();
+        m.record_algo("books\"v2\\x", "rejection", 0.010, 4, 7);
+        m.record_algo("books\"v2\\x", "rejection", 0.040, 4, 9);
+        m.record_rejected("books\"v2\\x", RejectReason::QueueFull);
+        m.record_mcmc("books\"v2\\x", "tree", 100, 40, 41.5);
+        m.record_version("books\"v2\\x", 1, false, 0.010, 4);
+        m.record_stages(
+            "books\"v2\\x",
+            "rejection",
+            1,
+            &[span(Stage::Queue, 0.002), span(Stage::Sample, 0.010)],
+        );
+        let text = m.prometheus();
+        // label escaping: quote and backslash must be escaped in values
+        assert!(text.contains(r#"model="books\"v2\\x""#), "{text}");
+        assert!(text.contains("ndpp_requests_total"));
+        assert!(text.contains("ndpp_mcmc_expected_accepts_total"));
+        assert!(text.contains(r#"le="+Inf""#));
+        // every histogram: _count equals the +Inf bucket, buckets monotone
+        let mut counts: HashMap<String, f64> = HashMap::new();
+        let mut last_bucket: HashMap<String, f64> = HashMap::new();
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').unwrap();
+            let value: f64 = value.parse().unwrap();
+            assert!(value >= 0.0, "negative sample: {line}");
+            if let Some(base) = series.find("_bucket{") {
+                let key = &series[..base];
+                let prev = last_bucket.entry(key.to_string()).or_insert(0.0);
+                assert!(value >= *prev, "non-monotone buckets: {line}");
+                *prev = value;
+                if series.contains(r#"le="+Inf""#) {
+                    counts.insert(format!("{key}_count"), value);
+                }
+            }
+        }
+        for (count_series, inf_value) in counts {
+            let line = text
+                .lines()
+                .find(|l| l.starts_with(&count_series))
+                .unwrap_or_else(|| panic!("missing {count_series}"));
+            let v: f64 = line.rsplit_once(' ').unwrap().1.parse().unwrap();
+            assert_eq!(v, inf_value, "{count_series} != +Inf bucket");
+        }
     }
 }

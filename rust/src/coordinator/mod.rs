@@ -22,7 +22,13 @@
 //! * [`server`] — line-delimited-JSON TCP front end (single and `batch`
 //!   ops, model audit, shard-aware metrics) + a small client.
 //! * [`metrics`] — latency histograms, throughput counters, rejection,
-//!   steering-decision and per-shard batch statistics.
+//!   steering-decision, per-stage span and per-shard batch statistics,
+//!   exportable as JSON or Prometheus text exposition.
+//! * [`trace`] — request-lifecycle tracing: monotonic per-stage spans
+//!   stamped on every request (admission → queue → dequeue →
+//!   conditioning → sample → serialize) and the bounded worst-N
+//!   slow-trace ring behind the `slow` wire op.  Sampling-invisible by
+//!   contract: traces read only the clock, never the RNG stream.
 //! * [`pool`] — the generic worker thread pool (used by tooling; the
 //!   serving path runs on the shard workers above).
 
@@ -32,9 +38,11 @@ pub mod pool;
 pub mod registry;
 pub mod server;
 pub mod service;
+pub mod trace;
 
 pub use cache::{CacheStats, ConditioningCache, ModelCacheStats};
 pub use metrics::{Metrics, RejectReason};
+pub use trace::{SlowRing, SlowTrace, Stage, StageSpan, Trace};
 pub use pool::WorkerPool;
 pub use registry::{split_versioned, ModelEntry, Registry, SamplerKind, Swap, VersionRole};
 pub use service::{

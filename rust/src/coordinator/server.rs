@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! -> {"op":"sample","model":"books","n":4,"seed":11,"algo":"auto",
-//!     "deadline_ms":250,"given":[3,17],"chain":false}
+//!     "deadline_ms":250,"given":[3,17],"chain":false,"trace":false}
 //!    (algo: auto | cholesky | rejection | mcmc | dense.  When omitted it
 //!     defaults to rejection for unconditional requests and to auto for
 //!     `given`-bearing ones; auto lets the steering router use the
@@ -17,23 +17,33 @@
 //!     support conditioning.  An empty / absent given is the
 //!     unconditional path.  chain (optional, mcmc-served n > 1 only):
 //!     draw all n samples from one thinned chain instead of per-sample
-//!     restarts.)
-//! <- {"ok":true,"seed":11,"proposals":9,"latency_s":0.004,
-//!     "algo":"rejection","version":2,"canary":false,
-//!     "expected_rejections":2.31,
+//!     restarts.  trace (optional): return the request's stage-span
+//!     timeline; tracing is sampling-invisible, samples are
+//!     byte-identical either way.)
+//! <- {"ok":true,"model":"books","seed":11,"proposals":9,
+//!     "latency_s":0.004,"algo":"rejection","version":2,"canary":false,
+//!     "expected_rejections":2.31,"rejection_trials":9,
 //!     "mcmc":{"proposal":"tree","steps":812,"acceptance":0.43,
-//!             "chain":false},
+//!             "expected_acceptance":0.41,"chain":false},
+//!     "trace":[{"stage":"queue","start_s":...,"dur_s":...},...],
 //!     "samples":[[3,17],[4],[],[8,90,411]]}
 //!    (algo echoes the *resolved* algorithm — for auto requests, where the
 //!     router sent them; version is the model version the request was
 //!     served by and canary whether the deterministic canary slice routed
 //!     it to a staged candidate; expected_rejections is the feasibility
-//!     estimate U when the rejection check ran for this request; mcmc is
-//!     chain telemetry — proposal kind, Metropolis steps, acceptance
-//!     rate — when a chain produced the samples.  model accepts a bare
-//!     alias ("books", resolved to the live version — or the canary for
-//!     the configured traffic slice) or a version pin ("books@3", exact
-//!     version, bypasses the canary split).)
+//!     estimate U when the rejection check ran for this request and
+//!     rejection_trials the *realized* proposal-trial count when the
+//!     rejection sampler served it — the live per-request audit of the
+//!     paper's Theorem 2 bound; mcmc is chain telemetry — proposal kind,
+//!     Metropolis steps, realized acceptance rate, and the closed-form
+//!     (Rao-Blackwellized) expected acceptance rate next to it — when a
+//!     chain produced the samples.  trace is present only when the
+//!     request set trace:true: contiguous spans over admission | queue |
+//!     dequeue | conditioning (note: "hit"/"build") | sample | serialize.
+//!     model accepts a bare alias ("books", resolved to the live
+//!     version — or the canary for the configured traffic slice) or a
+//!     version pin ("books@3", exact version, bypasses the canary
+//!     split).)
 //! -> {"op":"batch","requests":[{"model":"books","n":1,"seed":1},
 //!                              {"model":"books","n":2,"seed":2}]}
 //!    (each entry takes the same fields as a `sample` op; entries fan out
@@ -50,9 +60,22 @@
 //! <- {"ok":true,"metrics":{...},"cache":{"hits":...,"misses":...,
 //!     "evictions":...,"retired":...,"bytes":...,"entries":...,
 //!     "budget":...},"shards":8,"queue_depths":[0,...]}
-//!    (each model's metrics block carries a per-version "versions"
-//!     sub-block: requests / samples / canary_requests / errors /
-//!     latency_mean_s split by the version that served them)
+//!    (each model's metrics block carries per-stage latency histograms
+//!     with p50/p95/p99 — also split per algo and per version — and a
+//!     per-version "versions" sub-block: requests / samples /
+//!     canary_requests / errors / latency split by the version that
+//!     served them)
+//! -> {"op":"metrics","format":"prometheus"}
+//! <- {"ok":true,"format":"prometheus","text":"# TYPE ..."}
+//!    (the same counters/histograms as Prometheus text exposition 0.0.4
+//!     in "text", ready for a scrape endpoint to relay, with
+//!     cache/queue-depth gauges appended)
+//! -> {"op":"slow"}
+//! <- {"ok":true,"budget":32,"count":2,"slow":[{"model":"books",
+//!     "seed":11,"algo":"rejection","version":2,"total_s":...,
+//!     "spans":[...]},...]}
+//!    (the worst-N slowest completed requests since startup — N from
+//!     --slow-log — slowest first, each with its full span timeline)
 //! -> {"op":"versions","model":"books"}
 //! <- {"ok":true,"model":"books","live":2,"canary":3,"previous":1,
 //!     "versions":[{"version":1,"role":"previous","m":...,"k2":...,
@@ -111,8 +134,10 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::registry::SamplerKind;
 use crate::coordinator::service::{SampleRequest, SampleResponse, SamplingService};
+use crate::coordinator::trace::{Stage, StageSpan, Trace};
 use crate::linalg::backend;
 use crate::util::json::Json;
+use crate::util::Timer;
 
 /// How often a blocked connection read re-checks the shutdown flag.
 const READ_POLL: Duration = Duration::from_millis(200);
@@ -265,10 +290,21 @@ fn parse_sample_request(req: &Json) -> Result<SampleRequest> {
             .map(Duration::from_millis),
         given,
         chain: req.get("chain").and_then(|b| b.as_bool()).unwrap_or(false),
+        trace: req.get("trace").and_then(|b| b.as_bool()).unwrap_or(false),
     })
 }
 
-fn sample_response_json(resp: &SampleResponse) -> Json {
+/// Serialize one successful response.  The serialization itself is the
+/// last lifecycle stage: it is timed here, folded into the per-stage
+/// histograms (the service already recorded admission→sample), and —
+/// when the request opted in with `trace: true` — appended to the span
+/// timeline returned on the wire.
+fn sample_response_json(
+    resp: &SampleResponse,
+    want_trace: bool,
+    service: &SamplingService,
+) -> Json {
+    let timer = Timer::start();
     let samples = Json::arr(
         resp.samples
             .iter()
@@ -276,6 +312,7 @@ fn sample_response_json(resp: &SampleResponse) -> Json {
     );
     let mut out = Json::obj()
         .with("ok", true)
+        .with("model", resp.model.as_str())
         .with("seed", resp.seed)
         .with("proposals", resp.proposals)
         .with("latency_s", resp.latency_secs)
@@ -289,6 +326,11 @@ fn sample_response_json(resp: &SampleResponse) -> Json {
     if let Some(u) = resp.expected_rejections {
         out = out.with("expected_rejections", u);
     }
+    if let Some(trials) = resp.rejection_trials {
+        // realized proposal-trial count next to the expectation above:
+        // trials / samples.len() audits the Theorem 2 bound per request
+        out = out.with("rejection_trials", trials);
+    }
     if let Some(info) = &resp.mcmc {
         out = out.with(
             "mcmc",
@@ -296,8 +338,28 @@ fn sample_response_json(resp: &SampleResponse) -> Json {
                 .with("proposal", info.proposal.as_str())
                 .with("steps", info.steps)
                 .with("acceptance", info.acceptance())
+                // closed-form (Rao-Blackwellized) counterpart: same rate,
+                // lower variance; a persistent gap vs `acceptance` flags
+                // a broken proposal-probability computation
+                .with("expected_acceptance", info.expected_acceptance())
                 .with("chain", info.chain),
         );
+    }
+    // the serialize span is anchored where the service-side timeline
+    // ended, keeping the emitted spans contiguous
+    let ser = StageSpan {
+        stage: Stage::Serialize,
+        start_s: resp.trace.last().map(|s| s.start_s + s.dur_s).unwrap_or(0.0),
+        dur_s: timer.secs(),
+        note: None,
+    };
+    service
+        .metrics()
+        .record_stages(&resp.model, resp.algo.as_str(), resp.version, std::slice::from_ref(&ser));
+    if want_trace {
+        let mut spans = resp.trace.clone();
+        spans.push(ser);
+        out = out.with("trace", Trace::spans_json(&spans));
     }
     out.with("samples", samples)
 }
@@ -445,6 +507,31 @@ fn handle_line(line: &str, service: &SamplingService, stop: &AtomicBool) -> Json
             ),
         "metrics" => {
             let cs = service.conditioning_cache().stats();
+            if req.str_or("format", "json") == "prometheus" {
+                // Prometheus text exposition 0.0.4, delivered in-band as
+                // a string for a scrape endpoint to relay verbatim; the
+                // service-level gauges (cache, queue depths) ride along
+                use std::fmt::Write as _;
+                let mut text = service.metrics().prometheus();
+                let _ = writeln!(text, "# TYPE ndpp_cache_hits_total counter");
+                let _ = writeln!(text, "ndpp_cache_hits_total {}", cs.hits);
+                let _ = writeln!(text, "# TYPE ndpp_cache_misses_total counter");
+                let _ = writeln!(text, "ndpp_cache_misses_total {}", cs.misses);
+                let _ = writeln!(text, "# TYPE ndpp_cache_evictions_total counter");
+                let _ = writeln!(text, "ndpp_cache_evictions_total {}", cs.evictions);
+                let _ = writeln!(text, "# TYPE ndpp_cache_bytes gauge");
+                let _ = writeln!(text, "ndpp_cache_bytes {}", cs.bytes);
+                let _ = writeln!(text, "# TYPE ndpp_cache_entries gauge");
+                let _ = writeln!(text, "ndpp_cache_entries {}", cs.entries);
+                let _ = writeln!(text, "# TYPE ndpp_queue_depth gauge");
+                for (i, d) in service.queue_depths().into_iter().enumerate() {
+                    let _ = writeln!(text, "ndpp_queue_depth{{shard=\"{i}\"}} {d}");
+                }
+                return Json::obj()
+                    .with("ok", true)
+                    .with("format", "prometheus")
+                    .with("text", text);
+            }
             Json::obj()
                 .with("ok", true)
                 .with("metrics", service.metrics().snapshot())
@@ -580,16 +667,29 @@ fn handle_line(line: &str, service: &SamplingService, stop: &AtomicBool) -> Json
                 Err(e) => err_json(&e.to_string()),
             }
         }
+        "slow" => {
+            // the worst-N slowest completed requests since startup,
+            // slowest first, each with its full span timeline
+            let traces = service.slow_traces();
+            Json::obj()
+                .with("ok", true)
+                .with("budget", service.slow_ring().budget())
+                .with("count", traces.len())
+                .with("slow", Json::arr(traces.iter().map(|t| t.to_json())))
+        }
         "shutdown" => {
             stop.store(true, Ordering::Relaxed);
             Json::obj().with("ok", true).with("stopping", true)
         }
         "sample" => match parse_sample_request(&req) {
             Err(e) => err_json(&e.to_string()),
-            Ok(request) => match service.sample(request) {
-                Ok(resp) => sample_response_json(&resp),
-                Err(e) => err_json(&e.to_string()),
-            },
+            Ok(request) => {
+                let want_trace = request.trace;
+                match service.sample(request) {
+                    Ok(resp) => sample_response_json(&resp, want_trace, service),
+                    Err(e) => err_json(&e.to_string()),
+                }
+            }
         },
         "batch" => {
             let Some(reqs) = req.get("requests").and_then(|r| r.as_arr()) else {
@@ -600,16 +700,19 @@ fn handle_line(line: &str, service: &SamplingService, stop: &AtomicBool) -> Json
             let slots: Vec<std::result::Result<_, String>> = reqs
                 .iter()
                 .map(|r| match parse_sample_request(r) {
-                    Ok(request) => Ok(service.submit(request)),
+                    Ok(request) => {
+                        let want_trace = request.trace;
+                        Ok((service.submit(request), want_trace))
+                    }
                     Err(e) => Err(e.to_string()),
                 })
                 .collect();
             let responses = slots.into_iter().map(|slot| match slot {
-                Ok(rx) => match rx
+                Ok((rx, want_trace)) => match rx
                     .recv()
                     .unwrap_or_else(|_| Err(anyhow::anyhow!("worker dropped the reply")))
                 {
-                    Ok(resp) => sample_response_json(&resp),
+                    Ok(resp) => sample_response_json(&resp, want_trace, service),
                     Err(e) => err_json(&e.to_string()),
                 },
                 Err(e) => err_json(&e),
@@ -1024,6 +1127,51 @@ mod tests {
             .unwrap();
         assert!(chain_stats.f64_or("requests", 0.0) >= 2.0);
         assert!(chain_stats.f64_or("steps", 0.0) > 0.0);
+        assert!(chain_stats.f64_or("expected_accepts", -1.0) >= 0.0);
+        // trace:true returns the span timeline — and the samples are
+        // byte-identical to the untraced request with the same seed
+        let traced = client
+            .call(
+                &Json::obj()
+                    .with("op", "sample")
+                    .with("model", "toy")
+                    .with("n", 3)
+                    .with("seed", 42)
+                    .with("algo", "rejection")
+                    .with("trace", true),
+            )
+            .unwrap();
+        assert_eq!(parse_samples(&traced), s1);
+        let spans = traced.get("trace").unwrap().as_arr().unwrap();
+        assert!(spans.len() >= 4, "expected admission..serialize spans, got {}", spans.len());
+        assert_eq!(spans[0].str_or("stage", ""), "admission");
+        assert_eq!(spans.last().unwrap().str_or("stage", ""), "serialize");
+        // a traced rejection response also reports the realized trial
+        // count next to the Theorem 2 expectation
+        assert!(traced.f64_or("rejection_trials", 0.0) >= 3.0);
+        // the untraced responses above never carried a trace block
+        assert!(full.get("trace").is_none());
+        // the mcmc block carries expected next to realized acceptance
+        assert!(mc1.get("mcmc").unwrap().f64_or("expected_acceptance", -1.0) >= 0.0);
+        // slow op: bounded worst-N ring, slowest first
+        let slow = client.call(&Json::obj().with("op", "slow")).unwrap();
+        assert_eq!(slow.get("ok").and_then(|b| b.as_bool()), Some(true));
+        let entries = slow.get("slow").unwrap().as_arr().unwrap();
+        assert!(!entries.is_empty() && entries.len() <= slow.f64_or("budget", 0.0) as usize);
+        assert!(entries
+            .windows(2)
+            .all(|w| w[0].f64_or("total_s", 0.0) >= w[1].f64_or("total_s", 0.0)));
+        assert!(!entries[0].get("spans").unwrap().as_arr().unwrap().is_empty());
+        // prometheus exposition rides in-band under format:"prometheus"
+        let prom = client
+            .call(&Json::obj().with("op", "metrics").with("format", "prometheus"))
+            .unwrap();
+        let text = prom.str_or("text", "");
+        assert!(text.contains("ndpp_requests_total{model=\"toy\""));
+        assert!(text.contains("ndpp_latency_seconds_bucket"));
+        assert!(text.contains("ndpp_stage_seconds_bucket"));
+        assert!(text.contains("ndpp_cache_hits_total"));
+        assert!(text.contains("ndpp_queue_depth{shard=\"0\"}"));
         // shutdown
         let stop = client.call(&Json::obj().with("op", "shutdown")).unwrap();
         assert_eq!(stop.get("ok").and_then(|b| b.as_bool()), Some(true));

@@ -39,6 +39,7 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::cache::ConditioningCache;
 use crate::coordinator::metrics::{Metrics, RejectReason};
 use crate::coordinator::registry::{split_versioned, ModelEntry, Registry, SamplerKind, Swap};
+use crate::coordinator::trace::{SlowRing, SlowTrace, Stage, StageSpan, Trace};
 use crate::linalg::backend::{self, BackendKind};
 use crate::ndpp::conditional::validate_given;
 use crate::ndpp::NdppKernel;
@@ -120,7 +121,17 @@ pub struct ServiceConfig {
     /// Explicit `name@N` pins always bypass the split.  `0.0` (the
     /// default) disables canary routing entirely.
     pub canary_fraction: f64,
+    /// retention budget of the worst-N slow-trace ring exported by the
+    /// `slow` wire op (the `--slow-log` flag; default
+    /// [`DEFAULT_SLOW_LOG`], `0` disables retention).  Traces are
+    /// stamped either way — the ring only controls how many completed
+    /// timelines are kept for postmortems.
+    pub slow_log: usize,
 }
+
+/// Default [`ServiceConfig::slow_log`]: enough retained worst-case
+/// timelines for a useful postmortem without unbounded memory.
+pub const DEFAULT_SLOW_LOG: usize = 32;
 
 impl Default for ServiceConfig {
     fn default() -> Self {
@@ -135,6 +146,7 @@ impl Default for ServiceConfig {
             steer_threshold: DEFAULT_STEER_THRESHOLD,
             mcmc_proposal: ProposalKind::default(),
             canary_fraction: 0.0,
+            slow_log: DEFAULT_SLOW_LOG,
         }
     }
 }
@@ -161,6 +173,12 @@ pub struct SampleRequest {
     /// thinned by the model's `McmcConfig::thinning`.  Ignored by the
     /// non-MCMC samplers.
     pub chain: bool,
+    /// opt in to the span timeline on the wire response (`trace: true`).
+    /// Spans are stamped for every request regardless — this flag only
+    /// controls whether the timeline is serialized back; sampled bytes
+    /// are byte-identical either way (pinned in
+    /// `tests/observability.rs`).
+    pub trace: bool,
 }
 
 impl Default for SampleRequest {
@@ -173,6 +191,7 @@ impl Default for SampleRequest {
             deadline: None,
             given: Vec::new(),
             chain: false,
+            trace: false,
         }
     }
 }
@@ -180,6 +199,10 @@ impl Default for SampleRequest {
 /// Response for one request.
 #[derive(Debug, Clone)]
 pub struct SampleResponse {
+    /// resolved family name (bare, even for `name@N`-pinned requests) —
+    /// the metrics key for any post-service span accounting (the
+    /// server's serialize span)
+    pub model: String,
     pub samples: Vec<Vec<usize>>,
     /// total proposal draws (rejection sampler; == samples for cholesky)
     pub proposals: u64,
@@ -195,6 +218,12 @@ pub struct SampleResponse {
     /// `rejection` and `auto` requests, `None` for pinned
     /// cholesky/mcmc/dense
     pub expected_rejections: Option<f64>,
+    /// total *realized* proposal trials the rejection loop drew for this
+    /// request, populated only when the rejection sampler actually
+    /// served it — `rejection_trials / samples.len()` is the per-sample
+    /// realized cost to audit against `expected_rejections` (`U` of
+    /// Theorem 2) live, per request
+    pub rejection_trials: Option<u64>,
     /// chain telemetry when an MCMC sampler produced the samples
     /// (pinned `mcmc` or steered `auto`), `None` otherwise — sits next
     /// to `expected_rejections` so clients can see both why traffic was
@@ -207,6 +236,11 @@ pub struct SampleResponse {
     /// true when the request reached its version through the canary
     /// traffic slice rather than the live alias or an explicit pin
     pub canary: bool,
+    /// stage timeline for this request (admission through sample; the
+    /// server appends the serialize span).  Always stamped — the wire
+    /// layer serializes it only when the request opted in with
+    /// `trace: true`.
+    pub trace: Vec<StageSpan>,
 }
 
 /// Per-request MCMC chain telemetry, reported in [`SampleResponse`] and
@@ -219,6 +253,14 @@ pub struct McmcInfo {
     pub steps: u64,
     /// accepted moves among those steps
     pub accepts: u64,
+    /// Rao-Blackwellized acceptance mass: the sum over this request's
+    /// steps of the closed-form acceptance probability
+    /// `min(1, ratio · q(i)/q(j))` of each proposed move, computable
+    /// exactly because the item proposals expose their probabilities.
+    /// `expected_accepts / steps` estimates the same acceptance rate as
+    /// `accepts / steps` with strictly lower variance; a persistent gap
+    /// between the two flags a broken proposal-probability computation.
+    pub expected_accepts: f64,
     /// true when the request ran in single-chain (`chain: true`) mode
     pub chain: bool,
 }
@@ -230,6 +272,16 @@ impl McmcInfo {
             0.0
         } else {
             self.accepts as f64 / self.steps as f64
+        }
+    }
+
+    /// Closed-form (Rao-Blackwellized) acceptance rate (0 when no steps
+    /// ran) — the low-variance counterpart of [`McmcInfo::acceptance`].
+    pub fn expected_acceptance(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.expected_accepts / self.steps as f64
         }
     }
 }
@@ -245,6 +297,9 @@ struct Pending {
     /// resolved through the canary traffic slice
     canary: bool,
     enqueued: Timer,
+    /// lifecycle span collector: origin at submit entry, `Admission`
+    /// stamped at enqueue; workers stamp the rest
+    trace: Trace,
     deadline: Option<Instant>,
     reply: Sender<Result<SampleResponse>>,
 }
@@ -302,6 +357,8 @@ pub struct SamplingService {
     workers: Vec<std::thread::JoinHandle<()>>,
     rr: AtomicUsize,
     seed_counter: AtomicU64,
+    /// worst-N completed traces, exported by the `slow` wire op
+    slow: Arc<SlowRing>,
     /// bumped on every swap that displaces a version; shard workers watch
     /// it and drop scratch workspaces for versions that are no longer
     /// live or canary, so a retired version's prepared state cannot
@@ -370,6 +427,7 @@ impl SamplingService {
         let metrics = Arc::new(Metrics::with_shards(config.shards));
         let cache = Arc::new(ConditioningCache::new(config.conditioning_cache_bytes));
         let swap_epoch = Arc::new(AtomicU64::new(0));
+        let slow = Arc::new(SlowRing::new(config.slow_log));
         let shards: Vec<Arc<Shard>> =
             (0..config.shards).map(|_| Arc::new(Shard::new())).collect();
 
@@ -382,6 +440,7 @@ impl SamplingService {
                 let metrics = Arc::clone(&metrics);
                 let cache = Arc::clone(&cache);
                 let swap_epoch = Arc::clone(&swap_epoch);
+                let slow = Arc::clone(&slow);
                 let max_batch = config.max_batch;
                 let steer_threshold = config.steer_threshold;
                 let mcmc_proposal = config.mcmc_proposal;
@@ -395,6 +454,7 @@ impl SamplingService {
                             &metrics,
                             &cache,
                             &swap_epoch,
+                            &slow,
                             steer_threshold,
                             mcmc_proposal,
                             max_batch,
@@ -413,6 +473,7 @@ impl SamplingService {
             workers,
             rr: AtomicUsize::new(0),
             seed_counter: AtomicU64::new(0x5EED),
+            slow,
             swap_epoch,
         }
     }
@@ -601,6 +662,17 @@ impl SamplingService {
         self.shards.len()
     }
 
+    /// The worst-N slow-trace ring (the `slow` wire op; budget from
+    /// [`ServiceConfig::slow_log`]).
+    pub fn slow_ring(&self) -> &SlowRing {
+        &self.slow
+    }
+
+    /// Snapshot of the retained slow traces, slowest first.
+    pub fn slow_traces(&self) -> Vec<SlowTrace> {
+        self.slow.snapshot()
+    }
+
     pub fn config(&self) -> &ServiceConfig {
         &self.config
     }
@@ -640,6 +712,11 @@ impl SamplingService {
     /// through the same channel.
     pub fn submit(&self, req: SampleRequest) -> Receiver<Result<SampleResponse>> {
         let (tx, rx) = channel();
+        // trace origin = submit entry; the admission span closed below
+        // covers validation, alias/canary resolution, and the shard pick.
+        // Tracing reads only the clock — never the RNG — so it cannot
+        // perturb sampled bytes.
+        let mut trace = Trace::begin();
         let seed = req
             .seed
             .unwrap_or_else(|| self.seed_counter.fetch_add(1, Ordering::Relaxed));
@@ -690,12 +767,14 @@ impl SamplingService {
                 )));
                 return rx;
             }
+            trace.stamp(Stage::Admission);
             q.push_back(Pending {
                 req,
                 seed,
                 entry,
                 canary,
                 enqueued: Timer::start(),
+                trace,
                 deadline,
                 reply: tx,
             });
@@ -738,6 +817,7 @@ impl SamplingService {
         metrics: &Metrics,
         cache: &ConditioningCache,
         swap_epoch: &AtomicU64,
+        slow: &SlowRing,
         steer_threshold: f64,
         mcmc_proposal: ProposalKind,
         max_batch: usize,
@@ -762,7 +842,12 @@ impl SamplingService {
                     st = shard.cv.wait(st).unwrap();
                 }
             };
-            let Some((key, batch)) = batch else { break };
+            let Some((key, mut batch)) = batch else { break };
+            // queue-wait span closes for the whole batch at drain time;
+            // in-batch wait behind earlier requests lands in `dequeue`
+            for p in &mut batch {
+                p.trace.stamp(Stage::Queue);
+            }
             // a version was displaced since the last pass: drop warm
             // scratch workspaces for everything that is no longer live or
             // canary, so a retired version's prepared state (e.g. a
@@ -794,6 +879,7 @@ impl SamplingService {
                     ws,
                     metrics,
                     cache,
+                    slow,
                     steer_threshold,
                     mcmc_proposal,
                     batch,
@@ -861,11 +947,13 @@ impl SamplingService {
     /// requests, and a request the model cannot serve (an expired
     /// deadline, [`SamplerKind::Dense`] beyond its size cap) gets an `Err`
     /// reply without poisoning the rest of the batch.
+    #[allow(clippy::too_many_arguments)]
     fn run_batch(
         entry: &ModelEntry,
         ws: &mut WorkerScratch,
         metrics: &Metrics,
         cache: &ConditioningCache,
+        slow: &SlowRing,
         steer_threshold: f64,
         mcmc_proposal: ProposalKind,
         batch: Vec<Pending>,
@@ -874,7 +962,7 @@ impl SamplingService {
         // bare alias — state conditioned for one version is structurally
         // invisible to every other
         let vkey = entry.versioned_key();
-        for p in batch {
+        for mut p in batch {
             if let Some(deadline) = p.deadline {
                 if Instant::now() > deadline {
                     metrics.record_rejected(&entry.name, RejectReason::Deadline);
@@ -886,6 +974,9 @@ impl SamplingService {
                     continue;
                 }
             }
+            // batch-formation + in-batch wait behind earlier requests of
+            // this coalesced batch
+            p.trace.stamp(Stage::Dequeue);
             let mut rng = rng::request_stream(p.seed);
             // unit of work per sample: proposal draws for the rejection
             // sampler, chain steps for MCMC, one sweep for cholesky/dense
@@ -905,6 +996,7 @@ impl SamplingService {
                     &p.req,
                     &mut rng,
                     &mut proposals,
+                    &mut p.trace,
                 ) {
                     Ok((samples, algo, u, info)) => (Ok(samples), algo, u, info),
                     Err(e) => (Err(e), p.req.kind, None, None),
@@ -931,7 +1023,15 @@ impl SamplingService {
                     Err(e) => (Err(e), kind, u, None),
                 }
             };
+            // sampler execution (for conditional requests this span
+            // starts where the conditioning span closed)
+            p.trace.stamp(Stage::Sample);
             let latency = p.enqueued.secs();
+            // `proposals` counts exactly the proposal-loop trial draws
+            // when the rejection sampler served the request — the
+            // realized counterpart of `expected_rejections` (Theorem 2)
+            let rejection_trials =
+                (result.is_ok() && algo == SamplerKind::Rejection).then_some(proposals);
             match result {
                 Ok(samples) => {
                     // attributed to the *resolved* algorithm, so steered
@@ -956,6 +1056,7 @@ impl SamplingService {
                             info.proposal.as_str(),
                             info.steps,
                             info.accepts,
+                            info.expected_accepts,
                         );
                     }
                     // version split rides along with the family-keyed
@@ -967,17 +1068,36 @@ impl SamplingService {
                         latency,
                         p.req.n as u64,
                     );
+                    // fold the stage spans into the per-stage histograms
+                    // at every aggregation level (overall / model / algo /
+                    // version); the server adds the serialize span later
+                    metrics.record_stages(&entry.name, algo.as_str(), entry.version, &p.trace.spans);
                     let _ = p.reply.send(Ok(SampleResponse {
+                        model: entry.name.clone(),
                         samples,
                         proposals,
                         seed: p.seed,
                         latency_secs: latency,
                         algo,
                         expected_rejections,
+                        rejection_trials,
                         mcmc,
                         version: entry.version,
                         canary: p.canary,
+                        trace: p.trace.spans.clone(),
                     }));
+                    // offer the completed timeline to the worst-N ring
+                    // after replying, off the client's critical path
+                    if slow.budget() > 0 {
+                        slow.offer(SlowTrace {
+                            model: entry.name.clone(),
+                            seed: p.seed,
+                            algo: algo.as_str(),
+                            version: entry.version,
+                            total_s: p.trace.total_s(),
+                            spans: p.trace.spans.clone(),
+                        });
+                    }
                 }
                 Err(e) => {
                     metrics.record_error(&entry.name);
@@ -1015,6 +1135,7 @@ impl SamplingService {
         req: &SampleRequest,
         rng: &mut Xoshiro,
         proposals: &mut u64,
+        trace: &mut Trace,
     ) -> Result<(Vec<Vec<usize>>, SamplerKind, Option<f64>, Option<McmcInfo>)> {
         if !req.kind.supports_conditioning() {
             return Err(anyhow!(
@@ -1031,12 +1152,16 @@ impl SamplingService {
         let scratch = ws.conditional.get_or_insert_with(ConditionalScratch::new);
         let z = &entry.marginal.z;
         match cache.get(vkey, &given) {
-            Some(state) => scratch.adopt(state),
+            Some(state) => {
+                scratch.adopt(state);
+                trace.stamp_note(Stage::Conditioning, Some("hit"));
+            }
             None => {
                 scratch
                     .condition(&entry.conditional, z, &given)
                     .map_err(|e| anyhow!("model '{}': {e}", entry.name))?;
                 cache.insert(vkey, scratch.shared_state().expect("just conditioned"));
+                trace.stamp_note(Stage::Conditioning, Some("build"));
             }
         }
         match req.kind {
@@ -1104,11 +1229,12 @@ impl SamplingService {
                             })
                             .collect()
                     };
-                    let (steps, accepts) = scratch.take_mcmc_stats();
+                    let (steps, accepts, expected_accepts) = scratch.take_mcmc_stats();
                     let info = McmcInfo {
                         proposal: scratch.mcmc_proposal_kind(),
                         steps,
                         accepts,
+                        expected_accepts,
                         chain,
                     };
                     return Ok((samples, SamplerKind::Mcmc, Some(u), Some(info)));
@@ -1147,11 +1273,12 @@ impl SamplingService {
                         })
                         .collect()
                 };
-                let (steps, accepts) = scratch.take_mcmc_stats();
+                let (steps, accepts, expected_accepts) = scratch.take_mcmc_stats();
                 let info = McmcInfo {
                     proposal: scratch.mcmc_proposal_kind(),
                     steps,
                     accepts,
+                    expected_accepts,
                     chain,
                 };
                 Ok((samples, SamplerKind::Mcmc, None, Some(info)))
@@ -1231,13 +1358,14 @@ impl SamplingService {
                             })
                             .collect()
                     };
-                    let (steps, accepts) = s.chain_stats();
+                    let (steps, accepts, expected_accepts) = s.chain_stats();
                     Ok((
                         samples,
                         Some(McmcInfo {
                             proposal: s.proposal_kind(),
                             steps,
                             accepts,
+                            expected_accepts,
                             chain,
                         }),
                     ))
@@ -1305,6 +1433,7 @@ mod tests {
                     deadline: None,
                     given: Vec::new(),
                     chain: false,
+                    trace: false,
                 })
                 .unwrap();
             assert_eq!(resp.samples.len(), 5, "{}", kind.as_str());
@@ -1342,6 +1471,7 @@ mod tests {
                     deadline: None,
                     given: given.clone(),
                     chain: false,
+                    trace: false,
                 })
                 .unwrap();
             assert_eq!(resp.samples.len(), 4, "{}", kind.as_str());
@@ -1379,6 +1509,7 @@ mod tests {
             deadline: None,
             given,
             chain: false,
+            trace: false,
         };
         let rx_dup = svc.submit(req(SamplerKind::Cholesky, vec![2, 2]));
         let rx_oob = svc.submit(req(SamplerKind::Cholesky, vec![99]));
@@ -1410,6 +1541,7 @@ mod tests {
             deadline: None,
             given: Vec::new(),
             chain: false,
+            trace: false,
         });
         assert!(err.is_err());
     }
@@ -1425,6 +1557,7 @@ mod tests {
             deadline: None,
             given: Vec::new(),
             chain: false,
+            trace: false,
         };
         // fire a pile of concurrent requests to force coalescing
         let rxs: Vec<_> = (0..20).map(|i| svc.submit(req(100 + (i % 4)))).collect();
@@ -1451,6 +1584,7 @@ mod tests {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
             .collect();
         let responses = svc.sample_batch(reqs);
@@ -1468,6 +1602,7 @@ mod tests {
                     deadline: None,
                     given: Vec::new(),
                     chain: false,
+                    trace: false,
                 })
                 .unwrap();
             assert_eq!(r.samples, single.samples);
@@ -1494,6 +1629,7 @@ mod tests {
             deadline: None,
             given: Vec::new(),
             chain: false,
+            trace: false,
         });
         let chol_rx = svc.submit(SampleRequest {
             model: "big".into(),
@@ -1503,6 +1639,7 @@ mod tests {
             deadline: None,
             given: Vec::new(),
             chain: false,
+            trace: false,
         });
         let err = dense_rx.recv().unwrap();
         assert!(err.is_err(), "oversized dense request must be rejected");
@@ -1539,6 +1676,7 @@ mod tests {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
             .unwrap();
         }
@@ -1563,6 +1701,7 @@ mod tests {
                     deadline: None,
                     given: Vec::new(),
                     chain: false,
+                    trace: false,
                 })
             })
             .collect();
@@ -1603,6 +1742,7 @@ mod tests {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
             .unwrap();
         assert_eq!(resp.algo, SamplerKind::Rejection);
@@ -1618,6 +1758,7 @@ mod tests {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
             .unwrap();
         assert_eq!(resp.samples, pinned.samples);
@@ -1637,6 +1778,7 @@ mod tests {
                 deadline: None,
                 given: vec![3, 17],
                 chain: false,
+                trace: false,
             })
             .unwrap();
         assert_eq!(resp.algo, SamplerKind::Rejection);
@@ -1665,6 +1807,7 @@ mod tests {
             deadline: None,
             given: vec![17, 3], // unsorted on purpose: the key is canonical
             chain: false,
+            trace: false,
         };
         let first = svc.sample(req(41)).unwrap();
         let second = svc.sample(req(42)).unwrap();
@@ -1706,6 +1849,7 @@ mod tests {
             deadline: None,
             given,
             chain: false,
+            trace: false,
         };
         let before = svc.sample(req(41, vec![3, 17])).unwrap();
         assert_eq!((before.version, before.canary), (1, false));
@@ -1754,6 +1898,7 @@ mod tests {
             deadline: None,
             given: Vec::new(),
             chain: false,
+            trace: false,
         };
         let first: Vec<(u64, bool)> = (0..32)
             .map(|s| {

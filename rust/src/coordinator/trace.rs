@@ -1,0 +1,283 @@
+//! Request-lifecycle tracing: monotonic per-stage spans stamped on every
+//! request as it moves admission → shard queue → dequeue/batch formation
+//! → conditioning → sampler → response serialization, plus the bounded
+//! worst-N slow-trace ring the `slow` wire op exports.
+//!
+//! The hard contract is that tracing is **sampling-invisible**: a
+//! [`Trace`] only reads the monotonic clock — it never touches the
+//! request's RNG stream, never branches the sampling path, and costs a
+//! handful of `Instant::now()` calls per request — so sampled bytes are
+//! identical with tracing on or off (`tests/observability.rs` pins
+//! this across shard counts and cache settings).
+//!
+//! Span layout: spans are contiguous and monotone.  [`Trace::stamp`]
+//! closes the segment between the previous stamp (or the trace origin)
+//! and "now" under the given stage label, so `start` offsets are
+//! nondecreasing, each span ends where the next begins, and the sum of
+//! stage durations can never exceed the end-to-end wall time.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// A lifecycle stage of one served request, in pipeline order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// request validation, alias/canary resolution, shard pick
+    Admission,
+    /// waiting in the bounded `(model version, shard)` FIFO
+    Queue,
+    /// batch formation and in-batch wait: from the worker draining the
+    /// queue to this request actually starting to execute
+    Dequeue,
+    /// conditioning-cache lookup / conditioned-state build (`given`-
+    /// bearing requests only)
+    Conditioning,
+    /// sampler execution (all four families)
+    Sample,
+    /// response serialization back onto the wire
+    Serialize,
+}
+
+impl Stage {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::Queue => "queue",
+            Stage::Dequeue => "dequeue",
+            Stage::Conditioning => "conditioning",
+            Stage::Sample => "sample",
+            Stage::Serialize => "serialize",
+        }
+    }
+}
+
+/// The four stages folded into per-stage latency histograms (aggregated,
+/// per-model, per-algo, and per-version) by
+/// [`crate::coordinator::Metrics`].  Admission and dequeue spans stay on
+/// the per-request timeline but are noise-floor cheap, so they are not
+/// histogrammed separately.
+pub const HISTOGRAM_STAGES: [Stage; 4] =
+    [Stage::Queue, Stage::Conditioning, Stage::Sample, Stage::Serialize];
+
+/// One closed span on a request timeline: `[start_s, start_s + dur_s)`
+/// relative to the trace origin (admission time), plus an optional
+/// static annotation (cache disposition on conditioning spans).
+#[derive(Debug, Clone)]
+pub struct StageSpan {
+    pub stage: Stage,
+    /// offset from the trace origin, seconds
+    pub start_s: f64,
+    pub dur_s: f64,
+    /// static annotation: `"hit"` / `"build"` on conditioning spans
+    pub note: Option<&'static str>,
+}
+
+/// Monotonic span collector carried by every in-flight request.  Created
+/// at admission; each [`Trace::stamp`] closes the segment since the
+/// previous stamp under a stage label.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    origin: Instant,
+    /// offset of the last stamp from `origin`, seconds
+    cursor_s: f64,
+    pub spans: Vec<StageSpan>,
+}
+
+impl Trace {
+    /// Start a trace with its origin at "now" (request admission).
+    pub fn begin() -> Trace {
+        Trace { origin: Instant::now(), cursor_s: 0.0, spans: Vec::with_capacity(6) }
+    }
+
+    /// Close the segment from the previous stamp to now as one `stage`
+    /// span; returns its duration in seconds.
+    pub fn stamp(&mut self, stage: Stage) -> f64 {
+        self.stamp_note(stage, None)
+    }
+
+    /// [`Trace::stamp`] with a static annotation on the span.
+    pub fn stamp_note(&mut self, stage: Stage, note: Option<&'static str>) -> f64 {
+        let now_s = self.origin.elapsed().as_secs_f64();
+        let dur_s = (now_s - self.cursor_s).max(0.0);
+        self.spans.push(StageSpan { stage, start_s: self.cursor_s, dur_s, note });
+        self.cursor_s = now_s;
+        dur_s
+    }
+
+    /// Wall time from the origin to the last stamp, seconds.
+    pub fn total_s(&self) -> f64 {
+        self.cursor_s
+    }
+
+    /// Summed duration recorded under `stage`.
+    pub fn stage_total(&self, stage: Stage) -> f64 {
+        self.spans.iter().filter(|s| s.stage == stage).map(|s| s.dur_s).sum()
+    }
+
+    /// The span timeline as a JSON array (the response `trace` block and
+    /// the `slow` op's entry format).
+    pub fn spans_json(spans: &[StageSpan]) -> Json {
+        Json::arr(spans.iter().map(|s| {
+            let mut o = Json::obj()
+                .with("stage", s.stage.as_str())
+                .with("start_s", s.start_s)
+                .with("dur_s", s.dur_s);
+            if let Some(note) = s.note {
+                o.set("note", note);
+            }
+            o
+        }))
+    }
+}
+
+/// One completed end-to-end trace retained by the [`SlowRing`]: enough
+/// request identity to find the offender plus its span timeline.
+#[derive(Debug, Clone)]
+pub struct SlowTrace {
+    pub model: String,
+    pub seed: u64,
+    pub algo: &'static str,
+    pub version: u64,
+    /// end-to-end service latency (admission to response send), seconds
+    pub total_s: f64,
+    pub spans: Vec<StageSpan>,
+}
+
+impl SlowTrace {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("model", self.model.as_str())
+            .with("seed", self.seed)
+            .with("algo", self.algo)
+            .with("version", self.version)
+            .with("total_s", self.total_s)
+            .with("spans", Trace::spans_json(&self.spans))
+    }
+}
+
+/// Bounded worst-N ring of completed traces, ordered slowest-first.  An
+/// offered trace is kept only while it beats the current N-th slowest,
+/// so memory is `O(budget)` regardless of traffic; `budget == 0`
+/// disables retention entirely (offers are dropped without locking
+/// overhead beyond the one branch).
+#[derive(Debug)]
+pub struct SlowRing {
+    budget: usize,
+    inner: Mutex<Vec<SlowTrace>>,
+}
+
+impl SlowRing {
+    pub fn new(budget: usize) -> SlowRing {
+        SlowRing { budget, inner: Mutex::new(Vec::with_capacity(budget.min(64))) }
+    }
+
+    /// Retention budget (the `--slow-log` knob).
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Offer a completed trace; kept only if it ranks among the worst
+    /// `budget` end-to-end latencies seen so far.
+    pub fn offer(&self, t: SlowTrace) {
+        if self.budget == 0 {
+            return;
+        }
+        let mut ring = self.inner.lock().unwrap();
+        if ring.len() == self.budget
+            && ring.last().map(|w| w.total_s >= t.total_s).unwrap_or(false)
+        {
+            return;
+        }
+        // descending by total_s; stable position search keeps insertion O(log n)
+        let pos = ring.partition_point(|w| w.total_s >= t.total_s);
+        ring.insert(pos, t);
+        ring.truncate(self.budget);
+    }
+
+    /// Snapshot, slowest first.
+    pub fn snapshot(&self) -> Vec<SlowTrace> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Number of retained traces.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slow(model: &str, seed: u64, total_s: f64) -> SlowTrace {
+        SlowTrace {
+            model: model.to_string(),
+            seed,
+            algo: "rejection",
+            version: 1,
+            total_s,
+            spans: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn trace_spans_are_contiguous_and_monotone() {
+        let mut t = Trace::begin();
+        t.stamp(Stage::Admission);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.stamp(Stage::Queue);
+        t.stamp_note(Stage::Conditioning, Some("hit"));
+        t.stamp(Stage::Sample);
+        assert_eq!(t.spans.len(), 4);
+        for w in t.spans.windows(2) {
+            // each span ends exactly where the next begins
+            assert!((w[0].start_s + w[0].dur_s - w[1].start_s).abs() < 1e-12);
+            assert!(w[1].start_s >= w[0].start_s);
+        }
+        let sum: f64 = t.spans.iter().map(|s| s.dur_s).sum();
+        assert!((sum - t.total_s()).abs() < 1e-9);
+        assert!(t.stage_total(Stage::Queue) >= 2e-3);
+        assert_eq!(t.spans[2].note, Some("hit"));
+    }
+
+    #[test]
+    fn spans_json_shape() {
+        let mut t = Trace::begin();
+        t.stamp(Stage::Queue);
+        t.stamp_note(Stage::Conditioning, Some("build"));
+        let j = Trace::spans_json(&t.spans);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].str_or("stage", ""), "queue");
+        assert_eq!(arr[1].str_or("note", ""), "build");
+        assert!(arr[0].get("note").is_none());
+    }
+
+    #[test]
+    fn slow_ring_keeps_worst_n_in_order() {
+        let ring = SlowRing::new(3);
+        for (i, total) in [0.010, 0.050, 0.001, 0.030, 0.020, 0.040].iter().enumerate() {
+            ring.offer(slow("m", i as u64, *total));
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 3);
+        let totals: Vec<f64> = snap.iter().map(|t| t.total_s).collect();
+        assert_eq!(totals, vec![0.050, 0.040, 0.030]);
+        // worst-first ordering is part of the wire contract
+        assert!(snap.windows(2).all(|w| w[0].total_s >= w[1].total_s));
+    }
+
+    #[test]
+    fn slow_ring_zero_budget_disables() {
+        let ring = SlowRing::new(0);
+        ring.offer(slow("m", 1, 1.0));
+        assert!(ring.is_empty());
+        assert_eq!(ring.budget(), 0);
+    }
+}

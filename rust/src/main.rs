@@ -288,7 +288,7 @@ fn sample_conditional(
             println!("mcmc[{i}] (|Y| = {}): {y:?}", y.len());
         }
         let cfg = scratch.mcmc_config();
-        let (steps, accepts) = scratch.take_mcmc_stats();
+        let (steps, accepts, _expected) = scratch.take_mcmc_stats();
         println!(
             "mcmc: completion size {} | burn-in cap {} | proposal {} | acceptance {:.2}",
             cfg.size,
@@ -415,6 +415,11 @@ const SERVE_SPECS: &[Spec] = &[
         "fraction of bare-alias traffic served by a staged canary version (0..1)",
     ),
     Spec::opt_default("mcmc-proposal", "tree", MCMC_PROPOSAL_HELP),
+    Spec::opt_default(
+        "slow-log",
+        "32",
+        "worst-N slow-trace retention budget for the `slow` op (0 = disable)",
+    ),
     Spec::opt_default("seed", "0", "rng seed for model generation"),
     Spec::opt("backend", BACKEND_HELP),
     Spec::flag("help", "show help"),
@@ -439,6 +444,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         )?,
         canary_fraction: a.f64_or("canary-fraction", 0.0)?,
         mcmc_proposal: parse_proposal_arg(&a)?,
+        slow_log: a.usize_or("slow-log", ndpp::coordinator::service::DEFAULT_SLOW_LOG)?,
         ..Default::default()
     };
     let deadline_ms = a.u64_or("deadline-ms", 0)?;
@@ -452,7 +458,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     println!(
         "serving with {} shard workers, queue depth {}, deadline {}, \
          conditioning cache {}, steer threshold {:.0}, mcmc proposal {}, \
-         canary fraction {:.2}",
+         canary fraction {:.2}, slow log {}",
         service.shards(),
         service.config().queue_depth,
         service
@@ -467,7 +473,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         },
         service.config().steer_threshold,
         service.config().mcmc_proposal.as_str(),
-        service.config().canary_fraction
+        service.config().canary_fraction,
+        service.slow_ring().budget()
     );
     let seed = a.u64_or("seed", 0)?;
     let mut rng = Xoshiro::seeded(seed);
@@ -491,7 +498,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let addr = a.str_or("addr", "127.0.0.1:7433");
     println!(
         "listening on {addr} (line-delimited JSON; op=sample|batch|models|metrics|\
-         versions|register|promote|rollback|ping|shutdown)"
+         slow|versions|register|promote|rollback|ping|shutdown)"
     );
     server::serve(service, &addr, |bound| println!("bound {bound}"))
 }

@@ -294,9 +294,12 @@ pub struct ConditionalScratch {
     /// per-position proposal probabilities of the running chain
     pos_prob: Vec<f64>,
     /// chain move counters since the last [`ConditionalScratch::
-    /// take_mcmc_stats`] — proposed and accepted
+    /// take_mcmc_stats`] — proposed, accepted, and the Rao-Blackwellized
+    /// sum of closed-form acceptance probabilities over proposed moves
+    /// (expected-acceptance telemetry; self-loops contribute 0)
     mcmc_steps: u64,
     mcmc_accepts: u64,
+    mcmc_expected: f64,
 }
 
 impl Default for ConditionalScratch {
@@ -318,6 +321,7 @@ impl Default for ConditionalScratch {
             pos_prob: Vec::new(),
             mcmc_steps: 0,
             mcmc_accepts: 0,
+            mcmc_expected: 0.0,
         }
     }
 }
@@ -707,12 +711,17 @@ impl ConditionalScratch {
             .unwrap_or(self.mcmc_proposal)
     }
 
-    /// `(proposed, accepted)` chain moves since the last call, for
-    /// per-request acceptance-rate reporting.  Resets the counters.
-    pub fn take_mcmc_stats(&mut self) -> (u64, u64) {
-        let out = (self.mcmc_steps, self.mcmc_accepts);
+    /// `(proposed, accepted, expected_accept_mass)` chain moves since the
+    /// last call, for per-request acceptance-rate reporting — the third
+    /// element is the Rao-Blackwellized sum of closed-form acceptance
+    /// probabilities, so `expected / proposed` estimates the same rate
+    /// `accepted / proposed` does, at lower variance.  Resets the
+    /// counters.
+    pub fn take_mcmc_stats(&mut self) -> (u64, u64, f64) {
+        let out = (self.mcmc_steps, self.mcmc_accepts, self.mcmc_expected);
         self.mcmc_steps = 0;
         self.mcmc_accepts = 0;
+        self.mcmc_expected = 0.0;
         out
     }
 
@@ -824,8 +833,9 @@ impl ConditionalScratch {
         };
         minor.refresh_every = cfg.refresh_every.max(1);
         self.ensure_chain_prop(&st, m);
-        let ConditionalScratch { chain_prop, pos_prob, mcmc_steps, mcmc_accepts, .. } =
-            &mut *self;
+        let ConditionalScratch {
+            chain_prop, pos_prob, mcmc_steps, mcmc_accepts, mcmc_expected, ..
+        } = &mut *self;
         let prop = chain_prop.as_mut().expect("just built");
         fill_pos_probs(prop, Some(tree), minor.items(), pos_prob);
         let burn_cap = cfg.burn_in;
@@ -837,11 +847,12 @@ impl ConditionalScratch {
                             prop: &mut ItemProposal,
                             rng: &mut Xoshiro| {
             *mcmc_steps += 1;
-            let accepted = if variable {
+            let (accepted, p_accept) = if variable {
                 variable_move(minor, jlen, cap, prop, Some(tree), pos_prob, rng)
             } else {
                 swap_move(minor, jlen, prop, Some(tree), pos_prob, rng)
             };
+            *mcmc_expected += p_accept;
             if accepted {
                 *mcmc_accepts += 1;
             }

@@ -163,10 +163,20 @@ impl McmcConfig {
 }
 
 /// Proposed / accepted move counters shared by all chain drivers.
+///
+/// `expected` is the Rao-Blackwellized acceptance mass: the sum over
+/// proposed moves of the closed-form Metropolis acceptance probability
+/// `min(1, ratio · q(i)/q(j))` *before* the accept/reject coin was
+/// flipped (self-loops contribute 0 — they are rejected with
+/// probability 1).  `expected / steps` is an unbiased, lower-variance
+/// estimate of the same acceptance rate `accepts / steps` estimates,
+/// so a realized rate far outside the expected one flags a broken
+/// proposal-probability computation in production.
 #[derive(Debug, Clone, Copy, Default)]
 pub(crate) struct ChainStats {
     pub steps: u64,
     pub accepts: u64,
+    pub expected: f64,
 }
 
 /// Candidate-item proposal distribution: either uniform over the catalog
@@ -261,7 +271,10 @@ impl ItemProposal {
 
 /// One Metropolis swap probe over the free positions `[pinned..]`:
 /// uniform position, proposal-drawn candidate, acceptance
-/// `min(1, ratio · q(i)/q(j))`.  Returns whether the move was applied.
+/// `min(1, ratio · q(i)/q(j))`.  Returns `(applied, p_accept)` where
+/// `p_accept` is the closed-form acceptance probability of the proposed
+/// move (0 for self-loops and nonpositive ratios) — the
+/// Rao-Blackwellized acceptance telemetry fed into [`ChainStats`].
 /// `pos_prob` caches `q` per position and is kept in sync on acceptance.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn swap_move(
@@ -271,23 +284,27 @@ pub(crate) fn swap_move(
     tree: Option<&SampleTree>,
     pos_prob: &mut [f64],
     rng: &mut Xoshiro,
-) -> bool {
+) -> (bool, f64) {
     let free = minor.items().len() - pinned;
     let pos = pinned + rng.below(free);
     let (j, qj) = prop.draw(tree, rng);
     if minor.items().contains(&j) {
-        return false; // self-loop: proposal keeps Y unchanged
+        return (false, 0.0); // self-loop: proposal keeps Y unchanged
     }
     // swap_if computes the acceptance ratio once and reuses it for the
     // inverse update; the uniform is only drawn for positive ratios.  For
     // the uniform proposal q(i)/q(j) = 1 exactly, reproducing the
     // symmetric-proposal chain bit for bit.
     let qi = pos_prob[pos];
-    let (_, accepted) = minor.swap_if(pos, j, |ratio| rng.uniform() < ratio * (qi / qj));
+    let mut p_accept = 0.0;
+    let (_, accepted) = minor.swap_if(pos, j, |ratio| {
+        p_accept = (ratio * (qi / qj)).min(1.0);
+        rng.uniform() < ratio * (qi / qj)
+    });
     if accepted {
         pos_prob[pos] = qj;
     }
-    accepted
+    (accepted, p_accept)
 }
 
 /// One variable-size chain move: up with probability 0.4, down with 0.4,
@@ -302,7 +319,10 @@ pub(crate) fn swap_move(
 /// with `free` the number of unpinned positions *before* the move.
 /// Out-of-range proposals (up at the `cap`, down/swap on an empty free
 /// region, candidate already in `Y`) are lazy self-loops — valid
-/// Metropolis moves that keep the kernel reversible.
+/// Metropolis moves that keep the kernel reversible.  Returns
+/// `(applied, p_accept)` like [`swap_move`]: the second element is the
+/// closed-form acceptance probability of the proposed move (0 on
+/// self-loops), accumulated into [`ChainStats::expected`].
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn variable_move(
     minor: &mut IncrementalMinor<'_>,
@@ -312,40 +332,48 @@ pub(crate) fn variable_move(
     tree: Option<&SampleTree>,
     pos_prob: &mut Vec<f64>,
     rng: &mut Xoshiro,
-) -> bool {
+) -> (bool, f64) {
     let free = minor.items().len() - pinned;
     let u = rng.uniform();
     if u < 0.4 {
         // up-move
         if minor.items().len() >= cap {
-            return false;
+            return (false, 0.0);
         }
         let (j, qj) = prop.draw(tree, rng);
         if minor.items().contains(&j) {
-            return false;
+            return (false, 0.0);
         }
         let reverse = 1.0 / ((free + 1) as f64 * qj);
-        let (_, accepted) = minor.grow_if(j, |ratio| rng.uniform() < ratio * reverse);
+        let mut p_accept = 0.0;
+        let (_, accepted) = minor.grow_if(j, |ratio| {
+            p_accept = (ratio * reverse).min(1.0);
+            rng.uniform() < ratio * reverse
+        });
         if accepted {
             pos_prob.push(qj);
         }
-        accepted
+        (accepted, p_accept)
     } else if u < 0.8 {
         // down-move
         if free == 0 {
-            return false;
+            return (false, 0.0);
         }
         let pos = pinned + rng.below(free);
         let qi = pos_prob[pos];
-        let (_, accepted) = minor.shrink_if(pos, |ratio| rng.uniform() < ratio * free as f64 * qi);
+        let mut p_accept = 0.0;
+        let (_, accepted) = minor.shrink_if(pos, |ratio| {
+            p_accept = (ratio * free as f64 * qi).min(1.0);
+            rng.uniform() < ratio * free as f64 * qi
+        });
         if accepted {
             pos_prob.remove(pos); // mirror IncrementalMinor's Vec::remove
         }
-        accepted
+        (accepted, p_accept)
     } else {
         // swap keeps the size — same move as the fixed-size chain
         if free == 0 {
-            return false;
+            return (false, 0.0);
         }
         swap_move(minor, pinned, prop, tree, pos_prob, rng)
     }
@@ -515,9 +543,11 @@ impl<'a> McmcSampler<'a> {
         }
     }
 
-    /// `(proposed, accepted)` move totals since construction.
-    pub fn chain_stats(&self) -> (u64, u64) {
-        (self.stats.steps, self.stats.accepts)
+    /// `(proposed, accepted, expected_accept_mass)` move totals since
+    /// construction — the third element is the Rao-Blackwellized sum of
+    /// closed-form acceptance probabilities (see [`ChainStats`]).
+    pub fn chain_stats(&self) -> (u64, u64, f64) {
+        (self.stats.steps, self.stats.accepts, self.stats.expected)
     }
 
     /// The greedy-MAP warm start (lazy; deterministic in the kernel).  The
@@ -547,7 +577,7 @@ impl<'a> McmcSampler<'a> {
     fn step(&mut self, minor: &mut IncrementalMinor<'_>, rng: &mut Xoshiro) -> bool {
         self.proposal();
         self.stats.steps += 1;
-        let accepted = swap_move(
+        let (accepted, p_accept) = swap_move(
             minor,
             0,
             self.prop.as_mut().expect("proposal ready"),
@@ -555,6 +585,7 @@ impl<'a> McmcSampler<'a> {
             &mut self.pos_prob,
             rng,
         );
+        self.stats.expected += p_accept;
         if accepted {
             self.stats.accepts += 1;
         }
@@ -752,8 +783,10 @@ impl<'a> VariableMcmcSampler<'a> {
         }
     }
 
-    pub fn chain_stats(&self) -> (u64, u64) {
-        (self.stats.steps, self.stats.accepts)
+    /// `(proposed, accepted, expected_accept_mass)` as
+    /// [`McmcSampler::chain_stats`].
+    pub fn chain_stats(&self) -> (u64, u64, f64) {
+        (self.stats.steps, self.stats.accepts, self.stats.expected)
     }
 
     fn proposal(&mut self) -> &mut ItemProposal {
@@ -793,7 +826,7 @@ impl<'a> VariableMcmcSampler<'a> {
     fn step_or_reseed(&mut self, minor: &mut IncrementalMinor<'a>, rng: &mut Xoshiro) {
         self.proposal();
         self.stats.steps += 1;
-        let accepted = variable_move(
+        let (accepted, p_accept) = variable_move(
             minor,
             0,
             self.cap,
@@ -802,6 +835,7 @@ impl<'a> VariableMcmcSampler<'a> {
             &mut self.pos_prob,
             rng,
         );
+        self.stats.expected += p_accept;
         if accepted {
             self.stats.accepts += 1;
         }

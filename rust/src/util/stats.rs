@@ -95,6 +95,34 @@ impl ExpHistogram {
         }
     }
 
+    /// Bucket geometry base: bucket `i` covers `[base * 2^i, base * 2^(i+1))`
+    /// (with everything `<= base` folded into bucket 0).
+    pub fn base(&self) -> f64 {
+        self.base
+    }
+
+    /// Non-cumulative per-bucket observation counts, in bucket order.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Upper edge of bucket `i` (`base * 2^(i+1)`); the last bucket is
+    /// open-ended and reported by the same formula for export purposes.
+    pub fn bucket_upper_edge(&self, i: usize) -> f64 {
+        self.base * 2f64.powi(i as i32 + 1)
+    }
+
+    /// `(upper_edge, count)` pairs for every non-empty bucket — the compact
+    /// form the wire metrics export and the Prometheus renderer build on.
+    pub fn nonzero_buckets(&self) -> Vec<(f64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (self.bucket_upper_edge(i), c))
+            .collect()
+    }
+
     /// Approximate quantile from bucket boundaries (upper edge).
     pub fn quantile(&self, q: f64) -> f64 {
         if self.count == 0 {
@@ -146,5 +174,22 @@ mod tests {
         // true median 5e-3; bucketed answer within a 2x bracket
         assert!(p50 >= 5e-3 / 2.0 && p50 <= 5e-3 * 4.0, "p50={p50}");
         assert!((h.mean() - 5.005e-3).abs() < 1e-4);
+    }
+
+    #[test]
+    fn histogram_bucket_export() {
+        let mut h = ExpHistogram::new(1e-6, 40);
+        h.record(3e-6); // bucket 1: [2e-6, 4e-6)
+        h.record(3e-6);
+        h.record(1e-3);
+        assert_eq!(h.base(), 1e-6);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), h.count);
+        let nz = h.nonzero_buckets();
+        assert_eq!(nz.len(), 2);
+        assert_eq!(nz[0].1, 2);
+        assert!((nz[0].0 - 4e-6).abs() < 1e-18);
+        // edges strictly increase across the export
+        assert!(nz.windows(2).all(|w| w[0].0 < w[1].0));
+        assert_eq!(h.bucket_upper_edge(0), 2e-6);
     }
 }

@@ -129,8 +129,16 @@ fn conformance_on(kernel: &NdppKernel, m: usize, j: &[usize], seed: u64) {
     let f_mcmc = empirical_from(m, N, &mut rng, |r| scratch.sample_mcmc(kernel, &tree, r).0);
     assert_eq!(tree::build_count(), builds_before, "conditional mcmc rebuilt the tree");
     check("conditional-mcmc", &f_mcmc, &cond_want);
-    let (steps, accepts) = scratch.take_mcmc_stats();
+    let (steps, accepts, expected) = scratch.take_mcmc_stats();
     assert!(steps > 0 && accepts > 0, "chain never moved: {steps} steps, {accepts} accepts");
+    // Rao-Blackwellized acceptance mass tracks the realized count: both
+    // estimate the same rate, the closed-form one with lower variance
+    assert!(expected > 0.0 && expected <= steps as f64, "expected mass out of range: {expected}");
+    let (rate, exp_rate) = (accepts as f64 / steps as f64, expected / steps as f64);
+    assert!(
+        (rate - exp_rate).abs() < 0.15,
+        "realized acceptance {rate:.3} far from closed-form expectation {exp_rate:.3}"
+    );
 
     // the variable-size chain targets the FULL conditional law — the same
     // distribution the rejection path samples, no size conditioning
@@ -194,6 +202,7 @@ fn empty_given_is_byte_identical_to_unconditional() {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
             .unwrap();
         let plain = svc
@@ -205,6 +214,7 @@ fn empty_given_is_byte_identical_to_unconditional() {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
             .unwrap();
         assert_eq!(with_empty.samples, plain.samples, "kind={}", kind.as_str());
@@ -277,6 +287,7 @@ fn replay_across_shard_counts_and_submission_modes() {
                         deadline: None,
                         given: given.to_vec(),
                         chain: false,
+                        trace: false,
                     })
                     .unwrap();
                 for y in &resp.samples {
@@ -310,6 +321,7 @@ fn replay_across_shard_counts_and_submission_modes() {
                 deadline: None,
                 given: given.to_vec(),
                 chain: false,
+                trace: false,
             })
         })
         .collect();
@@ -363,6 +375,7 @@ fn service_conditional_rejection_is_prep_free() {
                 deadline: None,
                 given: vec![7, 30],
                 chain: false,
+                trace: false,
             })
             .unwrap();
         assert_eq!(resp.samples.len(), 2);
@@ -394,6 +407,7 @@ fn infeasible_conditional_rejection_is_refused() {
             deadline: None,
             given: vec![0],
             chain: false,
+            trace: false,
         })
         .unwrap_err();
     assert!(format!("{err:#}").contains("infeasible"), "got: {err:#}");
@@ -413,6 +427,7 @@ fn infeasible_conditional_rejection_is_refused() {
             deadline: None,
             given: vec![0],
             chain: false,
+            trace: false,
         })
         .unwrap();
     assert_eq!(auto.algo, SamplerKind::Mcmc, "auto must steer, not refuse");
@@ -434,6 +449,7 @@ fn infeasible_conditional_rejection_is_refused() {
             deadline: None,
             given: vec![0],
             chain: false,
+            trace: false,
         })
         .unwrap();
     assert_eq!(ok.algo, SamplerKind::Mcmc);
@@ -579,6 +595,7 @@ fn cache_run(
                     deadline: None,
                     given: given.to_vec(),
                     chain: false,
+                    trace: false,
                 });
                 idx += 1;
             }
@@ -720,6 +737,7 @@ fn steering_auto_falls_through_to_mcmc_and_matches_the_conditional_law() {
             deadline: None,
             given: j.to_vec(),
             chain: false,
+            trace: false,
         })
         .unwrap();
     assert_eq!(resp.algo, SamplerKind::Mcmc, "auto must steer to mcmc");
@@ -751,6 +769,7 @@ fn steering_auto_falls_through_to_mcmc_and_matches_the_conditional_law() {
             deadline: None,
             given: j.to_vec(),
             chain: false,
+            trace: false,
         })
         .unwrap_err();
     assert!(format!("{err:#}").contains("infeasible"), "got: {err:#}");
@@ -778,6 +797,7 @@ fn steering_feasible_auto_is_byte_identical_to_pinned_rejection() {
             deadline: None,
             given: given.clone(),
             chain: false,
+            trace: false,
         })
         .unwrap();
     assert_eq!(auto.algo, SamplerKind::Rejection);
@@ -790,6 +810,7 @@ fn steering_feasible_auto_is_byte_identical_to_pinned_rejection() {
             deadline: None,
             given,
             chain: false,
+            trace: false,
         })
         .unwrap();
     assert_eq!(auto.samples, pinned.samples, "steering changed sampled bytes");

@@ -1,0 +1,335 @@
+//! Request-lifecycle tracing end to end: span monotonicity and
+//! stage-sum ≤ end-to-end on every algorithm (conditional and
+//! unconditional), the sampling-invisibility contract (byte-identical
+//! replay with tracing on/off, across shard counts and cache settings),
+//! worst-N slow-ring boundedness and ordering under churn, per-stage
+//! histogram aggregation at every level, the realized-vs-expected
+//! telemetry (rejection trials, Rao-Blackwellized MCMC acceptance), and
+//! the Prometheus text exposition.
+
+use ndpp::coordinator::{
+    SampleRequest, SamplerKind, SamplingService, ServiceConfig, Stage,
+};
+use ndpp::ndpp::NdppKernel;
+use ndpp::rng::Xoshiro;
+
+fn test_kernel(seed: u64, m: usize, k: usize) -> NdppKernel {
+    let mut rng = Xoshiro::seeded(seed);
+    NdppKernel::random_ondpp(m, k, &mut rng)
+}
+
+fn service(shards: usize, cache_bytes: usize, slow_log: usize) -> SamplingService {
+    SamplingService::new(ServiceConfig {
+        shards,
+        max_batch: 8,
+        conditioning_cache_bytes: cache_bytes,
+        slow_log,
+        ..Default::default()
+    })
+}
+
+fn req(model: &str, seed: u64, kind: SamplerKind, given: Vec<usize>, trace: bool) -> SampleRequest {
+    SampleRequest {
+        model: model.into(),
+        n: 3,
+        seed: Some(seed),
+        kind,
+        given,
+        trace,
+        ..Default::default()
+    }
+}
+
+/// Acceptance criterion: every response's span timeline is monotone and
+/// contiguous — spans tile `[0, total]`, so the per-stage sum can never
+/// exceed the end-to-end wall time — for every algorithm, conditional
+/// and unconditional alike, and conditioning spans carry the cache
+/// disposition note.
+#[test]
+fn spans_are_monotone_and_sum_within_end_to_end() {
+    let svc = service(2, 1 << 20, 8);
+    svc.register("m", test_kernel(3, 48, 4));
+    let cases: Vec<(SamplerKind, Vec<usize>)> = vec![
+        (SamplerKind::Cholesky, vec![]),
+        (SamplerKind::Rejection, vec![]),
+        (SamplerKind::Mcmc, vec![]),
+        (SamplerKind::Dense, vec![]),
+        (SamplerKind::Auto, vec![1, 5]),
+        (SamplerKind::Cholesky, vec![1, 5]),
+        (SamplerKind::Mcmc, vec![2, 7]),
+    ];
+    for (kind, given) in cases {
+        let conditional = !given.is_empty();
+        let resp = svc.sample(req("m", 17, kind, given, true)).unwrap();
+        let spans = &resp.trace;
+        assert!(spans.len() >= 4, "{kind:?}: too few spans: {}", spans.len());
+        assert_eq!(spans[0].stage, Stage::Admission, "{kind:?}");
+        assert_eq!(spans.last().unwrap().stage, Stage::Sample, "{kind:?}");
+        // monotone, contiguous, nonnegative
+        assert!((spans[0].start_s).abs() < 1e-12);
+        for w in spans.windows(2) {
+            assert!(w[1].start_s >= w[0].start_s, "{kind:?}: non-monotone starts");
+            assert!(
+                (w[0].start_s + w[0].dur_s - w[1].start_s).abs() < 1e-9,
+                "{kind:?}: spans not contiguous"
+            );
+        }
+        assert!(spans.iter().all(|s| s.dur_s >= 0.0), "{kind:?}: negative span");
+        // the stage sum can never exceed the end-to-end latency the
+        // service measured from its own enqueue timer
+        let sum: f64 = spans.iter().map(|s| s.dur_s).sum();
+        let end = spans.last().unwrap();
+        assert!(
+            sum <= end.start_s + end.dur_s + 1e-9,
+            "{kind:?}: stage sum {sum} exceeds timeline end"
+        );
+        // conditioning spans appear exactly on conditional requests and
+        // carry the cache disposition
+        let cond: Vec<_> =
+            spans.iter().filter(|s| s.stage == Stage::Conditioning).collect();
+        if conditional {
+            assert_eq!(cond.len(), 1, "{kind:?}: expected one conditioning span");
+            assert!(
+                matches!(cond[0].note, Some("hit") | Some("build")),
+                "{kind:?}: conditioning span missing disposition note"
+            );
+        } else {
+            assert!(cond.is_empty(), "{kind:?}: unconditional request grew a conditioning span");
+        }
+    }
+    // a repeat basket is a cache hit, and the note says so
+    let resp = svc.sample(req("m", 18, SamplerKind::Cholesky, vec![1, 5], true)).unwrap();
+    let note = resp
+        .trace
+        .iter()
+        .find(|s| s.stage == Stage::Conditioning)
+        .and_then(|s| s.note);
+    assert_eq!(note, Some("hit"), "repeat basket should adopt cached state");
+}
+
+/// Acceptance criterion (the hard contract): tracing is
+/// sampling-invisible.  Byte-identical samples with `trace` on vs off,
+/// across shard counts 1/2/8 and with the conditioning cache on and
+/// off.
+#[test]
+fn tracing_never_perturbs_sampled_bytes() {
+    let collect = |shards: usize, cache: usize, trace: bool| -> Vec<Vec<Vec<usize>>> {
+        let svc = service(shards, cache, 8);
+        svc.register("m", test_kernel(11, 48, 4));
+        let mut out = Vec::new();
+        for kind in SamplerKind::ALL {
+            for seed in [1u64, 99, 12345] {
+                out.push(svc.sample(req("m", seed, kind, vec![], trace)).unwrap().samples);
+            }
+        }
+        for seed in [7u64, 8, 9] {
+            out.push(
+                svc.sample(req("m", seed, SamplerKind::Auto, vec![1, 5], trace))
+                    .unwrap()
+                    .samples,
+            );
+        }
+        out
+    };
+    let baseline = collect(1, 1 << 20, false);
+    for shards in [1usize, 2, 8] {
+        for cache in [0usize, 1 << 20] {
+            assert_eq!(
+                baseline,
+                collect(shards, cache, true),
+                "traced samples diverged at shards={shards}, cache={cache}"
+            );
+            assert_eq!(
+                baseline,
+                collect(shards, cache, false),
+                "untraced samples diverged at shards={shards}, cache={cache}"
+            );
+        }
+    }
+}
+
+/// Acceptance criterion: the slow ring is bounded at its budget under
+/// churn, keeps the worst-N by end-to-end latency in slowest-first
+/// order, and a zero budget disables retention.
+#[test]
+fn slow_ring_is_bounded_and_ordered_under_churn() {
+    let svc = service(2, 1 << 20, 4);
+    svc.register("m", test_kernel(5, 48, 4));
+    for seed in 0..40u64 {
+        svc.sample(req("m", seed, SamplerKind::Cholesky, vec![], false)).unwrap();
+    }
+    let snap = svc.slow_traces();
+    assert!(!snap.is_empty(), "traffic must populate the ring");
+    assert!(snap.len() <= 4, "ring exceeded its budget: {}", snap.len());
+    assert!(
+        snap.windows(2).all(|w| w[0].total_s >= w[1].total_s),
+        "ring not ordered slowest-first"
+    );
+    for t in &snap {
+        assert_eq!(t.model, "m");
+        assert_eq!(t.version, 1);
+        assert!(!t.spans.is_empty());
+        // the retained total matches its own span timeline
+        let end = t.spans.last().unwrap();
+        assert!((t.total_s - (end.start_s + end.dur_s)).abs() < 1e-9);
+    }
+
+    let off = service(1, 0, 0);
+    off.register("m", test_kernel(5, 32, 4));
+    off.sample(req("m", 1, SamplerKind::Cholesky, vec![], false)).unwrap();
+    assert!(off.slow_traces().is_empty(), "budget 0 must disable retention");
+}
+
+/// Per-stage histograms aggregate at all four levels — overall,
+/// per-model, per-algo, per-version — with p50/p95/p99, and the
+/// per-model block exports p99 plus raw bucket counts.
+#[test]
+fn stage_histograms_aggregate_at_every_level() {
+    let svc = service(2, 1 << 20, 8);
+    svc.register("m", test_kernel(7, 48, 4));
+    for seed in 0..6u64 {
+        svc.sample(req("m", seed, SamplerKind::Cholesky, vec![], false)).unwrap();
+        svc.sample(req("m", seed, SamplerKind::Auto, vec![1, 5], false)).unwrap();
+    }
+    let metrics = svc.metrics();
+    assert!(metrics.stage_count("m", Stage::Queue) >= 12);
+    assert!(metrics.stage_count("m", Stage::Sample) >= 12);
+    assert!(metrics.stage_count("m", Stage::Conditioning) >= 6);
+    assert!(metrics.stage_total("m", Stage::Sample) > 0.0);
+
+    let snap = metrics.snapshot();
+    let m = snap.get("m").expect("model block");
+    // per-model: p99 + raw buckets + stage histograms
+    assert!(m.f64_or("latency_p99_s", 0.0) > 0.0);
+    let buckets = m.get("latency_buckets").and_then(|b| b.as_arr()).expect("buckets");
+    assert!(!buckets.is_empty());
+    let total: f64 = buckets
+        .iter()
+        .map(|pair| pair.as_arr().map(|p| p[1].as_f64().unwrap_or(0.0)).unwrap_or(0.0))
+        .sum();
+    assert_eq!(total as u64, 12, "bucket counts must sum to the request count");
+    let stages = m.get("stages").expect("per-model stages");
+    for key in ["queue", "sample"] {
+        let h = stages.get(key).unwrap_or_else(|| panic!("stage '{key}' missing"));
+        assert!(h.f64_or("count", 0.0) >= 12.0, "stage '{key}' undercounted");
+        assert!(h.f64_or("p99_s", -1.0) >= h.f64_or("p50_s", 0.0));
+        assert!(!h.get("buckets").and_then(|b| b.as_arr()).expect("stage buckets").is_empty());
+    }
+    assert!(stages.get("conditioning").expect("conditioning").f64_or("count", 0.0) >= 6.0);
+    // per-algo: latency quantiles + stage split per resolved algorithm
+    let algos = m.get("algos").expect("algos");
+    for algo in ["cholesky", "rejection"] {
+        let a = algos.get(algo).unwrap_or_else(|| panic!("algo '{algo}' missing"));
+        assert!(a.f64_or("latency_p99_s", 0.0) > 0.0);
+        assert!(a.get("stages").expect("algo stages").get("sample").is_some());
+    }
+    // per-version: same shape under the version that served the traffic
+    let v1 = m.get("versions").and_then(|v| v.get("1")).expect("version block");
+    assert!(v1.f64_or("latency_p99_s", 0.0) > 0.0);
+    assert!(v1.get("stages").expect("version stages").get("sample").is_some());
+    // service-wide aggregate under the reserved key
+    let overall = snap.get("_overall").expect("_overall");
+    assert!(overall.get("latency").expect("overall latency").f64_or("count", 0.0) >= 12.0);
+    assert!(overall.get("stages").expect("overall stages").get("queue").is_some());
+}
+
+/// Responses carry the realized-vs-expected telemetry: rejection trials
+/// next to the Theorem 2 expectation, and the Rao-Blackwellized
+/// expected acceptance next to the realized rate — both also aggregated
+/// in the metrics.
+#[test]
+fn realized_vs_expected_telemetry() {
+    let svc = service(1, 1 << 20, 8);
+    svc.register("m", test_kernel(13, 48, 4));
+    // rejection: realized trials ≥ n (each sample needs ≥ 1 proposal),
+    // present exactly when the rejection sampler served the request
+    let r = svc.sample(req("m", 5, SamplerKind::Rejection, vec![], false)).unwrap();
+    let trials = r.rejection_trials.expect("rejection-served response must report trials");
+    assert!(trials >= r.samples.len() as u64);
+    assert_eq!(trials, r.proposals, "for rejection, proposals are exactly the trials");
+    assert!(r.expected_rejections.unwrap() >= 1.0, "U >= 1 by construction");
+    let c = svc.sample(req("m", 5, SamplerKind::Cholesky, vec![], false)).unwrap();
+    assert!(c.rejection_trials.is_none(), "cholesky never reports trials");
+
+    // mcmc: expected acceptance is a probability, strictly positive for
+    // a moving chain, and within a plausible distance of the realized
+    // rate over a few hundred steps
+    let mut steps_total = 0u64;
+    for seed in 0..5u64 {
+        let m = svc.sample(req("m", seed, SamplerKind::Mcmc, vec![], false)).unwrap();
+        let info = m.mcmc.expect("mcmc response carries chain telemetry");
+        assert!(info.steps > 0);
+        assert!(info.expected_accepts >= 0.0 && info.expected_accepts <= info.steps as f64);
+        assert!(info.expected_acceptance() >= 0.0 && info.expected_acceptance() <= 1.0);
+        steps_total += info.steps;
+    }
+    assert!(steps_total > 0);
+    let (_requests, steps, accepts) = svc.metrics().mcmc_counts("m", "tree");
+    let expected = svc.metrics().mcmc_expected("m", "tree");
+    assert!(expected > 0.0, "aggregated expected-acceptance mass must accumulate");
+    // both estimators target the same acceptance rate
+    let realized = accepts as f64 / steps.max(1) as f64;
+    let rb = expected / steps.max(1) as f64;
+    assert!(
+        (realized - rb).abs() < 0.2,
+        "realized {realized:.3} vs Rao-Blackwellized {rb:.3} acceptance diverged"
+    );
+}
+
+/// The Prometheus exposition is well-formed: every line is a comment or
+/// a `name{labels} value` sample, histogram buckets are cumulative and
+/// end in a `+Inf` bucket equal to `_count`, and the stage series is
+/// present for traffic that ran.
+#[test]
+fn prometheus_exposition_is_parseable() {
+    let svc = service(2, 1 << 20, 8);
+    svc.register("m", test_kernel(19, 48, 4));
+    for seed in 0..4u64 {
+        svc.sample(req("m", seed, SamplerKind::Rejection, vec![], false)).unwrap();
+        svc.sample(req("m", seed, SamplerKind::Mcmc, vec![], false)).unwrap();
+    }
+    let text = svc.metrics().prometheus();
+    assert!(!text.is_empty());
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("unparseable line: {line}"));
+        assert!(
+            value.parse::<f64>().is_ok() || value == "+Inf",
+            "bad value in: {line}"
+        );
+        let name = series.split('{').next().unwrap();
+        assert!(
+            name.starts_with("ndpp_") && name.is_ascii(),
+            "bad metric name in: {line}"
+        );
+        if let Some(rest) = series.strip_prefix(name) {
+            if !rest.is_empty() {
+                assert!(rest.starts_with('{') && rest.ends_with('}'), "bad labels: {line}");
+            }
+        }
+    }
+    // per-model latency histogram: cumulative buckets, +Inf == _count
+    let bucket_counts: Vec<f64> = text
+        .lines()
+        .filter(|l| l.starts_with("ndpp_latency_seconds_bucket{model=\"m\""))
+        .map(|l| l.rsplit_once(' ').unwrap().1.parse::<f64>().unwrap())
+        .collect();
+    assert!(bucket_counts.len() >= 2, "need at least one finite bucket plus +Inf");
+    assert!(
+        bucket_counts.windows(2).all(|w| w[1] >= w[0]),
+        "histogram buckets must be cumulative"
+    );
+    let count_line = text
+        .lines()
+        .find(|l| l.starts_with("ndpp_latency_seconds_count{model=\"m\""))
+        .expect("_count series");
+    let count: f64 = count_line.rsplit_once(' ').unwrap().1.parse().unwrap();
+    assert_eq!(count, *bucket_counts.last().unwrap(), "+Inf bucket must equal _count");
+    assert_eq!(count, 8.0, "8 requests served");
+    // stage and mcmc series rode along
+    assert!(text.contains("ndpp_stage_seconds_bucket{model=\"m\",stage=\"sample\""));
+    assert!(text.contains("ndpp_mcmc_expected_accepts_total{model=\"m\",proposal=\"tree\""));
+}

@@ -69,6 +69,7 @@ fn service_matches_direct_sampler_for_every_algorithm() {
                     deadline: None,
                     given: Vec::new(),
                     chain: false,
+                    trace: false,
                 })
                 .unwrap();
             assert_eq!(
@@ -101,6 +102,7 @@ fn coalesced_mcmc_requests_do_not_leak_chain_state() {
         deadline: None,
         given: Vec::new(),
         chain: false,
+        trace: false,
     };
     let rxs: Vec<_> = (0..12).map(|_| svc.submit(req())).collect();
     let responses: Vec<_> = rxs
@@ -177,6 +179,7 @@ fn replay_is_stable_across_service_instances() {
                     deadline: None,
                     given: Vec::new(),
                     chain: false,
+                    trace: false,
                 })
                 .unwrap()
                 .samples

@@ -42,6 +42,7 @@ fn concurrent_multi_model_load() {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
         })
         .collect();
@@ -74,6 +75,7 @@ fn errors_do_not_poison_the_pipeline() {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
         })
         .collect();
@@ -103,6 +105,7 @@ fn determinism_under_batching_pressure() {
             deadline: None,
             given: Vec::new(),
             chain: false,
+            trace: false,
         })
         .unwrap();
     // flood with noise and re-issue
@@ -116,6 +119,7 @@ fn determinism_under_batching_pressure() {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
         })
         .collect();
@@ -128,6 +132,7 @@ fn determinism_under_batching_pressure() {
             deadline: None,
             given: Vec::new(),
             chain: false,
+            trace: false,
         })
         .unwrap();
     for rx in noise {

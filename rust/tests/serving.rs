@@ -47,6 +47,7 @@ fn identical_samples_across_shard_counts_and_submission_modes() {
                         deadline: None,
                         given: Vec::new(),
                         chain: false,
+                        trace: false,
                     })
                     .unwrap()
                     .samples,
@@ -73,6 +74,7 @@ fn identical_samples_across_shard_counts_and_submission_modes() {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
         })
         .collect();
@@ -118,6 +120,7 @@ fn stress_many_clients_many_models_deterministic() {
                                 deadline: None,
                                 given: Vec::new(),
                                 chain: false,
+                                trace: false,
                             })
                             .unwrap();
                         assert_eq!(resp.samples.len(), 2);
@@ -148,6 +151,7 @@ fn stress_many_clients_many_models_deterministic() {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
             .unwrap();
         assert_eq!(
@@ -178,6 +182,7 @@ fn queue_full_rejects_without_poisoning_neighbors() {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
         })
         .collect();
@@ -193,6 +198,7 @@ fn queue_full_rejects_without_poisoning_neighbors() {
                 deadline: None,
                 given: Vec::new(),
                 chain: false,
+                trace: false,
             })
         })
         .collect();
@@ -233,6 +239,7 @@ fn queue_full_rejects_without_poisoning_neighbors() {
             deadline: None,
             given: Vec::new(),
             chain: false,
+            trace: false,
         })
         .unwrap();
     assert_eq!(after.samples.len(), 1);
@@ -253,6 +260,7 @@ fn expired_deadline_is_rejected_and_counted() {
         deadline: None,
         given: Vec::new(),
         chain: false,
+        trace: false,
     });
     let doomed = svc.submit(SampleRequest {
         model: "m".into(),
@@ -262,6 +270,7 @@ fn expired_deadline_is_rejected_and_counted() {
         deadline: Some(Duration::from_micros(1)),
         given: Vec::new(),
         chain: false,
+        trace: false,
     });
     let fine = svc.submit(SampleRequest {
         model: "m".into(),
@@ -271,6 +280,7 @@ fn expired_deadline_is_rejected_and_counted() {
         deadline: Some(Duration::from_secs(60)),
         given: Vec::new(),
         chain: false,
+        trace: false,
     });
     let err = doomed.recv().unwrap().unwrap_err();
     assert!(format!("{err:#}").contains("deadline"), "got: {err:#}");
@@ -330,6 +340,7 @@ fn cache_stress_concurrent_eviction_churn_stays_correct() {
                                     deadline: None,
                                     given: given.to_vec(),
                                     chain: false,
+                                    trace: false,
                                 })
                                 .unwrap();
                             assert_eq!(resp.samples.len(), 2);
@@ -395,6 +406,7 @@ fn cache_stress_concurrent_eviction_churn_stays_correct() {
                 deadline: None,
                 given: given.clone(),
                 chain: false,
+                trace: false,
             })
             .unwrap();
         assert_eq!(
@@ -422,6 +434,7 @@ fn reregister_same_name_creates_new_version_not_silent_replacement() {
             deadline: None,
             given: Vec::new(),
             chain: false,
+            trace: false,
         })
         .unwrap()
     };

@@ -49,7 +49,13 @@ Gates (all on the quick-mode numbers CI produces):
   control, whose scores are exactly the live model's) must have been
   promoted, and every row's recorded ``promoted`` decision must be
   consistent with its own scores: promoted iff the candidate is not
-  worse than live on either metric (up to the row's ``eps``).
+  worse than live on either metric (up to the row's ``eps``);
+* the tracing-overhead sweep (``serving.tracing[]``) must be present
+  with both a trace-off and a trace-on row, each serving a strictly
+  positive ``requests_per_s``, and the traced config must hold at least
+  ``--min-tracing-ratio`` (default 0.90) of the untraced throughput —
+  request-lifecycle tracing that costs more than 10% of the serving
+  budget is a regression.
 
 Run with ``--selftest`` to exercise the gate checks against synthetic
 bench JSON without touching real bench files.
@@ -182,7 +188,7 @@ def check_linalg(
     return errors
 
 
-def check_serving(serving: dict) -> list[str]:
+def check_serving(serving: dict, min_tracing_ratio: float = 0.90) -> list[str]:
     errors: list[str] = []
     sweep = serving.get("sweep", [])
     if not sweep:
@@ -216,6 +222,54 @@ def check_serving(serving: dict) -> list[str]:
     errors += check_cache(serving)
     errors += check_mcmc_mixing(serving)
     errors += check_lifecycle(serving)
+    errors += check_tracing(serving, min_tracing_ratio)
+    return errors
+
+
+def check_tracing(serving: dict, min_ratio: float) -> list[str]:
+    """Gates over the tracing-overhead sweep.
+
+    Both ``serving.tracing[]`` rows drive the identical closed-loop
+    schedule; the only difference is the request's opt-in ``trace``
+    field, so the off/on throughput ratio is a direct measurement of
+    what span-payload serialization costs.  Tracing is meant to be
+    always-affordable — the floor keeps a pathological span pipeline
+    (lock contention in the histogram fold, quadratic span rendering)
+    from landing silently.
+    """
+    errors: list[str] = []
+    tracing = serving.get("tracing", [])
+    if not tracing:
+        return [
+            "serving: no tracing-overhead sweep (serving.tracing[]) — the "
+            "traced-vs-untraced bench column is missing"
+        ]
+    rps_by_config: dict[str, float] = {}
+    for row in tracing:
+        config = row.get("config", "?")
+        rps = row.get("requests_per_s")
+        if not isinstance(rps, (int, float)) or rps <= 0.0:
+            errors.append(
+                f"serving: tracing={config} reports {rps!r} req/s — the "
+                f"traced serving path served nothing"
+            )
+        else:
+            rps_by_config[config] = float(rps)
+    for required in ("off", "on"):
+        if required not in rps_by_config and not any(
+            row.get("config") == required for row in tracing
+        ):
+            errors.append(
+                f"serving: tracing sweep has no '{required}' config row"
+            )
+    if "off" in rps_by_config and "on" in rps_by_config:
+        untraced, traced = rps_by_config["off"], rps_by_config["on"]
+        if traced < min_ratio * untraced:
+            errors.append(
+                f"serving: traced throughput {traced:.1f} req/s is below "
+                f"{min_ratio:.2f}x the untraced {untraced:.1f} req/s — "
+                f"request-lifecycle tracing got too expensive"
+            )
     return errors
 
 
@@ -445,6 +499,17 @@ def summarize(linalg: dict, serving: dict) -> None:
                 srow.get("steered_requests_per_s", 0.0),
             )
         )
+    for srow in serving.get("tracing", []):
+        print(
+            "bench_gate: serving tracing=%-4s %2s clients  %8.1f req/s  "
+            "(%.1f spans/req)"
+            % (
+                srow.get("config", "?"),
+                srow.get("clients", "?"),
+                srow.get("requests_per_s", 0.0),
+                srow.get("spans_per_request", float("nan")),
+            )
+        )
     for srow in serving.get("lifecycle", {}).get("eval", []):
         print(
             "bench_gate: lifecycle %-9s candidate v%s MPR %.4f AUC %.4f  "
@@ -528,7 +593,38 @@ def selftest() -> int:
             errors = check_lifecycle({"lifecycle": {"eval": [row]}})
             self.assertTrue(any("boolean 'promoted'" in e for e in errors))
 
-    suite = unittest.defaultTestLoader.loadTestsFromTestCase(Lifecycle)
+    def tracing_rows(off_rps: float = 100.0, on_rps: float = 95.0) -> dict:
+        return {
+            "tracing": [
+                {"config": "off", "clients": 4, "requests_per_s": off_rps},
+                {"config": "on", "clients": 4, "requests_per_s": on_rps},
+            ]
+        }
+
+    class Tracing(unittest.TestCase):
+        def test_missing_column_fails(self):
+            errors = check_tracing({}, 0.90)
+            self.assertTrue(any("tracing" in e for e in errors))
+
+        def test_affordable_tracing_passes(self):
+            self.assertEqual(check_tracing(tracing_rows(), 0.90), [])
+
+        def test_expensive_tracing_fails(self):
+            errors = check_tracing(tracing_rows(on_rps=80.0), 0.90)
+            self.assertTrue(any("too expensive" in e for e in errors))
+
+        def test_zero_throughput_fails(self):
+            errors = check_tracing(tracing_rows(on_rps=0.0), 0.90)
+            self.assertTrue(any("served nothing" in e for e in errors))
+
+        def test_missing_config_row_fails(self):
+            serving = {"tracing": [tracing_rows()["tracing"][0]]}
+            errors = check_tracing(serving, 0.90)
+            self.assertTrue(any("no 'on' config row" in e for e in errors))
+
+    suite = unittest.TestSuite()
+    for case in (Lifecycle, Tracing):
+        suite.addTests(unittest.defaultTestLoader.loadTestsFromTestCase(case))
     result = unittest.TextTestRunner(verbosity=1).run(suite)
     return 0 if result.wasSuccessful() else 1
 
@@ -542,6 +638,7 @@ def main() -> int:
     ap.add_argument("--min-simd-speedup", type=float, default=1.4)
     ap.add_argument("--min-packed-speedup", type=float, default=1.15)
     ap.add_argument("--min-pool-speedup", type=float, default=1.0)
+    ap.add_argument("--min-tracing-ratio", type=float, default=0.90)
     ap.add_argument("--selftest", action="store_true")
     args = ap.parse_args()
     if args.selftest:
@@ -570,7 +667,7 @@ def main() -> int:
         args.min_packed_speedup,
         args.min_pool_speedup,
     )
-    errors += check_serving(serving)
+    errors += check_serving(serving, args.min_tracing_ratio)
     if errors:
         for e in errors:
             print(f"bench_gate: FAIL {e}", file=sys.stderr)
